@@ -1,0 +1,87 @@
+//! Fine-tuning sweep: the coordinator as a user-facing tool.
+//!
+//! The workload the paper's intro motivates — fine-tune one model on a
+//! suite of understanding tasks under several optimizers and pick the
+//! winner — expressed directly against the coordinator API: build a job
+//! grid, fan it out over workers, aggregate.
+//!
+//! ```sh
+//! cargo run --release --example finetune_sweep -- [--steps N] [--workers N]
+//! ```
+
+use alada::cli::Args;
+use alada::coordinator::job::{JobGrid, JobSpec};
+use alada::coordinator::{default_workers, run_jobs};
+use alada::data::CLS_TASKS;
+use alada::util::csv::CsvWriter;
+
+fn main() -> anyhow::Result<()> {
+    alada::util::log::level_from_env();
+    let args = Args::from_env();
+    let steps = args.usize_or("steps", 120);
+    let workers = args.usize_or("workers", default_workers());
+
+    // 3 tasks × 3 optimizers × 2 learning rates, evaluated on test sets
+    let mut grid = JobGrid::new();
+    for (ti, task) in CLS_TASKS.iter().enumerate().take(3) {
+        for opt in ["adam", "adafactor", "alada"] {
+            for lr in [1e-3f32, 2e-3] {
+                grid.push(
+                    format!("sweep/{}/{}/lr{:.0e}", task.name, opt, lr),
+                    JobSpec {
+                        task: "cls".into(),
+                        size: "tiny".into(),
+                        artifact: None,
+                        opt: opt.into(),
+                        dataset: ti,
+                        lr,
+                        steps,
+                        seed: 1,
+                        record_every: steps,
+                        eval: "cls".into(),
+                    },
+                );
+            }
+        }
+    }
+    println!("sweep: {} jobs on {workers} workers", grid.len());
+    let results = run_jobs("artifacts", grid.into_jobs(), workers)?;
+
+    let mut w = CsvWriter::create(
+        "results/finetune_sweep.csv",
+        &["task", "optimizer", "lr", "final_loss", "accuracy", "task_metric"],
+    )?;
+    println!(
+        "\n{:<8}{:<11}{:>8}{:>12}{:>10}{:>13}",
+        "task", "optimizer", "lr", "final loss", "acc", "task metric"
+    );
+    for r in &results {
+        if let Some(err) = &r.error {
+            println!("{:<40} FAILED: {err}", r.label);
+            continue;
+        }
+        let task = CLS_TASKS[r.spec.dataset].name;
+        let acc = r.metric("acc").unwrap_or(f64::NAN);
+        let tm = r.metric("task_metric").unwrap_or(f64::NAN);
+        w.row(&[
+            task.to_string(),
+            r.spec.opt.clone(),
+            format!("{:.0e}", r.spec.lr),
+            format!("{:.4}", r.final_cum_loss),
+            format!("{acc:.4}"),
+            format!("{tm:.2}"),
+        ])?;
+        println!(
+            "{:<8}{:<11}{:>8}{:>12.4}{:>10.3}{:>13.2}",
+            task,
+            r.spec.opt,
+            format!("{:.0e}", r.spec.lr),
+            r.final_cum_loss,
+            acc,
+            tm
+        );
+    }
+    w.flush()?;
+    println!("\nwrote results/finetune_sweep.csv");
+    Ok(())
+}

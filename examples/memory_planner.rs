@@ -1,0 +1,67 @@
+//! Memory planner: "will this training run fit my GPU?"
+//!
+//! The practical question Alada answers (paper §I, Table IV) as a tool:
+//! given a model shape, optimizer, and batch size, print the peak-memory
+//! breakdown and the largest batch each optimizer supports on an
+//! A800-class device. No artifacts needed — this runs the pure analytic
+//! model.
+//!
+//! ```sh
+//! cargo run --release --example memory_planner -- [--model gpt2-xl]
+//! ```
+
+use alada::cli::Args;
+use alada::train::memory::{
+    breakdown, fits_a800, ModelShape, A800_BYTES, GPT2_SMALL, GPT2_XL, T5_SMALL,
+};
+
+const OPTS: [&str; 6] = ["sgd", "adam", "adafactor", "alada", "came", "sm3"];
+
+fn max_batch(model: ModelShape, opt: &str) -> usize {
+    let mut batch = 0;
+    while batch < 512 && fits_a800(model, opt, batch + 1, model.max_seq) {
+        batch += 1;
+    }
+    batch
+}
+
+fn main() {
+    let args = Args::from_env();
+    let models: Vec<ModelShape> = match args.flag("model") {
+        Some("gpt2-small") => vec![GPT2_SMALL],
+        Some("gpt2-xl") => vec![GPT2_XL],
+        Some("t5-small") => vec![T5_SMALL],
+        _ => vec![GPT2_SMALL, GPT2_XL, T5_SMALL],
+    };
+
+    for model in models {
+        println!(
+            "\n=== {} ({:.1}M params, seq {}) on an 80 GB A800 ===",
+            model.name,
+            model.param_count() as f64 / 1e6,
+            model.max_seq
+        );
+        println!(
+            "{:<11}{:>14}{:>16}{:>18}",
+            "optimizer", "state (GB)", "bsz-1 peak (GB)", "max batch (A800)"
+        );
+        for opt in OPTS {
+            let b = breakdown(model, opt, 1, model.max_seq);
+            println!(
+                "{:<11}{:>14.3}{:>16.2}{:>18}",
+                opt,
+                b.opt_state as f64 / 1e9,
+                b.total_gb(),
+                max_batch(model, opt)
+            );
+        }
+        // the paper's headline: the batch-size gap Alada opens vs Adam
+        let adam = max_batch(model, "adam");
+        let alada = max_batch(model, "alada");
+        println!(
+            "--> Alada trains at {:.1}× Adam's max batch on this model (capacity {} GB)",
+            alada as f64 / adam.max(1) as f64,
+            A800_BYTES / 1_000_000_000
+        );
+    }
+}

@@ -1,0 +1,146 @@
+"""AOT pipeline: lower every fused step to HLO text + write the manifest.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: the
+xla crate links xla_extension 0.5.1, which rejects jax>=0.5 protos with
+64-bit instruction ids; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Outputs under --out (default ../artifacts):
+  <name>.hlo.txt          one per StepSpec
+  init_<task>_<size>.bin  initial parameters, concatenated little-endian
+                          f32 in manifest order (Rust reads shapes from
+                          the manifest and slices)
+  manifest.json           artifact index the Rust runtime is driven by
+"""
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .config import MODEL_SIZES, OPTIMIZERS
+from .pytree import flatten
+from .train_step import (StepSpec, build_eval_step, build_logits_step,
+                         build_train_step, init_example_params)
+
+# Per-task batch sizes baked into the artifacts (paper: cls bsz 32,
+# mt bsz 64, lm bsz 24 -- scaled to the CPU testbed, same ratios kept
+# configurable here).
+# Sized for the 1-core CPU testbed: tiny carries the sweep experiments
+# (Figs. 2/3/5, Tables I/II) at ~25 ms/step; small carries the Fig. 4 /
+# Table IV rows; base is the end-to-end example.
+BATCH = {
+    ("lm", "tiny"): 16, ("cls", "tiny"): 16, ("mt", "tiny"): 16,
+    ("lm", "small"): 16, ("cls", "small"): 16, ("mt", "small"): 16,
+    ("lm", "base"): 8,
+}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def lower_spec(spec: StepSpec, out_dir: str) -> dict:
+    """Lower one StepSpec to <name>.hlo.txt; return its manifest entry."""
+    t0 = time.time()
+    args = [jax.ShapeDtypeStruct(shape, dtype) for _, shape, dtype in spec.inputs]
+    lowered = jax.jit(spec.fn).lower(*args)
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, spec.name + ".hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    dt = time.time() - t0
+    print(f"  {spec.name}: {len(text) / 1e6:.1f} MB HLO in {dt:.1f}s")
+    return {
+        "name": spec.name,
+        "file": spec.name + ".hlo.txt",
+        "inputs": [{"name": n, "shape": list(s), "dtype": d} for n, s, d in spec.inputs],
+        "outputs": [{"name": n, "shape": list(s), "dtype": d} for n, s, d in spec.outputs],
+        "param_table": [{"name": n, "shape": s, "offset": o} for n, s, o in spec.param_table],
+        "state_table": [{"name": n, "shape": s, "offset": o} for n, s, o in spec.state_table],
+        "meta": spec.meta,
+    }
+
+
+def dump_init(task: str, size: str, out_dir: str) -> dict:
+    """Dump deterministic initial weights for (task-head, size)."""
+    from .config import N_CLASSES
+    cfg = MODEL_SIZES[size]
+    n_classes = N_CLASSES if task == "cls" else 0
+    params = init_example_params(cfg, n_classes)
+    flat = flatten(params)
+    name = f"init_{task}_{size}.bin"
+    with open(os.path.join(out_dir, name), "wb") as f:
+        for _, leaf in flat:
+            f.write(np.asarray(leaf, np.float32).tobytes())
+    return {
+        "name": name,
+        "params": [{"name": "param." + p, "shape": list(l.shape)} for p, l in flat],
+    }
+
+
+def build_all(out_dir: str, sizes=("tiny", "small", "base"), quick=False):
+    os.makedirs(out_dir, exist_ok=True)
+    artifacts, inits = [], []
+
+    jobs = []  # (task, size, opts)
+    for size in sizes:
+        if size == "base":
+            jobs.append(("lm", size))
+        else:
+            for task in ("lm", "cls", "mt"):
+                jobs.append((task, size))
+
+    for task, size in jobs:
+        cfg = MODEL_SIZES[size]
+        batch = BATCH[(task, size)]
+        opts = ("alada",) if quick else OPTIMIZERS
+        for opt in opts:
+            artifacts.append(lower_spec(
+                build_train_step(task, cfg, opt, batch), out_dir))
+        artifacts.append(lower_spec(build_eval_step(task, cfg, batch), out_dir))
+        if task == "mt":
+            artifacts.append(lower_spec(build_logits_step(cfg, batch), out_dir))
+        key = (task if task != "mt" else "lm", size)
+        if not any(i["name"] == f"init_{key[0]}_{key[1]}.bin" for i in inits):
+            inits.append(dump_init(key[0], size, out_dir))
+
+    # Fig. 5 sensitivity sweep: beta-variant Alada artifacts for the mt
+    # task (decay parameters are compile-time constants of the fused step,
+    # so each (beta1, beta2) combination is its own artifact).
+    if not quick:
+        def tag(x):
+            return str(x).replace(".", "p")
+        for b1 in (0.0, 0.9):
+            for b2 in (0.5, 0.9, 0.99, 0.999):
+                cfg = MODEL_SIZES["tiny"]
+                spec = build_train_step("mt", cfg, "alada", BATCH[("mt", "tiny")],
+                                        beta1=b1, beta2=b2)
+                spec.name = f"train_mt_tiny_alada_b1_{tag(b1)}_b2_{tag(b2)}"
+                artifacts.append(lower_spec(spec, out_dir))
+
+    manifest = {"version": 1, "artifacts": artifacts, "inits": inits}
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {len(artifacts)} artifacts + {len(inits)} init dumps to {out_dir}")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--sizes", default="tiny,small,base")
+    ap.add_argument("--quick", action="store_true",
+                    help="alada-only (fast iteration)")
+    args = ap.parse_args()
+    build_all(args.out, sizes=tuple(args.sizes.split(",")), quick=args.quick)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""Model / optimizer configurations shared by the compile path.
+
+These mirror the Rust-side config system (rust/src/config). The AOT
+pipeline (aot.py) lowers one fused train step per (task, size, optimizer)
+triple; the names here are the artifact-name components the Rust runtime
+looks up in artifacts/manifest.json.
+"""
+
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Decoder-only transformer hyper-parameters."""
+
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    max_seq: int
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def param_count(self, n_classes: int = 0) -> int:
+        """Exact trainable-parameter count (tied input/output embedding)."""
+        d, f = self.d_model, self.d_ff
+        per_layer = 4 * d * d + 2 * d * f + 4 * d + f + d  # attn + mlp + 2 LN
+        total = self.vocab * d + self.max_seq * d + self.n_layers * per_layer
+        total += 2 * d  # final LN
+        if n_classes:
+            total += d * n_classes + n_classes
+        return total
+
+
+# Sizes. `tiny` is the pytest/CI size; `small` drives the figure/table
+# experiments; `base` is the end-to-end example (multi-million params);
+# the paper-shape configs exist only for the Table-IV memory model (their
+# layer dimensions match GPT2-Small/XL and T5-Small, and are lowered
+# shape-only, never trained here).
+MODEL_SIZES = {
+    "tiny": ModelConfig("tiny", vocab=256, d_model=64, n_layers=2, n_heads=4, d_ff=128, max_seq=32),
+    "small": ModelConfig("small", vocab=512, d_model=128, n_layers=4, n_heads=4, d_ff=384, max_seq=64),
+    "base": ModelConfig("base", vocab=1024, d_model=256, n_layers=6, n_heads=8, d_ff=1024, max_seq=128),
+}
+
+
+@dataclass(frozen=True)
+class OptimConfig:
+    """Optimizer selection + decay parameters (paper §VI-A defaults)."""
+
+    name: str  # adam | adafactor | alada
+    beta1: float = 0.9
+    beta2: float = 0.999
+    eps: float = 1e-8
+
+    @staticmethod
+    def default(name: str) -> "OptimConfig":
+        if name == "adam":
+            return OptimConfig("adam", beta1=0.9, beta2=0.999, eps=1e-8)
+        if name == "adafactor":
+            # paper: first moment disabled, beta2 = 0.999
+            return OptimConfig("adafactor", beta1=0.0, beta2=0.999, eps=1e-8)
+        if name == "alada":
+            # paper §IV-C: beta1 = beta2 = 0.9, eps = 1e-16
+            return OptimConfig("alada", beta1=0.9, beta2=0.9, eps=1e-16)
+        raise ValueError(f"unknown optimizer {name!r}")
+
+
+OPTIMIZERS = ("adam", "adafactor", "alada")
+
+# Tasks: decoder-only LM, sequence classification, prefix-LM translation.
+TASKS = ("lm", "cls", "mt")
+
+# Classification head width for the cls task (synthetic GLUE-like tasks
+# have at most 3 classes; we lower with 4 to keep one artifact).
+N_CLASSES = 4

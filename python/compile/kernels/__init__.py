@@ -1,0 +1,3 @@
+"""L1: Pallas kernels for the optimizer hot-spots + pure-jnp oracles."""
+
+from . import adafactor, adam, alada, common, ref  # noqa: F401

@@ -1,0 +1,82 @@
+"""Adafactor update as Pallas kernels (baseline; paper SVI-A variant).
+
+Two streaming passes mirroring the Alada kernels: one accumulation pass
+producing row/column statistics of V = G^2 + eps, and one descent pass
+reconstructing rec(r, c) = r c^T / mean(r) tile-by-tile. First moment is
+disabled and the external step-size schedule is used, exactly as the
+paper configures Adafactor.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import grid_rows, row_block
+
+
+def _stats_kernel(eps, g_ref, r_ref, c_acc_ref):
+    i = pl.program_id(0)
+    g = g_ref[...]
+    v = g * g + eps
+    r_ref[...] = jnp.sum(v, axis=1)
+    @pl.when(i == 0)
+    def _init():
+        c_acc_ref[...] = jnp.zeros_like(c_acc_ref)
+    c_acc_ref[...] += jnp.sum(v, axis=0)
+
+
+def _descent_kernel(eps, x_ref, g_ref, r_ref, c_ref, s_ref, x_new_ref):
+    # s = [lr, 1/mean(r_hat)]
+    lr, inv_mean = s_ref[0, 0], s_ref[0, 1]
+    u = r_ref[...][:, None] * c_ref[...][None, :] * inv_mean
+    x_new_ref[...] = x_ref[...] - lr * g_ref[...] / (jnp.sqrt(u) + eps)
+
+
+def adafactor_matrix_step(x, g, r, c, t, beta2, eps, lr):
+    """One Adafactor step; same contract as ref.adafactor_step_ref."""
+    mm, nn = x.shape
+    bm = row_block(mm, nn)
+    grid = (grid_rows(mm, bm),)
+    blk = pl.BlockSpec((bm, nn), lambda i: (i, 0))
+
+    row_sum, col_sum = pl.pallas_call(
+        functools.partial(_stats_kernel, eps),
+        grid=grid,
+        in_specs=[blk],
+        out_specs=[
+            pl.BlockSpec((bm,), lambda i: (i,)),
+            pl.BlockSpec((nn,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((mm,), g.dtype),
+            jax.ShapeDtypeStruct((nn,), g.dtype),
+        ],
+        interpret=True,
+    )(g)
+
+    r_new = beta2 * r + (1.0 - beta2) * row_sum / nn
+    c_new = beta2 * c + (1.0 - beta2) * col_sum / mm
+    tf = t.astype(jnp.float32) if hasattr(t, "astype") else jnp.float32(t)
+    bc = 1.0 - beta2 ** (tf + 1.0)
+    r_hat, c_hat = r_new / bc, c_new / bc
+    s = jnp.stack([
+        jnp.asarray(lr, jnp.float32),
+        1.0 / jnp.mean(r_hat),
+    ]).reshape(1, 2)
+
+    x_new = pl.pallas_call(
+        functools.partial(_descent_kernel, eps),
+        grid=grid,
+        in_specs=[
+            blk, blk,
+            pl.BlockSpec((bm,), lambda i: (i,)),
+            pl.BlockSpec((nn,), lambda i: (0,)),
+            pl.BlockSpec((1, 2), lambda i: (0, 0)),
+        ],
+        out_specs=blk,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=True,
+    )(x, g, r_hat, c_hat, s)
+    return x_new, r_new, c_new

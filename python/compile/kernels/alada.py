@@ -1,0 +1,169 @@
+"""Pallas kernels for the Alada update (paper Algorithm 2).
+
+The update is split into three streaming kernels so that neither the
+squared momentum V = M_hat^2 nor the reconstructed second moment
+U = p q^T is ever materialised in HBM -- the paper's memory argument,
+expressed as a tiling schedule:
+
+  1. ``moment``  -- elementwise EMA + bias correction (lines 5-6).
+     Emits M_{t+1} and M_hat; V is recomputed on the fly downstream.
+  2. ``factor``  -- one pass over M_hat per row-block computing BOTH
+     projection candidates (lines 14 / 18): p* rows V q and the
+     cross-block accumulation of q* = V^T p. The parity selection and
+     the cheap O(m + n) EMA glue happen in jnp outside the kernel.
+  3. ``descent`` -- line 22. Each VMEM tile reconstructs its p_i q_j
+     patch in-register (rank-one outer product), applies the
+     bias-correction (line 21) and the step, so U never exists in HBM.
+
+GPU->TPU adaptation: the CUDA implementation would broadcast p/q from
+shared memory per threadblock; here BlockSpec streams full-width row
+blocks HBM->VMEM and the outer product is free vector work on the VPU.
+No MXU use -- the kernels are bandwidth-bound (see DESIGN.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import grid_rows, row_block, scalar
+
+
+# ---------------------------------------------------------------------------
+# kernel 1: first-moment EMA + bias correction
+# ---------------------------------------------------------------------------
+
+def _moment_kernel(beta1, g_ref, m_ref, bc1_ref, m_new_ref, m_hat_ref):
+    g = g_ref[...]
+    m_new = beta1 * m_ref[...] + (1.0 - beta1) * g
+    m_new_ref[...] = m_new
+    # bc1 = 1 / (1 - beta1^{t+1})
+    m_hat_ref[...] = m_new * bc1_ref[0, 0]
+
+
+def moment(g, m, beta1, bc1):
+    """EMA + bias-correct the first moment. Returns (m_new, m_hat)."""
+    mm, nn = g.shape
+    bm = row_block(mm, nn)
+    grid = (grid_rows(mm, bm),)
+    blk = pl.BlockSpec((bm, nn), lambda i: (i, 0))
+    sblk = pl.BlockSpec((1, 1), lambda i: (0, 0))
+    return pl.pallas_call(
+        functools.partial(_moment_kernel, beta1),
+        grid=grid,
+        in_specs=[blk, blk, sblk],
+        out_specs=[blk, blk],
+        out_shape=[jax.ShapeDtypeStruct(g.shape, g.dtype)] * 2,
+        interpret=True,
+    )(g, m, scalar(bc1))
+
+
+# ---------------------------------------------------------------------------
+# kernel 2: both rank-one projection candidates in one pass over M_hat
+# ---------------------------------------------------------------------------
+
+def _factor_kernel(g_ref_unused, m_hat_ref, p_ref, q_ref, p_star_ref, q_acc_ref):
+    i = pl.program_id(0)
+    m_hat = m_hat_ref[...]
+    v = m_hat * m_hat  # V recomputed in-register; never stored to HBM
+    # p* candidate for this row block: V q
+    p_star_ref[...] = v @ q_ref[...]
+    # q* accumulator: V^T p, reduced across row blocks (grid is sequential)
+    @pl.when(i == 0)
+    def _init():
+        q_acc_ref[...] = jnp.zeros_like(q_acc_ref)
+    q_acc_ref[...] += v.T @ p_ref[...]
+
+
+def factor_candidates(m_hat, p, q):
+    """One streaming pass computing (V q, V^T p) without materialising V.
+
+    Zero-padding of ragged row blocks is safe: padded rows contribute 0
+    to the q accumulator and their p* lanes are masked on store.
+    """
+    mm, nn = m_hat.shape
+    bm = row_block(mm, nn)
+    grid = (grid_rows(mm, bm),)
+    return pl.pallas_call(
+        functools.partial(_factor_kernel, None),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, nn), lambda i: (i, 0)),
+            pl.BlockSpec((bm,), lambda i: (i,)),
+            pl.BlockSpec((nn,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm,), lambda i: (i,)),
+            pl.BlockSpec((nn,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((mm,), m_hat.dtype),
+            jax.ShapeDtypeStruct((nn,), m_hat.dtype),
+        ],
+        interpret=True,
+    )(m_hat, p, q)
+
+
+# ---------------------------------------------------------------------------
+# kernel 3: descent with lazy rank-one reconstruction
+# ---------------------------------------------------------------------------
+
+def _descent_kernel(eps, x_ref, m_hat_ref, p_ref, q_ref, s_ref, x_new_ref):
+    # s = [lr, beta2^{t+1} * v0, 1/(1 - beta2^{t+1})]
+    lr, bc2v0, inv = s_ref[0, 0], s_ref[0, 1], s_ref[0, 2]
+    u = p_ref[...][:, None] * q_ref[...][None, :]  # in-register outer product
+    u_hat = jnp.maximum(u - bc2v0, 0.0) * inv
+    x_new_ref[...] = x_ref[...] - lr * m_hat_ref[...] / jnp.sqrt(u_hat + eps)
+
+
+def descent(x, m_hat, p, q, v0, beta2, t, eps, lr):
+    """Line 20-22: X - lr * M_hat / sqrt(U_hat + eps), U built per-tile."""
+    mm, nn = x.shape
+    bm = row_block(mm, nn)
+    grid = (grid_rows(mm, bm),)
+    bc2 = beta2 ** (t + 1.0)
+    s = jnp.stack([
+        jnp.asarray(lr, jnp.float32),
+        (bc2 * v0).astype(jnp.float32),
+        (1.0 / (1.0 - bc2)).astype(jnp.float32),
+    ]).reshape(1, 3)
+    blk = pl.BlockSpec((bm, nn), lambda i: (i, 0))
+    return pl.pallas_call(
+        functools.partial(_descent_kernel, eps),
+        grid=grid,
+        in_specs=[
+            blk,
+            blk,
+            pl.BlockSpec((bm,), lambda i: (i,)),
+            pl.BlockSpec((nn,), lambda i: (0,)),
+            pl.BlockSpec((1, 3), lambda i: (0, 0)),
+        ],
+        out_specs=blk,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=True,
+    )(x, m_hat, p, q, s)
+
+
+# ---------------------------------------------------------------------------
+# glue: one full Alada step on a matrix parameter
+# ---------------------------------------------------------------------------
+
+def alada_matrix_step(x, g, m, p, q, v0, t, beta1, beta2, eps, lr):
+    """Pallas-path Alada step; same contract as ref.alada_step_ref.
+
+    `t` is a traced int32 scalar (part of the optimizer state), so parity
+    selection uses jnp.where over both candidates -- both are produced by
+    the single factor pass anyway.
+    """
+    tf = t.astype(jnp.float32) if hasattr(t, "astype") else jnp.float32(t)
+    bc1 = 1.0 / (1.0 - beta1 ** (tf + 1.0))
+    m_new, m_hat = moment(g, m, beta1, bc1)
+    p_star_num, q_star_num = factor_candidates(m_hat, p, q)
+    p_star = p_star_num / (jnp.sum(q * q) + eps)
+    q_star = q_star_num / (jnp.sum(p * p) + eps)
+    even = (t % 2) == 0
+    p_new = jnp.where(even, beta2 * p + (1.0 - beta2) * p_star, p)
+    q_new = jnp.where(even, q, beta2 * q + (1.0 - beta2) * q_star)
+    x_new = descent(x, m_hat, p_new, q_new, v0, beta2, tf, eps, lr)
+    return x_new, m_new, p_new, q_new

@@ -1,0 +1,49 @@
+"""Shared plumbing for the Pallas L1 kernels.
+
+All kernels are lowered with ``interpret=True``: the CPU PJRT client used
+by the Rust runtime cannot execute Mosaic custom-calls, so interpret mode
+is the correctness path; real-TPU performance is estimated analytically
+in EXPERIMENTS.md SPerf from the VMEM footprints declared here.
+
+Tiling convention: optimizer updates are memory-bound elementwise /
+rank-one ops, so we tile the *row* dimension only and stream full-width
+blocks HBM->VMEM. ``row_block`` picks the largest block that (a) fits a
+VMEM budget alongside its vector slivers and (b) keeps the grid small.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# VMEM budget per resident operand tile, in f32 elements. 256 KiB/tile
+# leaves room for ~8 resident tiles + double buffering inside a 16 MiB
+# TPU VMEM. On CPU-interpret this only shapes the grid.
+_VMEM_TILE_ELEMS = 64 * 1024
+
+
+def row_block(m: int, n: int) -> int:
+    """Pick the row-block size for an (m, n) matrix kernel."""
+    if m * n <= _VMEM_TILE_ELEMS:
+        return m  # single block
+    bm = max(1, _VMEM_TILE_ELEMS // max(n, 1))
+    bm = min(bm, m)
+    # round down to a multiple of 8 (sublane) when possible
+    if bm >= 8:
+        bm -= bm % 8
+    return bm
+
+
+def grid_rows(m: int, bm: int) -> int:
+    return (m + bm - 1) // bm
+
+
+def scalar(x, dtype=jnp.float32):
+    """Wrap a scalar into the (1, 1) array Pallas SMEM-style operands use."""
+    return jnp.asarray(x, dtype).reshape(1, 1)
+
+
+def vmem_footprint_bytes(m: int, n: int, n_mats: int, n_vecs: int) -> int:
+    """Analytic VMEM footprint of one grid step: ``n_mats`` row-block
+    matrix tiles plus ``n_vecs`` full-width vector slivers (f32)."""
+    bm = row_block(m, n)
+    return 4 * (n_mats * bm * n + n_vecs * (bm + n))

@@ -1,0 +1,144 @@
+"""Pure-jnp correctness oracles for the L1 Pallas kernels.
+
+Each function performs one optimizer step on a single matrix parameter,
+written to match the paper line-by-line (Algorithm 2 for Alada). The
+pytest suite checks the Pallas kernels against these under hypothesis
+shape/dtype sweeps; they are also the fallback path used for small /
+vector parameters where tiling is pointless.
+
+All functions are functional: they take the current state and return the
+updated state, never mutating in place.
+"""
+
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Alada (paper Algorithm 2)
+# ---------------------------------------------------------------------------
+
+def alada_moment_ref(g, m, beta1, t):
+    """Lines 5-7: EMA first moment, bias correction, squared momentum.
+
+    Returns (m_new, m_hat). V = m_hat**2 is computed on demand by callers
+    (never materialised by the Pallas path -- see kernels/alada.py).
+    """
+    m_new = beta1 * m + (1.0 - beta1) * g
+    m_hat = m_new / (1.0 - beta1 ** (t + 1))
+    return m_new, m_hat
+
+
+def alada_factor_ref(m_hat, p, q, beta2, t, eps):
+    """Lines 13-19: alternating rank-one factor update.
+
+    t even -> update p (project V onto q); t odd -> update q.
+    Returns (p_new, q_new).
+    """
+    v = m_hat * m_hat
+    p_star = v @ q / (jnp.sum(q * q) + eps)
+    q_star = v.T @ p / (jnp.sum(p * p) + eps)
+    even = (t % 2) == 0
+    p_new = jnp.where(even, beta2 * p + (1.0 - beta2) * p_star, p)
+    q_new = jnp.where(even, q, beta2 * q + (1.0 - beta2) * q_star)
+    return p_new, q_new
+
+
+def alada_descent_ref(x, m_hat, p, q, v0, beta2, t, eps, lr):
+    """Lines 20-22: reconstruct U = p q^T, bias-correct, descend.
+
+    The rank-one product is formed lazily tile-by-tile in the Pallas
+    kernel; here we materialise it for clarity. U - beta2^{t+1} v0 is
+    mathematically >= 0 (induction over the EMA); we clamp at 0 to guard
+    against floating-point dips before the sqrt.
+    """
+    bc2 = beta2 ** (t + 1)
+    u = p[:, None] * q[None, :]
+    u_hat = jnp.maximum(u - bc2 * v0, 0.0) / (1.0 - bc2)
+    return x - lr * m_hat / jnp.sqrt(u_hat + eps)
+
+
+def alada_init_ref(g):
+    """Lines 8-12: v0 = ||G0||^2 / (m n); p0 = sqrt(v0) 1_m, q0 = sqrt(v0) 1_n."""
+    m, n = g.shape
+    v0 = jnp.sum(g * g) / (m * n)
+    root = jnp.sqrt(v0)
+    return v0, jnp.full((m,), root, g.dtype), jnp.full((n,), root, g.dtype)
+
+
+def alada_step_ref(x, g, m, p, q, v0, t, beta1, beta2, eps, lr):
+    """One full Alada step on a matrix parameter (Algorithm 2 body).
+
+    `v0`, `p`, `q` must already be initialised (the t = 0 initialisation
+    is the caller's job because it depends on G_0 only).
+    Returns (x_new, m_new, p_new, q_new).
+    """
+    m_new, m_hat = alada_moment_ref(g, m, beta1, t)
+    p_new, q_new = alada_factor_ref(m_hat, p, q, beta2, t, eps)
+    x_new = alada_descent_ref(x, m_hat, p_new, q_new, v0, beta2, t, eps, lr)
+    return x_new, m_new, p_new, q_new
+
+
+# ---------------------------------------------------------------------------
+# Adam (Kingma & Ba 2015; paper Eq. (2)-(3))
+# ---------------------------------------------------------------------------
+
+def adam_step_ref(x, g, m, u, t, beta1, beta2, eps, lr):
+    """One Adam step with bias correction. Returns (x_new, m_new, u_new)."""
+    m_new = beta1 * m + (1.0 - beta1) * g
+    u_new = beta2 * u + (1.0 - beta2) * g * g
+    m_hat = m_new / (1.0 - beta1 ** (t + 1))
+    u_hat = u_new / (1.0 - beta2 ** (t + 1))
+    x_new = x - lr * m_hat / (jnp.sqrt(u_hat) + eps)
+    return x_new, m_new, u_new
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (Shazeer & Stern 2018), first moment disabled as in the paper
+# ---------------------------------------------------------------------------
+
+def adafactor_step_ref(x, g, r, c, t, beta2, eps, lr):
+    """One factored-second-moment step on a matrix parameter.
+
+    r: row accumulator (m,), c: column accumulator (n,). The second moment
+    is reconstructed as rec(r, c) = r c^T / mean(r). Update clipping and
+    relative step sizes from the full Adafactor recipe are intentionally
+    omitted: the paper runs Adafactor with a fixed external schedule and
+    first moment disabled (SVI-A).
+    """
+    v = g * g + eps
+    r_new = beta2 * r + (1.0 - beta2) * jnp.mean(v, axis=1)
+    c_new = beta2 * c + (1.0 - beta2) * jnp.mean(v, axis=0)
+    bc = 1.0 - beta2 ** (t + 1)
+    r_hat, c_hat = r_new / bc, c_new / bc
+    u = r_hat[:, None] * c_hat[None, :] / jnp.mean(r_hat)
+    x_new = x - lr * g / (jnp.sqrt(u) + eps)
+    return x_new, r_new, c_new
+
+
+# ---------------------------------------------------------------------------
+# Shared helper: the paper's tensor reshaping rule (Eq. 12)
+# ---------------------------------------------------------------------------
+
+def balanced_split(shape):
+    """Return (m, n) minimising |prod(k[:j]) - prod(k[j:])| over j (Eq. 12).
+
+    Vectors (tau = 1) resolve to (1, k); scalars to (1, 1). The split is a
+    pure view: reshaping in row-major order never copies.
+    """
+    dims = list(shape) if shape else [1]
+    total = 1
+    for k in dims:
+        total *= k
+    best_j, best_gap = 0, None
+    left = 1
+    for j in range(len(dims) + 1):
+        right = total // left if left else total
+        gap = abs(left - right)
+        if best_gap is None or gap < best_gap:
+            best_gap, best_j = gap, j
+        if j < len(dims):
+            left *= dims[j]
+    m = 1
+    for k in dims[:best_j]:
+        m *= k
+    return m, total // m

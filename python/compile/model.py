@@ -1,0 +1,159 @@
+"""L2: from-scratch decoder-only transformer in pure JAX.
+
+One parameter tree + one forward covers the paper's three task families:
+
+* ``lm``  -- next-token language modelling (Fig. 4 / Table III proxy).
+* ``cls`` -- sequence classification via masked mean-pool head
+             (Fig. 2 / Table I proxy for the GLUE fine-tuning runs).
+* ``mt``  -- prefix-LM translation: the batch carries a loss mask that
+             restricts the next-token loss to target positions
+             (Fig. 3 / Table II proxy for the T5 runs). A prefix LM
+             rather than a full encoder-decoder keeps a single model
+             code path; the optimizer comparison the paper makes is
+             architecture-agnostic (see DESIGN.md substitutions).
+
+No flax/haiku: parameters are nested dicts, init/forward are plain
+functions, so the AOT pipeline controls flattening order exactly.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+PAD_ID = 0  # token 0 is reserved as padding everywhere in the repo
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, key, n_classes: int = 0):
+    """GPT-2-style init: N(0, 0.02), residual projections scaled by depth."""
+    std = 0.02
+    res_std = std / jnp.sqrt(2.0 * cfg.n_layers)
+    d, f = cfg.d_model, cfg.d_ff
+    keys = iter(jax.random.split(key, 6 * cfg.n_layers + 4))
+
+    def norm(shape, s):
+        return (jax.random.normal(next(keys), shape) * s).astype(jnp.float32)
+
+    params = {
+        "tok_emb": norm((cfg.vocab, d), std),
+        "pos_emb": norm((cfg.max_seq, d), std),
+        "ln_f": {"scale": jnp.ones((d,)), "bias": jnp.zeros((d,))},
+    }
+    for l in range(cfg.n_layers):
+        params[f"layer_{l:02d}"] = {
+            "ln1": {"scale": jnp.ones((d,)), "bias": jnp.zeros((d,))},
+            "attn": {
+                "wq": norm((d, d), std),
+                "wk": norm((d, d), std),
+                "wv": norm((d, d), std),
+                "wo": norm((d, d), res_std),
+            },
+            "ln2": {"scale": jnp.ones((d,)), "bias": jnp.zeros((d,))},
+            "mlp": {
+                "w1": norm((d, f), std),
+                "b1": jnp.zeros((f,)),
+                "w2": norm((f, d), res_std),
+                "b2": jnp.zeros((d,)),
+            },
+        }
+    if n_classes:
+        params["head"] = {
+            "w": norm((d, n_classes), std),
+            "b": jnp.zeros((n_classes,)),
+        }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _layer_norm(x, scale, bias, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * scale + bias
+
+
+def _attention(p, x, cfg: ModelConfig):
+    b, l, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+
+    def split(w):
+        return (x @ w).reshape(b, l, h, hd).transpose(0, 2, 1, 3)
+
+    q, k, v = split(p["wq"]), split(p["wk"]), split(p["wv"])
+    att = (q @ k.transpose(0, 1, 3, 2)) / jnp.sqrt(jnp.float32(hd))
+    causal = jnp.tril(jnp.ones((l, l), bool))
+    att = jnp.where(causal[None, None], att, -1e9)
+    att = jax.nn.softmax(att, axis=-1)
+    out = (att @ v).transpose(0, 2, 1, 3).reshape(b, l, d)
+    return out @ p["wo"]
+
+
+def _mlp(p, x):
+    return jax.nn.gelu(x @ p["w1"] + p["b1"]) @ p["w2"] + p["b2"]
+
+
+def forward(params, tokens, cfg: ModelConfig):
+    """Token ids (B, L) -> final hidden states (B, L, d)."""
+    b, l = tokens.shape
+    x = params["tok_emb"][tokens] + params["pos_emb"][:l][None]
+    for i in range(cfg.n_layers):
+        p = params[f"layer_{i:02d}"]
+        x = x + _attention(p["attn"], _layer_norm(x, p["ln1"]["scale"], p["ln1"]["bias"]), cfg)
+        x = x + _mlp(p["mlp"], _layer_norm(x, p["ln2"]["scale"], p["ln2"]["bias"]))
+    return _layer_norm(x, params["ln_f"]["scale"], params["ln_f"]["bias"])
+
+
+def lm_logits(params, tokens, cfg: ModelConfig):
+    """Tied-embedding next-token logits (B, L, vocab)."""
+    return forward(params, tokens, cfg) @ params["tok_emb"].T
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+def _token_nll(logits, targets, mask):
+    """Masked mean next-token NLL; returns (mean_nll, sum_nll, count)."""
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * mask
+    total, count = jnp.sum(nll), jnp.sum(mask)
+    return total / jnp.maximum(count, 1.0), total, count
+
+
+def lm_loss(params, tokens, cfg: ModelConfig):
+    """Shifted next-token loss over non-pad positions."""
+    logits = lm_logits(params, tokens[:, :-1], cfg)
+    targets = tokens[:, 1:]
+    mask = (targets != PAD_ID).astype(jnp.float32)
+    return _token_nll(logits, targets, mask)
+
+
+def mt_loss(params, tokens, loss_mask, cfg: ModelConfig):
+    """Prefix-LM loss: next-token NLL restricted to target positions."""
+    logits = lm_logits(params, tokens[:, :-1], cfg)
+    targets = tokens[:, 1:]
+    mask = loss_mask[:, 1:] * (targets != PAD_ID).astype(jnp.float32)
+    return _token_nll(logits, targets, mask)
+
+
+def cls_logits(params, tokens, cfg: ModelConfig):
+    """Masked mean-pool over non-pad positions -> linear head."""
+    h = forward(params, tokens, cfg)
+    mask = (tokens != PAD_ID).astype(jnp.float32)[..., None]
+    pooled = jnp.sum(h * mask, axis=1) / jnp.maximum(jnp.sum(mask, axis=1), 1.0)
+    return pooled @ params["head"]["w"] + params["head"]["b"]
+
+
+def cls_loss(params, tokens, labels, cfg: ModelConfig):
+    logits = cls_logits(params, tokens, cfg)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    n = logits.shape[0]
+    return jnp.mean(logz - gold), jnp.sum(logz - gold), jnp.float32(n)

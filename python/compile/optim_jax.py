@@ -1,0 +1,203 @@
+"""L2 in-graph optimizers: Alada, Adam, Adafactor over arbitrary pytrees.
+
+Each optimizer exposes
+    init(params)            -> state pytree
+    update(grads, params, state, lr) -> (new_params, new_state)
+and is pure, so the whole (model fwd/bwd + optimizer) composes into one
+jitted train step that aot.py lowers to a single HLO artifact.
+
+Matrix-shaped parameters route through the Pallas kernels (L1); vector /
+scalar parameters (LayerNorm scales, biases) take the pure-jnp reference
+path -- tiling a length-d vector is pointless and Adafactor/Alada both
+degenerate gracefully there (the paper's Eq. 12 reshape maps a vector to
+a 1 x n matrix, making p a scalar). Every parameter is first reshaped by
+the balanced split rule (Eq. 12), which is a free view in row-major
+layout.
+"""
+
+import jax.numpy as jnp
+
+from .config import OptimConfig
+from .kernels import adafactor as k_adafactor
+from .kernels import adam as k_adam
+from .kernels import alada as k_alada
+from .kernels import ref
+from .pytree import flatten, unflatten
+
+# Parameters whose balanced split has min(m, n) below this use the jnp
+# reference path instead of the Pallas kernels.
+_MIN_TILE_DIM = 8
+
+
+def _split(x):
+    """Balanced-split view of a parameter (paper Eq. 12)."""
+    m, n = ref.balanced_split(x.shape)
+    return x.reshape(m, n), m, n
+
+
+def _tree_map2(fn, a, b):
+    fa, fb = flatten(a), flatten(b)
+    leaves = [fn(x, y) for (_, x), (_, y) in zip(fa, fb)]
+    return unflatten([p for p, _ in fa], leaves)
+
+
+class Alada:
+    """Paper Algorithm 2 over a pytree of parameters.
+
+    Per-parameter state: first moment ``m`` (same shape — in a PyTorch
+    deployment this lives in the grad slot, see paper Listing 1; here it
+    is an explicit donated buffer and the memory model accounts it as the
+    grad slot), factors ``p`` (m,), ``q`` (n,), and ``v0`` (1,). Global
+    state: step counter ``t`` (1,) int32. Total overhead beyond the grad
+    slot: O(m + n) per parameter.
+    """
+
+    def __init__(self, cfg: OptimConfig, use_pallas: bool = True):
+        assert cfg.name == "alada"
+        self.cfg = cfg
+        self.use_pallas = use_pallas
+
+    def init(self, params):
+        slots = {}
+        for path, x in flatten(params):
+            xm, m, n = _split(x)
+            slots[path.replace(".", "/")] = {
+                "m": jnp.zeros_like(x),
+                "p": jnp.zeros((m,), jnp.float32),
+                "q": jnp.zeros((n,), jnp.float32),
+                "v0": jnp.zeros((1,), jnp.float32),
+            }
+        return {"t": jnp.zeros((1,), jnp.int32), "slots": slots}
+
+    def update(self, grads, params, state, lr):
+        cfg = self.cfg
+        t = state["t"][0]
+        new_slots = {}
+        new_params = {}
+        flat_p = flatten(params)
+        flat_g = dict(flatten(grads))
+        for path, x in flat_p:
+            g = flat_g[path]
+            slot = state["slots"][path.replace(".", "/")]
+            xm, m, n = _split(x)
+            gm = g.reshape(m, n)
+            # t == 0 initialisation (lines 8-12) — depends on G_0 only.
+            v0_init, p_init, q_init = ref.alada_init_ref(gm)
+            first = t == 0
+            v0 = jnp.where(first, v0_init, slot["v0"][0])
+            p = jnp.where(first, p_init, slot["p"])
+            q = jnp.where(first, q_init, slot["q"])
+            mm = slot["m"].reshape(m, n)
+            use_kernel = self.use_pallas and min(m, n) >= _MIN_TILE_DIM
+            step = k_alada.alada_matrix_step if use_kernel else ref.alada_step_ref
+            x_new, m_new, p_new, q_new = step(
+                xm, gm, mm, p, q, v0, t, cfg.beta1, cfg.beta2, cfg.eps, lr)
+            key = path.replace(".", "/")
+            new_slots[key] = {
+                "m": m_new.reshape(x.shape),
+                "p": p_new,
+                "q": q_new,
+                "v0": v0.reshape(1),
+            }
+            _set(new_params, path, x_new.reshape(x.shape))
+        return new_params, {"t": state["t"] + 1, "slots": new_slots}
+
+
+class Adam:
+    """Adam with bias correction (paper Eq. 2-3); state 2x param size."""
+
+    def __init__(self, cfg: OptimConfig, use_pallas: bool = True):
+        assert cfg.name == "adam"
+        self.cfg = cfg
+        self.use_pallas = use_pallas
+
+    def init(self, params):
+        slots = {}
+        for path, x in flatten(params):
+            slots[path.replace(".", "/")] = {
+                "m": jnp.zeros_like(x),
+                "u": jnp.zeros_like(x),
+            }
+        return {"t": jnp.zeros((1,), jnp.int32), "slots": slots}
+
+    def update(self, grads, params, state, lr):
+        cfg = self.cfg
+        t = state["t"][0]
+        new_slots, new_params = {}, {}
+        flat_g = dict(flatten(grads))
+        for path, x in flatten(params):
+            g = flat_g[path]
+            slot = state["slots"][path.replace(".", "/")]
+            xm, m, n = _split(x)
+            use_kernel = self.use_pallas and min(m, n) >= _MIN_TILE_DIM
+            step = k_adam.adam_matrix_step if use_kernel else ref.adam_step_ref
+            x_new, m_new, u_new = step(
+                xm, g.reshape(m, n), slot["m"].reshape(m, n),
+                slot["u"].reshape(m, n), t, cfg.beta1, cfg.beta2, cfg.eps, lr)
+            new_slots[path.replace(".", "/")] = {
+                "m": m_new.reshape(x.shape),
+                "u": u_new.reshape(x.shape),
+            }
+            _set(new_params, path, x_new.reshape(x.shape))
+        return new_params, {"t": state["t"] + 1, "slots": new_slots}
+
+
+class Adafactor:
+    """Factored second moment, no first moment (paper SVI-A settings)."""
+
+    def __init__(self, cfg: OptimConfig, use_pallas: bool = True):
+        assert cfg.name == "adafactor"
+        self.cfg = cfg
+        self.use_pallas = use_pallas
+
+    def init(self, params):
+        slots = {}
+        for path, x in flatten(params):
+            xm, m, n = _split(x)
+            slots[path.replace(".", "/")] = {
+                "r": jnp.zeros((m,), jnp.float32),
+                "c": jnp.zeros((n,), jnp.float32),
+            }
+        return {"t": jnp.zeros((1,), jnp.int32), "slots": slots}
+
+    def update(self, grads, params, state, lr):
+        cfg = self.cfg
+        t = state["t"][0]
+        new_slots, new_params = {}, {}
+        flat_g = dict(flatten(grads))
+        for path, x in flatten(params):
+            g = flat_g[path]
+            slot = state["slots"][path.replace(".", "/")]
+            xm, m, n = _split(x)
+            use_kernel = self.use_pallas and min(m, n) >= _MIN_TILE_DIM
+            step = (k_adafactor.adafactor_matrix_step if use_kernel
+                    else ref.adafactor_step_ref)
+            x_new, r_new, c_new = step(
+                xm, g.reshape(m, n), slot["r"], slot["c"],
+                t, cfg.beta2, cfg.eps, lr)
+            new_slots[path.replace(".", "/")] = {"r": r_new, "c": c_new}
+            _set(new_params, path, x_new.reshape(x.shape))
+        return new_params, {"t": state["t"] + 1, "slots": new_slots}
+
+
+def _set(tree, path, leaf):
+    parts = path.split(".")
+    node = tree
+    for p in parts[:-1]:
+        node = node.setdefault(p, {})
+    node[parts[-1]] = leaf
+
+
+def make_optimizer(name: str, use_pallas: bool = True,
+                   beta1=None, beta2=None, eps=None):
+    """Factory: optimizer by name with paper-default decay parameters."""
+    cfg = OptimConfig.default(name)
+    if beta1 is not None or beta2 is not None or eps is not None:
+        cfg = OptimConfig(
+            name,
+            beta1=cfg.beta1 if beta1 is None else beta1,
+            beta2=cfg.beta2 if beta2 is None else beta2,
+            eps=cfg.eps if eps is None else eps,
+        )
+    klass = {"alada": Alada, "adam": Adam, "adafactor": Adafactor}[name]
+    return klass(cfg, use_pallas=use_pallas)

@@ -1,0 +1,30 @@
+"""Deterministic pytree flattening shared by the AOT pipeline and tests.
+
+The Rust runtime is manifest-driven: it marshals flat buffer lists in
+exactly the order produced here. Nested dicts are flattened depth-first
+with *sorted* keys, paths joined with '.', so the ordering is a pure
+function of the tree structure (stable across Python versions).
+"""
+
+
+def flatten(tree, prefix=""):
+    """Flatten a nested dict of arrays -> list[(path, leaf)] sorted by key."""
+    out = []
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            out.extend(flatten(tree[k], prefix + k + "."))
+    else:
+        out.append((prefix[:-1], tree))
+    return out
+
+
+def unflatten(paths, leaves):
+    """Inverse of flatten given the same path list."""
+    root = {}
+    for path, leaf in zip(paths, leaves):
+        parts = path.split(".")
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = leaf
+    return root

@@ -1,0 +1,190 @@
+"""Fused train / eval step builders for the AOT pipeline.
+
+Every artifact has a *flat-packed* signature: all f32 parameters are
+concatenated into one ``params`` vector and all f32 optimizer-state
+leaves into one ``opt_state`` vector (the int32 step counter travels
+separately). Inside the jitted function the vectors are statically
+sliced and reshaped per leaf -- free for XLA (bitcasts that fuse away) --
+so the Rust runtime marshals 4-6 buffers per step instead of hundreds.
+The exact leaf order/offset table goes into artifacts/manifest.json and
+matches the init_*.bin dumps byte-for-byte.
+
+Signatures
+  train:  (params f32[P], opt_state f32[S], t i32[1], batch..., lr f32[1])
+       -> (params', opt_state', t', loss f32[1])
+  eval:   (params, batch...) -> task-specific metrics
+  logits: (params, tokens)   -> full-sequence LM logits (greedy decode)
+"""
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as M
+from .config import N_CLASSES, ModelConfig
+from .optim_jax import make_optimizer
+from .pytree import flatten, unflatten
+
+
+@dataclass
+class StepSpec:
+    name: str
+    inputs: list    # [(name, shape, dtype)]
+    outputs: list   # [(name, shape, dtype)]
+    meta: dict
+    fn: object      # the flat-signature python callable
+    param_table: list  # [(leaf_name, shape, offset)] into the params vector
+    state_table: list  # [(leaf_name, shape, offset)] into the opt_state vector
+
+
+class Packer:
+    """Pack/unpack a pytree of f32 leaves into one flat vector."""
+
+    def __init__(self, tree, skip=()):
+        self.entries = []  # (path, shape, offset, size)
+        ofs = 0
+        for path, leaf in flatten(tree):
+            if path in skip:
+                continue
+            size = int(np.prod(leaf.shape)) if leaf.shape else 1
+            self.entries.append((path, tuple(leaf.shape), ofs, size))
+            ofs += size
+        self.total = ofs
+
+    def pack(self, tree):
+        flat = dict(flatten(tree))
+        return jnp.concatenate(
+            [flat[p].reshape(-1).astype(jnp.float32) for p, _, _, _ in self.entries])
+
+    def unpack(self, vec):
+        leaves, paths = [], []
+        for path, shape, ofs, size in self.entries:
+            leaves.append(vec[ofs:ofs + size].reshape(shape))
+            paths.append(path)
+        return unflatten(paths, leaves)
+
+    def table(self):
+        return [(p, list(s), o) for p, s, o, _ in self.entries]
+
+
+def _sig(named):
+    return [(n, tuple(s), d) for n, s, d in named]
+
+
+def _batch_sig(task, batch, seq):
+    if task == "lm":
+        return [("batch.tokens", (batch, seq), "int32")]
+    if task == "mt":
+        return [("batch.tokens", (batch, seq), "int32"),
+                ("batch.loss_mask", (batch, seq), "float32")]
+    if task == "cls":
+        return [("batch.tokens", (batch, seq), "int32"),
+                ("batch.labels", (batch,), "int32")]
+    raise ValueError(task)
+
+
+def _loss_fn(task, cfg):
+    if task == "lm":
+        return lambda params, tokens: M.lm_loss(params, tokens, cfg)[0]
+    if task == "mt":
+        return lambda params, tokens, mask: M.mt_loss(params, tokens, mask, cfg)[0]
+    if task == "cls":
+        return lambda params, tokens, labels: M.cls_loss(params, tokens, labels, cfg)[0]
+    raise ValueError(task)
+
+
+def init_example_params(cfg: ModelConfig, n_classes: int):
+    """Deterministic parameter skeleton (seed 0): shapes for lowering AND
+    the runtime's initial weights (dumped to artifacts/init_*.bin)."""
+    return M.init_params(cfg, jax.random.PRNGKey(0), n_classes)
+
+
+def build_train_step(task: str, cfg: ModelConfig, opt_name: str,
+                     batch: int, use_pallas: bool = True,
+                     beta1=None, beta2=None) -> StepSpec:
+    opt = make_optimizer(opt_name, use_pallas=use_pallas, beta1=beta1, beta2=beta2)
+    n_classes = N_CLASSES if task == "cls" else 0
+    params0 = init_example_params(cfg, n_classes)
+    state0 = opt.init(params0)
+    loss_fn = _loss_fn(task, cfg)
+
+    p_pack = Packer(params0)
+    s_pack = Packer(state0, skip=("t",))
+
+    def step_flat(params_vec, state_vec, t, *rest):
+        batch_args, lr = rest[:-1], rest[-1][0]
+        params = p_pack.unpack(params_vec)
+        state = s_pack.unpack(state_vec)
+        state["t"] = t
+        loss, grads = jax.value_and_grad(loss_fn)(params, *batch_args)
+        new_params, new_state = opt.update(grads, params, state, lr)
+        t_new = new_state.pop("t")
+        return (p_pack.pack(new_params), s_pack.pack(new_state),
+                t_new, loss.reshape(1))
+
+    bsig = _batch_sig(task, batch, cfg.max_seq)
+    inputs = ([("params", (p_pack.total,), "float32"),
+               ("opt_state", (s_pack.total,), "float32"),
+               ("t", (1,), "int32")] + bsig + [("lr", (1,), "float32")])
+    outputs = [("params", (p_pack.total,), "float32"),
+               ("opt_state", (s_pack.total,), "float32"),
+               ("t", (1,), "int32"),
+               ("loss", (1,), "float32")]
+    name = f"train_{task}_{cfg.name}_{opt_name}"
+    meta = {"kind": "train", "task": task, "size": cfg.name, "opt": opt_name,
+            "batch": batch, "seq": cfg.max_seq, "vocab": cfg.vocab,
+            "param_elems": p_pack.total, "state_elems": s_pack.total,
+            "param_count": cfg.param_count(n_classes)}
+    return StepSpec(name, _sig(inputs), _sig(outputs), meta, step_flat,
+                    p_pack.table(), s_pack.table())
+
+
+def build_eval_step(task: str, cfg: ModelConfig, batch: int) -> StepSpec:
+    n_classes = N_CLASSES if task == "cls" else 0
+    params0 = init_example_params(cfg, n_classes)
+    p_pack = Packer(params0)
+
+    if task == "cls":
+        def eval_flat(params_vec, tokens, labels):
+            params = p_pack.unpack(params_vec)
+            logits = M.cls_logits(params, tokens, cfg)
+            _, total, count = M.cls_loss(params, tokens, labels, cfg)
+            return (jnp.argmax(logits, axis=-1).astype(jnp.int32),
+                    total.reshape(1), count.reshape(1))
+        outputs = [("pred", (batch,), "int32"), ("sum_nll", (1,), "float32"),
+                   ("count", (1,), "float32")]
+    else:
+        def eval_flat(params_vec, *batch_args):
+            params = p_pack.unpack(params_vec)
+            if task == "lm":
+                _, total, count = M.lm_loss(params, batch_args[0], cfg)
+            else:
+                _, total, count = M.mt_loss(params, batch_args[0], batch_args[1], cfg)
+            return (total.reshape(1), count.reshape(1))
+        outputs = [("sum_nll", (1,), "float32"), ("count", (1,), "float32")]
+
+    inputs = [("params", (p_pack.total,), "float32")] + _batch_sig(task, batch, cfg.max_seq)
+    name = f"eval_{task}_{cfg.name}"
+    meta = {"kind": "eval", "task": task, "size": cfg.name, "batch": batch,
+            "seq": cfg.max_seq, "vocab": cfg.vocab, "param_elems": p_pack.total}
+    return StepSpec(name, _sig(inputs), _sig(outputs), meta, eval_flat,
+                    p_pack.table(), [])
+
+
+def build_logits_step(cfg: ModelConfig, batch: int) -> StepSpec:
+    params0 = init_example_params(cfg, 0)
+    p_pack = Packer(params0)
+
+    def logits_flat(params_vec, tokens):
+        return (M.lm_logits(p_pack.unpack(params_vec), tokens, cfg),)
+
+    inputs = [("params", (p_pack.total,), "float32"),
+              ("batch.tokens", (batch, cfg.max_seq), "int32")]
+    outputs = [("logits", (batch, cfg.max_seq, cfg.vocab), "float32")]
+    name = f"logits_lm_{cfg.name}"
+    meta = {"kind": "logits", "task": "lm", "size": cfg.name, "batch": batch,
+            "seq": cfg.max_seq, "vocab": cfg.vocab, "param_elems": p_pack.total}
+    return StepSpec(name, _sig(inputs), _sig(outputs), meta, logits_flat,
+                    p_pack.table(), [])

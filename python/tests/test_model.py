@@ -1,0 +1,100 @@
+"""L2 model tests: shapes, masking semantics, trainability."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model as M
+from compile.config import MODEL_SIZES
+from compile.train_step import Packer, build_train_step, init_example_params
+
+CFG = MODEL_SIZES["tiny"]
+
+
+def test_param_count_formula_matches_reality():
+    params = M.init_params(CFG, jax.random.PRNGKey(0))
+    total = sum(int(np.prod(l.shape)) for _, l in __import__("compile.pytree", fromlist=["flatten"]).flatten(params))
+    assert total == CFG.param_count()
+
+
+def test_forward_shapes():
+    params = M.init_params(CFG, jax.random.PRNGKey(0))
+    tokens = jnp.ones((3, CFG.max_seq), jnp.int32)
+    h = M.forward(params, tokens, CFG)
+    assert h.shape == (3, CFG.max_seq, CFG.d_model)
+    logits = M.lm_logits(params, tokens, CFG)
+    assert logits.shape == (3, CFG.max_seq, CFG.vocab)
+
+
+def test_lm_loss_starts_near_uniform():
+    params = M.init_params(CFG, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    tokens = jnp.asarray(rng.integers(1, CFG.vocab, (4, CFG.max_seq)), jnp.int32)
+    loss, _, _ = M.lm_loss(params, tokens, CFG)
+    assert abs(float(loss) - np.log(CFG.vocab)) < 0.5
+
+
+def test_pad_positions_are_ignored():
+    params = M.init_params(CFG, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(1)
+    tokens = np.asarray(rng.integers(1, CFG.vocab, (2, CFG.max_seq)), np.int32)
+    full_loss = M.lm_loss(params, jnp.asarray(tokens), CFG)
+    # padding the tail must change the count, not blow up the loss
+    tokens_pad = tokens.copy()
+    tokens_pad[:, CFG.max_seq // 2:] = M.PAD_ID
+    loss_pad, total_pad, count_pad = M.lm_loss(params, jnp.asarray(tokens_pad), CFG)
+    assert count_pad < full_loss[2]
+    assert np.isfinite(float(loss_pad))
+
+
+def test_mt_loss_mask_restricts_positions():
+    params = M.init_params(CFG, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(2)
+    tokens = jnp.asarray(rng.integers(1, CFG.vocab, (2, CFG.max_seq)), jnp.int32)
+    mask_none = jnp.zeros((2, CFG.max_seq), jnp.float32)
+    mask_half = mask_none.at[:, CFG.max_seq // 2:].set(1.0)
+    _, total_none, count_none = M.mt_loss(params, tokens, mask_none, CFG)
+    _, total_half, count_half = M.mt_loss(params, tokens, mask_half, CFG)
+    assert float(count_none) == 0.0
+    assert float(total_none) == 0.0
+    assert float(count_half) > 0
+
+
+def test_cls_logits_shape_and_loss():
+    params = M.init_params(CFG, jax.random.PRNGKey(0), n_classes=4)
+    rng = np.random.default_rng(3)
+    tokens = jnp.asarray(rng.integers(1, CFG.vocab, (5, CFG.max_seq)), jnp.int32)
+    labels = jnp.asarray(rng.integers(0, 4, (5,)), jnp.int32)
+    logits = M.cls_logits(params, tokens, CFG)
+    assert logits.shape == (5, 4)
+    loss, _, _ = M.cls_loss(params, tokens, labels, CFG)
+    assert abs(float(loss) - np.log(4)) < 0.5
+
+
+def test_train_step_reduces_loss_all_optimizers():
+    rng = np.random.default_rng(4)
+    tokens = jnp.asarray(rng.integers(1, CFG.vocab, (4, CFG.max_seq)), jnp.int32)
+    for opt in ["adam", "adafactor", "alada"]:
+        spec = build_train_step("lm", CFG, opt, 4, use_pallas=False)
+        step = jax.jit(spec.fn)
+        params = Packer(init_example_params(CFG, 0)).pack(init_example_params(CFG, 0))
+        state = jnp.zeros((spec.meta["state_elems"],), jnp.float32)
+        t = jnp.zeros((1,), jnp.int32)
+        lr = jnp.asarray([1e-2 if opt != "adafactor" else 3e-2], jnp.float32)
+        first = None
+        for i in range(10):
+            params, state, t, loss = step(params, state, t, tokens, lr)
+            if first is None:
+                first = float(loss[0])
+        assert float(loss[0]) < first * 0.9, f"{opt}: {first} -> {float(loss[0])}"
+
+
+def test_packer_round_trip():
+    from compile.pytree import flatten
+    params = init_example_params(CFG, 0)
+    pack = Packer(params)
+    vec = pack.pack(params)
+    back = pack.unpack(vec)
+    for (pa, la), (pb, lb) in zip(flatten(params), flatten(back)):
+        assert pa == pb
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))

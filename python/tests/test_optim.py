@@ -1,0 +1,153 @@
+"""L2 optimizer-layer tests: full-pytree Alada/Adam/Adafactor semantics.
+
+Checks the paper-visible invariants at the optimizer (not kernel) level:
+alternation parity, t=0 initialisation, Prop. 1 error decrease, the
+Eq. 12 reshape, pallas-path == ref-path, and the SIV-C decay mapping.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.optim_jax import make_optimizer
+from compile.pytree import flatten, unflatten
+
+
+def tree_allclose(a, b, rtol=3e-5, atol=3e-6):
+    fa, fb = flatten(a), flatten(b)
+    assert [p for p, _ in fa] == [p for p, _ in fb]
+    for (p, x), (_, y) in zip(fa, fb):
+        np.testing.assert_allclose(x, y, rtol=rtol, atol=atol, err_msg=p)
+
+
+def small_tree(rng):
+    return {
+        "emb": jnp.asarray(rng.standard_normal((24, 16)), jnp.float32),
+        "layer": {
+            "w": jnp.asarray(rng.standard_normal((16, 16)), jnp.float32),
+            "b": jnp.asarray(rng.standard_normal((16,)), jnp.float32),
+        },
+    }
+
+
+def grads_like(tree, rng):
+    paths = [p for p, _ in flatten(tree)]
+    leaves = [jnp.asarray(rng.standard_normal(l.shape), jnp.float32) * 0.1
+              for _, l in flatten(tree)]
+    return unflatten(paths, leaves)
+
+
+def test_alada_pallas_path_equals_ref_path():
+    rng = np.random.default_rng(0)
+    params = small_tree(rng)
+    opt_k = make_optimizer("alada", use_pallas=True)
+    opt_r = make_optimizer("alada", use_pallas=False)
+    sk, sr = opt_k.init(params), opt_r.init(params)
+    pk, pr = params, params
+    for i in range(5):
+        g = grads_like(params, rng)
+        pk, sk = opt_k.update(g, pk, sk, 1e-3)
+        pr, sr = opt_r.update(g, pr, sr, 1e-3)
+    tree_allclose(pk, pr)
+    tree_allclose(sk, sr)
+
+
+def test_alada_alternation_parity_at_tree_level():
+    rng = np.random.default_rng(1)
+    params = small_tree(rng)
+    opt = make_optimizer("alada", use_pallas=False)
+    state = opt.init(params)
+    g = grads_like(params, rng)
+    params1, state1 = opt.update(g, params, state, 1e-3)   # t=0: p updated
+    p1 = state1["slots"]["emb"]["p"]
+    q1 = state1["slots"]["emb"]["q"]
+    params2, state2 = opt.update(g, params1, state1, 1e-3)  # t=1: q updated
+    np.testing.assert_array_equal(state2["slots"]["emb"]["p"], p1)
+    assert not np.allclose(state2["slots"]["emb"]["q"], q1)
+
+
+def test_alada_t0_initialisation_matches_paper():
+    rng = np.random.default_rng(2)
+    params = small_tree(rng)
+    opt = make_optimizer("alada", use_pallas=False)
+    state = opt.init(params)
+    g = grads_like(params, rng)
+    _, state1 = opt.update(g, params, state, 1e-3)
+    gm = g["emb"]
+    v0 = float(jnp.sum(gm * gm) / gm.size)
+    assert abs(float(state1["slots"]["emb"]["v0"][0]) - v0) < 1e-6 * max(v0, 1)
+
+
+def test_vector_params_use_eq12_degenerate_split():
+    rng = np.random.default_rng(3)
+    params = small_tree(rng)
+    opt = make_optimizer("alada", use_pallas=False)
+    state = opt.init(params)
+    slot = state["slots"]["layer/b"]
+    assert slot["p"].shape == (1,)
+    assert slot["q"].shape == (16,)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.integers(min_value=1, max_value=12), min_size=0, max_size=4))
+def test_balanced_split_properties(shape):
+    m, n = ref.balanced_split(shape)
+    total = int(np.prod(shape)) if shape else 1
+    assert m * n == total
+    # no split can be more balanced
+    left = 1
+    best = abs(m - n)
+    for j in range(len(shape) + 1):
+        assert abs(left - total // left) >= best or left * (total // left) != total or True
+        gap = abs(left - total // left)
+        assert gap >= best or left * (total // left) != total
+        if j < len(shape):
+            left *= shape[j]
+
+
+def test_prop1_error_decreases_under_projection():
+    """Proposition 1 at the jnp level: ||V - U_{t+1}|| <= ||V - U_t||."""
+    rng = np.random.default_rng(4)
+    v = jnp.asarray(rng.standard_normal((12, 9)) ** 2 + 0.01, jnp.float32)
+    p = jnp.asarray(rng.uniform(0.1, 1.0, 12), jnp.float32)
+    q = jnp.asarray(rng.uniform(0.1, 1.0, 9), jnp.float32)
+    m_hat = jnp.sqrt(v)
+    for t in range(8):
+        err_before = float(jnp.linalg.norm(v - p[:, None] * q[None, :]))
+        # beta2=0 gives the pure projection step of the proposition
+        p, q = ref.alada_factor_ref(m_hat, p, q, 0.0, t, 1e-16)
+        err_after = float(jnp.linalg.norm(v - p[:, None] * q[None, :]))
+        assert err_after <= err_before * (1 + 1e-5), f"t={t}: {err_before}->{err_after}"
+
+
+def test_decay_mapping_s4c():
+    """SIV-C: (1-beta2)(1-beta1)^2 in Alada should equal 1-beta2_adam.
+    With beta1=0.9: beta2=0.9 maps to adam beta2=0.999."""
+    beta1, beta2 = 0.9, 0.9
+    assert abs((1 - beta2) * (1 - beta1) ** 2 - (1 - 0.999)) < 1e-12
+
+
+def test_adam_and_adafactor_tree_updates_finite():
+    rng = np.random.default_rng(5)
+    params = small_tree(rng)
+    for name in ["adam", "adafactor"]:
+        opt = make_optimizer(name)
+        state = opt.init(params)
+        p = params
+        for _ in range(3):
+            g = grads_like(params, rng)
+            p, state = opt.update(g, p, state, 1e-3)
+        for path, leaf in flatten(p):
+            assert np.isfinite(np.asarray(leaf)).all(), f"{name}:{path}"
+
+
+def test_alada_state_overhead_is_sublinear():
+    rng = np.random.default_rng(6)
+    params = {"big": jnp.zeros((256, 192), jnp.float32)}
+    opt = make_optimizer("alada")
+    state = opt.init(params)
+    slot = state["slots"]["big"]
+    overhead = slot["p"].size + slot["q"].size + slot["v0"].size
+    assert overhead == 256 + 192 + 1  # O(m+n), M excluded (grad slot)

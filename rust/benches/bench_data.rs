@@ -1,0 +1,75 @@
+//! Data-pipeline and metrics benchmarks: corpus/dataset generation,
+//! batching, tokenizer, BLEU — the L3 costs that must stay negligible
+//! next to a train step (~25 ms tiny / ~300 ms small on this testbed).
+
+use alada::data::{
+    classification::ClsDataset, tokenizer::Granularity, translation::MtDataset, Batcher,
+    MarkovCorpus, Tokenizer, CLS_TASKS, MT_PAIRS,
+};
+use alada::train::metrics;
+use alada::util::timing::bench;
+use alada::util::Rng;
+
+fn main() {
+    println!("== data pipeline ==");
+    let s = bench("markov-corpus/200k-tokens", 1, 5, || {
+        std::hint::black_box(MarkovCorpus::generate(512, 6, 200_000, 1));
+    });
+    println!("{}", s.report());
+
+    let s = bench("cls-dataset/mnli-like", 1, 5, || {
+        std::hint::black_box(ClsDataset::generate(CLS_TASKS[1], 512, 64, 1));
+    });
+    println!("{}", s.report());
+
+    let s = bench("mt-dataset/tr-en", 1, 5, || {
+        std::hint::black_box(MtDataset::generate(MT_PAIRS[5], 512, 64, 1));
+    });
+    println!("{}", s.report());
+
+    let corpus = MarkovCorpus::generate(512, 6, 200_000, 1);
+    let mut rng = Rng::new(2);
+    let order = corpus.epoch_order(64, &mut rng);
+    let s = bench("lm-batch/16x64", 5, 50, || {
+        std::hint::black_box(corpus.batch(&order, 3, 16, 64));
+    });
+    println!("{}", s.report());
+
+    let mut batcher = Batcher::new(6144, 32, 3);
+    let s = bench("batcher/next", 10, 100, || {
+        std::hint::black_box(batcher.next());
+    });
+    println!("{}", s.report());
+
+    println!("\n== tokenizer ==");
+    let text: String = (0..2000).map(|i| format!("word{} the a of {} ", i % 300, i % 7)).collect();
+    let s = bench("tokenizer/fit-word-10k", 1, 10, || {
+        std::hint::black_box(Tokenizer::fit(&text, Granularity::Word, 512));
+    });
+    println!("{}", s.report());
+    let tok = Tokenizer::fit(&text, Granularity::Word, 512);
+    let s = bench("tokenizer/encode-10k-words", 2, 20, || {
+        std::hint::black_box(tok.encode(&text));
+    });
+    println!("{}", s.report());
+
+    println!("\n== metrics ==");
+    let mut rng = Rng::new(3);
+    let refs: Vec<Vec<i32>> = (0..64)
+        .map(|_| (0..20).map(|_| 2 + rng.below(500) as i32).collect())
+        .collect();
+    let hyps: Vec<Vec<i32>> = refs
+        .iter()
+        .map(|r| {
+            let mut h = r.clone();
+            if rng.bernoulli(0.5) {
+                h.swap(0, 5);
+            }
+            h
+        })
+        .collect();
+    let s = bench("bleu/64-sentences", 2, 20, || {
+        std::hint::black_box(metrics::bleu(&hyps, &refs));
+    });
+    println!("{}", s.report());
+}

@@ -1,0 +1,53 @@
+//! Runtime benchmarks: artifact execute latency per (size, optimizer) —
+//! the numbers behind Table IV's per-step wall-clock column and the
+//! §Perf L3 iteration log.
+//!
+//! Requires artifacts; prints SKIP rows otherwise.
+
+use alada::data::MarkovCorpus;
+use alada::runtime::executor::{BatchExtra, EvalSession};
+use alada::runtime::{Runtime, TrainSession};
+use alada::util::timing::bench_for;
+use alada::util::Rng;
+
+fn main() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        println!("SKIP: run `make artifacts` first");
+        return;
+    }
+    let rt = Runtime::open("artifacts").expect("runtime");
+    let mut rng = Rng::new(1);
+
+    println!("== fused train-step latency (CPU PJRT) ==");
+    for size in ["tiny", "small"] {
+        for opt in ["adam", "adafactor", "alada"] {
+            let mut sess = TrainSession::new(&rt, "lm", size, opt).expect("session");
+            let corpus = MarkovCorpus::generate(
+                if size == "tiny" { 256 } else { 512 },
+                6,
+                60_000,
+                1,
+            );
+            let (b, sq) = (sess.batch, sess.seq);
+            let order = corpus.epoch_order(sq, &mut rng);
+            let tokens = corpus.batch(&order, 0, b, sq);
+            let stats = bench_for(&format!("train/{size}/{opt}"), 2.0, || {
+                sess.step(&tokens, &BatchExtra::None, 1e-4).expect("step");
+            });
+            println!("{}", stats.report());
+        }
+    }
+
+    println!("\n== eval-step latency ==");
+    for size in ["tiny", "small"] {
+        let sess = TrainSession::new(&rt, "lm", size, "alada").expect("session");
+        let eval = EvalSession::new(&rt, "lm", size).expect("eval");
+        let corpus =
+            MarkovCorpus::generate(if size == "tiny" { 256 } else { 512 }, 6, 60_000, 1);
+        let tokens = corpus.test_batches(eval.batch, eval.seq).remove(0);
+        let stats = bench_for(&format!("eval/{size}"), 1.0, || {
+            eval.run(&sess.params, &tokens, &BatchExtra::None).expect("eval");
+        });
+        println!("{}", stats.report());
+    }
+}

@@ -1,0 +1,81 @@
+//! One bench per paper table — end-to-end micro-versions of the
+//! measurements each table reports, runnable in seconds:
+//!
+//!   Table I  — fine-tune step + test-set evaluation (cls pipeline)
+//!   Table II — translation step + greedy-decode BLEU (mt pipeline)
+//!   Table III— LM step + perplexity evaluation (lm pipeline)
+//!   Table IV — memory-model computation + per-step time per optimizer
+//!
+//! Requires artifacts; prints SKIP otherwise.
+
+use alada::data::{classification::ClsDataset, translation::MtDataset, MarkovCorpus, CLS_TASKS, MT_PAIRS};
+use alada::runtime::executor::{BatchExtra, EvalSession, LogitsSession};
+use alada::runtime::{Runtime, TrainSession};
+use alada::train::decode::decode_test_set;
+use alada::train::memory::{breakdown, GPT2_SMALL, GPT2_XL, T5_SMALL};
+use alada::train::metrics;
+use alada::util::timing::{bench, bench_for};
+
+fn main() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        println!("SKIP: run `make artifacts` first");
+        return;
+    }
+    let rt = Runtime::open("artifacts").expect("runtime");
+
+    println!("== table1: cls fine-tune step + eval ==");
+    let mut sess = TrainSession::new(&rt, "cls", "tiny", "alada").expect("cls");
+    let ds = ClsDataset::generate(CLS_TASKS[6], 256, sess.seq, 1);
+    let (toks, labels) = ds.batch(&(0..ds.train.len()).collect::<Vec<_>>(), 0, sess.batch);
+    let stats = bench_for("table1/cls-train-step", 1.5, || {
+        sess.step(&toks, &BatchExtra::Labels(labels.clone()), 1e-3).expect("step");
+    });
+    println!("{}", stats.report());
+    let eval = EvalSession::new(&rt, "cls", "tiny").expect("eval");
+    let (et, el) = ds.test_batches(eval.batch).remove(0);
+    let stats = bench_for("table1/cls-eval-batch", 1.0, || {
+        eval.run(&sess.params, &et, &BatchExtra::Labels(el.clone())).expect("eval");
+    });
+    println!("{}", stats.report());
+
+    println!("\n== table2: mt step + greedy-decode BLEU ==");
+    let mut sess = TrainSession::new(&rt, "mt", "tiny", "alada").expect("mt");
+    let ds = MtDataset::generate(MT_PAIRS[0], 256, sess.seq, 1);
+    let (toks, mask) = ds.batch(&(0..ds.train.len()).collect::<Vec<_>>(), 0, sess.batch);
+    let stats = bench_for("table2/mt-train-step", 1.5, || {
+        sess.step(&toks, &BatchExtra::LossMask(mask.clone()), 1e-3).expect("step");
+    });
+    println!("{}", stats.report());
+    let logits = LogitsSession::new(&rt, "tiny").expect("logits");
+    let stats = bench("table2/greedy-decode-16-sentences", 1, 3, || {
+        let (hyps, refs) = decode_test_set(&logits, &sess.params, &ds, 16).expect("decode");
+        std::hint::black_box(metrics::bleu(&hyps, &refs));
+    });
+    println!("{}", stats.report());
+
+    println!("\n== table3: lm step + perplexity ==");
+    let mut sess = TrainSession::new(&rt, "lm", "tiny", "alada").expect("lm");
+    let corpus = MarkovCorpus::generate(256, 4, 60_000, 1);
+    let tokens = corpus.test_batches(sess.batch, sess.seq).remove(0);
+    let stats = bench_for("table3/lm-train-step", 1.5, || {
+        sess.step(&tokens, &BatchExtra::None, 1e-3).expect("step");
+    });
+    println!("{}", stats.report());
+
+    println!("\n== table4: memory model + per-step time per optimizer ==");
+    let stats = bench("table4/memory-model-3-models-x-6-opts", 2, 20, || {
+        for model in [GPT2_SMALL, GPT2_XL, T5_SMALL] {
+            for opt in ["sgd", "adam", "adafactor", "alada", "came", "sm3"] {
+                std::hint::black_box(breakdown(model, opt, 1, model.max_seq).total());
+            }
+        }
+    });
+    println!("{}", stats.report());
+    for opt in ["adam", "adafactor", "alada"] {
+        let mut sess = TrainSession::new(&rt, "lm", "tiny", opt).expect("lm");
+        let stats = bench_for(&format!("table4/step-time/{opt}"), 1.5, || {
+            sess.step(&tokens, &BatchExtra::None, 1e-4).expect("step");
+        });
+        println!("{}", stats.report());
+    }
+}

@@ -1,0 +1,180 @@
+//! Config system: typed run configuration loadable from a TOML-subset
+//! file, overridable from CLI flags.
+//!
+//! `alada train --config runs/my_run.toml` and the experiment drivers
+//! share `RunConfig`. The parser (toml.rs) covers the subset a training
+//! config needs: `[sections]`, `key = value` with strings, numbers,
+//! booleans, and flat arrays — hand-rolled because the offline registry
+//! has no serde/toml.
+
+pub mod toml;
+
+use anyhow::{anyhow, Result};
+
+pub use toml::TomlDoc;
+
+/// One training run, fully specified.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RunConfig {
+    pub task: String,
+    pub size: String,
+    pub opt: String,
+    pub steps: usize,
+    pub lr: f32,
+    pub seed: u64,
+    pub dataset: usize,
+    pub schedule: String,
+    pub artifact_dir: String,
+    pub out_dir: String,
+    pub record_every: usize,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            task: "lm".into(),
+            size: "small".into(),
+            opt: "alada".into(),
+            steps: 300,
+            lr: 1e-3,
+            seed: 0,
+            dataset: 0,
+            schedule: String::new(), // empty = diminishing over `steps`
+            artifact_dir: "artifacts".into(),
+            out_dir: "results".into(),
+            record_every: 10,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Load from a TOML file ([run] section; missing keys keep defaults).
+    pub fn from_file(path: &str) -> Result<RunConfig> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("config {path:?}: {e}"))?;
+        let doc = TomlDoc::parse(&text).map_err(|e| anyhow!("config {path:?}: {e}"))?;
+        let mut cfg = RunConfig::default();
+        let get = |k: &str| doc.get("run", k);
+        if let Some(v) = get("task") {
+            cfg.task = v.as_str().ok_or_else(|| anyhow!("run.task must be a string"))?.into();
+        }
+        if let Some(v) = get("size") {
+            cfg.size = v.as_str().ok_or_else(|| anyhow!("run.size must be a string"))?.into();
+        }
+        if let Some(v) = get("opt") {
+            cfg.opt = v.as_str().ok_or_else(|| anyhow!("run.opt must be a string"))?.into();
+        }
+        if let Some(v) = get("steps") {
+            cfg.steps = v.as_f64().ok_or_else(|| anyhow!("run.steps must be a number"))? as usize;
+        }
+        if let Some(v) = get("lr") {
+            cfg.lr = v.as_f64().ok_or_else(|| anyhow!("run.lr must be a number"))? as f32;
+        }
+        if let Some(v) = get("seed") {
+            cfg.seed = v.as_f64().unwrap_or(0.0) as u64;
+        }
+        if let Some(v) = get("dataset") {
+            cfg.dataset = v.as_f64().unwrap_or(0.0) as usize;
+        }
+        if let Some(v) = get("schedule") {
+            cfg.schedule = v.as_str().unwrap_or("").into();
+        }
+        if let Some(v) = get("artifacts") {
+            cfg.artifact_dir = v.as_str().unwrap_or("artifacts").into();
+        }
+        if let Some(v) = get("record_every") {
+            cfg.record_every = v.as_f64().unwrap_or(10.0) as usize;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if !["lm", "cls", "mt"].contains(&self.task.as_str()) {
+            return Err(anyhow!("task must be lm|cls|mt, got {:?}", self.task));
+        }
+        if !["tiny", "small", "base"].contains(&self.size.as_str()) {
+            return Err(anyhow!("size must be tiny|small|base, got {:?}", self.size));
+        }
+        if self.steps == 0 {
+            return Err(anyhow!("steps must be > 0"));
+        }
+        if !(self.lr > 0.0) {
+            return Err(anyhow!("lr must be > 0, got {}", self.lr));
+        }
+        Ok(())
+    }
+
+    /// The schedule this run uses (paper default: diminishing η₀·(1−t/T)).
+    pub fn make_schedule(&self) -> Result<crate::optim::Schedule> {
+        if self.schedule.is_empty() {
+            Ok(crate::optim::Schedule::Diminishing { eta0: self.lr, total: self.steps })
+        } else {
+            crate::optim::Schedule::parse(&self.schedule).map_err(|e| anyhow!(e))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_tmp(content: &str) -> std::path::PathBuf {
+        let p = std::env::temp_dir().join(format!(
+            "alada_cfg_{}.toml",
+            std::time::SystemTime::now().duration_since(std::time::UNIX_EPOCH).unwrap().as_nanos()
+        ));
+        std::fs::write(&p, content).unwrap();
+        p
+    }
+
+    #[test]
+    fn loads_full_config() {
+        let p = write_tmp(
+            "# a run\n[run]\ntask = \"mt\"\nsize = \"tiny\"\nopt = \"adam\"\n\
+             steps = 50\nlr = 0.002\nseed = 7\ndataset = 3\nschedule = \"const:0.001\"\n",
+        );
+        let cfg = RunConfig::from_file(p.to_str().unwrap()).unwrap();
+        assert_eq!(cfg.task, "mt");
+        assert_eq!(cfg.opt, "adam");
+        assert_eq!(cfg.steps, 50);
+        assert!((cfg.lr - 0.002).abs() < 1e-9);
+        assert_eq!(cfg.dataset, 3);
+        assert_eq!(
+            cfg.make_schedule().unwrap(),
+            crate::optim::Schedule::Constant { eta0: 0.001 }
+        );
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn defaults_fill_missing_keys() {
+        let p = write_tmp("[run]\ntask = \"cls\"\n");
+        let cfg = RunConfig::from_file(p.to_str().unwrap()).unwrap();
+        assert_eq!(cfg.task, "cls");
+        assert_eq!(cfg.size, "small");
+        assert_eq!(cfg.steps, 300);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        let p = write_tmp("[run]\ntask = \"bogus\"\n");
+        assert!(RunConfig::from_file(p.to_str().unwrap()).is_err());
+        std::fs::remove_file(p).ok();
+        assert!(RunConfig { steps: 0, ..Default::default() }.validate().is_err());
+        assert!(RunConfig { lr: -1.0, ..Default::default() }.validate().is_err());
+    }
+
+    #[test]
+    fn default_schedule_is_paper_diminishing() {
+        let cfg = RunConfig::default();
+        match cfg.make_schedule().unwrap() {
+            crate::optim::Schedule::Diminishing { eta0, total } => {
+                assert_eq!(eta0, cfg.lr);
+                assert_eq!(total, cfg.steps);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,206 @@
+//! TOML-subset parser for run configs.
+//!
+//! Supported: `[section]` headers, `key = value` lines, `#` comments,
+//! values: basic strings, integers/floats, booleans, flat arrays of the
+//! same. Enough for training configs; deliberately not a full TOML
+//! implementation (no dotted keys, no multi-line strings, no dates).
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A parsed TOML value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+    Arr(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// Parse error with line number.
+#[derive(Debug)]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for TomlError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for TomlError {}
+
+/// A parsed document: section → key → value. Top-level keys live in "".
+#[derive(Debug, Default)]
+pub struct TomlDoc {
+    sections: BTreeMap<String, BTreeMap<String, TomlValue>>,
+}
+
+impl TomlDoc {
+    pub fn parse(src: &str) -> Result<TomlDoc, TomlError> {
+        let mut doc = TomlDoc::default();
+        let mut section = String::new();
+        for (i, raw) in src.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            let err = |msg: &str| TomlError { line: i + 1, msg: msg.to_string() };
+            if let Some(name) = line.strip_prefix('[') {
+                let name = name.strip_suffix(']').ok_or_else(|| err("unterminated [section]"))?;
+                section = name.trim().to_string();
+                doc.sections.entry(section.clone()).or_default();
+            } else if let Some((k, v)) = line.split_once('=') {
+                let value = parse_value(v.trim()).map_err(|m| err(&m))?;
+                doc.sections
+                    .entry(section.clone())
+                    .or_default()
+                    .insert(k.trim().to_string(), value);
+            } else {
+                return Err(err("expected `key = value` or `[section]`"));
+            }
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&TomlValue> {
+        self.sections.get(section)?.get(key)
+    }
+
+    pub fn sections(&self) -> impl Iterator<Item = &String> {
+        self.sections.keys()
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // a `#` outside a string starts a comment
+    let mut in_str = false;
+    for (idx, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..idx],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue, String> {
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest.strip_suffix('"').ok_or("unterminated string")?;
+        return Ok(TomlValue::Str(inner.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner = rest.strip_suffix(']').ok_or("unterminated array")?;
+        let mut out = Vec::new();
+        let trimmed = inner.trim();
+        if !trimmed.is_empty() {
+            for part in split_top_level(trimmed) {
+                out.push(parse_value(part.trim())?);
+            }
+        }
+        return Ok(TomlValue::Arr(out));
+    }
+    s.replace('_', "")
+        .parse::<f64>()
+        .map(TomlValue::Num)
+        .map_err(|_| format!("cannot parse value {s:?}"))
+}
+
+/// Split an array body on commas that are not inside strings.
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut start = 0;
+    let mut in_str = false;
+    for (idx, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                out.push(&s[start..idx]);
+                start = idx + 1;
+            }
+            _ => {}
+        }
+    }
+    out.push(&s[start..]);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_scalars() {
+        let doc = TomlDoc::parse(
+            "top = 1\n[run]\ntask = \"lm\" # comment\nlr = 1e-3\nflag = true\nn = 1_000\n",
+        )
+        .unwrap();
+        assert_eq!(doc.get("", "top"), Some(&TomlValue::Num(1.0)));
+        assert_eq!(doc.get("run", "task").unwrap().as_str(), Some("lm"));
+        assert_eq!(doc.get("run", "lr").unwrap().as_f64(), Some(1e-3));
+        assert_eq!(doc.get("run", "flag").unwrap().as_bool(), Some(true));
+        assert_eq!(doc.get("run", "n").unwrap().as_f64(), Some(1000.0));
+    }
+
+    #[test]
+    fn parses_arrays() {
+        let doc = TomlDoc::parse("lrs = [1e-3, 2e-3, 4e-3]\nnames = [\"a,b\", \"c\"]\n").unwrap();
+        match doc.get("", "lrs").unwrap() {
+            TomlValue::Arr(v) => assert_eq!(v.len(), 3),
+            other => panic!("{other:?}"),
+        }
+        match doc.get("", "names").unwrap() {
+            TomlValue::Arr(v) => {
+                assert_eq!(v[0].as_str(), Some("a,b"));
+                assert_eq!(v[1].as_str(), Some("c"));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let doc = TomlDoc::parse("s = \"a#b\"\n").unwrap();
+        assert_eq!(doc.get("", "s").unwrap().as_str(), Some("a#b"));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let err = TomlDoc::parse("ok = 1\nbroken line\n").unwrap_err();
+        assert_eq!(err.line, 2);
+        assert!(TomlDoc::parse("[unterminated\n").is_err());
+        assert!(TomlDoc::parse("x = \"open\n").is_err());
+    }
+}

@@ -1,0 +1,126 @@
+//! Job specifications and results — plain data crossing thread
+//! boundaries between the coordinator and its workers.
+
+use std::collections::BTreeMap;
+
+/// What a worker should train and how to evaluate it.
+#[derive(Clone, Debug)]
+pub struct JobSpec {
+    /// Task family: "lm" | "cls" | "mt".
+    pub task: String,
+    /// Model size: "tiny" | "small" | "base".
+    pub size: String,
+    /// Artifact name override (beta-variant artifacts for Fig. 5);
+    /// default is `train_{task}_{size}_{opt}`.
+    pub artifact: Option<String>,
+    /// Optimizer name (for the default artifact lookup + labelling).
+    pub opt: String,
+    /// Dataset selector: cls task index 0-6, mt pair index 0-5,
+    /// lm corpus parameters are fixed per size.
+    pub dataset: usize,
+    /// Initial step size η₀ (diminishing schedule over `steps`).
+    pub lr: f32,
+    pub steps: usize,
+    pub seed: u64,
+    /// Record the loss curve every k steps.
+    pub record_every: usize,
+    /// Evaluation to run after training: "none" | "ppl" | "cls" | "bleu".
+    pub eval: String,
+}
+
+/// One job = id + label + spec.
+#[derive(Clone, Debug)]
+pub struct Job {
+    pub id: usize,
+    pub label: String,
+    pub spec: JobSpec,
+}
+
+/// What comes back from a worker.
+#[derive(Clone, Debug)]
+pub struct JobResult {
+    pub id: usize,
+    pub label: String,
+    pub spec: JobSpec,
+    /// (step, raw loss, cumulative-average loss).
+    pub curve: Vec<(usize, f64, f64)>,
+    pub final_cum_loss: f64,
+    pub wall_secs: f64,
+    pub secs_per_step: f64,
+    /// Evaluation metrics keyed by name ("ppl", "acc", "f1", "mcc", "bleu").
+    pub metrics: BTreeMap<String, f64>,
+    /// Optimizer-state bytes held by the session (Table IV cross-check).
+    pub opt_state_bytes: usize,
+    /// Worker-side error, if the job failed (kept, not dropped, so sweep
+    /// summaries can report divergence — e.g. too-large η₀ runs).
+    pub error: Option<String>,
+}
+
+impl JobResult {
+    pub fn metric(&self, key: &str) -> Option<f64> {
+        self.metrics.get(key).copied()
+    }
+}
+
+/// Builder for sweep grids.
+pub struct JobGrid {
+    jobs: Vec<Job>,
+}
+
+impl JobGrid {
+    pub fn new() -> JobGrid {
+        JobGrid { jobs: Vec::new() }
+    }
+
+    pub fn push(&mut self, label: String, spec: JobSpec) {
+        let id = self.jobs.len();
+        self.jobs.push(Job { id, label, spec });
+    }
+
+    pub fn into_jobs(self) -> Vec<Job> {
+        self.jobs
+    }
+
+    pub fn len(&self) -> usize {
+        self.jobs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.jobs.is_empty()
+    }
+}
+
+impl Default for JobGrid {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_assigns_sequential_ids() {
+        let mut g = JobGrid::new();
+        for i in 0..3 {
+            g.push(
+                format!("job{i}"),
+                JobSpec {
+                    task: "lm".into(),
+                    size: "tiny".into(),
+                    artifact: None,
+                    opt: "alada".into(),
+                    dataset: 0,
+                    lr: 1e-3,
+                    steps: 1,
+                    seed: i as u64,
+                    record_every: 1,
+                    eval: "none".into(),
+                },
+            );
+        }
+        let jobs = g.into_jobs();
+        assert_eq!(jobs.iter().map(|j| j.id).collect::<Vec<_>>(), vec![0, 1, 2]);
+    }
+}

@@ -1,0 +1,78 @@
+//! L3 experiment coordinator: leader/worker sweep execution.
+//!
+//! The paper's evaluation is a grid of independent training runs (task ×
+//! optimizer × learning rate × seed, Figs. 2-5 and Tables I-III). The
+//! coordinator materialises that grid as a job queue and fans it out to
+//! worker threads. Each worker owns its own PJRT runtime (the xla
+//! wrappers hold raw pointers and are created thread-locally) and caches
+//! compiled executables by artifact name, so a sweep compiles each
+//! artifact once per worker and amortises it over every job that uses it.
+//!
+//! Results flow back over a channel as plain data; the experiment
+//! drivers aggregate them into the `results/*.csv` series that regenerate
+//! the paper's figures and tables.
+
+pub mod job;
+pub mod worker;
+
+pub use job::{Job, JobResult, JobSpec};
+
+use std::collections::VecDeque;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use crate::util::log;
+
+/// Run all jobs on `n_workers` threads; returns results sorted by job id.
+pub fn run_jobs(artifact_dir: &str, jobs: Vec<Job>, n_workers: usize) -> Result<Vec<JobResult>> {
+    let total = jobs.len();
+    if total == 0 {
+        return Ok(Vec::new());
+    }
+    let n_workers = n_workers.max(1).min(total);
+    log::info(&format!("coordinator: {total} jobs on {n_workers} workers"));
+    let queue = Arc::new(Mutex::new(VecDeque::from(jobs)));
+    let (tx, rx) = mpsc::channel::<JobResult>();
+
+    let mut handles = Vec::new();
+    for wid in 0..n_workers {
+        let queue = Arc::clone(&queue);
+        let tx = tx.clone();
+        let dir = artifact_dir.to_string();
+        handles.push(std::thread::spawn(move || {
+            worker::worker_loop(wid, &dir, queue, tx);
+        }));
+    }
+    drop(tx);
+
+    let mut results: Vec<JobResult> = Vec::with_capacity(total);
+    let t0 = std::time::Instant::now();
+    for r in rx {
+        log::info(&format!(
+            "[{}/{}] {} done in {:.1}s (loss {:.4})",
+            results.len() + 1,
+            total,
+            r.label,
+            r.wall_secs,
+            r.final_cum_loss
+        ));
+        results.push(r);
+    }
+    for h in handles {
+        h.join().map_err(|_| anyhow::anyhow!("worker panicked"))?;
+    }
+    log::info(&format!("coordinator: {total} jobs in {:.1}s", t0.elapsed().as_secs_f64()));
+    results.sort_by_key(|r| r.id);
+    if results.len() != total {
+        anyhow::bail!("coordinator: {} of {total} jobs returned", results.len());
+    }
+    Ok(results)
+}
+
+/// Default worker count: leave headroom for XLA's intra-op threads.
+pub fn default_workers() -> usize {
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    (cores / 2).clamp(1, 6)
+}

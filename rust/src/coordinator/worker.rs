@@ -1,0 +1,199 @@
+//! Worker: owns a thread-local PJRT runtime, interprets job specs.
+//!
+//! A worker pops jobs until the queue drains. Compiled executables are
+//! cached by artifact name; datasets are regenerated per job from the
+//! spec's seed (generation is milliseconds — determinism beats caching).
+//! Failures become `JobResult { error: Some(..) }` rather than killing
+//! the sweep: a diverging η₀ is data, not a crash.
+
+use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::sync::mpsc::Sender;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, Result};
+
+use crate::data::classification::ClsDataset;
+use crate::data::translation::MtDataset;
+use crate::data::{MarkovCorpus, CLS_TASKS, MT_PAIRS};
+use crate::optim::Schedule;
+use crate::runtime::executor::{BatchExtra, EvalSession, LogitsSession};
+use crate::runtime::{Executable, Runtime, TrainSession};
+use crate::train::decode::decode_test_set;
+use crate::train::metrics;
+use crate::train::{TaskData, Trainer};
+use crate::util::log;
+
+use super::job::{Job, JobResult};
+
+/// Corpus parameters per model size (lm task).
+fn lm_corpus(size: &str, seed: u64) -> MarkovCorpus {
+    match size {
+        "tiny" => MarkovCorpus::generate(256, 4, 60_000, seed),
+        "small" => MarkovCorpus::generate(512, 6, 200_000, seed),
+        _ => MarkovCorpus::generate(1024, 8, 400_000, seed),
+    }
+}
+
+pub(super) fn worker_loop(
+    wid: usize,
+    artifact_dir: &str,
+    queue: Arc<Mutex<VecDeque<Job>>>,
+    tx: Sender<JobResult>,
+) {
+    let rt = match Runtime::open(artifact_dir) {
+        Ok(rt) => rt,
+        Err(e) => {
+            log::error(&format!("worker {wid}: runtime open failed: {e}"));
+            return;
+        }
+    };
+    let mut cache: HashMap<String, Executable> = HashMap::new();
+    loop {
+        let job = {
+            let mut q = queue.lock().unwrap();
+            match q.pop_front() {
+                Some(j) => j,
+                None => break,
+            }
+        };
+        let result = run_job(&rt, &mut cache, &job).unwrap_or_else(|e| JobResult {
+            id: job.id,
+            label: job.label.clone(),
+            spec: job.spec.clone(),
+            curve: Vec::new(),
+            final_cum_loss: f64::NAN,
+            wall_secs: 0.0,
+            secs_per_step: 0.0,
+            metrics: BTreeMap::new(),
+            opt_state_bytes: 0,
+            error: Some(e.to_string()),
+        });
+        if tx.send(result).is_err() {
+            break; // coordinator gone
+        }
+    }
+}
+
+fn load_cached(
+    rt: &Runtime,
+    cache: &mut HashMap<String, Executable>,
+    name: &str,
+) -> Result<Executable> {
+    if let Some(exe) = cache.get(name) {
+        return Ok(exe.clone());
+    }
+    let exe = rt.load(name)?;
+    cache.insert(name.to_string(), exe.clone());
+    Ok(exe)
+}
+
+fn run_job(rt: &Runtime, cache: &mut HashMap<String, Executable>, job: &Job) -> Result<JobResult> {
+    let spec = &job.spec;
+    let artifact = spec
+        .artifact
+        .clone()
+        .unwrap_or_else(|| format!("train_{}_{}_{}", spec.task, spec.size, spec.opt));
+    let exe = load_cached(rt, cache, &artifact)?;
+    let params = rt.init_params(&spec.task, &spec.size)?;
+    let sess = TrainSession::with_params(exe, params, &spec.task)?;
+    let (batch, seq) = (sess.batch, sess.seq);
+
+    // dataset + stream
+    let vocab = sess_vocab(&spec.size);
+    let data = match spec.task.as_str() {
+        "lm" => TaskData::lm(lm_corpus(&spec.size, spec.seed), batch, seq, spec.seed),
+        "cls" => {
+            let task = CLS_TASKS[spec.dataset % CLS_TASKS.len()];
+            TaskData::cls(ClsDataset::generate(task, vocab, seq, spec.seed), batch, spec.seed)
+        }
+        "mt" => {
+            let pair = MT_PAIRS[spec.dataset % MT_PAIRS.len()];
+            TaskData::mt(MtDataset::generate(pair, vocab, seq, spec.seed), batch, spec.seed)
+        }
+        other => return Err(anyhow!("unknown task {other:?}")),
+    };
+
+    let schedule = Schedule::Diminishing { eta0: spec.lr, total: spec.steps };
+    let mut trainer = Trainer::new(sess, data, schedule);
+    trainer.record_every = spec.record_every.max(1);
+    let outcome = trainer.run(spec.steps)?;
+
+    // evaluation
+    let mut metrics_out = BTreeMap::new();
+    match spec.eval.as_str() {
+        "none" => {}
+        "ppl" => {
+            let eval = EvalSession::from_exe(load_cached(
+                rt,
+                cache,
+                &crate::runtime::Manifest::eval_name(&spec.task, &spec.size),
+            )?, &spec.task);
+            let corpus = lm_corpus(&spec.size, spec.seed);
+            let (mut nll, mut count) = (0.0, 0.0);
+            for toks in corpus.test_batches(eval.batch, eval.seq).iter().take(16) {
+                let out = eval.run(&trainer.sess.params, toks, &BatchExtra::None)?;
+                nll += out.sum_nll;
+                count += out.count;
+            }
+            metrics_out.insert("ppl".to_string(), metrics::perplexity(nll, count));
+        }
+        "cls" => {
+            let eval = EvalSession::from_exe(
+                load_cached(rt, cache, &crate::runtime::Manifest::eval_name("cls", &spec.size))?,
+                "cls",
+            );
+            let task = CLS_TASKS[spec.dataset % CLS_TASKS.len()];
+            let ds = ClsDataset::generate(task, vocab, seq, spec.seed);
+            let mut preds = Vec::new();
+            let mut labels = Vec::new();
+            for (toks, lab) in ds.test_batches(eval.batch) {
+                let out =
+                    eval.run(&trainer.sess.params, &toks, &BatchExtra::Labels(lab.clone()))?;
+                preds.extend(out.preds);
+                labels.extend(lab);
+            }
+            metrics_out.insert("acc".to_string(), metrics::accuracy(&preds, &labels));
+            metrics_out.insert("f1".to_string(), metrics::f1_binary(&preds, &labels));
+            metrics_out.insert("mcc".to_string(), metrics::matthews_corr(&preds, &labels));
+            let task_metric = match task.metric {
+                "f1" => metrics::f1_binary(&preds, &labels) * 100.0,
+                "mcc" => metrics::matthews_corr(&preds, &labels) * 100.0,
+                _ => metrics::accuracy(&preds, &labels) * 100.0,
+            };
+            metrics_out.insert("task_metric".to_string(), task_metric);
+        }
+        "bleu" => {
+            let logits = LogitsSession::from_exe(load_cached(
+                rt,
+                cache,
+                &format!("logits_lm_{}", spec.size),
+            )?);
+            let pair = MT_PAIRS[spec.dataset % MT_PAIRS.len()];
+            let ds = MtDataset::generate(pair, vocab, seq, spec.seed);
+            let (hyps, refs) = decode_test_set(&logits, &trainer.sess.params, &ds, 64)?;
+            metrics_out.insert("bleu".to_string(), metrics::bleu(&hyps, &refs));
+        }
+        other => return Err(anyhow!("unknown eval {other:?}")),
+    }
+
+    Ok(JobResult {
+        id: job.id,
+        label: job.label.clone(),
+        spec: spec.clone(),
+        curve: outcome.curve,
+        final_cum_loss: outcome.final_cum_loss,
+        wall_secs: outcome.wall_secs,
+        secs_per_step: outcome.secs_per_step,
+        metrics: metrics_out,
+        opt_state_bytes: trainer.sess.opt_state_bytes(),
+        error: None,
+    })
+}
+
+fn sess_vocab(size: &str) -> usize {
+    match size {
+        "tiny" => 256,
+        "small" => 512,
+        _ => 1024,
+    }
+}

@@ -1,0 +1,33 @@
+//! Synthetic data pipeline (the paper's datasets are license/size-gated;
+//! DESIGN.md documents each substitution).
+//!
+//! * `lm` — Markov-chain corpus with learnable n-gram structure
+//!   (WikiText-2 stand-in for Fig. 4 / Table III).
+//! * `classification` — seven heterogeneous sequence-classification
+//!   tasks (GLUE stand-in for Fig. 2 / Table I).
+//! * `translation` — six synthetic language pairs of graded difficulty
+//!   (WMT16 stand-in for Fig. 3 / Table II and the Fig. 5 sweep).
+//! * `tokenizer` — char/word tokenizer used by the quickstart example to
+//!   feed real text through the same pipeline.
+//!
+//! Everything is seed-deterministic (PCG streams) so every figure
+//! regenerates bit-identically.
+
+pub mod batch;
+pub mod classification;
+pub mod lm;
+pub mod tokenizer;
+pub mod translation;
+
+pub use batch::Batcher;
+pub use classification::{ClsDataset, ClsTask, CLS_TASKS};
+pub use lm::MarkovCorpus;
+pub use tokenizer::Tokenizer;
+pub use translation::{MtDataset, MtPair, MT_PAIRS};
+
+/// Token 0 is PAD everywhere (mirrors python/compile/model.py).
+pub const PAD_ID: i32 = 0;
+/// Token 1 separates source and target in the prefix-LM translator.
+pub const SEP_ID: i32 = 1;
+/// First id available to content tokens.
+pub const CONTENT_BASE: i32 = 2;

@@ -1,0 +1,121 @@
+//! Character/word tokenizer for feeding real text through the pipeline.
+//!
+//! The experiment drivers run on id-level synthetic data; this tokenizer
+//! exists so the quickstart example (and downstream users) can train the
+//! same artifacts on actual text files: build a vocabulary capped to the
+//! model's vocab size, encode to ids ≥ CONTENT_BASE, decode back.
+
+use std::collections::HashMap;
+
+use super::{CONTENT_BASE, PAD_ID};
+
+/// Tokenization granularity.
+#[derive(Clone, Copy, PartialEq, Debug)]
+pub enum Granularity {
+    Char,
+    Word,
+}
+
+/// A frequency-built vocabulary with encode/decode.
+pub struct Tokenizer {
+    granularity: Granularity,
+    to_id: HashMap<String, i32>,
+    to_tok: Vec<String>,
+    /// id used for out-of-vocabulary pieces (last slot).
+    unk: i32,
+}
+
+impl Tokenizer {
+    /// Build from text, keeping the `max_vocab - CONTENT_BASE - 1` most
+    /// frequent pieces (one slot reserved for UNK).
+    pub fn fit(text: &str, granularity: Granularity, max_vocab: usize) -> Tokenizer {
+        assert!(max_vocab > CONTENT_BASE as usize + 2);
+        let mut counts: HashMap<String, usize> = HashMap::new();
+        for piece in pieces(text, granularity) {
+            *counts.entry(piece).or_insert(0) += 1;
+        }
+        let mut by_freq: Vec<(String, usize)> = counts.into_iter().collect();
+        by_freq.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        let keep = max_vocab - CONTENT_BASE as usize - 1;
+        let mut to_id = HashMap::new();
+        let mut to_tok = Vec::new();
+        for (i, (piece, _)) in by_freq.into_iter().take(keep).enumerate() {
+            to_id.insert(piece.clone(), CONTENT_BASE + i as i32);
+            to_tok.push(piece);
+        }
+        let unk = CONTENT_BASE + to_tok.len() as i32;
+        to_tok.push("<unk>".to_string());
+        Tokenizer { granularity, to_id, to_tok, unk }
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        CONTENT_BASE as usize + self.to_tok.len()
+    }
+
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        pieces(text, self.granularity)
+            .map(|p| self.to_id.get(&p).copied().unwrap_or(self.unk))
+            .collect()
+    }
+
+    pub fn decode(&self, ids: &[i32]) -> String {
+        let sep = if self.granularity == Granularity::Word { " " } else { "" };
+        ids.iter()
+            .filter(|&&id| id != PAD_ID)
+            .map(|&id| {
+                let idx = (id - CONTENT_BASE) as usize;
+                self.to_tok.get(idx).map(String::as_str).unwrap_or("<bad>")
+            })
+            .collect::<Vec<_>>()
+            .join(sep)
+    }
+}
+
+fn pieces(text: &str, granularity: Granularity) -> Box<dyn Iterator<Item = String> + '_> {
+    match granularity {
+        Granularity::Char => Box::new(text.chars().map(|c| c.to_string())),
+        Granularity::Word => Box::new(text.split_whitespace().map(|w| w.to_lowercase())),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn char_round_trip() {
+        let tok = Tokenizer::fit("hello world", Granularity::Char, 64);
+        let ids = tok.encode("hello");
+        assert_eq!(tok.decode(&ids), "hello");
+        assert!(ids.iter().all(|&i| i >= CONTENT_BASE));
+    }
+
+    #[test]
+    fn word_round_trip_lowercases() {
+        let tok = Tokenizer::fit("The cat sat on the mat", Granularity::Word, 64);
+        let ids = tok.encode("THE MAT");
+        assert_eq!(tok.decode(&ids), "the mat");
+    }
+
+    #[test]
+    fn oov_maps_to_unk() {
+        let tok = Tokenizer::fit("aaa bbb", Granularity::Word, 64);
+        let ids = tok.encode("zzz");
+        assert_eq!(tok.decode(&ids), "<unk>");
+    }
+
+    #[test]
+    fn vocab_cap_respected() {
+        let text: String = (0..1000).map(|i| format!("w{i} ")).collect();
+        let tok = Tokenizer::fit(&text, Granularity::Word, 128);
+        assert!(tok.vocab_size() <= 128);
+    }
+
+    #[test]
+    fn frequency_ordering_is_stable() {
+        let a = Tokenizer::fit("b b a a a c", Granularity::Word, 32);
+        let b = Tokenizer::fit("b b a a a c", Granularity::Word, 32);
+        assert_eq!(a.encode("a b c"), b.encode("a b c"));
+        assert_eq!(a.encode("a")[0], CONTENT_BASE); // most frequent first
+    }
+}

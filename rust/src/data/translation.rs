@@ -1,0 +1,225 @@
+//! Six synthetic translation pairs (WMT16 stand-in for Fig. 3 / Table II).
+//!
+//! Each "language pair" is a deterministic token-level transform of
+//! graded difficulty — vocabulary permutation, local reordering, fertile
+//! tokens (1→2 expansion), and drop noise — ordered so BLEU ceilings
+//! decline from De-En (easy) to Tr-En (hard), matching the paper's
+//! relative task ordering. Examples are prefix-LM sequences
+//! `[src ; SEP ; tgt ; PAD…]` with the loss mask covering tgt.
+
+use crate::util::Rng;
+
+use super::{CONTENT_BASE, PAD_ID, SEP_ID};
+
+/// Static description of one language pair.
+#[derive(Clone, Copy, Debug)]
+pub struct MtPair {
+    pub name: &'static str,
+    /// Window size for local reordering of the target (0 = monotone).
+    pub reorder: usize,
+    /// Probability a source token expands to two target tokens.
+    pub fertility: f32,
+    /// Probability a target token is replaced by a random one (noise).
+    pub noise: f32,
+    pub train_size: usize,
+    pub test_size: usize,
+}
+
+/// Difficulty-graded pairs mirroring the Table II columns.
+pub const MT_PAIRS: [MtPair; 6] = [
+    MtPair { name: "de-en", reorder: 0, fertility: 0.00, noise: 0.00, train_size: 6144, test_size: 256 },
+    MtPair { name: "cs-en", reorder: 2, fertility: 0.00, noise: 0.01, train_size: 5120, test_size: 256 },
+    MtPair { name: "ru-en", reorder: 2, fertility: 0.05, noise: 0.02, train_size: 5120, test_size: 256 },
+    MtPair { name: "ro-en", reorder: 3, fertility: 0.05, noise: 0.03, train_size: 4096, test_size: 256 },
+    MtPair { name: "fi-en", reorder: 3, fertility: 0.10, noise: 0.05, train_size: 4096, test_size: 256 },
+    MtPair { name: "tr-en", reorder: 4, fertility: 0.12, noise: 0.08, train_size: 3072, test_size: 256 },
+];
+
+/// One example: source ids, reference target ids.
+pub type MtExample = (Vec<i32>, Vec<i32>);
+
+/// Materialised parallel corpus for one pair.
+pub struct MtDataset {
+    pub pair: MtPair,
+    pub train: Vec<MtExample>,
+    pub test: Vec<MtExample>,
+    pub seq: usize,
+    /// Source sentences occupy ids [src_lo, src_hi); targets [tgt_lo, tgt_hi).
+    pub src_span: (i32, i32),
+    pub tgt_span: (i32, i32),
+}
+
+impl MtDataset {
+    pub fn generate(pair: MtPair, vocab: usize, seq: usize, seed: u64) -> MtDataset {
+        let mut rng = Rng::with_stream(seed, pair.name.as_bytes()[0] as u64 * 131);
+        let content = (vocab - CONTENT_BASE as usize) as i32;
+        let half = content / 2;
+        let src_span = (CONTENT_BASE, CONTENT_BASE + half);
+        let tgt_span = (CONTENT_BASE + half, CONTENT_BASE + content);
+
+        // the "language": a fixed random bijection src → tgt vocab
+        let mut perm: Vec<i32> = (0..half).collect();
+        rng.shuffle(&mut perm);
+
+        // src/tgt budget: src ≤ (seq-1)/2, tgt gets the rest
+        let max_src = (seq - 1) / 2;
+        let max_tgt = seq - 1 - max_src;
+
+        let mut gen = |rng: &mut Rng, n: usize| -> Vec<MtExample> {
+            (0..n)
+                .map(|_| {
+                    // fixed source length: alignment is then an absolute
+                    // position mapping, learnable by a small prefix-LM
+                    // with learned positional embeddings (varying lengths
+                    // need relative addressing the tiny model lacks)
+                    let len = max_src;
+                    let src: Vec<i32> =
+                        (0..len).map(|_| src_span.0 + rng.below(half as u32) as i32).collect();
+                    let mut tgt: Vec<i32> = Vec::with_capacity(max_tgt);
+                    for &s in &src {
+                        let base = tgt_span.0 + perm[(s - src_span.0) as usize];
+                        tgt.push(base);
+                        if rng.bernoulli(pair.fertility) && tgt.len() < max_tgt {
+                            // fertile token: deterministic companion
+                            let comp = tgt_span.0 + (base - tgt_span.0 + 1) % half;
+                            tgt.push(comp);
+                        }
+                    }
+                    tgt.truncate(max_tgt);
+                    // local reordering: swap within windows
+                    if pair.reorder > 0 {
+                        let w = pair.reorder;
+                        let mut i = 0;
+                        while i + w < tgt.len() {
+                            tgt[i..i + w].reverse();
+                            i += w;
+                        }
+                    }
+                    // noise
+                    for t in tgt.iter_mut() {
+                        if rng.bernoulli(pair.noise) {
+                            *t = tgt_span.0 + rng.below(half as u32) as i32;
+                        }
+                    }
+                    (src, tgt)
+                })
+                .collect()
+        };
+
+        let train = gen(&mut rng, pair.train_size);
+        let test = gen(&mut rng, pair.test_size);
+        MtDataset { pair, train, test, seq, src_span, tgt_span }
+    }
+
+    /// Pack one example as `[src ; SEP ; tgt ; PAD…]` + loss mask on tgt.
+    pub fn pack(&self, ex: &MtExample) -> (Vec<i32>, Vec<f32>) {
+        let mut toks = vec![PAD_ID; self.seq];
+        let mut mask = vec![0.0f32; self.seq];
+        let mut pos = 0;
+        for &s in ex.0.iter().take(self.seq - 2) {
+            toks[pos] = s;
+            pos += 1;
+        }
+        toks[pos] = SEP_ID;
+        pos += 1;
+        for &t in ex.1.iter().take(self.seq - pos) {
+            toks[pos] = t;
+            mask[pos] = 1.0;
+            pos += 1;
+        }
+        (toks, mask)
+    }
+
+    /// One shuffled training batch: (tokens, loss_mask) flattened.
+    pub fn batch(&self, order: &[usize], idx: usize, batch: usize) -> (Vec<i32>, Vec<f32>) {
+        let mut toks = Vec::with_capacity(batch * self.seq);
+        let mut mask = Vec::with_capacity(batch * self.seq);
+        for b in 0..batch {
+            let ex = &self.train[order[(idx * batch + b) % self.train.len()]];
+            let (t, m) = self.pack(ex);
+            toks.extend(t);
+            mask.extend(m);
+        }
+        (toks, mask)
+    }
+
+    pub fn epoch_order(&self, rng: &mut Rng) -> Vec<usize> {
+        let mut order: Vec<usize> = (0..self.train.len()).collect();
+        rng.shuffle(&mut order);
+        order
+    }
+
+    pub fn batches_per_epoch(&self, batch: usize) -> usize {
+        self.train.len() / batch
+    }
+
+    /// Greedy-decoding prompt for an example: `[src ; SEP ; PAD…]`; the
+    /// decoder appends from position src.len()+1.
+    pub fn prompt(&self, ex: &MtExample) -> (Vec<i32>, usize) {
+        let mut toks = vec![PAD_ID; self.seq];
+        let n = ex.0.len().min(self.seq - 2);
+        toks[..n].copy_from_slice(&ex.0[..n]);
+        toks[n] = SEP_ID;
+        (toks, n + 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pairs_are_difficulty_graded() {
+        for w in MT_PAIRS.windows(2) {
+            let easy = w[0].reorder as f32 + w[0].fertility * 10.0 + w[0].noise * 10.0;
+            let hard = w[1].reorder as f32 + w[1].fertility * 10.0 + w[1].noise * 10.0;
+            assert!(hard >= easy, "{} should be ≥ {}", w[1].name, w[0].name);
+        }
+    }
+
+    #[test]
+    fn de_en_is_a_pure_substitution_cipher() {
+        let d = MtDataset::generate(MT_PAIRS[0], 512, 64, 3);
+        // same source token always maps to the same target token
+        let mut map = std::collections::HashMap::new();
+        for (src, tgt) in &d.train[..200] {
+            assert_eq!(src.len(), tgt.len());
+            for (&s, &t) in src.iter().zip(tgt) {
+                assert_eq!(*map.entry(s).or_insert(t), t, "mapping must be deterministic");
+            }
+        }
+    }
+
+    #[test]
+    fn pack_masks_exactly_the_target() {
+        let d = MtDataset::generate(MT_PAIRS[2], 512, 64, 5);
+        let ex = &d.train[0];
+        let (toks, mask) = d.pack(ex);
+        assert_eq!(toks.len(), 64);
+        let sep = toks.iter().position(|&t| t == SEP_ID).unwrap();
+        for (i, &m) in mask.iter().enumerate() {
+            if m > 0.0 {
+                assert!(i > sep, "mask before SEP");
+                assert_ne!(toks[i], PAD_ID);
+            }
+        }
+        assert!(mask.iter().sum::<f32>() > 0.0);
+    }
+
+    #[test]
+    fn spans_are_disjoint() {
+        let d = MtDataset::generate(MT_PAIRS[0], 512, 64, 7);
+        for (src, tgt) in &d.train[..50] {
+            assert!(src.iter().all(|&t| t >= d.src_span.0 && t < d.src_span.1));
+            assert!(tgt.iter().all(|&t| t >= d.tgt_span.0 && t < d.tgt_span.1));
+        }
+    }
+
+    #[test]
+    fn prompt_ends_with_sep() {
+        let d = MtDataset::generate(MT_PAIRS[5], 512, 64, 9);
+        let (toks, start) = d.prompt(&d.test[0]);
+        assert_eq!(toks[start - 1], SEP_ID);
+        assert!(toks[start..].iter().all(|&t| t == PAD_ID));
+    }
+}

@@ -1,0 +1,77 @@
+//! §IV-C ablation — the decay-parameter mapping between Alada and Adam.
+//!
+//! The paper derives that Alada with (β₁, β₂) mimics Adam with
+//! β₂^Adam = 1 − (1 − β₂)(1 − β₁)², recommending (0.9, 0.9) ↔ (0.9,
+//! 0.999). This driver runs Alada under several β₂ against the Adam
+//! reference on the noisy quadratic and measures trajectory divergence —
+//! the derived mapping should minimise it.
+
+use anyhow::Result;
+
+use crate::optim::{Adam, Alada, Optimizer};
+use crate::tensor::Tensor;
+use crate::util::csv::CsvWriter;
+
+use super::workloads::{NoisyQuadratic, Workload};
+use super::ExpOpts;
+
+pub fn run(opts: &ExpOpts) -> Result<()> {
+    let steps = opts.steps(600);
+    let mut w = CsvWriter::create(
+        format!("{}/decay_map.csv", opts.out_dir),
+        &["alada_beta2", "mean_traj_dist", "final_loss_gap"],
+    )?;
+
+    let shapes = vec![vec![16usize, 12]];
+    println!("Alada(0.9, β₂) vs Adam(0.9, 0.999) trajectory distance ({steps} steps)");
+    let mut best = (f64::INFINITY, 0.0f32);
+    for beta2 in [0.5f32, 0.8, 0.9, 0.99, 0.999] {
+        // identical noise streams: same seed → same gradient samples
+        let mut w_adam = NoisyQuadratic::new(16, 12, 0.3, 99);
+        let mut w_alada = NoisyQuadratic::new(16, 12, 0.3, 99);
+        let mut x_adam = w_adam.init();
+        let mut x_alada = w_alada.init();
+        let mut adam = Adam::new(0.9, 0.999, 1e-8, &shapes);
+        let mut alada = Alada::new(0.9, beta2, 1e-16, &shapes);
+        let mut dist_sum = 0.0f64;
+        for _ in 0..steps {
+            let g1 = w_adam.grad(&x_adam);
+            let g2 = w_alada.grad(&x_alada);
+            step_one(&mut adam, &mut x_adam, g1, 0.01);
+            step_one(&mut alada, &mut x_alada, g2, 0.01);
+            dist_sum += x_adam.sub(&x_alada).norm() as f64;
+        }
+        let mean_dist = dist_sum / steps as f64;
+        let gap = (loss(&w_adam, &x_adam) - loss(&w_alada, &x_alada)).abs();
+        w.row(&[format!("{beta2}"), format!("{mean_dist:.5}"), format!("{gap:.5}")])?;
+        println!("  β₂={beta2:<6} mean trajectory distance {mean_dist:.4}  |loss gap| {gap:.5}");
+        if mean_dist < best.0 {
+            best = (mean_dist, beta2);
+        }
+    }
+    w.flush()?;
+    println!(
+        "closest β₂ = {} (paper's derivation predicts 0.9; see EXPERIMENTS.md E11)",
+        best.1
+    );
+    println!("decay-map: wrote results/decay_map.csv");
+    Ok(())
+}
+
+fn step_one(opt: &mut dyn Optimizer, x: &mut Tensor, g: Tensor, lr: f32) {
+    let mut params = vec![std::mem::replace(x, Tensor::zeros(&[1]))];
+    opt.step(&mut params, &[g], lr);
+    *x = params.pop().unwrap();
+}
+
+fn loss(w: &NoisyQuadratic, x: &Tensor) -> f64 {
+    // ½ Σ c_j (x − a)² — evaluate directly
+    let n = w.curvature.len();
+    let mut total = 0.0f64;
+    for (i, (&xi, &ai)) in x.data().iter().zip(w.target.data()).enumerate() {
+        let c = w.curvature[i % n] as f64;
+        let d = (xi - ai) as f64;
+        total += 0.5 * c * d * d;
+    }
+    total
+}

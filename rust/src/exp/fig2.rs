@@ -1,0 +1,81 @@
+//! Fig. 2 — convergence trajectories on the seven classification tasks.
+//!
+//! Paper: fine-tune BERT-Base on 7 GLUE tasks with Adam / Adafactor /
+//! Alada, 3 epochs, bsz 32, η₀ tuned per task; plot cumulative-average
+//! training loss. Here: the synthetic GLUE-like tasks on the `small`
+//! transformer, same optimizer trio, η₀ tuned over a grid, best-η₀
+//! curve per (task, optimizer) written to results/fig2_<task>.csv.
+
+use anyhow::Result;
+
+use crate::coordinator::job::{JobGrid, JobSpec};
+use crate::coordinator::run_jobs;
+use crate::data::CLS_TASKS;
+use crate::util::csv::CsvWriter;
+
+use super::ExpOpts;
+
+pub const OPTS: [&str; 3] = ["adam", "adafactor", "alada"];
+pub const LRS: [f32; 3] = [1e-3, 2e-3, 4e-3];
+
+pub fn run(opts: &ExpOpts) -> Result<()> {
+    let steps = opts.steps(150); // ≈ 3 epochs of the smaller tasks at bsz 16
+    let mut grid = JobGrid::new();
+    for (ti, task) in CLS_TASKS.iter().enumerate() {
+        for opt in OPTS {
+            for lr in LRS {
+                grid.push(
+                    format!("fig2/{}/{}/lr{:.0e}", task.name, opt, lr),
+                    JobSpec {
+                        task: "cls".into(),
+                        size: "tiny".into(),
+                        artifact: None,
+                        opt: opt.into(),
+                        dataset: ti,
+                        lr,
+                        steps,
+                        seed: 17,
+                        record_every: (steps / 60).max(1),
+                        eval: "none".into(),
+                    },
+                );
+            }
+        }
+    }
+    let results = run_jobs(&opts.artifact_dir, grid.into_jobs(), opts.workers)?;
+
+    // pick best η₀ per (task, optimizer) by final cumulative loss
+    for (ti, task) in CLS_TASKS.iter().enumerate() {
+        let mut w = CsvWriter::create(
+            format!("{}/fig2_{}.csv", opts.out_dir, task.name),
+            &["step", "optimizer", "lr", "loss", "cum_avg_loss"],
+        )?;
+        println!("task {}", task.name);
+        for opt in OPTS {
+            let best = results
+                .iter()
+                .filter(|r| r.spec.dataset == ti && r.spec.opt == opt && r.error.is_none())
+                .min_by(|a, b| a.final_cum_loss.partial_cmp(&b.final_cum_loss).unwrap());
+            let Some(best) = best else {
+                println!("  {opt}: all runs failed");
+                continue;
+            };
+            for (step, loss, avg) in &best.curve {
+                w.row(&[
+                    step.to_string(),
+                    opt.to_string(),
+                    format!("{:.0e}", best.spec.lr),
+                    format!("{loss:.5}"),
+                    format!("{avg:.5}"),
+                ])?;
+            }
+            println!(
+                "  {:<10} best lr {:.0e}  final cum-avg loss {:.4}",
+                opt, best.spec.lr, best.final_cum_loss
+            );
+        }
+        w.flush()?;
+    }
+    println!("fig2: wrote results/fig2_<task>.csv (7 files)");
+    Ok(())
+}

@@ -1,0 +1,79 @@
+//! Fig. 3 — convergence trajectories on the six translation pairs.
+//!
+//! Paper: T5-Small on WMT16 {De,Cs,Ru,Ro,Fi,Tr}-En, 10 epochs, bsz 64,
+//! η₀ ∈ 1e-3·{1,2,4,8}; plots cumulative-average loss and highlights
+//! Alada's robustness across step sizes. We additionally write *all*
+//! η₀ curves (not just the best) because the robustness claim is about
+//! the spread across η₀.
+
+use anyhow::Result;
+
+use crate::coordinator::job::{JobGrid, JobSpec};
+use crate::coordinator::run_jobs;
+use crate::data::MT_PAIRS;
+use crate::util::csv::CsvWriter;
+
+use super::ExpOpts;
+
+pub const OPTS: [&str; 3] = ["adam", "adafactor", "alada"];
+pub const LRS: [f32; 4] = [1e-3, 2e-3, 4e-3, 8e-3];
+
+pub fn run(opts: &ExpOpts) -> Result<()> {
+    let steps = opts.steps(120);
+    let mut grid = JobGrid::new();
+    for (pi, pair) in MT_PAIRS.iter().enumerate() {
+        for opt in OPTS {
+            for lr in LRS {
+                grid.push(
+                    format!("fig3/{}/{}/lr{:.0e}", pair.name, opt, lr),
+                    JobSpec {
+                        task: "mt".into(),
+                        size: "tiny".into(),
+                        artifact: None,
+                        opt: opt.into(),
+                        dataset: pi,
+                        lr,
+                        steps,
+                        seed: 29,
+                        record_every: (steps / 60).max(1),
+                        eval: "none".into(),
+                    },
+                );
+            }
+        }
+    }
+    let results = run_jobs(&opts.artifact_dir, grid.into_jobs(), opts.workers)?;
+
+    for (pi, pair) in MT_PAIRS.iter().enumerate() {
+        let mut w = CsvWriter::create(
+            format!("{}/fig3_{}.csv", opts.out_dir, pair.name),
+            &["step", "optimizer", "lr", "loss", "cum_avg_loss"],
+        )?;
+        println!("pair {}", pair.name);
+        for opt in OPTS {
+            let mut finals = Vec::new();
+            for r in results
+                .iter()
+                .filter(|r| r.spec.dataset == pi && r.spec.opt == opt && r.error.is_none())
+            {
+                for (step, loss, avg) in &r.curve {
+                    w.row(&[
+                        step.to_string(),
+                        opt.to_string(),
+                        format!("{:.0e}", r.spec.lr),
+                        format!("{loss:.5}"),
+                        format!("{avg:.5}"),
+                    ])?;
+                }
+                finals.push(r.final_cum_loss);
+            }
+            // robustness summary: spread of final loss across η₀
+            let best = finals.iter().cloned().fold(f64::INFINITY, f64::min);
+            let worst = finals.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            println!("  {opt:<10} final loss best {best:.4} worst {worst:.4} spread {:.4}", worst - best);
+        }
+        w.flush()?;
+    }
+    println!("fig3: wrote results/fig3_<pair>.csv (6 files, all lr curves)");
+    Ok(())
+}

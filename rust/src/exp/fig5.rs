@@ -1,0 +1,103 @@
+//! Fig. 5 — β₁ × β₂ sensitivity heatmap on three translation pairs.
+//!
+//! Paper: Cs-En, Ro-En, Tr-En; β₁ ∈ {0, 0.9}, β₂ ∈ {0.5, 0.9, 0.99,
+//! 0.999}; η₀ tuned per cell; mean best BLEU of 3 runs plotted as a
+//! heatmap. The decay parameters are compile-time constants of the fused
+//! step, so each cell runs its own beta-variant artifact
+//! (train_mt_tiny_alada_b1_<β₁>_b2_<β₂>, lowered by aot.py).
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::coordinator::job::{JobGrid, JobSpec};
+use crate::coordinator::run_jobs;
+use crate::data::MT_PAIRS;
+use crate::util::csv::CsvWriter;
+
+use super::ExpOpts;
+
+const BETA1S: [&str; 2] = ["0p0", "0p9"];
+const BETA2S: [&str; 4] = ["0p5", "0p9", "0p99", "0p999"];
+const PAIRS: [usize; 3] = [1, 3, 5]; // cs-en, ro-en, tr-en
+const LRS: [f32; 2] = [1e-3, 2e-3];
+const SEEDS: [u64; 1] = [3];
+
+pub fn run(opts: &ExpOpts) -> Result<()> {
+    let steps = opts.steps(120);
+    let mut grid = JobGrid::new();
+    for pi in PAIRS {
+        for b1 in BETA1S {
+            for b2 in BETA2S {
+                let artifact = format!("train_mt_tiny_alada_b1_{b1}_b2_{b2}");
+                for lr in LRS {
+                    for seed in SEEDS {
+                        grid.push(
+                            format!("fig5/{}/b1={b1}/b2={b2}/lr{lr:.0e}/s{seed}", MT_PAIRS[pi].name),
+                            JobSpec {
+                                task: "mt".into(),
+                                size: "tiny".into(),
+                                artifact: Some(artifact.clone()),
+                                opt: "alada".into(),
+                                dataset: pi,
+                                lr,
+                                steps,
+                                seed,
+                                record_every: steps,
+                                eval: "bleu".into(),
+                            },
+                        );
+                    }
+                }
+            }
+        }
+    }
+    let results = run_jobs(&opts.artifact_dir, grid.into_jobs(), opts.workers)?;
+
+    let mut w = CsvWriter::create(
+        format!("{}/fig5.csv", opts.out_dir),
+        &["pair", "beta1", "beta2", "bleu", "cum_loss", "best_lr"],
+    )?;
+    for pi in PAIRS {
+        let name = MT_PAIRS[pi].name;
+        println!("pair {name}: rows β₁, cols β₂ = {BETA2S:?}");
+        for b1 in BETA1S {
+            let mut row = String::new();
+            for b2 in BETA2S {
+                let key = format!("fig5/{name}/b1={b1}/b2={b2}/");
+                // mean over seeds per lr, then pick the best lr (paper's
+                // η₀ tuning): by BLEU when non-degenerate, else by the
+                // final cumulative loss (under-trained budgets)
+                let mut by_lr: BTreeMap<String, (f64, f64, usize, f32)> = BTreeMap::new();
+                for r in results.iter().filter(|r| r.label.starts_with(&key) && r.error.is_none()) {
+                    let e = by_lr
+                        .entry(format!("{:.0e}", r.spec.lr))
+                        .or_insert((0.0, 0.0, 0, r.spec.lr));
+                    e.0 += r.metric("bleu").unwrap_or(0.0);
+                    e.1 += r.final_cum_loss;
+                    e.2 += 1;
+                }
+                let best = by_lr
+                    .values()
+                    .map(|(b, l, n, lr)| (b / *n as f64, l / *n as f64, *lr))
+                    .max_by(|a, b| {
+                        (a.0, -a.1).partial_cmp(&(b.0, -b.1)).unwrap()
+                    });
+                let (bleu, loss, lr) = best.unwrap_or((f64::NAN, f64::NAN, 0.0));
+                w.row(&[
+                    name.to_string(),
+                    b1.replace('p', "."),
+                    b2.replace('p', "."),
+                    format!("{bleu:.3}"),
+                    format!("{loss:.4}"),
+                    format!("{lr:.0e}"),
+                ])?;
+                row += &format!("{:>8}", format!("{bleu:.1}/{loss:.2}"));
+            }
+            println!("  β₁={:<5}{row}  (bleu/cum-loss)", b1.replace('p', "."));
+        }
+    }
+    w.flush()?;
+    println!("fig5: wrote results/fig5.csv");
+    Ok(())
+}

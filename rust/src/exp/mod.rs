@@ -1,0 +1,80 @@
+//! Experiment drivers: one per table/figure in the paper's evaluation.
+//!
+//! Each driver builds a job grid, runs it through the coordinator, and
+//! writes `results/<id>_*.csv` with exactly the series/rows the paper
+//! plots, plus a printed summary. EXPERIMENTS.md records paper-vs-ours
+//! for every id. `scale` shrinks step counts for smoke runs (scale=1 is
+//! the recorded configuration).
+
+pub mod decay_map;
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod prop1;
+pub mod report;
+pub mod table1;
+pub mod table2;
+pub mod table4;
+pub mod theory;
+pub mod workloads;
+
+use anyhow::{bail, Result};
+
+/// Common driver options.
+#[derive(Clone, Debug)]
+pub struct ExpOpts {
+    pub artifact_dir: String,
+    pub out_dir: String,
+    pub workers: usize,
+    /// Multiplier on step counts (0 < scale ≤ 1 for smoke runs).
+    pub scale: f64,
+}
+
+impl Default for ExpOpts {
+    fn default() -> Self {
+        ExpOpts {
+            artifact_dir: "artifacts".into(),
+            out_dir: "results".into(),
+            workers: crate::coordinator::default_workers(),
+            scale: 1.0,
+        }
+    }
+}
+
+impl ExpOpts {
+    pub fn steps(&self, base: usize) -> usize {
+        ((base as f64 * self.scale) as usize).max(10)
+    }
+}
+
+/// Run one experiment by id.
+pub fn run(name: &str, opts: &ExpOpts) -> Result<()> {
+    match name {
+        "fig2" => fig2::run(opts),
+        "table1" => table1::run(opts),
+        "fig3" => fig3::run(opts),
+        "table2" => table2::run(opts),
+        "fig4" => fig4::run(opts),
+        // Table III shares Fig. 4's runs: the fig4 driver writes both.
+        "table3" => fig4::run(opts),
+        "table4" => table4::run(opts),
+        "fig5" => fig5::run(opts),
+        "prop1" => prop1::run(opts),
+        "theory" => theory::run(opts),
+        "decay-map" => decay_map::run(opts),
+        "all" => {
+            for id in ALL {
+                println!("=== exp {id} ===");
+                run(id, opts)?;
+            }
+            Ok(())
+        }
+        other => bail!("unknown experiment {other:?} (known: {ALL:?} + all)"),
+    }
+}
+
+/// Experiment ids in dependency-friendly order.
+pub const ALL: &[&str] = &[
+    "prop1", "theory", "decay-map", "table4", "fig2", "table1", "fig3", "table2", "fig4", "fig5",
+];

@@ -1,0 +1,73 @@
+//! Proposition 1 — the alternating update never increases the
+//! factorisation error ‖G_t² − U_t‖.
+//!
+//! Numeric verification over random gradient-variance matrices: run the
+//! pure alternating-projection step (β₂ = 0, the case the proposition
+//! analyses) and the EMA-damped step (β₂ = 0.9, the algorithm as run),
+//! tracing the error per iteration. The β₂ = 0 trace must be monotone
+//! non-increasing; the damped trace must converge.
+
+use anyhow::Result;
+
+use crate::optim::alada::Alada;
+use crate::tensor::Tensor;
+use crate::util::csv::CsvWriter;
+use crate::util::Rng;
+
+use super::ExpOpts;
+
+pub fn run(opts: &ExpOpts) -> Result<()> {
+    let mut w = CsvWriter::create(
+        format!("{}/prop1.csv", opts.out_dir),
+        &["trial", "t", "beta2", "error"],
+    )?;
+    let mut rng = Rng::new(2024);
+    let mut violations = 0usize;
+    let trials = 24;
+    for trial in 0..trials {
+        let m = 8 + rng.below_usize(56);
+        let n = 8 + rng.below_usize(56);
+        let v = Tensor::from_fn(&[m, n], |_| {
+            let x = rng.normal();
+            x * x + 1e-3
+        });
+        for beta2 in [0.0f32, 0.9] {
+            let mut p: Vec<f32> = (0..m).map(|_| rng.range_f32(0.1, 1.0)).collect();
+            let mut q: Vec<f32> = (0..n).map(|_| rng.range_f32(0.1, 1.0)).collect();
+            let mut prev = f32::INFINITY;
+            for t in 0..30 {
+                // one alternating update (Eq. 6/7 with EMA damping)
+                if t % 2 == 0 {
+                    let qn: f32 = q.iter().map(|x| x * x).sum::<f32>() + 1e-16;
+                    for i in 0..m {
+                        let acc: f32 = (0..n).map(|j| v.at2(i, j) * q[j]).sum();
+                        p[i] = beta2 * p[i] + (1.0 - beta2) * acc / qn;
+                    }
+                } else {
+                    let pn: f32 = p.iter().map(|x| x * x).sum::<f32>() + 1e-16;
+                    for j in 0..n {
+                        let acc: f32 = (0..m).map(|i| v.at2(i, j) * p[i]).sum();
+                        q[j] = beta2 * q[j] + (1.0 - beta2) * acc / pn;
+                    }
+                }
+                let err = Alada::factorization_error(&v, &p, &q).sqrt();
+                w.row(&[
+                    trial.to_string(),
+                    t.to_string(),
+                    format!("{beta2}"),
+                    format!("{err:.6}"),
+                ])?;
+                if beta2 == 0.0 && err > prev * (1.0 + 1e-4) {
+                    violations += 1;
+                }
+                prev = err;
+            }
+        }
+    }
+    w.flush()?;
+    println!("prop1: {trials} random matrices × 30 alternating steps");
+    println!("  monotonicity violations at β₂=0: {violations} (expected 0)");
+    anyhow::ensure!(violations == 0, "Proposition 1 violated numerically");
+    println!("prop1: wrote results/prop1.csv");
+    Ok(())
+}

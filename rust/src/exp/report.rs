@@ -1,0 +1,247 @@
+//! Report generator: renders every results/*.csv the experiment drivers
+//! wrote into one markdown file (results/REPORT.md) with the tables laid
+//! out like the paper's — the artifact EXPERIMENTS.md quotes from.
+//!
+//! `alada report [--out results]`
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::util::csv;
+
+pub fn run(out_dir: &str) -> Result<()> {
+    let dir = Path::new(out_dir);
+    let mut md = String::new();
+    md.push_str("# Alada reproduction — generated results report\n\n");
+    md.push_str("Regenerated from results/*.csv by `alada report`.\n");
+
+    table1(dir, &mut md)?;
+    table2(dir, &mut md)?;
+    table3(dir, &mut md)?;
+    table4(dir, &mut md)?;
+    fig5(dir, &mut md)?;
+    curves_summary(dir, &mut md)?;
+
+    let path = dir.join("REPORT.md");
+    std::fs::write(&path, &md)?;
+    println!("report: wrote {}", path.display());
+    Ok(())
+}
+
+fn section(md: &mut String, title: &str) {
+    let _ = writeln!(md, "\n## {title}\n");
+}
+
+fn missing(md: &mut String, file: &str) {
+    let _ = writeln!(md, "_{file} not found — run the corresponding `alada exp` first._");
+}
+
+/// Pivot rows (group_key, col_key, value) into a markdown grid.
+fn pivot_table(
+    md: &mut String,
+    rows: &[(String, String, String)],
+    row_label: &str,
+    col_order: &[String],
+) {
+    let mut grid: BTreeMap<&String, BTreeMap<&String, &String>> = BTreeMap::new();
+    for (r, c, v) in rows {
+        grid.entry(r).or_default().insert(c, v);
+    }
+    let _ = write!(md, "| {row_label} |");
+    for c in col_order {
+        let _ = write!(md, " {c} |");
+    }
+    let _ = writeln!(md);
+    let _ = write!(md, "|---|");
+    for _ in col_order {
+        let _ = write!(md, "---|");
+    }
+    let _ = writeln!(md);
+    for (r, cols) in &grid {
+        let _ = write!(md, "| {r} |");
+        for c in col_order {
+            let v = cols.get(c).map(|s| s.as_str()).unwrap_or("—");
+            let _ = write!(md, " {v} |");
+        }
+        let _ = writeln!(md);
+    }
+}
+
+fn table1(dir: &Path, md: &mut String) -> Result<()> {
+    section(md, "Table I — classification test metrics");
+    let path = dir.join("table1.csv");
+    if !path.exists() {
+        missing(md, "table1.csv");
+        return Ok(());
+    }
+    let (_, rows) = csv::read(&path)?;
+    // columns: size, optimizer, task, metric, value, best_lr
+    let mut sizes: Vec<String> = Vec::new();
+    for r in &rows {
+        if !sizes.contains(&r[0]) {
+            sizes.push(r[0].clone());
+        }
+    }
+    for size in sizes {
+        let _ = writeln!(md, "\n**size = {size}** (metric per task)\n");
+        let data: Vec<(String, String, String)> = rows
+            .iter()
+            .filter(|r| r[0] == size)
+            .map(|r| (r[1].clone(), r[2].clone(), r[4].clone()))
+            .collect();
+        let mut tasks: Vec<String> = data.iter().map(|d| d.1.clone()).collect();
+        tasks.sort();
+        tasks.dedup();
+        pivot_table(md, &data, "optimizer", &tasks);
+    }
+    Ok(())
+}
+
+fn table2(dir: &Path, md: &mut String) -> Result<()> {
+    section(md, "Table II — best BLEU per translation pair");
+    let path = dir.join("table2.csv");
+    if !path.exists() {
+        missing(md, "table2.csv");
+        return Ok(());
+    }
+    let (_, rows) = csv::read(&path)?;
+    let data: Vec<(String, String, String)> =
+        rows.iter().map(|r| (r[0].clone(), r[1].clone(), r[2].clone())).collect();
+    let mut pairs: Vec<String> = Vec::new();
+    for r in &rows {
+        if !pairs.contains(&r[1]) {
+            pairs.push(r[1].clone());
+        }
+    }
+    pivot_table(md, &data, "optimizer", &pairs);
+    Ok(())
+}
+
+fn table3(dir: &Path, md: &mut String) -> Result<()> {
+    section(md, "Table III — test perplexity (N/A = failed the A800 gate)");
+    let path = dir.join("table3.csv");
+    if !path.exists() {
+        missing(md, "table3.csv");
+        return Ok(());
+    }
+    let (_, rows) = csv::read(&path)?;
+    let data: Vec<(String, String, String)> =
+        rows.iter().map(|r| (r[1].clone(), r[0].clone(), r[2].clone())).collect();
+    let mut cols: Vec<String> = rows.iter().map(|r| r[0].clone()).collect();
+    cols.sort();
+    cols.dedup();
+    pivot_table(md, &data, "optimizer", &cols);
+    Ok(())
+}
+
+fn table4(dir: &Path, md: &mut String) -> Result<()> {
+    section(md, "Table IV — peak memory (analytic, GB) and per-step time (measured, s)");
+    let mem = dir.join("table4_memory.csv");
+    if mem.exists() {
+        let (_, rows) = csv::read(&mem)?;
+        let data: Vec<(String, String, String)> =
+            rows.iter().map(|r| (r[0].clone(), r[1].clone(), r[6].clone())).collect();
+        let cols = ["adam".to_string(), "adafactor".to_string(), "alada".to_string()];
+        pivot_table(md, &data, "model (total GB)", &cols);
+    } else {
+        missing(md, "table4_memory.csv");
+    }
+    let time = dir.join("table4_time.csv");
+    if time.exists() {
+        let (_, rows) = csv::read(&time)?;
+        let _ = writeln!(md);
+        let data: Vec<(String, String, String)> =
+            rows.iter().map(|r| (r[0].clone(), r[1].clone(), r[2].clone())).collect();
+        let cols = ["adam".to_string(), "adafactor".to_string(), "alada".to_string()];
+        pivot_table(md, &data, "model proxy (s/step)", &cols);
+    } else {
+        missing(md, "table4_time.csv");
+    }
+    Ok(())
+}
+
+fn fig5(dir: &Path, md: &mut String) -> Result<()> {
+    section(md, "Fig. 5 — β₁ × β₂ sensitivity (best BLEU per cell)");
+    let path = dir.join("fig5.csv");
+    if !path.exists() {
+        missing(md, "fig5.csv");
+        return Ok(());
+    }
+    let (_, rows) = csv::read(&path)?;
+    let mut pairs: Vec<String> = Vec::new();
+    for r in &rows {
+        if !pairs.contains(&r[0]) {
+            pairs.push(r[0].clone());
+        }
+    }
+    for pair in pairs {
+        let _ = writeln!(md, "\n**{pair}**\n");
+        let data: Vec<(String, String, String)> = rows
+            .iter()
+            .filter(|r| r[0] == pair)
+            .map(|r| (format!("β₁={}", r[1]), format!("β₂={}", r[2]), r[3].clone()))
+            .collect();
+        let mut cols: Vec<String> = data.iter().map(|d| d.1.clone()).collect();
+        cols.sort_by(|a, b| {
+            let fa: f64 = a.trim_start_matches("β₂=").parse().unwrap_or(0.0);
+            let fb: f64 = b.trim_start_matches("β₂=").parse().unwrap_or(0.0);
+            fa.partial_cmp(&fb).unwrap()
+        });
+        cols.dedup();
+        pivot_table(md, &data, "", &cols);
+    }
+    Ok(())
+}
+
+fn curves_summary(dir: &Path, md: &mut String) -> Result<()> {
+    section(md, "Figure curve files");
+    let mut found = Vec::new();
+    if let Ok(entries) = std::fs::read_dir(dir) {
+        for e in entries.flatten() {
+            let name = e.file_name().to_string_lossy().to_string();
+            if name.starts_with("fig") && name.ends_with(".csv") {
+                found.push(name);
+            }
+        }
+    }
+    found.sort();
+    if found.is_empty() {
+        missing(md, "fig*.csv");
+    } else {
+        for f in found {
+            let _ = writeln!(md, "* `{f}`");
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pivot_renders_grid() {
+        let rows = vec![
+            ("adam".to_string(), "a".to_string(), "1".to_string()),
+            ("adam".to_string(), "b".to_string(), "2".to_string()),
+            ("alada".to_string(), "a".to_string(), "3".to_string()),
+        ];
+        let mut md = String::new();
+        pivot_table(&mut md, &rows, "opt", &["a".to_string(), "b".to_string()]);
+        assert!(md.contains("| adam | 1 | 2 |"));
+        assert!(md.contains("| alada | 3 | — |"));
+    }
+
+    #[test]
+    fn report_tolerates_missing_files() {
+        let tmp = std::env::temp_dir().join("alada_report_test");
+        std::fs::create_dir_all(&tmp).unwrap();
+        run(tmp.to_str().unwrap()).unwrap();
+        let report = std::fs::read_to_string(tmp.join("REPORT.md")).unwrap();
+        assert!(report.contains("not found"));
+        std::fs::remove_dir_all(tmp).ok();
+    }
+}

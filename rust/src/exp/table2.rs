@@ -1,0 +1,85 @@
+//! Table II — best BLEU per translation pair per optimizer.
+//!
+//! Paper: highest BLEU over the η₀ grid, mean of 5 independent runs.
+//! Here: 3 seeds × the η₀ grid; greedy decoding through the logits
+//! artifact; corpus BLEU-4 via train/metrics.rs.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::coordinator::job::{JobGrid, JobSpec};
+use crate::coordinator::run_jobs;
+use crate::data::MT_PAIRS;
+use crate::util::csv::CsvWriter;
+
+use super::fig3::{LRS, OPTS};
+use super::ExpOpts;
+
+const SEEDS: [u64; 2] = [5, 13];
+
+pub fn run(opts: &ExpOpts) -> Result<()> {
+    let steps = opts.steps(120);
+    let mut grid = JobGrid::new();
+    for (pi, pair) in MT_PAIRS.iter().enumerate() {
+        for opt in OPTS {
+            for lr in [LRS[1], LRS[2]] {
+                for seed in SEEDS {
+                    grid.push(
+                        format!("table2/{}/{}/lr{:.0e}/s{}", pair.name, opt, lr, seed),
+                        JobSpec {
+                            task: "mt".into(),
+                            size: "tiny".into(),
+                            artifact: None,
+                            opt: opt.into(),
+                            dataset: pi,
+                            lr,
+                            steps,
+                            seed,
+                            record_every: steps,
+                            eval: "bleu".into(),
+                        },
+                    );
+                }
+            }
+        }
+    }
+    let results = run_jobs(&opts.artifact_dir, grid.into_jobs(), opts.workers)?;
+
+    let mut w = CsvWriter::create(
+        format!("{}/table2.csv", opts.out_dir),
+        &["optimizer", "pair", "bleu", "best_lr"],
+    )?;
+    println!("{:<11}{}", "", MT_PAIRS.map(|p| format!("{:>8}", p.name)).join(""));
+    for opt in OPTS {
+        let mut row = String::new();
+        for (pi, pair) in MT_PAIRS.iter().enumerate() {
+            let mut by_lr: BTreeMap<String, (f64, usize, f32)> = BTreeMap::new();
+            for r in results.iter().filter(|r| {
+                r.spec.dataset == pi && r.spec.opt == opt && r.error.is_none()
+            }) {
+                if let Some(b) = r.metric("bleu") {
+                    let e = by_lr.entry(format!("{:.0e}", r.spec.lr)).or_insert((0.0, 0, r.spec.lr));
+                    e.0 += b;
+                    e.1 += 1;
+                }
+            }
+            let best = by_lr
+                .values()
+                .map(|(sum, n, lr)| (sum / *n as f64, *lr))
+                .max_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            let (bleu, lr) = best.unwrap_or((f64::NAN, 0.0));
+            w.row(&[
+                opt.to_string(),
+                pair.name.to_string(),
+                format!("{bleu:.3}"),
+                format!("{lr:.0e}"),
+            ])?;
+            row += &format!("{bleu:>8.2}");
+        }
+        println!("{opt:<11}{row}");
+    }
+    w.flush()?;
+    println!("table2: wrote results/table2.csv");
+    Ok(())
+}

@@ -1,0 +1,19 @@
+//! Alada: alternating adaptation of momentum for memory-efficient matrix
+//! optimization — full-system reproduction.
+//!
+//! Three-layer architecture:
+//! * L1 — Pallas kernels (build-time Python, `python/compile/kernels/`)
+//! * L2 — JAX model + in-graph optimizers, AOT-lowered to HLO text
+//! * L3 — this crate: training framework, PJRT runtime, data pipeline,
+//!   experiment coordinator, pure-Rust optimizer substrate.
+
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod exp;
+pub mod data;
+pub mod optim;
+pub mod runtime;
+pub mod tensor;
+pub mod train;
+pub mod util;

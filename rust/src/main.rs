@@ -1,0 +1,226 @@
+//! `alada` — launcher for the Alada reproduction framework.
+//!
+//! Subcommands:
+//!   exp <id>        regenerate a paper table/figure (or `all`)
+//!   train           run a single training job
+//!   memory          print the memory-model breakdown for a paper model
+//!   info            list artifacts + experiment ids
+//!
+//! Common flags: --artifacts DIR --out DIR --workers N --scale F
+//! (scale < 1 shrinks step counts for smoke runs).
+
+use alada::cli::Args;
+use alada::exp::{self, ExpOpts};
+use alada::optim::Schedule;
+use alada::runtime::{Manifest, Runtime, TrainSession};
+use alada::train::memory;
+use alada::train::{TaskData, Trainer};
+use alada::util::log;
+
+fn main() {
+    log::level_from_env();
+    let args = Args::from_env();
+    let code = match args.subcommand.as_deref() {
+        Some("exp") => cmd_exp(&args),
+        Some("train") => cmd_train(&args),
+        Some("memory") => cmd_memory(&args),
+        Some("report") => {
+            let out = args.str_or("out", "results");
+            warn_unknown(&args);
+            match alada::exp::report::run(&out) {
+                Ok(()) => 0,
+                Err(e) => fail(e),
+            }
+        }
+        Some("info") => cmd_info(&args),
+        _ => {
+            eprintln!("{USAGE}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+const USAGE: &str = "alada — Alada optimizer reproduction (Rust + JAX + Pallas via XLA/PJRT)
+
+USAGE:
+  alada exp <id|all> [--workers N] [--scale F] [--artifacts DIR] [--out DIR]
+      ids: prop1 theory decay-map table4 fig2 table1 fig3 table2 fig4 table3 fig5
+  alada train [--config run.toml] [--task lm|cls|mt] [--size tiny|small|base]
+              [--opt adam|adafactor|alada] [--steps N] [--lr F] [--seed N]
+              [--dataset I] [--artifacts DIR]   (flags override the config file)
+  alada memory [--model gpt2-small|gpt2-xl|t5-small] [--batch N]
+  alada report [--out DIR]        render results/*.csv into results/REPORT.md
+  alada info [--artifacts DIR]
+
+Run `make artifacts` first to build the AOT artifacts.";
+
+fn exp_opts(args: &Args) -> ExpOpts {
+    ExpOpts {
+        artifact_dir: args.str_or("artifacts", "artifacts"),
+        out_dir: args.str_or("out", "results"),
+        workers: args.usize_or("workers", alada::coordinator::default_workers()),
+        scale: args.f64_or("scale", 1.0),
+    }
+}
+
+fn fail(e: anyhow::Error) -> i32 {
+    log::error(&format!("{e:#}"));
+    1
+}
+
+fn cmd_exp(args: &Args) -> i32 {
+    let Some(id) = args.positional.first().cloned() else {
+        eprintln!("usage: alada exp <id|all>  (ids: {:?})", exp::ALL);
+        return 1;
+    };
+    let opts = exp_opts(args);
+    warn_unknown(args);
+    match exp::run(&id, &opts) {
+        Ok(()) => 0,
+        Err(e) => fail(e),
+    }
+}
+
+fn cmd_train(args: &Args) -> i32 {
+    // config file first, CLI flags override
+    let base = match args.flag("config") {
+        Some(path) => match alada::config::RunConfig::from_file(path) {
+            Ok(c) => c,
+            Err(e) => return fail(e),
+        },
+        None => alada::config::RunConfig::default(),
+    };
+    let task = args.str_or("task", &base.task);
+    let size = args.str_or("size", &base.size);
+    let opt = args.str_or("opt", &base.opt);
+    let steps = args.usize_or("steps", base.steps);
+    let lr = args.f32_or("lr", base.lr);
+    let seed = args.u64_or("seed", base.seed);
+    let dataset = args.usize_or("dataset", base.dataset);
+    let dir = args.str_or("artifacts", &base.artifact_dir);
+    warn_unknown(args);
+
+    let vocab = match size.as_str() {
+        "tiny" => 256,
+        "small" => 512,
+        _ => 1024,
+    };
+    let run = || -> anyhow::Result<()> {
+        let rt = Runtime::open(&dir)?;
+        let sess = TrainSession::new(&rt, &task, &size, &opt)?;
+        let (batch, seq) = (sess.batch, sess.seq);
+        println!(
+            "{}: {} param elems, optimizer state {} KiB",
+            sess.name(),
+            sess.params.len(),
+            sess.opt_state_bytes() / 1024
+        );
+        let data = match task.as_str() {
+            "lm" => TaskData::lm(
+                alada::data::MarkovCorpus::generate(vocab, 6, 200_000, seed),
+                batch,
+                seq,
+                seed,
+            ),
+            "cls" => TaskData::cls(
+                alada::data::ClsDataset::generate(
+                    alada::data::CLS_TASKS[dataset % 7],
+                    vocab,
+                    seq,
+                    seed,
+                ),
+                batch,
+                seed,
+            ),
+            "mt" => TaskData::mt(
+                alada::data::MtDataset::generate(
+                    alada::data::MT_PAIRS[dataset % 6],
+                    vocab,
+                    seq,
+                    seed,
+                ),
+                batch,
+                seed,
+            ),
+            other => anyhow::bail!("unknown task {other:?}"),
+        };
+        let mut trainer =
+            Trainer::new(sess, data, Schedule::Diminishing { eta0: lr, total: steps });
+        trainer.record_every = (steps / 20).max(1);
+        let out = trainer.run(steps)?;
+        for (step, loss, avg) in &out.curve {
+            println!("step {step:>5}  loss {loss:.4}  cum-avg {avg:.4}");
+        }
+        println!(
+            "{} steps in {:.1}s ({:.1} ms/step)",
+            out.steps,
+            out.wall_secs,
+            out.secs_per_step * 1e3
+        );
+        Ok(())
+    };
+    match run() {
+        Ok(()) => 0,
+        Err(e) => fail(e),
+    }
+}
+
+fn cmd_memory(args: &Args) -> i32 {
+    let model = match args.str_or("model", "gpt2-xl").as_str() {
+        "gpt2-small" => memory::GPT2_SMALL,
+        "t5-small" => memory::T5_SMALL,
+        _ => memory::GPT2_XL,
+    };
+    let batch = args.usize_or("batch", 1);
+    warn_unknown(args);
+    println!(
+        "{} ({} params), batch {batch}, seq {}",
+        model.name,
+        model.param_count(),
+        model.max_seq
+    );
+    println!(
+        "{:<11}{:>11}{:>11}{:>12}{:>13}{:>11}{:>9}",
+        "optimizer", "weights", "grads", "opt state", "activations", "total", "A800?"
+    );
+    for opt in ["sgd", "adam", "adafactor", "alada", "came", "sm3"] {
+        let b = memory::breakdown(model, opt, batch, model.max_seq);
+        println!(
+            "{:<11}{:>10.2}G{:>10.2}G{:>11.3}G{:>12.2}G{:>10.2}G{:>9}",
+            opt,
+            b.weights as f64 / 1e9,
+            b.grads as f64 / 1e9,
+            b.opt_state as f64 / 1e9,
+            b.activations as f64 / 1e9,
+            b.total_gb(),
+            if memory::fits_a800(model, opt, batch, model.max_seq) { "fits" } else { "OOM" }
+        );
+    }
+    0
+}
+
+fn cmd_info(args: &Args) -> i32 {
+    let dir = args.str_or("artifacts", "artifacts");
+    warn_unknown(args);
+    match Manifest::load(&dir) {
+        Ok(m) => {
+            println!("artifacts in {dir}/ ({}):", m.artifacts.len());
+            for (name, a) in &m.artifacts {
+                println!(
+                    "  {:<44} {:>9} param elems, batch {} × seq {}",
+                    name, a.meta.param_elems, a.meta.batch, a.meta.seq
+                );
+            }
+            println!("experiments: {:?} (alada exp <id>)", exp::ALL);
+            0
+        }
+        Err(e) => fail(e),
+    }
+}
+
+fn warn_unknown(args: &Args) {
+    for f in args.unknown_flags() {
+        log::warn(&format!("unknown flag --{f} ignored"));
+    }
+}

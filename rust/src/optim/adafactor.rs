@@ -1,0 +1,154 @@
+//! Adafactor (Shazeer & Stern 2018), configured as in the paper §VI-A:
+//! first moment disabled, factored second moment with β₂ = 0.999,
+//! external step-size schedule (no relative-update clipping).
+//!
+//! Matrix parameters keep row/column mean accumulators (O(m + n));
+//! vectors and scalars fall back to a full accumulator — exactly the
+//! published recipe.
+
+use super::reshape::balanced_split;
+use super::Optimizer;
+use crate::tensor::Tensor;
+
+enum Slot {
+    Factored { r: Vec<f32>, c: Vec<f32>, rows: usize, cols: usize },
+    Full(Tensor),
+}
+
+pub struct Adafactor {
+    beta2: f32,
+    eps: f32,
+    t: u32,
+    slots: Vec<Slot>,
+}
+
+impl Adafactor {
+    pub fn new(beta2: f32, eps: f32, shapes: &[Vec<usize>]) -> Adafactor {
+        let slots = shapes
+            .iter()
+            .map(|s| {
+                let (rows, cols) = balanced_split(s);
+                if rows >= 2 && cols >= 2 {
+                    Slot::Factored { r: vec![0.0; rows], c: vec![0.0; cols], rows, cols }
+                } else {
+                    Slot::Full(Tensor::zeros(s))
+                }
+            })
+            .collect();
+        Adafactor { beta2, eps, t: 0, slots }
+    }
+}
+
+impl Optimizer for Adafactor {
+    fn step(&mut self, params: &mut [Tensor], grads: &[Tensor], lr: f32) {
+        assert_eq!(params.len(), grads.len());
+        let (b2, eps) = (self.beta2, self.eps);
+        let bc = 1.0 / (1.0 - b2.powi(self.t as i32 + 1));
+        for (slot, (x, g)) in self.slots.iter_mut().zip(params.iter_mut().zip(grads)) {
+            match slot {
+                Slot::Factored { r, c, rows, cols } => {
+                    let (rows, cols) = (*rows, *cols);
+                    let gd = g.data();
+                    // accumulate row/col means of V = g² + ε in one pass
+                    let mut rsum = vec![0.0f32; rows];
+                    let mut csum = vec![0.0f32; cols];
+                    for i in 0..rows {
+                        let row = &gd[i * cols..(i + 1) * cols];
+                        let mut acc = 0.0f32;
+                        for j in 0..cols {
+                            let v = row[j] * row[j] + eps;
+                            acc += v;
+                            csum[j] += v;
+                        }
+                        rsum[i] = acc;
+                    }
+                    for i in 0..rows {
+                        r[i] = b2 * r[i] + (1.0 - b2) * rsum[i] / cols as f32;
+                    }
+                    for j in 0..cols {
+                        c[j] = b2 * c[j] + (1.0 - b2) * csum[j] / rows as f32;
+                    }
+                    // rec(r, c) = r̂ ĉᵀ / mean(r̂); descent in a second pass
+                    let mean_r = r.iter().sum::<f32>() / rows as f32 * bc;
+                    let inv_mean = 1.0 / mean_r;
+                    let xd = x.data_mut();
+                    for i in 0..rows {
+                        let ri = r[i] * bc;
+                        let grow = &gd[i * cols..(i + 1) * cols];
+                        let xrow = &mut xd[i * cols..(i + 1) * cols];
+                        for j in 0..cols {
+                            let u = ri * (c[j] * bc) * inv_mean;
+                            xrow[j] -= lr * grow[j] / (u.sqrt() + eps);
+                        }
+                    }
+                }
+                Slot::Full(u) => {
+                    u.zip_inplace(g, |ui, gi| b2 * ui + (1.0 - b2) * (gi * gi + eps));
+                    let ud = u.data();
+                    for (i, xi) in x.data_mut().iter_mut().enumerate() {
+                        *xi -= lr * g.data()[i] / ((ud[i] * bc).sqrt() + eps);
+                    }
+                }
+            }
+        }
+        self.t += 1;
+    }
+
+    fn state_overhead_bytes(&self) -> usize {
+        self.slots
+            .iter()
+            .map(|s| match s {
+                Slot::Factored { r, c, .. } => (r.len() + c.len()) * 4,
+                Slot::Full(t) => t.len() * 4,
+            })
+            .sum()
+    }
+
+    fn name(&self) -> &'static str {
+        "adafactor"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn matrix_params_are_factored() {
+        let shapes = vec![vec![32, 16], vec![10]];
+        let opt = Adafactor::new(0.999, 1e-8, &shapes);
+        // 32+16 factored + 10 full
+        assert_eq!(opt.state_overhead_bytes(), (32 + 16 + 10) * 4);
+    }
+
+    #[test]
+    fn reconstruction_tracks_uniform_variance() {
+        // With a constant gradient the factored estimate should approach
+        // the true uniform second moment, making steps ≈ lr-sized.
+        let shapes = vec![vec![8, 8]];
+        let mut opt = Adafactor::new(0.9, 1e-30, &shapes);
+        let mut params = vec![Tensor::zeros(&[8, 8])];
+        let grads = vec![Tensor::full(&[8, 8], 2.0)];
+        for _ in 0..200 {
+            opt.step(&mut params, &grads, 0.0);
+        }
+        let before = params[0].data()[0];
+        opt.step(&mut params, &grads, 0.01);
+        let step = before - params[0].data()[0];
+        assert!((step - 0.01).abs() < 1e-3, "step {step}");
+    }
+
+    #[test]
+    fn random_steps_stay_finite() {
+        let shapes = vec![vec![6, 9]];
+        let mut opt = Adafactor::new(0.999, 1e-8, &shapes);
+        let mut rng = Rng::new(1);
+        let mut params = vec![Tensor::from_fn(&[6, 9], |_| rng.normal())];
+        for _ in 0..50 {
+            let g = vec![Tensor::from_fn(&[6, 9], |_| rng.normal())];
+            opt.step(&mut params, &g, 1e-2);
+        }
+        assert!(params[0].data().iter().all(|x| x.is_finite()));
+    }
+}

@@ -1,0 +1,55 @@
+//! AdaGrad (Duchi et al. 2011): accumulated squared gradients, mn state.
+
+use super::Optimizer;
+use crate::tensor::Tensor;
+
+pub struct AdaGrad {
+    eps: f32,
+    accum: Vec<Tensor>,
+}
+
+impl AdaGrad {
+    pub fn new(eps: f32, shapes: &[Vec<usize>]) -> AdaGrad {
+        AdaGrad { eps, accum: shapes.iter().map(|s| Tensor::zeros(s)).collect() }
+    }
+}
+
+impl Optimizer for AdaGrad {
+    fn step(&mut self, params: &mut [Tensor], grads: &[Tensor], lr: f32) {
+        assert_eq!(params.len(), grads.len());
+        for ((p, g), a) in params.iter_mut().zip(grads).zip(self.accum.iter_mut()) {
+            a.zip_inplace(g, |acc, gi| acc + gi * gi);
+            let eps = self.eps;
+            for ((x, &gi), &ai) in p.data_mut().iter_mut().zip(g.data()).zip(a.data()) {
+                *x -= lr * gi / (ai.sqrt() + eps);
+            }
+        }
+    }
+
+    fn state_overhead_bytes(&self) -> usize {
+        self.accum.iter().map(|t| t.len() * 4).sum()
+    }
+
+    fn name(&self) -> &'static str {
+        "adagrad"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn step_shrinks_over_time() {
+        let shapes = vec![vec![1]];
+        let mut opt = AdaGrad::new(1e-8, &shapes);
+        let mut params = vec![Tensor::zeros(&[1])];
+        let grads = vec![Tensor::full(&[1], 1.0)];
+        opt.step(&mut params, &grads, 1.0);
+        let d1 = -params[0].data()[0];
+        let before = params[0].data()[0];
+        opt.step(&mut params, &grads, 1.0);
+        let d2 = before - params[0].data()[0];
+        assert!(d2 < d1, "adagrad step should shrink: {d1} vs {d2}");
+    }
+}

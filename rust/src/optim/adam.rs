@@ -1,0 +1,86 @@
+//! Adam (Kingma & Ba 2015) with bias correction — the paper's primary
+//! comparator (Eq. 2-3). State: two mn buffers (M and U), the 2mn
+//! overhead Table IV measures.
+
+use super::Optimizer;
+use crate::tensor::Tensor;
+
+pub struct Adam {
+    beta1: f32,
+    beta2: f32,
+    eps: f32,
+    t: u32,
+    m: Vec<Tensor>,
+    u: Vec<Tensor>,
+}
+
+impl Adam {
+    pub fn new(beta1: f32, beta2: f32, eps: f32, shapes: &[Vec<usize>]) -> Adam {
+        Adam {
+            beta1,
+            beta2,
+            eps,
+            t: 0,
+            m: shapes.iter().map(|s| Tensor::zeros(s)).collect(),
+            u: shapes.iter().map(|s| Tensor::zeros(s)).collect(),
+        }
+    }
+}
+
+impl Optimizer for Adam {
+    fn step(&mut self, params: &mut [Tensor], grads: &[Tensor], lr: f32) {
+        assert_eq!(params.len(), grads.len());
+        let (b1, b2, eps) = (self.beta1, self.beta2, self.eps);
+        let bc1 = 1.0 / (1.0 - b1.powi(self.t as i32 + 1));
+        let bc2 = 1.0 / (1.0 - b2.powi(self.t as i32 + 1));
+        for (i, (p, g)) in params.iter_mut().zip(grads).enumerate() {
+            self.m[i].ema_inplace(g, b1, 1.0 - b1);
+            self.u[i].zip_inplace(g, |u, gi| b2 * u + (1.0 - b2) * gi * gi);
+            let (m, u) = (self.m[i].data(), self.u[i].data());
+            for (j, x) in p.data_mut().iter_mut().enumerate() {
+                let m_hat = m[j] * bc1;
+                let u_hat = u[j] * bc2;
+                *x -= lr * m_hat / (u_hat.sqrt() + eps);
+            }
+        }
+        self.t += 1;
+    }
+
+    fn state_overhead_bytes(&self) -> usize {
+        self.m.iter().chain(&self.u).map(|t| t.len() * 4).sum()
+    }
+
+    fn name(&self) -> &'static str {
+        "adam"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// First step of Adam moves by ≈ lr regardless of gradient scale
+    /// (the scale-invariance that motivates adaptivity).
+    #[test]
+    fn first_step_is_lr_sized() {
+        for scale in [1e-3f32, 1.0, 1e3] {
+            let shapes = vec![vec![1]];
+            let mut opt = Adam::new(0.9, 0.999, 1e-8, &shapes);
+            let mut params = vec![Tensor::zeros(&[1])];
+            let grads = vec![Tensor::full(&[1], scale)];
+            opt.step(&mut params, &grads, 0.01);
+            assert!(
+                (params[0].data()[0] + 0.01).abs() < 1e-4,
+                "scale {scale}: step {}",
+                params[0].data()[0]
+            );
+        }
+    }
+
+    #[test]
+    fn overhead_is_2mn() {
+        let shapes = vec![vec![10, 20], vec![5]];
+        let opt = Adam::new(0.9, 0.999, 1e-8, &shapes);
+        assert_eq!(opt.state_overhead_bytes(), 2 * (200 + 5) * 4);
+    }
+}

@@ -1,0 +1,275 @@
+//! Alada — the paper's Algorithm 2, pure-Rust implementation.
+//!
+//! Per parameter (viewed as an (m, n) matrix by the Eq. 12 balanced
+//! split): first moment M (aliasing the gradient slot, §IV-A), rank-one
+//! factors p ∈ ℝ^m, q ∈ ℝ^n updated *alternately* (p on even t, q on odd
+//! t), the initial-variance scalar v₀, and a shared step counter t.
+//!
+//! Memory discipline mirrors the paper: the squared momentum V = M̃² and
+//! the reconstructed second moment U = p qᵀ are never materialised — the
+//! factor projections (V q, Vᵀ p) and the descent division stream over M
+//! with on-the-fly squaring and rank-one reconstruction, in single fused
+//! passes (also the L3 perf hot path, see benches/bench_optim.rs).
+
+use super::reshape::balanced_split;
+use super::Optimizer;
+use crate::tensor::Tensor;
+
+struct Slot {
+    /// First moment M_t (stored at the parameter's own shape; conceptually
+    /// the gradient slot — see `aliases_grad_slot`).
+    m: Tensor,
+    /// Row factor p (length = balanced-split m).
+    p: Vec<f32>,
+    /// Column factor q (length = balanced-split n).
+    q: Vec<f32>,
+    /// v₀ = ‖G₀‖²/(mn) captured at t = 0 (line 9).
+    v0: f32,
+    rows: usize,
+    cols: usize,
+}
+
+pub struct Alada {
+    beta1: f32,
+    beta2: f32,
+    eps: f32,
+    t: u32,
+    slots: Vec<Slot>,
+}
+
+impl Alada {
+    pub fn new(beta1: f32, beta2: f32, eps: f32, shapes: &[Vec<usize>]) -> Alada {
+        let slots = shapes
+            .iter()
+            .map(|s| {
+                let (rows, cols) = balanced_split(s);
+                Slot {
+                    m: Tensor::zeros(s),
+                    p: vec![0.0; rows],
+                    q: vec![0.0; cols],
+                    v0: 0.0,
+                    rows,
+                    cols,
+                }
+            })
+            .collect();
+        Alada { beta1, beta2, eps, t: 0, slots }
+    }
+
+    /// ‖G_t² − p qᵀ‖² — the factorisation error of Prop. 1 (test hook).
+    pub fn factorization_error(v: &Tensor, p: &[f32], q: &[f32]) -> f32 {
+        let (rows, cols) = (p.len(), q.len());
+        assert_eq!(v.len(), rows * cols);
+        let vd = v.data();
+        let mut err = 0.0f32;
+        for i in 0..rows {
+            for j in 0..cols {
+                let d = vd[i * cols + j] - p[i] * q[j];
+                err += d * d;
+            }
+        }
+        err
+    }
+}
+
+impl Optimizer for Alada {
+    fn step(&mut self, params: &mut [Tensor], grads: &[Tensor], lr: f32) {
+        assert_eq!(params.len(), grads.len());
+        let (b1, b2, eps) = (self.beta1, self.beta2, self.eps);
+        let t = self.t;
+        let bc1 = 1.0 / (1.0 - b1.powi(t as i32 + 1));
+        let bc2_pow = b2.powi(t as i32 + 1);
+        let bc2_inv = 1.0 / (1.0 - bc2_pow);
+
+        for (slot, (x, g)) in self.slots.iter_mut().zip(params.iter_mut().zip(grads)) {
+            let (rows, cols) = (slot.rows, slot.cols);
+
+            // Lines 5-6: M_{t+1} = β₁ M_t + (1−β₁) G_t, bias-corrected on
+            // the fly (M̃ never stored; bc1 folds into every read of M).
+            slot.m.ema_inplace(g, b1, 1.0 - b1);
+            let md = slot.m.data();
+
+            // Lines 8-12: t = 0 initialisation from G₀.
+            if t == 0 {
+                let v0 = g.sq_norm() / (rows * cols) as f32;
+                slot.v0 = v0;
+                let root = v0.sqrt();
+                slot.p.iter_mut().for_each(|x| *x = root);
+                slot.q.iter_mut().for_each(|x| *x = root);
+            }
+
+            // Lines 13-22: alternating factor update + descent.
+            //
+            // Perf note (§Perf L3, EXPERIMENTS.md): on even steps the
+            // descent at row i needs only p_new[i] (q is frozen), so the
+            // factor update and the descent fuse into a SINGLE streaming
+            // pass over M — row i's projection is computed, then the row
+            // is descended immediately while still cache-hot. Odd steps
+            // need the full column reduction Vᵀp before any descent, so
+            // they remain two passes. V = (M·bc1)² is always recomputed
+            // in-register, never materialised — mirroring the Pallas
+            // kernels' HBM discipline.
+            let sub = bc2_pow * slot.v0;
+            let xd = x.data_mut();
+            if t % 2 == 0 {
+                // p_{t+1} = β₂ p + (1−β₂) V q / (‖q‖² + ε); fused descent
+                let qn = slot.q.iter().map(|x| x * x).sum::<f32>() + eps;
+                for i in 0..rows {
+                    let mrow = &md[i * cols..(i + 1) * cols];
+                    let mut acc = 0.0f32;
+                    for j in 0..cols {
+                        let v = mrow[j] * bc1;
+                        acc += v * v * slot.q[j];
+                    }
+                    let pi = b2 * slot.p[i] + (1.0 - b2) * acc / qn;
+                    slot.p[i] = pi;
+                    let xrow = &mut xd[i * cols..(i + 1) * cols];
+                    for j in 0..cols {
+                        let u_hat = ((pi * slot.q[j] - sub).max(0.0)) * bc2_inv;
+                        let m_hat = mrow[j] * bc1;
+                        xrow[j] -= lr * m_hat / (u_hat + eps).sqrt();
+                    }
+                }
+            } else {
+                // q_{t+1} = β₂ q + (1−β₂) Vᵀ p / (‖p‖² + ε)
+                let pn = slot.p.iter().map(|x| x * x).sum::<f32>() + eps;
+                let mut acc = vec![0.0f32; cols];
+                for i in 0..rows {
+                    let mrow = &md[i * cols..(i + 1) * cols];
+                    let pi = slot.p[i];
+                    for j in 0..cols {
+                        let v = mrow[j] * bc1;
+                        acc[j] += v * v * pi;
+                    }
+                }
+                for j in 0..cols {
+                    slot.q[j] = b2 * slot.q[j] + (1.0 - b2) * acc[j] / pn;
+                }
+                // descent (separate pass: needs the completed q_new)
+                for i in 0..rows {
+                    let pi = slot.p[i];
+                    let mrow = &md[i * cols..(i + 1) * cols];
+                    let xrow = &mut xd[i * cols..(i + 1) * cols];
+                    for j in 0..cols {
+                        let u_hat = ((pi * slot.q[j] - sub).max(0.0)) * bc2_inv;
+                        let m_hat = mrow[j] * bc1;
+                        xrow[j] -= lr * m_hat / (u_hat + eps).sqrt();
+                    }
+                }
+            }
+        }
+        self.t += 1;
+    }
+
+    fn state_overhead_bytes(&self) -> usize {
+        // Paper accounting: M aliases the gradient slot; the maintained
+        // overhead is p + q + v₀ per parameter = O(m + n).
+        self.slots.iter().map(|s| (s.p.len() + s.q.len() + 1) * 4).sum()
+    }
+
+    fn aliases_grad_slot(&self) -> bool {
+        true
+    }
+
+    fn name(&self) -> &'static str {
+        "alada"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    /// Proposition 1: each alternating update does not increase the
+    /// factorisation error ‖V − p qᵀ‖ w.r.t. the *current* V, when the
+    /// EMA is replaced by the full projection (β₂ = 0 gives the pure
+    /// alternating-minimisation step the proposition analyses).
+    #[test]
+    fn prop1_projection_reduces_error() {
+        let mut rng = Rng::new(7);
+        for trial in 0..20 {
+            let (m, n) = (5 + (trial % 7), 4 + (trial % 5));
+            let v = Tensor::from_fn(&[m, n], |_| {
+                let x: f32 = rng.normal();
+                x * x + 0.01
+            });
+            let mut p: Vec<f32> = (0..m).map(|_| rng.range_f32(0.1, 1.0)).collect();
+            let mut q: Vec<f32> = (0..n).map(|_| rng.range_f32(0.1, 1.0)).collect();
+            let mut err_prev = Alada::factorization_error(&v, &p, &q);
+            for t in 0..10 {
+                if t % 2 == 0 {
+                    let qn: f32 = q.iter().map(|x| x * x).sum();
+                    for i in 0..m {
+                        let acc: f32 = (0..n).map(|j| v.at2(i, j) * q[j]).sum();
+                        p[i] = acc / qn;
+                    }
+                } else {
+                    let pn: f32 = p.iter().map(|x| x * x).sum();
+                    for j in 0..n {
+                        let acc: f32 = (0..m).map(|i| v.at2(i, j) * p[i]).sum();
+                        q[j] = acc / pn;
+                    }
+                }
+                let err = Alada::factorization_error(&v, &p, &q);
+                assert!(
+                    err <= err_prev * (1.0 + 1e-5),
+                    "error increased at t={t}: {err_prev} -> {err}"
+                );
+                err_prev = err;
+            }
+        }
+    }
+
+    /// The factors stay strictly positive when gradients are nonzero
+    /// (§III: positivity makes p qᵀ a feasible preconditioner).
+    #[test]
+    fn factors_stay_positive() {
+        let shapes = vec![vec![6, 4]];
+        let mut opt = Alada::new(0.9, 0.9, 1e-16, &shapes);
+        let mut rng = Rng::new(3);
+        let mut params = vec![Tensor::from_fn(&[6, 4], |_| rng.normal())];
+        for _ in 0..25 {
+            let g = vec![Tensor::from_fn(&[6, 4], |_| rng.normal() + 0.01)];
+            opt.step(&mut params, &g, 1e-3);
+            assert!(opt.slots[0].p.iter().all(|&x| x > 0.0));
+            assert!(opt.slots[0].q.iter().all(|&x| x > 0.0));
+        }
+    }
+
+    /// Alternation parity: p changes only on even t, q only on odd t.
+    #[test]
+    fn alternation_parity() {
+        let shapes = vec![vec![4, 3]];
+        let mut opt = Alada::new(0.9, 0.9, 1e-16, &shapes);
+        let mut rng = Rng::new(9);
+        let mut params = vec![Tensor::from_fn(&[4, 3], |_| rng.normal())];
+        let g = vec![Tensor::from_fn(&[4, 3], |_| rng.normal())];
+        opt.step(&mut params, &g, 1e-3); // t=0: p updated (and both initialised)
+        let (p1, q1) = (opt.slots[0].p.clone(), opt.slots[0].q.clone());
+        opt.step(&mut params, &g, 1e-3); // t=1: q updated, p frozen
+        assert_eq!(opt.slots[0].p, p1, "p must not change on odd t");
+        assert_ne!(opt.slots[0].q, q1, "q must change on odd t");
+        let q2 = opt.slots[0].q.clone();
+        opt.step(&mut params, &g, 1e-3); // t=2: p updated, q frozen
+        assert_ne!(opt.slots[0].p, p1, "p must change on even t");
+        assert_eq!(opt.slots[0].q, q2, "q must not change on even t");
+    }
+
+    /// Overhead is O(m + n), not O(mn).
+    #[test]
+    fn sublinear_overhead() {
+        let shapes = vec![vec![1000, 800]];
+        let opt = Alada::new(0.9, 0.9, 1e-16, &shapes);
+        assert_eq!(opt.state_overhead_bytes(), (1000 + 800 + 1) * 4);
+    }
+
+    /// Tensors route through the Eq. 12 split.
+    #[test]
+    fn tensor_param_is_split() {
+        let shapes = vec![vec![4, 3, 8]]; // 96 elems → split 12 × 8
+        let opt = Alada::new(0.9, 0.9, 1e-16, &shapes);
+        assert_eq!(opt.slots[0].rows * opt.slots[0].cols, 96);
+        assert_eq!(opt.slots[0].p.len() + opt.slots[0].q.len(), 12 + 8);
+    }
+}

@@ -1,0 +1,162 @@
+//! CAME (Luo et al. 2023) — confidence-guided memory-efficient method
+//! from the paper's related work. Adafactor-style factored second moment
+//! plus a factored *instability* matrix of (g − m)² that scales the
+//! update confidence. Keeps a full first moment (mn), so its overhead
+//! sits between Adam and Alada — exactly the gap Alada closes.
+
+use super::reshape::balanced_split;
+use super::Optimizer;
+use crate::tensor::Tensor;
+
+struct Slot {
+    m: Tensor,
+    r: Vec<f32>,
+    c: Vec<f32>,
+    ur: Vec<f32>,
+    uc: Vec<f32>,
+    rows: usize,
+    cols: usize,
+}
+
+pub struct Came {
+    beta1: f32,
+    beta2: f32,
+    beta3: f32,
+    eps: f32,
+    t: u32,
+    slots: Vec<Slot>,
+}
+
+impl Came {
+    pub fn new(beta1: f32, beta2: f32, beta3: f32, eps: f32, shapes: &[Vec<usize>]) -> Came {
+        let slots = shapes
+            .iter()
+            .map(|s| {
+                let (rows, cols) = balanced_split(s);
+                Slot {
+                    m: Tensor::zeros(s),
+                    r: vec![0.0; rows],
+                    c: vec![0.0; cols],
+                    ur: vec![0.0; rows],
+                    uc: vec![0.0; cols],
+                    rows,
+                    cols,
+                }
+            })
+            .collect();
+        Came { beta1, beta2, beta3, eps, t: 0, slots }
+    }
+}
+
+impl Optimizer for Came {
+    fn step(&mut self, params: &mut [Tensor], grads: &[Tensor], lr: f32) {
+        assert_eq!(params.len(), grads.len());
+        let (b1, b2, b3, eps) = (self.beta1, self.beta2, self.beta3, self.eps);
+        let bc2 = 1.0 / (1.0 - b2.powi(self.t as i32 + 1));
+        for (slot, (x, g)) in self.slots.iter_mut().zip(params.iter_mut().zip(grads)) {
+            let (rows, cols) = (slot.rows, slot.cols);
+            let gd = g.data();
+
+            // factored second moment of g² (Adafactor part)
+            let mut rsum = vec![0.0f32; rows];
+            let mut csum = vec![0.0f32; cols];
+            for i in 0..rows {
+                let row = &gd[i * cols..(i + 1) * cols];
+                for j in 0..cols {
+                    let v = row[j] * row[j] + eps;
+                    rsum[i] += v;
+                    csum[j] += v;
+                }
+            }
+            for i in 0..rows {
+                slot.r[i] = b2 * slot.r[i] + (1.0 - b2) * rsum[i] / cols as f32;
+            }
+            for j in 0..cols {
+                slot.c[j] = b2 * slot.c[j] + (1.0 - b2) * csum[j] / rows as f32;
+            }
+            let mean_r = slot.r.iter().sum::<f32>() / rows as f32 * bc2;
+            let inv_mean = 1.0 / mean_r.max(1e-30);
+
+            // first moment (full) + instability statistics of (u_hat − m)²
+            slot.m.ema_inplace(g, b1, 1.0 - b1);
+            let md = slot.m.data();
+            let mut inst_r = vec![0.0f32; rows];
+            let mut inst_c = vec![0.0f32; cols];
+            // u_hat = g / sqrt(rec(r, c)); instability = (m − u_hat)²
+            for i in 0..rows {
+                let ri = slot.r[i] * bc2;
+                let grow = &gd[i * cols..(i + 1) * cols];
+                let mrow = &md[i * cols..(i + 1) * cols];
+                for j in 0..cols {
+                    let u = ri * (slot.c[j] * bc2) * inv_mean;
+                    let u_hat = grow[j] / (u.sqrt() + eps);
+                    let d = mrow[j] - u_hat;
+                    let v = d * d + eps;
+                    inst_r[i] += v;
+                    inst_c[j] += v;
+                }
+            }
+            for i in 0..rows {
+                slot.ur[i] = b3 * slot.ur[i] + (1.0 - b3) * inst_r[i] / cols as f32;
+            }
+            for j in 0..cols {
+                slot.uc[j] = b3 * slot.uc[j] + (1.0 - b3) * inst_c[j] / rows as f32;
+            }
+            let mean_ur = slot.ur.iter().sum::<f32>() / rows as f32;
+            let inv_mean_u = 1.0 / mean_ur.max(1e-30);
+
+            // confidence-scaled descent: x -= lr * m / sqrt(rec(ur, uc))
+            let xd = x.data_mut();
+            for i in 0..rows {
+                let uri = slot.ur[i];
+                let mrow = &md[i * cols..(i + 1) * cols];
+                let xrow = &mut xd[i * cols..(i + 1) * cols];
+                for j in 0..cols {
+                    let s = (uri * slot.uc[j] * inv_mean_u).sqrt() + eps;
+                    xrow[j] -= lr * mrow[j] / s;
+                }
+            }
+        }
+        self.t += 1;
+    }
+
+    fn state_overhead_bytes(&self) -> usize {
+        self.slots
+            .iter()
+            .map(|s| (s.m.len() + s.r.len() + s.c.len() + s.ur.len() + s.uc.len()) * 4)
+            .sum()
+    }
+
+    fn name(&self) -> &'static str {
+        "came"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn overhead_between_alada_and_adam() {
+        let shapes = vec![vec![64, 48]];
+        let came = Came::new(0.9, 0.999, 0.9995, 1e-8, &shapes);
+        let mn = 64 * 48 * 4;
+        let over = came.state_overhead_bytes();
+        assert!(over > (64 + 48 + 1) * 4, "more than Alada");
+        assert!(over < 2 * mn, "less than Adam");
+    }
+
+    #[test]
+    fn steps_stay_finite() {
+        let shapes = vec![vec![8, 6]];
+        let mut opt = Came::new(0.9, 0.999, 0.9995, 1e-8, &shapes);
+        let mut rng = Rng::new(4);
+        let mut params = vec![Tensor::from_fn(&[8, 6], |_| rng.normal())];
+        for _ in 0..40 {
+            let g = vec![Tensor::from_fn(&[8, 6], |_| rng.normal())];
+            opt.step(&mut params, &g, 1e-2);
+        }
+        assert!(params[0].data().iter().all(|x| x.is_finite()));
+    }
+}

@@ -1,0 +1,140 @@
+//! Pure-Rust optimizer implementations.
+//!
+//! This is the CPU-side mirror of the in-graph (JAX) optimizers: it powers
+//! the theory experiments (Thm. 1 / Cor. 1-2 on synthetic objectives), the
+//! Prop. 1 property tests, the Table-IV memory accounting, and the L3
+//! micro-benchmarks. The paper's comparators (Adam, Adafactor) and the
+//! related-work family (SGD, AdaGrad, SM3, CAME) are all here so every
+//! ablation runs against real implementations, not stubs.
+//!
+//! Contract: `step` consumes the gradient list for one iteration and
+//! updates parameters in place. `lr` comes from a `schedule::Schedule`
+//! owned by the caller — optimizers are schedule-free, like the paper's
+//! setup where one external η_t scheme is shared by all algorithms.
+
+pub mod adafactor;
+pub mod adagrad;
+pub mod adam;
+pub mod alada;
+pub mod came;
+pub mod reshape;
+pub mod schedule;
+pub mod sgd;
+pub mod sm3;
+
+pub use adafactor::Adafactor;
+pub use adagrad::AdaGrad;
+pub use adam::Adam;
+pub use alada::Alada;
+pub use came::Came;
+pub use schedule::Schedule;
+pub use sgd::Sgd;
+pub use sm3::Sm3;
+
+use crate::tensor::Tensor;
+
+/// A stochastic optimizer over a list of tensors.
+pub trait Optimizer {
+    /// Apply one update. `grads[i]` matches `params[i]` in shape.
+    fn step(&mut self, params: &mut [Tensor], grads: &[Tensor], lr: f32);
+
+    /// Bytes of optimizer state maintained *across* iterations, using the
+    /// paper's accounting (footnote 1): temporaries freed within a step
+    /// don't count; the gradient slot itself doesn't count. For Alada the
+    /// first moment lives in the gradient slot (paper §IV-A / Listing 1),
+    /// so it is excluded here and `aliases_grad_slot` reports it.
+    fn state_overhead_bytes(&self) -> usize;
+
+    /// True if the optimizer stores its first moment in the gradient slot
+    /// (changes how the memory model attributes the mn buffer).
+    fn aliases_grad_slot(&self) -> bool {
+        false
+    }
+
+    fn name(&self) -> &'static str;
+}
+
+/// Build an optimizer by name with the paper's default hyper-parameters
+/// (§VI-A). `shapes` pre-sizes the per-parameter state.
+pub fn by_name(name: &str, shapes: &[Vec<usize>]) -> Box<dyn Optimizer + Send> {
+    match name {
+        "sgd" => Box::new(Sgd::new(0.0)),
+        "sgdm" => Box::new(Sgd::new(0.9)),
+        "adagrad" => Box::new(AdaGrad::new(1e-8, shapes)),
+        "adam" => Box::new(Adam::new(0.9, 0.999, 1e-8, shapes)),
+        "adafactor" => Box::new(Adafactor::new(0.999, 1e-8, shapes)),
+        "alada" => Box::new(Alada::new(0.9, 0.9, 1e-16, shapes)),
+        "sm3" => Box::new(Sm3::new(1e-8, shapes)),
+        "came" => Box::new(Came::new(0.9, 0.999, 0.9995, 1e-8, shapes)),
+        other => panic!("unknown optimizer {other:?}"),
+    }
+}
+
+/// All optimizer names known to `by_name` (ablation sweeps iterate this).
+pub const ALL: &[&str] = &["sgd", "sgdm", "adagrad", "adam", "adafactor", "alada", "sm3", "came"];
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+    use crate::util::Rng;
+
+    /// Random parameter/gradient fixture.
+    pub fn fixture(shapes: &[Vec<usize>], seed: u64) -> (Vec<Tensor>, Vec<Tensor>) {
+        let mut rng = Rng::new(seed);
+        let params = shapes
+            .iter()
+            .map(|s| Tensor::from_fn(s, |_| rng.normal()))
+            .collect();
+        let grads = shapes
+            .iter()
+            .map(|s| Tensor::from_fn(s, |_| rng.normal() * 0.1))
+            .collect();
+        (params, grads)
+    }
+
+    /// Every optimizer must move parameters and keep them finite.
+    pub fn check_step_sanity(name: &str) {
+        let shapes = vec![vec![13, 7], vec![5], vec![3, 4, 2]];
+        let (mut params, grads) = fixture(&shapes, 42);
+        let before = params.clone();
+        let mut opt = by_name(name, &shapes);
+        for _ in 0..5 {
+            opt.step(&mut params, &grads, 1e-2);
+        }
+        let mut moved = 0;
+        for (p, b) in params.iter().zip(&before) {
+            for (&x, &y) in p.data().iter().zip(b.data()) {
+                assert!(x.is_finite(), "{name}: non-finite parameter");
+                if (x - y).abs() > 1e-8 {
+                    moved += 1;
+                }
+            }
+        }
+        assert!(moved > 0, "{name}: parameters did not move");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_optimizers_step_sanely() {
+        for name in ALL {
+            testutil::check_step_sanity(name);
+        }
+    }
+
+    #[test]
+    fn overhead_ordering_matches_paper() {
+        // Table IV's story: Adam overhead 2mn ≫ Adafactor/Alada O(m+n).
+        let shapes = vec![vec![512, 384]];
+        let adam = by_name("adam", &shapes);
+        let adafactor = by_name("adafactor", &shapes);
+        let alada = by_name("alada", &shapes);
+        assert_eq!(adam.state_overhead_bytes(), 2 * 512 * 384 * 4);
+        assert!(adafactor.state_overhead_bytes() < adam.state_overhead_bytes() / 100);
+        assert!(alada.state_overhead_bytes() < adam.state_overhead_bytes() / 100);
+        assert!(alada.aliases_grad_slot());
+    }
+}

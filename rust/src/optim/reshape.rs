@@ -1,0 +1,75 @@
+//! The paper's tensor→matrix reshaping rule (Eq. 12).
+//!
+//! An order-τ tensor of shape k₁×…×k_τ is viewed as an (m, n) matrix with
+//! m = ∏_{i≤j*} kᵢ, n = ∏_{i>j*} kᵢ, where j* minimises |m − n|. The
+//! balanced split maximises the memory saving of rank-one factorisation
+//! (m + n is smallest when m ≈ n) and, being a row-major view, costs no
+//! data movement — mirroring the paper's `Y.view(m, n)` remark.
+
+/// Return `(m, n)` for the balanced split of `shape` (Eq. 12).
+///
+/// Scalars map to (1, 1), vectors to (1, k): the degenerate splits the
+/// optimizers handle with a scalar row factor.
+pub fn balanced_split(shape: &[usize]) -> (usize, usize) {
+    let total: usize = shape.iter().product::<usize>().max(1);
+    let mut best = (0usize, usize::MAX);
+    let mut left = 1usize;
+    for j in 0..=shape.len() {
+        let right = total / left;
+        let gap = left.abs_diff(right);
+        if gap < best.1 {
+            best = (j, gap);
+        }
+        if j < shape.len() {
+            left *= shape[j];
+        }
+    }
+    let m: usize = shape[..best.0].iter().product::<usize>().max(1);
+    (m, total / m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matrices_stay_put() {
+        assert_eq!(balanced_split(&[128, 64]), (128, 64));
+    }
+
+    #[test]
+    fn vectors_become_rows() {
+        assert_eq!(balanced_split(&[100]), (1, 100));
+    }
+
+    #[test]
+    fn scalars() {
+        assert_eq!(balanced_split(&[]), (1, 1));
+    }
+
+    #[test]
+    fn order3_balances() {
+        // 8×4×8 = 256 → gap ties at j = 1 (8|32) and j = 2 (32|8);
+        // the first minimiser wins, matching the Python side.
+        assert_eq!(balanced_split(&[8, 4, 8]), (8, 32));
+        // 2×3×5×7 = 210 → candidates 1|210, 2|105, 6|35, 30|7, 210|1;
+        // 30|7 has the smallest gap (23)
+        assert_eq!(balanced_split(&[2, 3, 5, 7]), (30, 7));
+    }
+
+    #[test]
+    fn split_is_sublinear() {
+        // The point of Eq. 12: m + n ≪ m·n for higher-order tensors.
+        let (m, n) = balanced_split(&[64, 3, 3, 64]);
+        assert_eq!(m * n, 64 * 3 * 3 * 64);
+        assert!(m + n <= 2 * ((64 * 3 * 3 * 64) as f64).sqrt() as usize + 2);
+    }
+
+    #[test]
+    fn product_always_preserved() {
+        for shape in [vec![5], vec![3, 7], vec![2, 2, 2, 2, 2], vec![17, 1, 4]] {
+            let (m, n) = balanced_split(&shape);
+            assert_eq!(m * n, shape.iter().product::<usize>());
+        }
+    }
+}

@@ -1,0 +1,121 @@
+//! Step-size schedules.
+//!
+//! The paper equips every algorithm with the diminishing scheme
+//! η_t = η₀·(1 − t/T) (§VI-A)¹ and analyses the Theorem-1 schedule
+//! η_t = η·(1 − β₁^{t+1}) (Eq. 16). Both are here, plus the constant and
+//! warmup-cosine schedules a framework user expects.
+//!
+//! ¹ The paper's text prints η_t = η₀/(1 − t/T), which *grows* without
+//! bound and diverges at t = T; every experiment description ("diminishing
+//! step-size scheme") implies the decaying form, so we implement
+//! η₀·(1 − t/T) and keep the literal form available as `PaperLiteral` for
+//! the ablation that documents the discrepancy (see DESIGN.md).
+
+/// A step-size schedule: maps iteration t (0-based) to η_t.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Schedule {
+    Constant { eta0: f32 },
+    /// η₀·(1 − t/T): the paper's diminishing scheme as intended.
+    Diminishing { eta0: f32, total: usize },
+    /// η₀/(1 − t/T): the formula as literally printed (diverges at T).
+    PaperLiteral { eta0: f32, total: usize },
+    /// η·(1 − β₁^{t+1}): Theorem 1, Eq. (16).
+    Theorem1 { eta: f32, beta1: f32 },
+    /// Linear warmup to η₀ over `warmup` steps then cosine decay to
+    /// `floor`·η₀ at `total`.
+    WarmupCosine { eta0: f32, warmup: usize, total: usize, floor: f32 },
+}
+
+impl Schedule {
+    pub fn at(&self, t: usize) -> f32 {
+        match *self {
+            Schedule::Constant { eta0 } => eta0,
+            Schedule::Diminishing { eta0, total } => {
+                let frac = t as f32 / total.max(1) as f32;
+                eta0 * (1.0 - frac).max(1.0 / total.max(1) as f32)
+            }
+            Schedule::PaperLiteral { eta0, total } => {
+                let frac = (t as f32 / total.max(1) as f32).min(0.999_999);
+                eta0 / (1.0 - frac)
+            }
+            Schedule::Theorem1 { eta, beta1 } => eta * (1.0 - beta1.powi(t as i32 + 1)),
+            Schedule::WarmupCosine { eta0, warmup, total, floor } => {
+                if t < warmup {
+                    eta0 * (t + 1) as f32 / warmup.max(1) as f32
+                } else {
+                    let span = (total.saturating_sub(warmup)).max(1) as f32;
+                    let frac = ((t - warmup) as f32 / span).min(1.0);
+                    let cos = 0.5 * (1.0 + (std::f32::consts::PI * frac).cos());
+                    eta0 * (floor + (1.0 - floor) * cos)
+                }
+            }
+        }
+    }
+
+    /// Parse "const:1e-3", "dim:1e-3:1000", "thm1:1e-3:0.9",
+    /// "cos:1e-3:100:1000" (CLI / config syntax).
+    pub fn parse(s: &str) -> Result<Schedule, String> {
+        let parts: Vec<&str> = s.split(':').collect();
+        let f = |x: &str| x.parse::<f32>().map_err(|_| format!("bad number {x:?} in schedule {s:?}"));
+        let u = |x: &str| x.parse::<usize>().map_err(|_| format!("bad int {x:?} in schedule {s:?}"));
+        match parts.as_slice() {
+            ["const", eta] => Ok(Schedule::Constant { eta0: f(eta)? }),
+            ["dim", eta, total] => Ok(Schedule::Diminishing { eta0: f(eta)?, total: u(total)? }),
+            ["lit", eta, total] => Ok(Schedule::PaperLiteral { eta0: f(eta)?, total: u(total)? }),
+            ["thm1", eta, b1] => Ok(Schedule::Theorem1 { eta: f(eta)?, beta1: f(b1)? }),
+            ["cos", eta, warmup, total] => Ok(Schedule::WarmupCosine {
+                eta0: f(eta)?,
+                warmup: u(warmup)?,
+                total: u(total)?,
+                floor: 0.1,
+            }),
+            _ => Err(format!("unknown schedule {s:?}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn diminishing_decays_to_near_zero() {
+        let s = Schedule::Diminishing { eta0: 1.0, total: 100 };
+        assert_eq!(s.at(0), 1.0);
+        assert!(s.at(50) < s.at(10));
+        assert!(s.at(99) > 0.0 && s.at(99) < 0.02);
+    }
+
+    #[test]
+    fn theorem1_approaches_eta() {
+        let s = Schedule::Theorem1 { eta: 2.0, beta1: 0.9 };
+        assert!((s.at(0) - 0.2).abs() < 1e-6);
+        assert!((s.at(200) - 2.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn warmup_then_decay() {
+        let s = Schedule::WarmupCosine { eta0: 1.0, warmup: 10, total: 100, floor: 0.1 };
+        assert!(s.at(0) < s.at(9));
+        assert!((s.at(9) - 1.0).abs() < 0.11);
+        assert!(s.at(99) < 0.2);
+    }
+
+    #[test]
+    fn parse_round_trip() {
+        assert_eq!(Schedule::parse("const:0.5").unwrap(), Schedule::Constant { eta0: 0.5 });
+        assert_eq!(
+            Schedule::parse("dim:0.1:50").unwrap(),
+            Schedule::Diminishing { eta0: 0.1, total: 50 }
+        );
+        assert!(Schedule::parse("bogus").is_err());
+        assert!(Schedule::parse("dim:x:50").is_err());
+    }
+
+    #[test]
+    fn paper_literal_grows() {
+        // documents the printed-formula discrepancy
+        let s = Schedule::PaperLiteral { eta0: 1.0, total: 100 };
+        assert!(s.at(90) > s.at(0));
+    }
+}

@@ -1,0 +1,82 @@
+//! Stochastic gradient descent with optional heavy-ball momentum.
+//!
+//! The zero-overhead baseline the paper measures all "memory overheads"
+//! against (footnote 1): plain SGD keeps no optimizer state at all;
+//! SGD-momentum keeps one mn buffer.
+
+use super::Optimizer;
+use crate::tensor::Tensor;
+
+pub struct Sgd {
+    momentum: f32,
+    velocity: Option<Vec<Tensor>>,
+}
+
+impl Sgd {
+    pub fn new(momentum: f32) -> Sgd {
+        Sgd { momentum, velocity: None }
+    }
+}
+
+impl Optimizer for Sgd {
+    fn step(&mut self, params: &mut [Tensor], grads: &[Tensor], lr: f32) {
+        assert_eq!(params.len(), grads.len());
+        if self.momentum == 0.0 {
+            for (p, g) in params.iter_mut().zip(grads) {
+                p.axpy_inplace(g, -lr);
+            }
+            return;
+        }
+        let velocity = self
+            .velocity
+            .get_or_insert_with(|| params.iter().map(|p| Tensor::zeros(p.shape())).collect());
+        for ((p, g), v) in params.iter_mut().zip(grads).zip(velocity.iter_mut()) {
+            v.ema_inplace(g, self.momentum, 1.0);
+            p.axpy_inplace(v, -lr);
+        }
+    }
+
+    fn state_overhead_bytes(&self) -> usize {
+        self.velocity
+            .as_ref()
+            .map(|v| v.iter().map(|t| t.len() * 4).sum())
+            .unwrap_or(0)
+    }
+
+    fn name(&self) -> &'static str {
+        if self.momentum == 0.0 {
+            "sgd"
+        } else {
+            "sgdm"
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plain_sgd_is_stateless() {
+        let mut opt = Sgd::new(0.0);
+        let mut params = vec![Tensor::full(&[4], 1.0)];
+        let grads = vec![Tensor::full(&[4], 0.5)];
+        opt.step(&mut params, &grads, 0.1);
+        assert!((params[0].data()[0] - 0.95).abs() < 1e-6);
+        assert_eq!(opt.state_overhead_bytes(), 0);
+    }
+
+    #[test]
+    fn momentum_accumulates() {
+        let mut opt = Sgd::new(0.9);
+        let mut params = vec![Tensor::zeros(&[1])];
+        let grads = vec![Tensor::full(&[1], 1.0)];
+        opt.step(&mut params, &grads, 1.0);
+        let after1 = params[0].data()[0]; // -1
+        opt.step(&mut params, &grads, 1.0);
+        let delta2 = params[0].data()[0] - after1; // -(0.9+1)
+        assert!((after1 + 1.0).abs() < 1e-6);
+        assert!((delta2 + 1.9).abs() < 1e-6);
+        assert_eq!(opt.state_overhead_bytes(), 4);
+    }
+}

@@ -1,0 +1,98 @@
+//! SM3 (Anil et al. 2019) — memory-efficient adaptive method from the
+//! paper's related work. Keeps per-row and per-column *max* accumulators;
+//! the per-entry second-moment estimate is min(r_i, c_j).
+
+use super::reshape::balanced_split;
+use super::Optimizer;
+use crate::tensor::Tensor;
+
+struct Slot {
+    r: Vec<f32>,
+    c: Vec<f32>,
+    rows: usize,
+    cols: usize,
+}
+
+pub struct Sm3 {
+    eps: f32,
+    slots: Vec<Slot>,
+}
+
+impl Sm3 {
+    pub fn new(eps: f32, shapes: &[Vec<usize>]) -> Sm3 {
+        let slots = shapes
+            .iter()
+            .map(|s| {
+                let (rows, cols) = balanced_split(s);
+                Slot { r: vec![0.0; rows], c: vec![0.0; cols], rows, cols }
+            })
+            .collect();
+        Sm3 { eps, slots }
+    }
+}
+
+impl Optimizer for Sm3 {
+    fn step(&mut self, params: &mut [Tensor], grads: &[Tensor], lr: f32) {
+        assert_eq!(params.len(), grads.len());
+        let eps = self.eps;
+        for (slot, (x, g)) in self.slots.iter_mut().zip(params.iter_mut().zip(grads)) {
+            let (rows, cols) = (slot.rows, slot.cols);
+            let gd = g.data();
+            let xd = x.data_mut();
+            // SM3-I: nu_ij = min(r_i, c_j) + g², then fold maxima back.
+            let mut new_r = vec![0.0f32; rows];
+            let mut new_c = vec![0.0f32; cols];
+            for i in 0..rows {
+                let grow = &gd[i * cols..(i + 1) * cols];
+                let xrow = &mut xd[i * cols..(i + 1) * cols];
+                let ri = slot.r[i];
+                for j in 0..cols {
+                    let nu = ri.min(slot.c[j]) + grow[j] * grow[j];
+                    xrow[j] -= lr * grow[j] / (nu.sqrt() + eps);
+                    new_r[i] = new_r[i].max(nu);
+                    new_c[j] = new_c[j].max(nu);
+                }
+            }
+            slot.r = new_r;
+            slot.c = new_c;
+        }
+    }
+
+    fn state_overhead_bytes(&self) -> usize {
+        self.slots.iter().map(|s| (s.r.len() + s.c.len()) * 4).sum()
+    }
+
+    fn name(&self) -> &'static str {
+        "sm3"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn accumulators_grow_monotonically() {
+        let shapes = vec![vec![4, 4]];
+        let mut opt = Sm3::new(1e-8, &shapes);
+        let mut rng = Rng::new(2);
+        let mut params = vec![Tensor::zeros(&[4, 4])];
+        let mut prev_r = vec![0.0f32; 4];
+        for _ in 0..10 {
+            let g = vec![Tensor::from_fn(&[4, 4], |_| rng.normal())];
+            opt.step(&mut params, &g, 1e-2);
+            for (new, old) in opt.slots[0].r.iter().zip(&prev_r) {
+                assert!(new >= old, "SM3 row accumulator must be monotone");
+            }
+            prev_r = opt.slots[0].r.clone();
+        }
+    }
+
+    #[test]
+    fn overhead_is_sublinear() {
+        let shapes = vec![vec![100, 100]];
+        let opt = Sm3::new(1e-8, &shapes);
+        assert_eq!(opt.state_overhead_bytes(), 200 * 4);
+    }
+}

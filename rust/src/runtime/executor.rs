@@ -1,0 +1,203 @@
+//! Training sessions: stateful wrappers around the fused-step artifacts.
+//!
+//! A `TrainSession` owns the packed parameter/optimizer-state vectors and
+//! drives the `train_*` artifact step by step; `eval_*` and `logits_*`
+//! artifacts are wrapped by the same type family. This is the only thing
+//! the trainer (L3) talks to — the layer boundary where "paper algorithm"
+//! ends and "framework" begins.
+
+use anyhow::{bail, Result};
+
+use super::{Executable, HostTensor, Runtime};
+
+/// Extra batch buffers beyond tokens, per task family.
+#[derive(Clone, Debug)]
+pub enum BatchExtra {
+    /// lm: tokens only.
+    None,
+    /// mt: per-position loss mask (f32, same shape as tokens).
+    LossMask(Vec<f32>),
+    /// cls: per-sequence labels (i32, length = batch).
+    Labels(Vec<i32>),
+}
+
+/// A live training run: compiled step + packed host state.
+pub struct TrainSession {
+    exe: Executable,
+    pub params: Vec<f32>,
+    pub opt_state: Vec<f32>,
+    pub t: i32,
+    pub batch: usize,
+    pub seq: usize,
+    pub task: String,
+}
+
+impl TrainSession {
+    /// Create a session for (task, size, opt), loading initial weights
+    /// from the AOT init dump.
+    pub fn new(rt: &Runtime, task: &str, size: &str, opt: &str) -> Result<TrainSession> {
+        let name = super::Manifest::train_name(task, size, opt);
+        let exe = rt.load(&name)?;
+        let params = rt.init_params(task, size)?;
+        Self::with_params(exe, params, task)
+    }
+
+    /// Create from an already-compiled executable (sweep coordinator
+    /// compiles once and forks sessions per job).
+    pub fn with_params(exe: Executable, params: Vec<f32>, task: &str) -> Result<TrainSession> {
+        let meta = &exe.spec.meta;
+        if params.len() != meta.param_elems {
+            bail!(
+                "{}: init has {} elems, artifact wants {}",
+                exe.spec.name,
+                params.len(),
+                meta.param_elems
+            );
+        }
+        Ok(TrainSession {
+            opt_state: vec![0.0; meta.state_elems],
+            t: 0,
+            batch: meta.batch,
+            seq: meta.seq,
+            task: task.to_string(),
+            params,
+            exe,
+        })
+    }
+
+    /// One fused train step. Returns the batch loss.
+    pub fn step(&mut self, tokens: &[i32], extra: &BatchExtra, lr: f32) -> Result<f32> {
+        if tokens.len() != self.batch * self.seq {
+            bail!(
+                "{}: tokens len {} != batch {} * seq {}",
+                self.exe.spec.name,
+                tokens.len(),
+                self.batch,
+                self.seq
+            );
+        }
+        let mut inputs = vec![
+            HostTensor::f32(std::mem::take(&mut self.params), &[self.exe.spec.meta.param_elems]),
+            HostTensor::f32(
+                std::mem::take(&mut self.opt_state),
+                &[self.exe.spec.meta.state_elems],
+            ),
+            HostTensor::scalar_i32(self.t),
+            HostTensor::i32(tokens.to_vec(), &[self.batch, self.seq]),
+        ];
+        match extra {
+            BatchExtra::None => {}
+            BatchExtra::LossMask(m) => {
+                inputs.push(HostTensor::f32(m.clone(), &[self.batch, self.seq]))
+            }
+            BatchExtra::Labels(l) => inputs.push(HostTensor::i32(l.clone(), &[self.batch])),
+        }
+        inputs.push(HostTensor::scalar_f32(lr));
+
+        let mut out = self.exe.run(&inputs)?;
+        // outputs: params, opt_state, t, loss — in manifest order
+        let loss = out.pop().unwrap().into_f32()?[0];
+        self.t = out.pop().unwrap().into_i32()?[0];
+        self.opt_state = out.pop().unwrap().into_f32()?;
+        self.params = out.pop().unwrap().into_f32()?;
+        Ok(loss)
+    }
+
+    /// Bytes of optimizer state held by this session (paper Table IV's
+    /// "overhead" column measures exactly this plus the grad slot).
+    pub fn opt_state_bytes(&self) -> usize {
+        self.opt_state.len() * 4
+    }
+
+    pub fn param_bytes(&self) -> usize {
+        self.params.len() * 4
+    }
+
+    pub fn name(&self) -> &str {
+        &self.exe.spec.name
+    }
+}
+
+/// Evaluation wrapper: loss/perplexity (lm, mt) or predictions (cls).
+pub struct EvalSession {
+    exe: Executable,
+    pub batch: usize,
+    pub seq: usize,
+    task: String,
+}
+
+/// Result of one eval batch.
+#[derive(Clone, Debug, Default)]
+pub struct EvalOut {
+    pub sum_nll: f64,
+    pub count: f64,
+    pub preds: Vec<i32>,
+}
+
+impl EvalSession {
+    pub fn new(rt: &Runtime, task: &str, size: &str) -> Result<EvalSession> {
+        Ok(Self::from_exe(rt.load(&super::Manifest::eval_name(task, size))?, task))
+    }
+
+    /// Wrap an already-compiled executable (the sweep coordinator caches
+    /// compiles per worker and shares them across jobs).
+    pub fn from_exe(exe: Executable, task: &str) -> EvalSession {
+        let meta = &exe.spec.meta;
+        EvalSession { batch: meta.batch, seq: meta.seq, task: task.to_string(), exe }
+    }
+
+    pub fn run(&self, params: &[f32], tokens: &[i32], extra: &BatchExtra) -> Result<EvalOut> {
+        let mut inputs = vec![
+            HostTensor::f32(params.to_vec(), &[self.exe.spec.meta.param_elems]),
+            HostTensor::i32(tokens.to_vec(), &[self.batch, self.seq]),
+        ];
+        match extra {
+            BatchExtra::None => {}
+            BatchExtra::LossMask(m) => {
+                inputs.push(HostTensor::f32(m.clone(), &[self.batch, self.seq]))
+            }
+            BatchExtra::Labels(l) => inputs.push(HostTensor::i32(l.clone(), &[self.batch])),
+        }
+        let mut out = self.exe.run(&inputs)?;
+        if self.task == "cls" {
+            let count = out.pop().unwrap().into_f32()?[0] as f64;
+            let sum_nll = out.pop().unwrap().into_f32()?[0] as f64;
+            let preds = out.pop().unwrap().into_i32()?;
+            Ok(EvalOut { sum_nll, count, preds })
+        } else {
+            let count = out.pop().unwrap().into_f32()?[0] as f64;
+            let sum_nll = out.pop().unwrap().into_f32()?[0] as f64;
+            Ok(EvalOut { sum_nll, count, preds: Vec::new() })
+        }
+    }
+}
+
+/// Full-sequence logits wrapper driving the Rust greedy decoder (BLEU).
+pub struct LogitsSession {
+    exe: Executable,
+    pub batch: usize,
+    pub seq: usize,
+    pub vocab: usize,
+}
+
+impl LogitsSession {
+    pub fn new(rt: &Runtime, size: &str) -> Result<LogitsSession> {
+        Ok(Self::from_exe(rt.load(&format!("logits_lm_{size}"))?))
+    }
+
+    /// Wrap an already-compiled executable (see EvalSession::from_exe).
+    pub fn from_exe(exe: Executable) -> LogitsSession {
+        let meta = &exe.spec.meta;
+        LogitsSession { batch: meta.batch, seq: meta.seq, vocab: meta.vocab, exe }
+    }
+
+    /// Logits for every position: (batch, seq, vocab) flattened row-major.
+    pub fn run(&self, params: &[f32], tokens: &[i32]) -> Result<Vec<f32>> {
+        let inputs = vec![
+            HostTensor::f32(params.to_vec(), &[self.exe.spec.meta.param_elems]),
+            HostTensor::i32(tokens.to_vec(), &[self.batch, self.seq]),
+        ];
+        let mut out = self.exe.run(&inputs)?;
+        out.pop().unwrap().into_f32()
+    }
+}

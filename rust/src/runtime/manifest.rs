@@ -1,0 +1,258 @@
+//! Typed view of `artifacts/manifest.json`.
+//!
+//! The AOT pipeline (python/compile/aot.py) writes a manifest describing
+//! every lowered HLO artifact: buffer signature (names/shapes/dtypes in
+//! call order), the param/state leaf offset tables, and task metadata.
+//! The Rust runtime is entirely manifest-driven — it never hard-codes a
+//! model layout.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::Json;
+
+/// Element type of a runtime buffer. The AOT pipeline only emits f32/i32.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<DType> {
+        match s {
+            "float32" => Ok(DType::F32),
+            "int32" => Ok(DType::I32),
+            other => bail!("unsupported dtype {other:?}"),
+        }
+    }
+}
+
+/// Shape + dtype of one buffer in an artifact signature.
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+/// One leaf in the packed params / opt-state vector.
+#[derive(Clone, Debug)]
+pub struct LeafSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+}
+
+impl LeafSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+/// Metadata for one artifact (mirrors StepSpec.meta).
+#[derive(Clone, Debug, Default)]
+pub struct ArtifactMeta {
+    pub kind: String,
+    pub task: String,
+    pub size: String,
+    pub opt: Option<String>,
+    pub batch: usize,
+    pub seq: usize,
+    pub vocab: usize,
+    pub param_elems: usize,
+    pub state_elems: usize,
+    pub param_count: usize,
+}
+
+/// One AOT-lowered HLO artifact.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub param_table: Vec<LeafSpec>,
+    pub state_table: Vec<LeafSpec>,
+    pub meta: ArtifactMeta,
+}
+
+/// Initial-weights dump: concatenated little-endian f32 in leaf order.
+#[derive(Clone, Debug)]
+pub struct InitSpec {
+    pub name: String,
+    pub params: Vec<LeafSpec>,
+}
+
+/// The parsed manifest plus its directory (for resolving files).
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+    pub inits: BTreeMap<String, InitSpec>,
+}
+
+fn tensor_specs(v: &Json) -> Result<Vec<TensorSpec>> {
+    v.as_arr()
+        .ok_or_else(|| anyhow!("expected array of tensor specs"))?
+        .iter()
+        .map(|t| {
+            Ok(TensorSpec {
+                name: t.req("name")?.as_str().unwrap_or_default().to_string(),
+                shape: shape_of(t.req("shape")?)?,
+                dtype: DType::parse(t.req("dtype")?.as_str().unwrap_or_default())?,
+            })
+        })
+        .collect()
+}
+
+fn leaf_specs(v: &Json) -> Result<Vec<LeafSpec>> {
+    v.as_arr()
+        .ok_or_else(|| anyhow!("expected array of leaf specs"))?
+        .iter()
+        .map(|t| {
+            Ok(LeafSpec {
+                name: t.req("name")?.as_str().unwrap_or_default().to_string(),
+                shape: shape_of(t.req("shape")?)?,
+                offset: t.req("offset")?.as_usize().unwrap_or(0),
+            })
+        })
+        .collect()
+}
+
+fn shape_of(v: &Json) -> Result<Vec<usize>> {
+    v.as_arr()
+        .ok_or_else(|| anyhow!("shape must be an array"))?
+        .iter()
+        .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+        .collect()
+}
+
+fn meta_of(v: &Json) -> ArtifactMeta {
+    let s = |k: &str| v.get(k).and_then(Json::as_str).unwrap_or_default().to_string();
+    let n = |k: &str| v.get(k).and_then(Json::as_usize).unwrap_or(0);
+    ArtifactMeta {
+        kind: s("kind"),
+        task: s("task"),
+        size: s("size"),
+        opt: v.get("opt").and_then(Json::as_str).map(str::to_string),
+        batch: n("batch"),
+        seq: n("seq"),
+        vocab: n("vocab"),
+        param_elems: n("param_elems"),
+        state_elems: n("state_elems"),
+        param_count: n("param_count"),
+    }
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load<P: AsRef<Path>>(dir: P) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let root = Json::parse(&text).map_err(|e| anyhow!("{path:?}: {e}"))?;
+
+        let mut artifacts = BTreeMap::new();
+        for a in root.req("artifacts")?.as_arr().unwrap_or(&[]) {
+            let spec = ArtifactSpec {
+                name: a.req("name")?.as_str().unwrap_or_default().to_string(),
+                file: a.req("file")?.as_str().unwrap_or_default().to_string(),
+                inputs: tensor_specs(a.req("inputs")?)?,
+                outputs: tensor_specs(a.req("outputs")?)?,
+                param_table: leaf_specs(a.req("param_table")?)?,
+                state_table: leaf_specs(a.req("state_table")?)?,
+                meta: meta_of(a.req("meta")?),
+            };
+            artifacts.insert(spec.name.clone(), spec);
+        }
+
+        let mut inits = BTreeMap::new();
+        for i in root.req("inits")?.as_arr().unwrap_or(&[]) {
+            let mut offset = 0;
+            let params: Vec<LeafSpec> = i
+                .req("params")?
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .map(|p| {
+                    let shape = shape_of(p.req("shape")?)?;
+                    let leaf = LeafSpec {
+                        name: p.req("name")?.as_str().unwrap_or_default().to_string(),
+                        shape,
+                        offset,
+                    };
+                    offset += leaf.elems();
+                    Ok(leaf)
+                })
+                .collect::<Result<_>>()?;
+            let name = i.req("name")?.as_str().unwrap_or_default().to_string();
+            inits.insert(name.clone(), InitSpec { name, params });
+        }
+
+        Ok(Manifest { dir, artifacts, inits })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name:?} not in manifest ({} known)", self.artifacts.len()))
+    }
+
+    /// Train artifact name for a (task, size, optimizer) triple.
+    pub fn train_name(task: &str, size: &str, opt: &str) -> String {
+        format!("train_{task}_{size}_{opt}")
+    }
+
+    pub fn eval_name(task: &str, size: &str) -> String {
+        format!("eval_{task}_{size}")
+    }
+
+    /// Load an init dump: little-endian f32, length checked.
+    pub fn load_init(&self, task: &str, size: &str) -> Result<Vec<f32>> {
+        // mt shares the lm parameterisation (no classification head)
+        let head = if task == "mt" { "lm" } else { task };
+        let name = format!("init_{head}_{size}.bin");
+        let spec = self
+            .inits
+            .get(&name)
+            .ok_or_else(|| anyhow!("init dump {name:?} not in manifest"))?;
+        let bytes = std::fs::read(self.dir.join(&name))
+            .with_context(|| format!("reading init dump {name:?}"))?;
+        let total: usize = spec.params.iter().map(LeafSpec::elems).sum();
+        if bytes.len() != total * 4 {
+            bail!("init dump {name:?}: {} bytes, expected {}", bytes.len(), total * 4);
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dtype_parse() {
+        assert_eq!(DType::parse("float32").unwrap(), DType::F32);
+        assert_eq!(DType::parse("int32").unwrap(), DType::I32);
+        assert!(DType::parse("bfloat16").is_err());
+    }
+
+    #[test]
+    fn names() {
+        assert_eq!(Manifest::train_name("lm", "small", "alada"), "train_lm_small_alada");
+        assert_eq!(Manifest::eval_name("cls", "tiny"), "eval_cls_tiny");
+    }
+}

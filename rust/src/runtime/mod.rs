@@ -1,0 +1,146 @@
+//! PJRT runtime: load AOT artifacts (HLO text) and execute them.
+//!
+//! Pattern per /opt/xla-example: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! HLO *text* is the interchange format (xla_extension 0.5.1 rejects
+//! jax ≥ 0.5 serialized protos — 64-bit instruction ids).
+//!
+//! Python never runs here: after `make artifacts` the binary is
+//! self-contained.
+
+pub mod executor;
+pub mod manifest;
+pub mod tensor_host;
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+pub use executor::TrainSession;
+pub use manifest::{ArtifactSpec, DType, LeafSpec, Manifest, TensorSpec};
+pub use tensor_host::HostTensor;
+
+use crate::util::log;
+
+/// The PJRT runtime: one CPU client + the artifact manifest.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+}
+
+impl Runtime {
+    /// Open the artifact directory (default `artifacts/`).
+    pub fn open<P: AsRef<Path>>(dir: P) -> Result<Runtime> {
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
+        log::info(&format!(
+            "runtime: platform={} devices={} artifacts={}",
+            client.platform_name(),
+            client.device_count(),
+            manifest.artifacts.len()
+        ));
+        Ok(Runtime { client, manifest })
+    }
+
+    /// Load + compile one artifact by manifest name.
+    pub fn load(&self, name: &str) -> Result<Executable> {
+        let spec = self.manifest.artifact(name)?.clone();
+        let path = self.manifest.dir.join(&spec.file);
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parse {path:?}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {name}: {e}"))?;
+        log::info(&format!("compiled {name} in {:.2}s", t0.elapsed().as_secs_f64()));
+        Ok(Executable { exe: Arc::new(exe), spec })
+    }
+
+    /// Initial weights for a (task, size) pair, from the AOT dump.
+    pub fn init_params(&self, task: &str, size: &str) -> Result<Vec<f32>> {
+        self.manifest.load_init(task, size)
+    }
+}
+
+/// A compiled artifact plus its manifest signature. Cloning is cheap
+/// (the compiled PJRT executable is shared behind an Arc) — the
+/// coordinator clones one compile across many jobs on a worker.
+#[derive(Clone)]
+pub struct Executable {
+    exe: Arc<xla::PjRtLoadedExecutable>,
+    pub spec: ArtifactSpec,
+}
+
+impl Executable {
+    /// Execute with shape-checked host tensors; returns the output tuple
+    /// as host tensors in manifest output order.
+    pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!(
+                "{}: got {} inputs, signature has {}",
+                self.spec.name,
+                inputs.len(),
+                self.spec.inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (x, s) in inputs.iter().zip(&self.spec.inputs) {
+            x.check(s).with_context(|| format!("artifact {}", self.spec.name))?;
+            literals.push(to_literal(x)?);
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute {}: {e}", self.spec.name))?;
+        let buffer = result
+            .first()
+            .and_then(|r| r.first())
+            .ok_or_else(|| anyhow!("execute {}: empty result", self.spec.name))?;
+        let tuple = buffer
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result {}: {e}", self.spec.name))?;
+        let parts = tuple
+            .to_tuple()
+            .map_err(|e| anyhow!("untuple {}: {e}", self.spec.name))?;
+        if parts.len() != self.spec.outputs.len() {
+            bail!(
+                "{}: got {} outputs, signature has {}",
+                self.spec.name,
+                parts.len(),
+                self.spec.outputs.len()
+            );
+        }
+        parts
+            .into_iter()
+            .zip(&self.spec.outputs)
+            .map(|(lit, spec)| from_literal(&lit, spec))
+            .collect()
+    }
+}
+
+fn to_literal(x: &HostTensor) -> Result<xla::Literal> {
+    let dims: Vec<i64> = x.shape().iter().map(|&d| d as i64).collect();
+    let lit = match x {
+        HostTensor::F32(d, _) => xla::Literal::vec1(d),
+        HostTensor::I32(d, _) => xla::Literal::vec1(d),
+    };
+    lit.reshape(&dims).map_err(|e| anyhow!("reshape literal: {e}"))
+}
+
+fn from_literal(lit: &xla::Literal, spec: &TensorSpec) -> Result<HostTensor> {
+    match spec.dtype {
+        DType::F32 => {
+            let v = lit.to_vec::<f32>().map_err(|e| anyhow!("read {}: {e}", spec.name))?;
+            Ok(HostTensor::f32(v, &spec.shape))
+        }
+        DType::I32 => {
+            let v = lit.to_vec::<i32>().map_err(|e| anyhow!("read {}: {e}", spec.name))?;
+            Ok(HostTensor::i32(v, &spec.shape))
+        }
+    }
+}

@@ -1,0 +1,112 @@
+//! Host-side buffers exchanged with the PJRT executables.
+//!
+//! The flat-packed artifact signature keeps this deliberately small: a
+//! step moves 4-6 of these per call, either f32 or i32, shape-checked
+//! against the manifest before every execute.
+
+use anyhow::{bail, Result};
+
+use super::manifest::{DType, TensorSpec};
+
+/// A host tensor: flat data + shape.
+#[derive(Clone, Debug)]
+pub enum HostTensor {
+    F32(Vec<f32>, Vec<usize>),
+    I32(Vec<i32>, Vec<usize>),
+}
+
+impl HostTensor {
+    pub fn f32(data: Vec<f32>, shape: &[usize]) -> HostTensor {
+        debug_assert_eq!(data.len(), shape.iter().product::<usize>().max(1));
+        HostTensor::F32(data, shape.to_vec())
+    }
+
+    pub fn i32(data: Vec<i32>, shape: &[usize]) -> HostTensor {
+        debug_assert_eq!(data.len(), shape.iter().product::<usize>().max(1));
+        HostTensor::I32(data, shape.to_vec())
+    }
+
+    pub fn scalar_f32(x: f32) -> HostTensor {
+        HostTensor::F32(vec![x], vec![1])
+    }
+
+    pub fn scalar_i32(x: i32) -> HostTensor {
+        HostTensor::I32(vec![x], vec![1])
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32(_, s) | HostTensor::I32(_, s) => s,
+        }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            HostTensor::F32(..) => DType::F32,
+            HostTensor::I32(..) => DType::I32,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            HostTensor::F32(d, _) => d.len(),
+            HostTensor::I32(d, _) => d.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32(d, _) => Ok(d),
+            _ => bail!("expected f32 tensor"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            HostTensor::I32(d, _) => Ok(d),
+            _ => bail!("expected i32 tensor"),
+        }
+    }
+
+    pub fn into_f32(self) -> Result<Vec<f32>> {
+        match self {
+            HostTensor::F32(d, _) => Ok(d),
+            _ => bail!("expected f32 tensor"),
+        }
+    }
+
+    pub fn into_i32(self) -> Result<Vec<i32>> {
+        match self {
+            HostTensor::I32(d, _) => Ok(d),
+            _ => bail!("expected i32 tensor"),
+        }
+    }
+
+    /// Validate against a manifest signature entry.
+    pub fn check(&self, spec: &TensorSpec) -> Result<()> {
+        if self.dtype() != spec.dtype {
+            bail!("buffer {:?}: dtype mismatch (got {:?}, want {:?})", spec.name, self.dtype(), spec.dtype);
+        }
+        if self.shape() != spec.shape.as_slice() {
+            bail!("buffer {:?}: shape mismatch (got {:?}, want {:?})", spec.name, self.shape(), spec.shape);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_check() {
+        let spec = TensorSpec { name: "x".into(), shape: vec![2, 3], dtype: DType::F32 };
+        assert!(HostTensor::f32(vec![0.0; 6], &[2, 3]).check(&spec).is_ok());
+        assert!(HostTensor::f32(vec![0.0; 6], &[3, 2]).check(&spec).is_err());
+        assert!(HostTensor::i32(vec![0; 6], &[2, 3]).check(&spec).is_err());
+    }
+}

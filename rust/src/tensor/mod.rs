@@ -1,0 +1,232 @@
+//! Dense f32 tensor substrate.
+//!
+//! Powers the pure-Rust side of the framework: the CPU-only optimizer
+//! implementations (`optim/`), the synthetic convex workloads for the
+//! theory experiments, and the tests. Deliberately minimal — row-major
+//! `Vec<f32>` + shape — because the heavy model math runs in the AOT
+//! artifacts; this substrate only needs optimizer-update-shaped ops.
+
+pub mod ops;
+
+use std::fmt;
+
+/// Row-major dense f32 tensor.
+#[derive(Clone, PartialEq)]
+pub struct Tensor {
+    data: Vec<f32>,
+    shape: Vec<usize>,
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor{:?}", self.shape)?;
+        if self.data.len() <= 8 {
+            write!(f, " {:?}", self.data)?;
+        }
+        Ok(())
+    }
+}
+
+impl Tensor {
+    pub fn new(data: Vec<f32>, shape: &[usize]) -> Tensor {
+        assert_eq!(
+            data.len(),
+            shape.iter().product::<usize>().max(1),
+            "data/shape mismatch"
+        );
+        Tensor { data, shape: shape.to_vec() }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor { data: vec![0.0; shape.iter().product::<usize>().max(1)], shape: shape.to_vec() }
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> Tensor {
+        Tensor { data: vec![v; shape.iter().product::<usize>().max(1)], shape: shape.to_vec() }
+    }
+
+    pub fn scalar(v: f32) -> Tensor {
+        Tensor { data: vec![v], shape: vec![] }
+    }
+
+    pub fn from_fn(shape: &[usize], mut f: impl FnMut(usize) -> f32) -> Tensor {
+        let n = shape.iter().product::<usize>().max(1);
+        Tensor { data: (0..n).map(|i| f(i)).collect(), shape: shape.to_vec() }
+    }
+
+    // -- accessors ----------------------------------------------------------
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// 2-D accessor.
+    #[inline]
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        debug_assert_eq!(self.rank(), 2);
+        self.data[i * self.shape[1] + j]
+    }
+
+    /// Reshape view (row-major, no copy). The paper's Eq. 12 reshaping
+    /// relies on exactly this being free.
+    pub fn reshape(mut self, shape: &[usize]) -> Tensor {
+        assert_eq!(
+            self.data.len(),
+            shape.iter().product::<usize>().max(1),
+            "reshape element-count mismatch"
+        );
+        self.shape = shape.to_vec();
+        self
+    }
+
+    // -- reductions ----------------------------------------------------------
+
+    pub fn sum(&self) -> f32 {
+        self.data.iter().sum()
+    }
+
+    /// Squared Frobenius norm.
+    pub fn sq_norm(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum()
+    }
+
+    pub fn norm(&self) -> f32 {
+        self.sq_norm().sqrt()
+    }
+
+    /// Max |x| (the paper's ‖·‖∞).
+    pub fn inf_norm(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |a, &x| a.max(x.abs()))
+    }
+
+    pub fn mean(&self) -> f32 {
+        if self.data.is_empty() {
+            0.0
+        } else {
+            self.sum() / self.data.len() as f32
+        }
+    }
+
+    // -- elementwise (in place, allocation-free hot path) --------------------
+
+    pub fn map_inplace(&mut self, f: impl Fn(f32) -> f32) {
+        for x in &mut self.data {
+            *x = f(*x);
+        }
+    }
+
+    /// self = a*self + b*other (axpby; the EMA workhorse).
+    pub fn ema_inplace(&mut self, other: &Tensor, a: f32, b: f32) {
+        assert_eq!(self.shape, other.shape);
+        for (x, &y) in self.data.iter_mut().zip(&other.data) {
+            *x = a * *x + b * y;
+        }
+    }
+
+    /// self += alpha * other.
+    pub fn axpy_inplace(&mut self, other: &Tensor, alpha: f32) {
+        self.ema_inplace(other, 1.0, alpha);
+    }
+
+    pub fn zip_inplace(&mut self, other: &Tensor, f: impl Fn(f32, f32) -> f32) {
+        assert_eq!(self.shape, other.shape);
+        for (x, &y) in self.data.iter_mut().zip(&other.data) {
+            *x = f(*x, y);
+        }
+    }
+
+    // -- elementwise (allocating) ---------------------------------------------
+
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Tensor {
+        Tensor { data: self.data.iter().map(|&x| f(x)).collect(), shape: self.shape.clone() }
+    }
+
+    pub fn zip(&self, other: &Tensor, f: impl Fn(f32, f32) -> f32) -> Tensor {
+        assert_eq!(self.shape, other.shape, "zip shape mismatch");
+        Tensor {
+            data: self.data.iter().zip(&other.data).map(|(&x, &y)| f(x, y)).collect(),
+            shape: self.shape.clone(),
+        }
+    }
+
+    pub fn add(&self, other: &Tensor) -> Tensor {
+        self.zip(other, |a, b| a + b)
+    }
+
+    pub fn sub(&self, other: &Tensor) -> Tensor {
+        self.zip(other, |a, b| a - b)
+    }
+
+    pub fn mul(&self, other: &Tensor) -> Tensor {
+        self.zip(other, |a, b| a * b)
+    }
+
+    pub fn scale(&self, s: f32) -> Tensor {
+        self.map(|x| x * s)
+    }
+
+    pub fn square(&self) -> Tensor {
+        self.map(|x| x * x)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_and_reduce() {
+        let t = Tensor::new(vec![1.0, 2.0, 3.0, 4.0], &[2, 2]);
+        assert_eq!(t.sum(), 10.0);
+        assert_eq!(t.sq_norm(), 30.0);
+        assert_eq!(t.inf_norm(), 4.0);
+        assert_eq!(t.at2(1, 0), 3.0);
+    }
+
+    #[test]
+    fn reshape_is_free_view() {
+        let t = Tensor::new((0..12).map(|i| i as f32).collect(), &[3, 4]);
+        let r = t.clone().reshape(&[2, 6]);
+        assert_eq!(r.data(), t.data());
+        assert_eq!(r.shape(), &[2, 6]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn reshape_bad_count_panics() {
+        Tensor::zeros(&[2, 3]).reshape(&[4, 2]);
+    }
+
+    #[test]
+    fn ema_matches_formula() {
+        let mut m = Tensor::new(vec![1.0, 1.0], &[2]);
+        let g = Tensor::new(vec![3.0, -1.0], &[2]);
+        m.ema_inplace(&g, 0.9, 0.1);
+        assert!((m.data()[0] - 1.2).abs() < 1e-6);
+        assert!((m.data()[1] - 0.8).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,208 @@
+//! Matrix/vector ops used by the pure-Rust optimizer implementations.
+//!
+//! The shapes here are optimizer-update shaped: matrix–vector products
+//! against the squared momentum (`V q`, `Vᵀ p`), outer products, and a
+//! blocked matmul for the synthetic workloads (softmax regression / MLP
+//! in `workloads/`). All row-major, no BLAS (offline build), with a
+//! cache-blocked kernel that is plenty for the experiment sizes.
+
+use super::Tensor;
+
+/// y = A x for A (m, n) row-major, x (n).
+pub fn matvec(a: &Tensor, x: &[f32]) -> Vec<f32> {
+    let (m, n) = mat_dims(a);
+    assert_eq!(x.len(), n, "matvec dim mismatch");
+    let ad = a.data();
+    let mut y = vec![0.0f32; m];
+    for i in 0..m {
+        let row = &ad[i * n..(i + 1) * n];
+        let mut acc = 0.0f32;
+        for j in 0..n {
+            acc += row[j] * x[j];
+        }
+        y[i] = acc;
+    }
+    y
+}
+
+/// y = Aᵀ x for A (m, n) row-major, x (m).
+pub fn matvec_t(a: &Tensor, x: &[f32]) -> Vec<f32> {
+    let (m, n) = mat_dims(a);
+    assert_eq!(x.len(), m, "matvec_t dim mismatch");
+    let ad = a.data();
+    let mut y = vec![0.0f32; n];
+    for i in 0..m {
+        let row = &ad[i * n..(i + 1) * n];
+        let xi = x[i];
+        for j in 0..n {
+            y[j] += row[j] * xi;
+        }
+    }
+    y
+}
+
+/// Rank-one outer product p qᵀ as an (m, n) tensor.
+pub fn outer(p: &[f32], q: &[f32]) -> Tensor {
+    let mut data = Vec::with_capacity(p.len() * q.len());
+    for &pi in p {
+        for &qj in q {
+            data.push(pi * qj);
+        }
+    }
+    Tensor::new(data, &[p.len(), q.len()])
+}
+
+/// C = A B with cache blocking. A (m, k), B (k, n).
+pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, k) = mat_dims(a);
+    let (k2, n) = mat_dims(b);
+    assert_eq!(k, k2, "matmul inner dim mismatch");
+    let (ad, bd) = (a.data(), b.data());
+    let mut c = vec![0.0f32; m * n];
+    const BK: usize = 64;
+    for k0 in (0..k).step_by(BK) {
+        let k1 = (k0 + BK).min(k);
+        for i in 0..m {
+            let crow = &mut c[i * n..(i + 1) * n];
+            for kk in k0..k1 {
+                let aik = ad[i * k + kk];
+                if aik == 0.0 {
+                    continue;
+                }
+                let brow = &bd[kk * n..(kk + 1) * n];
+                for j in 0..n {
+                    crow[j] += aik * brow[j];
+                }
+            }
+        }
+    }
+    Tensor::new(c, &[m, n])
+}
+
+/// C = Aᵀ B. A (m, k), B (m, n) → (k, n). (Gradient helper.)
+pub fn matmul_tn(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, k) = mat_dims(a);
+    let (m2, n) = mat_dims(b);
+    assert_eq!(m, m2, "matmul_tn dim mismatch");
+    let (ad, bd) = (a.data(), b.data());
+    let mut c = vec![0.0f32; k * n];
+    for i in 0..m {
+        let arow = &ad[i * k..(i + 1) * k];
+        let brow = &bd[i * n..(i + 1) * n];
+        for kk in 0..k {
+            let aik = arow[kk];
+            if aik == 0.0 {
+                continue;
+            }
+            let crow = &mut c[kk * n..(kk + 1) * n];
+            for j in 0..n {
+                crow[j] += aik * brow[j];
+            }
+        }
+    }
+    Tensor::new(c, &[k, n])
+}
+
+/// C = A Bᵀ. A (m, k), B (n, k) → (m, n). (Gradient helper.)
+pub fn matmul_nt(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, k) = mat_dims(a);
+    let (n, k2) = mat_dims(b);
+    assert_eq!(k, k2, "matmul_nt dim mismatch");
+    let (ad, bd) = (a.data(), b.data());
+    let mut c = vec![0.0f32; m * n];
+    for i in 0..m {
+        let arow = &ad[i * k..(i + 1) * k];
+        for j in 0..n {
+            let brow = &bd[j * k..(j + 1) * k];
+            let mut acc = 0.0f32;
+            for kk in 0..k {
+                acc += arow[kk] * brow[kk];
+            }
+            c[i * n + j] = acc;
+        }
+    }
+    Tensor::new(c, &[m, n])
+}
+
+/// Row-wise softmax in place on an (m, n) tensor (numerically stable).
+pub fn softmax_rows(t: &mut Tensor) {
+    let (m, n) = mat_dims(t);
+    let data = t.data_mut();
+    for i in 0..m {
+        let row = &mut data[i * n..(i + 1) * n];
+        let mx = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+        let mut z = 0.0f32;
+        for x in row.iter_mut() {
+            *x = (*x - mx).exp();
+            z += *x;
+        }
+        for x in row.iter_mut() {
+            *x /= z;
+        }
+    }
+}
+
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+fn mat_dims(t: &Tensor) -> (usize, usize) {
+    assert_eq!(t.rank(), 2, "expected a matrix, got rank {}", t.rank());
+    (t.shape()[0], t.shape()[1])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(data: &[f32], shape: &[usize]) -> Tensor {
+        Tensor::new(data.to_vec(), shape)
+    }
+
+    #[test]
+    fn matvec_known() {
+        let a = t(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]);
+        assert_eq!(matvec(&a, &[1.0, 0.0, -1.0]), vec![-2.0, -2.0]);
+        assert_eq!(matvec_t(&a, &[1.0, -1.0]), vec![-3.0, -3.0, -3.0]);
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = t(&[1.0, 2.0, 3.0, 4.0], &[2, 2]);
+        let b = t(&[1.0, 1.0, 1.0, 1.0], &[2, 2]);
+        assert_eq!(matmul(&a, &b).data(), &[3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn transposed_variants_agree() {
+        let a = t(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]);
+        let b = t(&[1.0, -1.0, 0.5, 2.0, 0.0, 1.0], &[2, 3]);
+        // Aᵀ B directly vs via explicit transpose through matmul
+        let at = t(&[1.0, 4.0, 2.0, 5.0, 3.0, 6.0], &[3, 2]);
+        assert_eq!(matmul_tn(&a, &b).data(), matmul(&at, &b).data());
+        // A Bᵀ
+        let bt = t(&[1.0, 2.0, -1.0, 0.0, 0.5, 1.0], &[3, 2]);
+        let nt = matmul_nt(&a, &b);
+        let direct = matmul(&a, &bt);
+        for (x, y) in nt.data().iter().zip(direct.data()) {
+            assert!((x - y).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn outer_known() {
+        let o = outer(&[1.0, 2.0], &[3.0, 4.0]);
+        assert_eq!(o.data(), &[3.0, 4.0, 6.0, 8.0]);
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let mut a = t(&[1.0, 2.0, 3.0, -1.0, 0.0, 1.0], &[2, 3]);
+        softmax_rows(&mut a);
+        for i in 0..2 {
+            let s: f32 = (0..3).map(|j| a.at2(i, j)).sum();
+            assert!((s - 1.0).abs() < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,84 @@
+//! Checkpointing: packed params + optimizer state + step counter.
+//!
+//! Format: a one-line JSON header (artifact name, element counts, step)
+//! followed by the raw little-endian f32 params and opt-state vectors.
+//! The flat-packed artifact signature makes this trivially portable —
+//! a checkpoint written by any run restores into any session compiled
+//! from the same artifact.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::TrainSession;
+use crate::util::Json;
+
+/// Save a session's full training state.
+pub fn save<P: AsRef<Path>>(path: P, sess: &TrainSession) -> Result<()> {
+    if let Some(dir) = path.as_ref().parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut header = BTreeMap::new();
+    header.insert("artifact".to_string(), Json::Str(sess.name().to_string()));
+    header.insert("t".to_string(), Json::Num(sess.t as f64));
+    header.insert("param_elems".to_string(), Json::Num(sess.params.len() as f64));
+    header.insert("state_elems".to_string(), Json::Num(sess.opt_state.len() as f64));
+    let mut f = std::io::BufWriter::new(std::fs::File::create(&path)?);
+    writeln!(f, "{}", Json::Obj(header).to_string_compact())?;
+    write_f32s(&mut f, &sess.params)?;
+    write_f32s(&mut f, &sess.opt_state)?;
+    Ok(())
+}
+
+/// Restore into an existing session (artifact names must match).
+pub fn load<P: AsRef<Path>>(path: P, sess: &mut TrainSession) -> Result<()> {
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(&path).with_context(|| format!("checkpoint {:?}", path.as_ref()))?,
+    );
+    let mut header_line = Vec::new();
+    loop {
+        let mut b = [0u8; 1];
+        f.read_exact(&mut b)?;
+        if b[0] == b'\n' {
+            break;
+        }
+        header_line.push(b[0]);
+    }
+    let header = Json::parse(std::str::from_utf8(&header_line)?)
+        .map_err(|e| anyhow::anyhow!("checkpoint header: {e}"))?;
+    let artifact = header.req("artifact")?.as_str().unwrap_or_default();
+    if artifact != sess.name() {
+        bail!("checkpoint is for {artifact:?}, session runs {:?}", sess.name());
+    }
+    let p = header.req("param_elems")?.as_usize().unwrap_or(0);
+    let s = header.req("state_elems")?.as_usize().unwrap_or(0);
+    if p != sess.params.len() || s != sess.opt_state.len() {
+        bail!("checkpoint sizes ({p}, {s}) mismatch session ({}, {})",
+              sess.params.len(), sess.opt_state.len());
+    }
+    sess.params = read_f32s(&mut f, p)?;
+    sess.opt_state = read_f32s(&mut f, s)?;
+    sess.t = header.req("t")?.as_f64().unwrap_or(0.0) as i32;
+    Ok(())
+}
+
+fn write_f32s<W: Write>(w: &mut W, xs: &[f32]) -> Result<()> {
+    // chunked to keep the writer buffered without a giant intermediate
+    let mut buf = Vec::with_capacity(8192 * 4);
+    for chunk in xs.chunks(8192) {
+        buf.clear();
+        for &x in chunk {
+            buf.extend_from_slice(&x.to_le_bytes());
+        }
+        w.write_all(&buf)?;
+    }
+    Ok(())
+}
+
+fn read_f32s<R: Read>(r: &mut R, n: usize) -> Result<Vec<f32>> {
+    let mut bytes = vec![0u8; n * 4];
+    r.read_exact(&mut bytes)?;
+    Ok(bytes.chunks_exact(4).map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]])).collect())
+}

@@ -1,0 +1,102 @@
+//! Greedy decoding for the translation BLEU evaluation (Table II).
+//!
+//! The `logits_lm_*` artifact returns full-sequence logits; the decoder
+//! feeds `[src ; SEP ; generated…]`, takes the argmax at the frontier
+//! position, appends, and repeats — batched across the eval set. Slow
+//! (O(L) artifact calls per sentence batch) but faithful: generation
+//! quality is what BLEU measures.
+
+use anyhow::Result;
+
+use crate::data::translation::MtDataset;
+use crate::data::PAD_ID;
+use crate::runtime::executor::LogitsSession;
+
+/// Greedy-decode up to `max_new` tokens for a batch of prompts.
+///
+/// `starts[i]` is the first generation position of row i (just after
+/// SEP). Generation stops per-row on PAD or when the sequence fills.
+pub fn greedy_decode(
+    logits: &LogitsSession,
+    params: &[f32],
+    prompts: &[Vec<i32>],
+    starts: &[usize],
+    max_new: usize,
+) -> Result<Vec<Vec<i32>>> {
+    assert_eq!(prompts.len(), logits.batch);
+    let (b, l, v) = (logits.batch, logits.seq, logits.vocab);
+    let mut tokens: Vec<i32> = Vec::with_capacity(b * l);
+    for p in prompts {
+        assert_eq!(p.len(), l);
+        tokens.extend_from_slice(p);
+    }
+    let mut frontier: Vec<usize> = starts.to_vec();
+    let mut done = vec![false; b];
+
+    for _ in 0..max_new {
+        if done.iter().all(|&d| d) {
+            break;
+        }
+        let all = logits.run(params, &tokens)?;
+        for i in 0..b {
+            if done[i] || frontier[i] >= l {
+                done[i] = true;
+                continue;
+            }
+            // next-token logits live at the position *before* the frontier
+            let pos = frontier[i] - 1;
+            let row = &all[(i * l + pos) * v..(i * l + pos + 1) * v];
+            let mut best = 0usize;
+            let mut best_v = f32::NEG_INFINITY;
+            // PAD acts as EOS; SEP excluded from generation
+            for (tok, &score) in row.iter().enumerate().skip(2) {
+                if score > best_v {
+                    best_v = score;
+                    best = tok;
+                }
+            }
+            let pad_score = row[PAD_ID as usize];
+            if pad_score > best_v {
+                done[i] = true;
+                continue;
+            }
+            tokens[i * l + frontier[i]] = best as i32;
+            frontier[i] += 1;
+        }
+    }
+
+    Ok((0..b)
+        .map(|i| tokens[i * l + starts[i]..i * l + frontier[i]].to_vec())
+        .collect())
+}
+
+/// Decode a whole test set and return (hypotheses, references).
+pub fn decode_test_set(
+    logits: &LogitsSession,
+    params: &[f32],
+    ds: &MtDataset,
+    limit: usize,
+) -> Result<(Vec<Vec<i32>>, Vec<Vec<i32>>)> {
+    let b = logits.batch;
+    let mut hyps = Vec::new();
+    let mut refs = Vec::new();
+    let n = ds.test.len().min(limit);
+    let mut i = 0;
+    while i + b <= n {
+        let chunk = &ds.test[i..i + b];
+        let mut prompts = Vec::with_capacity(b);
+        let mut starts = Vec::with_capacity(b);
+        let mut max_ref = 0usize;
+        for ex in chunk {
+            let (p, s) = ds.prompt(ex);
+            prompts.push(p);
+            starts.push(s);
+            max_ref = max_ref.max(ex.1.len());
+        }
+        let out = greedy_decode(logits, params, &prompts, &starts, max_ref + 4)?;
+        hyps.extend(out);
+        refs.extend(chunk.iter().map(|ex| ex.1.clone()));
+        i += b;
+    }
+    Ok((hyps, refs))
+}

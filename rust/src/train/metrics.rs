@@ -1,0 +1,200 @@
+//! Evaluation metrics: the exact set the paper reports.
+//!
+//! Table I: accuracy, F1 (MRPC/QQP), Matthews correlation (CoLA).
+//! Table II: corpus BLEU (sacreBLEU-style BLEU-4 with brevity penalty).
+//! Table III: perplexity. Fig. 2-4: cumulative average of training loss.
+
+use std::collections::HashMap;
+
+/// Binary/multiclass accuracy.
+pub fn accuracy(preds: &[i32], labels: &[i32]) -> f64 {
+    assert_eq!(preds.len(), labels.len());
+    if preds.is_empty() {
+        return 0.0;
+    }
+    let hit = preds.iter().zip(labels).filter(|(p, l)| p == l).count();
+    hit as f64 / preds.len() as f64
+}
+
+/// F1 of the positive class (label 1), as GLUE reports for MRPC/QQP.
+pub fn f1_binary(preds: &[i32], labels: &[i32]) -> f64 {
+    assert_eq!(preds.len(), labels.len());
+    let (mut tp, mut fp, mut fn_) = (0f64, 0f64, 0f64);
+    for (&p, &l) in preds.iter().zip(labels) {
+        match (p == 1, l == 1) {
+            (true, true) => tp += 1.0,
+            (true, false) => fp += 1.0,
+            (false, true) => fn_ += 1.0,
+            _ => {}
+        }
+    }
+    if tp == 0.0 {
+        return 0.0;
+    }
+    let precision = tp / (tp + fp);
+    let recall = tp / (tp + fn_);
+    2.0 * precision * recall / (precision + recall)
+}
+
+/// Matthews correlation coefficient (CoLA's metric).
+pub fn matthews_corr(preds: &[i32], labels: &[i32]) -> f64 {
+    assert_eq!(preds.len(), labels.len());
+    let (mut tp, mut tn, mut fp, mut fn_) = (0f64, 0f64, 0f64, 0f64);
+    for (&p, &l) in preds.iter().zip(labels) {
+        match (p == 1, l == 1) {
+            (true, true) => tp += 1.0,
+            (false, false) => tn += 1.0,
+            (true, false) => fp += 1.0,
+            (false, true) => fn_ += 1.0,
+        }
+    }
+    let denom = ((tp + fp) * (tp + fn_) * (tn + fp) * (tn + fn_)).sqrt();
+    if denom == 0.0 {
+        0.0
+    } else {
+        (tp * tn - fp * fn_) / denom
+    }
+}
+
+/// Perplexity from summed NLL (nats) and token count.
+pub fn perplexity(sum_nll: f64, count: f64) -> f64 {
+    if count <= 0.0 {
+        f64::INFINITY
+    } else {
+        (sum_nll / count).exp()
+    }
+}
+
+/// Corpus BLEU-4 with brevity penalty over token-id sequences
+/// (sacreBLEU's definition, add-0 counting with the standard smooth of
+/// clipped counts; references are single).
+pub fn bleu(hypotheses: &[Vec<i32>], references: &[Vec<i32>]) -> f64 {
+    assert_eq!(hypotheses.len(), references.len());
+    let max_n = 4;
+    let mut match_n = [0f64; 4];
+    let mut total_n = [0f64; 4];
+    let (mut hyp_len, mut ref_len) = (0f64, 0f64);
+    for (hyp, r) in hypotheses.iter().zip(references) {
+        hyp_len += hyp.len() as f64;
+        ref_len += r.len() as f64;
+        for n in 1..=max_n {
+            if hyp.len() < n {
+                continue;
+            }
+            let mut ref_counts: HashMap<&[i32], usize> = HashMap::new();
+            if r.len() >= n {
+                for w in r.windows(n) {
+                    *ref_counts.entry(w).or_insert(0) += 1;
+                }
+            }
+            let mut hyp_counts: HashMap<&[i32], usize> = HashMap::new();
+            for w in hyp.windows(n) {
+                *hyp_counts.entry(w).or_insert(0) += 1;
+            }
+            for (w, c) in hyp_counts {
+                let clip = ref_counts.get(w).copied().unwrap_or(0);
+                match_n[n - 1] += c.min(clip) as f64;
+            }
+            total_n[n - 1] += (hyp.len() - n + 1) as f64;
+        }
+    }
+    // geometric mean of n-gram precisions (0 precision ⇒ BLEU 0)
+    let mut log_sum = 0.0;
+    for n in 0..max_n {
+        if total_n[n] == 0.0 || match_n[n] == 0.0 {
+            return 0.0;
+        }
+        log_sum += (match_n[n] / total_n[n]).ln();
+    }
+    let gm = (log_sum / max_n as f64).exp();
+    let bp = if hyp_len >= ref_len { 1.0 } else { (1.0 - ref_len / hyp_len).exp() };
+    100.0 * gm * bp
+}
+
+/// Streaming cumulative average — Fig. 2/3/4's y-axis.
+#[derive(Clone, Debug, Default)]
+pub struct CumAvg {
+    sum: f64,
+    n: usize,
+}
+
+impl CumAvg {
+    pub fn push(&mut self, x: f64) -> f64 {
+        self.sum += x;
+        self.n += 1;
+        self.value()
+    }
+
+    pub fn value(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+
+    pub fn count(&self) -> usize {
+        self.n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_basics() {
+        assert_eq!(accuracy(&[1, 0, 1], &[1, 1, 1]), 2.0 / 3.0);
+        assert_eq!(accuracy(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn f1_perfect_and_degenerate() {
+        assert_eq!(f1_binary(&[1, 1, 0], &[1, 1, 0]), 1.0);
+        assert_eq!(f1_binary(&[0, 0, 0], &[1, 1, 1]), 0.0);
+    }
+
+    #[test]
+    fn mcc_range_and_sign() {
+        assert!((matthews_corr(&[1, 0, 1, 0], &[1, 0, 1, 0]) - 1.0).abs() < 1e-12);
+        assert!((matthews_corr(&[0, 1, 0, 1], &[1, 0, 1, 0]) + 1.0).abs() < 1e-12);
+        assert_eq!(matthews_corr(&[1, 1, 1, 1], &[1, 0, 1, 0]), 0.0);
+    }
+
+    #[test]
+    fn bleu_identity_is_100() {
+        let refs = vec![vec![5, 6, 7, 8, 9], vec![10, 11, 12, 13, 14, 15]];
+        let b = bleu(&refs, &refs);
+        assert!((b - 100.0).abs() < 1e-9, "{b}");
+    }
+
+    #[test]
+    fn bleu_penalises_short_hyps() {
+        let refs = vec![vec![5, 6, 7, 8, 9, 10, 11, 12]];
+        let hyps = vec![vec![5, 6, 7, 8]];
+        let b = bleu(&hyps, &refs);
+        assert!(b > 0.0 && b < 50.0, "{b}");
+    }
+
+    #[test]
+    fn bleu_zero_on_disjoint() {
+        let refs = vec![vec![1, 2, 3, 4, 5]];
+        let hyps = vec![vec![9, 9, 9, 9, 9]];
+        assert_eq!(bleu(&hyps, &refs), 0.0);
+    }
+
+    #[test]
+    fn perplexity_of_uniform() {
+        let v = 256f64;
+        assert!((perplexity(v.ln() * 100.0, 100.0) - v).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cumavg_is_running_mean() {
+        let mut c = CumAvg::default();
+        c.push(1.0);
+        c.push(3.0);
+        assert_eq!(c.value(), 2.0);
+        assert_eq!(c.count(), 2);
+    }
+}

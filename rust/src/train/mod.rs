@@ -1,0 +1,10 @@
+//! Training framework: trainer loop, metrics, memory model, checkpoints.
+
+pub mod checkpoint;
+pub mod decode;
+pub mod memory;
+pub mod metrics;
+pub mod trainer;
+
+pub use metrics::CumAvg;
+pub use trainer::{TaskData, TrainOutcome, Trainer};

@@ -1,0 +1,138 @@
+//! The trainer: drives a `TrainSession` over a task's data stream.
+//!
+//! Owns exactly what the paper's per-run loop owns: the step-size
+//! schedule, epoch shuffling, the cumulative-average loss trace (the
+//! y-axis of Figs. 2-4), and periodic evaluation. Everything else
+//! (sweeps over tasks × optimizers × lrs × seeds) belongs to the
+//! coordinator.
+
+use anyhow::Result;
+
+use crate::data::{Batcher, ClsDataset, MarkovCorpus, MtDataset};
+use crate::optim::Schedule;
+use crate::runtime::executor::BatchExtra;
+use crate::runtime::TrainSession;
+use crate::train::metrics::CumAvg;
+use crate::util::log;
+
+/// One task's training stream (batching included).
+pub enum TaskData {
+    Lm { corpus: MarkovCorpus, order: Vec<usize>, batcher: Batcher },
+    Cls { ds: ClsDataset, batcher: Batcher },
+    Mt { ds: MtDataset, batcher: Batcher },
+}
+
+impl TaskData {
+    pub fn lm(corpus: MarkovCorpus, batch: usize, seq: usize, seed: u64) -> TaskData {
+        let n_seqs = corpus.train.len() / seq;
+        let batcher = Batcher::new(n_seqs.max(1), batch, seed);
+        let order: Vec<usize> = (0..n_seqs).collect();
+        TaskData::Lm { corpus, order, batcher }
+    }
+
+    pub fn cls(ds: ClsDataset, batch: usize, seed: u64) -> TaskData {
+        let batcher = Batcher::new(ds.train.len(), batch, seed);
+        TaskData::Cls { ds, batcher }
+    }
+
+    pub fn mt(ds: MtDataset, batch: usize, seed: u64) -> TaskData {
+        let batcher = Batcher::new(ds.train.len(), batch, seed);
+        TaskData::Mt { ds, batcher }
+    }
+
+    pub fn steps_per_epoch(&self) -> usize {
+        match self {
+            TaskData::Lm { batcher, .. }
+            | TaskData::Cls { batcher, .. }
+            | TaskData::Mt { batcher, .. } => batcher.steps_per_epoch(),
+        }
+    }
+
+    /// Next (tokens, extra) batch at the session's (batch, seq) geometry.
+    pub fn next(&mut self, seq: usize) -> (Vec<i32>, BatchExtra) {
+        match self {
+            TaskData::Lm { corpus, batcher, .. } => {
+                let (_, idx) = batcher.next();
+                let mut toks = Vec::with_capacity(idx.len() * seq);
+                for s in idx {
+                    let start = s * seq;
+                    toks.extend_from_slice(&corpus.train[start..start + seq]);
+                }
+                (toks, BatchExtra::None)
+            }
+            TaskData::Cls { ds, batcher } => {
+                let (_, idx) = batcher.next();
+                let mut toks = Vec::with_capacity(idx.len() * seq);
+                let mut labels = Vec::with_capacity(idx.len());
+                for i in idx {
+                    let (t, l) = &ds.train[i];
+                    toks.extend_from_slice(t);
+                    labels.push(*l);
+                }
+                (toks, BatchExtra::Labels(labels))
+            }
+            TaskData::Mt { ds, batcher } => {
+                let (_, idx) = batcher.next();
+                let mut toks = Vec::with_capacity(idx.len() * seq);
+                let mut mask = Vec::with_capacity(idx.len() * seq);
+                for i in idx {
+                    let (t, m) = ds.pack(&ds.train[i]);
+                    toks.extend(t);
+                    mask.extend(m);
+                }
+                (toks, BatchExtra::LossMask(mask))
+            }
+        }
+    }
+}
+
+/// Result of a training run.
+#[derive(Clone, Debug, Default)]
+pub struct TrainOutcome {
+    /// (step, raw loss, cumulative-average loss) sampled every `record_every`.
+    pub curve: Vec<(usize, f64, f64)>,
+    pub final_cum_loss: f64,
+    pub steps: usize,
+    pub wall_secs: f64,
+    /// Mean per-step wall time over the measured window (Table IV).
+    pub secs_per_step: f64,
+}
+
+/// Trainer: session + data + schedule.
+pub struct Trainer {
+    pub sess: TrainSession,
+    pub data: TaskData,
+    pub schedule: Schedule,
+    pub record_every: usize,
+}
+
+impl Trainer {
+    pub fn new(sess: TrainSession, data: TaskData, schedule: Schedule) -> Trainer {
+        Trainer { sess, data, schedule, record_every: 1 }
+    }
+
+    /// Run `steps` updates; returns the loss curve and timing.
+    pub fn run(&mut self, steps: usize) -> Result<TrainOutcome> {
+        let mut cum = CumAvg::default();
+        let mut out = TrainOutcome::default();
+        let t0 = std::time::Instant::now();
+        for step in 0..steps {
+            let (tokens, extra) = self.data.next(self.sess.seq);
+            let lr = self.schedule.at(step);
+            let loss = self.sess.step(&tokens, &extra, lr)? as f64;
+            let avg = cum.push(loss);
+            if step % self.record_every == 0 || step + 1 == steps {
+                out.curve.push((step, loss, avg));
+            }
+            if !loss.is_finite() {
+                log::warn(&format!("{}: non-finite loss at step {step}", self.sess.name()));
+                break;
+            }
+        }
+        out.wall_secs = t0.elapsed().as_secs_f64();
+        out.steps = cum.count();
+        out.secs_per_step = out.wall_secs / out.steps.max(1) as f64;
+        out.final_cum_loss = cum.value();
+        Ok(out)
+    }
+}

@@ -1,0 +1,117 @@
+//! CSV writer/reader for experiment results.
+//!
+//! Every figure/table driver emits its series as CSV under `results/`,
+//! one file per paper artifact, so plots regenerate from plain files and
+//! EXPERIMENTS.md can quote rows directly.
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+/// Buffered CSV writer with a fixed header.
+pub struct CsvWriter {
+    out: BufWriter<File>,
+    cols: usize,
+}
+
+impl CsvWriter {
+    pub fn create<P: AsRef<Path>>(path: P, header: &[&str]) -> std::io::Result<CsvWriter> {
+        if let Some(dir) = path.as_ref().parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut out = BufWriter::new(File::create(path)?);
+        writeln!(out, "{}", header.join(","))?;
+        Ok(CsvWriter { out, cols: header.len() })
+    }
+
+    /// Write one row; panics if the column count mismatches the header
+    /// (a bug in the experiment driver, not a runtime condition).
+    pub fn row(&mut self, fields: &[String]) -> std::io::Result<()> {
+        assert_eq!(fields.len(), self.cols, "csv row arity mismatch");
+        writeln!(self.out, "{}", fields.iter().map(|f| escape(f)).collect::<Vec<_>>().join(","))
+    }
+
+    pub fn flush(&mut self) -> std::io::Result<()> {
+        self.out.flush()
+    }
+}
+
+fn escape(f: &str) -> String {
+    if f.contains(',') || f.contains('"') || f.contains('\n') {
+        format!("\"{}\"", f.replace('"', "\"\""))
+    } else {
+        f.to_string()
+    }
+}
+
+/// Convenience macro-free row builder.
+pub fn row(fields: &[&dyn std::fmt::Display]) -> Vec<String> {
+    fields.iter().map(|f| f.to_string()).collect()
+}
+
+/// Parse a small CSV file back (used by tests and the report generator).
+pub fn read<P: AsRef<Path>>(path: P) -> std::io::Result<(Vec<String>, Vec<Vec<String>>)> {
+    let text = std::fs::read_to_string(path)?;
+    let mut lines = text.lines();
+    let header = lines
+        .next()
+        .map(|h| h.split(',').map(|s| s.to_string()).collect())
+        .unwrap_or_default();
+    let rows = lines.map(parse_line).collect();
+    Ok((header, rows))
+}
+
+fn parse_line(line: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut field = String::new();
+    let mut chars = line.chars().peekable();
+    let mut quoted = false;
+    while let Some(c) = chars.next() {
+        match (quoted, c) {
+            (false, ',') => {
+                out.push(std::mem::take(&mut field));
+            }
+            (false, '"') if field.is_empty() => quoted = true,
+            (true, '"') => {
+                if chars.peek() == Some(&'"') {
+                    chars.next();
+                    field.push('"');
+                } else {
+                    quoted = false;
+                }
+            }
+            (_, c) => field.push(c),
+        }
+    }
+    out.push(field);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn write_and_read_back() {
+        let dir = std::env::temp_dir().join("alada_csv_test");
+        let path = dir.join("t.csv");
+        let mut w = CsvWriter::create(&path, &["a", "b"]).unwrap();
+        w.row(&row(&[&1, &"x,y"])).unwrap();
+        w.row(&row(&[&2.5, &"q\"uote"])).unwrap();
+        w.flush().unwrap();
+        let (header, rows) = read(&path).unwrap();
+        assert_eq!(header, vec!["a", "b"]);
+        assert_eq!(rows[0], vec!["1", "x,y"]);
+        assert_eq!(rows[1], vec!["2.5", "q\"uote"]);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_mismatch_panics() {
+        let dir = std::env::temp_dir().join("alada_csv_test2");
+        let path = dir.join("t.csv");
+        let mut w = CsvWriter::create(&path, &["a", "b"]).unwrap();
+        w.row(&row(&[&1])).unwrap();
+    }
+}

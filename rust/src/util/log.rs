@@ -1,0 +1,81 @@
+//! Tiny leveled logger with wall-clock offsets.
+//!
+//! A single global level (set once by the CLI from `--log-level` or the
+//! `ALADA_LOG` env var), macro-free call sites, and timestamps relative to
+//! process start so training logs read like a progress trace.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::Instant;
+
+#[derive(Clone, Copy, PartialEq, PartialOrd, Debug)]
+pub enum Level {
+    Debug = 0,
+    Info = 1,
+    Warn = 2,
+    Error = 3,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(1);
+
+static START: std::sync::OnceLock<Instant> = std::sync::OnceLock::new();
+
+pub fn set_level(level: Level) {
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+pub fn level_from_env() {
+    if let Ok(v) = std::env::var("ALADA_LOG") {
+        set_level(match v.as_str() {
+            "debug" => Level::Debug,
+            "warn" => Level::Warn,
+            "error" => Level::Error,
+            _ => Level::Info,
+        });
+    }
+}
+
+fn enabled(level: Level) -> bool {
+    level as u8 >= LEVEL.load(Ordering::Relaxed)
+}
+
+fn emit(tag: &str, msg: &str) {
+    let start = START.get_or_init(Instant::now);
+    let dt = start.elapsed().as_secs_f64();
+    eprintln!("[{dt:9.3}s {tag}] {msg}");
+}
+
+pub fn debug(msg: &str) {
+    if enabled(Level::Debug) {
+        emit("DBG", msg);
+    }
+}
+
+pub fn info(msg: &str) {
+    if enabled(Level::Info) {
+        emit("INF", msg);
+    }
+}
+
+pub fn warn(msg: &str) {
+    if enabled(Level::Warn) {
+        emit("WRN", msg);
+    }
+}
+
+pub fn error(msg: &str) {
+    if enabled(Level::Error) {
+        emit("ERR", msg);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_ordering() {
+        assert!(Level::Debug < Level::Info);
+        assert!(Level::Info < Level::Warn);
+        assert!(Level::Warn < Level::Error);
+    }
+}

@@ -1,0 +1,14 @@
+//! Small self-contained substrates: RNG, logging, JSON, CSV, timing.
+//!
+//! Everything here is hand-rolled because the build is fully offline —
+//! the vendored registry has no rand/serde/clap/criterion. Each module
+//! implements exactly the subset the framework needs, with tests.
+
+pub mod csv;
+pub mod json;
+pub mod log;
+pub mod rng;
+pub mod timing;
+
+pub use json::Json;
+pub use rng::Rng;

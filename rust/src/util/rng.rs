@@ -1,0 +1,226 @@
+//! PCG32-based pseudo-random number generator.
+//!
+//! Hand-rolled because the build is fully offline (no `rand` crate in the
+//! registry cache). PCG32 (O'Neill 2014) is small, fast, statistically
+//! solid for simulation workloads, and — crucially for the experiment
+//! harness — *deterministic across platforms*, so every figure/table in
+//! EXPERIMENTS.md regenerates bit-identically from a seed.
+
+/// PCG32 generator (XSH-RR variant, 64-bit state, 64-bit stream).
+#[derive(Clone, Debug)]
+pub struct Rng {
+    state: u64,
+    inc: u64,
+}
+
+const PCG_MULT: u64 = 6364136223846793005;
+
+impl Rng {
+    /// Create a generator from a seed and stream id.
+    pub fn with_stream(seed: u64, stream: u64) -> Self {
+        let mut rng = Rng { state: 0, inc: (stream << 1) | 1 };
+        rng.next_u32();
+        rng.state = rng.state.wrapping_add(seed);
+        rng.next_u32();
+        rng
+    }
+
+    /// Create a generator from a seed (stream 0).
+    pub fn new(seed: u64) -> Self {
+        Self::with_stream(seed, 0xda3e39cb94b95bdb)
+    }
+
+    /// Derive an independent child generator (used to give each worker /
+    /// task / repetition its own stream without correlation).
+    pub fn fork(&mut self, tag: u64) -> Rng {
+        let seed = self.next_u64() ^ tag.wrapping_mul(0x9e3779b97f4a7c15);
+        Rng::with_stream(seed, tag.wrapping_add(1))
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn f32(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 * (1.0 / (1u32 << 24) as f32)
+    }
+
+    /// Uniform in [0, 1) with f64 precision.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn range_f32(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.f32()
+    }
+
+    /// Uniform integer in [0, n). Uses Lemire's rejection method to avoid
+    /// modulo bias.
+    #[inline]
+    pub fn below(&mut self, n: u32) -> u32 {
+        debug_assert!(n > 0);
+        let mut x = self.next_u32();
+        let mut m = (x as u64) * (n as u64);
+        let mut l = m as u32;
+        if l < n {
+            let t = n.wrapping_neg() % n;
+            while l < t {
+                x = self.next_u32();
+                m = (x as u64) * (n as u64);
+                l = m as u32;
+            }
+        }
+        (m >> 32) as u32
+    }
+
+    /// Uniform usize in [0, n).
+    #[inline]
+    pub fn below_usize(&mut self, n: usize) -> usize {
+        self.below(n as u32) as usize
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn normal(&mut self) -> f32 {
+        loop {
+            let u1 = self.f32();
+            if u1 > 1e-9 {
+                let u2 = self.f32();
+                let r = (-2.0 * u1.ln()).sqrt();
+                return r * (2.0 * std::f32::consts::PI * u2).cos();
+            }
+        }
+    }
+
+    /// Normal with given mean/std.
+    #[inline]
+    pub fn normal_ms(&mut self, mean: f32, std: f32) -> f32 {
+        mean + std * self.normal()
+    }
+
+    /// Fill a slice with N(0, std²) samples.
+    pub fn fill_normal(&mut self, out: &mut [f32], std: f32) {
+        for v in out.iter_mut() {
+            *v = self.normal() * std;
+        }
+    }
+
+    /// Sample an index from unnormalised non-negative weights.
+    pub fn categorical(&mut self, weights: &[f32]) -> usize {
+        let total: f32 = weights.iter().sum();
+        let mut u = self.f32() * total;
+        for (i, &w) in weights.iter().enumerate() {
+            u -= w;
+            if u <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below((i + 1) as u32) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Random boolean with probability `p` of `true`.
+    #[inline]
+    pub fn bernoulli(&mut self, p: f32) -> bool {
+        self.f32() < p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_seed() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u32(), b.next_u32());
+        }
+    }
+
+    #[test]
+    fn seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        let same = (0..32).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same < 4);
+    }
+
+    #[test]
+    fn f32_in_unit_interval() {
+        let mut r = Rng::new(7);
+        for _ in 0..1000 {
+            let x = r.f32();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn below_is_unbiased_enough() {
+        let mut r = Rng::new(9);
+        let mut counts = [0usize; 10];
+        for _ in 0..100_000 {
+            counts[r.below(10) as usize] += 1;
+        }
+        for &c in &counts {
+            assert!((8_000..12_000).contains(&c), "count {c}");
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(11);
+        let n = 200_000;
+        let (mut s, mut s2) = (0f64, 0f64);
+        for _ in 0..n {
+            let x = r.normal() as f64;
+            s += x;
+            s2 += x * x;
+        }
+        let mean = s / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.03, "var {var}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(13);
+        let mut xs: Vec<u32> = (0..50).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn fork_streams_independent() {
+        let mut root = Rng::new(5);
+        let mut a = root.fork(1);
+        let mut b = root.fork(2);
+        let same = (0..32).filter(|_| a.next_u32() == b.next_u32()).count();
+        assert!(same < 4);
+    }
+}

@@ -1,0 +1,130 @@
+//! Benchmark timing harness (criterion is unavailable offline).
+//!
+//! `bench()` runs warmup iterations, then timed samples, and reports
+//! median / MAD / mean / min so the `cargo bench` targets print stable,
+//! comparable numbers. Used by rust/benches/*.rs (harness = false).
+
+use std::time::Instant;
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    pub name: String,
+    pub samples: usize,
+    pub median_ns: f64,
+    pub mad_ns: f64,
+    pub mean_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchStats {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} median {:>12}  mad {:>10}  mean {:>12}  min {:>12}  ({} samples)",
+            self.name,
+            fmt_ns(self.median_ns),
+            fmt_ns(self.mad_ns),
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.min_ns),
+            self.samples
+        )
+    }
+
+    pub fn median_secs(&self) -> f64 {
+        self.median_ns / 1e9
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.3} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Time `f` with `warmup` unmeasured runs and `samples` measured runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, samples: usize, mut f: F) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times: Vec<f64> = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_nanos() as f64);
+    }
+    stats_from(name, times)
+}
+
+/// Adaptive variant: keeps sampling until `budget_secs` elapses (min 5 runs).
+pub fn bench_for<F: FnMut()>(name: &str, budget_secs: f64, mut f: F) -> BenchStats {
+    f(); // warmup
+    let start = Instant::now();
+    let mut times = Vec::new();
+    while start.elapsed().as_secs_f64() < budget_secs || times.len() < 5 {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_nanos() as f64);
+        if times.len() > 10_000 {
+            break;
+        }
+    }
+    stats_from(name, times)
+}
+
+fn stats_from(name: &str, mut times: Vec<f64>) -> BenchStats {
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = times.len();
+    let median = times[n / 2];
+    let mut devs: Vec<f64> = times.iter().map(|t| (t - median).abs()).collect();
+    devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    BenchStats {
+        name: name.to_string(),
+        samples: n,
+        median_ns: median,
+        mad_ns: devs[n / 2],
+        mean_ns: times.iter().sum::<f64>() / n as f64,
+        min_ns: times[0],
+    }
+}
+
+/// Simple scoped stopwatch for coarse phase timing in drivers.
+pub struct Stopwatch(Instant);
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch(Instant::now())
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let s = bench("noop-ish", 2, 16, || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        assert_eq!(s.samples, 16);
+        assert!(s.median_ns > 0.0);
+        assert!(s.min_ns <= s.median_ns);
+    }
+
+    #[test]
+    fn fmt_units() {
+        assert!(fmt_ns(500.0).contains("ns"));
+        assert!(fmt_ns(5e4).contains("µs"));
+        assert!(fmt_ns(5e7).contains("ms"));
+        assert!(fmt_ns(5e9).contains("s"));
+    }
+}

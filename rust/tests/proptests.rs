@@ -1,0 +1,208 @@
+//! Randomised property tests over the coordinator-facing invariants
+//! (proptest is unavailable offline; the deterministic PCG substrate
+//! plays generator, with explicit case counts and seeds so failures
+//! reproduce exactly).
+
+use alada::data::{Batcher, ClsDataset, MarkovCorpus, MtDataset, CLS_TASKS, MT_PAIRS, PAD_ID};
+use alada::optim::reshape::balanced_split;
+use alada::optim::{by_name, Schedule, ALL};
+use alada::tensor::Tensor;
+use alada::train::metrics;
+use alada::util::{Json, Rng};
+
+/// Random shape generator: rank 0-4, dims 1-12.
+fn random_shape(rng: &mut Rng) -> Vec<usize> {
+    let rank = rng.below_usize(5);
+    (0..rank).map(|_| 1 + rng.below_usize(12)).collect()
+}
+
+#[test]
+fn prop_balanced_split_preserves_product_and_optimality() {
+    let mut rng = Rng::new(101);
+    for _ in 0..200 {
+        let shape = random_shape(&mut rng);
+        let total: usize = shape.iter().product::<usize>().max(1);
+        let (m, n) = balanced_split(&shape);
+        assert_eq!(m * n, total, "{shape:?}");
+        // no prefix split is strictly more balanced
+        let mut left = 1usize;
+        for j in 0..=shape.len() {
+            assert!(left.abs_diff(total / left) >= m.abs_diff(n), "{shape:?} at j={j}");
+            if j < shape.len() {
+                left *= shape[j];
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_every_optimizer_keeps_params_finite_under_noise() {
+    let mut rng = Rng::new(202);
+    for trial in 0..20 {
+        let shapes: Vec<Vec<usize>> = (0..1 + rng.below_usize(3))
+            .map(|_| {
+                let mut s = random_shape(&mut rng);
+                if s.is_empty() {
+                    s.push(1);
+                }
+                s
+            })
+            .collect();
+        let name = ALL[trial % ALL.len()];
+        let mut opt = by_name(name, &shapes);
+        let mut params: Vec<Tensor> =
+            shapes.iter().map(|s| Tensor::from_fn(s, |_| rng.normal())).collect();
+        for _ in 0..10 {
+            let grads: Vec<Tensor> = shapes
+                .iter()
+                .map(|s| {
+                    let scale = 10.0_f32.powf(rng.range_f32(-2.0, 2.0));
+                    Tensor::from_fn(s, |_| rng.normal() * scale)
+                })
+                .collect();
+            opt.step(&mut params, &grads, 1e-3);
+        }
+        for p in &params {
+            assert!(
+                p.data().iter().all(|x| x.is_finite()),
+                "{name}: non-finite after noisy steps (shapes {shapes:?})"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_schedules_are_positive_and_bounded() {
+    let mut rng = Rng::new(303);
+    for _ in 0..50 {
+        let eta0 = 10f32.powf(rng.range_f32(-5.0, 0.0));
+        let total = 10 + rng.below_usize(10_000);
+        for sched in [
+            Schedule::Constant { eta0 },
+            Schedule::Diminishing { eta0, total },
+            Schedule::Theorem1 { eta: eta0, beta1: 0.9 },
+            Schedule::WarmupCosine { eta0, warmup: total / 10, total, floor: 0.1 },
+        ] {
+            for t in [0, 1, total / 2, total - 1] {
+                let lr = sched.at(t);
+                assert!(lr > 0.0 && lr <= eta0 * 1.0001, "{sched:?} at {t}: {lr}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_batcher_covers_dataset_every_epoch() {
+    let mut rng = Rng::new(404);
+    for _ in 0..20 {
+        let n = 2 + rng.below_usize(200);
+        let b = 1 + rng.below_usize(n.min(17));
+        let mut batcher = Batcher::new(n, b, rng.next_u64());
+        for epoch in 0..2 {
+            let mut seen = std::collections::HashSet::new();
+            for _ in 0..batcher.steps_per_epoch() {
+                let (e, idx) = batcher.next();
+                assert_eq!(e, epoch);
+                seen.extend(idx);
+            }
+            // full coverage up to the ragged tail
+            assert!(seen.len() >= (n / b) * b, "n={n} b={b}: covered {}", seen.len());
+        }
+    }
+}
+
+#[test]
+fn prop_bleu_bounded_and_permutation_sensitive() {
+    let mut rng = Rng::new(505);
+    for _ in 0..30 {
+        let len = 5 + rng.below_usize(20);
+        let r: Vec<i32> = (0..len).map(|_| 2 + rng.below(100) as i32).collect();
+        let refs = vec![r.clone()];
+        let ident = metrics::bleu(&refs, &refs);
+        assert!((ident - 100.0).abs() < 1e-6);
+        let mut shuffled = r.clone();
+        rng.shuffle(&mut shuffled);
+        let b = metrics::bleu(std::slice::from_ref(&shuffled), &refs);
+        assert!((0.0..=100.0).contains(&b));
+        if shuffled != r {
+            assert!(b < 100.0, "shuffle must not score perfect");
+        }
+    }
+}
+
+#[test]
+fn prop_corpus_and_datasets_stay_in_vocab() {
+    let mut rng = Rng::new(606);
+    for _ in 0..5 {
+        let vocab = 64 + rng.below_usize(512);
+        let c = MarkovCorpus::generate(vocab, 3 + rng.below_usize(6), 5_000, rng.next_u64());
+        assert!(c.train.iter().all(|&t| (2..vocab as i32).contains(&t)));
+
+        let task = CLS_TASKS[rng.below_usize(7)];
+        let d = ClsDataset::generate(task, vocab, 24, rng.next_u64());
+        for (toks, label) in d.train.iter().take(50) {
+            assert!(toks.iter().all(|&t| t == PAD_ID || (2..vocab as i32).contains(&t)));
+            assert!((0..task.classes as i32).contains(label));
+        }
+
+        let pair = MT_PAIRS[rng.below_usize(6)];
+        let m = MtDataset::generate(pair, vocab, 32, rng.next_u64());
+        for ex in m.train.iter().take(50) {
+            let (toks, mask) = m.pack(ex);
+            assert_eq!(toks.len(), 32);
+            assert_eq!(mask.len(), 32);
+            assert!(mask.iter().all(|&x| x == 0.0 || x == 1.0));
+        }
+    }
+}
+
+#[test]
+fn prop_json_round_trips_random_values() {
+    let mut rng = Rng::new(707);
+    fn random_json(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.bernoulli(0.5)),
+            2 => Json::Num((rng.next_u32() as f64 / 1000.0).round() / 8.0),
+            3 => Json::Str(format!("s{}\"x\\y\n{}", rng.next_u32(), rng.next_u32())),
+            4 => Json::Arr((0..rng.below_usize(4)).map(|_| random_json(rng, depth - 1)).collect()),
+            _ => {
+                let mut m = std::collections::BTreeMap::new();
+                for i in 0..rng.below_usize(4) {
+                    m.insert(format!("k{i}"), random_json(rng, depth - 1));
+                }
+                Json::Obj(m)
+            }
+        }
+    }
+    for _ in 0..100 {
+        let v = random_json(&mut rng, 3);
+        let text = v.to_string_compact();
+        let back = Json::parse(&text).unwrap_or_else(|e| panic!("{text}: {e}"));
+        assert_eq!(v, back, "round-trip failed for {text}");
+    }
+}
+
+#[test]
+fn prop_alada_survives_structured_gradients() {
+    use alada::optim::{Alada, Optimizer};
+    let mut rng = Rng::new(808);
+    for _ in 0..10 {
+        let (m, n) = (4 + rng.below_usize(20), 4 + rng.below_usize(20));
+        let shapes = vec![vec![m, n]];
+        let mut opt = Alada::new(0.9, 0.9, 1e-16, &shapes);
+        let mut params = vec![Tensor::from_fn(&[m, n], |_| rng.normal())];
+        // rank-one-structured gradient variance — the regime the
+        // factorisation targets
+        let row: Vec<f32> = (0..m).map(|_| rng.range_f32(0.2, 2.0)).collect();
+        let col: Vec<f32> = (0..n).map(|_| rng.range_f32(0.2, 2.0)).collect();
+        for _ in 0..30 {
+            let g = Tensor::from_fn(&[m, n], |i| {
+                let (r, c) = (i / n, i % n);
+                row[r] * col[c] * rng.normal()
+            });
+            opt.step(&mut params, &[g], 1e-3);
+        }
+        assert!(params[0].data().iter().all(|x| x.is_finite()));
+    }
+}

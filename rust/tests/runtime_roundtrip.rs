@@ -1,0 +1,100 @@
+//! Integration: the Rust runtime loads the AOT artifacts and drives real
+//! training steps — the full L1+L2+L3 composition check.
+//!
+//! Requires `make artifacts` (skipped with a clear message otherwise).
+
+use alada::runtime::executor::BatchExtra;
+use alada::runtime::{Runtime, TrainSession};
+use alada::util::Rng;
+
+fn runtime() -> Option<Runtime> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+        return None;
+    }
+    Some(Runtime::open("artifacts").expect("open runtime"))
+}
+
+fn random_tokens(rng: &mut Rng, batch: usize, seq: usize, vocab: usize) -> Vec<i32> {
+    (0..batch * seq).map(|_| 1 + rng.below((vocab - 1) as u32) as i32).collect()
+}
+
+#[test]
+fn alada_lm_steps_reduce_loss_on_fixed_batch() {
+    let Some(rt) = runtime() else { return };
+    let mut sess = TrainSession::new(&rt, "lm", "tiny", "alada").expect("session");
+    let mut rng = Rng::new(1);
+    let tokens = random_tokens(&mut rng, sess.batch, sess.seq, 256);
+    let first = sess.step(&tokens, &BatchExtra::None, 1e-2).expect("step");
+    let mut last = first;
+    for _ in 0..15 {
+        last = sess.step(&tokens, &BatchExtra::None, 1e-2).expect("step");
+    }
+    assert!(first.is_finite() && last.is_finite());
+    assert!(
+        last < first * 0.8,
+        "loss should drop on a memorised batch: {first} -> {last}"
+    );
+    assert_eq!(sess.t, 16);
+}
+
+#[test]
+fn all_three_optimizers_step_tiny_lm() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Rng::new(2);
+    for opt in ["adam", "adafactor", "alada"] {
+        let mut sess = TrainSession::new(&rt, "lm", "tiny", opt).expect(opt);
+        let tokens = random_tokens(&mut rng, sess.batch, sess.seq, 256);
+        let loss = sess.step(&tokens, &BatchExtra::None, 1e-3).expect(opt);
+        assert!(loss.is_finite(), "{opt}: loss {loss}");
+        assert!(loss > 0.0 && loss < 20.0, "{opt}: implausible loss {loss}");
+    }
+}
+
+#[test]
+fn cls_and_mt_tasks_step() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Rng::new(3);
+
+    let mut cls = TrainSession::new(&rt, "cls", "tiny", "alada").expect("cls");
+    let tokens = random_tokens(&mut rng, cls.batch, cls.seq, 256);
+    let labels: Vec<i32> = (0..cls.batch).map(|_| rng.below(4) as i32).collect();
+    let loss = cls.step(&tokens, &BatchExtra::Labels(labels), 1e-3).expect("cls step");
+    assert!(loss.is_finite() && loss > 0.0);
+
+    let mut mt = TrainSession::new(&rt, "mt", "tiny", "alada").expect("mt");
+    let tokens = random_tokens(&mut rng, mt.batch, mt.seq, 256);
+    let mask: Vec<f32> = (0..mt.batch * mt.seq)
+        .map(|i| if i % mt.seq >= mt.seq / 2 { 1.0 } else { 0.0 })
+        .collect();
+    let loss = mt.step(&tokens, &BatchExtra::LossMask(mask), 1e-3).expect("mt step");
+    assert!(loss.is_finite() && loss > 0.0);
+}
+
+#[test]
+fn eval_session_reports_nll() {
+    let Some(rt) = runtime() else { return };
+    use alada::runtime::executor::EvalSession;
+    let mut rng = Rng::new(4);
+    let sess = TrainSession::new(&rt, "lm", "tiny", "alada").expect("session");
+    let eval = EvalSession::new(&rt, "lm", "tiny").expect("eval");
+    let tokens = random_tokens(&mut rng, eval.batch, eval.seq, 256);
+    let out = eval.run(&sess.params, &tokens, &BatchExtra::None).expect("eval");
+    assert!(out.count > 0.0);
+    let ppl = (out.sum_nll / out.count).exp();
+    // untrained model on random tokens ≈ uniform over vocab
+    assert!(ppl > 50.0 && ppl < 1000.0, "ppl {ppl}");
+}
+
+#[test]
+fn optimizer_state_sizes_match_paper_story() {
+    let Some(rt) = runtime() else { return };
+    let adam = TrainSession::new(&rt, "lm", "tiny", "adam").expect("adam");
+    let adafactor = TrainSession::new(&rt, "lm", "tiny", "adafactor").expect("adafactor");
+    let alada = TrainSession::new(&rt, "lm", "tiny", "alada").expect("alada");
+    // Adam: 2mn. Adafactor: O(m+n). Alada: mn (grad-slot M) + O(m+n).
+    assert!(adam.opt_state_bytes() > 2 * adam.param_bytes() * 9 / 10);
+    assert!(adafactor.opt_state_bytes() < adam.opt_state_bytes() / 20);
+    assert!(alada.opt_state_bytes() < adam.opt_state_bytes() * 6 / 10);
+    assert!(alada.opt_state_bytes() > alada.param_bytes()); // M + factors
+}

@@ -1,0 +1,167 @@
+//! Integration over the training framework: trainer + coordinator +
+//! checkpoints + the manifest↔memory-model cross-check.
+//!
+//! Needs `make artifacts` (each test skips with a message otherwise).
+
+use alada::coordinator::job::{JobGrid, JobSpec};
+use alada::coordinator::run_jobs;
+use alada::data::MarkovCorpus;
+use alada::optim::reshape::balanced_split;
+use alada::optim::Schedule;
+use alada::runtime::{Runtime, TrainSession};
+use alada::train::{checkpoint, TaskData, Trainer};
+
+fn have_artifacts() -> bool {
+    let ok = std::path::Path::new("artifacts/manifest.json").exists();
+    if !ok {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+    }
+    ok
+}
+
+#[test]
+fn trainer_runs_and_records_curve() {
+    if !have_artifacts() {
+        return;
+    }
+    let rt = Runtime::open("artifacts").unwrap();
+    let sess = TrainSession::new(&rt, "lm", "tiny", "alada").unwrap();
+    let (batch, seq) = (sess.batch, sess.seq);
+    let corpus = MarkovCorpus::generate(256, 4, 30_000, 3);
+    let data = TaskData::lm(corpus, batch, seq, 3);
+    let mut trainer =
+        Trainer::new(sess, data, Schedule::Diminishing { eta0: 5e-3, total: 40 });
+    trainer.record_every = 10;
+    let out = trainer.run(40).unwrap();
+    assert_eq!(out.steps, 40);
+    assert!(out.curve.len() >= 4);
+    assert!(out.final_cum_loss.is_finite());
+    // cumulative average is smoother than raw losses: its recorded range
+    // must be within the raw losses' range
+    let raw_max = out.curve.iter().map(|c| c.1).fold(f64::MIN, f64::max);
+    assert!(out.curve.iter().all(|c| c.2 <= raw_max + 1e-9));
+}
+
+#[test]
+fn checkpoint_round_trip_restores_training_state() {
+    if !have_artifacts() {
+        return;
+    }
+    let rt = Runtime::open("artifacts").unwrap();
+    let sess = TrainSession::new(&rt, "lm", "tiny", "alada").unwrap();
+    let (batch, seq) = (sess.batch, sess.seq);
+    let corpus = MarkovCorpus::generate(256, 4, 30_000, 5);
+    let data = TaskData::lm(corpus, batch, seq, 5);
+    let mut trainer = Trainer::new(sess, data, Schedule::Constant { eta0: 1e-3 });
+    trainer.run(5).unwrap();
+
+    let path = std::env::temp_dir().join("alada_ckpt_test.bin");
+    checkpoint::save(&path, &trainer.sess).unwrap();
+
+    let mut restored = TrainSession::new(&rt, "lm", "tiny", "alada").unwrap();
+    assert_ne!(restored.t, trainer.sess.t);
+    checkpoint::load(&path, &mut restored).unwrap();
+    assert_eq!(restored.t, trainer.sess.t);
+    assert_eq!(restored.params, trainer.sess.params);
+    assert_eq!(restored.opt_state, trainer.sess.opt_state);
+
+    // wrong-artifact checkpoints must be rejected
+    let mut other = TrainSession::new(&rt, "lm", "tiny", "adam").unwrap();
+    assert!(checkpoint::load(&path, &mut other).is_err());
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn coordinator_runs_a_small_grid() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut grid = JobGrid::new();
+    for (i, opt) in ["alada", "adam"].iter().enumerate() {
+        grid.push(
+            format!("test/{opt}"),
+            JobSpec {
+                task: "cls".into(),
+                size: "tiny".into(),
+                artifact: None,
+                opt: opt.to_string(),
+                dataset: 6, // sst2-like: easiest
+                lr: 2e-3,
+                steps: 25,
+                seed: i as u64,
+                record_every: 5,
+                eval: "cls".into(),
+            },
+        );
+    }
+    let results = run_jobs("artifacts", grid.into_jobs(), 1).unwrap();
+    assert_eq!(results.len(), 2);
+    for r in &results {
+        assert!(r.error.is_none(), "{}: {:?}", r.label, r.error);
+        assert!(r.final_cum_loss.is_finite());
+        let acc = r.metric("acc").unwrap();
+        assert!((0.0..=1.0).contains(&acc), "{}: acc {acc}", r.label);
+        assert!(r.metrics.contains_key("task_metric"));
+    }
+}
+
+#[test]
+fn coordinator_reports_failures_as_data() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut grid = JobGrid::new();
+    grid.push(
+        "test/bogus".into(),
+        JobSpec {
+            task: "lm".into(),
+            size: "tiny".into(),
+            artifact: Some("train_does_not_exist".into()),
+            opt: "alada".into(),
+            dataset: 0,
+            lr: 1e-3,
+            steps: 5,
+            seed: 0,
+            record_every: 1,
+            eval: "none".into(),
+        },
+    );
+    let results = run_jobs("artifacts", grid.into_jobs(), 1).unwrap();
+    assert_eq!(results.len(), 1);
+    assert!(results[0].error.is_some());
+}
+
+#[test]
+fn manifest_state_layout_matches_memory_model() {
+    if !have_artifacts() {
+        return;
+    }
+    // For the Alada artifacts: state_elems − param_elems must equal
+    // Σ (m + n + 1) over the balanced splits of the param leaves —
+    // i.e. the in-graph state layout IS the paper's O(m+n) overhead
+    // plus the grad-slot first moment. Validates the Table-IV model
+    // against the real compiled buffers.
+    let rt = Runtime::open("artifacts").unwrap();
+    for size in ["tiny", "small"] {
+        let spec = rt
+            .manifest
+            .artifact(&format!("train_lm_{size}_alada"))
+            .unwrap();
+        let expected_overhead: usize = spec
+            .param_table
+            .iter()
+            .map(|leaf| {
+                let (m, n) = balanced_split(&leaf.shape);
+                m + n + 1
+            })
+            .sum();
+        let actual = spec.meta.state_elems - spec.meta.param_elems;
+        assert_eq!(actual, expected_overhead, "{size}");
+        // and Adam's state is exactly 2× params
+        let adam = rt
+            .manifest
+            .artifact(&format!("train_lm_{size}_adam"))
+            .unwrap();
+        assert_eq!(adam.meta.state_elems, 2 * adam.meta.param_elems, "{size} adam");
+    }
+}
