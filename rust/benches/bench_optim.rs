@@ -21,7 +21,7 @@ fn main() {
 
     println!("== optimizer step cost, GPT2-Small block shapes (5.3 M params) ==");
     for name in ALL {
-        let mut opt = by_name(name, &shapes);
+        let mut opt = by_name(name, &shapes).expect("known optimizer");
         let mut params = params_proto.clone();
         let stats = bench(&format!("optim/{name}/step"), 2, 12, || {
             opt.step(&mut params, &grads, 1e-3);
@@ -35,7 +35,7 @@ fn main() {
 
     // Alada phase split: even (p update) vs odd (q update) steps
     println!("\n== alada parity phases ==");
-    let mut opt = by_name("alada", &shapes);
+    let mut opt = by_name("alada", &shapes).expect("known optimizer");
     let mut params = params_proto.clone();
     opt.step(&mut params, &grads, 1e-3); // t=0 init
     let even = bench("alada/even-step(p-update)", 1, 10, || {

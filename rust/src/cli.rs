@@ -71,6 +71,20 @@ impl Args {
         self.flag(name).map(|v| v != "false").unwrap_or(false)
     }
 
+    /// Comma-separated usize list ("1,2,4,8"); single values parse as a
+    /// one-element list. Unparsable input falls back to the default,
+    /// matching the other typed accessors.
+    pub fn usize_list_or(&self, name: &str, default: &[usize]) -> Vec<usize> {
+        match self.flag(name) {
+            Some(v) => {
+                let parsed: Option<Vec<usize>> =
+                    v.split(',').map(|x| x.trim().parse().ok()).collect();
+                parsed.filter(|l| !l.is_empty()).unwrap_or_else(|| default.to_vec())
+            }
+            None => default.to_vec(),
+        }
+    }
+
     /// Flags that were provided but never read — typo detection.
     pub fn unknown_flags(&self) -> Vec<String> {
         let seen = self.seen.borrow();
@@ -111,6 +125,15 @@ mod tests {
         let a = parse("x");
         assert_eq!(a.str_or("out", "results"), "results");
         assert_eq!(a.usize_or("workers", 4), 4);
+    }
+
+    #[test]
+    fn usize_lists_parse() {
+        let a = parse("x --ranks 1,2,4,8 --solo 3 --bad 2,x");
+        assert_eq!(a.usize_list_or("ranks", &[2]), vec![1, 2, 4, 8]);
+        assert_eq!(a.usize_list_or("solo", &[2]), vec![3]);
+        assert_eq!(a.usize_list_or("bad", &[2]), vec![2]);
+        assert_eq!(a.usize_list_or("absent", &[1, 2]), vec![1, 2]);
     }
 
     #[test]

@@ -60,6 +60,24 @@ impl JobResult {
     pub fn metric(&self, key: &str) -> Option<f64> {
         self.metrics.get(key).copied()
     }
+
+    /// The canonical failure record: empty curve, NaN loss, zero timings.
+    /// Used both by workers (job errored/panicked) and by the coordinator
+    /// (job lost with a dead worker).
+    pub fn failed(id: usize, label: String, spec: JobSpec, error: String) -> JobResult {
+        JobResult {
+            id,
+            label,
+            spec,
+            curve: Vec::new(),
+            final_cum_loss: f64::NAN,
+            wall_secs: 0.0,
+            secs_per_step: 0.0,
+            metrics: BTreeMap::new(),
+            opt_state_bytes: 0,
+            error: Some(error),
+        }
+    }
 }
 
 /// Builder for sweep grids.

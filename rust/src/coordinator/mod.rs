@@ -26,6 +26,12 @@ use anyhow::Result;
 use crate::util::log;
 
 /// Run all jobs on `n_workers` threads; returns results sorted by job id.
+///
+/// Every submitted job comes back exactly once: worker-side panics are
+/// caught and reported as that job's `error`, and any job a dying worker
+/// never reported (e.g. its runtime failed to open while it held the
+/// queue) is synthesised as a failure here — the sweep summary sees
+/// failures as data, never a shortened result set.
 pub fn run_jobs(artifact_dir: &str, jobs: Vec<Job>, n_workers: usize) -> Result<Vec<JobResult>> {
     let total = jobs.len();
     if total == 0 {
@@ -33,6 +39,9 @@ pub fn run_jobs(artifact_dir: &str, jobs: Vec<Job>, n_workers: usize) -> Result<
     }
     let n_workers = n_workers.max(1).min(total);
     log::info(&format!("coordinator: {total} jobs on {n_workers} workers"));
+    // Keep (label, spec) per id so lost jobs can be synthesised.
+    let submitted: Vec<(usize, String, JobSpec)> =
+        jobs.iter().map(|j| (j.id, j.label.clone(), j.spec.clone())).collect();
     let queue = Arc::new(Mutex::new(VecDeque::from(jobs)));
     let (tx, rx) = mpsc::channel::<JobResult>();
 
@@ -50,24 +59,46 @@ pub fn run_jobs(artifact_dir: &str, jobs: Vec<Job>, n_workers: usize) -> Result<
     let mut results: Vec<JobResult> = Vec::with_capacity(total);
     let t0 = std::time::Instant::now();
     for r in rx {
-        log::info(&format!(
-            "[{}/{}] {} done in {:.1}s (loss {:.4})",
-            results.len() + 1,
-            total,
-            r.label,
-            r.wall_secs,
-            r.final_cum_loss
-        ));
+        match &r.error {
+            None => log::info(&format!(
+                "[{}/{}] {} done in {:.1}s (loss {:.4})",
+                results.len() + 1,
+                total,
+                r.label,
+                r.wall_secs,
+                r.final_cum_loss
+            )),
+            Some(e) => log::error(&format!(
+                "[{}/{}] {} FAILED: {e}",
+                results.len() + 1,
+                total,
+                r.label
+            )),
+        }
         results.push(r);
     }
     for h in handles {
-        h.join().map_err(|_| anyhow::anyhow!("worker panicked"))?;
+        if h.join().is_err() {
+            // worker_loop guards each job with catch_unwind, so this is a
+            // panic outside any job; its unreported jobs are synthesised
+            // below.
+            log::error("coordinator: a worker thread died outside the job guard");
+        }
+    }
+    let reported: std::collections::HashSet<usize> = results.iter().map(|r| r.id).collect();
+    for (id, label, spec) in submitted {
+        if !reported.contains(&id) {
+            log::error(&format!("coordinator: job {label} was never reported; marking failed"));
+            results.push(JobResult::failed(
+                id,
+                label,
+                spec,
+                "job lost: its worker died before reporting a result".to_string(),
+            ));
+        }
     }
     log::info(&format!("coordinator: {total} jobs in {:.1}s", t0.elapsed().as_secs_f64()));
     results.sort_by_key(|r| r.id);
-    if results.len() != total {
-        anyhow::bail!("coordinator: {} of {total} jobs returned", results.len());
-    }
     Ok(results)
 }
 
@@ -75,4 +106,38 @@ pub fn run_jobs(artifact_dir: &str, jobs: Vec<Job>, n_workers: usize) -> Result<
 pub fn default_workers() -> usize {
     let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
     (cores / 2).clamp(1, 6)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::job::JobGrid;
+
+    #[test]
+    fn lost_jobs_surface_as_failures_not_missing_results() {
+        let mut grid = JobGrid::new();
+        for i in 0..3u64 {
+            grid.push(
+                format!("job{i}"),
+                JobSpec {
+                    task: "lm".into(),
+                    size: "tiny".into(),
+                    artifact: None,
+                    opt: "alada".into(),
+                    dataset: 0,
+                    lr: 1e-3,
+                    steps: 1,
+                    seed: i,
+                    record_every: 1,
+                    eval: "none".into(),
+                },
+            );
+        }
+        // A nonexistent artifact dir kills every worker before it can
+        // report; the jobs must come back as failures, not vanish.
+        let results = run_jobs("definitely/not/a/dir", grid.into_jobs(), 2).unwrap();
+        assert_eq!(results.len(), 3);
+        assert!(results.iter().all(|r| r.error.is_some()));
+        assert_eq!(results.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1, 2]);
+    }
 }

@@ -7,6 +7,7 @@
 //! the sweep: a diverging η₀ is data, not a crash.
 
 use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc::Sender;
 use std::sync::{Arc, Mutex};
 
@@ -56,21 +57,37 @@ pub(super) fn worker_loop(
                 None => break,
             }
         };
-        let result = run_job(&rt, &mut cache, &job).unwrap_or_else(|e| JobResult {
-            id: job.id,
-            label: job.label.clone(),
-            spec: job.spec.clone(),
-            curve: Vec::new(),
-            final_cum_loss: f64::NAN,
-            wall_secs: 0.0,
-            secs_per_step: 0.0,
-            metrics: BTreeMap::new(),
-            opt_state_bytes: 0,
-            error: Some(e.to_string()),
-        });
+        // A panic inside a job (artifact bug, index error, …) must become
+        // that job's failure record, not silently vaporise every job this
+        // worker would have run.
+        let outcome = catch_unwind(AssertUnwindSafe(|| run_job(&rt, &mut cache, &job)));
+        let result = match outcome {
+            Ok(Ok(r)) => r,
+            Ok(Err(e)) => failed_result(&job, e.to_string()),
+            Err(payload) => failed_result(
+                &job,
+                format!("worker {wid} panicked: {}", panic_message(payload.as_ref())),
+            ),
+        };
         if tx.send(result).is_err() {
             break; // coordinator gone
         }
+    }
+}
+
+/// The failure record for a job that errored or panicked.
+fn failed_result(job: &Job, error: String) -> JobResult {
+    JobResult::failed(job.id, job.label.clone(), job.spec.clone(), error)
+}
+
+/// Best-effort extraction of a panic payload's message.
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
     }
 }
 

@@ -13,6 +13,7 @@ pub mod fig4;
 pub mod fig5;
 pub mod prop1;
 pub mod report;
+pub mod shard_state;
 pub mod table1;
 pub mod table2;
 pub mod table4;
@@ -63,6 +64,7 @@ pub fn run(name: &str, opts: &ExpOpts) -> Result<()> {
         "prop1" => prop1::run(opts),
         "theory" => theory::run(opts),
         "decay-map" => decay_map::run(opts),
+        "shard" => shard_state::run(opts),
         "all" => {
             for id in ALL {
                 println!("=== exp {id} ===");
@@ -76,5 +78,6 @@ pub fn run(name: &str, opts: &ExpOpts) -> Result<()> {
 
 /// Experiment ids in dependency-friendly order.
 pub const ALL: &[&str] = &[
-    "prop1", "theory", "decay-map", "table4", "fig2", "table1", "fig3", "table2", "fig4", "fig5",
+    "prop1", "theory", "decay-map", "shard", "table4", "fig2", "table1", "fig3", "table2", "fig4",
+    "fig5",
 ];

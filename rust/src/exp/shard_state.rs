@@ -1,0 +1,158 @@
+//! `alada exp shard` — per-rank optimizer-state accounting vs rank count.
+//!
+//! Three views of the same claim (sublinear state is what makes Alada
+//! *shardable*, not just small):
+//!
+//! 1. analytic: the Table-IV memory model extended per-rank
+//!    (`memory::sharded_breakdown`) over the paper's models;
+//! 2. measured: real `ShardedOptimizer` instances over GPT2-Small's
+//!    parameter shapes, reporting actual `state_overhead_bytes` per rank
+//!    for every optimizer in `optim::ALL` — Alada's max-rank bytes fall
+//!    as ~Σ(m+n)/N down to the largest-tensor floor;
+//! 3. live: the shard engine training the MLP task end-to-end per rank
+//!    count, reporting steps/sec and final-parameter drift vs 1 rank.
+//!
+//! Outputs: results/shard_state.csv, shard_state_measured.csv,
+//! shard_engine.csv.
+
+use anyhow::Result;
+
+use crate::optim::{by_name, Optimizer, Schedule, ShardedOptimizer, ALL};
+use crate::shard::{MlpTask, Partition, ShardConfig};
+use crate::train::memory::{self, GPT2_SMALL, GPT2_XL, T5_SMALL};
+use crate::train::run_sharded;
+use crate::util::csv::{row, CsvWriter};
+
+use super::ExpOpts;
+
+/// Rank counts every section sweeps.
+pub const RANKS: &[usize] = &[1, 2, 4, 8];
+
+pub fn run(opts: &ExpOpts) -> Result<()> {
+    analytic(opts)?;
+    measured(opts)?;
+    live(opts)?;
+    Ok(())
+}
+
+/// Section 1: analytic per-rank model over the paper's models.
+fn analytic(opts: &ExpOpts) -> Result<()> {
+    let mut w = CsvWriter::create(
+        format!("{}/shard_state.csv", opts.out_dir),
+        &["model", "opt", "ranks", "max_rank_state_bytes", "sum_state_bytes", "max_rank_total_gb"],
+    )?;
+    for model in [GPT2_SMALL, GPT2_XL, T5_SMALL] {
+        for opt in ["sgd", "sgdm", "adagrad", "adam", "adafactor", "alada", "came", "sm3"] {
+            for &ranks in RANKS {
+                let per_rank = memory::sharded_breakdown(model, opt, 8, model.max_seq, ranks);
+                let max_state = per_rank.iter().map(|b| b.opt_state).max().unwrap_or(0);
+                let sum_state: usize = per_rank.iter().map(|b| b.opt_state).sum();
+                let max_total =
+                    per_rank.iter().map(|b| b.total()).max().unwrap_or(0) as f64 / 1e9;
+                w.row(&row(&[
+                    &model.name,
+                    &opt,
+                    &ranks,
+                    &max_state,
+                    &sum_state,
+                    &format!("{max_total:.3}"),
+                ]))?;
+            }
+        }
+    }
+    w.flush()?;
+    println!("shard: wrote {}/shard_state.csv (analytic per-rank model)", opts.out_dir);
+    Ok(())
+}
+
+/// Section 2: real optimizer instances over GPT2-Small shapes.
+fn measured(opts: &ExpOpts) -> Result<()> {
+    let shapes: Vec<Vec<usize>> =
+        GPT2_SMALL.params().iter().map(|p| p.shape.clone()).collect();
+    let mut w = CsvWriter::create(
+        format!("{}/shard_state_measured.csv", opts.out_dir),
+        &["opt", "ranks", "max_rank_state_bytes", "sum_rank_state_bytes", "unsharded_bytes"],
+    )?;
+    println!("measured per-rank state, GPT2-Small shapes ({} tensors):", shapes.len());
+    for name in ALL {
+        let unsharded = by_name(name, &shapes)?.state_overhead_bytes();
+        let mut line = format!("  {name:<10}");
+        for &ranks in RANKS {
+            let part = Partition::plan(&shapes, ranks);
+            let mut max_rank = 0usize;
+            let mut sum = 0usize;
+            for r in 0..ranks {
+                let b = ShardedOptimizer::new(name, &part, r)?.state_overhead_bytes();
+                max_rank = max_rank.max(b);
+                sum += b;
+            }
+            w.row(&row(&[name, &ranks, &max_rank, &sum, &unsharded]))?;
+            line.push_str(&format!(" N={ranks}:{:>11} B", max_rank));
+        }
+        println!("{line}");
+        if *name == "alada" {
+            // The acceptance check: Alada's per-rank overhead is
+            // O((m+n)/N) — max-rank bytes track total/N until the
+            // single-largest-tensor floor (the wte embedding) binds.
+            let total = unsharded;
+            for &ranks in RANKS {
+                let part = Partition::plan(&shapes, ranks);
+                let max_rank = (0..ranks)
+                    .map(|r| ShardedOptimizer::new("alada", &part, r).map(|s| s.state_overhead_bytes()))
+                    .collect::<Result<Vec<_>>>()?
+                    .into_iter()
+                    .max()
+                    .unwrap_or(0);
+                println!(
+                    "    alada O((m+n)/N) check: N={ranks:<2} max-rank {max_rank:>8} B  \
+                     (total/N = {:>8} B, ratio {:.2})",
+                    total / ranks,
+                    max_rank as f64 / (total as f64 / ranks as f64)
+                );
+            }
+        }
+    }
+    w.flush()?;
+    println!("shard: wrote {}/shard_state_measured.csv", opts.out_dir);
+    Ok(())
+}
+
+/// Section 3: live engine runs, one per rank count.
+fn live(opts: &ExpOpts) -> Result<()> {
+    let steps = opts.steps(240);
+    let task = MlpTask::new(64, 96, 3, 8, 2048, 32, 7);
+    let schedule = Schedule::Diminishing { eta0: 1e-2, total: steps };
+    let mut w = CsvWriter::create(
+        format!("{}/shard_engine.csv", opts.out_dir),
+        &["opt", "ranks", "steps_per_sec", "final_cum_loss", "max_rank_state_bytes", "max_drift_vs_1"],
+    )?;
+    for opt in ["alada", "adam", "adafactor"] {
+        let mut baseline: Option<crate::train::ShardedRun> = None;
+        for &ranks in RANKS {
+            let cfg = ShardConfig { ranks, bucket_kb: 64, steps };
+            let run = run_sharded(&task, opt, &schedule, &cfg)?;
+            let drift = baseline.as_ref().map(|b| run.max_abs_drift_from(b)).unwrap_or(0.0);
+            let steps_per_sec = 1.0 / run.outcome.secs_per_step.max(1e-9);
+            println!(
+                "engine {opt:<10} N={ranks:<2} {steps_per_sec:>8.1} steps/s  loss {:.5}  \
+                 max-rank state {:>6} B  drift vs 1-rank {drift:.2e}",
+                run.outcome.final_cum_loss,
+                run.per_rank_state_bytes.iter().max().unwrap_or(&0),
+            );
+            w.row(&row(&[
+                &opt,
+                &ranks,
+                &format!("{steps_per_sec:.2}"),
+                &format!("{:.6}", run.outcome.final_cum_loss),
+                run.per_rank_state_bytes.iter().max().unwrap_or(&0),
+                &format!("{drift:.3e}"),
+            ]))?;
+            if ranks == 1 {
+                baseline = Some(run);
+            }
+        }
+    }
+    w.flush()?;
+    println!("shard: wrote {}/shard_engine.csv (live engine)", opts.out_dir);
+    Ok(())
+}

@@ -14,6 +14,7 @@ pub mod exp;
 pub mod data;
 pub mod optim;
 pub mod runtime;
+pub mod shard;
 pub mod tensor;
 pub mod train;
 pub mod util;

@@ -13,6 +13,7 @@ use alada::cli::Args;
 use alada::exp::{self, ExpOpts};
 use alada::optim::Schedule;
 use alada::runtime::{Manifest, Runtime, TrainSession};
+use alada::shard::{MlpTask, ShardConfig};
 use alada::train::memory;
 use alada::train::{TaskData, Trainer};
 use alada::util::log;
@@ -23,6 +24,7 @@ fn main() {
     let code = match args.subcommand.as_deref() {
         Some("exp") => cmd_exp(&args),
         Some("train") => cmd_train(&args),
+        Some("shard-train") => cmd_shard_train(&args),
         Some("memory") => cmd_memory(&args),
         Some("report") => {
             let out = args.str_or("out", "results");
@@ -45,11 +47,15 @@ const USAGE: &str = "alada — Alada optimizer reproduction (Rust + JAX + Pallas
 
 USAGE:
   alada exp <id|all> [--workers N] [--scale F] [--artifacts DIR] [--out DIR]
-      ids: prop1 theory decay-map table4 fig2 table1 fig3 table2 fig4 table3 fig5
+      ids: prop1 theory decay-map shard table4 fig2 table1 fig3 table2 fig4 table3 fig5
   alada train [--config run.toml] [--task lm|cls|mt] [--size tiny|small|base]
               [--opt adam|adafactor|alada] [--steps N] [--lr F] [--seed N]
               [--dataset I] [--artifacts DIR]   (flags override the config file)
-  alada memory [--model gpt2-small|gpt2-xl|t5-small] [--batch N]
+  alada shard-train [--ranks N|N,N,..] [--bucket-kb K] [--opt NAME] [--steps N]
+              [--lr F] [--seed N] [--batch B] [--dim D] [--hidden H] [--depth L]
+              [--parity]   data-parallel engine with partitioned optimizer state
+              (pure Rust, no artifacts needed; a rank list sweeps and compares)
+  alada memory [--model gpt2-small|gpt2-xl|t5-small] [--batch N] [--ranks N]
   alada report [--out DIR]        render results/*.csv into results/REPORT.md
   alada info [--artifacts DIR]
 
@@ -166,6 +172,72 @@ fn cmd_train(args: &Args) -> i32 {
     }
 }
 
+fn cmd_shard_train(args: &Args) -> i32 {
+    let ranks_list = args.usize_list_or("ranks", &[2]);
+    let bucket_kb = args.usize_or("bucket-kb", 64);
+    let steps = args.usize_or("steps", 200);
+    let opt = args.str_or("opt", "alada");
+    let lr = args.f32_or("lr", 1e-2);
+    let seed = args.u64_or("seed", 1);
+    let batch = args.usize_or("batch", 32);
+    let dim = args.usize_or("dim", 32);
+    let hidden = args.usize_or("hidden", 64);
+    let depth = args.usize_or("depth", 3);
+    let parity = args.bool("parity");
+    warn_unknown(args);
+
+    let run = || -> anyhow::Result<()> {
+        let task = MlpTask::new(dim, hidden, depth, hidden.min(8), 4096, batch, seed);
+        let schedule = Schedule::Diminishing { eta0: lr, total: steps };
+        println!(
+            "shard-train: {opt} on a depth-{depth} MLP ({dim}→{hidden}→…→{}), \
+             batch {batch}, {steps} steps, bucket {bucket_kb} KiB",
+            hidden.min(8)
+        );
+        println!(
+            "{:<6}{:>12}{:>12}{:>16}{:>16}{:>14}",
+            "ranks", "final loss", "steps/s", "max rank state", "sum state", "max |Δ| vs 1"
+        );
+        let baseline = if parity || ranks_list.contains(&1) {
+            Some(alada::train::run_sharded(
+                &task,
+                &opt,
+                &schedule,
+                &ShardConfig { ranks: 1, bucket_kb, steps },
+            )?)
+        } else {
+            None
+        };
+        for &ranks in &ranks_list {
+            let res = if ranks == 1 {
+                baseline.clone().expect("baseline computed when 1 is listed")
+            } else {
+                alada::train::run_sharded(
+                    &task,
+                    &opt,
+                    &schedule,
+                    &ShardConfig { ranks, bucket_kb, steps },
+                )?
+            };
+            let drift = baseline.as_ref().map(|b| res.max_abs_drift_from(b));
+            println!(
+                "{:<6}{:>12.5}{:>12.1}{:>14} B{:>14} B{:>14}",
+                ranks,
+                res.outcome.final_cum_loss,
+                1.0 / res.outcome.secs_per_step.max(1e-9),
+                res.per_rank_state_bytes.iter().max().unwrap_or(&0),
+                res.per_rank_state_bytes.iter().sum::<usize>(),
+                drift.map(|d| format!("{d:.2e}")).unwrap_or_else(|| "-".into()),
+            );
+        }
+        Ok(())
+    };
+    match run() {
+        Ok(()) => 0,
+        Err(e) => fail(e),
+    }
+}
+
 fn cmd_memory(args: &Args) -> i32 {
     let model = match args.str_or("model", "gpt2-xl").as_str() {
         "gpt2-small" => memory::GPT2_SMALL,
@@ -173,6 +245,7 @@ fn cmd_memory(args: &Args) -> i32 {
         _ => memory::GPT2_XL,
     };
     let batch = args.usize_or("batch", 1);
+    let ranks = args.usize_or("ranks", 1);
     warn_unknown(args);
     println!(
         "{} ({} params), batch {batch}, seq {}",
@@ -196,6 +269,23 @@ fn cmd_memory(args: &Args) -> i32 {
             b.total_gb(),
             if memory::fits_a800(model, opt, batch, model.max_seq) { "fits" } else { "OOM" }
         );
+    }
+    if ranks > 1 {
+        println!("\nper-rank (ZeRO-style state partition across {ranks} ranks):");
+        println!("{:<11}{:>16}{:>16}{:>15}", "optimizer", "max rank state", "sum state", "max rank total");
+        for opt in ["sgd", "adam", "adafactor", "alada", "came", "sm3"] {
+            let per_rank = memory::sharded_breakdown(model, opt, batch, model.max_seq, ranks);
+            let max_state = per_rank.iter().map(|b| b.opt_state).max().unwrap_or(0);
+            let sum_state: usize = per_rank.iter().map(|b| b.opt_state).sum();
+            let max_total = per_rank.iter().map(|b| b.total()).max().unwrap_or(0);
+            println!(
+                "{:<11}{:>15.3}G{:>15.3}G{:>14.2}G",
+                opt,
+                max_state as f64 / 1e9,
+                sum_state as f64 / 1e9,
+                max_total as f64 / 1e9
+            );
+        }
     }
     0
 }

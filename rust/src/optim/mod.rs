@@ -20,6 +20,7 @@ pub mod came;
 pub mod reshape;
 pub mod schedule;
 pub mod sgd;
+pub mod sharded;
 pub mod sm3;
 
 pub use adafactor::Adafactor;
@@ -29,7 +30,10 @@ pub use alada::Alada;
 pub use came::Came;
 pub use schedule::Schedule;
 pub use sgd::Sgd;
+pub use sharded::ShardedOptimizer;
 pub use sm3::Sm3;
+
+use anyhow::{bail, Result};
 
 use crate::tensor::Tensor;
 
@@ -55,9 +59,10 @@ pub trait Optimizer {
 }
 
 /// Build an optimizer by name with the paper's default hyper-parameters
-/// (§VI-A). `shapes` pre-sizes the per-parameter state.
-pub fn by_name(name: &str, shapes: &[Vec<usize>]) -> Box<dyn Optimizer + Send> {
-    match name {
+/// (§VI-A). `shapes` pre-sizes the per-parameter state. Unknown names are
+/// an error (the CLI turns it into a usage message), not a panic.
+pub fn by_name(name: &str, shapes: &[Vec<usize>]) -> Result<Box<dyn Optimizer + Send>> {
+    Ok(match name {
         "sgd" => Box::new(Sgd::new(0.0)),
         "sgdm" => Box::new(Sgd::new(0.9)),
         "adagrad" => Box::new(AdaGrad::new(1e-8, shapes)),
@@ -66,8 +71,8 @@ pub fn by_name(name: &str, shapes: &[Vec<usize>]) -> Box<dyn Optimizer + Send> {
         "alada" => Box::new(Alada::new(0.9, 0.9, 1e-16, shapes)),
         "sm3" => Box::new(Sm3::new(1e-8, shapes)),
         "came" => Box::new(Came::new(0.9, 0.999, 0.9995, 1e-8, shapes)),
-        other => panic!("unknown optimizer {other:?}"),
-    }
+        other => bail!("unknown optimizer {other:?} (known: {ALL:?})"),
+    })
 }
 
 /// All optimizer names known to `by_name` (ablation sweeps iterate this).
@@ -97,7 +102,7 @@ pub(crate) mod testutil {
         let shapes = vec![vec![13, 7], vec![5], vec![3, 4, 2]];
         let (mut params, grads) = fixture(&shapes, 42);
         let before = params.clone();
-        let mut opt = by_name(name, &shapes);
+        let mut opt = by_name(name, &shapes).expect("known optimizer");
         for _ in 0..5 {
             opt.step(&mut params, &grads, 1e-2);
         }
@@ -126,12 +131,19 @@ mod tests {
     }
 
     #[test]
+    fn unknown_name_errors_with_the_known_list() {
+        let err = by_name("adamw", &[vec![4, 4]]).unwrap_err().to_string();
+        assert!(err.contains("unknown optimizer"), "{err}");
+        assert!(err.contains("alada"), "should list known names: {err}");
+    }
+
+    #[test]
     fn overhead_ordering_matches_paper() {
         // Table IV's story: Adam overhead 2mn ≫ Adafactor/Alada O(m+n).
         let shapes = vec![vec![512, 384]];
-        let adam = by_name("adam", &shapes);
-        let adafactor = by_name("adafactor", &shapes);
-        let alada = by_name("alada", &shapes);
+        let adam = by_name("adam", &shapes).unwrap();
+        let adafactor = by_name("adafactor", &shapes).unwrap();
+        let alada = by_name("alada", &shapes).unwrap();
         assert_eq!(adam.state_overhead_bytes(), 2 * 512 * 384 * 4);
         assert!(adafactor.state_overhead_bytes() < adam.state_overhead_bytes() / 100);
         assert!(alada.state_overhead_bytes() < adam.state_overhead_bytes() / 100);

@@ -1,0 +1,154 @@
+//! `ShardedOptimizer` — ZeRO-style partitioned adapter over any optimizer.
+//!
+//! One logical optimizer, N physical shards: rank r constructs the
+//! wrapped optimizer over only the tensor shapes it owns (a contiguous,
+//! tensor-aligned slice of the flat parameter space from
+//! `shard::Partition`) and applies updates to exactly those tensors.
+//! Because every optimizer's state in this crate is per-tensor, the
+//! partitioned update is *bit-identical* to what the unsharded optimizer
+//! would do to the owned tensors given the same gradients — over one
+//! rank the adapter is exactly the wrapped optimizer, and across ranks
+//! the per-rank `state_overhead_bytes` (64-byte aligned, the alignment a
+//! real flat state buffer would need) sum to the unsharded total plus
+//! padding. Both properties are pinned in rust/tests/proptests.rs.
+
+use anyhow::Result;
+use std::ops::Range;
+
+use super::{by_name, Optimizer};
+use crate::shard::Partition;
+use crate::tensor::Tensor;
+
+/// Per-rank state slices are padded to this alignment (cache line /
+/// bucket boundary), the accounting a packed flat state buffer needs.
+pub const STATE_ALIGN: usize = 64;
+
+pub struct ShardedOptimizer {
+    inner: Box<dyn Optimizer + Send>,
+    /// Tensor indices (into the *full* parameter list) this rank owns.
+    owned: Range<usize>,
+    rank: usize,
+    ranks: usize,
+}
+
+impl ShardedOptimizer {
+    /// Build rank `rank`'s shard of optimizer `name` under `part`.
+    pub fn new(name: &str, part: &Partition, rank: usize) -> Result<ShardedOptimizer> {
+        let owned_shapes = part.owned_shapes(rank);
+        Ok(ShardedOptimizer {
+            inner: by_name(name, &owned_shapes)?,
+            owned: part.tensor_range(rank),
+            rank,
+            ranks: part.ranks(),
+        })
+    }
+
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    pub fn ranks(&self) -> usize {
+        self.ranks
+    }
+
+    /// Tensor indices this shard updates.
+    pub fn owned(&self) -> Range<usize> {
+        self.owned.clone()
+    }
+
+    /// State bytes without the alignment padding (exact-sum bookkeeping).
+    pub fn unpadded_state_bytes(&self) -> usize {
+        self.inner.state_overhead_bytes()
+    }
+}
+
+impl Optimizer for ShardedOptimizer {
+    /// `params`/`grads` are the FULL lists; only the owned contiguous
+    /// sub-range is read and updated.
+    fn step(&mut self, params: &mut [Tensor], grads: &[Tensor], lr: f32) {
+        let r = self.owned.clone();
+        self.inner.step(&mut params[r.clone()], &grads[r], lr);
+    }
+
+    fn state_overhead_bytes(&self) -> usize {
+        let b = self.inner.state_overhead_bytes();
+        (b + STATE_ALIGN - 1) / STATE_ALIGN * STATE_ALIGN
+    }
+
+    fn aliases_grad_slot(&self) -> bool {
+        self.inner.aliases_grad_slot()
+    }
+
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::testutil::fixture;
+
+    #[test]
+    fn one_rank_is_the_wrapped_optimizer_bit_for_bit() {
+        let shapes = vec![vec![9, 4], vec![6], vec![3, 2, 5]];
+        let part = Partition::plan(&shapes, 1);
+        let mut sharded = ShardedOptimizer::new("alada", &part, 0).unwrap();
+        let mut plain = by_name("alada", &shapes).unwrap();
+        let (mut pa, grads) = fixture(&shapes, 11);
+        let mut pb = pa.clone();
+        for _ in 0..6 {
+            sharded.step(&mut pa, &grads, 3e-3);
+            plain.step(&mut pb, &grads, 3e-3);
+        }
+        assert_eq!(pa, pb);
+    }
+
+    #[test]
+    fn shards_update_disjoint_tensors_identically_to_unsharded() {
+        // Stepping every shard == stepping the unsharded optimizer,
+        // bit-for-bit, because the partition is tensor-aligned.
+        let shapes = vec![vec![8, 8], vec![12], vec![6, 4], vec![10], vec![4, 4, 4]];
+        let ranks = 3;
+        let part = Partition::plan(&shapes, ranks);
+        let mut plain = by_name("alada", &shapes).unwrap();
+        let (mut pa, grads) = fixture(&shapes, 21);
+        let mut pb = pa.clone();
+        let mut shards: Vec<ShardedOptimizer> =
+            (0..ranks).map(|r| ShardedOptimizer::new("alada", &part, r).unwrap()).collect();
+        for _ in 0..5 {
+            plain.step(&mut pa, &grads, 1e-2);
+            for s in shards.iter_mut() {
+                s.step(&mut pb, &grads, 1e-2);
+            }
+        }
+        assert_eq!(pa, pb);
+    }
+
+    #[test]
+    fn padded_bytes_are_aligned_and_bounded() {
+        let shapes = vec![vec![33, 7], vec![5], vec![2, 9]];
+        for ranks in [1usize, 2, 3, 5] {
+            let part = Partition::plan(&shapes, ranks);
+            let total = by_name("alada", &shapes).unwrap().state_overhead_bytes();
+            let mut sum_padded = 0;
+            let mut sum_exact = 0;
+            for r in 0..ranks {
+                let s = ShardedOptimizer::new("alada", &part, r).unwrap();
+                assert_eq!(s.state_overhead_bytes() % STATE_ALIGN, 0);
+                assert!(s.state_overhead_bytes() >= s.unpadded_state_bytes());
+                assert!(s.state_overhead_bytes() - s.unpadded_state_bytes() < STATE_ALIGN);
+                sum_padded += s.state_overhead_bytes();
+                sum_exact += s.unpadded_state_bytes();
+            }
+            assert_eq!(sum_exact, total, "ranks={ranks}");
+            assert!(sum_padded >= total && sum_padded - total < ranks * STATE_ALIGN);
+        }
+    }
+
+    #[test]
+    fn unknown_name_is_a_result_error() {
+        let part = Partition::plan(&[vec![4, 4]], 2);
+        assert!(ShardedOptimizer::new("definitely-not-an-optimizer", &part, 0).is_err());
+    }
+}

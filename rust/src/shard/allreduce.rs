@@ -1,0 +1,245 @@
+//! Bucketed binomial-tree all-reduce over in-process channels.
+//!
+//! Every pair of ranks gets a dedicated mpsc channel, so a receive names
+//! its peer and messages between two ranks arrive in send order — the two
+//! properties that make the collectives deterministic without tags or
+//! sequence numbers. Reduction follows a fixed binomial tree (rank 0 as
+//! the root after re-indexing), so floating-point sums associate the same
+//! way on every run of a given rank count: `((r0+r1)+(r2+r3))+…` — the
+//! bit-for-bit determinism contract of the shard engine.
+//!
+//! Buffers are cut into fixed-size buckets and streamed through the tree:
+//! a leaf pushes bucket k+1 while bucket k is still climbing (channel
+//! sends don't block), so the reduce is pipelined without any barrier —
+//! inter-rank synchronisation is only ever a point-to-point `recv`.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+
+/// One rank's endpoint of the fully-connected channel mesh.
+pub struct Comm {
+    pub rank: usize,
+    pub ranks: usize,
+    /// `tx[d]` sends to rank d (the self entry exists but is never used).
+    tx: Vec<Sender<Vec<f32>>>,
+    /// `rx[s]` receives from rank s.
+    rx: Vec<Receiver<Vec<f32>>>,
+}
+
+/// Build the mesh: one `Comm` per rank, to be moved into its thread.
+pub fn mesh(ranks: usize) -> Vec<Comm> {
+    assert!(ranks >= 1);
+    let mut txs: Vec<Vec<Sender<Vec<f32>>>> = (0..ranks).map(|_| Vec::with_capacity(ranks)).collect();
+    let mut rxs: Vec<Vec<Receiver<Vec<f32>>>> = (0..ranks).map(|_| Vec::with_capacity(ranks)).collect();
+    for src in 0..ranks {
+        for dst in 0..ranks {
+            let (t, r) = channel();
+            txs[src].push(t); // txs[src][dst]
+            rxs[dst].push(r); // rxs[dst][src] (src ascends in the outer loop)
+        }
+    }
+    txs.into_iter()
+        .zip(rxs)
+        .enumerate()
+        .map(|(rank, (tx, rx))| Comm { rank, ranks, tx, rx })
+        .collect()
+}
+
+impl Comm {
+    fn send(&self, to: usize, data: &[f32]) {
+        self.tx[to].send(data.to_vec()).expect("allreduce peer hung up");
+    }
+
+    fn recv(&self, from: usize) -> Vec<f32> {
+        self.rx[from].recv().expect("allreduce peer hung up")
+    }
+
+    /// Elementwise sum of `buf` across all ranks, in buckets of
+    /// `bucket_elems`; on return every rank holds the identical sum.
+    pub fn all_reduce_sum(&self, buf: &mut [f32], bucket_elems: usize) {
+        if self.ranks == 1 || buf.is_empty() {
+            return;
+        }
+        let be = bucket_elems.max(1);
+        // Reduce phase: every bucket climbs to rank 0. Leaves stream all
+        // their buckets without waiting (pipelining across tree levels).
+        let mut start = 0;
+        while start < buf.len() {
+            let end = (start + be).min(buf.len());
+            self.reduce_bucket(&mut buf[start..end]);
+            start = end;
+        }
+        // Broadcast phase: the finished sums fan back out.
+        let mut start = 0;
+        while start < buf.len() {
+            let end = (start + be).min(buf.len());
+            self.bcast_bucket(0, &mut buf[start..end]);
+            start = end;
+        }
+    }
+
+    /// All-reduce followed by a 1/ranks scale — the gradient-averaging
+    /// collective. Every rank applies the identical scale to the identical
+    /// sum, so replicas stay bit-equal.
+    pub fn all_reduce_mean(&self, buf: &mut [f32], bucket_elems: usize) {
+        self.all_reduce_sum(buf, bucket_elems);
+        if self.ranks > 1 {
+            let inv = 1.0 / self.ranks as f32;
+            for x in buf.iter_mut() {
+                *x *= inv;
+            }
+        }
+    }
+
+    /// Binomial-tree broadcast of `buf` from `root` to every rank, in
+    /// buckets (the all-gather building block: each rank broadcasts its
+    /// owned parameter slice after stepping).
+    pub fn broadcast(&self, root: usize, buf: &mut [f32], bucket_elems: usize) {
+        if self.ranks == 1 || buf.is_empty() {
+            return;
+        }
+        let be = bucket_elems.max(1);
+        let mut start = 0;
+        while start < buf.len() {
+            let end = (start + be).min(buf.len());
+            self.bcast_bucket(root, &mut buf[start..end]);
+            start = end;
+        }
+    }
+
+    /// Climb one bucket to rank 0: at stride s, ranks ≡ s (mod 2s) hand
+    /// their partial sum to rank − s and drop out; survivors accumulate.
+    /// The addition order is a fixed function of rank count alone.
+    fn reduce_bucket(&self, bucket: &mut [f32]) {
+        let mut stride = 1;
+        while stride < self.ranks {
+            if self.rank % (2 * stride) == 0 {
+                let partner = self.rank + stride;
+                if partner < self.ranks {
+                    let got = self.recv(partner);
+                    debug_assert_eq!(got.len(), bucket.len());
+                    for (x, y) in bucket.iter_mut().zip(&got) {
+                        *x += y;
+                    }
+                }
+            } else {
+                self.send(self.rank - stride, bucket);
+                return;
+            }
+            stride *= 2;
+        }
+    }
+
+    /// Binomial broadcast from `root`, descending strides; each non-root
+    /// rank receives exactly once, then forwards to lower levels.
+    fn bcast_bucket(&self, root: usize, bucket: &mut [f32]) {
+        let vr = (self.rank + self.ranks - root) % self.ranks;
+        let unmap = |v: usize| (v + root) % self.ranks;
+        let mut top = 1usize;
+        while top < self.ranks {
+            top <<= 1;
+        }
+        let mut stride = top >> 1;
+        while stride > 0 {
+            let pos = vr % (2 * stride);
+            if pos == 0 {
+                let partner = vr + stride;
+                if partner < self.ranks {
+                    self.send(unmap(partner), bucket);
+                }
+            } else if pos == stride {
+                let got = self.recv(unmap(vr - stride));
+                debug_assert_eq!(got.len(), bucket.len());
+                bucket.copy_from_slice(&got);
+            }
+            stride >>= 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Run `f` on every rank of a fresh mesh; returns per-rank results.
+    fn on_mesh<T: Send>(ranks: usize, f: impl Fn(Comm) -> T + Sync) -> Vec<T> {
+        let comms = mesh(ranks);
+        std::thread::scope(|s| {
+            let handles: Vec<_> = comms.into_iter().map(|c| s.spawn(|| f(c))).collect();
+            handles.into_iter().map(|h| h.join().expect("rank thread")).collect()
+        })
+    }
+
+    #[test]
+    fn sum_is_exact_on_integers() {
+        for ranks in [1usize, 2, 3, 4, 5, 8] {
+            let out = on_mesh(ranks, |c| {
+                // rank r contributes r+1 at every element → sum = ranks(ranks+1)/2
+                let mut buf = vec![(c.rank + 1) as f32; 10];
+                c.all_reduce_sum(&mut buf, 3); // ragged buckets on purpose
+                buf
+            });
+            let want = (ranks * (ranks + 1) / 2) as f32;
+            for (r, buf) in out.iter().enumerate() {
+                assert!(buf.iter().all(|&x| x == want), "ranks={ranks} rank={r}: {buf:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn mean_divides_by_ranks() {
+        let out = on_mesh(4, |c| {
+            let mut buf = vec![(c.rank * 2) as f32; 5]; // 0,2,4,6 → mean 3
+            c.all_reduce_mean(&mut buf, 2);
+            buf
+        });
+        for buf in &out {
+            assert!(buf.iter().all(|&x| x == 3.0));
+        }
+    }
+
+    #[test]
+    fn broadcast_from_every_root() {
+        for ranks in [2usize, 3, 6] {
+            for root in 0..ranks {
+                let out = on_mesh(ranks, |c| {
+                    let mut buf = if c.rank == root {
+                        vec![root as f32 + 0.5; 7]
+                    } else {
+                        vec![0.0; 7]
+                    };
+                    c.broadcast(root, &mut buf, 2);
+                    buf
+                });
+                for (r, buf) in out.iter().enumerate() {
+                    assert!(
+                        buf.iter().all(|&x| x == root as f32 + 0.5),
+                        "ranks={ranks} root={root} rank={r}: {buf:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn reduction_order_is_fixed() {
+        // Two runs must agree bit-for-bit even with values whose sum
+        // depends on association order in f32.
+        let run = || {
+            on_mesh(4, |c| {
+                let mut buf: Vec<f32> = (0..6)
+                    .map(|i| 1.0e-7 + (c.rank as f32 + 1.0) * 1.0e7 * (i as f32 + 1.0))
+                    .collect();
+                c.all_reduce_sum(&mut buf, 4);
+                buf
+            })
+        };
+        let (a, b) = (run(), run());
+        for (x, y) in a.iter().flatten().zip(b.iter().flatten()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        // and every rank holds the identical result
+        for buf in &a {
+            assert_eq!(buf, &a[0]);
+        }
+    }
+}

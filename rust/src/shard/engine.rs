@@ -1,0 +1,253 @@
+//! The data-parallel training engine: N replica threads, one partition.
+//!
+//! Each rank owns (a) a full replica of the parameters, (b) a disjoint
+//! micro-batch of every global batch, and (c) — the ZeRO-style part — the
+//! optimizer state for its contiguous slice of the flat parameter space
+//! only. A step is: local gradient → bucketed tree all-reduce (mean) →
+//! partitioned optimizer update on the owned slice → all-gather of the
+//! updated slices. All inter-rank synchronisation is point-to-point
+//! channel traffic (no barrier), and the reduce/broadcast trees use a
+//! fixed association order, so a run is bit-for-bit deterministic for a
+//! given rank count.
+//!
+//! Trajectory contract: because the partition is tensor-aligned, the
+//! partitioned update is bit-identical to the unsharded optimizer given
+//! the same averaged gradient; the only N-dependence is the association
+//! order of the gradient average (micro-means combined by the tree vs a
+//! single full-batch mean). N-rank training therefore tracks the 1-rank
+//! trajectory to within float-reassociation tolerance — the parity test
+//! in rust/tests/shard_parity.rs pins this down.
+
+use anyhow::{ensure, Result};
+
+use crate::optim::{Optimizer, Schedule, ShardedOptimizer};
+use crate::tensor::Tensor;
+
+use super::allreduce::{mesh, Comm};
+use super::partition::Partition;
+
+/// A task the shard engine can train: deterministic initial parameters
+/// plus per-rank gradient replicas that partition each step's global
+/// batch disjointly (rank r of N takes the r-th micro-batch).
+pub trait ShardTask: Sync {
+    /// Parameter shapes, in flat packing order.
+    fn shapes(&self) -> Vec<Vec<usize>>;
+    /// Initial parameters — must be identical on every call (replicas
+    /// start bit-equal).
+    fn init_params(&self) -> Vec<Tensor>;
+    /// Gradient replica for `rank` of `ranks`.
+    fn replica(&self, rank: usize, ranks: usize) -> Result<Box<dyn Replica>>;
+}
+
+/// One rank's gradient source.
+pub trait Replica: Send {
+    /// Write the micro-batch mean gradient at `params` for `step` into
+    /// `out` (same shapes/order as the task's parameters); returns the
+    /// micro-batch mean loss. Must be a deterministic function of
+    /// (task seed, step, rank, params).
+    fn grad(&mut self, params: &[Tensor], step: usize, out: &mut [Tensor]) -> f32;
+}
+
+/// Engine knobs (`shard-train` CLI flags map 1:1 onto these).
+#[derive(Clone, Debug)]
+pub struct ShardConfig {
+    /// Number of replica threads / optimizer-state partitions.
+    pub ranks: usize,
+    /// All-reduce bucket size in KiB of f32s.
+    pub bucket_kb: usize,
+    pub steps: usize,
+}
+
+impl ShardConfig {
+    pub fn bucket_elems(&self) -> usize {
+        (self.bucket_kb * 1024 / 4).max(1)
+    }
+}
+
+impl Default for ShardConfig {
+    fn default() -> Self {
+        ShardConfig { ranks: 2, bucket_kb: 64, steps: 100 }
+    }
+}
+
+/// What a sharded run produces.
+#[derive(Clone, Debug)]
+pub struct ShardOutcome {
+    /// Global mean loss per step (identical on every rank; recorded once).
+    pub losses: Vec<f64>,
+    /// Final parameters (replicas end bit-equal; rank 0's copy).
+    pub params: Vec<Tensor>,
+    /// Per-rank optimizer state bytes (64-byte-aligned slices).
+    pub per_rank_state_bytes: Vec<usize>,
+    pub wall_secs: f64,
+}
+
+impl ShardOutcome {
+    pub fn steps_per_sec(&self) -> f64 {
+        self.losses.len() as f64 / self.wall_secs.max(1e-9)
+    }
+
+    pub fn max_rank_state_bytes(&self) -> usize {
+        self.per_rank_state_bytes.iter().copied().max().unwrap_or(0)
+    }
+}
+
+struct RankOut {
+    losses: Vec<f64>,
+    params: Vec<Tensor>,
+    state_bytes: usize,
+}
+
+/// Train `task` with `opt` under `schedule` for `cfg.steps` updates on
+/// `cfg.ranks` data-parallel replicas.
+pub fn train(
+    task: &dyn ShardTask,
+    opt: &str,
+    schedule: &Schedule,
+    cfg: &ShardConfig,
+) -> Result<ShardOutcome> {
+    ensure!(cfg.ranks >= 1, "shard engine needs at least one rank");
+    let shapes = task.shapes();
+    ensure!(!shapes.is_empty(), "shard engine needs at least one parameter");
+    let part = Partition::plan(&shapes, cfg.ranks);
+
+    // Build everything fallible in the parent thread so errors (unknown
+    // optimizer, bad batch split) surface as Results, not thread panics.
+    let mut lanes = Vec::with_capacity(cfg.ranks);
+    for (rank, comm) in mesh(cfg.ranks).into_iter().enumerate() {
+        let sopt = ShardedOptimizer::new(opt, &part, rank)?;
+        let replica = task.replica(rank, cfg.ranks)?;
+        lanes.push((rank, comm, sopt, replica, task.init_params()));
+    }
+
+    let bucket = cfg.bucket_elems();
+    let steps = cfg.steps;
+    let t0 = std::time::Instant::now();
+    let mut outs: Vec<RankOut> = std::thread::scope(|s| {
+        let part = &part;
+        let handles: Vec<_> = lanes
+            .into_iter()
+            .map(|(rank, comm, sopt, replica, init)| {
+                let schedule = schedule.clone();
+                s.spawn(move || run_rank(rank, part, comm, sopt, replica, init, &schedule, steps, bucket))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("replica thread panicked")).collect()
+    });
+    let wall_secs = t0.elapsed().as_secs_f64();
+
+    debug_assert!(
+        outs.iter().all(|o| o.params == outs[0].params),
+        "replicas diverged — all-gather is broken"
+    );
+    let per_rank_state_bytes = outs.iter().map(|o| o.state_bytes).collect();
+    let first = outs.swap_remove(0);
+    Ok(ShardOutcome { losses: first.losses, params: first.params, per_rank_state_bytes, wall_secs })
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_rank(
+    rank: usize,
+    part: &Partition,
+    comm: Comm,
+    mut opt: ShardedOptimizer,
+    mut replica: Box<dyn Replica>,
+    mut params: Vec<Tensor>,
+    schedule: &Schedule,
+    steps: usize,
+    bucket: usize,
+) -> RankOut {
+    let slots = part.slots();
+    let total = part.total_elems();
+    let mut grads: Vec<Tensor> = slots.iter().map(|s| Tensor::zeros(&s.shape)).collect();
+    // Flat exchange buffer: gradients + one trailing loss slot (the loss
+    // rides the same reduce, so every rank sees the global mean for free).
+    let mut flat = vec![0.0f32; total + 1];
+    let mut losses = Vec::with_capacity(steps);
+
+    for step in 0..steps {
+        let loss = replica.grad(&params, step, &mut grads);
+        for (slot, g) in slots.iter().zip(&grads) {
+            flat[slot.offset..slot.offset + slot.elems].copy_from_slice(g.data());
+        }
+        flat[total] = loss;
+        comm.all_reduce_mean(&mut flat, bucket);
+        losses.push(flat[total] as f64);
+
+        // Partitioned update: unpack + step the owned tensors only.
+        for i in part.tensor_range(rank) {
+            let s = &slots[i];
+            grads[i].data_mut().copy_from_slice(&flat[s.offset..s.offset + s.elems]);
+        }
+        opt.step(&mut params, &grads, schedule.at(step));
+
+        // All-gather: every rank broadcasts its updated slice.
+        for i in part.tensor_range(rank) {
+            let s = &slots[i];
+            flat[s.offset..s.offset + s.elems].copy_from_slice(params[i].data());
+        }
+        for root in 0..comm.ranks {
+            let r = part.elem_range(root);
+            comm.broadcast(root, &mut flat[r], bucket);
+        }
+        for (slot, p) in slots.iter().zip(params.iter_mut()) {
+            p.data_mut().copy_from_slice(&flat[slot.offset..slot.offset + slot.elems]);
+        }
+    }
+
+    RankOut { losses, params, state_bytes: opt.state_overhead_bytes() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::Optimizer;
+    use crate::shard::mlp::MlpTask;
+
+    #[test]
+    fn engine_trains_and_loss_decreases() {
+        // batch == n_samples → every step is the same full batch, so SGD
+        // with a small lr descends deterministically
+        let task = MlpTask::new(8, 12, 2, 4, 12, 12, 3);
+        let cfg = ShardConfig { ranks: 3, bucket_kb: 1, steps: 40 };
+        let sched = Schedule::Constant { eta0: 1e-2 };
+        let out = train(&task, "sgd", &sched, &cfg).expect("train");
+        assert_eq!(out.losses.len(), 40);
+        assert!(out.losses.iter().all(|l| l.is_finite()));
+        assert!(out.losses.last().unwrap() < out.losses.first().unwrap());
+        assert_eq!(out.per_rank_state_bytes.len(), 3);
+    }
+
+    #[test]
+    fn engine_runs_every_optimizer() {
+        let task = MlpTask::new(6, 8, 2, 3, 32, 8, 5);
+        let cfg = ShardConfig { ranks: 2, bucket_kb: 1, steps: 4 };
+        for name in crate::optim::ALL {
+            let out = train(&task, name, &Schedule::Constant { eta0: 1e-3 }, &cfg)
+                .unwrap_or_else(|e| panic!("{name}: {e:#}"));
+            assert!(out.losses.iter().all(|l| l.is_finite()), "{name}");
+        }
+    }
+
+    #[test]
+    fn unknown_optimizer_is_an_error_not_a_panic() {
+        let task = MlpTask::new(4, 6, 1, 2, 32, 8, 1);
+        let cfg = ShardConfig { ranks: 2, bucket_kb: 1, steps: 1 };
+        let err = train(&task, "nope", &Schedule::Constant { eta0: 1e-2 }, &cfg);
+        assert!(err.is_err());
+        assert!(format!("{:#}", err.unwrap_err()).contains("unknown optimizer"));
+    }
+
+    #[test]
+    fn state_bytes_sum_matches_unsharded() {
+        let task = MlpTask::new(8, 12, 3, 4, 64, 12, 3);
+        let shapes = task.shapes();
+        let unsharded = crate::optim::by_name("alada", &shapes).unwrap().state_overhead_bytes();
+        let cfg = ShardConfig { ranks: 4, bucket_kb: 1, steps: 1 };
+        let out = train(&task, "alada", &Schedule::Constant { eta0: 1e-2 }, &cfg).unwrap();
+        let sum: usize = out.per_rank_state_bytes.iter().sum();
+        // per-rank slices are 64-byte aligned; the sum is the unsharded
+        // total plus that padding only
+        assert!(sum >= unsharded && sum - unsharded < 4 * 64, "{sum} vs {unsharded}");
+    }
+}

@@ -1,0 +1,323 @@
+//! A multi-tensor synthetic task for the shard engine.
+//!
+//! The theory workloads (`exp/workloads.rs`) optimise a single matrix —
+//! fine for convergence plots, useless for exercising a parameter
+//! *partition*. This task is a depth-configurable tanh MLP regressing a
+//! planted teacher network: 2·depth + 2 tensors of varied shapes, so the
+//! layout planner has real cut points, and the gradient is an exact
+//! closed-form backward pass over the `tensor::ops` matmuls — fully
+//! deterministic, no runtime artifacts needed.
+//!
+//! Batch selection is a pure function of (seed, step): every rank draws
+//! the same global index list and takes its own contiguous micro-slice,
+//! which is what makes the N-rank gradient average a reassociation of
+//! the 1-rank one (the parity contract in engine.rs). When
+//! `batch == n_samples` the global batch is the whole dataset in order —
+//! deterministic full-batch descent for tests.
+
+use anyhow::{ensure, Result};
+
+use crate::tensor::{ops, Tensor};
+use crate::util::Rng;
+
+use super::engine::{Replica, ShardTask};
+
+/// Teacher-student MLP regression: y = MLP_teacher(x), fit a same-shape
+/// student from a different init.
+pub struct MlpTask {
+    dim: usize,
+    hidden: usize,
+    /// Number of hidden (tanh) layers, ≥ 1.
+    depth: usize,
+    out: usize,
+    n_samples: usize,
+    batch: usize,
+    seed: u64,
+    features: Tensor,
+    targets: Tensor,
+}
+
+impl MlpTask {
+    pub fn new(
+        dim: usize,
+        hidden: usize,
+        depth: usize,
+        out: usize,
+        n_samples: usize,
+        batch: usize,
+        seed: u64,
+    ) -> MlpTask {
+        assert!(depth >= 1 && dim >= 1 && hidden >= 1 && out >= 1);
+        assert!(n_samples >= 1 && batch >= 1);
+        let mut rng = Rng::new(seed);
+        let features = Tensor::from_fn(&[n_samples, dim], |_| rng.normal());
+        let teacher = init_net(dim, hidden, depth, out, &mut rng);
+        let targets = forward(&teacher, &features, depth).1;
+        MlpTask { dim, hidden, depth, out, n_samples, batch, seed, features, targets }
+    }
+
+    pub fn global_batch(&self) -> usize {
+        self.batch
+    }
+
+    /// Mean loss over the whole dataset (reporting/parity helper).
+    pub fn full_loss(&self, params: &[Tensor]) -> f32 {
+        let (_, pred) = forward(params, &self.features, self.depth);
+        let e = pred.sub(&self.targets);
+        0.5 * e.sq_norm() / self.n_samples as f32
+    }
+
+    /// The global index list for `step` — identical on every rank.
+    fn indices(&self, step: usize) -> Vec<usize> {
+        if self.batch == self.n_samples {
+            return (0..self.n_samples).collect();
+        }
+        let mut rng = Rng::with_stream(self.seed, 2 + step as u64);
+        (0..self.batch).map(|_| rng.below_usize(self.n_samples)).collect()
+    }
+}
+
+impl ShardTask for MlpTask {
+    fn shapes(&self) -> Vec<Vec<usize>> {
+        let (d, h, o) = (self.dim, self.hidden, self.out);
+        let mut shapes = vec![vec![h, d], vec![h]];
+        for _ in 1..self.depth {
+            shapes.push(vec![h, h]);
+            shapes.push(vec![h]);
+        }
+        shapes.push(vec![o, h]);
+        shapes.push(vec![o]);
+        shapes
+    }
+
+    fn init_params(&self) -> Vec<Tensor> {
+        // Fixed stream 1 ≠ the data/teacher stream, so the student starts
+        // away from the teacher; identical on every call by construction.
+        let mut rng = Rng::with_stream(self.seed, 1);
+        init_net(self.dim, self.hidden, self.depth, self.out, &mut rng)
+    }
+
+    fn replica(&self, rank: usize, ranks: usize) -> Result<Box<dyn Replica>> {
+        ensure!(ranks >= 1 && rank < ranks, "bad rank {rank} of {ranks}");
+        ensure!(
+            self.batch % ranks == 0,
+            "global batch {} must divide evenly across {ranks} ranks",
+            self.batch
+        );
+        let micro = self.batch / ranks;
+        // Every step's index list is recomputed from (seed, step), so the
+        // replica only needs its own copy of the dataset.
+        Ok(Box::new(MlpReplica {
+            task: MlpTask {
+                dim: self.dim,
+                hidden: self.hidden,
+                depth: self.depth,
+                out: self.out,
+                n_samples: self.n_samples,
+                batch: self.batch,
+                seed: self.seed,
+                features: self.features.clone(),
+                targets: self.targets.clone(),
+            },
+            rank,
+            micro,
+        }))
+    }
+}
+
+struct MlpReplica {
+    task: MlpTask,
+    rank: usize,
+    micro: usize,
+}
+
+impl Replica for MlpReplica {
+    fn grad(&mut self, params: &[Tensor], step: usize, out: &mut [Tensor]) -> f32 {
+        let t = &self.task;
+        let idx = t.indices(step);
+        let mine = &idx[self.rank * self.micro..(self.rank + 1) * self.micro];
+        let x = gather_rows(&t.features, mine);
+        let y = gather_rows(&t.targets, mine);
+        backward(params, &x, &y, t.depth, out)
+    }
+}
+
+fn init_net(d: usize, h: usize, depth: usize, o: usize, rng: &mut Rng) -> Vec<Tensor> {
+    let mut layer = |rows: usize, cols: usize, params: &mut Vec<Tensor>| {
+        let scale = 1.0 / (cols as f32).sqrt();
+        params.push(Tensor::from_fn(&[rows, cols], |_| rng.normal() * scale));
+        params.push(Tensor::from_fn(&[rows], |_| rng.normal() * 0.1));
+    };
+    let mut params = Vec::with_capacity(2 * depth + 2);
+    layer(h, d, &mut params);
+    for _ in 1..depth {
+        layer(h, h, &mut params);
+    }
+    layer(o, h, &mut params);
+    params
+}
+
+/// Forward pass; returns the per-layer tanh activations (needed by the
+/// backward pass) and the linear prediction.
+fn forward(params: &[Tensor], x: &Tensor, depth: usize) -> (Vec<Tensor>, Tensor) {
+    let mut acts: Vec<Tensor> = Vec::with_capacity(depth);
+    for l in 0..depth {
+        let input = if l == 0 { x } else { &acts[l - 1] };
+        let (w, b) = (&params[2 * l], &params[2 * l + 1]);
+        let mut z = ops::matmul_nt(input, w);
+        add_bias_rows(&mut z, b.data());
+        z.map_inplace(f32::tanh);
+        acts.push(z);
+    }
+    let (w, b) = (&params[2 * depth], &params[2 * depth + 1]);
+    let mut pred = ops::matmul_nt(&acts[depth - 1], w);
+    add_bias_rows(&mut pred, b.data());
+    (acts, pred)
+}
+
+/// Closed-form backward pass for ½·mean‖pred − y‖²; writes the gradient
+/// per tensor into `out` and returns the micro-batch mean loss.
+fn backward(params: &[Tensor], x: &Tensor, y: &Tensor, depth: usize, out: &mut [Tensor]) -> f32 {
+    let b = x.shape()[0];
+    let (acts, pred) = forward(params, x, depth);
+    let e = pred.sub(y);
+    let loss = 0.5 * e.sq_norm() / b as f32;
+
+    // output layer
+    let dp = e.scale(1.0 / b as f32);
+    let a_last = &acts[depth - 1];
+    write_grad(&mut out[2 * depth], ops::matmul_tn(&dp, a_last));
+    write_vec_grad(&mut out[2 * depth + 1], colsum(&dp));
+    let mut d = ops::matmul(&dp, &params[2 * depth]); // (B, h)
+
+    // hidden layers, last to first
+    for l in (0..depth).rev() {
+        let a = &acts[l];
+        let dh = d.zip(a, |g, ai| g * (1.0 - ai * ai));
+        let input = if l == 0 { x } else { &acts[l - 1] };
+        write_grad(&mut out[2 * l], ops::matmul_tn(&dh, input));
+        write_vec_grad(&mut out[2 * l + 1], colsum(&dh));
+        if l > 0 {
+            d = ops::matmul(&dh, &params[2 * l]);
+        }
+    }
+    loss
+}
+
+fn add_bias_rows(t: &mut Tensor, bias: &[f32]) {
+    let n = bias.len();
+    for row in t.data_mut().chunks_exact_mut(n) {
+        for (x, &b) in row.iter_mut().zip(bias) {
+            *x += b;
+        }
+    }
+}
+
+fn colsum(t: &Tensor) -> Vec<f32> {
+    let (m, n) = (t.shape()[0], t.shape()[1]);
+    let data = t.data();
+    let mut out = vec![0.0f32; n];
+    for i in 0..m {
+        for j in 0..n {
+            out[j] += data[i * n + j];
+        }
+    }
+    out
+}
+
+fn gather_rows(t: &Tensor, idx: &[usize]) -> Tensor {
+    let n = t.shape()[1];
+    let data = t.data();
+    let mut out = Vec::with_capacity(idx.len() * n);
+    for &i in idx {
+        out.extend_from_slice(&data[i * n..(i + 1) * n]);
+    }
+    Tensor::new(out, &[idx.len(), n])
+}
+
+fn write_grad(out: &mut Tensor, g: Tensor) {
+    out.data_mut().copy_from_slice(g.data());
+}
+
+fn write_vec_grad(out: &mut Tensor, g: Vec<f32>) {
+    out.data_mut().copy_from_slice(&g);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_init_agree() {
+        let task = MlpTask::new(5, 7, 3, 2, 16, 8, 1);
+        let shapes = task.shapes();
+        assert_eq!(shapes.len(), 2 * 3 + 2);
+        let params = task.init_params();
+        for (p, s) in params.iter().zip(&shapes) {
+            assert_eq!(p.shape(), s.as_slice());
+        }
+        // init must be reproducible call-to-call
+        assert_eq!(task.init_params(), params);
+    }
+
+    #[test]
+    fn backward_matches_finite_differences() {
+        let task = MlpTask::new(3, 4, 2, 2, 6, 6, 9);
+        let params = task.init_params();
+        let mut grads: Vec<Tensor> = task.shapes().iter().map(|s| Tensor::zeros(s)).collect();
+        let x = task.features.clone();
+        let y = task.targets.clone();
+        let loss = backward(&params, &x, &y, 2, &mut grads);
+        assert!((loss - task.full_loss(&params)).abs() < 1e-6);
+        // probe a few coordinates of every tensor against central differences
+        let eps = 1e-3f32;
+        for k in 0..params.len() {
+            for probe in [0, params[k].len() / 2, params[k].len() - 1] {
+                let mut plus = params.clone();
+                plus[k].data_mut()[probe] += eps;
+                let mut minus = params.clone();
+                minus[k].data_mut()[probe] -= eps;
+                let fd = (task.full_loss(&plus) - task.full_loss(&minus)) / (2.0 * eps);
+                let an = grads[k].data()[probe];
+                assert!(
+                    (fd - an).abs() < 2e-3 * (1.0 + an.abs()),
+                    "tensor {k} elem {probe}: analytic {an} vs fd {fd}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn replicas_partition_the_global_batch() {
+        let task = MlpTask::new(4, 5, 1, 2, 32, 8, 2);
+        let params = task.init_params();
+        let mut full: Vec<Tensor> = task.shapes().iter().map(|s| Tensor::zeros(s)).collect();
+        let mut r0 = task.replica(0, 1).unwrap();
+        let l_full = r0.grad(&params, 3, &mut full);
+
+        // mean of the per-rank micro gradients == the full gradient
+        let ranks = 4;
+        let mut acc: Vec<Tensor> = task.shapes().iter().map(|s| Tensor::zeros(s)).collect();
+        let mut l_acc = 0.0f32;
+        for rank in 0..ranks {
+            let mut rep = task.replica(rank, ranks).unwrap();
+            let mut g: Vec<Tensor> = task.shapes().iter().map(|s| Tensor::zeros(s)).collect();
+            l_acc += rep.grad(&params, 3, &mut g) / ranks as f32;
+            for (a, gi) in acc.iter_mut().zip(&g) {
+                a.axpy_inplace(gi, 1.0 / ranks as f32);
+            }
+        }
+        assert!((l_full - l_acc).abs() < 1e-5 * (1.0 + l_full.abs()));
+        for (a, f) in acc.iter().zip(&full) {
+            for (x, y) in a.data().iter().zip(f.data()) {
+                assert!((x - y).abs() < 1e-5 * (1.0 + y.abs()), "{x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn uneven_split_is_rejected() {
+        let task = MlpTask::new(4, 5, 1, 2, 32, 9, 2);
+        assert!(task.replica(0, 2).is_err());
+    }
+}

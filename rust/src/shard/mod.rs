@@ -1,0 +1,32 @@
+//! Sharded data-parallel training engine (ZeRO-style state partitioning).
+//!
+//! The paper's selling point is O(m + n) optimizer state; this subsystem
+//! is where the repo *spends* that saving instead of only measuring it.
+//! N replica threads train the same model on disjoint micro-batches;
+//! gradients meet in a bucketed, fixed-order tree all-reduce
+//! (`allreduce`); and the optimizer state — Alada's rank-one factors
+//! included — is partitioned across ranks at tensor granularity
+//! (`partition`), so each rank maintains only its contiguous slice:
+//! per-rank Alada overhead falls as ~Σ(m+n)/N down to the
+//! single-largest-tensor floor. The update itself is applied through
+//! `optim::ShardedOptimizer`, which wraps any `Optimizer` over the owned
+//! shapes, and the refreshed parameter slices fan back out through the
+//! same tree (`engine`).
+//!
+//! Guarantees:
+//! * bit-for-bit deterministic for a fixed rank count (fixed reduction
+//!   order, point-to-point channels only);
+//! * N-rank trajectories match the 1-rank trajectory up to float
+//!   reassociation of the gradient average (rust/tests/shard_parity.rs);
+//! * per-rank `state_overhead_bytes` sums to the unsharded total plus
+//!   64-byte alignment padding only.
+
+pub mod allreduce;
+pub mod engine;
+pub mod mlp;
+pub mod partition;
+
+pub use allreduce::{mesh, Comm};
+pub use engine::{train, Replica, ShardConfig, ShardOutcome, ShardTask};
+pub use mlp::MlpTask;
+pub use partition::Partition;

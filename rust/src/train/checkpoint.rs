@@ -5,6 +5,12 @@
 //! The flat-packed artifact signature makes this trivially portable —
 //! a checkpoint written by any run restores into any session compiled
 //! from the same artifact.
+//!
+//! The header is untrusted input: element counts are validated against
+//! the session's expected sizes — and the payload length against the
+//! file size — *before* any payload allocation, so a corrupt or
+//! adversarial header fails with a clear error instead of a bogus
+//! multi-gigabyte allocation.
 
 use std::collections::BTreeMap;
 use std::io::{Read, Write};
@@ -15,53 +21,122 @@ use anyhow::{bail, Context, Result};
 use crate::runtime::TrainSession;
 use crate::util::Json;
 
+/// Longest header line we accept; a missing newline in a corrupt file
+/// must not turn into an unbounded read.
+const MAX_HEADER_BYTES: usize = 4096;
+
 /// Save a session's full training state.
 pub fn save<P: AsRef<Path>>(path: P, sess: &TrainSession) -> Result<()> {
+    save_raw(path, sess.name(), sess.t, &sess.params, &sess.opt_state)
+}
+
+/// Session-independent writer (also the test seam).
+pub fn save_raw<P: AsRef<Path>>(
+    path: P,
+    artifact: &str,
+    t: i32,
+    params: &[f32],
+    opt_state: &[f32],
+) -> Result<()> {
     if let Some(dir) = path.as_ref().parent() {
         std::fs::create_dir_all(dir)?;
     }
     let mut header = BTreeMap::new();
-    header.insert("artifact".to_string(), Json::Str(sess.name().to_string()));
-    header.insert("t".to_string(), Json::Num(sess.t as f64));
-    header.insert("param_elems".to_string(), Json::Num(sess.params.len() as f64));
-    header.insert("state_elems".to_string(), Json::Num(sess.opt_state.len() as f64));
+    header.insert("artifact".to_string(), Json::Str(artifact.to_string()));
+    header.insert("t".to_string(), Json::Num(t as f64));
+    header.insert("param_elems".to_string(), Json::Num(params.len() as f64));
+    header.insert("state_elems".to_string(), Json::Num(opt_state.len() as f64));
     let mut f = std::io::BufWriter::new(std::fs::File::create(&path)?);
     writeln!(f, "{}", Json::Obj(header).to_string_compact())?;
-    write_f32s(&mut f, &sess.params)?;
-    write_f32s(&mut f, &sess.opt_state)?;
+    write_f32s(&mut f, params)?;
+    write_f32s(&mut f, opt_state)?;
+    // Flush explicitly: an error surfaced during BufWriter drop would be
+    // swallowed and a truncated save would report success.
+    f.flush()?;
     Ok(())
 }
 
 /// Restore into an existing session (artifact names must match).
 pub fn load<P: AsRef<Path>>(path: P, sess: &mut TrainSession) -> Result<()> {
+    let (params, opt_state, t) =
+        load_raw(path, sess.name(), sess.params.len(), sess.opt_state.len())?;
+    sess.params = params;
+    sess.opt_state = opt_state;
+    sess.t = t;
+    Ok(())
+}
+
+/// Session-independent loader: validates the header against the expected
+/// artifact/sizes and the payload against the file length, then reads.
+pub fn load_raw<P: AsRef<Path>>(
+    path: P,
+    artifact: &str,
+    param_elems: usize,
+    state_elems: usize,
+) -> Result<(Vec<f32>, Vec<f32>, i32)> {
+    let path = path.as_ref();
+    let file_len = std::fs::metadata(path)
+        .with_context(|| format!("checkpoint {path:?}"))?
+        .len();
     let mut f = std::io::BufReader::new(
-        std::fs::File::open(&path).with_context(|| format!("checkpoint {:?}", path.as_ref()))?,
+        std::fs::File::open(path).with_context(|| format!("checkpoint {path:?}"))?,
     );
     let mut header_line = Vec::new();
     loop {
         let mut b = [0u8; 1];
-        f.read_exact(&mut b)?;
+        f.read_exact(&mut b).context("checkpoint header: unexpected end of file")?;
         if b[0] == b'\n' {
             break;
         }
         header_line.push(b[0]);
+        if header_line.len() > MAX_HEADER_BYTES {
+            bail!("checkpoint header: no newline within {MAX_HEADER_BYTES} bytes (corrupt file?)");
+        }
     }
     let header = Json::parse(std::str::from_utf8(&header_line)?)
         .map_err(|e| anyhow::anyhow!("checkpoint header: {e}"))?;
-    let artifact = header.req("artifact")?.as_str().unwrap_or_default();
-    if artifact != sess.name() {
-        bail!("checkpoint is for {artifact:?}, session runs {:?}", sess.name());
+    let t = check_header(&header, artifact, param_elems, state_elems)?;
+
+    // Cross-check the payload length before touching it: header + '\n' +
+    // two f32 vectors, nothing more, nothing less.
+    let expected = header_line.len() as u64 + 1 + 4 * (param_elems + state_elems) as u64;
+    if file_len != expected {
+        bail!(
+            "checkpoint payload is {file_len} bytes, header implies {expected} (truncated or corrupt)"
+        );
     }
-    let p = header.req("param_elems")?.as_usize().unwrap_or(0);
-    let s = header.req("state_elems")?.as_usize().unwrap_or(0);
-    if p != sess.params.len() || s != sess.opt_state.len() {
-        bail!("checkpoint sizes ({p}, {s}) mismatch session ({}, {})",
-              sess.params.len(), sess.opt_state.len());
+    let params = read_f32s(&mut f, param_elems)?;
+    let opt_state = read_f32s(&mut f, state_elems)?;
+    Ok((params, opt_state, t))
+}
+
+/// Validate an untrusted header against the expected artifact and sizes;
+/// returns the step counter. Pure function — unit-testable with crafted
+/// headers, no session or file needed.
+fn check_header(header: &Json, artifact: &str, param_elems: usize, state_elems: usize) -> Result<i32> {
+    let got_artifact = header.req("artifact")?.as_str().unwrap_or_default();
+    if got_artifact != artifact {
+        bail!("checkpoint is for {got_artifact:?}, session runs {artifact:?}");
     }
-    sess.params = read_f32s(&mut f, p)?;
-    sess.opt_state = read_f32s(&mut f, s)?;
-    sess.t = header.req("t")?.as_f64().unwrap_or(0.0) as i32;
-    Ok(())
+    let p = header_count(header, "param_elems")?;
+    let s = header_count(header, "state_elems")?;
+    if p != param_elems || s != state_elems {
+        bail!("checkpoint sizes ({p}, {s}) mismatch session ({param_elems}, {state_elems})");
+    }
+    let t = header.req("t")?.as_f64().unwrap_or(f64::NAN);
+    if !(t.is_finite() && t.fract() == 0.0 && (0.0..=i32::MAX as f64).contains(&t)) {
+        bail!("checkpoint header: bad step counter {t:?}");
+    }
+    Ok(t as i32)
+}
+
+/// A count field must be a finite non-negative integer.
+fn header_count(header: &Json, key: &str) -> Result<usize> {
+    let n = header.req(key)?.as_f64().unwrap_or(f64::NAN);
+    if !(n.is_finite() && n.fract() == 0.0 && (0.0..=u32::MAX as f64).contains(&n)) {
+        bail!("checkpoint header: bad {key} {n:?}");
+    }
+    Ok(n as usize)
 }
 
 fn write_f32s<W: Write>(w: &mut W, xs: &[f32]) -> Result<()> {
@@ -81,4 +156,96 @@ fn read_f32s<R: Read>(r: &mut R, n: usize) -> Result<Vec<f32>> {
     let mut bytes = vec![0u8; n * 4];
     r.read_exact(&mut bytes)?;
     Ok(bytes.chunks_exact(4).map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]])).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("alada_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn raw_round_trip() {
+        let path = tmp("roundtrip.ckpt");
+        let params: Vec<f32> = (0..17).map(|i| i as f32 * 0.5).collect();
+        let state: Vec<f32> = (0..5).map(|i| -(i as f32)).collect();
+        save_raw(&path, "train_lm_tiny_alada", 42, &params, &state).unwrap();
+        let (p, s, t) = load_raw(&path, "train_lm_tiny_alada", 17, 5).unwrap();
+        assert_eq!(p, params);
+        assert_eq!(s, state);
+        assert_eq!(t, 42);
+    }
+
+    #[test]
+    fn wrong_artifact_rejected() {
+        let path = tmp("artifact.ckpt");
+        save_raw(&path, "train_lm_tiny_alada", 0, &[1.0], &[]).unwrap();
+        let err = load_raw(&path, "train_lm_tiny_adam", 1, 0).unwrap_err().to_string();
+        assert!(err.contains("session runs"), "{err}");
+    }
+
+    #[test]
+    fn size_mismatch_rejected_before_reading_payload() {
+        let path = tmp("sizes.ckpt");
+        save_raw(&path, "a", 0, &[1.0, 2.0], &[3.0]).unwrap();
+        let err = load_raw(&path, "a", 4, 1).unwrap_err().to_string();
+        assert!(err.contains("mismatch session"), "{err}");
+    }
+
+    #[test]
+    fn corrupt_headers_rejected() {
+        // not JSON at all
+        let path = tmp("garbage.ckpt");
+        std::fs::write(&path, b"not json\n\x00\x01\x02\x03").unwrap();
+        assert!(load_raw(&path, "a", 1, 0).is_err());
+
+        // JSON but with a poisoned count (huge float — must error before
+        // any allocation proportional to it)
+        let path = tmp("huge.ckpt");
+        std::fs::write(
+            &path,
+            b"{\"artifact\":\"a\",\"param_elems\":1e18,\"state_elems\":0,\"t\":0}\n",
+        )
+        .unwrap();
+        let err = load_raw(&path, "a", 1, 0).unwrap_err().to_string();
+        assert!(err.contains("bad param_elems"), "{err}");
+
+        // negative / fractional counts
+        let path = tmp("neg.ckpt");
+        std::fs::write(&path, b"{\"artifact\":\"a\",\"param_elems\":-4,\"state_elems\":0,\"t\":0}\n")
+            .unwrap();
+        assert!(load_raw(&path, "a", 1, 0).is_err());
+
+        // bad step counter
+        let path = tmp("badt.ckpt");
+        std::fs::write(
+            &path,
+            b"{\"artifact\":\"a\",\"param_elems\":1,\"state_elems\":0,\"t\":-3.5}\n\x00\x00\x00\x00",
+        )
+        .unwrap();
+        let err = load_raw(&path, "a", 1, 0).unwrap_err().to_string();
+        assert!(err.contains("bad step counter"), "{err}");
+    }
+
+    #[test]
+    fn unterminated_header_rejected() {
+        let path = tmp("noline.ckpt");
+        std::fs::write(&path, vec![b'x'; 2 * MAX_HEADER_BYTES]).unwrap();
+        let err = load_raw(&path, "a", 1, 0).unwrap_err().to_string();
+        assert!(err.contains("no newline"), "{err}");
+    }
+
+    #[test]
+    fn truncated_payload_rejected() {
+        let path = tmp("trunc.ckpt");
+        save_raw(&path, "a", 7, &[1.0, 2.0, 3.0], &[4.0]).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &full[..full.len() - 4]).unwrap();
+        let err = load_raw(&path, "a", 3, 1).unwrap_err().to_string();
+        assert!(err.contains("truncated or corrupt"), "{err}");
+    }
 }

@@ -102,6 +102,8 @@ pub fn optimizer_state_bytes(opt: &str, params: &[ParamShape]) -> usize {
         let (m, n) = balanced_split(&p.shape);
         total += match opt {
             "sgd" => 0,
+            "sgdm" => m * n, // momentum buffer
+            "adagrad" => m * n, // squared-gradient accumulator
             "adam" => 2 * m * n,       // M + U
             "adafactor" => {
                 if m >= 2 && n >= 2 { m + n } else { m * n }
@@ -152,6 +154,37 @@ pub fn breakdown(model: ModelShape, opt: &str, batch: usize, seq: usize) -> Memo
         opt_state: optimizer_state_bytes(opt, &params),
         activations: model.activation_bytes(batch, seq),
     }
+}
+
+/// Per-rank breakdowns under ZeRO-style sharding: weights and the grad
+/// slot stay replicated (data parallelism), the optimizer state is
+/// partitioned at tensor granularity by the same planner the shard
+/// engine uses, and activations scale with the per-rank micro-batch.
+/// This is the analytic counterpart of the shard engine's measured
+/// `per_rank_state_bytes` (the `alada exp shard` driver prints both).
+pub fn sharded_breakdown(
+    model: ModelShape,
+    opt: &str,
+    batch: usize,
+    seq: usize,
+    ranks: usize,
+) -> Vec<MemoryBreakdown> {
+    let params = model.params();
+    let shapes: Vec<Vec<usize>> = params.iter().map(|p| p.shape.clone()).collect();
+    let part = crate::shard::Partition::plan(&shapes, ranks);
+    let weight_elems: usize = params.iter().map(ParamShape::elems).sum();
+    let micro = (batch / ranks).max(1);
+    (0..ranks)
+        .map(|r| MemoryBreakdown {
+            model: model.name,
+            opt: opt.to_string(),
+            batch: micro,
+            weights: 4 * weight_elems,
+            grads: 4 * weight_elems,
+            opt_state: optimizer_state_bytes(opt, &params[part.tensor_range(r)]),
+            activations: model.activation_bytes(micro, seq),
+        })
+        .collect()
 }
 
 /// The paper's A800 capacity, for the Fig. 4 OOM gate.
@@ -226,6 +259,33 @@ mod tests {
         assert!(fits_a800(GPT2_XL, "adafactor", 4, 1024));
         assert!(fits_a800(GPT2_XL, "alada", 4, 1024));
         assert!(fits_a800(GPT2_XL, "adam", 2, 1024));
+    }
+
+    #[test]
+    fn sharded_state_partitions_exactly() {
+        for opt in ["adam", "adafactor", "alada", "came", "sm3", "sgdm", "adagrad"] {
+            let total = optimizer_state_bytes(opt, &GPT2_SMALL.params());
+            for ranks in [1usize, 2, 4, 8] {
+                let per_rank = sharded_breakdown(GPT2_SMALL, opt, 8, 1024, ranks);
+                assert_eq!(per_rank.len(), ranks);
+                let sum: usize = per_rank.iter().map(|b| b.opt_state).sum();
+                assert_eq!(sum, total, "{opt} at {ranks} ranks");
+            }
+        }
+    }
+
+    #[test]
+    fn sharding_shrinks_the_per_rank_footprint() {
+        // 8-way Adam on GPT2-XL: state drops ~8×, activations split too,
+        // so the per-rank peak is far below the single-rank one.
+        let single = breakdown(GPT2_XL, "adam", 8, 1024).total();
+        let sharded = sharded_breakdown(GPT2_XL, "adam", 8, 1024, 8);
+        let peak = sharded.iter().map(MemoryBreakdown::total).max().unwrap();
+        assert!(peak < single, "{peak} vs {single}");
+        let max_state = sharded.iter().map(|b| b.opt_state).max().unwrap();
+        let total_state = optimizer_state_bytes("adam", &GPT2_XL.params());
+        // balanced to within 2× of the ideal total/ranks split
+        assert!(max_state <= total_state / 8 * 2, "{max_state} vs {total_state}/8");
     }
 
     #[test]

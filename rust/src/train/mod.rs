@@ -7,4 +7,4 @@ pub mod metrics;
 pub mod trainer;
 
 pub use metrics::CumAvg;
-pub use trainer::{TaskData, TrainOutcome, Trainer};
+pub use trainer::{run_sharded, ShardedRun, TaskData, TrainOutcome, Trainer};

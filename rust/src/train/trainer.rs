@@ -12,6 +12,8 @@ use crate::data::{Batcher, ClsDataset, MarkovCorpus, MtDataset};
 use crate::optim::Schedule;
 use crate::runtime::executor::BatchExtra;
 use crate::runtime::TrainSession;
+use crate::shard::{self, ShardConfig, ShardTask};
+use crate::tensor::Tensor;
 use crate::train::metrics::CumAvg;
 use crate::util::log;
 
@@ -104,6 +106,63 @@ pub struct Trainer {
     pub data: TaskData,
     pub schedule: Schedule,
     pub record_every: usize,
+}
+
+/// Result of a sharded (data-parallel) run: the uniform `TrainOutcome`
+/// plus what only the shard engine can report.
+#[derive(Clone, Debug)]
+pub struct ShardedRun {
+    pub outcome: TrainOutcome,
+    /// Final parameters (identical across replicas; rank 0's copy).
+    pub params: Vec<Tensor>,
+    /// Per-rank partitioned optimizer-state bytes (aligned slices).
+    pub per_rank_state_bytes: Vec<usize>,
+}
+
+/// The sharded step path: N replica threads over the pure-Rust substrate
+/// instead of one PJRT session, same `TrainOutcome` out the back so the
+/// reporting/coordination layers don't care which engine produced a run.
+pub fn run_sharded(
+    task: &dyn ShardTask,
+    opt: &str,
+    schedule: &Schedule,
+    cfg: &ShardConfig,
+) -> Result<ShardedRun> {
+    let sharded = shard::train(task, opt, schedule, cfg)?;
+    let mut cum = CumAvg::default();
+    let mut outcome = TrainOutcome::default();
+    for (step, &loss) in sharded.losses.iter().enumerate() {
+        let avg = cum.push(loss);
+        outcome.curve.push((step, loss, avg));
+        if !loss.is_finite() {
+            log::warn(&format!("shard[{} ranks]: non-finite loss at step {step}", cfg.ranks));
+            break;
+        }
+    }
+    outcome.steps = cum.count();
+    outcome.wall_secs = sharded.wall_secs;
+    // wall_secs covers every step the engine executed, including any past
+    // a divergence where the recording loop stopped — divide by that.
+    outcome.secs_per_step = sharded.wall_secs / sharded.losses.len().max(1) as f64;
+    outcome.final_cum_loss = cum.value();
+    Ok(ShardedRun {
+        outcome,
+        params: sharded.params,
+        per_rank_state_bytes: sharded.per_rank_state_bytes,
+    })
+}
+
+impl ShardedRun {
+    /// Max |a − b| over all parameters vs `other` (the drift the CLI and
+    /// the `exp shard` driver report against the 1-rank baseline).
+    pub fn max_abs_drift_from(&self, other: &ShardedRun) -> f32 {
+        self.params
+            .iter()
+            .zip(&other.params)
+            .flat_map(|(a, b)| a.data().iter().zip(b.data()))
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0f32, f32::max)
+    }
 }
 
 impl Trainer {

@@ -5,7 +5,9 @@
 
 use alada::data::{Batcher, ClsDataset, MarkovCorpus, MtDataset, CLS_TASKS, MT_PAIRS, PAD_ID};
 use alada::optim::reshape::balanced_split;
-use alada::optim::{by_name, Schedule, ALL};
+use alada::optim::sharded::STATE_ALIGN;
+use alada::optim::{by_name, Optimizer, Schedule, ShardedOptimizer, ALL};
+use alada::shard::Partition;
 use alada::tensor::Tensor;
 use alada::train::metrics;
 use alada::util::{Json, Rng};
@@ -49,7 +51,7 @@ fn prop_every_optimizer_keeps_params_finite_under_noise() {
             })
             .collect();
         let name = ALL[trial % ALL.len()];
-        let mut opt = by_name(name, &shapes);
+        let mut opt = by_name(name, &shapes).expect("known optimizer");
         let mut params: Vec<Tensor> =
             shapes.iter().map(|s| Tensor::from_fn(s, |_| rng.normal())).collect();
         for _ in 0..10 {
@@ -180,6 +182,68 @@ fn prop_json_round_trips_random_values() {
         let text = v.to_string_compact();
         let back = Json::parse(&text).unwrap_or_else(|e| panic!("{text}: {e}"));
         assert_eq!(v, back, "round-trip failed for {text}");
+    }
+}
+
+/// Random non-empty shape lists for the sharding properties.
+fn random_shape_list(rng: &mut Rng) -> Vec<Vec<usize>> {
+    (0..1 + rng.below_usize(6))
+        .map(|_| {
+            let mut s = random_shape(rng);
+            if s.is_empty() {
+                s.push(1 + rng.below_usize(4));
+            }
+            s
+        })
+        .collect()
+}
+
+#[test]
+fn prop_sharded_over_one_rank_is_the_wrapped_optimizer() {
+    let mut rng = Rng::new(909);
+    for (trial, name) in ALL.iter().cycle().take(2 * ALL.len()).enumerate() {
+        let shapes = random_shape_list(&mut rng);
+        let part = Partition::plan(&shapes, 1);
+        let mut sharded = ShardedOptimizer::new(name, &part, 0).expect("known optimizer");
+        let mut plain = by_name(name, &shapes).expect("known optimizer");
+        let mut pa: Vec<Tensor> =
+            shapes.iter().map(|s| Tensor::from_fn(s, |_| rng.normal())).collect();
+        let mut pb = pa.clone();
+        for _ in 0..4 {
+            let grads: Vec<Tensor> =
+                shapes.iter().map(|s| Tensor::from_fn(s, |_| rng.normal() * 0.3)).collect();
+            sharded.step(&mut pa, &grads, 2e-3);
+            plain.step(&mut pb, &grads, 2e-3);
+        }
+        // exact equality, not tolerance: one rank must be the identity wrapper
+        assert_eq!(pa, pb, "{name} diverged at trial {trial}");
+    }
+}
+
+#[test]
+fn prop_per_rank_state_sums_to_the_unsharded_total() {
+    let mut rng = Rng::new(1010);
+    for trial in 0..30 {
+        let shapes = random_shape_list(&mut rng);
+        let ranks = 1 + rng.below_usize(6);
+        let name = ALL[trial % ALL.len()];
+        let total = by_name(name, &shapes).expect("known optimizer").state_overhead_bytes();
+        let part = Partition::plan(&shapes, ranks);
+        let mut sum_exact = 0usize;
+        let mut sum_padded = 0usize;
+        for r in 0..ranks {
+            let shard = ShardedOptimizer::new(name, &part, r).expect("known optimizer");
+            let padded = shard.state_overhead_bytes();
+            assert_eq!(padded % STATE_ALIGN, 0, "{name}: unaligned rank slice");
+            assert!(padded >= shard.unpadded_state_bytes());
+            sum_exact += shard.unpadded_state_bytes();
+            sum_padded += padded;
+        }
+        assert_eq!(sum_exact, total, "{name} over {ranks} ranks (shapes {shapes:?})");
+        assert!(
+            sum_padded >= total && sum_padded - total < ranks * STATE_ALIGN,
+            "{name}: padding exceeded one alignment unit per rank"
+        );
     }
 }
 
