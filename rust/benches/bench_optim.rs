@@ -2,10 +2,16 @@
 //! path of the theory experiments, and the apples-to-apples per-update
 //! cost comparison behind Table IV's wall-clock story.
 //!
+//! Emits machine-readable `BENCH_optim.json` (per-optimizer ns/step +
+//! state bytes) so the perf trajectory of the vectorized kernels is
+//! comparable across PRs. The body lives in `alada::benchkit` and is
+//! smoke-run under tier-1 by rust/tests/bench_smoke.rs.
+//!
 //! harness = false (criterion unavailable offline); timing via
 //! util::timing with warmup + median/MAD.
 
-use alada::optim::{by_name, ALL};
+use alada::benchkit::optim_bench;
+use alada::optim::by_name;
 use alada::tensor::Tensor;
 use alada::util::timing::bench;
 use alada::util::Rng;
@@ -13,30 +19,18 @@ use alada::util::Rng;
 fn main() {
     // GPT2-Small-block-shaped parameter set, scaled to bench budget
     let shapes: Vec<Vec<usize>> = vec![vec![768, 768], vec![768, 3072], vec![3072, 768], vec![768]];
-    let mut rng = Rng::new(1);
-    let params_proto: Vec<Tensor> =
-        shapes.iter().map(|s| Tensor::from_fn(s, |_| rng.normal())).collect();
-    let grads: Vec<Tensor> =
-        shapes.iter().map(|s| Tensor::from_fn(s, |_| rng.normal() * 0.1)).collect();
 
     println!("== optimizer step cost, GPT2-Small block shapes (5.3 M params) ==");
-    for name in ALL {
-        let mut opt = by_name(name, &shapes).expect("known optimizer");
-        let mut params = params_proto.clone();
-        let stats = bench(&format!("optim/{name}/step"), 2, 12, || {
-            opt.step(&mut params, &grads, 1e-3);
-        });
-        println!(
-            "{}   state {:>9} B",
-            stats.report(),
-            opt.state_overhead_bytes()
-        );
-    }
+    optim_bench(&shapes, 2, 12, Some("BENCH_optim.json"));
 
     // Alada phase split: even (p update) vs odd (q update) steps
     println!("\n== alada parity phases ==");
+    let mut rng = Rng::new(1);
+    let mut params: Vec<Tensor> =
+        shapes.iter().map(|s| Tensor::from_fn(s, |_| rng.normal())).collect();
+    let grads: Vec<Tensor> =
+        shapes.iter().map(|s| Tensor::from_fn(s, |_| rng.normal() * 0.1)).collect();
     let mut opt = by_name("alada", &shapes).expect("known optimizer");
-    let mut params = params_proto.clone();
     opt.step(&mut params, &grads, 1e-3); // t=0 init
     let even = bench("alada/even-step(p-update)", 1, 10, || {
         // t is internal; benchmarking alternating pairs keeps parity honest

@@ -1,19 +1,18 @@
-//! Shard-engine benchmark: steps/sec and per-rank state vs rank count.
+//! Shard-engine benchmark: steps/sec, per-step communicated bytes, and
+//! per-rank state vs rank count — for all three exchange pipelines
+//! (all-reduce, reduce-scatter, reduce-scatter + overlap), so the
+//! traffic halving and the overlap win are visible side by side.
 //!
-//! Runs the data-parallel engine on the MLP task for ranks ∈ {1, 2, 4, 8}
-//! and, besides the usual printed stats, emits a machine-readable
-//! `BENCH_shard.json` so future PRs can track the perf trajectory of the
-//! reduce/step/gather pipeline without parsing console output.
+//! Emits machine-readable `BENCH_shard.json` so future PRs can track the
+//! perf trajectory of the reduce/step/gather pipeline without parsing
+//! console output. The body lives in `alada::benchkit` and is smoke-run
+//! under tier-1 by rust/tests/bench_smoke.rs.
 //!
 //! harness = false (criterion unavailable offline); timing via
 //! util::timing with warmup + median/MAD.
 
-use std::collections::BTreeMap;
-
-use alada::optim::Schedule;
-use alada::shard::{self, MlpTask, ShardConfig};
-use alada::util::timing::bench;
-use alada::util::Json;
+use alada::benchkit::shard_bench;
+use alada::shard::MlpTask;
 
 const RANKS: &[usize] = &[1, 2, 4, 8];
 const STEPS: usize = 24;
@@ -22,42 +21,6 @@ fn main() {
     // A model big enough that the reduce moves real data (~0.9 MB of
     // grads per step at these dims), batch divisible by every rank count.
     let task = MlpTask::new(128, 256, 3, 16, 2048, 64, 11);
-    let schedule = Schedule::Constant { eta0: 1e-2 };
-
-    println!("== shard engine: {STEPS}-step runs, depth-3 MLP (128→256→…→16) ==");
-    let mut entries = Vec::new();
-    for &ranks in RANKS {
-        let cfg = ShardConfig { ranks, bucket_kb: 64, steps: STEPS };
-        let mut last = None;
-        let stats = bench(&format!("shard/train/{ranks}-ranks/{STEPS}-steps"), 1, 5, || {
-            last = Some(shard::train(&task, "alada", &schedule, &cfg).expect("train"));
-        });
-        let out = last.expect("at least one sample ran");
-        let steps_per_sec = STEPS as f64 / stats.median_secs().max(1e-12);
-        println!("{}  {steps_per_sec:>8.1} steps/s", stats.report());
-
-        let mut entry = BTreeMap::new();
-        entry.insert("ranks".to_string(), Json::Num(ranks as f64));
-        entry.insert("steps_per_sec".to_string(), Json::Num(steps_per_sec));
-        entry.insert("median_step_ns".to_string(), Json::Num(stats.median_ns / STEPS as f64));
-        entry.insert(
-            "max_rank_state_bytes".to_string(),
-            Json::Num(out.max_rank_state_bytes() as f64),
-        );
-        entry.insert(
-            "sum_state_bytes".to_string(),
-            Json::Num(out.per_rank_state_bytes.iter().sum::<usize>() as f64),
-        );
-        entry.insert("final_loss".to_string(), Json::Num(*out.losses.last().unwrap_or(&f64::NAN)));
-        entries.push(Json::Obj(entry));
-    }
-
-    let mut doc = BTreeMap::new();
-    doc.insert("bench".to_string(), Json::Str("shard".to_string()));
-    doc.insert("optimizer".to_string(), Json::Str("alada".to_string()));
-    doc.insert("steps".to_string(), Json::Num(STEPS as f64));
-    doc.insert("runs".to_string(), Json::Arr(entries));
-    let path = "BENCH_shard.json";
-    std::fs::write(path, Json::Obj(doc).to_string_compact()).expect("write BENCH_shard.json");
-    println!("wrote {path}");
+    println!("== shard engine: {STEPS}-step runs, depth-3 MLP (128→256→…→16), all pipelines ==");
+    shard_bench(&task, RANKS, STEPS, 1, 3, Some("BENCH_shard.json"));
 }

@@ -1,0 +1,190 @@
+//! Shared bodies of the `cargo bench` targets.
+//!
+//! The bench binaries (rust/benches/bench_optim.rs, bench_shard.rs) are
+//! thin mains over these functions, and `rust/tests/bench_smoke.rs`
+//! drives the same code with 1 warmup + 1 sample — so the perf harness
+//! compiles and runs under the tier-1 gate and can't bit-rot between
+//! PRs. Both benches emit machine-readable JSON (BENCH_optim.json /
+//! BENCH_shard.json) so the perf trajectory is comparable across PRs
+//! without parsing console output.
+
+use std::collections::BTreeMap;
+
+use crate::optim::{by_name, Schedule, ALL};
+use crate::shard::{self, MlpTask, Pipeline, ShardConfig};
+use crate::tensor::Tensor;
+use crate::util::timing::bench;
+use crate::util::{Json, Rng};
+
+/// One optimizer's measured step cost.
+pub struct OptimBenchRow {
+    pub name: &'static str,
+    pub median_step_ns: f64,
+    pub mean_step_ns: f64,
+    pub state_bytes: usize,
+}
+
+/// Benchmark every optimizer in `optim::ALL` over `shapes`; prints the
+/// usual report and, when `json_path` is given, writes the per-optimizer
+/// ns/step + state-bytes table as JSON.
+pub fn optim_bench(
+    shapes: &[Vec<usize>],
+    warmup: usize,
+    samples: usize,
+    json_path: Option<&str>,
+) -> Vec<OptimBenchRow> {
+    let mut rng = Rng::new(1);
+    let params_proto: Vec<Tensor> =
+        shapes.iter().map(|s| Tensor::from_fn(s, |_| rng.normal())).collect();
+    let grads: Vec<Tensor> =
+        shapes.iter().map(|s| Tensor::from_fn(s, |_| rng.normal() * 0.1)).collect();
+    let param_elems: usize = params_proto.iter().map(|t| t.len()).sum();
+
+    let mut rows = Vec::new();
+    for &name in ALL {
+        let mut opt = by_name(name, shapes).expect("known optimizer");
+        let mut params = params_proto.clone();
+        let stats = bench(&format!("optim/{name}/step"), warmup, samples, || {
+            opt.step(&mut params, &grads, 1e-3);
+        });
+        println!("{}   state {:>9} B", stats.report(), opt.state_overhead_bytes());
+        rows.push(OptimBenchRow {
+            name,
+            median_step_ns: stats.median_ns,
+            mean_step_ns: stats.mean_ns,
+            state_bytes: opt.state_overhead_bytes(),
+        });
+    }
+
+    if let Some(path) = json_path {
+        let entries: Vec<Json> = rows
+            .iter()
+            .map(|r| {
+                let mut e = BTreeMap::new();
+                e.insert("optimizer".to_string(), Json::Str(r.name.to_string()));
+                e.insert("median_step_ns".to_string(), Json::Num(r.median_step_ns));
+                e.insert("mean_step_ns".to_string(), Json::Num(r.mean_step_ns));
+                e.insert("state_bytes".to_string(), Json::Num(r.state_bytes as f64));
+                Json::Obj(e)
+            })
+            .collect();
+        let mut doc = BTreeMap::new();
+        doc.insert("bench".to_string(), Json::Str("optim".to_string()));
+        doc.insert("param_elems".to_string(), Json::Num(param_elems as f64));
+        doc.insert("samples".to_string(), Json::Num(samples as f64));
+        doc.insert("runs".to_string(), Json::Arr(entries));
+        std::fs::write(path, Json::Obj(doc).to_string_compact())
+            .unwrap_or_else(|e| panic!("write {path}: {e}"));
+        println!("wrote {path}");
+    }
+    rows
+}
+
+/// One (rank count, pipeline) shard-engine measurement.
+pub struct ShardBenchRow {
+    pub ranks: usize,
+    pub pipeline: Pipeline,
+    pub steps_per_sec: f64,
+    pub median_step_ns: f64,
+    pub bytes_per_step: u64,
+    pub reduce_bytes_per_step: u64,
+    pub gather_bytes_per_step: u64,
+    pub max_rank_state_bytes: usize,
+    pub sum_state_bytes: usize,
+    pub final_loss: f64,
+}
+
+/// Benchmark the shard engine across rank counts and all three exchange
+/// pipelines; reports per-step communicated bytes and prints the
+/// reduce-scatter/all-reduce traffic ratio (the ≈(N+1)/(2N) halving) per
+/// rank count.
+pub fn shard_bench(
+    task: &MlpTask,
+    ranks_list: &[usize],
+    steps: usize,
+    warmup: usize,
+    samples: usize,
+    json_path: Option<&str>,
+) -> Vec<ShardBenchRow> {
+    let schedule = Schedule::Constant { eta0: 1e-2 };
+    let mut rows: Vec<ShardBenchRow> = Vec::new();
+    for &ranks in ranks_list {
+        let first_of_rank = rows.len();
+        for pipeline in [Pipeline::AllReduce, Pipeline::ReduceScatter, Pipeline::Overlap] {
+            let cfg = ShardConfig { ranks, bucket_kb: 64, steps, pipeline };
+            let mut last = None;
+            let label = format!("shard/train/{ranks}-ranks/{}", pipeline.name());
+            let stats = bench(&label, warmup, samples, || {
+                last = Some(shard::train(task, "alada", &schedule, &cfg).expect("train"));
+            });
+            let out = last.expect("at least one sample ran");
+            let steps_per_sec = steps as f64 / stats.median_secs().max(1e-12);
+            let per_step = out.bytes_per_step();
+            println!("{}  {steps_per_sec:>8.1} steps/s  {per_step:>10} B/step", stats.report());
+            rows.push(ShardBenchRow {
+                ranks,
+                pipeline,
+                steps_per_sec,
+                median_step_ns: stats.median_ns / steps.max(1) as f64,
+                bytes_per_step: per_step,
+                reduce_bytes_per_step: out.reduce_bytes / steps.max(1) as u64,
+                gather_bytes_per_step: out.gather_bytes / steps.max(1) as u64,
+                max_rank_state_bytes: out.max_rank_state_bytes(),
+                sum_state_bytes: out.per_rank_state_bytes.iter().sum(),
+                final_loss: *out.losses.last().unwrap_or(&f64::NAN),
+            });
+        }
+        // Traffic ratio at this rank count: RS gradient exchange vs the
+        // all-reduce baseline (expected ≈(N+1)/(2N)).
+        let slice = &rows[first_of_rank..];
+        let ar = slice.iter().find(|r| r.pipeline == Pipeline::AllReduce);
+        let rs = slice.iter().find(|r| r.pipeline == Pipeline::ReduceScatter);
+        if let (Some(ar), Some(rs)) = (ar, rs) {
+            if ar.reduce_bytes_per_step > 0 {
+                println!(
+                    "  {ranks}-ranks reduce traffic: rs/allreduce = {:.3} (ideal (N+1)/2N = {:.3})",
+                    rs.reduce_bytes_per_step as f64 / ar.reduce_bytes_per_step as f64,
+                    (ranks as f64 + 1.0) / (2.0 * ranks as f64)
+                );
+            }
+        }
+    }
+
+    if let Some(path) = json_path {
+        let entries: Vec<Json> = rows
+            .iter()
+            .map(|r| {
+                let mut e = BTreeMap::new();
+                e.insert("ranks".to_string(), Json::Num(r.ranks as f64));
+                e.insert("pipeline".to_string(), Json::Str(r.pipeline.name().to_string()));
+                e.insert("steps_per_sec".to_string(), Json::Num(r.steps_per_sec));
+                e.insert("median_step_ns".to_string(), Json::Num(r.median_step_ns));
+                e.insert("bytes_per_step".to_string(), Json::Num(r.bytes_per_step as f64));
+                e.insert(
+                    "reduce_bytes_per_step".to_string(),
+                    Json::Num(r.reduce_bytes_per_step as f64),
+                );
+                e.insert(
+                    "gather_bytes_per_step".to_string(),
+                    Json::Num(r.gather_bytes_per_step as f64),
+                );
+                e.insert(
+                    "max_rank_state_bytes".to_string(),
+                    Json::Num(r.max_rank_state_bytes as f64),
+                );
+                e.insert("sum_state_bytes".to_string(), Json::Num(r.sum_state_bytes as f64));
+                e.insert("final_loss".to_string(), Json::Num(r.final_loss));
+                Json::Obj(e)
+            })
+            .collect();
+        let mut doc = BTreeMap::new();
+        doc.insert("bench".to_string(), Json::Str("shard".to_string()));
+        doc.insert("optimizer".to_string(), Json::Str("alada".to_string()));
+        doc.insert("steps".to_string(), Json::Num(steps as f64));
+        doc.insert("runs".to_string(), Json::Arr(entries));
+        std::fs::write(path, Json::Obj(doc).to_string_compact())
+            .unwrap_or_else(|e| panic!("write {path}: {e}"));
+        println!("wrote {path}");
+    }
+    rows
+}

@@ -129,7 +129,7 @@ fn live(opts: &ExpOpts) -> Result<()> {
     for opt in ["alada", "adam", "adafactor"] {
         let mut baseline: Option<crate::train::ShardedRun> = None;
         for &ranks in RANKS {
-            let cfg = ShardConfig { ranks, bucket_kb: 64, steps };
+            let cfg = ShardConfig { ranks, bucket_kb: 64, steps, ..ShardConfig::default() };
             let run = run_sharded(&task, opt, &schedule, &cfg)?;
             let drift = baseline.as_ref().map(|b| run.max_abs_drift_from(b)).unwrap_or(0.0);
             let steps_per_sec = 1.0 / run.outcome.secs_per_step.max(1e-9);

@@ -7,6 +7,7 @@
 //! * L3 — this crate: training framework, PJRT runtime, data pipeline,
 //!   experiment coordinator, pure-Rust optimizer substrate.
 
+pub mod benchkit;
 pub mod cli;
 pub mod config;
 pub mod coordinator;

@@ -13,7 +13,7 @@ use alada::cli::Args;
 use alada::exp::{self, ExpOpts};
 use alada::optim::Schedule;
 use alada::runtime::{Manifest, Runtime, TrainSession};
-use alada::shard::{MlpTask, ShardConfig};
+use alada::shard::{MlpTask, Pipeline, ShardConfig};
 use alada::train::memory;
 use alada::train::{TaskData, Trainer};
 use alada::util::log;
@@ -53,8 +53,12 @@ USAGE:
               [--dataset I] [--artifacts DIR]   (flags override the config file)
   alada shard-train [--ranks N|N,N,..] [--bucket-kb K] [--opt NAME] [--steps N]
               [--lr F] [--seed N] [--batch B] [--dim D] [--hidden H] [--depth L]
-              [--parity]   data-parallel engine with partitioned optimizer state
-              (pure Rust, no artifacts needed; a rank list sweeps and compares)
+              [--pipeline allreduce|reduce-scatter|overlap] [--overlap] [--parity]
+              data-parallel engine with partitioned optimizer state (pure Rust,
+              no artifacts needed; a rank list sweeps and compares). Default
+              pipeline is reduce-scatter; --overlap adds a comm thread per rank
+              that reduces gradient segments underneath the backward pass.
+              Pipeline/overlap never change results, only wall-clock and bytes.
   alada memory [--model gpt2-small|gpt2-xl|t5-small] [--batch N] [--ranks N]
   alada report [--out DIR]        render results/*.csv into results/REPORT.md
   alada info [--artifacts DIR]
@@ -184,27 +188,38 @@ fn cmd_shard_train(args: &Args) -> i32 {
     let hidden = args.usize_or("hidden", 64);
     let depth = args.usize_or("depth", 3);
     let parity = args.bool("parity");
+    let pipeline_flag = args.str_or("pipeline", Pipeline::default().name());
+    let overlap = args.bool("overlap");
     warn_unknown(args);
 
     let run = || -> anyhow::Result<()> {
+        let parsed = Pipeline::parse(&pipeline_flag).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown pipeline {pipeline_flag:?} (known: allreduce, reduce-scatter (alias rs), overlap)"
+            )
+        })?;
+        let pipeline = match (overlap, parsed) {
+            (false, p) => p,
+            (true, Pipeline::AllReduce) => anyhow::bail!(
+                "--overlap conflicts with --pipeline allreduce (overlap implies reduce-scatter)"
+            ),
+            (true, _) => Pipeline::Overlap,
+        };
         let task = MlpTask::new(dim, hidden, depth, hidden.min(8), 4096, batch, seed);
         let schedule = Schedule::Diminishing { eta0: lr, total: steps };
         println!(
             "shard-train: {opt} on a depth-{depth} MLP ({dim}→{hidden}→…→{}), \
-             batch {batch}, {steps} steps, bucket {bucket_kb} KiB",
-            hidden.min(8)
+             batch {batch}, {steps} steps, bucket {bucket_kb} KiB, pipeline {}",
+            hidden.min(8),
+            pipeline.name()
         );
         println!(
-            "{:<6}{:>12}{:>12}{:>16}{:>16}{:>14}",
-            "ranks", "final loss", "steps/s", "max rank state", "sum state", "max |Δ| vs 1"
+            "{:<6}{:>12}{:>12}{:>13}{:>16}{:>16}{:>14}",
+            "ranks", "final loss", "steps/s", "comm B/step", "max rank state", "sum state", "max |Δ| vs 1"
         );
+        let cfg = |ranks| ShardConfig { ranks, bucket_kb, steps, pipeline };
         let baseline = if parity || ranks_list.contains(&1) {
-            Some(alada::train::run_sharded(
-                &task,
-                &opt,
-                &schedule,
-                &ShardConfig { ranks: 1, bucket_kb, steps },
-            )?)
+            Some(alada::train::run_sharded(&task, &opt, &schedule, &cfg(1))?)
         } else {
             None
         };
@@ -212,19 +227,15 @@ fn cmd_shard_train(args: &Args) -> i32 {
             let res = if ranks == 1 {
                 baseline.clone().expect("baseline computed when 1 is listed")
             } else {
-                alada::train::run_sharded(
-                    &task,
-                    &opt,
-                    &schedule,
-                    &ShardConfig { ranks, bucket_kb, steps },
-                )?
+                alada::train::run_sharded(&task, &opt, &schedule, &cfg(ranks))?
             };
             let drift = baseline.as_ref().map(|b| res.max_abs_drift_from(b));
             println!(
-                "{:<6}{:>12.5}{:>12.1}{:>14} B{:>14} B{:>14}",
+                "{:<6}{:>12.5}{:>12.1}{:>13}{:>14} B{:>14} B{:>14}",
                 ranks,
                 res.outcome.final_cum_loss,
                 1.0 / res.outcome.secs_per_step.max(1e-9),
+                res.bytes_per_step,
                 res.per_rank_state_bytes.iter().max().unwrap_or(&0),
                 res.per_rank_state_bytes.iter().sum::<usize>(),
                 drift.map(|d| format!("{d:.2e}")).unwrap_or_else(|| "-".into()),

@@ -8,7 +8,7 @@
 
 use super::reshape::balanced_split;
 use super::Optimizer;
-use crate::tensor::Tensor;
+use crate::tensor::{kernels, Tensor};
 
 enum Slot {
     Factored { r: Vec<f32>, c: Vec<f32>, rows: usize, cols: usize },
@@ -50,24 +50,14 @@ impl Optimizer for Adafactor {
                     let (rows, cols) = (*rows, *cols);
                     let gd = g.data();
                     // accumulate row/col means of V = g² + ε in one pass
+                    // (vectorized row kernel shared with CAME)
                     let mut rsum = vec![0.0f32; rows];
                     let mut csum = vec![0.0f32; cols];
                     for i in 0..rows {
-                        let row = &gd[i * cols..(i + 1) * cols];
-                        let mut acc = 0.0f32;
-                        for j in 0..cols {
-                            let v = row[j] * row[j] + eps;
-                            acc += v;
-                            csum[j] += v;
-                        }
-                        rsum[i] = acc;
+                        rsum[i] = kernels::sq_eps_rowcol(&gd[i * cols..(i + 1) * cols], &mut csum, eps);
                     }
-                    for i in 0..rows {
-                        r[i] = b2 * r[i] + (1.0 - b2) * rsum[i] / cols as f32;
-                    }
-                    for j in 0..cols {
-                        c[j] = b2 * c[j] + (1.0 - b2) * csum[j] / rows as f32;
-                    }
+                    kernels::factor_ema(r, &rsum, b2, cols as f32);
+                    kernels::factor_ema(c, &csum, b2, rows as f32);
                     // rec(r, c) = r̂ ĉᵀ / mean(r̂); descent in a second pass
                     let mean_r = r.iter().sum::<f32>() / rows as f32 * bc;
                     let inv_mean = 1.0 / mean_r;
@@ -76,10 +66,7 @@ impl Optimizer for Adafactor {
                         let ri = r[i] * bc;
                         let grow = &gd[i * cols..(i + 1) * cols];
                         let xrow = &mut xd[i * cols..(i + 1) * cols];
-                        for j in 0..cols {
-                            let u = ri * (c[j] * bc) * inv_mean;
-                            xrow[j] -= lr * grow[j] / (u.sqrt() + eps);
-                        }
+                        kernels::factored_descent_row(xrow, grow, c, ri, bc, inv_mean, lr, eps);
                     }
                 }
                 Slot::Full(u) => {

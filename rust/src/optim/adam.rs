@@ -1,9 +1,11 @@
 //! Adam (Kingma & Ba 2015) with bias correction — the paper's primary
 //! comparator (Eq. 2-3). State: two mn buffers (M and U), the 2mn
-//! overhead Table IV measures.
+//! overhead Table IV measures. The update is the fused single-pass
+//! `tensor::kernels::adam_update` (one sweep of memory traffic instead
+//! of three).
 
 use super::Optimizer;
-use crate::tensor::Tensor;
+use crate::tensor::{kernels, Tensor};
 
 pub struct Adam {
     beta1: f32,
@@ -34,14 +36,18 @@ impl Optimizer for Adam {
         let bc1 = 1.0 / (1.0 - b1.powi(self.t as i32 + 1));
         let bc2 = 1.0 / (1.0 - b2.powi(self.t as i32 + 1));
         for (i, (p, g)) in params.iter_mut().zip(grads).enumerate() {
-            self.m[i].ema_inplace(g, b1, 1.0 - b1);
-            self.u[i].zip_inplace(g, |u, gi| b2 * u + (1.0 - b2) * gi * gi);
-            let (m, u) = (self.m[i].data(), self.u[i].data());
-            for (j, x) in p.data_mut().iter_mut().enumerate() {
-                let m_hat = m[j] * bc1;
-                let u_hat = u[j] * bc2;
-                *x -= lr * m_hat / (u_hat.sqrt() + eps);
-            }
+            kernels::adam_update(
+                p.data_mut(),
+                self.m[i].data_mut(),
+                self.u[i].data_mut(),
+                g.data(),
+                b1,
+                b2,
+                bc1,
+                bc2,
+                lr,
+                eps,
+            );
         }
         self.t += 1;
     }

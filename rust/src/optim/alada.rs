@@ -13,7 +13,7 @@
 
 use super::reshape::balanced_split;
 use super::Optimizer;
-use crate::tensor::Tensor;
+use crate::tensor::{kernels, Tensor};
 
 struct Slot {
     /// First moment M_t (stored at the parameter's own shape; conceptually
@@ -108,53 +108,36 @@ impl Optimizer for Alada {
             // need the full column reduction Vᵀp before any descent, so
             // they remain two passes. V = (M·bc1)² is always recomputed
             // in-register, never materialised — mirroring the Pallas
-            // kernels' HBM discipline.
+            // kernels' HBM discipline. Row bodies are the shared
+            // `tensor::kernels` primitives so the autovectorizer lifts
+            // them to SIMD.
             let sub = bc2_pow * slot.v0;
             let xd = x.data_mut();
             if t % 2 == 0 {
                 // p_{t+1} = β₂ p + (1−β₂) V q / (‖q‖² + ε); fused descent
-                let qn = slot.q.iter().map(|x| x * x).sum::<f32>() + eps;
+                let qn = kernels::dot(&slot.q, &slot.q) + eps;
                 for i in 0..rows {
                     let mrow = &md[i * cols..(i + 1) * cols];
-                    let mut acc = 0.0f32;
-                    for j in 0..cols {
-                        let v = mrow[j] * bc1;
-                        acc += v * v * slot.q[j];
-                    }
+                    let acc = kernels::sq_dot_scaled(mrow, &slot.q, bc1);
                     let pi = b2 * slot.p[i] + (1.0 - b2) * acc / qn;
                     slot.p[i] = pi;
                     let xrow = &mut xd[i * cols..(i + 1) * cols];
-                    for j in 0..cols {
-                        let u_hat = ((pi * slot.q[j] - sub).max(0.0)) * bc2_inv;
-                        let m_hat = mrow[j] * bc1;
-                        xrow[j] -= lr * m_hat / (u_hat + eps).sqrt();
-                    }
+                    kernels::alada_descent_row(xrow, mrow, &slot.q, pi, bc1, sub, bc2_inv, eps, lr);
                 }
             } else {
                 // q_{t+1} = β₂ q + (1−β₂) Vᵀ p / (‖p‖² + ε)
-                let pn = slot.p.iter().map(|x| x * x).sum::<f32>() + eps;
+                let pn = kernels::dot(&slot.p, &slot.p) + eps;
                 let mut acc = vec![0.0f32; cols];
                 for i in 0..rows {
-                    let mrow = &md[i * cols..(i + 1) * cols];
-                    let pi = slot.p[i];
-                    for j in 0..cols {
-                        let v = mrow[j] * bc1;
-                        acc[j] += v * v * pi;
-                    }
+                    kernels::sq_axpy_scaled(&mut acc, &md[i * cols..(i + 1) * cols], bc1, slot.p[i]);
                 }
-                for j in 0..cols {
-                    slot.q[j] = b2 * slot.q[j] + (1.0 - b2) * acc[j] / pn;
-                }
+                kernels::factor_ema(&mut slot.q, &acc, b2, pn);
                 // descent (separate pass: needs the completed q_new)
                 for i in 0..rows {
                     let pi = slot.p[i];
                     let mrow = &md[i * cols..(i + 1) * cols];
                     let xrow = &mut xd[i * cols..(i + 1) * cols];
-                    for j in 0..cols {
-                        let u_hat = ((pi * slot.q[j] - sub).max(0.0)) * bc2_inv;
-                        let m_hat = mrow[j] * bc1;
-                        xrow[j] -= lr * m_hat / (u_hat + eps).sqrt();
-                    }
+                    kernels::alada_descent_row(xrow, mrow, &slot.q, pi, bc1, sub, bc2_inv, eps, lr);
                 }
             }
         }

@@ -6,7 +6,7 @@
 
 use super::reshape::balanced_split;
 use super::Optimizer;
-use crate::tensor::Tensor;
+use crate::tensor::{kernels, Tensor};
 
 struct Slot {
     m: Tensor,
@@ -57,23 +57,15 @@ impl Optimizer for Came {
             let (rows, cols) = (slot.rows, slot.cols);
             let gd = g.data();
 
-            // factored second moment of g² (Adafactor part)
+            // factored second moment of g² (Adafactor part; vectorized
+            // row kernels shared through tensor::kernels)
             let mut rsum = vec![0.0f32; rows];
             let mut csum = vec![0.0f32; cols];
             for i in 0..rows {
-                let row = &gd[i * cols..(i + 1) * cols];
-                for j in 0..cols {
-                    let v = row[j] * row[j] + eps;
-                    rsum[i] += v;
-                    csum[j] += v;
-                }
+                rsum[i] = kernels::sq_eps_rowcol(&gd[i * cols..(i + 1) * cols], &mut csum, eps);
             }
-            for i in 0..rows {
-                slot.r[i] = b2 * slot.r[i] + (1.0 - b2) * rsum[i] / cols as f32;
-            }
-            for j in 0..cols {
-                slot.c[j] = b2 * slot.c[j] + (1.0 - b2) * csum[j] / rows as f32;
-            }
+            kernels::factor_ema(&mut slot.r, &rsum, b2, cols as f32);
+            kernels::factor_ema(&mut slot.c, &csum, b2, rows as f32);
             let mean_r = slot.r.iter().sum::<f32>() / rows as f32 * bc2;
             let inv_mean = 1.0 / mean_r.max(1e-30);
 
@@ -87,21 +79,11 @@ impl Optimizer for Came {
                 let ri = slot.r[i] * bc2;
                 let grow = &gd[i * cols..(i + 1) * cols];
                 let mrow = &md[i * cols..(i + 1) * cols];
-                for j in 0..cols {
-                    let u = ri * (slot.c[j] * bc2) * inv_mean;
-                    let u_hat = grow[j] / (u.sqrt() + eps);
-                    let d = mrow[j] - u_hat;
-                    let v = d * d + eps;
-                    inst_r[i] += v;
-                    inst_c[j] += v;
-                }
+                inst_r[i] =
+                    kernels::came_instability_row(mrow, grow, &slot.c, ri, bc2, inv_mean, eps, &mut inst_c);
             }
-            for i in 0..rows {
-                slot.ur[i] = b3 * slot.ur[i] + (1.0 - b3) * inst_r[i] / cols as f32;
-            }
-            for j in 0..cols {
-                slot.uc[j] = b3 * slot.uc[j] + (1.0 - b3) * inst_c[j] / rows as f32;
-            }
+            kernels::factor_ema(&mut slot.ur, &inst_r, b3, cols as f32);
+            kernels::factor_ema(&mut slot.uc, &inst_c, b3, rows as f32);
             let mean_ur = slot.ur.iter().sum::<f32>() / rows as f32;
             let inv_mean_u = 1.0 / mean_ur.max(1e-30);
 
@@ -111,10 +93,7 @@ impl Optimizer for Came {
                 let uri = slot.ur[i];
                 let mrow = &md[i * cols..(i + 1) * cols];
                 let xrow = &mut xd[i * cols..(i + 1) * cols];
-                for j in 0..cols {
-                    let s = (uri * slot.uc[j] * inv_mean_u).sqrt() + eps;
-                    xrow[j] -= lr * mrow[j] / s;
-                }
+                kernels::came_descent_row(xrow, mrow, &slot.uc, uri, inv_mean_u, lr, eps);
             }
         }
         self.t += 1;

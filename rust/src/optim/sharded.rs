@@ -27,6 +27,9 @@ pub struct ShardedOptimizer {
     inner: Box<dyn Optimizer + Send>,
     /// Tensor indices (into the *full* parameter list) this rank owns.
     owned: Range<usize>,
+    /// Flat element offsets this rank owns — the slice of the engine's
+    /// exchange buffer a reduce-scatter delivers here.
+    owned_elems: Range<usize>,
     rank: usize,
     ranks: usize,
 }
@@ -38,6 +41,7 @@ impl ShardedOptimizer {
         Ok(ShardedOptimizer {
             inner: by_name(name, &owned_shapes)?,
             owned: part.tensor_range(rank),
+            owned_elems: part.elem_range(rank),
             rank,
             ranks: part.ranks(),
         })
@@ -54,6 +58,12 @@ impl ShardedOptimizer {
     /// Tensor indices this shard updates.
     pub fn owned(&self) -> Range<usize> {
         self.owned.clone()
+    }
+
+    /// Flat element offsets this shard updates (contiguous; the segment
+    /// the shard engine's reduce-scatter targets at this rank).
+    pub fn owned_elem_range(&self) -> Range<usize> {
+        self.owned_elems.clone()
     }
 
     /// State bytes without the alignment padding (exact-sum bookkeeping).

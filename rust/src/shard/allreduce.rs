@@ -1,4 +1,4 @@
-//! Bucketed binomial-tree all-reduce over in-process channels.
+//! Bucketed binomial-tree collectives over in-process channels.
 //!
 //! Every pair of ranks gets a dedicated mpsc channel, so a receive names
 //! its peer and messages between two ranks arrive in send order — the two
@@ -12,8 +12,62 @@
 //! a leaf pushes bucket k+1 while bucket k is still climbing (channel
 //! sends don't block), so the reduce is pipelined without any barrier —
 //! inter-rank synchronisation is only ever a point-to-point `recv`.
+//!
+//! Besides all-reduce and broadcast, the mesh speaks *reduce-scatter* and
+//! *all-gather* over an explicit segment list: `reduce_scatter_mean`
+//! climbs every segment up the SAME tree as `all_reduce_sum` and then
+//! forwards the finished sum from the tree root to the segment's owner
+//! only — bit-for-bit the all-reduce result on the owner, at
+//! (N+1)/(2N) of the all-reduce bytes (the broadcast fan-out is gone;
+//! only the root→owner hop remains). `all_gather` is the inverse: each
+//! owner broadcasts its refreshed segment. The shard engine composes the
+//! two around its owned-slice optimizer update.
+//!
+//! Message buffers are pooled per `Comm` (a send takes a recycled `Vec`,
+//! a finished receive is `recycle`d back), so steady-state sends reuse
+//! buffers instead of allocating. The pool is capped: reduce-scatter +
+//! all-gather is send/recv-asymmetric per rank (the tree root receives
+//! more than it sends), so an unbounded pool would grow forever on
+//! receive-heavy ranks. `bytes_sent` counts outbound traffic for the
+//! bench harnesses, and `BytesMeter` attributes it to phases.
 
+use std::cell::{Cell, RefCell};
+use std::ops::Range;
 use std::sync::mpsc::{channel, Receiver, Sender};
+
+/// One contiguous slice of a flat buffer and the rank that owns it
+/// (reduce-scatter delivers the reduced segment there; all-gather
+/// broadcasts it from there).
+#[derive(Clone, Debug)]
+pub struct Seg {
+    pub owner: usize,
+    pub range: Range<usize>,
+}
+
+/// Most pooled buffers a `Comm` retains. Buffers are bucket-sized, so
+/// this bounds pool memory at ~CAP × bucket bytes on receive-heavy ranks
+/// (e.g. the tree root, which receives more messages than it sends under
+/// reduce-scatter + all-gather).
+const POOL_CAP: usize = 32;
+
+/// Delta meter over `Comm::bytes_sent` — attributes outbound traffic to
+/// phases (gradient reduce vs parameter gather) without double counting.
+#[derive(Default)]
+pub struct BytesMeter(u64);
+
+impl BytesMeter {
+    pub fn new() -> BytesMeter {
+        BytesMeter::default()
+    }
+
+    /// Bytes `comm` has sent since the previous `take`.
+    pub fn take(&mut self, comm: &Comm) -> u64 {
+        let b = comm.bytes_sent();
+        let d = b - self.0;
+        self.0 = b;
+        d
+    }
+}
 
 /// One rank's endpoint of the fully-connected channel mesh.
 pub struct Comm {
@@ -23,6 +77,10 @@ pub struct Comm {
     tx: Vec<Sender<Vec<f32>>>,
     /// `rx[s]` receives from rank s.
     rx: Vec<Receiver<Vec<f32>>>,
+    /// Recycled message buffers (allocation-free steady state).
+    pool: RefCell<Vec<Vec<f32>>>,
+    /// Outbound payload bytes (f32 elements × 4), for the bench harness.
+    bytes: Cell<u64>,
 }
 
 /// Build the mesh: one `Comm` per rank, to be moved into its thread.
@@ -40,17 +98,42 @@ pub fn mesh(ranks: usize) -> Vec<Comm> {
     txs.into_iter()
         .zip(rxs)
         .enumerate()
-        .map(|(rank, (tx, rx))| Comm { rank, ranks, tx, rx })
+        .map(|(rank, (tx, rx))| Comm {
+            rank,
+            ranks,
+            tx,
+            rx,
+            pool: RefCell::new(Vec::new()),
+            bytes: Cell::new(0),
+        })
         .collect()
 }
 
 impl Comm {
     fn send(&self, to: usize, data: &[f32]) {
-        self.tx[to].send(data.to_vec()).expect("allreduce peer hung up");
+        self.bytes.set(self.bytes.get() + 4 * data.len() as u64);
+        let mut msg = self.pool.borrow_mut().pop().unwrap_or_default();
+        msg.clear();
+        msg.extend_from_slice(data);
+        self.tx[to].send(msg).expect("collective peer hung up");
     }
 
     fn recv(&self, from: usize) -> Vec<f32> {
-        self.rx[from].recv().expect("allreduce peer hung up")
+        self.rx[from].recv().expect("collective peer hung up")
+    }
+
+    /// Return a finished receive buffer to the message pool (dropped
+    /// once the pool is full — see POOL_CAP).
+    fn recycle(&self, msg: Vec<f32>) {
+        let mut pool = self.pool.borrow_mut();
+        if pool.len() < POOL_CAP {
+            pool.push(msg);
+        }
+    }
+
+    /// Total payload bytes this rank has sent (all collectives).
+    pub fn bytes_sent(&self) -> u64 {
+        self.bytes.get()
     }
 
     /// Elementwise sum of `buf` across all ranks, in buckets of
@@ -84,9 +167,59 @@ impl Comm {
         self.all_reduce_sum(buf, bucket_elems);
         if self.ranks > 1 {
             let inv = 1.0 / self.ranks as f32;
-            for x in buf.iter_mut() {
-                *x *= inv;
+            crate::tensor::kernels::scale(buf, inv);
+        }
+    }
+
+    /// Reduce `buf` to its mean on `owner` only: the bucket climbs the
+    /// SAME binomial tree as `all_reduce_sum` (identical association
+    /// order), then the finished sum takes one hop root→owner and the
+    /// owner scales by 1/ranks — the identical f32 value `all_reduce_mean`
+    /// would leave everywhere, at a fraction of the traffic. Non-owner
+    /// ranks are left with undefined partial sums in `buf`.
+    pub fn reduce_mean_to(&self, owner: usize, buf: &mut [f32], bucket_elems: usize) {
+        if self.ranks == 1 || buf.is_empty() {
+            return;
+        }
+        let be = bucket_elems.max(1);
+        let inv = 1.0 / self.ranks as f32;
+        let mut start = 0;
+        while start < buf.len() {
+            let end = (start + be).min(buf.len());
+            let bucket = &mut buf[start..end];
+            self.reduce_bucket(bucket);
+            if owner != 0 {
+                if self.rank == 0 {
+                    self.send(owner, bucket);
+                } else if self.rank == owner {
+                    let got = self.recv(0);
+                    bucket.copy_from_slice(&got);
+                    self.recycle(got);
+                }
             }
+            if self.rank == owner {
+                crate::tensor::kernels::scale(bucket, inv);
+            }
+            start = end;
+        }
+    }
+
+    /// Reduce-scatter with mean: each segment of `buf` ends up reduced
+    /// (and 1/ranks-scaled) on its owner only. Segments must be disjoint,
+    /// and every rank must pass the identical list — the segment order is
+    /// part of the message-matching contract. Composed with `all_gather`
+    /// over the same segments this is bit-for-bit `all_reduce_mean`.
+    pub fn reduce_scatter_mean(&self, buf: &mut [f32], segs: &[Seg], bucket_elems: usize) {
+        for sg in segs {
+            self.reduce_mean_to(sg.owner, &mut buf[sg.range.clone()], bucket_elems);
+        }
+    }
+
+    /// All-gather: every segment is broadcast from its owner, filling the
+    /// non-owned parts of `buf` on every rank.
+    pub fn all_gather(&self, buf: &mut [f32], segs: &[Seg], bucket_elems: usize) {
+        for sg in segs {
+            self.broadcast(sg.owner, &mut buf[sg.range.clone()], bucket_elems);
         }
     }
 
@@ -120,6 +253,7 @@ impl Comm {
                     for (x, y) in bucket.iter_mut().zip(&got) {
                         *x += y;
                     }
+                    self.recycle(got);
                 }
             } else {
                 self.send(self.rank - stride, bucket);
@@ -150,6 +284,7 @@ impl Comm {
                 let got = self.recv(unmap(vr - stride));
                 debug_assert_eq!(got.len(), bucket.len());
                 bucket.copy_from_slice(&got);
+                self.recycle(got);
             }
             stride >>= 1;
         }
@@ -167,6 +302,21 @@ mod tests {
             let handles: Vec<_> = comms.into_iter().map(|c| s.spawn(|| f(c))).collect();
             handles.into_iter().map(|h| h.join().expect("rank thread")).collect()
         })
+    }
+
+    /// Balanced contiguous segments of `len` across `ranks` owners (the
+    /// empty tail mirrors Partition's more-ranks-than-tensors case).
+    fn balanced_segs(len: usize, ranks: usize) -> Vec<Seg> {
+        let per = len / ranks;
+        let extra = len % ranks;
+        let mut segs = Vec::with_capacity(ranks);
+        let mut start = 0;
+        for r in 0..ranks {
+            let n = per + usize::from(r < extra);
+            segs.push(Seg { owner: r, range: start..start + n });
+            start += n;
+        }
+        segs
     }
 
     #[test]
@@ -240,6 +390,121 @@ mod tests {
         // and every rank holds the identical result
         for buf in &a {
             assert_eq!(buf, &a[0]);
+        }
+    }
+
+    /// The tentpole contract: reduce-scatter + all-gather composed over a
+    /// partition is bit-for-bit `all_reduce_mean`, across rank counts
+    /// (incl. non-powers-of-2) and bucket sizes smaller than, equal to,
+    /// and larger than the buffer.
+    #[test]
+    fn reduce_scatter_plus_all_gather_matches_all_reduce_bit_for_bit() {
+        const LEN: usize = 13;
+        for ranks in [1usize, 2, 3, 4, 7] {
+            for bucket in [3usize, LEN, 4 * LEN] {
+                let segs = balanced_segs(LEN, ranks);
+                // association-sensitive values: huge/tiny mix per rank
+                let fill = |rank: usize| -> Vec<f32> {
+                    (0..LEN)
+                        .map(|i| 1.0e-7 + (rank as f32 + 1.0) * 1.0e7 * (i as f32 + 1.0))
+                        .collect()
+                };
+                let reference = on_mesh(ranks, |c| {
+                    let mut buf = fill(c.rank);
+                    c.all_reduce_mean(&mut buf, bucket);
+                    buf
+                });
+                let segs_ref = &segs;
+                let composed = on_mesh(ranks, |c| {
+                    let mut buf = fill(c.rank);
+                    c.reduce_scatter_mean(&mut buf, segs_ref, bucket);
+                    c.all_gather(&mut buf, segs_ref, bucket);
+                    buf
+                });
+                for (r, (a, b)) in composed.iter().zip(&reference).enumerate() {
+                    for (x, y) in a.iter().zip(b) {
+                        assert_eq!(
+                            x.to_bits(),
+                            y.to_bits(),
+                            "ranks={ranks} bucket={bucket} rank={r}: {x} vs {y}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// Reduce-scatter must deliver the owner's slice even when some ranks
+    /// own nothing (more ranks than cut points).
+    #[test]
+    fn reduce_scatter_handles_empty_segments() {
+        let segs = vec![
+            Seg { owner: 0, range: 0..4 },
+            Seg { owner: 1, range: 4..4 }, // empty
+            Seg { owner: 2, range: 4..6 },
+        ];
+        let segs_ref = &segs;
+        let out = on_mesh(3, |c| {
+            let mut buf = vec![(c.rank + 1) as f32; 6];
+            c.reduce_scatter_mean(&mut buf, segs_ref, 2);
+            c.all_gather(&mut buf, segs_ref, 2);
+            buf
+        });
+        for buf in &out {
+            assert!(buf.iter().all(|&x| x == 2.0), "{buf:?}"); // mean of 1,2,3
+        }
+    }
+
+    /// Traffic accounting: over the whole mesh, one all-reduce of n elems
+    /// moves 2(N−1)·4n bytes; the same exchange as reduce-scatter moves
+    /// (N−1)·4n up the tree plus one root→owner hop of 4·|seg| for every
+    /// segment not owned by rank 0 — ≈(N+1)/(2N) of the all-reduce bytes,
+    /// the halving the shard engine banks on.
+    #[test]
+    fn reduce_scatter_byte_count_is_half_of_all_reduce() {
+        const LEN: usize = 24;
+        for ranks in [2usize, 3, 4, 8] {
+            let segs = balanced_segs(LEN, ranks);
+            let ar_bytes: u64 = on_mesh(ranks, |c| {
+                let mut buf = vec![1.0f32; LEN];
+                c.all_reduce_mean(&mut buf, 5);
+                c.bytes_sent()
+            })
+            .iter()
+            .sum();
+            assert_eq!(ar_bytes, 2 * (ranks as u64 - 1) * 4 * LEN as u64);
+
+            let segs_ref = &segs;
+            let rs_bytes: u64 = on_mesh(ranks, |c| {
+                let mut buf = vec![1.0f32; LEN];
+                c.reduce_scatter_mean(&mut buf, segs_ref, 5);
+                c.bytes_sent()
+            })
+            .iter()
+            .sum();
+            let forwarded: u64 =
+                segs.iter().filter(|s| s.owner != 0).map(|s| 4 * s.range.len() as u64).sum();
+            assert_eq!(rs_bytes, (ranks as u64 - 1) * 4 * LEN as u64 + forwarded);
+            assert!(rs_bytes < ar_bytes, "ranks={ranks}: {rs_bytes} vs {ar_bytes}");
+        }
+    }
+
+    /// Steady-state pool behaviour: repeated collectives on one mesh keep
+    /// working (and stay correct) when every message buffer is recycled.
+    #[test]
+    fn pooled_messages_survive_many_rounds() {
+        let out = on_mesh(4, |c| {
+            let mut last = 0.0f32;
+            for round in 0..50 {
+                let mut buf = vec![(c.rank + round) as f32; 9];
+                c.all_reduce_mean(&mut buf, 2);
+                last = buf[0];
+            }
+            last
+        });
+        // round 49: values 49,50,51,52 → mean 50.5
+        for v in &out {
+            assert_eq!(*v, 50.5);
         }
     }
 }

@@ -3,12 +3,34 @@
 //! Each rank owns (a) a full replica of the parameters, (b) a disjoint
 //! micro-batch of every global batch, and (c) — the ZeRO-style part — the
 //! optimizer state for its contiguous slice of the flat parameter space
-//! only. A step is: local gradient → bucketed tree all-reduce (mean) →
-//! partitioned optimizer update on the owned slice → all-gather of the
-//! updated slices. All inter-rank synchronisation is point-to-point
-//! channel traffic (no barrier), and the reduce/broadcast trees use a
-//! fixed association order, so a run is bit-for-bit deterministic for a
-//! given rank count.
+//! only. A step is: local gradient → bucketed tree **reduce-scatter**
+//! (each rank receives only its owned slice's mean, ≈(N+1)/(2N) of the
+//! all-reduce bytes) → partitioned optimizer update on the owned slice →
+//! **all-gather** of the updated slices. All inter-rank synchronisation
+//! is point-to-point channel traffic (no barrier), and the reduce/
+//! broadcast trees use a fixed association order, so a run is bit-for-bit
+//! deterministic for a given rank count.
+//!
+//! Three pipelines share that arithmetic (`ShardConfig::pipeline`):
+//!
+//! * `AllReduce` — the original full-gradient all-reduce + slice
+//!   broadcast, kept for A/B traffic comparison;
+//! * `ReduceScatter` — the halved-traffic default;
+//! * `Overlap` — reduce-scatter driven by a dedicated comm thread per
+//!   rank: the replica's backward pass reports each tensor's gradient as
+//!   it is finalized (`Replica::grad_streaming`), and finished segments
+//!   start climbing the tree while the backward is still producing the
+//!   rest. The overlap is *within* a step (backward ∥ reduce-scatter) —
+//!   the parameter dependency makes a cross-step overlap impossible
+//!   without changing the trajectory, which the determinism contract
+//!   forbids. The exchange buffers are double-buffered between the
+//!   compute and comm threads so the steady state is allocation-free.
+//!
+//! All three produce bit-identical results: reduce-scatter + all-gather
+//! composes to exactly the all-reduce sum (same tree association, same
+//! 1/N scale), and overlap only reorders *when* segments are reduced,
+//! never the per-element association (pinned in
+//! rust/tests/shard_parity.rs).
 //!
 //! Trajectory contract: because the partition is tensor-aligned, the
 //! partitioned update is bit-identical to the unsharded optimizer given
@@ -18,12 +40,15 @@
 //! trajectory to within float-reassociation tolerance — the parity test
 //! in rust/tests/shard_parity.rs pins this down.
 
+use std::ops::Range;
+use std::sync::mpsc::{channel, Receiver, Sender};
+
 use anyhow::{ensure, Result};
 
 use crate::optim::{Optimizer, Schedule, ShardedOptimizer};
 use crate::tensor::Tensor;
 
-use super::allreduce::{mesh, Comm};
+use super::allreduce::{mesh, BytesMeter, Comm, Seg};
 use super::partition::Partition;
 
 /// A task the shard engine can train: deterministic initial parameters
@@ -46,6 +71,61 @@ pub trait Replica: Send {
     /// micro-batch mean loss. Must be a deterministic function of
     /// (task seed, step, rank, params).
     fn grad(&mut self, params: &[Tensor], step: usize, out: &mut [Tensor]) -> f32;
+
+    /// Streaming variant for compute/communication overlap: must produce
+    /// exactly the gradients `grad` would, calling `ready(i, out[i])`
+    /// once per tensor as soon as that tensor's gradient is final (a
+    /// backward pass naturally finalizes the deep layers first). The
+    /// call order must be a pure function of the task — identical on
+    /// every rank — because the overlap pipeline matches reduce-scatter
+    /// messages across ranks by this order. The default computes
+    /// everything, then reports tensors in index order.
+    fn grad_streaming(
+        &mut self,
+        params: &[Tensor],
+        step: usize,
+        out: &mut [Tensor],
+        ready: &mut dyn FnMut(usize, &[f32]),
+    ) -> f32 {
+        let loss = self.grad(params, step, out);
+        for (i, g) in out.iter().enumerate() {
+            ready(i, g.data());
+        }
+        loss
+    }
+}
+
+/// How gradients and refreshed parameters move between ranks.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Pipeline {
+    /// PR-1 pipeline: full-gradient all-reduce, then per-slice broadcast.
+    AllReduce,
+    /// Reduce-scatter → owned-slice update → all-gather; ≈(N+1)/(2N) of
+    /// the all-reduce gradient traffic.
+    #[default]
+    ReduceScatter,
+    /// ReduceScatter with a comm thread per rank overlapping the reduce
+    /// with the backward pass (double-buffered exchange).
+    Overlap,
+}
+
+impl Pipeline {
+    pub fn parse(s: &str) -> Option<Pipeline> {
+        match s {
+            "allreduce" | "all-reduce" => Some(Pipeline::AllReduce),
+            "reduce-scatter" | "rs" => Some(Pipeline::ReduceScatter),
+            "overlap" => Some(Pipeline::Overlap),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Pipeline::AllReduce => "allreduce",
+            Pipeline::ReduceScatter => "reduce-scatter",
+            Pipeline::Overlap => "overlap",
+        }
+    }
 }
 
 /// Engine knobs (`shard-train` CLI flags map 1:1 onto these).
@@ -56,6 +136,8 @@ pub struct ShardConfig {
     /// All-reduce bucket size in KiB of f32s.
     pub bucket_kb: usize,
     pub steps: usize,
+    /// Gradient/parameter exchange strategy (never changes results).
+    pub pipeline: Pipeline,
 }
 
 impl ShardConfig {
@@ -66,7 +148,7 @@ impl ShardConfig {
 
 impl Default for ShardConfig {
     fn default() -> Self {
-        ShardConfig { ranks: 2, bucket_kb: 64, steps: 100 }
+        ShardConfig { ranks: 2, bucket_kb: 64, steps: 100, pipeline: Pipeline::default() }
     }
 }
 
@@ -80,6 +162,10 @@ pub struct ShardOutcome {
     /// Per-rank optimizer state bytes (64-byte-aligned slices).
     pub per_rank_state_bytes: Vec<usize>,
     pub wall_secs: f64,
+    /// Payload bytes moved by the gradient exchange, whole run, all ranks.
+    pub reduce_bytes: u64,
+    /// Payload bytes moved by the parameter all-gather / broadcast.
+    pub gather_bytes: u64,
 }
 
 impl ShardOutcome {
@@ -90,12 +176,63 @@ impl ShardOutcome {
     pub fn max_rank_state_bytes(&self) -> usize {
         self.per_rank_state_bytes.iter().copied().max().unwrap_or(0)
     }
+
+    /// Total collective traffic for the run.
+    pub fn comm_bytes(&self) -> u64 {
+        self.reduce_bytes + self.gather_bytes
+    }
+
+    /// Mean payload bytes per optimizer step (all ranks combined).
+    pub fn bytes_per_step(&self) -> u64 {
+        self.comm_bytes() / self.losses.len().max(1) as u64
+    }
 }
 
 struct RankOut {
     losses: Vec<f64>,
     params: Vec<Tensor>,
     state_bytes: usize,
+    reduce_bytes: u64,
+    gather_bytes: u64,
+}
+
+/// Flat-space layout shared by the reduce-scatter pipelines: one segment
+/// per non-empty rank slice, plus a trailing one-element segment for the
+/// loss (owner rank 0), so the loss rides the same collectives.
+struct Layout {
+    /// Reduce/gather segments; the loss segment is LAST.
+    segs: Vec<Seg>,
+    /// grad tensor index → index into `segs`.
+    seg_of_tensor: Vec<usize>,
+    /// Tensors per segment (0 for the loss segment).
+    tensors_in_seg: Vec<usize>,
+    /// Index of the loss segment in `segs`.
+    loss_seg: usize,
+}
+
+impl Layout {
+    fn plan(part: &Partition) -> Layout {
+        let total = part.total_elems();
+        let mut segs = Vec::new();
+        let mut seg_of_tensor = vec![usize::MAX; part.n_tensors()];
+        let mut tensors_in_seg = Vec::new();
+        for r in 0..part.ranks() {
+            let er = part.elem_range(r);
+            if er.is_empty() {
+                continue;
+            }
+            let tr = part.tensor_range(r);
+            for i in tr.clone() {
+                seg_of_tensor[i] = segs.len();
+            }
+            tensors_in_seg.push(tr.len());
+            segs.push(Seg { owner: r, range: er });
+        }
+        let loss_seg = segs.len();
+        segs.push(Seg { owner: 0, range: total..total + 1 });
+        tensors_in_seg.push(0);
+        Layout { segs, seg_of_tensor, tensors_in_seg, loss_seg }
+    }
 }
 
 /// Train `task` with `opt` under `schedule` for `cfg.steps` updates on
@@ -122,6 +259,7 @@ pub fn train(
 
     let bucket = cfg.bucket_elems();
     let steps = cfg.steps;
+    let pipeline = cfg.pipeline;
     let t0 = std::time::Instant::now();
     let mut outs: Vec<RankOut> = std::thread::scope(|s| {
         let part = &part;
@@ -129,7 +267,9 @@ pub fn train(
             .into_iter()
             .map(|(rank, comm, sopt, replica, init)| {
                 let schedule = schedule.clone();
-                s.spawn(move || run_rank(rank, part, comm, sopt, replica, init, &schedule, steps, bucket))
+                s.spawn(move || {
+                    run_rank(rank, part, comm, sopt, replica, init, &schedule, steps, bucket, pipeline)
+                })
             })
             .collect();
         handles.into_iter().map(|h| h.join().expect("replica thread panicked")).collect()
@@ -141,12 +281,49 @@ pub fn train(
         "replicas diverged — all-gather is broken"
     );
     let per_rank_state_bytes = outs.iter().map(|o| o.state_bytes).collect();
+    let reduce_bytes = outs.iter().map(|o| o.reduce_bytes).sum();
+    let gather_bytes = outs.iter().map(|o| o.gather_bytes).sum();
     let first = outs.swap_remove(0);
-    Ok(ShardOutcome { losses: first.losses, params: first.params, per_rank_state_bytes, wall_secs })
+    Ok(ShardOutcome {
+        losses: first.losses,
+        params: first.params,
+        per_rank_state_bytes,
+        wall_secs,
+        reduce_bytes,
+        gather_bytes,
+    })
 }
 
 #[allow(clippy::too_many_arguments)]
 fn run_rank(
+    rank: usize,
+    part: &Partition,
+    comm: Comm,
+    opt: ShardedOptimizer,
+    replica: Box<dyn Replica>,
+    params: Vec<Tensor>,
+    schedule: &Schedule,
+    steps: usize,
+    bucket: usize,
+    pipeline: Pipeline,
+) -> RankOut {
+    match pipeline {
+        Pipeline::AllReduce => {
+            run_rank_allreduce(rank, part, comm, opt, replica, params, schedule, steps, bucket)
+        }
+        Pipeline::ReduceScatter => {
+            run_rank_reduce_scatter(rank, part, comm, opt, replica, params, schedule, steps, bucket)
+        }
+        Pipeline::Overlap => {
+            run_rank_overlap(rank, part, comm, opt, replica, params, schedule, steps, bucket)
+        }
+    }
+}
+
+/// The PR-1 pipeline: all-reduce the full gradient, update the owned
+/// slice, broadcast every refreshed slice. Kept for the traffic A/B.
+#[allow(clippy::too_many_arguments)]
+fn run_rank_allreduce(
     rank: usize,
     part: &Partition,
     comm: Comm,
@@ -164,6 +341,8 @@ fn run_rank(
     // rides the same reduce, so every rank sees the global mean for free).
     let mut flat = vec![0.0f32; total + 1];
     let mut losses = Vec::with_capacity(steps);
+    let (mut reduce_bytes, mut gather_bytes) = (0u64, 0u64);
+    let mut meter = BytesMeter::new();
 
     for step in 0..steps {
         let loss = replica.grad(&params, step, &mut grads);
@@ -172,6 +351,7 @@ fn run_rank(
         }
         flat[total] = loss;
         comm.all_reduce_mean(&mut flat, bucket);
+        reduce_bytes += meter.take(&comm);
         losses.push(flat[total] as f64);
 
         // Partitioned update: unpack + step the owned tensors only.
@@ -190,12 +370,310 @@ fn run_rank(
             let r = part.elem_range(root);
             comm.broadcast(root, &mut flat[r], bucket);
         }
+        gather_bytes += meter.take(&comm);
         for (slot, p) in slots.iter().zip(params.iter_mut()) {
             p.data_mut().copy_from_slice(&flat[slot.offset..slot.offset + slot.elems]);
         }
     }
 
-    RankOut { losses, params, state_bytes: opt.state_overhead_bytes() }
+    RankOut {
+        losses,
+        params,
+        state_bytes: opt.state_overhead_bytes(),
+        reduce_bytes,
+        gather_bytes,
+    }
+}
+
+/// The default pipeline: reduce-scatter the gradient (each rank receives
+/// only its owned slice's mean), update, all-gather the refreshed slices
+/// + the loss. Bit-identical to the all-reduce pipeline at ≈(N+1)/(2N)
+/// of its gradient-exchange bytes.
+#[allow(clippy::too_many_arguments)]
+fn run_rank_reduce_scatter(
+    rank: usize,
+    part: &Partition,
+    comm: Comm,
+    mut opt: ShardedOptimizer,
+    mut replica: Box<dyn Replica>,
+    mut params: Vec<Tensor>,
+    schedule: &Schedule,
+    steps: usize,
+    bucket: usize,
+) -> RankOut {
+    let slots = part.slots();
+    let total = part.total_elems();
+    let lay = Layout::plan(part);
+    let mut grads: Vec<Tensor> = slots.iter().map(|s| Tensor::zeros(&s.shape)).collect();
+    let mut flat = vec![0.0f32; total + 1];
+    let mut losses = Vec::with_capacity(steps);
+    let (mut reduce_bytes, mut gather_bytes) = (0u64, 0u64);
+    let mut meter = BytesMeter::new();
+
+    for step in 0..steps {
+        let loss = replica.grad(&params, step, &mut grads);
+        for (slot, g) in slots.iter().zip(&grads) {
+            flat[slot.offset..slot.offset + slot.elems].copy_from_slice(g.data());
+        }
+        flat[total] = loss;
+        comm.reduce_scatter_mean(&mut flat, &lay.segs, bucket);
+        reduce_bytes += meter.take(&comm);
+
+        // Only the owned slice of `flat` holds the reduced mean now.
+        for i in part.tensor_range(rank) {
+            let s = &slots[i];
+            grads[i].data_mut().copy_from_slice(&flat[s.offset..s.offset + s.elems]);
+        }
+        opt.step(&mut params, &grads, schedule.at(step));
+
+        for i in part.tensor_range(rank) {
+            let s = &slots[i];
+            flat[s.offset..s.offset + s.elems].copy_from_slice(params[i].data());
+        }
+        // One gather refreshes every slice AND broadcasts the loss
+        // (rank 0 kept it from the scatter).
+        comm.all_gather(&mut flat, &lay.segs, bucket);
+        gather_bytes += meter.take(&comm);
+        for (slot, p) in slots.iter().zip(params.iter_mut()) {
+            p.data_mut().copy_from_slice(&flat[slot.offset..slot.offset + slot.elems]);
+        }
+        losses.push(flat[total] as f64);
+    }
+
+    RankOut {
+        losses,
+        params,
+        state_bytes: opt.state_overhead_bytes(),
+        reduce_bytes,
+        gather_bytes,
+    }
+}
+
+/// Comm-thread protocol for the overlap pipeline. Buffers travel by move
+/// and come back through `Resp::Recycle`, so the steady state is
+/// allocation-free.
+enum Cmd {
+    /// Reduce segment `seg` (index into Layout::segs) whose local
+    /// contribution is `data`.
+    Reduce { seg: usize, data: Vec<f32> },
+    /// Run the all-gather: `owned` carries this rank's refreshed
+    /// parameter slice, `spare` is the second half of the double buffer.
+    Gather { owned: Vec<f32>, spare: Vec<f32> },
+}
+
+enum Resp {
+    /// The reduced mean of this rank's own gradient segment.
+    OwnedGrad(Vec<f32>),
+    /// A buffer the comm thread is done with (no segment affinity).
+    Recycle(Vec<f32>),
+    /// Segment `i`'s staging buffer (the usize field), done — recycled
+    /// per segment so it keeps its exact length and the next step can
+    /// skip the zero-fill (every element is overwritten before the
+    /// segment is sent).
+    RecycleSeg(usize, Vec<f32>),
+    /// The fully gathered flat buffer (params + loss slot).
+    Gathered(Vec<f32>),
+}
+
+/// Overlap pipeline: a comm thread owns the `Comm` endpoint and executes
+/// collectives in command order while the replica thread computes. The
+/// backward pass hands over each gradient segment as soon as its last
+/// tensor is final, so late segments reduce underneath the still-running
+/// backward — the ROADMAP "async gradient prefetch" item, without any
+/// change to the arithmetic (segment *timing* moves, association never
+/// does).
+#[allow(clippy::too_many_arguments)]
+fn run_rank_overlap(
+    rank: usize,
+    part: &Partition,
+    comm: Comm,
+    mut opt: ShardedOptimizer,
+    mut replica: Box<dyn Replica>,
+    mut params: Vec<Tensor>,
+    schedule: &Schedule,
+    steps: usize,
+    bucket: usize,
+) -> RankOut {
+    let slots = part.slots();
+    let total = part.total_elems();
+    let lay = Layout::plan(part);
+    // The reduce-scatter target slice — identical to part.elem_range(rank)
+    // by construction; taken from the optimizer so both sides of the
+    // exchange share one source of truth.
+    let my_range = opt.owned_elem_range();
+    debug_assert_eq!(my_range, part.elem_range(rank));
+    let mut grads: Vec<Tensor> = slots.iter().map(|s| Tensor::zeros(&s.shape)).collect();
+    let mut losses = Vec::with_capacity(steps);
+
+    std::thread::scope(|s| {
+        let (cmd_tx, cmd_rx) = channel::<Cmd>();
+        let (resp_tx, resp_rx) = channel::<Resp>();
+        let worker = {
+            let segs = lay.segs.clone();
+            let my_range = my_range.clone();
+            s.spawn(move || comm_worker(comm, cmd_rx, resp_tx, segs, my_range, bucket, total, rank))
+        };
+
+        // Buffer recycling: staging buffers come back keyed by segment
+        // (exact length preserved, so no per-step zero-fill — the ready
+        // counter guarantees every element is overwritten before a
+        // segment is sent); the generic pool holds the owned-params
+        // buffer.
+        let mut pool: Vec<Vec<f32>> = Vec::new();
+        let mut seg_pools: Vec<Vec<Vec<f32>>> = vec![Vec::new(); lay.segs.len()];
+        // Index of this rank's own (param) gradient segment, if any.
+        let my_seg = lay.segs[..lay.loss_seg].iter().position(|s| s.owner == rank);
+        let mut spare_flat = vec![0.0f32; total + 1];
+        // Per-step working state, hoisted so the loop body allocates
+        // nothing in steady state (the inner buffers rotate through the
+        // pools; these outer containers are reset in place).
+        let mut remaining = vec![0usize; lay.segs.len()];
+        let mut staging: Vec<Vec<f32>> = vec![Vec::new(); lay.segs.len()];
+
+        for step in 0..steps {
+            remaining.copy_from_slice(&lay.tensors_in_seg);
+            for (si, seg) in lay.segs.iter().enumerate() {
+                staging[si] = if lay.tensors_in_seg[si] > 0 {
+                    let v = seg_pools[si]
+                        .pop()
+                        .unwrap_or_else(|| vec![0.0f32; seg.range.len()]);
+                    debug_assert_eq!(v.len(), seg.range.len());
+                    v
+                } else {
+                    // loss segment: filled by push after the backward
+                    let mut v = seg_pools[si].pop().unwrap_or_default();
+                    v.clear();
+                    v
+                };
+            }
+
+            let loss = {
+                let staging = &mut staging;
+                let remaining = &mut remaining;
+                let cmd = &cmd_tx;
+                let lay = &lay;
+                let mut ready = |i: usize, g: &[f32]| {
+                    let si = lay.seg_of_tensor[i];
+                    let off = slots[i].offset - lay.segs[si].range.start;
+                    staging[si][off..off + g.len()].copy_from_slice(g);
+                    remaining[si] -= 1;
+                    if remaining[si] == 0 {
+                        let data = std::mem::take(&mut staging[si]);
+                        cmd.send(Cmd::Reduce { seg: si, data }).expect("comm thread alive");
+                    }
+                };
+                replica.grad_streaming(&params, step, &mut grads, &mut ready)
+            };
+            debug_assert!(
+                remaining.iter().all(|&r| r == 0),
+                "replica did not report every tensor ready"
+            );
+            // The loss segment goes last (its value exists only now).
+            let mut lv = std::mem::take(&mut staging[lay.loss_seg]);
+            lv.push(loss);
+            cmd_tx.send(Cmd::Reduce { seg: lay.loss_seg, data: lv }).expect("comm thread alive");
+
+            // Wait for our own segment's reduced mean (unless we own
+            // nothing), recycling buffers as they come back.
+            if !my_range.is_empty() {
+                loop {
+                    match resp_rx.recv().expect("comm thread alive") {
+                        Resp::OwnedGrad(data) => {
+                            for i in part.tensor_range(rank) {
+                                let sl = &slots[i];
+                                let off = sl.offset - my_range.start;
+                                grads[i].data_mut().copy_from_slice(&data[off..off + sl.elems]);
+                            }
+                            seg_pools[my_seg.expect("owned grad implies a segment")].push(data);
+                            break;
+                        }
+                        Resp::Recycle(v) => pool.push(v),
+                        Resp::RecycleSeg(si, v) => seg_pools[si].push(v),
+                        Resp::Gathered(_) => unreachable!("gather response before request"),
+                    }
+                }
+            }
+            opt.step(&mut params, &grads, schedule.at(step));
+
+            let mut owned = pool.pop().unwrap_or_default();
+            owned.clear();
+            for i in part.tensor_range(rank) {
+                owned.extend_from_slice(params[i].data());
+            }
+            let spare = std::mem::take(&mut spare_flat);
+            cmd_tx.send(Cmd::Gather { owned, spare }).expect("comm thread alive");
+            let gathered = loop {
+                match resp_rx.recv().expect("comm thread alive") {
+                    Resp::Gathered(f) => break f,
+                    Resp::Recycle(v) => pool.push(v),
+                    Resp::RecycleSeg(si, v) => seg_pools[si].push(v),
+                    Resp::OwnedGrad(_) => unreachable!("unexpected second owned segment"),
+                }
+            };
+            for (slot, p) in slots.iter().zip(params.iter_mut()) {
+                p.data_mut().copy_from_slice(&gathered[slot.offset..slot.offset + slot.elems]);
+            }
+            losses.push(gathered[total] as f64);
+            spare_flat = gathered;
+        }
+
+        drop(cmd_tx);
+        let (reduce_bytes, gather_bytes) = worker.join().expect("comm thread panicked");
+        RankOut {
+            losses,
+            params,
+            state_bytes: opt.state_overhead_bytes(),
+            reduce_bytes,
+            gather_bytes,
+        }
+    })
+}
+
+/// The comm thread: executes collectives in command order. Every rank
+/// enqueues segments in the same (task-determined) order, so the
+/// point-to-point messages match up without tags.
+#[allow(clippy::too_many_arguments)]
+fn comm_worker(
+    comm: Comm,
+    cmd_rx: Receiver<Cmd>,
+    resp_tx: Sender<Resp>,
+    segs: Vec<Seg>,
+    my_range: Range<usize>,
+    bucket: usize,
+    total: usize,
+    rank: usize,
+) -> (u64, u64) {
+    let loss_seg = segs.len() - 1;
+    let mut flat = vec![0.0f32; total + 1];
+    let (mut reduce_bytes, mut gather_bytes) = (0u64, 0u64);
+    let mut meter = BytesMeter::new();
+    while let Ok(cmd) = cmd_rx.recv() {
+        match cmd {
+            Cmd::Reduce { seg, mut data } => {
+                let sg = &segs[seg];
+                comm.reduce_mean_to(sg.owner, &mut data, bucket);
+                reduce_bytes += meter.take(&comm);
+                if sg.owner == rank && seg == loss_seg {
+                    // keep the loss for the gather broadcast
+                    flat[total] = data[0];
+                    let _ = resp_tx.send(Resp::RecycleSeg(seg, data));
+                } else if sg.owner == rank {
+                    let _ = resp_tx.send(Resp::OwnedGrad(data));
+                } else {
+                    let _ = resp_tx.send(Resp::RecycleSeg(seg, data));
+                }
+            }
+            Cmd::Gather { owned, spare } => {
+                flat[my_range.clone()].copy_from_slice(&owned);
+                comm.all_gather(&mut flat, &segs, bucket);
+                gather_bytes += meter.take(&comm);
+                let _ = resp_tx.send(Resp::Recycle(owned));
+                let full = std::mem::replace(&mut flat, spare);
+                let _ = resp_tx.send(Resp::Gathered(full));
+            }
+        }
+    }
+    (reduce_bytes, gather_bytes)
 }
 
 #[cfg(test)]
@@ -209,30 +687,81 @@ mod tests {
         // batch == n_samples → every step is the same full batch, so SGD
         // with a small lr descends deterministically
         let task = MlpTask::new(8, 12, 2, 4, 12, 12, 3);
-        let cfg = ShardConfig { ranks: 3, bucket_kb: 1, steps: 40 };
+        let cfg = ShardConfig { ranks: 3, bucket_kb: 1, steps: 40, ..ShardConfig::default() };
         let sched = Schedule::Constant { eta0: 1e-2 };
         let out = train(&task, "sgd", &sched, &cfg).expect("train");
         assert_eq!(out.losses.len(), 40);
         assert!(out.losses.iter().all(|l| l.is_finite()));
         assert!(out.losses.last().unwrap() < out.losses.first().unwrap());
         assert_eq!(out.per_rank_state_bytes.len(), 3);
+        assert!(out.reduce_bytes > 0 && out.gather_bytes > 0);
     }
 
     #[test]
-    fn engine_runs_every_optimizer() {
+    fn engine_runs_every_optimizer_on_every_pipeline() {
         let task = MlpTask::new(6, 8, 2, 3, 32, 8, 5);
-        let cfg = ShardConfig { ranks: 2, bucket_kb: 1, steps: 4 };
-        for name in crate::optim::ALL {
-            let out = train(&task, name, &Schedule::Constant { eta0: 1e-3 }, &cfg)
-                .unwrap_or_else(|e| panic!("{name}: {e:#}"));
-            assert!(out.losses.iter().all(|l| l.is_finite()), "{name}");
+        for pipeline in [Pipeline::AllReduce, Pipeline::ReduceScatter, Pipeline::Overlap] {
+            let cfg = ShardConfig { ranks: 2, bucket_kb: 1, steps: 4, pipeline };
+            for name in crate::optim::ALL {
+                let out = train(&task, name, &Schedule::Constant { eta0: 1e-3 }, &cfg)
+                    .unwrap_or_else(|e| panic!("{name}/{}: {e:#}", pipeline.name()));
+                assert!(
+                    out.losses.iter().all(|l| l.is_finite()),
+                    "{name}/{}",
+                    pipeline.name()
+                );
+            }
         }
+    }
+
+    #[test]
+    fn pipelines_are_bit_identical() {
+        // batch 24 divides by 3 (non-power-of-2 tree on purpose)
+        let task = MlpTask::new(8, 12, 2, 4, 64, 24, 41);
+        let sched = Schedule::Constant { eta0: 5e-3 };
+        let run = |pipeline| {
+            let cfg = ShardConfig { ranks: 3, bucket_kb: 1, steps: 10, pipeline };
+            train(&task, "alada", &sched, &cfg).expect("train")
+        };
+        let base = run(Pipeline::AllReduce);
+        for pipeline in [Pipeline::ReduceScatter, Pipeline::Overlap] {
+            let out = run(pipeline);
+            for (a, b) in out.losses.iter().zip(&base.losses) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{}", pipeline.name());
+            }
+            for (ta, tb) in out.params.iter().zip(&base.params) {
+                for (x, y) in ta.data().iter().zip(tb.data()) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "{}", pipeline.name());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_scatter_halves_gradient_traffic() {
+        let task = MlpTask::new(8, 12, 2, 4, 64, 16, 41);
+        let sched = Schedule::Constant { eta0: 5e-3 };
+        let ranks = 4;
+        let run = |pipeline| {
+            let cfg = ShardConfig { ranks, bucket_kb: 1, steps: 6, pipeline };
+            train(&task, "sgd", &sched, &cfg).expect("train")
+        };
+        let ar = run(Pipeline::AllReduce);
+        let rs = run(Pipeline::ReduceScatter);
+        // gradient exchange: ≈(N+1)/(2N) of the all-reduce bytes
+        let want = (ranks as f64 + 1.0) / (2.0 * ranks as f64);
+        let got = rs.reduce_bytes as f64 / ar.reduce_bytes as f64;
+        assert!(
+            (got - want).abs() < 0.05,
+            "reduce-scatter moved {got:.3} of the all-reduce bytes, want ≈{want:.3}"
+        );
+        assert!(rs.comm_bytes() < ar.comm_bytes());
     }
 
     #[test]
     fn unknown_optimizer_is_an_error_not_a_panic() {
         let task = MlpTask::new(4, 6, 1, 2, 32, 8, 1);
-        let cfg = ShardConfig { ranks: 2, bucket_kb: 1, steps: 1 };
+        let cfg = ShardConfig { ranks: 2, bucket_kb: 1, steps: 1, ..ShardConfig::default() };
         let err = train(&task, "nope", &Schedule::Constant { eta0: 1e-2 }, &cfg);
         assert!(err.is_err());
         assert!(format!("{:#}", err.unwrap_err()).contains("unknown optimizer"));
@@ -243,11 +772,28 @@ mod tests {
         let task = MlpTask::new(8, 12, 3, 4, 64, 12, 3);
         let shapes = task.shapes();
         let unsharded = crate::optim::by_name("alada", &shapes).unwrap().state_overhead_bytes();
-        let cfg = ShardConfig { ranks: 4, bucket_kb: 1, steps: 1 };
+        let cfg = ShardConfig { ranks: 4, bucket_kb: 1, steps: 1, ..ShardConfig::default() };
         let out = train(&task, "alada", &Schedule::Constant { eta0: 1e-2 }, &cfg).unwrap();
         let sum: usize = out.per_rank_state_bytes.iter().sum();
         // per-rank slices are 64-byte aligned; the sum is the unsharded
         // total plus that padding only
         assert!(sum >= unsharded && sum - unsharded < 4 * 64, "{sum} vs {unsharded}");
+    }
+
+    #[test]
+    fn overlap_works_with_more_ranks_than_tensors() {
+        // depth-1 MLP = 4 tensors; 6 ranks leaves empty tail ranks whose
+        // comm threads still have to participate in every tree.
+        let task = MlpTask::new(4, 6, 1, 2, 24, 12, 13);
+        let sched = Schedule::Constant { eta0: 1e-2 };
+        let run = |pipeline| {
+            let cfg = ShardConfig { ranks: 6, bucket_kb: 1, steps: 5, pipeline };
+            train(&task, "alada", &sched, &cfg).expect("train")
+        };
+        let a = run(Pipeline::ReduceScatter);
+        let b = run(Pipeline::Overlap);
+        for (ta, tb) in a.params.iter().zip(&b.params) {
+            assert_eq!(ta, tb);
+        }
     }
 }

@@ -133,12 +133,28 @@ struct MlpReplica {
 
 impl Replica for MlpReplica {
     fn grad(&mut self, params: &[Tensor], step: usize, out: &mut [Tensor]) -> f32 {
+        self.grad_streaming(params, step, out, &mut |_, _| {})
+    }
+
+    /// Real streaming: the closed-form backward pass finalizes the
+    /// output layer first and walks toward the input, reporting each
+    /// tensor as it lands — deep-layer gradient segments start their
+    /// reduce-scatter while the shallow layers are still backpropagating
+    /// (the overlap the engine's `Pipeline::Overlap` exploits). The
+    /// order is a pure function of `depth`, identical on every rank.
+    fn grad_streaming(
+        &mut self,
+        params: &[Tensor],
+        step: usize,
+        out: &mut [Tensor],
+        ready: &mut dyn FnMut(usize, &[f32]),
+    ) -> f32 {
         let t = &self.task;
         let idx = t.indices(step);
         let mine = &idx[self.rank * self.micro..(self.rank + 1) * self.micro];
         let x = gather_rows(&t.features, mine);
         let y = gather_rows(&t.targets, mine);
-        backward(params, &x, &y, t.depth, out)
+        backward(params, &x, &y, t.depth, out, ready)
     }
 }
 
@@ -176,8 +192,16 @@ fn forward(params: &[Tensor], x: &Tensor, depth: usize) -> (Vec<Tensor>, Tensor)
 }
 
 /// Closed-form backward pass for ½·mean‖pred − y‖²; writes the gradient
-/// per tensor into `out` and returns the micro-batch mean loss.
-fn backward(params: &[Tensor], x: &Tensor, y: &Tensor, depth: usize, out: &mut [Tensor]) -> f32 {
+/// per tensor into `out` (invoking `ready` as each tensor is finalized,
+/// output layer first) and returns the micro-batch mean loss.
+fn backward(
+    params: &[Tensor],
+    x: &Tensor,
+    y: &Tensor,
+    depth: usize,
+    out: &mut [Tensor],
+    ready: &mut dyn FnMut(usize, &[f32]),
+) -> f32 {
     let b = x.shape()[0];
     let (acts, pred) = forward(params, x, depth);
     let e = pred.sub(y);
@@ -187,7 +211,9 @@ fn backward(params: &[Tensor], x: &Tensor, y: &Tensor, depth: usize, out: &mut [
     let dp = e.scale(1.0 / b as f32);
     let a_last = &acts[depth - 1];
     write_grad(&mut out[2 * depth], ops::matmul_tn(&dp, a_last));
+    ready(2 * depth, out[2 * depth].data());
     write_vec_grad(&mut out[2 * depth + 1], colsum(&dp));
+    ready(2 * depth + 1, out[2 * depth + 1].data());
     let mut d = ops::matmul(&dp, &params[2 * depth]); // (B, h)
 
     // hidden layers, last to first
@@ -196,7 +222,9 @@ fn backward(params: &[Tensor], x: &Tensor, y: &Tensor, depth: usize, out: &mut [
         let dh = d.zip(a, |g, ai| g * (1.0 - ai * ai));
         let input = if l == 0 { x } else { &acts[l - 1] };
         write_grad(&mut out[2 * l], ops::matmul_tn(&dh, input));
+        ready(2 * l, out[2 * l].data());
         write_vec_grad(&mut out[2 * l + 1], colsum(&dh));
+        ready(2 * l + 1, out[2 * l + 1].data());
         if l > 0 {
             d = ops::matmul(&dh, &params[2 * l]);
         }
@@ -267,7 +295,7 @@ mod tests {
         let mut grads: Vec<Tensor> = task.shapes().iter().map(|s| Tensor::zeros(s)).collect();
         let x = task.features.clone();
         let y = task.targets.clone();
-        let loss = backward(&params, &x, &y, 2, &mut grads);
+        let loss = backward(&params, &x, &y, 2, &mut grads, &mut |_, _| {});
         assert!((loss - task.full_loss(&params)).abs() < 1e-6);
         // probe a few coordinates of every tensor against central differences
         let eps = 1e-3f32;
@@ -313,6 +341,26 @@ mod tests {
                 assert!((x - y).abs() < 1e-5 * (1.0 + y.abs()), "{x} vs {y}");
             }
         }
+    }
+
+    #[test]
+    fn streaming_reports_every_tensor_once_deep_layers_first() {
+        let task = MlpTask::new(4, 5, 2, 2, 16, 8, 3);
+        let params = task.init_params();
+        let mut grads: Vec<Tensor> = task.shapes().iter().map(|s| Tensor::zeros(s)).collect();
+        let mut rep = task.replica(0, 1).unwrap();
+        let mut order = Vec::new();
+        let l1 = rep.grad_streaming(&params, 0, &mut grads, &mut |i, _| order.push(i));
+        // output layer first, then hidden layers back to the input — the
+        // deterministic order the overlap pipeline's message matching
+        // relies on
+        assert_eq!(order, vec![4, 5, 2, 3, 0, 1]);
+        // identical gradients and loss to the monolithic path
+        let mut g2: Vec<Tensor> = task.shapes().iter().map(|s| Tensor::zeros(s)).collect();
+        let mut rep2 = task.replica(0, 1).unwrap();
+        let l2 = rep2.grad(&params, 0, &mut g2);
+        assert_eq!(l1.to_bits(), l2.to_bits());
+        assert_eq!(grads, g2);
     }
 
     #[test]

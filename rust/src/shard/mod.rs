@@ -3,19 +3,22 @@
 //! The paper's selling point is O(m + n) optimizer state; this subsystem
 //! is where the repo *spends* that saving instead of only measuring it.
 //! N replica threads train the same model on disjoint micro-batches;
-//! gradients meet in a bucketed, fixed-order tree all-reduce
-//! (`allreduce`); and the optimizer state — Alada's rank-one factors
-//! included — is partitioned across ranks at tensor granularity
-//! (`partition`), so each rank maintains only its contiguous slice:
-//! per-rank Alada overhead falls as ~Σ(m+n)/N down to the
-//! single-largest-tensor floor. The update itself is applied through
-//! `optim::ShardedOptimizer`, which wraps any `Optimizer` over the owned
-//! shapes, and the refreshed parameter slices fan back out through the
-//! same tree (`engine`).
+//! gradients meet in a bucketed, fixed-order tree **reduce-scatter**
+//! (`allreduce` also speaks all-reduce and all-gather over the same
+//! tree); and the optimizer state — Alada's rank-one factors included —
+//! is partitioned across ranks at tensor granularity (`partition`), so
+//! each rank maintains only its contiguous slice: per-rank Alada
+//! overhead falls as ~Σ(m+n)/N down to the single-largest-tensor floor.
+//! The update itself is applied through `optim::ShardedOptimizer`, which
+//! wraps any `Optimizer` over the owned shapes, and the refreshed
+//! parameter slices fan back out through an all-gather (`engine`). A
+//! per-rank comm thread can overlap the reduce with the backward pass
+//! (`Pipeline::Overlap`).
 //!
 //! Guarantees:
 //! * bit-for-bit deterministic for a fixed rank count (fixed reduction
-//!   order, point-to-point channels only);
+//!   order, point-to-point channels only); bucket size, pipeline choice,
+//!   and overlap never change results;
 //! * N-rank trajectories match the 1-rank trajectory up to float
 //!   reassociation of the gradient average (rust/tests/shard_parity.rs);
 //! * per-rank `state_overhead_bytes` sums to the unsharded total plus
@@ -26,7 +29,7 @@ pub mod engine;
 pub mod mlp;
 pub mod partition;
 
-pub use allreduce::{mesh, Comm};
-pub use engine::{train, Replica, ShardConfig, ShardOutcome, ShardTask};
+pub use allreduce::{mesh, Comm, Seg};
+pub use engine::{train, Pipeline, Replica, ShardConfig, ShardOutcome, ShardTask};
 pub use mlp::MlpTask;
 pub use partition::Partition;

@@ -1,0 +1,435 @@
+//! Vectorized flat-slice kernels for the optimizer hot loops.
+//!
+//! Every per-element loop that shows up in a profile of the pure-Rust
+//! substrate lives here: Alada's fused even/odd descent passes, the
+//! Adam/Adafactor/CAME element updates, and the `tensor::ops` mat-vec
+//! building blocks. The loops are written so the autovectorizer can lift
+//! them — reductions use `chunks_exact` with a fixed array of LANES
+//! independent accumulators (the dependency chain LLVM needs broken
+//! before it will emit SIMD adds), elementwise updates are branch-free
+//! single passes over zipped slices.
+//!
+//! Determinism: every kernel is a pure function of its inputs with a
+//! fixed association order (the lane split is part of that order), so
+//! replacing a scalar loop with a kernel keeps runs bit-for-bit
+//! reproducible. Reduction kernels *reassociate* relative to the naive
+//! sequential sum (~1e-7 relative noise) — the trajectory-level
+//! contracts in rust/tests/ are all tolerance-based exactly so that
+//! kernel-level reshaping like this stays legal. Elementwise kernels
+//! keep the original expression order and are bit-identical to the
+//! loops they replaced.
+
+/// Accumulator lanes for reductions: 8 × f32 = one AVX2 register.
+const LANES: usize = 8;
+
+/// Dot product with LANES independent accumulators.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let split = a.len() - a.len() % LANES;
+    let mut acc = [0.0f32; LANES];
+    for (xa, xb) in a[..split].chunks_exact(LANES).zip(b[..split].chunks_exact(LANES)) {
+        for l in 0..LANES {
+            acc[l] += xa[l] * xb[l];
+        }
+    }
+    let mut s = 0.0f32;
+    for &l in &acc {
+        s += l;
+    }
+    for (x, y) in a[split..].iter().zip(&b[split..]) {
+        s += x * y;
+    }
+    s
+}
+
+/// Σ_j (m_j·s)²·q_j — Alada's even-phase row projection (V q at row i
+/// with V = (M·bc1)² recomputed in-register, never materialised).
+#[inline]
+pub fn sq_dot_scaled(m: &[f32], q: &[f32], s: f32) -> f32 {
+    debug_assert_eq!(m.len(), q.len());
+    let split = m.len() - m.len() % LANES;
+    let mut acc = [0.0f32; LANES];
+    for (xm, xq) in m[..split].chunks_exact(LANES).zip(q[..split].chunks_exact(LANES)) {
+        for l in 0..LANES {
+            let v = xm[l] * s;
+            acc[l] += v * v * xq[l];
+        }
+    }
+    let mut out = 0.0f32;
+    for &l in &acc {
+        out += l;
+    }
+    for (x, q) in m[split..].iter().zip(&q[split..]) {
+        let v = x * s;
+        out += v * v * q;
+    }
+    out
+}
+
+/// acc_j += (m_j·s)²·w — Alada's odd-phase column reduction (Vᵀp), one
+/// row's contribution.
+#[inline]
+pub fn sq_axpy_scaled(acc: &mut [f32], m: &[f32], s: f32, w: f32) {
+    debug_assert_eq!(acc.len(), m.len());
+    for (a, &x) in acc.iter_mut().zip(m) {
+        let v = x * s;
+        *a += v * v * w;
+    }
+}
+
+/// dst = a·dst + b·src — the EMA workhorse (`Tensor::ema_inplace`).
+#[inline]
+pub fn ema(dst: &mut [f32], src: &[f32], a: f32, b: f32) {
+    debug_assert_eq!(dst.len(), src.len());
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d = a * *d + b * s;
+    }
+}
+
+/// dst = β·dst + (1−β)·src/denom — the factored-moment EMA of
+/// Adafactor/CAME/Alada (row/col means enter scaled by the reduction
+/// denominator; expression order matches the scalar loops exactly).
+#[inline]
+pub fn factor_ema(dst: &mut [f32], src: &[f32], beta: f32, denom: f32) {
+    debug_assert_eq!(dst.len(), src.len());
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d = beta * *d + (1.0 - beta) * s / denom;
+    }
+}
+
+/// y += a·x.
+#[inline]
+pub fn axpy(y: &mut [f32], x: &[f32], a: f32) {
+    debug_assert_eq!(y.len(), x.len());
+    for (yi, &xi) in y.iter_mut().zip(x) {
+        *yi += a * xi;
+    }
+}
+
+/// x *= s.
+#[inline]
+pub fn scale(x: &mut [f32], s: f32) {
+    for v in x.iter_mut() {
+        *v *= s;
+    }
+}
+
+/// Alada descent over one row (both phases): with û_j = max(p_i·q_j −
+/// sub, 0)·bc2_inv and m̂_j = m_j·bc1, x_j −= lr·m̂_j/√(û_j + ε).
+/// Branch-free (max compiles to a select), single fused pass.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+pub fn alada_descent_row(
+    x: &mut [f32],
+    m: &[f32],
+    q: &[f32],
+    pi: f32,
+    bc1: f32,
+    sub: f32,
+    bc2_inv: f32,
+    eps: f32,
+    lr: f32,
+) {
+    debug_assert!(x.len() == m.len() && x.len() == q.len());
+    for ((xj, &mj), &qj) in x.iter_mut().zip(m).zip(q) {
+        let u_hat = (pi * qj - sub).max(0.0) * bc2_inv;
+        let m_hat = mj * bc1;
+        *xj -= lr * m_hat / (u_hat + eps).sqrt();
+    }
+}
+
+/// Fused Adam element update: EMA both moments and descend in one pass
+/// (the three separate loops it replaces cost two extra sweeps of
+/// memory traffic per tensor).
+#[inline]
+#[allow(clippy::too_many_arguments)]
+pub fn adam_update(
+    x: &mut [f32],
+    m: &mut [f32],
+    u: &mut [f32],
+    g: &[f32],
+    b1: f32,
+    b2: f32,
+    bc1: f32,
+    bc2: f32,
+    lr: f32,
+    eps: f32,
+) {
+    debug_assert!(x.len() == m.len() && x.len() == u.len() && x.len() == g.len());
+    for (((xj, mj), uj), &gj) in x.iter_mut().zip(m.iter_mut()).zip(u.iter_mut()).zip(g) {
+        *mj = b1 * *mj + (1.0 - b1) * gj;
+        *uj = b2 * *uj + (1.0 - b2) * gj * gj;
+        let m_hat = *mj * bc1;
+        let u_hat = *uj * bc2;
+        *xj -= lr * m_hat / (u_hat.sqrt() + eps);
+    }
+}
+
+/// Row/column accumulation of V = g² + ε (Adafactor/CAME first pass):
+/// csum_j += v_j, returns Σ_j v_j via LANES accumulators.
+#[inline]
+pub fn sq_eps_rowcol(row: &[f32], csum: &mut [f32], eps: f32) -> f32 {
+    debug_assert_eq!(row.len(), csum.len());
+    let split = row.len() - row.len() % LANES;
+    let mut acc = [0.0f32; LANES];
+    {
+        let (rh, ch) = (&row[..split], &mut csum[..split]);
+        for (rc, cc) in rh.chunks_exact(LANES).zip(ch.chunks_exact_mut(LANES)) {
+            for l in 0..LANES {
+                let v = rc[l] * rc[l] + eps;
+                cc[l] += v;
+                acc[l] += v;
+            }
+        }
+    }
+    let mut s = 0.0f32;
+    for &l in &acc {
+        s += l;
+    }
+    for (&x, c) in row[split..].iter().zip(&mut csum[split..]) {
+        let v = x * x + eps;
+        *c += v;
+        s += v;
+    }
+    s
+}
+
+/// Adafactor descent over one row: u_j = ri·(c_j·bc)·inv_mean,
+/// x_j −= lr·g_j/(√u_j + ε).
+#[inline]
+#[allow(clippy::too_many_arguments)]
+pub fn factored_descent_row(
+    x: &mut [f32],
+    g: &[f32],
+    c: &[f32],
+    ri: f32,
+    bc: f32,
+    inv_mean: f32,
+    lr: f32,
+    eps: f32,
+) {
+    debug_assert!(x.len() == g.len() && x.len() == c.len());
+    for ((xj, &gj), &cj) in x.iter_mut().zip(g).zip(c) {
+        let u = ri * (cj * bc) * inv_mean;
+        *xj -= lr * gj / (u.sqrt() + eps);
+    }
+}
+
+/// CAME instability pass over one row: û_j = g_j/(√(ri·(c_j·bc)·inv) + ε),
+/// v_j = (m_j − û_j)² + ε; accumulates v into inst_c and returns Σ_j v_j.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+pub fn came_instability_row(
+    m: &[f32],
+    g: &[f32],
+    c: &[f32],
+    ri: f32,
+    bc: f32,
+    inv_mean: f32,
+    eps: f32,
+    inst_c: &mut [f32],
+) -> f32 {
+    debug_assert!(m.len() == g.len() && m.len() == c.len() && m.len() == inst_c.len());
+    let split = m.len() - m.len() % LANES;
+    let mut acc = [0.0f32; LANES];
+    {
+        let (mh, gh, ch, ih) =
+            (&m[..split], &g[..split], &c[..split], &mut inst_c[..split]);
+        for (((mc, gc), cc), ic) in mh
+            .chunks_exact(LANES)
+            .zip(gh.chunks_exact(LANES))
+            .zip(ch.chunks_exact(LANES))
+            .zip(ih.chunks_exact_mut(LANES))
+        {
+            for l in 0..LANES {
+                let u = ri * (cc[l] * bc) * inv_mean;
+                let u_hat = gc[l] / (u.sqrt() + eps);
+                let d = mc[l] - u_hat;
+                let v = d * d + eps;
+                ic[l] += v;
+                acc[l] += v;
+            }
+        }
+    }
+    let mut s = 0.0f32;
+    for &l in &acc {
+        s += l;
+    }
+    for i in split..m.len() {
+        let u = ri * (c[i] * bc) * inv_mean;
+        let u_hat = g[i] / (u.sqrt() + eps);
+        let d = m[i] - u_hat;
+        let v = d * d + eps;
+        inst_c[i] += v;
+        s += v;
+    }
+    s
+}
+
+/// CAME confidence-scaled descent over one row:
+/// x_j −= lr·m_j/(√(uri·uc_j·inv) + ε).
+#[inline]
+pub fn came_descent_row(x: &mut [f32], m: &[f32], uc: &[f32], uri: f32, inv: f32, lr: f32, eps: f32) {
+    debug_assert!(x.len() == m.len() && x.len() == uc.len());
+    for ((xj, &mj), &ucj) in x.iter_mut().zip(m).zip(uc) {
+        let s = (uri * ucj * inv).sqrt() + eps;
+        *xj -= lr * mj / s;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn vecs(n: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        let a: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        let b: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        (a, b)
+    }
+
+    #[test]
+    fn dot_matches_naive_across_lengths() {
+        for n in [0usize, 1, 3, 7, 8, 9, 16, 31, 100] {
+            let (a, b) = vecs(n, n as u64 + 1);
+            let naive: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            let got = dot(&a, &b);
+            assert!((got - naive).abs() <= 1e-5 * (1.0 + naive.abs()), "n={n}: {got} vs {naive}");
+        }
+    }
+
+    #[test]
+    fn dot_is_deterministic() {
+        let (a, b) = vecs(53, 9);
+        assert_eq!(dot(&a, &b).to_bits(), dot(&a, &b).to_bits());
+    }
+
+    #[test]
+    fn sq_dot_scaled_matches_naive() {
+        for n in [1usize, 5, 8, 21] {
+            let (m, q) = vecs(n, 70 + n as u64);
+            let s = 1.7f32;
+            let naive: f32 = m.iter().zip(&q).map(|(x, y)| (x * s) * (x * s) * y).sum();
+            let got = sq_dot_scaled(&m, &q, s);
+            assert!((got - naive).abs() <= 1e-4 * (1.0 + naive.abs()), "n={n}");
+        }
+    }
+
+    #[test]
+    fn elementwise_kernels_match_scalar_loops_exactly() {
+        let (m, g) = vecs(19, 3);
+        // ema
+        let mut a = m.clone();
+        let mut b = m.clone();
+        ema(&mut a, &g, 0.9, 0.1);
+        for (x, &gi) in b.iter_mut().zip(&g) {
+            *x = 0.9 * *x + 0.1 * gi;
+        }
+        assert_eq!(a, b);
+        // axpy
+        let mut a = m.clone();
+        let mut b = m.clone();
+        axpy(&mut a, &g, -0.3);
+        for (x, &gi) in b.iter_mut().zip(&g) {
+            *x += -0.3 * gi;
+        }
+        assert_eq!(a, b);
+        // factor_ema
+        let mut a = m.clone();
+        let mut b = m.clone();
+        factor_ema(&mut a, &g, 0.99, 12.0);
+        for (x, &gi) in b.iter_mut().zip(&g) {
+            *x = 0.99 * *x + (1.0 - 0.99) * gi / 12.0;
+        }
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn adam_update_matches_three_pass_reference() {
+        let n = 23;
+        let (x0, g) = vecs(n, 11);
+        let (m0, u0) = {
+            let (a, b) = vecs(n, 12);
+            (a, b.iter().map(|v| v * v).collect::<Vec<f32>>())
+        };
+        let (b1, b2, bc1, bc2, lr, eps) = (0.9f32, 0.999f32, 1.1f32, 1.3f32, 1e-2f32, 1e-8f32);
+        let (mut x, mut m, mut u) = (x0.clone(), m0.clone(), u0.clone());
+        adam_update(&mut x, &mut m, &mut u, &g, b1, b2, bc1, bc2, lr, eps);
+        // reference: the original three separate sweeps
+        let (mut xr, mut mr, mut ur) = (x0, m0, u0);
+        for (mj, &gj) in mr.iter_mut().zip(&g) {
+            *mj = b1 * *mj + (1.0 - b1) * gj;
+        }
+        for (uj, &gj) in ur.iter_mut().zip(&g) {
+            *uj = b2 * *uj + (1.0 - b2) * gj * gj;
+        }
+        for ((xj, &mj), &uj) in xr.iter_mut().zip(&mr).zip(&ur) {
+            *xj -= lr * (mj * bc1) / ((uj * bc2).sqrt() + eps);
+        }
+        assert_eq!(x, xr);
+        assert_eq!(m, mr);
+        assert_eq!(u, ur);
+    }
+
+    #[test]
+    fn sq_eps_rowcol_matches_naive() {
+        for n in [1usize, 8, 13, 40] {
+            let (row, _) = vecs(n, 21 + n as u64);
+            let mut csum = vec![0.5f32; n];
+            let mut csum_ref = vec![0.5f32; n];
+            let got = sq_eps_rowcol(&row, &mut csum, 1e-8);
+            let mut want = 0.0f32;
+            for (c, &x) in csum_ref.iter_mut().zip(&row) {
+                let v = x * x + 1e-8;
+                *c += v;
+                want += v;
+            }
+            assert!((got - want).abs() <= 1e-4 * (1.0 + want.abs()), "n={n}");
+            for (a, b) in csum.iter().zip(&csum_ref) {
+                assert_eq!(a.to_bits(), b.to_bits(), "csum must be exact");
+            }
+        }
+    }
+
+    #[test]
+    fn descent_rows_move_against_the_gradient() {
+        let n = 17;
+        let m = vec![1.0f32; n];
+        let q = vec![0.5f32; n];
+        let mut x = vec![0.0f32; n];
+        alada_descent_row(&mut x, &m, &q, 0.5, 1.0, 0.0, 1.0, 1e-8, 0.1);
+        assert!(x.iter().all(|&v| v < 0.0), "positive m must push x down");
+        let mut x2 = vec![0.0f32; n];
+        factored_descent_row(&mut x2, &m, &q, 1.0, 1.0, 1.0, 0.1, 1e-8);
+        assert!(x2.iter().all(|&v| v < 0.0));
+        let mut x3 = vec![0.0f32; n];
+        came_descent_row(&mut x3, &m, &q, 1.0, 1.0, 0.1, 1e-8);
+        assert!(x3.iter().all(|&v| v < 0.0));
+    }
+
+    #[test]
+    fn came_instability_row_matches_naive() {
+        let n = 21;
+        let (m, g) = vecs(n, 31);
+        let c = vec![0.7f32; n];
+        let (ri, bc, inv, eps) = (0.8f32, 1.2f32, 0.9f32, 1e-8f32);
+        let mut inst = vec![0.0f32; n];
+        let got = came_instability_row(&m, &g, &c, ri, bc, inv, eps, &mut inst);
+        let mut want = 0.0f32;
+        let mut inst_ref = vec![0.0f32; n];
+        for j in 0..n {
+            let u = ri * (c[j] * bc) * inv;
+            let u_hat = g[j] / (u.sqrt() + eps);
+            let d = m[j] - u_hat;
+            let v = d * d + eps;
+            inst_ref[j] += v;
+            want += v;
+        }
+        assert!((got - want).abs() <= 1e-4 * (1.0 + want.abs()));
+        for (a, b) in inst.iter().zip(&inst_ref) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+}

@@ -6,6 +6,7 @@
 //! `Vec<f32>` + shape — because the heavy model math runs in the AOT
 //! artifacts; this substrate only needs optimizer-update-shaped ops.
 
+pub mod kernels;
 pub mod ops;
 
 use std::fmt;
@@ -142,9 +143,7 @@ impl Tensor {
     /// self = a*self + b*other (axpby; the EMA workhorse).
     pub fn ema_inplace(&mut self, other: &Tensor, a: f32, b: f32) {
         assert_eq!(self.shape, other.shape);
-        for (x, &y) in self.data.iter_mut().zip(&other.data) {
-            *x = a * *x + b * y;
-        }
+        kernels::ema(&mut self.data, &other.data, a, b);
     }
 
     /// self += alpha * other.

@@ -3,10 +3,11 @@
 //! The shapes here are optimizer-update shaped: matrix–vector products
 //! against the squared momentum (`V q`, `Vᵀ p`), outer products, and a
 //! blocked matmul for the synthetic workloads (softmax regression / MLP
-//! in `workloads/`). All row-major, no BLAS (offline build), with a
-//! cache-blocked kernel that is plenty for the experiment sizes.
+//! in `workloads/`). All row-major, no BLAS (offline build). The inner
+//! loops route through `tensor::kernels` so they share the vectorized
+//! dot/axpy row primitives with the optimizer hot paths.
 
-use super::Tensor;
+use super::{kernels, Tensor};
 
 /// y = A x for A (m, n) row-major, x (n).
 pub fn matvec(a: &Tensor, x: &[f32]) -> Vec<f32> {
@@ -15,12 +16,7 @@ pub fn matvec(a: &Tensor, x: &[f32]) -> Vec<f32> {
     let ad = a.data();
     let mut y = vec![0.0f32; m];
     for i in 0..m {
-        let row = &ad[i * n..(i + 1) * n];
-        let mut acc = 0.0f32;
-        for j in 0..n {
-            acc += row[j] * x[j];
-        }
-        y[i] = acc;
+        y[i] = kernels::dot(&ad[i * n..(i + 1) * n], x);
     }
     y
 }
@@ -32,11 +28,7 @@ pub fn matvec_t(a: &Tensor, x: &[f32]) -> Vec<f32> {
     let ad = a.data();
     let mut y = vec![0.0f32; n];
     for i in 0..m {
-        let row = &ad[i * n..(i + 1) * n];
-        let xi = x[i];
-        for j in 0..n {
-            y[j] += row[j] * xi;
-        }
+        kernels::axpy(&mut y, &ad[i * n..(i + 1) * n], x[i]);
     }
     y
 }
@@ -69,10 +61,7 @@ pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
                 if aik == 0.0 {
                     continue;
                 }
-                let brow = &bd[kk * n..(kk + 1) * n];
-                for j in 0..n {
-                    crow[j] += aik * brow[j];
-                }
+                kernels::axpy(crow, &bd[kk * n..(kk + 1) * n], aik);
             }
         }
     }
@@ -94,10 +83,7 @@ pub fn matmul_tn(a: &Tensor, b: &Tensor) -> Tensor {
             if aik == 0.0 {
                 continue;
             }
-            let crow = &mut c[kk * n..(kk + 1) * n];
-            for j in 0..n {
-                crow[j] += aik * brow[j];
-            }
+            kernels::axpy(&mut c[kk * n..(kk + 1) * n], brow, aik);
         }
     }
     Tensor::new(c, &[k, n])
@@ -113,12 +99,7 @@ pub fn matmul_nt(a: &Tensor, b: &Tensor) -> Tensor {
     for i in 0..m {
         let arow = &ad[i * k..(i + 1) * k];
         for j in 0..n {
-            let brow = &bd[j * k..(j + 1) * k];
-            let mut acc = 0.0f32;
-            for kk in 0..k {
-                acc += arow[kk] * brow[kk];
-            }
-            c[i * n + j] = acc;
+            c[i * n + j] = kernels::dot(arow, &bd[j * k..(j + 1) * k]);
         }
     }
     Tensor::new(c, &[m, n])
@@ -144,7 +125,7 @@ pub fn softmax_rows(t: &mut Tensor) {
 
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
-    a.iter().zip(b).map(|(x, y)| x * y).sum()
+    kernels::dot(a, b)
 }
 
 fn mat_dims(t: &Tensor) -> (usize, usize) {

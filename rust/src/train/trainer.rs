@@ -117,6 +117,15 @@ pub struct ShardedRun {
     pub params: Vec<Tensor>,
     /// Per-rank partitioned optimizer-state bytes (aligned slices).
     pub per_rank_state_bytes: Vec<usize>,
+    /// Gradient-exchange payload bytes, whole run, all ranks.
+    pub reduce_bytes: u64,
+    /// Parameter all-gather payload bytes, whole run, all ranks.
+    pub gather_bytes: u64,
+    /// Mean collective payload bytes per engine step, all ranks combined
+    /// (precomputed by `ShardOutcome::bytes_per_step`, the single source
+    /// of truth — it divides by every step the engine executed, not the
+    /// recorded count, which stops at the first non-finite loss).
+    pub bytes_per_step: u64,
 }
 
 /// The sharded step path: N replica threads over the pure-Rust substrate
@@ -147,8 +156,11 @@ pub fn run_sharded(
     outcome.final_cum_loss = cum.value();
     Ok(ShardedRun {
         outcome,
+        bytes_per_step: sharded.bytes_per_step(),
         params: sharded.params,
         per_rank_state_bytes: sharded.per_rank_state_bytes,
+        reduce_bytes: sharded.reduce_bytes,
+        gather_bytes: sharded.gather_bytes,
     })
 }
 

@@ -1,0 +1,43 @@
+//! Bench smoke: the shared bench bodies (`alada::benchkit`) compile and
+//! run under the tier-1 gate with 1 warmup + 1 sample, so the two
+//! cargo-bench targets can't bit-rot between PRs. Tiny shapes/steps keep
+//! this in the millisecond range.
+
+use alada::benchkit::{optim_bench, shard_bench};
+use alada::shard::MlpTask;
+
+#[test]
+fn bench_smoke_optim() {
+    let shapes: Vec<Vec<usize>> = vec![vec![24, 16], vec![16, 8], vec![8]];
+    let path = std::env::temp_dir().join("BENCH_optim_smoke.json");
+    let rows = optim_bench(&shapes, 1, 1, Some(path.to_str().unwrap()));
+    assert_eq!(rows.len(), alada::optim::ALL.len());
+    assert!(rows.iter().all(|r| r.median_step_ns > 0.0));
+    // alada's state must stay O(m+n)-sized vs adam's O(mn)
+    let alada = rows.iter().find(|r| r.name == "alada").unwrap();
+    let adam = rows.iter().find(|r| r.name == "adam").unwrap();
+    assert!(alada.state_bytes < adam.state_bytes);
+    let txt = std::fs::read_to_string(&path).expect("BENCH_optim json written");
+    assert!(txt.contains("median_step_ns") && txt.contains("state_bytes"), "{txt}");
+}
+
+#[test]
+fn bench_smoke_shard() {
+    let task = MlpTask::new(8, 12, 2, 4, 32, 8, 7);
+    let path = std::env::temp_dir().join("BENCH_shard_smoke.json");
+    let rows = shard_bench(&task, &[1, 2], 2, 1, 1, Some(path.to_str().unwrap()));
+    assert_eq!(rows.len(), 2 * 3, "2 rank counts x 3 pipelines");
+    // at 2 ranks the reduce-scatter pipeline must move fewer bytes than
+    // the all-reduce pipeline
+    let ar = rows
+        .iter()
+        .find(|r| r.ranks == 2 && r.pipeline == alada::shard::Pipeline::AllReduce)
+        .unwrap();
+    let rs = rows
+        .iter()
+        .find(|r| r.ranks == 2 && r.pipeline == alada::shard::Pipeline::ReduceScatter)
+        .unwrap();
+    assert!(rs.bytes_per_step < ar.bytes_per_step);
+    let txt = std::fs::read_to_string(&path).expect("BENCH_shard json written");
+    assert!(txt.contains("reduce_bytes_per_step") && txt.contains("pipeline"), "{txt}");
+}

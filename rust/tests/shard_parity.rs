@@ -13,17 +13,23 @@
 //! partition produces O(1) drift within a few steps.
 //!
 //! Bit-for-bit determinism for a FIXED rank count is exact, and asserted
-//! exactly.
+//! exactly. The exchange pipeline (all-reduce vs reduce-scatter vs
+//! reduce-scatter + overlap) and the bucket size are pure transport
+//! choices — they must never change a single bit.
 
 use alada::optim::Schedule;
-use alada::shard::{self, MlpTask, ShardConfig, ShardOutcome};
+use alada::shard::{self, MlpTask, Pipeline, ShardConfig, ShardOutcome};
 
 const STEPS: usize = 30;
 
-fn run(task: &MlpTask, opt: &str, ranks: usize) -> ShardOutcome {
-    let cfg = ShardConfig { ranks, bucket_kb: 2, steps: STEPS };
+fn run_with(task: &MlpTask, opt: &str, ranks: usize, pipeline: Pipeline) -> ShardOutcome {
+    let cfg = ShardConfig { ranks, bucket_kb: 2, steps: STEPS, pipeline };
     let schedule = Schedule::Diminishing { eta0: 5e-3, total: STEPS };
     shard::train(task, opt, &schedule, &cfg).expect("sharded training")
+}
+
+fn run(task: &MlpTask, opt: &str, ranks: usize) -> ShardOutcome {
+    run_with(task, opt, ranks, Pipeline::default())
 }
 
 /// Max |a−b| / max(1, |b|) over all parameters.
@@ -36,15 +42,31 @@ fn max_rel_drift(a: &ShardOutcome, b: &ShardOutcome) -> f32 {
         .fold(0.0f32, f32::max)
 }
 
+fn assert_bit_identical(a: &ShardOutcome, b: &ShardOutcome, what: &str) {
+    assert_eq!(a.losses.len(), b.losses.len(), "{what}");
+    for (x, y) in a.losses.iter().zip(&b.losses) {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: loss trace must be bit-identical");
+    }
+    for (ta, tb) in a.params.iter().zip(&b.params) {
+        for (x, y) in ta.data().iter().zip(tb.data()) {
+            assert_eq!(x.to_bits(), y.to_bits(), "{what}: params must be bit-identical");
+        }
+    }
+}
+
 #[test]
-fn n_rank_training_matches_single_rank_trajectory() {
+fn n_rank_training_matches_single_rank_trajectory_with_and_without_overlap() {
     // batch 24 divides by every rank count tested (incl. non-power-of-2)
     let task = MlpTask::new(10, 16, 2, 4, 96, 24, 17);
     for opt in ["alada", "adam", "adafactor"] {
         let baseline = run(&task, opt, 1);
         assert!(baseline.losses.iter().all(|l| l.is_finite()), "{opt}: baseline diverged");
         for ranks in [2usize, 3, 4] {
-            let sharded = run(&task, opt, ranks);
+            let sharded = run_with(&task, opt, ranks, Pipeline::ReduceScatter);
+            // overlap on and off must be bit-for-bit identical to each
+            // other — overlap moves segment *timing*, never association
+            let overlapped = run_with(&task, opt, ranks, Pipeline::Overlap);
+            assert_bit_identical(&sharded, &overlapped, &format!("{opt}/{ranks}r overlap"));
             let drift = max_rel_drift(&sharded, &baseline);
             assert!(
                 drift < 1e-2,
@@ -64,18 +86,30 @@ fn n_rank_training_matches_single_rank_trajectory() {
 #[test]
 fn fixed_rank_count_is_bit_for_bit_deterministic() {
     let task = MlpTask::new(8, 12, 2, 4, 64, 16, 23);
-    for ranks in [2usize, 4] {
-        let a = run(&task, "alada", ranks);
-        let b = run(&task, "alada", ranks);
-        assert_eq!(a.losses.len(), b.losses.len());
-        for (x, y) in a.losses.iter().zip(&b.losses) {
-            assert_eq!(x.to_bits(), y.to_bits(), "loss trace must be bit-identical");
+    for pipeline in [Pipeline::ReduceScatter, Pipeline::Overlap] {
+        for ranks in [2usize, 4] {
+            let a = run_with(&task, "alada", ranks, pipeline);
+            let b = run_with(&task, "alada", ranks, pipeline);
+            assert_bit_identical(&a, &b, &format!("{}/{}r rerun", pipeline.name(), ranks));
         }
-        for (ta, tb) in a.params.iter().zip(&b.params) {
-            for (x, y) in ta.data().iter().zip(tb.data()) {
-                assert_eq!(x.to_bits(), y.to_bits(), "params must be bit-identical");
-            }
+    }
+}
+
+#[test]
+fn pipeline_choice_does_not_change_the_result() {
+    // all-reduce, reduce-scatter, and overlapped reduce-scatter compose
+    // the same per-element tree sums — bit-identical results
+    // (batch 24 divides by every rank count tested)
+    let task = MlpTask::new(8, 12, 2, 4, 64, 24, 23);
+    for ranks in [2usize, 3, 4] {
+        let ar = run_with(&task, "alada", ranks, Pipeline::AllReduce);
+        for pipeline in [Pipeline::ReduceScatter, Pipeline::Overlap] {
+            let other = run_with(&task, "alada", ranks, pipeline);
+            assert_bit_identical(&ar, &other, &format!("{} at {ranks} ranks", pipeline.name()));
         }
+        // and the halved-traffic claim: strictly fewer bytes than all-reduce
+        let rs = run_with(&task, "alada", ranks, Pipeline::ReduceScatter);
+        assert!(rs.reduce_bytes < ar.reduce_bytes, "ranks={ranks}");
     }
 }
 
@@ -90,14 +124,14 @@ fn bucket_size_does_not_change_the_result() {
         &task,
         "alada",
         &schedule,
-        &ShardConfig { ranks: 4, bucket_kb: 1, steps: 12 },
+        &ShardConfig { ranks: 4, bucket_kb: 1, steps: 12, ..ShardConfig::default() },
     )
     .unwrap();
     let large = shard::train(
         &task,
         "alada",
         &schedule,
-        &ShardConfig { ranks: 4, bucket_kb: 1024, steps: 12 },
+        &ShardConfig { ranks: 4, bucket_kb: 1024, steps: 12, ..ShardConfig::default() },
     )
     .unwrap();
     for (ta, tb) in small.params.iter().zip(&large.params) {
