@@ -1,7 +1,8 @@
-//! Shard-engine benchmark: steps/sec, per-step communicated bytes, and
-//! per-rank state vs rank count — for all three exchange pipelines
-//! (all-reduce, reduce-scatter, reduce-scatter + overlap), so the
-//! traffic halving and the overlap win are visible side by side.
+//! Shard-engine benchmark: steps/sec, per-step communicated bytes,
+//! partition imbalance, and per-rank state vs rank count — for all three
+//! exchange pipelines (all-reduce, reduce-scatter, reduce-scatter +
+//! overlap), so the traffic halving, the overlap win, and the row-split
+//! balance are visible side by side.
 //!
 //! Emits machine-readable `BENCH_shard.json` so future PRs can track the
 //! perf trajectory of the reduce/step/gather pipeline without parsing
@@ -9,7 +10,7 @@
 //! under tier-1 by rust/tests/bench_smoke.rs.
 //!
 //! harness = false (criterion unavailable offline); timing via
-//! util::timing with warmup + median/MAD.
+//! util::timing with warmup + median/MAD/p95.
 
 use alada::benchkit::shard_bench;
 use alada::shard::MlpTask;
@@ -18,9 +19,15 @@ const RANKS: &[usize] = &[1, 2, 4, 8];
 const STEPS: usize = 24;
 
 fn main() {
-    // A model big enough that the reduce moves real data (~0.9 MB of
-    // grads per step at these dims), batch divisible by every rank count.
-    let task = MlpTask::new(128, 256, 3, 16, 2048, 64, 11);
-    println!("== shard engine: {STEPS}-step runs, depth-3 MLP (128→256→…→16), all pipelines ==");
+    // GPT2-shaped in the sense that matters to the planner: one
+    // embedding-like tall tensor ([2048, 64] ≈ 79% of the 166k params,
+    // m ≫ ROW_CHUNKS) dominates, exactly the shape that pinned the
+    // tensor-aligned plan at a ~6.3× per-rank floor at 8 ranks. The
+    // row-split planner holds imbalance ≈ 1.0 across the rank sweep.
+    let task = MlpTask::new(64, 2048, 1, 16, 2048, 64, 11);
+    println!(
+        "== shard engine: {STEPS}-step runs, embedding-dominated MLP (2048×64 + head), \
+         all pipelines =="
+    );
     shard_bench(&task, RANKS, STEPS, 1, 3, Some("BENCH_shard.json"));
 }

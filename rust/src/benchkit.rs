@@ -5,22 +5,46 @@
 //! drives the same code with 1 warmup + 1 sample — so the perf harness
 //! compiles and runs under the tier-1 gate and can't bit-rot between
 //! PRs. Both benches emit machine-readable JSON (BENCH_optim.json /
-//! BENCH_shard.json) so the perf trajectory is comparable across PRs
-//! without parsing console output.
+//! BENCH_shard.json) through one `write_bench_json` helper so the perf
+//! trajectory is comparable across PRs without parsing console output:
+//! per-optimizer median/p95/steps-per-sec, and per-(ranks, pipeline)
+//! engine rows including the partition imbalance ratio
+//! (`max_rank_elems / mean_rank_elems`) the row-split planner drives
+//! to ~1.0.
 
 use std::collections::BTreeMap;
 
 use crate::optim::{by_name, Schedule, ALL};
-use crate::shard::{self, MlpTask, Pipeline, ShardConfig};
+use crate::shard::{self, MlpTask, Partition, Pipeline, ShardConfig};
 use crate::tensor::Tensor;
 use crate::util::timing::bench;
 use crate::util::{Json, Rng};
+
+/// Write one BENCH_*.json document: `{"bench": name, ...extra, "runs":
+/// [...]}` — the shared emission boilerplate of every bench target.
+pub fn write_bench_json(path: &str, bench: &str, extra: &[(&str, Json)], runs: Vec<Json>) {
+    let mut doc = BTreeMap::new();
+    doc.insert("bench".to_string(), Json::Str(bench.to_string()));
+    for (k, v) in extra {
+        doc.insert((*k).to_string(), v.clone());
+    }
+    doc.insert("runs".to_string(), Json::Arr(runs));
+    std::fs::write(path, Json::Obj(doc).to_string_compact())
+        .unwrap_or_else(|e| panic!("write {path}: {e}"));
+    println!("wrote {path}");
+}
+
+fn obj(fields: Vec<(&str, Json)>) -> Json {
+    Json::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
 
 /// One optimizer's measured step cost.
 pub struct OptimBenchRow {
     pub name: &'static str,
     pub median_step_ns: f64,
     pub mean_step_ns: f64,
+    pub p95_step_ns: f64,
+    pub steps_per_sec: f64,
     pub state_bytes: usize,
 }
 
@@ -52,6 +76,8 @@ pub fn optim_bench(
             name,
             median_step_ns: stats.median_ns,
             mean_step_ns: stats.mean_ns,
+            p95_step_ns: stats.p95_ns,
+            steps_per_sec: 1e9 / stats.median_ns.max(1e-9),
             state_bytes: opt.state_overhead_bytes(),
         });
     }
@@ -60,22 +86,25 @@ pub fn optim_bench(
         let entries: Vec<Json> = rows
             .iter()
             .map(|r| {
-                let mut e = BTreeMap::new();
-                e.insert("optimizer".to_string(), Json::Str(r.name.to_string()));
-                e.insert("median_step_ns".to_string(), Json::Num(r.median_step_ns));
-                e.insert("mean_step_ns".to_string(), Json::Num(r.mean_step_ns));
-                e.insert("state_bytes".to_string(), Json::Num(r.state_bytes as f64));
-                Json::Obj(e)
+                obj(vec![
+                    ("optimizer", Json::Str(r.name.to_string())),
+                    ("median_step_ns", Json::Num(r.median_step_ns)),
+                    ("mean_step_ns", Json::Num(r.mean_step_ns)),
+                    ("p95_step_ns", Json::Num(r.p95_step_ns)),
+                    ("steps_per_sec", Json::Num(r.steps_per_sec)),
+                    ("state_bytes", Json::Num(r.state_bytes as f64)),
+                ])
             })
             .collect();
-        let mut doc = BTreeMap::new();
-        doc.insert("bench".to_string(), Json::Str("optim".to_string()));
-        doc.insert("param_elems".to_string(), Json::Num(param_elems as f64));
-        doc.insert("samples".to_string(), Json::Num(samples as f64));
-        doc.insert("runs".to_string(), Json::Arr(entries));
-        std::fs::write(path, Json::Obj(doc).to_string_compact())
-            .unwrap_or_else(|e| panic!("write {path}: {e}"));
-        println!("wrote {path}");
+        write_bench_json(
+            path,
+            "optim",
+            &[
+                ("param_elems", Json::Num(param_elems as f64)),
+                ("samples", Json::Num(samples as f64)),
+            ],
+            entries,
+        );
     }
     rows
 }
@@ -86,18 +115,23 @@ pub struct ShardBenchRow {
     pub pipeline: Pipeline,
     pub steps_per_sec: f64,
     pub median_step_ns: f64,
+    pub p95_step_ns: f64,
     pub bytes_per_step: u64,
     pub reduce_bytes_per_step: u64,
     pub gather_bytes_per_step: u64,
+    pub opt_reduce_bytes_per_step: u64,
     pub max_rank_state_bytes: usize,
     pub sum_state_bytes: usize,
+    pub max_rank_elems: usize,
+    /// max_rank_elems / (total/ranks) — ~1.0 under the row-split plan.
+    pub imbalance: f64,
     pub final_loss: f64,
 }
 
 /// Benchmark the shard engine across rank counts and all three exchange
-/// pipelines; reports per-step communicated bytes and prints the
-/// reduce-scatter/all-reduce traffic ratio (the ≈(N+1)/(2N) halving) per
-/// rank count.
+/// pipelines; reports per-step communicated bytes, the partition
+/// imbalance ratio, and prints the reduce-scatter/all-reduce traffic
+/// ratio (the ≈(N+1)/(2N) halving) per rank count.
 pub fn shard_bench(
     task: &MlpTask,
     ranks_list: &[usize],
@@ -107,8 +141,10 @@ pub fn shard_bench(
     json_path: Option<&str>,
 ) -> Vec<ShardBenchRow> {
     let schedule = Schedule::Constant { eta0: 1e-2 };
+    let shapes = task.shapes();
     let mut rows: Vec<ShardBenchRow> = Vec::new();
     for &ranks in ranks_list {
+        let part = Partition::plan_for("alada", &shapes, ranks);
         let first_of_rank = rows.len();
         for pipeline in [Pipeline::AllReduce, Pipeline::ReduceScatter, Pipeline::Overlap] {
             let cfg = ShardConfig { ranks, bucket_kb: 64, steps, pipeline };
@@ -120,19 +156,28 @@ pub fn shard_bench(
             let out = last.expect("at least one sample ran");
             let steps_per_sec = steps as f64 / stats.median_secs().max(1e-12);
             let per_step = out.bytes_per_step();
-            println!("{}  {steps_per_sec:>8.1} steps/s  {per_step:>10} B/step", stats.report());
+            println!(
+                "{}  {steps_per_sec:>8.1} steps/s  {per_step:>10} B/step  imbal {:.3}",
+                stats.report(),
+                out.imbalance
+            );
             rows.push(ShardBenchRow {
                 ranks,
                 pipeline,
                 steps_per_sec,
                 median_step_ns: stats.median_ns / steps.max(1) as f64,
+                p95_step_ns: stats.p95_ns / steps.max(1) as f64,
                 bytes_per_step: per_step,
                 reduce_bytes_per_step: out.reduce_bytes / steps.max(1) as u64,
                 gather_bytes_per_step: out.gather_bytes / steps.max(1) as u64,
+                opt_reduce_bytes_per_step: out.opt_reduce_bytes / steps.max(1) as u64,
                 max_rank_state_bytes: out.max_rank_state_bytes(),
                 sum_state_bytes: out.per_rank_state_bytes.iter().sum(),
+                max_rank_elems: out.max_rank_elems,
+                imbalance: out.imbalance,
                 final_loss: *out.losses.last().unwrap_or(&f64::NAN),
             });
+            debug_assert_eq!(out.max_rank_elems, part.max_rank_elems());
         }
         // Traffic ratio at this rank count: RS gradient exchange vs the
         // all-reduce baseline (expected ≈(N+1)/(2N)).
@@ -154,37 +199,36 @@ pub fn shard_bench(
         let entries: Vec<Json> = rows
             .iter()
             .map(|r| {
-                let mut e = BTreeMap::new();
-                e.insert("ranks".to_string(), Json::Num(r.ranks as f64));
-                e.insert("pipeline".to_string(), Json::Str(r.pipeline.name().to_string()));
-                e.insert("steps_per_sec".to_string(), Json::Num(r.steps_per_sec));
-                e.insert("median_step_ns".to_string(), Json::Num(r.median_step_ns));
-                e.insert("bytes_per_step".to_string(), Json::Num(r.bytes_per_step as f64));
-                e.insert(
-                    "reduce_bytes_per_step".to_string(),
-                    Json::Num(r.reduce_bytes_per_step as f64),
-                );
-                e.insert(
-                    "gather_bytes_per_step".to_string(),
-                    Json::Num(r.gather_bytes_per_step as f64),
-                );
-                e.insert(
-                    "max_rank_state_bytes".to_string(),
-                    Json::Num(r.max_rank_state_bytes as f64),
-                );
-                e.insert("sum_state_bytes".to_string(), Json::Num(r.sum_state_bytes as f64));
-                e.insert("final_loss".to_string(), Json::Num(r.final_loss));
-                Json::Obj(e)
+                obj(vec![
+                    ("ranks", Json::Num(r.ranks as f64)),
+                    ("pipeline", Json::Str(r.pipeline.name().to_string())),
+                    ("steps_per_sec", Json::Num(r.steps_per_sec)),
+                    ("median_step_ns", Json::Num(r.median_step_ns)),
+                    ("p95_step_ns", Json::Num(r.p95_step_ns)),
+                    ("bytes_per_step", Json::Num(r.bytes_per_step as f64)),
+                    ("reduce_bytes_per_step", Json::Num(r.reduce_bytes_per_step as f64)),
+                    ("gather_bytes_per_step", Json::Num(r.gather_bytes_per_step as f64)),
+                    (
+                        "opt_reduce_bytes_per_step",
+                        Json::Num(r.opt_reduce_bytes_per_step as f64),
+                    ),
+                    ("max_rank_state_bytes", Json::Num(r.max_rank_state_bytes as f64)),
+                    ("sum_state_bytes", Json::Num(r.sum_state_bytes as f64)),
+                    ("max_rank_elems", Json::Num(r.max_rank_elems as f64)),
+                    ("imbalance", Json::Num(r.imbalance)),
+                    ("final_loss", Json::Num(r.final_loss)),
+                ])
             })
             .collect();
-        let mut doc = BTreeMap::new();
-        doc.insert("bench".to_string(), Json::Str("shard".to_string()));
-        doc.insert("optimizer".to_string(), Json::Str("alada".to_string()));
-        doc.insert("steps".to_string(), Json::Num(steps as f64));
-        doc.insert("runs".to_string(), Json::Arr(entries));
-        std::fs::write(path, Json::Obj(doc).to_string_compact())
-            .unwrap_or_else(|e| panic!("write {path}: {e}"));
-        println!("wrote {path}");
+        write_bench_json(
+            path,
+            "shard",
+            &[
+                ("optimizer", Json::Str("alada".to_string())),
+                ("steps", Json::Num(steps as f64)),
+            ],
+            entries,
+        );
     }
     rows
 }

@@ -8,7 +8,7 @@
 //! 2. measured: real `ShardedOptimizer` instances over GPT2-Small's
 //!    parameter shapes, reporting actual `state_overhead_bytes` per rank
 //!    for every optimizer in `optim::ALL` — Alada's max-rank bytes fall
-//!    as ~Σ(m+n)/N down to the largest-tensor floor;
+//!    as ~Σ(m+n)/N with no largest-tensor floor (row-split partition);
 //! 3. live: the shard engine training the MLP task end-to-end per rank
 //!    count, reporting steps/sec and final-parameter drift vs 1 rank.
 //!
@@ -78,7 +78,7 @@ fn measured(opts: &ExpOpts) -> Result<()> {
         let unsharded = by_name(name, &shapes)?.state_overhead_bytes();
         let mut line = format!("  {name:<10}");
         for &ranks in RANKS {
-            let part = Partition::plan(&shapes, ranks);
+            let part = Partition::plan_for(name, &shapes, ranks);
             let mut max_rank = 0usize;
             let mut sum = 0usize;
             for r in 0..ranks {
@@ -92,11 +92,12 @@ fn measured(opts: &ExpOpts) -> Result<()> {
         println!("{line}");
         if *name == "alada" {
             // The acceptance check: Alada's per-rank overhead is
-            // O((m+n)/N) — max-rank bytes track total/N until the
-            // single-largest-tensor floor (the wte embedding) binds.
+            // O((m+n)/N) — with row-split partitioning the max-rank
+            // bytes track total/N (plus the replicated-q term); the old
+            // single-largest-tensor floor (the wte embedding) is gone.
             let total = unsharded;
             for &ranks in RANKS {
-                let part = Partition::plan(&shapes, ranks);
+                let part = Partition::plan_for("alada", &shapes, ranks);
                 let max_rank = (0..ranks)
                     .map(|r| ShardedOptimizer::new("alada", &part, r).map(|s| s.state_overhead_bytes()))
                     .collect::<Result<Vec<_>>>()?

@@ -214,8 +214,15 @@ fn cmd_shard_train(args: &Args) -> i32 {
             pipeline.name()
         );
         println!(
-            "{:<6}{:>12}{:>12}{:>13}{:>16}{:>16}{:>14}",
-            "ranks", "final loss", "steps/s", "comm B/step", "max rank state", "sum state", "max |Δ| vs 1"
+            "{:<6}{:>12}{:>12}{:>13}{:>16}{:>16}{:>10}{:>14}",
+            "ranks",
+            "final loss",
+            "steps/s",
+            "comm B/step",
+            "max rank state",
+            "sum state",
+            "imbal",
+            "max |Δ| vs 1"
         );
         let cfg = |ranks| ShardConfig { ranks, bucket_kb, steps, pipeline };
         let baseline = if parity || ranks_list.contains(&1) {
@@ -231,13 +238,14 @@ fn cmd_shard_train(args: &Args) -> i32 {
             };
             let drift = baseline.as_ref().map(|b| res.max_abs_drift_from(b));
             println!(
-                "{:<6}{:>12.5}{:>12.1}{:>13}{:>14} B{:>14} B{:>14}",
+                "{:<6}{:>12.5}{:>12.1}{:>13}{:>14} B{:>14} B{:>10.3}{:>14}",
                 ranks,
                 res.outcome.final_cum_loss,
                 1.0 / res.outcome.secs_per_step.max(1e-9),
                 res.bytes_per_step,
                 res.per_rank_state_bytes.iter().max().unwrap_or(&0),
                 res.per_rank_state_bytes.iter().sum::<usize>(),
+                res.imbalance,
                 drift.map(|d| format!("{d:.2e}")).unwrap_or_else(|| "-".into()),
             );
         }
@@ -283,20 +291,37 @@ fn cmd_memory(args: &Args) -> i32 {
     }
     if ranks > 1 {
         println!("\nper-rank (ZeRO-style state partition across {ranks} ranks):");
-        println!("{:<11}{:>16}{:>16}{:>15}", "optimizer", "max rank state", "sum state", "max rank total");
+        println!(
+            "{:<11}{:>16}{:>16}{:>15}{:>9}",
+            "optimizer", "max rank state", "sum state", "max rank total", "imbal"
+        );
+        let shapes: Vec<Vec<usize>> = model.params().iter().map(|p| p.shape.clone()).collect();
         for opt in ["sgd", "adam", "adafactor", "alada", "came", "sm3"] {
             let per_rank = memory::sharded_breakdown(model, opt, batch, model.max_seq, ranks);
             let max_state = per_rank.iter().map(|b| b.opt_state).max().unwrap_or(0);
             let sum_state: usize = per_rank.iter().map(|b| b.opt_state).sum();
             let max_total = per_rank.iter().map(|b| b.total()).max().unwrap_or(0);
+            let imbal = alada::shard::Partition::plan_for(opt, &shapes, ranks).imbalance();
             println!(
-                "{:<11}{:>15.3}G{:>15.3}G{:>14.2}G",
+                "{:<11}{:>15.3}G{:>15.3}G{:>14.2}G{:>9.3}",
                 opt,
                 max_state as f64 / 1e9,
                 sum_state as f64 / 1e9,
-                max_total as f64 / 1e9
+                max_total as f64 / 1e9,
+                imbal
             );
         }
+        let rep = memory::partition_report(model, "alada", ranks);
+        println!(
+            "\nfloor: {} ({} elems) pins a tensor-aligned plan at imbalance {:.2}; \
+             row-split cuts it to {:.3} (max rank {} vs ideal {} elems)",
+            rep.floor_tensor,
+            rep.floor_elems,
+            rep.tensor_aligned_imbalance,
+            rep.imbalance,
+            rep.max_rank_elems,
+            rep.ideal_rank_elems
+        );
     }
     0
 }

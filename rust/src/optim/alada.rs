@@ -10,23 +10,93 @@
 //! factor projections (V q, Vᵀ p) and the descent division stream over M
 //! with on-the-fly squaring and rank-one reconstruction, in single fused
 //! passes (also the L3 perf hot path, see benches/bench_optim.rs).
+//!
+//! # Row-split sharding and the canonical chunked accumulation
+//!
+//! The descent at row i needs only p[i] and the full q, so the natural
+//! way to shard Alada is by *rows*: a rank owning rows [r0, r1) keeps
+//! only its slice of p and M, while q and v₀ are replicated across the
+//! owners (`AladaView` / `new_sharded`). The even-phase p update is then
+//! fully local; the odd-phase q update and the t = 0 ‖G₀‖² need
+//! cross-rank sums over rows, supplied by a `Collective`.
+//!
+//! To keep N-rank training *bit-identical* to the unsharded optimizer
+//! regardless of where the rows are cut, every cross-row reduction
+//! (Vᵀp, ‖p‖², ‖G₀‖²) is accumulated per fixed row *chunk* (a pure
+//! function of m alone — `row_chunk`) and the chunk partials are
+//! combined in ascending chunk order. Rank cuts are chunk-aligned, so
+//! each chunk partial is computed whole by exactly one rank; the
+//! collective's tree only ever adds exact zeros to it (x + 0.0 == x,
+//! and the partials are sums of squares, so never -0.0), and the final
+//! chunk-order combine is the same float sequence on 1 rank, N ranks,
+//! or the unsharded optimizer. Pinned by rust/tests/shard_parity.rs.
+
+use std::ops::Range;
 
 use super::reshape::balanced_split;
-use super::Optimizer;
+use super::{Collective, LocalCollective, Optimizer};
 use crate::tensor::{kernels, Tensor};
 
+/// Upper bound on the number of fixed row chunks per balanced-split
+/// matrix. Chunks are both the unit of the canonical accumulation above
+/// and the partition planner's cut quantum: larger values cut finer
+/// (better balance) but grow the odd-step exchange buffer (C·(n+1)
+/// floats per split tensor). 128 keeps the GPT2-small planner within
+/// ~1.005 of a perfect split while the exchange stays ≪ the gradient.
+pub const ROW_CHUNKS: usize = 128;
+
+/// Number of fixed row chunks for an m-row balanced-split matrix.
+pub fn n_row_chunks(rows: usize) -> usize {
+    rows.min(ROW_CHUNKS).max(1)
+}
+
+/// Row range of chunk `c` — a pure function of the FULL row count, never
+/// of any partition, which is what makes the accumulation cut-invariant.
+pub fn row_chunk(rows: usize, c: usize) -> Range<usize> {
+    let chunks = n_row_chunks(rows);
+    debug_assert!(c < chunks);
+    c * rows / chunks..(c + 1) * rows / chunks
+}
+
+/// One tensor's (possibly partial) view for a row-split Alada shard.
+#[derive(Clone, Debug)]
+pub struct AladaView {
+    /// Index into the `params`/`grads` lists handed to `step`.
+    pub idx: usize,
+    /// FULL tensor shape (the Eq. 12 split applies to this).
+    pub shape: Vec<usize>,
+    /// Owned rows of the balanced-split matrix; must be chunk-aligned.
+    /// May be empty when the tensor is shared but this rank owns none of
+    /// it (the rank still participates in the tensor's reductions).
+    pub rows: Range<usize>,
+    /// True when the tensor's rows are spread over more than one rank:
+    /// its q/v₀ reductions then go through the step's `Collective`.
+    pub shared: bool,
+}
+
 struct Slot {
-    /// First moment M_t (stored at the parameter's own shape; conceptually
-    /// the gradient slot — see `aliases_grad_slot`).
-    m: Tensor,
-    /// Row factor p (length = balanced-split m).
+    /// Index into the `params`/`grads` lists.
+    idx: usize,
+    /// First-moment window M[row0..row0+rows] (conceptually the gradient
+    /// slot — see `aliases_grad_slot`).
+    m: Vec<f32>,
+    /// Row-factor slice p[row0..row0+rows].
     p: Vec<f32>,
-    /// Column factor q (length = balanced-split n).
+    /// Column factor q — FULL length n, replicated across owner ranks
+    /// (identical inputs to its update keep the replicas bit-equal).
     q: Vec<f32>,
-    /// v₀ = ‖G₀‖²/(mn) captured at t = 0 (line 9).
+    /// v₀ = ‖G₀‖²/(mn) captured at t = 0 (line 9); replicated.
     v0: f32,
+    /// First owned row in the full matrix.
+    row0: usize,
+    /// Owned row count (0 for a pure-participation shared view).
     rows: usize,
+    /// Full balanced-split dims.
+    full_rows: usize,
     cols: usize,
+    shared: bool,
+    /// Chunk indices covered by the owned window.
+    owned_chunks: Range<usize>,
 }
 
 pub struct Alada {
@@ -37,23 +107,70 @@ pub struct Alada {
     slots: Vec<Slot>,
 }
 
+/// Chunk-index range covering `window` (must be chunk-aligned).
+fn owned_chunk_range(full_rows: usize, window: &Range<usize>) -> Range<usize> {
+    if window.is_empty() {
+        return 0..0;
+    }
+    let chunks = n_row_chunks(full_rows);
+    let c0 = (0..chunks)
+        .position(|c| row_chunk(full_rows, c).start == window.start)
+        .expect("row window must start on a chunk boundary");
+    let c1 = (c0..chunks)
+        .find(|&c| row_chunk(full_rows, c).end == window.end)
+        .expect("row window must end on a chunk boundary");
+    c0..c1 + 1
+}
+
 impl Alada {
+    /// Unsharded optimizer: every slot is a full view of its tensor.
     pub fn new(beta1: f32, beta2: f32, eps: f32, shapes: &[Vec<usize>]) -> Alada {
-        let slots = shapes
+        let views: Vec<AladaView> = shapes
             .iter()
-            .map(|s| {
-                let (rows, cols) = balanced_split(s);
+            .enumerate()
+            .map(|(i, s)| {
+                let (rows, _) = balanced_split(s);
+                AladaView { idx: i, shape: s.clone(), rows: 0..rows, shared: false }
+            })
+            .collect();
+        Alada::new_sharded(beta1, beta2, eps, &views)
+    }
+
+    /// One rank's shard: a partial row view per (owned or shared)
+    /// tensor. Unshared views must cover their whole tensor — a tensor
+    /// owned by exactly one rank is owned entirely.
+    pub fn new_sharded(beta1: f32, beta2: f32, eps: f32, views: &[AladaView]) -> Alada {
+        let slots = views
+            .iter()
+            .map(|v| {
+                let (full_rows, cols) = balanced_split(&v.shape);
+                assert!(v.rows.end <= full_rows, "view rows out of range");
+                assert!(
+                    v.shared || (v.rows.start == 0 && v.rows.end == full_rows),
+                    "an unshared view must cover the whole tensor"
+                );
+                let rows = v.rows.len();
                 Slot {
-                    m: Tensor::zeros(s),
+                    idx: v.idx,
+                    m: vec![0.0; rows * cols],
                     p: vec![0.0; rows],
-                    q: vec![0.0; cols],
+                    q: vec![0.0; if rows > 0 { cols } else { 0 }],
                     v0: 0.0,
+                    row0: v.rows.start,
                     rows,
+                    full_rows,
                     cols,
+                    shared: v.shared,
+                    owned_chunks: owned_chunk_range(full_rows, &v.rows),
                 }
             })
             .collect();
         Alada { beta1, beta2, eps, t: 0, slots }
+    }
+
+    /// True when stepping needs a real cross-rank collective.
+    pub fn needs_collective(&self) -> bool {
+        self.slots.iter().any(|s| s.shared)
     }
 
     /// ‖G_t² − p qᵀ‖² — the factorisation error of Prop. 1 (test hook).
@@ -70,10 +187,19 @@ impl Alada {
         }
         err
     }
-}
 
-impl Optimizer for Alada {
-    fn step(&mut self, params: &mut [Tensor], grads: &[Tensor], lr: f32) {
+    /// One update over (possibly partial) views. `params`/`grads` are
+    /// indexed by each slot's `idx`; only the owned row windows are read
+    /// and written. `coll` carries the cross-rank chunk reductions of
+    /// shared slots (a no-op `LocalCollective` is correct when no slot
+    /// is shared).
+    pub fn step_with(
+        &mut self,
+        params: &mut [Tensor],
+        grads: &[Tensor],
+        lr: f32,
+        coll: &mut dyn Collective,
+    ) {
         assert_eq!(params.len(), grads.len());
         let (b1, b2, eps) = (self.beta1, self.beta2, self.eps);
         let t = self.t;
@@ -81,73 +207,212 @@ impl Optimizer for Alada {
         let bc2_pow = b2.powi(t as i32 + 1);
         let bc2_inv = 1.0 / (1.0 - bc2_pow);
 
-        for (slot, (x, g)) in self.slots.iter_mut().zip(params.iter_mut().zip(grads)) {
-            let (rows, cols) = (slot.rows, slot.cols);
+        // Lines 5-6: M_{t+1} = β₁ M_t + (1−β₁) G_t over the owned window,
+        // bias-corrected on the fly (M̃ never stored; bc1 folds into every
+        // read of M).
+        for slot in &mut self.slots {
+            if slot.rows == 0 {
+                continue;
+            }
+            let g = grads[slot.idx].data();
+            let gw = &g[slot.row0 * slot.cols..(slot.row0 + slot.rows) * slot.cols];
+            kernels::ema(&mut slot.m, gw, b1, 1.0 - b1);
+        }
 
-            // Lines 5-6: M_{t+1} = β₁ M_t + (1−β₁) G_t, bias-corrected on
-            // the fly (M̃ never stored; bc1 folds into every read of M).
-            slot.m.ema_inplace(g, b1, 1.0 - b1);
-            let md = slot.m.data();
-
-            // Lines 8-12: t = 0 initialisation from G₀.
-            if t == 0 {
-                let v0 = g.sq_norm() / (rows * cols) as f32;
+        // Lines 8-12: t = 0 initialisation from G₀ — ‖G₀‖² accumulated by
+        // the canonical per-chunk scheme (shared slots exchange chunk
+        // partials; the combine is the same chunk-order float sequence
+        // everywhere).
+        if t == 0 {
+            let mut xbuf: Vec<f32> = Vec::new();
+            for slot in &self.slots {
+                if !slot.shared {
+                    continue;
+                }
+                let base = xbuf.len();
+                xbuf.resize(base + n_row_chunks(slot.full_rows), 0.0);
+                let g = grads[slot.idx].data();
+                for c in slot.owned_chunks.clone() {
+                    let r = row_chunk(slot.full_rows, c);
+                    let gw = &g[r.start * slot.cols..r.end * slot.cols];
+                    xbuf[base + c] = kernels::dot(gw, gw);
+                }
+            }
+            if !xbuf.is_empty() {
+                coll.all_reduce_sum(&mut xbuf);
+            }
+            let mut off = 0;
+            for slot in &mut self.slots {
+                let chunks = n_row_chunks(slot.full_rows);
+                let sq = if slot.shared {
+                    let mut s = 0.0f32;
+                    for &v in &xbuf[off..off + chunks] {
+                        s += v;
+                    }
+                    off += chunks;
+                    s
+                } else {
+                    let g = grads[slot.idx].data();
+                    let mut s = 0.0f32;
+                    for c in 0..chunks {
+                        let r = row_chunk(slot.full_rows, c);
+                        let gw = &g[r.start * slot.cols..r.end * slot.cols];
+                        s += kernels::dot(gw, gw);
+                    }
+                    s
+                };
+                if slot.rows == 0 {
+                    continue;
+                }
+                let v0 = sq / (slot.full_rows * slot.cols) as f32;
                 slot.v0 = v0;
                 let root = v0.sqrt();
                 slot.p.iter_mut().for_each(|x| *x = root);
                 slot.q.iter_mut().for_each(|x| *x = root);
             }
+        }
 
-            // Lines 13-22: alternating factor update + descent.
-            //
-            // Perf note (§Perf L3, EXPERIMENTS.md): on even steps the
-            // descent at row i needs only p_new[i] (q is frozen), so the
-            // factor update and the descent fuse into a SINGLE streaming
-            // pass over M — row i's projection is computed, then the row
-            // is descended immediately while still cache-hot. Odd steps
-            // need the full column reduction Vᵀp before any descent, so
-            // they remain two passes. V = (M·bc1)² is always recomputed
-            // in-register, never materialised — mirroring the Pallas
-            // kernels' HBM discipline. Row bodies are the shared
-            // `tensor::kernels` primitives so the autovectorizer lifts
-            // them to SIMD.
-            let sub = bc2_pow * slot.v0;
-            let xd = x.data_mut();
-            if t % 2 == 0 {
-                // p_{t+1} = β₂ p + (1−β₂) V q / (‖q‖² + ε); fused descent
+        // Lines 13-22: alternating factor update + descent.
+        //
+        // Perf note (§Perf L3, EXPERIMENTS.md): on even steps the descent
+        // at row i needs only p_new[i] (q is frozen), so the factor
+        // update and the descent fuse into a SINGLE streaming pass over
+        // M — row i's projection is computed, then the row is descended
+        // immediately while still cache-hot; the pass is also fully
+        // local under row-split sharding. Odd steps need the full column
+        // reduction Vᵀp (and ‖p‖²) before any descent; those accumulate
+        // per fixed row chunk — see the module docs — so they remain two
+        // passes plus (when sharded) one small collective. V = (M·bc1)²
+        // is always recomputed in-register, never materialised —
+        // mirroring the Pallas kernels' HBM discipline. Row bodies are
+        // the shared `tensor::kernels` primitives so the autovectorizer
+        // lifts them to SIMD.
+        if t % 2 == 0 {
+            // p_{t+1} = β₂ p + (1−β₂) V q / (‖q‖² + ε); fused descent
+            for slot in &mut self.slots {
+                if slot.rows == 0 {
+                    continue;
+                }
+                let sub = bc2_pow * slot.v0;
                 let qn = kernels::dot(&slot.q, &slot.q) + eps;
-                for i in 0..rows {
-                    let mrow = &md[i * cols..(i + 1) * cols];
+                let xd = params[slot.idx].data_mut();
+                for i in 0..slot.rows {
+                    let mrow = &slot.m[i * slot.cols..(i + 1) * slot.cols];
                     let acc = kernels::sq_dot_scaled(mrow, &slot.q, bc1);
                     let pi = b2 * slot.p[i] + (1.0 - b2) * acc / qn;
                     slot.p[i] = pi;
-                    let xrow = &mut xd[i * cols..(i + 1) * cols];
-                    kernels::alada_descent_row(xrow, mrow, &slot.q, pi, bc1, sub, bc2_inv, eps, lr);
+                    let xrow =
+                        &mut xd[(slot.row0 + i) * slot.cols..(slot.row0 + i + 1) * slot.cols];
+                    kernels::alada_descent_row(
+                        xrow, mrow, &slot.q, pi, bc1, sub, bc2_inv, eps, lr,
+                    );
                 }
-            } else {
-                // q_{t+1} = β₂ q + (1−β₂) Vᵀ p / (‖p‖² + ε)
-                let pn = kernels::dot(&slot.p, &slot.p) + eps;
-                let mut acc = vec![0.0f32; cols];
-                for i in 0..rows {
-                    kernels::sq_axpy_scaled(&mut acc, &md[i * cols..(i + 1) * cols], bc1, slot.p[i]);
+            }
+        } else {
+            // q_{t+1} = β₂ q + (1−β₂) Vᵀ p / (‖p‖² + ε), both reductions
+            // per fixed row chunk. Shared slots stage [C pn-chunks |
+            // C·n acc-chunks] into one exchange buffer.
+            let mut xbuf: Vec<f32> = Vec::new();
+            let mut scratch: Vec<f32> = Vec::new();
+            for slot in &self.slots {
+                if !slot.shared {
+                    continue;
                 }
-                kernels::factor_ema(&mut slot.q, &acc, b2, pn);
+                let chunks = n_row_chunks(slot.full_rows);
+                let base = xbuf.len();
+                xbuf.resize(base + chunks * (1 + slot.cols), 0.0);
+                let (pn_part, acc_part) = xbuf[base..].split_at_mut(chunks);
+                for c in slot.owned_chunks.clone() {
+                    let r = row_chunk(slot.full_rows, c);
+                    let l0 = r.start - slot.row0;
+                    let pw = &slot.p[l0..l0 + r.len()];
+                    pn_part[c] = kernels::dot(pw, pw);
+                    scratch.clear();
+                    scratch.resize(slot.cols, 0.0);
+                    for (i, &pi) in pw.iter().enumerate() {
+                        let mrow = &slot.m[(l0 + i) * slot.cols..(l0 + i + 1) * slot.cols];
+                        kernels::sq_axpy_scaled(&mut scratch, mrow, bc1, pi);
+                    }
+                    acc_part[c * slot.cols..(c + 1) * slot.cols].copy_from_slice(&scratch);
+                }
+            }
+            if !xbuf.is_empty() {
+                coll.all_reduce_sum(&mut xbuf);
+            }
+            let mut off = 0;
+            for slot in &mut self.slots {
+                let chunks = n_row_chunks(slot.full_rows);
+                if slot.rows == 0 {
+                    if slot.shared {
+                        off += chunks * (1 + slot.cols);
+                    }
+                    continue;
+                }
+                let mut acc = vec![0.0f32; slot.cols];
+                let mut pn = 0.0f32;
+                if slot.shared {
+                    let (pn_part, acc_part) =
+                        xbuf[off..off + chunks * (1 + slot.cols)].split_at(chunks);
+                    for c in 0..chunks {
+                        pn += pn_part[c];
+                        kernels::axpy(&mut acc, &acc_part[c * slot.cols..(c + 1) * slot.cols], 1.0);
+                    }
+                    off += chunks * (1 + slot.cols);
+                } else {
+                    // Unshared ⇒ full window; identical per-chunk
+                    // partials + chunk-order combine as the shared path.
+                    for c in 0..chunks {
+                        let r = row_chunk(slot.full_rows, c);
+                        let pw = &slot.p[r.clone()];
+                        pn += kernels::dot(pw, pw);
+                        scratch.clear();
+                        scratch.resize(slot.cols, 0.0);
+                        for (i, &pi) in pw.iter().enumerate() {
+                            let mrow =
+                                &slot.m[(r.start + i) * slot.cols..(r.start + i + 1) * slot.cols];
+                            kernels::sq_axpy_scaled(&mut scratch, mrow, bc1, pi);
+                        }
+                        kernels::axpy(&mut acc, &scratch, 1.0);
+                    }
+                }
+                kernels::factor_ema(&mut slot.q, &acc, b2, pn + eps);
                 // descent (separate pass: needs the completed q_new)
-                for i in 0..rows {
+                let sub = bc2_pow * slot.v0;
+                let xd = params[slot.idx].data_mut();
+                for i in 0..slot.rows {
                     let pi = slot.p[i];
-                    let mrow = &md[i * cols..(i + 1) * cols];
-                    let xrow = &mut xd[i * cols..(i + 1) * cols];
-                    kernels::alada_descent_row(xrow, mrow, &slot.q, pi, bc1, sub, bc2_inv, eps, lr);
+                    let mrow = &slot.m[i * slot.cols..(i + 1) * slot.cols];
+                    let xrow =
+                        &mut xd[(slot.row0 + i) * slot.cols..(slot.row0 + i + 1) * slot.cols];
+                    kernels::alada_descent_row(
+                        xrow, mrow, &slot.q, pi, bc1, sub, bc2_inv, eps, lr,
+                    );
                 }
             }
         }
         self.t += 1;
     }
+}
+
+impl Optimizer for Alada {
+    fn step(&mut self, params: &mut [Tensor], grads: &[Tensor], lr: f32) {
+        // hard assert: a silent LocalCollective here would drop other
+        // ranks' chunk partials and diverge without any error
+        assert!(
+            !self.needs_collective(),
+            "row-split Alada with cross-rank tensors must step via step_with"
+        );
+        self.step_with(params, grads, lr, &mut LocalCollective);
+    }
 
     fn state_overhead_bytes(&self) -> usize {
         // Paper accounting: M aliases the gradient slot; the maintained
-        // overhead is p + q + v₀ per parameter = O(m + n).
-        self.slots.iter().map(|s| (s.p.len() + s.q.len() + 1) * 4).sum()
+        // overhead is p + q + v₀ per parameter = O(m + n) — per rank,
+        // the owned p slice plus the replicated q and v₀.
+        self.slots
+            .iter()
+            .map(|s| (s.p.len() + s.q.len() + usize::from(s.rows > 0)) * 4)
+            .sum()
     }
 
     fn aliases_grad_slot(&self) -> bool {
@@ -205,7 +470,9 @@ mod tests {
     }
 
     /// The factors stay strictly positive when gradients are nonzero
-    /// (§III: positivity makes p qᵀ a feasible preconditioner).
+    /// (§III: positivity makes p qᵀ a feasible preconditioner). This is
+    /// also what keeps the chunk partials nonnegative, so the shared
+    /// path's tree zeros can never flip a -0.0.
     #[test]
     fn factors_stay_positive() {
         let shapes = vec![vec![6, 4]];
@@ -254,5 +521,100 @@ mod tests {
         let opt = Alada::new(0.9, 0.9, 1e-16, &shapes);
         assert_eq!(opt.slots[0].rows * opt.slots[0].cols, 96);
         assert_eq!(opt.slots[0].p.len() + opt.slots[0].q.len(), 12 + 8);
+    }
+
+    /// Chunk geometry: boundaries cover [0, rows) contiguously and are a
+    /// function of the full row count only.
+    #[test]
+    fn row_chunks_tile_the_rows() {
+        for rows in [1usize, 2, 7, 128, 129, 1000, 50257] {
+            let chunks = n_row_chunks(rows);
+            assert!(chunks <= ROW_CHUNKS && chunks >= 1);
+            let mut next = 0;
+            for c in 0..chunks {
+                let r = row_chunk(rows, c);
+                assert_eq!(r.start, next, "rows={rows} c={c}");
+                assert!(!r.is_empty(), "rows={rows} c={c}");
+                next = r.end;
+            }
+            assert_eq!(next, rows);
+        }
+    }
+
+    /// Row-split shards over the real channel-mesh collective reproduce
+    /// the unsharded optimizer bit-for-bit, for cuts at every chunk
+    /// boundary split point. (The Partition-driven, multi-tensor version
+    /// of this contract lives in optim/sharded.rs and
+    /// rust/tests/shard_parity.rs.)
+    #[test]
+    fn partial_views_match_full_view_bit_for_bit() {
+        use crate::optim::testutil::MeshColl;
+        use crate::shard::mesh;
+
+        let shape = vec![23usize, 5];
+        let (m, _) = balanced_split(&shape);
+        let chunks = n_row_chunks(m); // 23 rows → 23 single-row chunks
+        let mut rng = Rng::new(41);
+        let params0 = vec![Tensor::from_fn(&shape, |_| rng.normal())];
+        let grads: Vec<Vec<Tensor>> = (0..6)
+            .map(|_| vec![Tensor::from_fn(&shape, |_| rng.normal() * 0.3)])
+            .collect();
+
+        // Reference: unsharded.
+        let mut full = Alada::new(0.9, 0.9, 1e-16, std::slice::from_ref(&shape));
+        let mut pf = params0.clone();
+        for g in &grads {
+            full.step(&mut pf, g, 1e-2);
+        }
+
+        for ranks in [2usize, 3, 4] {
+            // rank r owns chunks [r·C/ranks, (r+1)·C/ranks)
+            let bound = |r: usize| {
+                let c = r * chunks / ranks;
+                if c == chunks {
+                    m
+                } else {
+                    row_chunk(m, c).start
+                }
+            };
+            let outs: Vec<Vec<Tensor>> = std::thread::scope(|s| {
+                let handles: Vec<_> = mesh(ranks)
+                    .into_iter()
+                    .enumerate()
+                    .map(|(r, comm)| {
+                        let shape = shape.clone();
+                        let mut ps = params0.clone();
+                        let grads = &grads;
+                        s.spawn(move || {
+                            let v = AladaView {
+                                idx: 0,
+                                shape,
+                                rows: bound(r)..bound(r + 1),
+                                shared: true,
+                            };
+                            let mut shard =
+                                Alada::new_sharded(0.9, 0.9, 1e-16, std::slice::from_ref(&v));
+                            let mut coll = MeshColl(comm);
+                            for g in grads {
+                                shard.step_with(&mut ps, g, 1e-2, &mut coll);
+                            }
+                            ps
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().expect("rank thread")).collect()
+            });
+            // stitch owned rows together and compare bitwise
+            let cols = params0[0].len() / m;
+            let mut stitched = params0[0].clone();
+            for (r, out) in outs.iter().enumerate() {
+                let (r0, r1) = (bound(r), bound(r + 1));
+                stitched.data_mut()[r0 * cols..r1 * cols]
+                    .copy_from_slice(&out[0].data()[r0 * cols..r1 * cols]);
+            }
+            for (a, b) in stitched.data().iter().zip(pf[0].data()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "ranks={ranks}");
+            }
+        }
     }
 }

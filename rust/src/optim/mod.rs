@@ -37,6 +37,53 @@ use anyhow::{bail, Result};
 
 use crate::tensor::Tensor;
 
+/// Cross-rank reduction hook for partitioned optimizers.
+///
+/// Row-split sharding leaves some per-tensor reductions (Alada's Vᵀp
+/// column projection, ‖p‖², ‖G₀‖²) spread over ranks; the optimizer
+/// hands the per-chunk partials to this hook and gets back the
+/// elementwise sum over all ranks. Every rank must call with an
+/// identically laid-out buffer, the same number of times per step, and
+/// every rank receives the identical sum — the shard engine backs this
+/// with its fixed binomial tree, so the result is deterministic and the
+/// non-contributing ranks' zeros are exact (x + 0.0 == x).
+pub trait Collective {
+    fn all_reduce_sum(&mut self, buf: &mut [f32]);
+}
+
+/// Single-process collective: the sum over one rank is the identity.
+pub struct LocalCollective;
+
+impl Collective for LocalCollective {
+    fn all_reduce_sum(&mut self, _buf: &mut [f32]) {}
+}
+
+/// How finely an optimizer's state can be partitioned across ranks.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PartitionGranularity {
+    /// State couples the whole tensor (factored column statistics that
+    /// would need their own cross-rank reductions): ranks must own whole
+    /// tensors.
+    Tensor,
+    /// State separates along balanced-split rows: ranks may own row
+    /// ranges of a tensor (elementwise state, or Alada's partial view
+    /// with the q-reduction collective).
+    Row,
+}
+
+/// Partition granularity supported by optimizer `name`. Unknown names
+/// report `Tensor` (the conservative choice); `by_name` rejects them.
+pub fn partition_granularity(name: &str) -> PartitionGranularity {
+    match name {
+        "sgd" | "sgdm" | "adagrad" | "adam" | "alada" => PartitionGranularity::Row,
+        _ => PartitionGranularity::Tensor,
+    }
+}
+
+/// The paper's Alada defaults (§VI-A) — single source for `by_name` and
+/// the row-split shard constructor.
+pub(crate) const ALADA_DEFAULTS: (f32, f32, f32) = (0.9, 0.9, 1e-16);
+
 /// A stochastic optimizer over a list of tensors.
 pub trait Optimizer {
     /// Apply one update. `grads[i]` matches `params[i]` in shape.
@@ -68,7 +115,10 @@ pub fn by_name(name: &str, shapes: &[Vec<usize>]) -> Result<Box<dyn Optimizer + 
         "adagrad" => Box::new(AdaGrad::new(1e-8, shapes)),
         "adam" => Box::new(Adam::new(0.9, 0.999, 1e-8, shapes)),
         "adafactor" => Box::new(Adafactor::new(0.999, 1e-8, shapes)),
-        "alada" => Box::new(Alada::new(0.9, 0.9, 1e-16, shapes)),
+        "alada" => {
+            let (b1, b2, eps) = ALADA_DEFAULTS;
+            Box::new(Alada::new(b1, b2, eps, shapes))
+        }
         "sm3" => Box::new(Sm3::new(1e-8, shapes)),
         "came" => Box::new(Came::new(0.9, 0.999, 0.9995, 1e-8, shapes)),
         other => bail!("unknown optimizer {other:?} (known: {ALL:?})"),
@@ -82,6 +132,17 @@ pub const ALL: &[&str] = &["sgd", "sgdm", "adagrad", "adam", "adafactor", "alada
 pub(crate) mod testutil {
     use super::*;
     use crate::util::Rng;
+
+    /// `Collective` backed by one rank's mesh endpoint — the unit-test
+    /// adapter for the row-split optimizer paths (the engine's
+    /// production adapters live in shard/engine.rs).
+    pub struct MeshColl(pub crate::shard::Comm);
+
+    impl Collective for MeshColl {
+        fn all_reduce_sum(&mut self, buf: &mut [f32]) {
+            self.0.all_reduce_sum(buf, 256);
+        }
+    }
 
     /// Random parameter/gradient fixture.
     pub fn fixture(shapes: &[Vec<usize>], seed: u64) -> (Vec<Tensor>, Vec<Tensor>) {

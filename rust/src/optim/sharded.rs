@@ -1,49 +1,137 @@
 //! `ShardedOptimizer` — ZeRO-style partitioned adapter over any optimizer.
 //!
-//! One logical optimizer, N physical shards: rank r constructs the
-//! wrapped optimizer over only the tensor shapes it owns (a contiguous,
-//! tensor-aligned slice of the flat parameter space from
-//! `shard::Partition`) and applies updates to exactly those tensors.
-//! Because every optimizer's state in this crate is per-tensor, the
-//! partitioned update is *bit-identical* to what the unsharded optimizer
-//! would do to the owned tensors given the same gradients — over one
-//! rank the adapter is exactly the wrapped optimizer, and across ranks
-//! the per-rank `state_overhead_bytes` (64-byte aligned, the alignment a
+//! One logical optimizer, N physical shards. The shard's shape follows
+//! the optimizer's `partition_granularity`:
+//!
+//! * **Row-split Alada** — the shard is a partial-view `Alada` over the
+//!   owned row ranges (sliced p and M window, replicated q and v₀); the
+//!   cross-rank q/v₀ chunk reductions go through the `Collective` handed
+//!   to `step_collective`. Bit-identical to the unsharded optimizer for
+//!   any chunk-aligned cut (see optim/alada.rs module docs).
+//! * **Row-split elementwise** (SGD/SGD-m/AdaGrad/Adam) — per-element
+//!   state is exact under any cut; owned pieces are staged through
+//!   scratch tensors around the wrapped optimizer's step.
+//! * **Tensor-aligned** (Adafactor/CAME/SM3) — the PR-1 behaviour: the
+//!   wrapped optimizer is built over the whole owned tensors, which is
+//!   the only partition their coupled column statistics admit.
+//!
+//! Over one rank every variant is exactly the wrapped optimizer, and the
+//! per-rank `state_overhead_bytes` (64-byte aligned, the alignment a
 //! real flat state buffer would need) sum to the unsharded total plus
-//! padding. Both properties are pinned in rust/tests/proptests.rs.
+//! padding plus — for row-split Alada only — one replicated (q, v₀) per
+//! extra owner of a split tensor. Pinned in rust/tests/proptests.rs.
 
-use anyhow::Result;
+use anyhow::{ensure, Result};
 use std::ops::Range;
 
-use super::{by_name, Optimizer};
-use crate::shard::Partition;
+use super::alada::{Alada, AladaView};
+use super::{
+    by_name, partition_granularity, Collective, LocalCollective, Optimizer,
+    PartitionGranularity, ALADA_DEFAULTS,
+};
+use crate::shard::partition::{Partition, Piece};
 use crate::tensor::Tensor;
 
 /// Per-rank state slices are padded to this alignment (cache line /
 /// bucket boundary), the accounting a packed flat state buffer needs.
 pub const STATE_ALIGN: usize = 64;
 
+enum Inner {
+    /// Whole-tensor ownership: the wrapped optimizer over the owned
+    /// shapes, stepped on the contiguous owned sub-range of the lists.
+    Tensors { opt: Box<dyn Optimizer + Send>, owned: Range<usize> },
+    /// Row-split Alada partial view.
+    AladaRows(Alada),
+    /// Row-split elementwise optimizer over per-piece scratch tensors.
+    Elems { opt: Box<dyn Optimizer + Send>, scratch_p: Vec<Tensor>, scratch_g: Vec<Tensor> },
+}
+
 pub struct ShardedOptimizer {
-    inner: Box<dyn Optimizer + Send>,
-    /// Tensor indices (into the *full* parameter list) this rank owns.
-    owned: Range<usize>,
+    inner: Inner,
+    /// Owned sub-tensors, ascending (at most one per tensor).
+    pieces: Vec<Piece>,
     /// Flat element offsets this rank owns — the slice of the engine's
     /// exchange buffer a reduce-scatter delivers here.
     owned_elems: Range<usize>,
     rank: usize,
     ranks: usize,
+    /// True when some owned tensor's rows span more than one rank:
+    /// stepping then REQUIRES a real collective (`step_collective`).
+    needs_collective: bool,
 }
 
 impl ShardedOptimizer {
     /// Build rank `rank`'s shard of optimizer `name` under `part`.
     pub fn new(name: &str, part: &Partition, rank: usize) -> Result<ShardedOptimizer> {
-        let owned_shapes = part.owned_shapes(rank);
+        let pieces = part.pieces(rank);
+        let owned_elems = part.elem_range(rank);
+        let mut needs_collective = false;
+        let inner = match partition_granularity(name) {
+            PartitionGranularity::Row if name == "alada" => {
+                let owners = part.owner_counts();
+                let mut views = Vec::new();
+                let mut pi = 0usize;
+                for (t, slot) in part.slots().iter().enumerate() {
+                    let owned = pieces.get(pi).filter(|p| p.tensor == t);
+                    if let Some(p) = owned {
+                        pi += 1;
+                        views.push(AladaView {
+                            idx: t,
+                            shape: slot.shape.clone(),
+                            rows: p.rows.clone(),
+                            shared: owners[t] > 1,
+                        });
+                    } else if owners[t] > 1 {
+                        // shared tensor this rank owns nothing of: a
+                        // pure-participation view (the collective is
+                        // global, so every rank must join every shared
+                        // tensor's reduction).
+                        views.push(AladaView {
+                            idx: t,
+                            shape: slot.shape.clone(),
+                            rows: 0..0,
+                            shared: true,
+                        });
+                    }
+                }
+                let (b1, b2, eps) = ALADA_DEFAULTS;
+                let alada = Alada::new_sharded(b1, b2, eps, &views);
+                needs_collective = alada.needs_collective();
+                Inner::AladaRows(alada)
+            }
+            PartitionGranularity::Row => {
+                let shapes: Vec<Vec<usize>> = pieces.iter().map(|p| vec![p.elems()]).collect();
+                let opt = by_name(name, &shapes)?;
+                // scratch buffers are built lazily at the first step, so
+                // accounting-only construction stays cheap
+                Inner::Elems { opt, scratch_p: Vec::new(), scratch_g: Vec::new() }
+            }
+            PartitionGranularity::Tensor => {
+                let shapes: Vec<Vec<usize>> =
+                    pieces.iter().map(|p| part.slots()[p.tensor].shape.clone()).collect();
+                // validate the name first so unknown optimizers error as
+                // such, not as a granularity mismatch
+                let opt = by_name(name, &shapes)?;
+                ensure!(
+                    part.granularity() == PartitionGranularity::Tensor,
+                    "optimizer {name:?} has per-tensor state and needs a tensor-aligned \
+                     partition (plan with Partition::plan_for)"
+                );
+                let owned = match (pieces.first(), pieces.last()) {
+                    (Some(a), Some(b)) => a.tensor..b.tensor + 1,
+                    _ => part.n_tensors()..part.n_tensors(),
+                };
+                debug_assert_eq!(owned.len(), pieces.len());
+                Inner::Tensors { opt, owned }
+            }
+        };
         Ok(ShardedOptimizer {
-            inner: by_name(name, &owned_shapes)?,
-            owned: part.tensor_range(rank),
-            owned_elems: part.elem_range(rank),
+            inner,
+            pieces,
+            owned_elems,
             rank,
             ranks: part.ranks(),
+            needs_collective,
         })
     }
 
@@ -55,9 +143,9 @@ impl ShardedOptimizer {
         self.ranks
     }
 
-    /// Tensor indices this shard updates.
-    pub fn owned(&self) -> Range<usize> {
-        self.owned.clone()
+    /// Owned sub-tensors (at most one per tensor, ascending).
+    pub fn pieces(&self) -> &[Piece] {
+        &self.pieces
     }
 
     /// Flat element offsets this shard updates (contiguous; the segment
@@ -66,81 +154,219 @@ impl ShardedOptimizer {
         self.owned_elems.clone()
     }
 
+    /// True when `step` must go through `step_collective` with a real
+    /// cross-rank collective (some owned tensor is row-split).
+    pub fn needs_collective(&self) -> bool {
+        self.needs_collective
+    }
+
+    /// The wrapped optimizer, whichever inner form it takes.
+    fn inner_opt(&self) -> &(dyn Optimizer + Send) {
+        match &self.inner {
+            Inner::Tensors { opt, .. } => opt.as_ref(),
+            Inner::AladaRows(alada) => alada,
+            Inner::Elems { opt, .. } => opt.as_ref(),
+        }
+    }
+
     /// State bytes without the alignment padding (exact-sum bookkeeping).
     pub fn unpadded_state_bytes(&self) -> usize {
-        self.inner.state_overhead_bytes()
+        self.inner_opt().state_overhead_bytes()
+    }
+
+    /// One update. `params`/`grads` are the FULL lists; only the owned
+    /// pieces are read and updated. `coll` carries the cross-rank
+    /// reductions of row-split Alada (ignored by the other variants, so
+    /// a no-op collective is fine for them).
+    pub fn step_collective(
+        &mut self,
+        params: &mut [Tensor],
+        grads: &[Tensor],
+        lr: f32,
+        coll: &mut dyn Collective,
+    ) {
+        match &mut self.inner {
+            Inner::Tensors { opt, owned } => {
+                let r = owned.clone();
+                opt.step(&mut params[r.clone()], &grads[r], lr);
+            }
+            Inner::AladaRows(alada) => alada.step_with(params, grads, lr, coll),
+            Inner::Elems { opt, scratch_p, scratch_g } => {
+                if scratch_p.len() != self.pieces.len() {
+                    *scratch_p =
+                        self.pieces.iter().map(|p| Tensor::zeros(&[p.elems()])).collect();
+                    *scratch_g = scratch_p.clone();
+                }
+                for (piece, (sp, sg)) in
+                    self.pieces.iter().zip(scratch_p.iter_mut().zip(scratch_g.iter_mut()))
+                {
+                    let r = piece.local.clone();
+                    sp.data_mut().copy_from_slice(&params[piece.tensor].data()[r.clone()]);
+                    sg.data_mut().copy_from_slice(&grads[piece.tensor].data()[r]);
+                }
+                opt.step(&mut scratch_p[..], &scratch_g[..], lr);
+                for (piece, sp) in self.pieces.iter().zip(scratch_p.iter()) {
+                    params[piece.tensor].data_mut()[piece.local.clone()]
+                        .copy_from_slice(sp.data());
+                }
+            }
+        }
     }
 }
 
 impl Optimizer for ShardedOptimizer {
-    /// `params`/`grads` are the FULL lists; only the owned contiguous
-    /// sub-range is read and updated.
     fn step(&mut self, params: &mut [Tensor], grads: &[Tensor], lr: f32) {
-        let r = self.owned.clone();
-        self.inner.step(&mut params[r.clone()], &grads[r], lr);
+        assert!(
+            !self.needs_collective,
+            "this shard owns row-split tensors; step via step_collective with the engine's \
+             collective"
+        );
+        self.step_collective(params, grads, lr, &mut LocalCollective);
     }
 
     fn state_overhead_bytes(&self) -> usize {
-        let b = self.inner.state_overhead_bytes();
+        let b = self.unpadded_state_bytes();
         (b + STATE_ALIGN - 1) / STATE_ALIGN * STATE_ALIGN
     }
 
     fn aliases_grad_slot(&self) -> bool {
-        self.inner.aliases_grad_slot()
+        self.inner_opt().aliases_grad_slot()
     }
 
     fn name(&self) -> &'static str {
-        self.inner.name()
+        self.inner_opt().name()
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::optim::testutil::fixture;
+    use crate::optim::testutil::{fixture, MeshColl};
+    use crate::shard::mesh;
 
     #[test]
     fn one_rank_is_the_wrapped_optimizer_bit_for_bit() {
         let shapes = vec![vec![9, 4], vec![6], vec![3, 2, 5]];
-        let part = Partition::plan(&shapes, 1);
-        let mut sharded = ShardedOptimizer::new("alada", &part, 0).unwrap();
-        let mut plain = by_name("alada", &shapes).unwrap();
-        let (mut pa, grads) = fixture(&shapes, 11);
-        let mut pb = pa.clone();
-        for _ in 0..6 {
-            sharded.step(&mut pa, &grads, 3e-3);
-            plain.step(&mut pb, &grads, 3e-3);
+        for name in ["alada", "adam", "adafactor", "sgdm"] {
+            let part = Partition::plan_for(name, &shapes, 1);
+            let mut sharded = ShardedOptimizer::new(name, &part, 0).unwrap();
+            let mut plain = by_name(name, &shapes).unwrap();
+            let (mut pa, grads) = fixture(&shapes, 11);
+            let mut pb = pa.clone();
+            for _ in 0..6 {
+                sharded.step(&mut pa, &grads, 3e-3);
+                plain.step(&mut pb, &grads, 3e-3);
+            }
+            assert_eq!(pa, pb, "{name}");
         }
-        assert_eq!(pa, pb);
     }
 
+    /// The tentpole contract: stepping every row-split shard over a real
+    /// mesh == stepping the unsharded optimizer, bit-for-bit, at rank
+    /// counts that cut the dominant matrix at different chunk boundaries.
     #[test]
-    fn shards_update_disjoint_tensors_identically_to_unsharded() {
-        // Stepping every shard == stepping the unsharded optimizer,
-        // bit-for-bit, because the partition is tensor-aligned.
-        let shapes = vec![vec![8, 8], vec![12], vec![6, 4], vec![10], vec![4, 4, 4]];
-        let ranks = 3;
-        let part = Partition::plan(&shapes, ranks);
-        let mut plain = by_name("alada", &shapes).unwrap();
+    fn row_split_shards_match_unsharded_bit_for_bit() {
+        // [40, 6] dominates and splits; the rest ride along.
+        let shapes = vec![vec![40, 6], vec![12], vec![6, 4], vec![10]];
         let (mut pa, grads) = fixture(&shapes, 21);
-        let mut pb = pa.clone();
-        let mut shards: Vec<ShardedOptimizer> =
-            (0..ranks).map(|r| ShardedOptimizer::new("alada", &part, r).unwrap()).collect();
+        let mut plain = by_name("alada", &shapes).unwrap();
         for _ in 0..5 {
             plain.step(&mut pa, &grads, 1e-2);
-            for s in shards.iter_mut() {
-                s.step(&mut pb, &grads, 1e-2);
+        }
+        for ranks in [1usize, 2, 3, 4, 7] {
+            let part = Partition::plan_for("alada", &shapes, ranks);
+            let outs: Vec<(Vec<Piece>, Vec<Tensor>)> = std::thread::scope(|s| {
+                let handles: Vec<_> = mesh(ranks)
+                    .into_iter()
+                    .enumerate()
+                    .map(|(r, comm)| {
+                        let part = &part;
+                        let shapes = &shapes;
+                        let grads = &grads;
+                        s.spawn(move || {
+                            let (mut pb, _) = fixture(shapes, 21);
+                            let mut shard = ShardedOptimizer::new("alada", part, r).unwrap();
+                            let mut coll = MeshColl(comm);
+                            for _ in 0..5 {
+                                shard.step_collective(&mut pb, grads, 1e-2, &mut coll);
+                            }
+                            (shard.pieces().to_vec(), pb)
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().expect("rank thread")).collect()
+            });
+            // stitch each rank's owned pieces into one parameter set
+            let (mut stitched, _) = fixture(&shapes, 21);
+            for (pieces, pb) in &outs {
+                for piece in pieces {
+                    stitched[piece.tensor].data_mut()[piece.local.clone()]
+                        .copy_from_slice(&pb[piece.tensor].data()[piece.local.clone()]);
+                }
+            }
+            for (t, (a, b)) in stitched.iter().zip(&pa).enumerate() {
+                for (x, y) in a.data().iter().zip(b.data()) {
+                    assert_eq!(
+                        x.to_bits(),
+                        y.to_bits(),
+                        "ranks={ranks} tensor={t}: {x} vs {y}"
+                    );
+                }
             }
         }
-        assert_eq!(pa, pb);
     }
 
     #[test]
-    fn padded_bytes_are_aligned_and_bounded() {
+    fn row_split_elementwise_shards_match_unsharded() {
+        let shapes = vec![vec![30, 4], vec![8], vec![5, 5]];
+        for name in ["sgd", "sgdm", "adagrad", "adam"] {
+            let part = Partition::plan_for(name, &shapes, 3);
+            let mut plain = by_name(name, &shapes).unwrap();
+            let (mut pa, grads) = fixture(&shapes, 33);
+            let mut pb = pa.clone();
+            let mut shards: Vec<ShardedOptimizer> =
+                (0..3).map(|r| ShardedOptimizer::new(name, &part, r).unwrap()).collect();
+            for _ in 0..5 {
+                plain.step(&mut pa, &grads, 1e-2);
+                for s in shards.iter_mut() {
+                    // elementwise state needs no collective
+                    s.step(&mut pb, &grads, 1e-2);
+                }
+            }
+            assert_eq!(pa, pb, "{name}");
+        }
+    }
+
+    #[test]
+    fn tensor_aligned_shards_update_disjoint_tensors_identically() {
+        let shapes = vec![vec![8, 8], vec![12], vec![6, 4], vec![10], vec![4, 4, 4]];
+        let ranks = 3;
+        for name in ["adafactor", "came", "sm3"] {
+            let part = Partition::plan_for(name, &shapes, ranks);
+            assert_eq!(part.granularity(), PartitionGranularity::Tensor);
+            let mut plain = by_name(name, &shapes).unwrap();
+            let (mut pa, grads) = fixture(&shapes, 21);
+            let mut pb = pa.clone();
+            let mut shards: Vec<ShardedOptimizer> =
+                (0..ranks).map(|r| ShardedOptimizer::new(name, &part, r).unwrap()).collect();
+            for _ in 0..5 {
+                plain.step(&mut pa, &grads, 1e-2);
+                for s in shards.iter_mut() {
+                    s.step(&mut pb, &grads, 1e-2);
+                }
+            }
+            assert_eq!(pa, pb, "{name}");
+        }
+    }
+
+    #[test]
+    fn padded_bytes_are_aligned_and_replication_accounted() {
         let shapes = vec![vec![33, 7], vec![5], vec![2, 9]];
         for ranks in [1usize, 2, 3, 5] {
-            let part = Partition::plan(&shapes, ranks);
+            let part = Partition::plan_for("alada", &shapes, ranks);
             let total = by_name("alada", &shapes).unwrap().state_overhead_bytes();
+            // exact expected replication: one (q, v₀) per extra owner
+            let repl = part.alada_replication_bytes();
             let mut sum_padded = 0;
             let mut sum_exact = 0;
             for r in 0..ranks {
@@ -151,14 +377,24 @@ mod tests {
                 sum_padded += s.state_overhead_bytes();
                 sum_exact += s.unpadded_state_bytes();
             }
-            assert_eq!(sum_exact, total, "ranks={ranks}");
-            assert!(sum_padded >= total && sum_padded - total < ranks * STATE_ALIGN);
+            assert_eq!(sum_exact, total + repl, "ranks={ranks}");
+            assert!(sum_padded >= sum_exact && sum_padded - sum_exact < ranks * STATE_ALIGN);
         }
     }
 
     #[test]
     fn unknown_name_is_a_result_error() {
         let part = Partition::plan(&[vec![4, 4]], 2);
-        assert!(ShardedOptimizer::new("definitely-not-an-optimizer", &part, 0).is_err());
+        let err = ShardedOptimizer::new("definitely-not-an-optimizer", &part, 0);
+        assert!(err.is_err());
+        assert!(format!("{:#}", err.unwrap_err()).contains("unknown optimizer"));
+    }
+
+    #[test]
+    fn tensor_granularity_optimizer_rejects_row_partition() {
+        let part = Partition::plan(&[vec![400, 4], vec![4]], 2); // row-granular
+        let err = ShardedOptimizer::new("adafactor", &part, 0);
+        assert!(err.is_err());
+        assert!(format!("{:#}", err.unwrap_err()).contains("tensor-aligned"));
     }
 }

@@ -11,6 +11,17 @@
 //! broadcast trees use a fixed association order, so a run is bit-for-bit
 //! deterministic for a given rank count.
 //!
+//! The partition is **row-split** where the optimizer allows it
+//! (`Partition::plan_for`): a dominant tensor's balanced-split rows
+//! spread over several ranks, so `max_rank_elems` tracks total/N instead
+//! of flooring at the largest tensor — both the per-rank state bytes and
+//! the per-rank update compute stay balanced. Row-split Alada needs one
+//! extra small collective per odd step (the Vᵀp/‖p‖² chunk reduction)
+//! and one at t = 0 (‖G₀‖²); the engine passes a `Collective` backed by
+//! the same fixed tree into `ShardedOptimizer::step_collective`, so the
+//! update stays bit-identical to the unsharded optimizer for every rank
+//! count (see optim/alada.rs and rust/tests/shard_parity.rs).
+//!
 //! Three pipelines share that arithmetic (`ShardConfig::pipeline`):
 //!
 //! * `AllReduce` — the original full-gradient all-reduce + slice
@@ -25,6 +36,8 @@
 //!   without changing the trajectory, which the determinism contract
 //!   forbids. The exchange buffers are double-buffered between the
 //!   compute and comm threads so the steady state is allocation-free.
+//!   The optimizer's collectives run on the same comm thread, in command
+//!   order, so their tree association matches the other pipelines.
 //!
 //! All three produce bit-identical results: reduce-scatter + all-gather
 //! composes to exactly the all-reduce sum (same tree association, same
@@ -32,11 +45,12 @@
 //! never the per-element association (pinned in
 //! rust/tests/shard_parity.rs).
 //!
-//! Trajectory contract: because the partition is tensor-aligned, the
-//! partitioned update is bit-identical to the unsharded optimizer given
-//! the same averaged gradient; the only N-dependence is the association
-//! order of the gradient average (micro-means combined by the tree vs a
-//! single full-batch mean). N-rank training therefore tracks the 1-rank
+//! Trajectory contract: the partitioned update is bit-identical to the
+//! unsharded optimizer given the same averaged gradient (tensor-aligned
+//! ownership, or chunk-aligned row splits with the canonical chunked
+//! accumulation); the only N-dependence is the association order of the
+//! gradient average (micro-means combined by the tree vs a single
+//! full-batch mean). N-rank training therefore tracks the 1-rank
 //! trajectory to within float-reassociation tolerance — the parity test
 //! in rust/tests/shard_parity.rs pins this down.
 
@@ -45,11 +59,11 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 
 use anyhow::{ensure, Result};
 
-use crate::optim::{Optimizer, Schedule, ShardedOptimizer};
+use crate::optim::{Collective, Optimizer, Schedule, ShardedOptimizer};
 use crate::tensor::Tensor;
 
 use super::allreduce::{mesh, BytesMeter, Comm, Seg};
-use super::partition::Partition;
+use super::partition::{Partition, Piece};
 
 /// A task the shard engine can train: deterministic initial parameters
 /// plus per-rank gradient replicas that partition each step's global
@@ -166,6 +180,13 @@ pub struct ShardOutcome {
     pub reduce_bytes: u64,
     /// Payload bytes moved by the parameter all-gather / broadcast.
     pub gather_bytes: u64,
+    /// Payload bytes moved by the optimizer's own collectives (row-split
+    /// Alada's q/v₀ chunk reductions), whole run, all ranks.
+    pub opt_reduce_bytes: u64,
+    /// Largest per-rank owned element count under the partition.
+    pub max_rank_elems: usize,
+    /// Partition balance: max_rank_elems over the ideal total/ranks mean.
+    pub imbalance: f64,
 }
 
 impl ShardOutcome {
@@ -179,7 +200,7 @@ impl ShardOutcome {
 
     /// Total collective traffic for the run.
     pub fn comm_bytes(&self) -> u64 {
-        self.reduce_bytes + self.gather_bytes
+        self.reduce_bytes + self.gather_bytes + self.opt_reduce_bytes
     }
 
     /// Mean payload bytes per optimizer step (all ranks combined).
@@ -194,6 +215,20 @@ struct RankOut {
     state_bytes: usize,
     reduce_bytes: u64,
     gather_bytes: u64,
+    opt_bytes: u64,
+}
+
+/// Where tensor data lands in the reduce/gather segments. Under row-split
+/// partitions a tensor may span several segments (and a segment holds
+/// sub-tensor pieces), so the mapping is piece-granular.
+#[derive(Clone)]
+struct LayoutPiece {
+    /// Index into `Layout::segs`.
+    seg: usize,
+    /// Element range within the tensor.
+    local: Range<usize>,
+    /// Offset within the segment's buffer.
+    seg_off: usize,
 }
 
 /// Flat-space layout shared by the reduce-scatter pipelines: one segment
@@ -202,10 +237,10 @@ struct RankOut {
 struct Layout {
     /// Reduce/gather segments; the loss segment is LAST.
     segs: Vec<Seg>,
-    /// grad tensor index → index into `segs`.
-    seg_of_tensor: Vec<usize>,
-    /// Tensors per segment (0 for the loss segment).
-    tensors_in_seg: Vec<usize>,
+    /// Per tensor: the segment pieces covering it, ascending.
+    tensor_pieces: Vec<Vec<LayoutPiece>>,
+    /// Tensor-pieces per segment (0 for the loss segment).
+    pieces_in_seg: Vec<usize>,
     /// Index of the loss segment in `segs`.
     loss_seg: usize,
 }
@@ -214,24 +249,56 @@ impl Layout {
     fn plan(part: &Partition) -> Layout {
         let total = part.total_elems();
         let mut segs = Vec::new();
-        let mut seg_of_tensor = vec![usize::MAX; part.n_tensors()];
-        let mut tensors_in_seg = Vec::new();
+        let mut tensor_pieces: Vec<Vec<LayoutPiece>> = vec![Vec::new(); part.n_tensors()];
+        let mut pieces_in_seg = Vec::new();
         for r in 0..part.ranks() {
             let er = part.elem_range(r);
             if er.is_empty() {
                 continue;
             }
-            let tr = part.tensor_range(r);
-            for i in tr.clone() {
-                seg_of_tensor[i] = segs.len();
+            let pieces = part.pieces(r);
+            let seg = segs.len();
+            for p in &pieces {
+                tensor_pieces[p.tensor].push(LayoutPiece {
+                    seg,
+                    local: p.local.clone(),
+                    seg_off: p.flat.start - er.start,
+                });
             }
-            tensors_in_seg.push(tr.len());
+            pieces_in_seg.push(pieces.len());
             segs.push(Seg { owner: r, range: er });
         }
         let loss_seg = segs.len();
         segs.push(Seg { owner: 0, range: total..total + 1 });
-        tensors_in_seg.push(0);
-        Layout { segs, seg_of_tensor, tensors_in_seg, loss_seg }
+        pieces_in_seg.push(0);
+        Layout { segs, tensor_pieces, pieces_in_seg, loss_seg }
+    }
+}
+
+/// Copy the reduced owned slice of `flat` into the grads' owned pieces.
+fn unpack_owned(pieces: &[Piece], flat: &[f32], grads: &mut [Tensor]) {
+    for p in pieces {
+        grads[p.tensor].data_mut()[p.local.clone()].copy_from_slice(&flat[p.flat.clone()]);
+    }
+}
+
+/// Copy the refreshed owned parameter pieces into `flat`.
+fn pack_owned(pieces: &[Piece], params: &[Tensor], flat: &mut [f32]) {
+    for p in pieces {
+        flat[p.flat.clone()].copy_from_slice(&params[p.tensor].data()[p.local.clone()]);
+    }
+}
+
+/// The optimizer-facing collective of the synchronous pipelines: the
+/// mesh's fixed-tree all-reduce at the engine's bucket size.
+struct CommCollective<'a> {
+    comm: &'a Comm,
+    bucket: usize,
+}
+
+impl Collective for CommCollective<'_> {
+    fn all_reduce_sum(&mut self, buf: &mut [f32]) {
+        self.comm.all_reduce_sum(buf, self.bucket);
     }
 }
 
@@ -246,7 +313,7 @@ pub fn train(
     ensure!(cfg.ranks >= 1, "shard engine needs at least one rank");
     let shapes = task.shapes();
     ensure!(!shapes.is_empty(), "shard engine needs at least one parameter");
-    let part = Partition::plan(&shapes, cfg.ranks);
+    let part = Partition::plan_for(opt, &shapes, cfg.ranks);
 
     // Build everything fallible in the parent thread so errors (unknown
     // optimizer, bad batch split) surface as Results, not thread panics.
@@ -283,6 +350,7 @@ pub fn train(
     let per_rank_state_bytes = outs.iter().map(|o| o.state_bytes).collect();
     let reduce_bytes = outs.iter().map(|o| o.reduce_bytes).sum();
     let gather_bytes = outs.iter().map(|o| o.gather_bytes).sum();
+    let opt_reduce_bytes = outs.iter().map(|o| o.opt_bytes).sum();
     let first = outs.swap_remove(0);
     Ok(ShardOutcome {
         losses: first.losses,
@@ -291,6 +359,9 @@ pub fn train(
         wall_secs,
         reduce_bytes,
         gather_bytes,
+        opt_reduce_bytes,
+        max_rank_elems: part.max_rank_elems(),
+        imbalance: part.imbalance(),
     })
 }
 
@@ -336,12 +407,13 @@ fn run_rank_allreduce(
 ) -> RankOut {
     let slots = part.slots();
     let total = part.total_elems();
+    let my_pieces = part.pieces(rank);
     let mut grads: Vec<Tensor> = slots.iter().map(|s| Tensor::zeros(&s.shape)).collect();
     // Flat exchange buffer: gradients + one trailing loss slot (the loss
     // rides the same reduce, so every rank sees the global mean for free).
     let mut flat = vec![0.0f32; total + 1];
     let mut losses = Vec::with_capacity(steps);
-    let (mut reduce_bytes, mut gather_bytes) = (0u64, 0u64);
+    let (mut reduce_bytes, mut gather_bytes, mut opt_bytes) = (0u64, 0u64, 0u64);
     let mut meter = BytesMeter::new();
 
     for step in 0..steps {
@@ -354,18 +426,14 @@ fn run_rank_allreduce(
         reduce_bytes += meter.take(&comm);
         losses.push(flat[total] as f64);
 
-        // Partitioned update: unpack + step the owned tensors only.
-        for i in part.tensor_range(rank) {
-            let s = &slots[i];
-            grads[i].data_mut().copy_from_slice(&flat[s.offset..s.offset + s.elems]);
-        }
-        opt.step(&mut params, &grads, schedule.at(step));
+        // Partitioned update: unpack + step the owned pieces only.
+        unpack_owned(&my_pieces, &flat, &mut grads);
+        let mut coll = CommCollective { comm: &comm, bucket };
+        opt.step_collective(&mut params, &grads, schedule.at(step), &mut coll);
+        opt_bytes += meter.take(&comm);
 
         // All-gather: every rank broadcasts its updated slice.
-        for i in part.tensor_range(rank) {
-            let s = &slots[i];
-            flat[s.offset..s.offset + s.elems].copy_from_slice(params[i].data());
-        }
+        pack_owned(&my_pieces, &params, &mut flat);
         for root in 0..comm.ranks {
             let r = part.elem_range(root);
             comm.broadcast(root, &mut flat[r], bucket);
@@ -382,6 +450,7 @@ fn run_rank_allreduce(
         state_bytes: opt.state_overhead_bytes(),
         reduce_bytes,
         gather_bytes,
+        opt_bytes,
     }
 }
 
@@ -404,10 +473,11 @@ fn run_rank_reduce_scatter(
     let slots = part.slots();
     let total = part.total_elems();
     let lay = Layout::plan(part);
+    let my_pieces = part.pieces(rank);
     let mut grads: Vec<Tensor> = slots.iter().map(|s| Tensor::zeros(&s.shape)).collect();
     let mut flat = vec![0.0f32; total + 1];
     let mut losses = Vec::with_capacity(steps);
-    let (mut reduce_bytes, mut gather_bytes) = (0u64, 0u64);
+    let (mut reduce_bytes, mut gather_bytes, mut opt_bytes) = (0u64, 0u64, 0u64);
     let mut meter = BytesMeter::new();
 
     for step in 0..steps {
@@ -420,16 +490,12 @@ fn run_rank_reduce_scatter(
         reduce_bytes += meter.take(&comm);
 
         // Only the owned slice of `flat` holds the reduced mean now.
-        for i in part.tensor_range(rank) {
-            let s = &slots[i];
-            grads[i].data_mut().copy_from_slice(&flat[s.offset..s.offset + s.elems]);
-        }
-        opt.step(&mut params, &grads, schedule.at(step));
+        unpack_owned(&my_pieces, &flat, &mut grads);
+        let mut coll = CommCollective { comm: &comm, bucket };
+        opt.step_collective(&mut params, &grads, schedule.at(step), &mut coll);
+        opt_bytes += meter.take(&comm);
 
-        for i in part.tensor_range(rank) {
-            let s = &slots[i];
-            flat[s.offset..s.offset + s.elems].copy_from_slice(params[i].data());
-        }
+        pack_owned(&my_pieces, &params, &mut flat);
         // One gather refreshes every slice AND broadcasts the loss
         // (rank 0 kept it from the scatter).
         comm.all_gather(&mut flat, &lay.segs, bucket);
@@ -446,6 +512,7 @@ fn run_rank_reduce_scatter(
         state_bytes: opt.state_overhead_bytes(),
         reduce_bytes,
         gather_bytes,
+        opt_bytes,
     }
 }
 
@@ -456,6 +523,9 @@ enum Cmd {
     /// Reduce segment `seg` (index into Layout::segs) whose local
     /// contribution is `data`.
     Reduce { seg: usize, data: Vec<f32> },
+    /// All-reduce-sum `data` across ranks (the optimizer's q/v₀ chunk
+    /// reduction) and send it back as `Resp::AllReduced`.
+    AllReduce { data: Vec<f32> },
     /// Run the all-gather: `owned` carries this rank's refreshed
     /// parameter slice, `spare` is the second half of the double buffer.
     Gather { owned: Vec<f32>, spare: Vec<f32> },
@@ -471,14 +541,46 @@ enum Resp {
     /// skip the zero-fill (every element is overwritten before the
     /// segment is sent).
     RecycleSeg(usize, Vec<f32>),
+    /// The summed optimizer-collective buffer.
+    AllReduced(Vec<f32>),
     /// The fully gathered flat buffer (params + loss slot).
     Gathered(Vec<f32>),
+}
+
+/// The optimizer-facing collective of the overlap pipeline: ships the
+/// buffer to the comm thread (which owns the mesh endpoint) and waits
+/// for the sum, stashing any unrelated recycle responses that arrive
+/// first for the main loop to drain after the step.
+struct ChannelCollective<'a> {
+    cmd: &'a Sender<Cmd>,
+    resp: &'a Receiver<Resp>,
+    pool: Vec<Vec<f32>>,
+    stray: Vec<Resp>,
+}
+
+impl Collective for ChannelCollective<'_> {
+    fn all_reduce_sum(&mut self, buf: &mut [f32]) {
+        let mut msg = self.pool.pop().unwrap_or_default();
+        msg.clear();
+        msg.extend_from_slice(buf);
+        self.cmd.send(Cmd::AllReduce { data: msg }).expect("comm thread alive");
+        loop {
+            match self.resp.recv().expect("comm thread alive") {
+                Resp::AllReduced(data) => {
+                    buf.copy_from_slice(&data);
+                    self.pool.push(data);
+                    return;
+                }
+                other => self.stray.push(other),
+            }
+        }
+    }
 }
 
 /// Overlap pipeline: a comm thread owns the `Comm` endpoint and executes
 /// collectives in command order while the replica thread computes. The
 /// backward pass hands over each gradient segment as soon as its last
-/// tensor is final, so late segments reduce underneath the still-running
+/// piece is final, so late segments reduce underneath the still-running
 /// backward — the ROADMAP "async gradient prefetch" item, without any
 /// change to the arithmetic (segment *timing* moves, association never
 /// does).
@@ -497,6 +599,7 @@ fn run_rank_overlap(
     let slots = part.slots();
     let total = part.total_elems();
     let lay = Layout::plan(part);
+    let my_pieces = part.pieces(rank);
     // The reduce-scatter target slice — identical to part.elem_range(rank)
     // by construction; taken from the optimizer so both sides of the
     // exchange share one source of truth.
@@ -513,6 +616,8 @@ fn run_rank_overlap(
             let my_range = my_range.clone();
             s.spawn(move || comm_worker(comm, cmd_rx, resp_tx, segs, my_range, bucket, total, rank))
         };
+        let mut coll =
+            ChannelCollective { cmd: &cmd_tx, resp: &resp_rx, pool: Vec::new(), stray: Vec::new() };
 
         // Buffer recycling: staging buffers come back keyed by segment
         // (exact length preserved, so no per-step zero-fill — the ready
@@ -531,9 +636,9 @@ fn run_rank_overlap(
         let mut staging: Vec<Vec<f32>> = vec![Vec::new(); lay.segs.len()];
 
         for step in 0..steps {
-            remaining.copy_from_slice(&lay.tensors_in_seg);
+            remaining.copy_from_slice(&lay.pieces_in_seg);
             for (si, seg) in lay.segs.iter().enumerate() {
-                staging[si] = if lay.tensors_in_seg[si] > 0 {
+                staging[si] = if lay.pieces_in_seg[si] > 0 {
                     let v = seg_pools[si]
                         .pop()
                         .unwrap_or_else(|| vec![0.0f32; seg.range.len()]);
@@ -553,13 +658,14 @@ fn run_rank_overlap(
                 let cmd = &cmd_tx;
                 let lay = &lay;
                 let mut ready = |i: usize, g: &[f32]| {
-                    let si = lay.seg_of_tensor[i];
-                    let off = slots[i].offset - lay.segs[si].range.start;
-                    staging[si][off..off + g.len()].copy_from_slice(g);
-                    remaining[si] -= 1;
-                    if remaining[si] == 0 {
-                        let data = std::mem::take(&mut staging[si]);
-                        cmd.send(Cmd::Reduce { seg: si, data }).expect("comm thread alive");
+                    for pc in &lay.tensor_pieces[i] {
+                        staging[pc.seg][pc.seg_off..pc.seg_off + pc.local.len()]
+                            .copy_from_slice(&g[pc.local.clone()]);
+                        remaining[pc.seg] -= 1;
+                        if remaining[pc.seg] == 0 {
+                            let data = std::mem::take(&mut staging[pc.seg]);
+                            cmd.send(Cmd::Reduce { seg: pc.seg, data }).expect("comm thread alive");
+                        }
                     }
                 };
                 replica.grad_streaming(&params, step, &mut grads, &mut ready)
@@ -579,26 +685,36 @@ fn run_rank_overlap(
                 loop {
                     match resp_rx.recv().expect("comm thread alive") {
                         Resp::OwnedGrad(data) => {
-                            for i in part.tensor_range(rank) {
-                                let sl = &slots[i];
-                                let off = sl.offset - my_range.start;
-                                grads[i].data_mut().copy_from_slice(&data[off..off + sl.elems]);
+                            for p in &my_pieces {
+                                let off = p.flat.start - my_range.start;
+                                grads[p.tensor].data_mut()[p.local.clone()]
+                                    .copy_from_slice(&data[off..off + p.local.len()]);
                             }
                             seg_pools[my_seg.expect("owned grad implies a segment")].push(data);
                             break;
                         }
                         Resp::Recycle(v) => pool.push(v),
                         Resp::RecycleSeg(si, v) => seg_pools[si].push(v),
+                        Resp::AllReduced(_) => unreachable!("collective response before request"),
                         Resp::Gathered(_) => unreachable!("gather response before request"),
                     }
                 }
             }
-            opt.step(&mut params, &grads, schedule.at(step));
+            opt.step_collective(&mut params, &grads, schedule.at(step), &mut coll);
+            // Recycle-class responses that raced the optimizer's
+            // collective round-trips.
+            for r in coll.stray.drain(..) {
+                match r {
+                    Resp::Recycle(v) => pool.push(v),
+                    Resp::RecycleSeg(si, v) => seg_pools[si].push(v),
+                    _ => unreachable!("unexpected response class during optimizer collective"),
+                }
+            }
 
             let mut owned = pool.pop().unwrap_or_default();
             owned.clear();
-            for i in part.tensor_range(rank) {
-                owned.extend_from_slice(params[i].data());
+            for p in &my_pieces {
+                owned.extend_from_slice(&params[p.tensor].data()[p.local.clone()]);
             }
             let spare = std::mem::take(&mut spare_flat);
             cmd_tx.send(Cmd::Gather { owned, spare }).expect("comm thread alive");
@@ -607,6 +723,7 @@ fn run_rank_overlap(
                     Resp::Gathered(f) => break f,
                     Resp::Recycle(v) => pool.push(v),
                     Resp::RecycleSeg(si, v) => seg_pools[si].push(v),
+                    Resp::AllReduced(_) => unreachable!("late collective response"),
                     Resp::OwnedGrad(_) => unreachable!("unexpected second owned segment"),
                 }
             };
@@ -617,21 +734,24 @@ fn run_rank_overlap(
             spare_flat = gathered;
         }
 
+        drop(coll);
         drop(cmd_tx);
-        let (reduce_bytes, gather_bytes) = worker.join().expect("comm thread panicked");
+        let (reduce_bytes, gather_bytes, opt_bytes) = worker.join().expect("comm thread panicked");
         RankOut {
             losses,
             params,
             state_bytes: opt.state_overhead_bytes(),
             reduce_bytes,
             gather_bytes,
+            opt_bytes,
         }
     })
 }
 
 /// The comm thread: executes collectives in command order. Every rank
-/// enqueues segments in the same (task-determined) order, so the
-/// point-to-point messages match up without tags.
+/// enqueues segments (and optimizer collectives) in the same
+/// (task-determined) order, so the point-to-point messages match up
+/// without tags.
 #[allow(clippy::too_many_arguments)]
 fn comm_worker(
     comm: Comm,
@@ -642,10 +762,10 @@ fn comm_worker(
     bucket: usize,
     total: usize,
     rank: usize,
-) -> (u64, u64) {
+) -> (u64, u64, u64) {
     let loss_seg = segs.len() - 1;
     let mut flat = vec![0.0f32; total + 1];
-    let (mut reduce_bytes, mut gather_bytes) = (0u64, 0u64);
+    let (mut reduce_bytes, mut gather_bytes, mut opt_bytes) = (0u64, 0u64, 0u64);
     let mut meter = BytesMeter::new();
     while let Ok(cmd) = cmd_rx.recv() {
         match cmd {
@@ -663,6 +783,11 @@ fn comm_worker(
                     let _ = resp_tx.send(Resp::RecycleSeg(seg, data));
                 }
             }
+            Cmd::AllReduce { mut data } => {
+                comm.all_reduce_sum(&mut data, bucket);
+                opt_bytes += meter.take(&comm);
+                let _ = resp_tx.send(Resp::AllReduced(data));
+            }
             Cmd::Gather { owned, spare } => {
                 flat[my_range.clone()].copy_from_slice(&owned);
                 comm.all_gather(&mut flat, &segs, bucket);
@@ -673,7 +798,7 @@ fn comm_worker(
             }
         }
     }
-    (reduce_bytes, gather_bytes)
+    (reduce_bytes, gather_bytes, opt_bytes)
 }
 
 #[cfg(test)]
@@ -695,6 +820,7 @@ mod tests {
         assert!(out.losses.last().unwrap() < out.losses.first().unwrap());
         assert_eq!(out.per_rank_state_bytes.len(), 3);
         assert!(out.reduce_bytes > 0 && out.gather_bytes > 0);
+        assert!(out.imbalance >= 1.0 && out.max_rank_elems > 0);
     }
 
     #[test]
@@ -716,7 +842,8 @@ mod tests {
 
     #[test]
     fn pipelines_are_bit_identical() {
-        // batch 24 divides by 3 (non-power-of-2 tree on purpose)
+        // batch 24 divides by 3 (non-power-of-2 tree on purpose); alada
+        // exercises the optimizer collective on every pipeline
         let task = MlpTask::new(8, 12, 2, 4, 64, 24, 41);
         let sched = Schedule::Constant { eta0: 5e-3 };
         let run = |pipeline| {
@@ -756,6 +883,20 @@ mod tests {
             "reduce-scatter moved {got:.3} of the all-reduce bytes, want ≈{want:.3}"
         );
         assert!(rs.comm_bytes() < ar.comm_bytes());
+        // sgd has no optimizer collective
+        assert_eq!(rs.opt_reduce_bytes, 0);
+    }
+
+    #[test]
+    fn alada_q_reduction_traffic_is_bounded() {
+        // embedding-shaped dominant tensor (m ≫ ROW_CHUNKS): the odd-step
+        // chunk exchange stays below the per-step gradient exchange (for
+        // m ≫ 128 it is ~C/m of the tensor; only split tensors pay it)
+        let task = MlpTask::new(8, 256, 1, 4, 64, 16, 41);
+        let cfg = ShardConfig { ranks: 4, bucket_kb: 1, steps: 8, ..ShardConfig::default() };
+        let out = train(&task, "alada", &Schedule::Constant { eta0: 1e-3 }, &cfg).unwrap();
+        assert!(out.opt_reduce_bytes > 0, "row-split alada must exchange chunk partials");
+        assert!(out.opt_reduce_bytes < out.reduce_bytes, "{out:?}");
     }
 
     #[test]
@@ -768,26 +909,48 @@ mod tests {
     }
 
     #[test]
-    fn state_bytes_sum_matches_unsharded() {
+    fn state_bytes_sum_matches_unsharded_plus_replication() {
         let task = MlpTask::new(8, 12, 3, 4, 64, 12, 3);
         let shapes = task.shapes();
         let unsharded = crate::optim::by_name("alada", &shapes).unwrap().state_overhead_bytes();
-        let cfg = ShardConfig { ranks: 4, bucket_kb: 1, steps: 1, ..ShardConfig::default() };
+        let ranks = 4;
+        let cfg = ShardConfig { ranks, bucket_kb: 1, steps: 1, ..ShardConfig::default() };
         let out = train(&task, "alada", &Schedule::Constant { eta0: 1e-2 }, &cfg).unwrap();
         let sum: usize = out.per_rank_state_bytes.iter().sum();
-        // per-rank slices are 64-byte aligned; the sum is the unsharded
-        // total plus that padding only
-        assert!(sum >= unsharded && sum - unsharded < 4 * 64, "{sum} vs {unsharded}");
+        // per-rank slices are 64-byte aligned and shared tensors
+        // replicate (q, v₀) once per extra owner — bound that exactly
+        let repl = Partition::plan_for("alada", &shapes, ranks).alada_replication_bytes();
+        assert!(
+            sum >= unsharded && sum <= unsharded + repl + ranks * 64,
+            "{sum} vs {unsharded} (+{repl} replication)"
+        );
     }
 
     #[test]
-    fn overlap_works_with_more_ranks_than_tensors() {
-        // depth-1 MLP = 4 tensors; 6 ranks leaves empty tail ranks whose
-        // comm threads still have to participate in every tree.
+    fn row_split_balances_a_dominant_tensor() {
+        // first layer [96, 8] dominates this skinny MLP; the row plan
+        // must spread it so per-rank state tracks total/N
+        let task = MlpTask::new(8, 96, 1, 4, 32, 16, 9);
+        let cfg = ShardConfig { ranks: 4, bucket_kb: 1, steps: 2, ..ShardConfig::default() };
+        let out = train(&task, "alada", &Schedule::Constant { eta0: 1e-2 }, &cfg).unwrap();
+        assert!(
+            out.imbalance <= 1.25,
+            "row-split plan should balance the dominant tensor: {}",
+            out.imbalance
+        );
+        let aligned = Partition::plan_tensor_aligned(&task.shapes(), 4);
+        assert!(out.max_rank_elems < aligned.max_rank_elems());
+    }
+
+    #[test]
+    fn overlap_works_with_more_ranks_than_atoms() {
+        // depth-1 MLP = 4 tensors = 10 row atoms; 12 ranks leaves empty
+        // tail ranks whose comm threads still have to participate in
+        // every tree — including the optimizer's q/v₀ collective.
         let task = MlpTask::new(4, 6, 1, 2, 24, 12, 13);
         let sched = Schedule::Constant { eta0: 1e-2 };
         let run = |pipeline| {
-            let cfg = ShardConfig { ranks: 6, bucket_kb: 1, steps: 5, pipeline };
+            let cfg = ShardConfig { ranks: 12, bucket_kb: 1, steps: 5, pipeline };
             train(&task, "alada", &sched, &cfg).expect("train")
         };
         let a = run(Pipeline::ReduceScatter);

@@ -6,23 +6,30 @@
 //! gradients meet in a bucketed, fixed-order tree **reduce-scatter**
 //! (`allreduce` also speaks all-reduce and all-gather over the same
 //! tree); and the optimizer state — Alada's rank-one factors included —
-//! is partitioned across ranks at tensor granularity (`partition`), so
-//! each rank maintains only its contiguous slice: per-rank Alada
-//! overhead falls as ~Σ(m+n)/N down to the single-largest-tensor floor.
-//! The update itself is applied through `optim::ShardedOptimizer`, which
-//! wraps any `Optimizer` over the owned shapes, and the refreshed
-//! parameter slices fan back out through an all-gather (`engine`). A
-//! per-rank comm thread can overlap the reduce with the backward pass
-//! (`Pipeline::Overlap`).
+//! is partitioned across ranks at **row granularity** where the
+//! optimizer allows it (`partition`): a dominant tensor's balanced-split
+//! rows spread over several ranks, so per-rank Alada overhead and update
+//! compute track ~total/N instead of flooring at the largest tensor.
+//! The update itself is applied through `optim::ShardedOptimizer`
+//! (partial-view Alada with a cross-rank q/v₀ chunk reduction, scratch
+//! pieces for elementwise optimizers, whole tensors for the factored
+//! rest), and the refreshed parameter slices fan back out through an
+//! all-gather (`engine`). A per-rank comm thread can overlap the reduce
+//! with the backward pass (`Pipeline::Overlap`).
 //!
 //! Guarantees:
 //! * bit-for-bit deterministic for a fixed rank count (fixed reduction
 //!   order, point-to-point channels only); bucket size, pipeline choice,
 //!   and overlap never change results;
-//! * N-rank trajectories match the 1-rank trajectory up to float
-//!   reassociation of the gradient average (rust/tests/shard_parity.rs);
+//! * the partitioned update is bit-identical to the unsharded optimizer
+//!   at EVERY rank count — chunk-aligned row cuts plus the canonical
+//!   chunked accumulation (optim/alada.rs) make the result
+//!   cut-invariant; N-rank trajectories then match the 1-rank
+//!   trajectory up to float reassociation of the gradient average alone
+//!   (rust/tests/shard_parity.rs);
 //! * per-rank `state_overhead_bytes` sums to the unsharded total plus
-//!   64-byte alignment padding only.
+//!   64-byte alignment padding, plus one replicated (q, v₀) per extra
+//!   owner of a row-split tensor.
 
 pub mod allreduce;
 pub mod engine;
@@ -32,4 +39,4 @@ pub mod partition;
 pub use allreduce::{mesh, Comm, Seg};
 pub use engine::{train, Pipeline, Replica, ShardConfig, ShardOutcome, ShardTask};
 pub use mlp::MlpTask;
-pub use partition::Partition;
+pub use partition::{Partition, Piece};

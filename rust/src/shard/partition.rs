@@ -1,22 +1,36 @@
 //! Parameter/layout planner: who owns which slice of the flat space.
 //!
 //! ZeRO-style state partitioning needs a deterministic answer to "which
-//! rank updates which parameters". We flatten the parameter list into one
-//! contiguous space (the same packing order the runtime artifacts use)
-//! and cut it at *tensor boundaries* into `ranks` contiguous groups,
-//! minimising the largest group. Tensor granularity is what keeps the
-//! partitioned optimizer bit-identical to the unsharded one: every
-//! optimizer's state in this crate is per-tensor (Alada's (p, q, v₀)
-//! live on the balanced-split view of a single tensor), so a rank that
-//! owns whole tensors reproduces exactly the update the unsharded
-//! optimizer would apply to them. PyTorch's ZeroRedundancyOptimizer
-//! makes the same trade.
+//! rank updates which parameters". We flatten the parameter list into
+//! one contiguous space (the same packing order the runtime artifacts
+//! use) and cut it into `ranks` contiguous groups, minimising the
+//! largest group.
+//!
+//! The cut quantum is an *atom*. For row-splittable optimizers
+//! (elementwise state, or Alada's partial view — see
+//! `optim::partition_granularity`) an atom is one fixed row chunk of a
+//! tensor's balanced-split (m, n) matrix (`optim::alada::row_chunk`), so
+//! a dominant tensor's rows spread across several ranks and
+//! `max_rank_elems` approaches ceil(total/ranks) instead of
+//! max(largest tensor, ceil(total/ranks)) — the row-split PR's whole
+//! point. Chunk alignment (not just row alignment) is what keeps the
+//! partitioned Alada bit-identical to the unsharded one: its cross-row
+//! reductions are accumulated per fixed chunk and combined in chunk
+//! order, so any chunk-aligned cut reproduces the same float sequence.
+//! For optimizers whose state couples the whole tensor (Adafactor, CAME,
+//! SM3 column statistics) the atom stays the whole tensor, which is what
+//! PyTorch's ZeroRedundancyOptimizer does for everything.
 //!
 //! The min-max contiguous partition is found by binary search on the
-//! group capacity with a greedy feasibility check — O(T log Σelems),
-//! deterministic, and optimal for contiguous cuts.
+//! group capacity with a greedy feasibility check — O(A log Σelems) over
+//! A atoms, deterministic, and optimal for contiguous cuts (pinned
+//! against a brute-force DP in the tests below).
 
 use std::ops::Range;
+
+use crate::optim::alada::{n_row_chunks, row_chunk};
+use crate::optim::reshape::balanced_split;
+use crate::optim::{partition_granularity, PartitionGranularity};
 
 /// One tensor's place in the flat parameter space.
 #[derive(Clone, Debug)]
@@ -25,32 +39,106 @@ pub struct Slot {
     /// Offset (in elements) of this tensor in the flat space.
     pub offset: usize,
     pub elems: usize,
+    /// Balanced-split (Eq. 12) view: `rows * cols == elems`.
+    pub rows: usize,
+    pub cols: usize,
 }
 
-/// A contiguous, tensor-aligned partition of the flat parameter space.
+/// A contiguous sub-tensor one rank owns: rows `rows` of tensor
+/// `tensor`'s balanced-split matrix. Row-major layout makes both element
+/// ranges contiguous.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Piece {
+    pub tensor: usize,
+    /// Owned rows of the balanced-split matrix.
+    pub rows: Range<usize>,
+    pub cols: usize,
+    /// Element range within the tensor.
+    pub local: Range<usize>,
+    /// Element range in the flat space.
+    pub flat: Range<usize>,
+}
+
+impl Piece {
+    pub fn elems(&self) -> usize {
+        self.local.len()
+    }
+}
+
+/// The smallest ownable unit (a row chunk, or a whole tensor).
+#[derive(Clone, Debug)]
+struct Atom {
+    tensor: usize,
+    rows: Range<usize>,
+    elems: usize,
+}
+
+/// A contiguous, atom-aligned partition of the flat parameter space.
 #[derive(Clone, Debug)]
 pub struct Partition {
     ranks: usize,
     slots: Vec<Slot>,
-    /// Tensor-index boundaries: rank r owns tensors `cuts[r]..cuts[r+1]`.
+    atoms: Vec<Atom>,
+    /// Atom-index boundaries: rank r owns atoms `cuts[r]..cuts[r+1]`.
     cuts: Vec<usize>,
     total: usize,
+    granularity: PartitionGranularity,
 }
 
 impl Partition {
-    /// Plan a partition of `shapes` across `ranks` (≥ 1) groups.
+    /// Plan a row-granular partition of `shapes` across `ranks` (≥ 1)
+    /// groups — the default for row-splittable optimizers.
     pub fn plan(shapes: &[Vec<usize>], ranks: usize) -> Partition {
+        Self::plan_granular(shapes, ranks, PartitionGranularity::Row)
+    }
+
+    /// Plan with whole-tensor atoms (the PR-1 behaviour), required by
+    /// optimizers whose state couples the whole tensor.
+    pub fn plan_tensor_aligned(shapes: &[Vec<usize>], ranks: usize) -> Partition {
+        Self::plan_granular(shapes, ranks, PartitionGranularity::Tensor)
+    }
+
+    /// Plan at the finest granularity optimizer `opt` supports.
+    pub fn plan_for(opt: &str, shapes: &[Vec<usize>], ranks: usize) -> Partition {
+        Self::plan_granular(shapes, ranks, partition_granularity(opt))
+    }
+
+    fn plan_granular(
+        shapes: &[Vec<usize>],
+        ranks: usize,
+        granularity: PartitionGranularity,
+    ) -> Partition {
         assert!(ranks >= 1, "partition needs at least one rank");
         let mut slots = Vec::with_capacity(shapes.len());
         let mut offset = 0usize;
         for shape in shapes {
             let elems = shape.iter().product::<usize>().max(1);
-            slots.push(Slot { shape: shape.clone(), offset, elems });
+            let (rows, cols) = balanced_split(shape);
+            debug_assert_eq!(rows * cols, elems);
+            slots.push(Slot { shape: shape.clone(), offset, elems, rows, cols });
             offset += elems;
         }
-        let sizes: Vec<usize> = slots.iter().map(|s| s.elems).collect();
+        let mut atoms = Vec::new();
+        for (t, slot) in slots.iter().enumerate() {
+            match granularity {
+                PartitionGranularity::Tensor => {
+                    atoms.push(Atom { tensor: t, rows: 0..slot.rows, elems: slot.elems });
+                }
+                PartitionGranularity::Row => {
+                    for c in 0..n_row_chunks(slot.rows) {
+                        let r = row_chunk(slot.rows, c);
+                        atoms.push(Atom {
+                            tensor: t,
+                            rows: r.clone(),
+                            elems: r.len() * slot.cols,
+                        });
+                    }
+                }
+            }
+        }
+        let sizes: Vec<usize> = atoms.iter().map(|a| a.elems).collect();
         let cuts = min_max_cuts(&sizes, ranks);
-        Partition { ranks, slots, cuts, total: offset }
+        Partition { ranks, slots, atoms, cuts, total: offset, granularity }
     }
 
     pub fn ranks(&self) -> usize {
@@ -69,20 +157,25 @@ impl Partition {
         &self.slots
     }
 
-    /// Tensor indices owned by `rank`.
-    pub fn tensor_range(&self, rank: usize) -> Range<usize> {
-        self.cuts[rank]..self.cuts[rank + 1]
+    pub fn granularity(&self) -> PartitionGranularity {
+        self.granularity
+    }
+
+    fn atom_flat_start(&self, a: usize) -> usize {
+        let atom = &self.atoms[a];
+        self.slots[atom.tensor].offset + atom.rows.start * self.slots[atom.tensor].cols
     }
 
     /// Flat element offsets owned by `rank` (contiguous by construction).
     pub fn elem_range(&self, rank: usize) -> Range<usize> {
-        let tr = self.tensor_range(rank);
-        if tr.is_empty() {
+        let ar = self.cuts[rank]..self.cuts[rank + 1];
+        if ar.is_empty() {
             return self.total..self.total;
         }
-        let start = self.slots[tr.start].offset;
-        let last = &self.slots[tr.end - 1];
-        start..last.offset + last.elems
+        let start = self.atom_flat_start(ar.start);
+        let last = &self.atoms[ar.end - 1];
+        let end = self.atom_flat_start(ar.end - 1) + last.elems;
+        start..end
     }
 
     pub fn rank_elems(&self, rank: usize) -> usize {
@@ -93,9 +186,80 @@ impl Partition {
         (0..self.ranks).map(|r| self.rank_elems(r)).max().unwrap_or(0)
     }
 
-    /// Shapes of the tensors owned by `rank` (sub-optimizer construction).
-    pub fn owned_shapes(&self, rank: usize) -> Vec<Vec<usize>> {
-        self.slots[self.tensor_range(rank)].iter().map(|s| s.shape.clone()).collect()
+    /// Load-balance quality: the largest rank's owned elements over the
+    /// ideal total/ranks mean (1.0 = perfectly balanced; empty ranks
+    /// count toward the mean, so over-provisioned rank counts show up).
+    pub fn imbalance(&self) -> f64 {
+        if self.total == 0 {
+            return 1.0;
+        }
+        self.max_rank_elems() as f64 / (self.total as f64 / self.ranks as f64)
+    }
+
+    /// Index of the largest tensor — the per-rank floor a tensor-aligned
+    /// partition cannot cut below (the `memory --ranks` report names it).
+    pub fn largest_tensor(&self) -> usize {
+        self.slots
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, s)| s.elems)
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    }
+
+    /// The contiguous sub-tensors `rank` owns, ascending, adjacent atoms
+    /// of one tensor merged (at most one piece per tensor).
+    pub fn pieces(&self, rank: usize) -> Vec<Piece> {
+        let mut out: Vec<Piece> = Vec::new();
+        for a in self.cuts[rank]..self.cuts[rank + 1] {
+            let atom = &self.atoms[a];
+            match out.last_mut() {
+                Some(p) if p.tensor == atom.tensor && p.rows.end == atom.rows.start => {
+                    p.rows.end = atom.rows.end;
+                }
+                _ => out.push(Piece {
+                    tensor: atom.tensor,
+                    rows: atom.rows.clone(),
+                    cols: self.slots[atom.tensor].cols,
+                    local: 0..0,
+                    flat: 0..0,
+                }),
+            }
+        }
+        for p in &mut out {
+            let slot = &self.slots[p.tensor];
+            p.local = p.rows.start * slot.cols..p.rows.end * slot.cols;
+            p.flat = slot.offset + p.local.start..slot.offset + p.local.end;
+        }
+        out
+    }
+
+    /// Bytes of state row-split Alada replicates under this partition:
+    /// one (q, v₀) copy per extra owner of each tensor. The single
+    /// source for the `sum(per-rank state) == unsharded + replication`
+    /// contract asserted across the test suites.
+    pub fn alada_replication_bytes(&self) -> usize {
+        self.owner_counts()
+            .iter()
+            .zip(&self.slots)
+            .map(|(&o, s)| o.saturating_sub(1) * (s.cols + 1) * 4)
+            .sum()
+    }
+
+    /// How many ranks own at least one row of each tensor (a tensor with
+    /// more than one owner needs the cross-rank q/v₀ reduction).
+    pub fn owner_counts(&self) -> Vec<usize> {
+        let mut counts = vec![0usize; self.slots.len()];
+        for r in 0..self.ranks {
+            let mut last = usize::MAX;
+            for a in &self.atoms[self.cuts[r]..self.cuts[r + 1]] {
+                if a.tensor != last {
+                    counts[a.tensor] += 1;
+                    last = a.tensor;
+                }
+            }
+        }
+        counts
     }
 }
 
@@ -151,25 +315,28 @@ fn groups_needed(sizes: &[usize], cap: usize) -> usize {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::Rng;
 
     fn shapes(sizes: &[usize]) -> Vec<Vec<usize>> {
         sizes.iter().map(|&n| vec![n]).collect()
     }
 
+    // Vectors balanced-split to a single (1, n) row, so vector-only
+    // inputs exercise the planner with atomic tensors even under the
+    // row-granular default — the PR-1 cases below are unchanged.
+
     #[test]
     fn covers_everything_contiguously() {
         let p = Partition::plan(&shapes(&[5, 3, 8, 2, 9, 1]), 3);
-        let mut next_tensor = 0;
         let mut next_elem = 0;
         for r in 0..3 {
-            let tr = p.tensor_range(r);
-            assert_eq!(tr.start, next_tensor);
-            next_tensor = tr.end;
             let er = p.elem_range(r);
             assert_eq!(er.start, next_elem);
             next_elem = er.end;
+            for piece in p.pieces(r) {
+                assert_eq!(piece.flat.len(), piece.elems());
+            }
         }
-        assert_eq!(next_tensor, 6);
         assert_eq!(next_elem, p.total_elems());
     }
 
@@ -178,31 +345,66 @@ mod tests {
         // [5,3,8,2,9,1] / 3 → best contiguous max is 10: [5,3] [8,2] [9,1]
         let p = Partition::plan(&shapes(&[5, 3, 8, 2, 9, 1]), 3);
         assert_eq!(p.max_rank_elems(), 10);
-        // one dominant tensor pins the optimum at its size
+        // one dominant VECTOR is atomic and pins the optimum at its size
         let p = Partition::plan(&shapes(&[100, 1, 1, 1]), 2);
         assert_eq!(p.max_rank_elems(), 100);
     }
 
     #[test]
-    fn more_ranks_than_tensors_leaves_empty_tails() {
+    fn dominant_matrix_rows_split_across_ranks() {
+        // The tentpole: a [100, 4] matrix dominates; tensor-aligned
+        // planning floors at 400 elems, row-granular cuts its rows.
+        let shapes = vec![vec![100, 4], vec![7], vec![5]];
+        let aligned = Partition::plan_tensor_aligned(&shapes, 4);
+        assert_eq!(aligned.max_rank_elems(), 400);
+        let rows = Partition::plan(&shapes, 4);
+        assert!(
+            rows.max_rank_elems() <= 412 / 4 + 4,
+            "row split should approach total/ranks, got {}",
+            rows.max_rank_elems()
+        );
+        assert!(rows.imbalance() < aligned.imbalance());
+        // pieces: the matrix appears as row ranges on several ranks
+        let owners = rows.owner_counts();
+        assert!(owners[0] > 1, "the dominant matrix must be split: {owners:?}");
+        let mut covered = 0usize;
+        for r in 0..4 {
+            for piece in rows.pieces(r) {
+                if piece.tensor == 0 {
+                    assert_eq!(piece.cols, 4);
+                    assert_eq!(piece.local.len(), piece.rows.len() * 4);
+                    covered += piece.rows.len();
+                }
+            }
+        }
+        assert_eq!(covered, 100, "every row owned exactly once");
+    }
+
+    #[test]
+    fn more_ranks_than_atoms_leaves_empty_tails() {
         let p = Partition::plan(&shapes(&[4, 4]), 5);
         let owned: Vec<usize> = (0..5).map(|r| p.rank_elems(r)).collect();
         assert_eq!(owned.iter().sum::<usize>(), 8);
         assert!(owned[2..].iter().all(|&n| n == 0));
         assert!(p.elem_range(4).is_empty());
+        assert!(p.pieces(4).is_empty());
     }
 
     #[test]
     fn single_rank_owns_all() {
         let p = Partition::plan(&shapes(&[7, 9, 2]), 1);
-        assert_eq!(p.tensor_range(0), 0..3);
         assert_eq!(p.elem_range(0), 0..18);
-        assert_eq!(p.owned_shapes(0).len(), 3);
+        let pieces = p.pieces(0);
+        assert_eq!(pieces.len(), 3);
+        for (t, piece) in pieces.iter().enumerate() {
+            assert_eq!(piece.tensor, t);
+            assert_eq!(piece.rows, 0..p.slots()[t].rows);
+        }
     }
 
     #[test]
     fn optimum_within_classic_bound() {
-        // contiguous min-max ≤ largest + ceil(total/ranks)
+        // contiguous min-max ≤ largest atom + ceil(total/ranks)
         let sizes = [13usize, 2, 40, 7, 7, 7, 21, 3, 3, 3, 3, 18];
         for ranks in 1..=8 {
             let p = Partition::plan(&shapes(&sizes), ranks);
@@ -219,5 +421,156 @@ mod tests {
         assert_eq!(p.total_elems(), 1 + 6 + 4);
         assert_eq!(p.slots()[1].offset, 1);
         assert_eq!(p.slots()[2].offset, 7);
+    }
+
+    #[test]
+    fn row_cuts_are_chunk_aligned() {
+        use crate::optim::alada::{n_row_chunks, row_chunk};
+        let shapes = vec![vec![317, 3], vec![12, 50], vec![90]];
+        for ranks in [2usize, 3, 5, 8] {
+            let p = Partition::plan(&shapes, ranks);
+            for r in 0..ranks {
+                for piece in p.pieces(r) {
+                    let rows = p.slots()[piece.tensor].rows;
+                    let chunks = n_row_chunks(rows);
+                    assert!(
+                        (0..chunks).any(|c| row_chunk(rows, c).start == piece.rows.start),
+                        "piece start {} of tensor {} not chunk-aligned",
+                        piece.rows.start,
+                        piece.tensor
+                    );
+                    assert!(
+                        (0..chunks).any(|c| row_chunk(rows, c).end == piece.rows.end),
+                        "piece end {} of tensor {} not chunk-aligned",
+                        piece.rows.end,
+                        piece.tensor
+                    );
+                }
+            }
+        }
+    }
+
+    /// Brute-force optimal contiguous min-max partition by DP, for the
+    /// proptest below. O(n²·ranks) — fine at test sizes.
+    fn brute_force_min_max(sizes: &[usize], ranks: usize) -> usize {
+        let n = sizes.len();
+        let mut prefix = vec![0usize; n + 1];
+        for (i, &s) in sizes.iter().enumerate() {
+            prefix[i + 1] = prefix[i] + s;
+        }
+        // best[k][i] = optimal max group sum splitting sizes[..i] into k groups
+        let mut best = vec![usize::MAX; n + 1];
+        for (i, b) in best.iter_mut().enumerate() {
+            *b = prefix[i]; // one group
+        }
+        for _k in 2..=ranks {
+            let mut next = vec![usize::MAX; n + 1];
+            for i in 0..=n {
+                for j in 0..=i {
+                    let cand = best[j].max(prefix[i] - prefix[j]);
+                    next[i] = next[i].min(cand);
+                }
+            }
+            best = next;
+        }
+        best[n]
+    }
+
+    /// Property: the binary-search planner is exactly the brute-force
+    /// optimum on random inputs (proptest substrate: the deterministic
+    /// PCG rng with explicit seeds, as in rust/tests/proptests.rs).
+    #[test]
+    fn prop_min_max_cuts_match_brute_force() {
+        let mut rng = Rng::new(424242);
+        for trial in 0..300 {
+            let n = 1 + rng.below_usize(10);
+            let sizes: Vec<usize> = (0..n).map(|_| 1 + rng.below_usize(50)).collect();
+            let ranks = 1 + rng.below_usize(6);
+            let cuts = min_max_cuts(&sizes, ranks);
+            let got = (0..ranks)
+                .map(|r| sizes[cuts[r]..cuts[r + 1]].iter().sum::<usize>())
+                .max()
+                .unwrap();
+            let want = brute_force_min_max(&sizes, ranks);
+            assert_eq!(got, want, "trial {trial}: sizes {sizes:?} ranks {ranks}");
+        }
+    }
+
+    #[test]
+    fn brute_force_edge_cases() {
+        // more ranks than atoms: optimum is the largest atom
+        let sizes = [9usize, 4, 7];
+        assert_eq!(brute_force_min_max(&sizes, 5), 9);
+        let cuts = min_max_cuts(&sizes, 5);
+        let got =
+            (0..5).map(|r| sizes[cuts[r]..cuts[r + 1]].iter().sum::<usize>()).max().unwrap();
+        assert_eq!(got, 9);
+        // a single dominant atom pins both
+        let sizes = [100usize, 2, 2, 2];
+        assert_eq!(brute_force_min_max(&sizes, 3), 100);
+        let cuts = min_max_cuts(&sizes, 3);
+        let got =
+            (0..3).map(|r| sizes[cuts[r]..cuts[r + 1]].iter().sum::<usize>()).max().unwrap();
+        assert_eq!(got, 100);
+    }
+
+    #[test]
+    fn owner_counts_match_pieces() {
+        let shapes = vec![vec![64, 6], vec![10], vec![32, 4]];
+        let p = Partition::plan(&shapes, 4);
+        let owners = p.owner_counts();
+        for t in 0..shapes.len() {
+            let by_pieces =
+                (0..4).filter(|&r| p.pieces(r).iter().any(|pc| pc.tensor == t)).count();
+            assert_eq!(owners[t], by_pieces, "tensor {t}");
+        }
+        // all rows accounted for exactly once
+        for t in 0..shapes.len() {
+            let total_rows: usize = (0..4)
+                .flat_map(|r| p.pieces(r))
+                .filter(|pc| pc.tensor == t)
+                .map(|pc| pc.rows.len())
+                .sum();
+            assert_eq!(total_rows, p.slots()[t].rows);
+        }
+    }
+
+    #[test]
+    fn gpt2_shaped_imbalance_drops_below_1_05() {
+        // The acceptance gate: a wte-dominated shape list stops being
+        // largest-tensor-bound once rows split. (Scaled-down GPT2: same
+        // proportions, cheap to plan.)
+        let mut shapes = vec![vec![5025, 76], vec![102, 76], vec![76], vec![76]];
+        for _ in 0..12 {
+            shapes.extend([
+                vec![76],
+                vec![76],
+                vec![76, 228],
+                vec![228],
+                vec![76, 76],
+                vec![76],
+                vec![76],
+                vec![76],
+                vec![76, 307],
+                vec![307],
+                vec![307, 76],
+                vec![76],
+            ]);
+        }
+        for ranks in [4usize, 8] {
+            let aligned = Partition::plan_tensor_aligned(&shapes, ranks);
+            let rows = Partition::plan(&shapes, ranks);
+            assert!(
+                rows.imbalance() <= 1.05,
+                "ranks={ranks}: row imbalance {:.3}",
+                rows.imbalance()
+            );
+            assert!(
+                aligned.imbalance() > 1.2,
+                "ranks={ranks}: the aligned plan should be floor-bound, got {:.3}",
+                aligned.imbalance()
+            );
+            assert!(rows.max_rank_elems() < aligned.max_rank_elems());
+        }
     }
 }

@@ -126,6 +126,10 @@ pub struct ShardedRun {
     /// of truth — it divides by every step the engine executed, not the
     /// recorded count, which stops at the first non-finite loss).
     pub bytes_per_step: u64,
+    /// Largest per-rank owned element count under the partition.
+    pub max_rank_elems: usize,
+    /// Partition balance: max_rank_elems / (total/ranks); 1.0 is perfect.
+    pub imbalance: f64,
 }
 
 /// The sharded step path: N replica threads over the pure-Rust substrate
@@ -157,6 +161,8 @@ pub fn run_sharded(
     Ok(ShardedRun {
         outcome,
         bytes_per_step: sharded.bytes_per_step(),
+        max_rank_elems: sharded.max_rank_elems,
+        imbalance: sharded.imbalance,
         params: sharded.params,
         per_rank_state_bytes: sharded.per_rank_state_bytes,
         reduce_bytes: sharded.reduce_bytes,

@@ -15,6 +15,9 @@ pub struct BenchStats {
     pub mad_ns: f64,
     pub mean_ns: f64,
     pub min_ns: f64,
+    /// 95th-percentile sample (nearest-rank; equals the max below 20
+    /// samples) — the tail the perf trajectory tracks alongside median.
+    pub p95_ns: f64,
 }
 
 impl BenchStats {
@@ -83,6 +86,8 @@ fn stats_from(name: &str, mut times: Vec<f64>) -> BenchStats {
     let median = times[n / 2];
     let mut devs: Vec<f64> = times.iter().map(|t| (t - median).abs()).collect();
     devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // nearest-rank p95: ceil(0.95 n)-th order statistic
+    let p95_idx = ((n * 95).div_ceil(100)).clamp(1, n) - 1;
     BenchStats {
         name: name.to_string(),
         samples: n,
@@ -90,6 +95,7 @@ fn stats_from(name: &str, mut times: Vec<f64>) -> BenchStats {
         mad_ns: devs[n / 2],
         mean_ns: times.iter().sum::<f64>() / n as f64,
         min_ns: times[0],
+        p95_ns: times[p95_idx],
     }
 }
 
@@ -118,6 +124,7 @@ mod tests {
         assert_eq!(s.samples, 16);
         assert!(s.median_ns > 0.0);
         assert!(s.min_ns <= s.median_ns);
+        assert!(s.p95_ns >= s.median_ns);
     }
 
     #[test]

@@ -17,8 +17,11 @@ fn bench_smoke_optim() {
     let alada = rows.iter().find(|r| r.name == "alada").unwrap();
     let adam = rows.iter().find(|r| r.name == "adam").unwrap();
     assert!(alada.state_bytes < adam.state_bytes);
+    assert!(rows.iter().all(|r| r.p95_step_ns >= r.median_step_ns));
+    assert!(rows.iter().all(|r| r.steps_per_sec > 0.0));
     let txt = std::fs::read_to_string(&path).expect("BENCH_optim json written");
     assert!(txt.contains("median_step_ns") && txt.contains("state_bytes"), "{txt}");
+    assert!(txt.contains("p95_step_ns") && txt.contains("steps_per_sec"), "{txt}");
 }
 
 #[test]
@@ -38,6 +41,11 @@ fn bench_smoke_shard() {
         .find(|r| r.ranks == 2 && r.pipeline == alada::shard::Pipeline::ReduceScatter)
         .unwrap();
     assert!(rs.bytes_per_step < ar.bytes_per_step);
+    // the row-split planner's balance is part of the perf record
+    assert!(rows.iter().all(|r| r.imbalance >= 1.0));
+    let one_rank = rows.iter().find(|r| r.ranks == 1).unwrap();
+    assert!((one_rank.imbalance - 1.0).abs() < 1e-9);
     let txt = std::fs::read_to_string(&path).expect("BENCH_shard json written");
     assert!(txt.contains("reduce_bytes_per_step") && txt.contains("pipeline"), "{txt}");
+    assert!(txt.contains("imbalance") && txt.contains("max_rank_elems"), "{txt}");
 }

@@ -203,7 +203,7 @@ fn prop_sharded_over_one_rank_is_the_wrapped_optimizer() {
     let mut rng = Rng::new(909);
     for (trial, name) in ALL.iter().cycle().take(2 * ALL.len()).enumerate() {
         let shapes = random_shape_list(&mut rng);
-        let part = Partition::plan(&shapes, 1);
+        let part = Partition::plan_for(name, &shapes, 1);
         let mut sharded = ShardedOptimizer::new(name, &part, 0).expect("known optimizer");
         let mut plain = by_name(name, &shapes).expect("known optimizer");
         let mut pa: Vec<Tensor> =
@@ -221,14 +221,18 @@ fn prop_sharded_over_one_rank_is_the_wrapped_optimizer() {
 }
 
 #[test]
-fn prop_per_rank_state_sums_to_the_unsharded_total() {
+fn prop_per_rank_state_sums_to_the_unsharded_total_plus_replication() {
     let mut rng = Rng::new(1010);
     for trial in 0..30 {
         let shapes = random_shape_list(&mut rng);
         let ranks = 1 + rng.below_usize(6);
         let name = ALL[trial % ALL.len()];
         let total = by_name(name, &shapes).expect("known optimizer").state_overhead_bytes();
-        let part = Partition::plan(&shapes, ranks);
+        let part = Partition::plan_for(name, &shapes, ranks);
+        // Only row-split Alada replicates state: one (q, v₀) per extra
+        // owner of a split tensor. Every other optimizer partitions its
+        // bytes exactly.
+        let repl = if name == "alada" { part.alada_replication_bytes() } else { 0 };
         let mut sum_exact = 0usize;
         let mut sum_padded = 0usize;
         for r in 0..ranks {
@@ -239,9 +243,13 @@ fn prop_per_rank_state_sums_to_the_unsharded_total() {
             sum_exact += shard.unpadded_state_bytes();
             sum_padded += padded;
         }
-        assert_eq!(sum_exact, total, "{name} over {ranks} ranks (shapes {shapes:?})");
+        assert_eq!(
+            sum_exact,
+            total + repl,
+            "{name} over {ranks} ranks (shapes {shapes:?})"
+        );
         assert!(
-            sum_padded >= total && sum_padded - total < ranks * STATE_ALIGN,
+            sum_padded >= sum_exact && sum_padded - sum_exact < ranks * STATE_ALIGN,
             "{name}: padding exceeded one alignment unit per rank"
         );
     }

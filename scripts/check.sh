@@ -1,0 +1,14 @@
+#!/usr/bin/env bash
+# Lint gate: formatting + clippy with warnings denied, then the tier-1
+# tests. Run from the repo root; CI and pre-push hooks call this.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== cargo fmt --check =="
+cargo fmt --all -- --check
+
+echo "== cargo clippy (all targets, -D warnings) =="
+cargo clippy --all-targets -- -D warnings
+
+echo "== cargo test =="
+cargo test -q
