@@ -2,7 +2,9 @@
 //! partition imbalance, and per-rank state vs rank count — for all three
 //! exchange pipelines (all-reduce, reduce-scatter, reduce-scatter +
 //! overlap), so the traffic halving, the overlap win, and the row-split
-//! balance are visible side by side.
+//! balance are visible side by side. A tcp-loopback A/B row per rank
+//! count (default pipeline) measures the transport tax vs the in-process
+//! channel mesh; every JSON row carries a `transport` field.
 //!
 //! Emits machine-readable `BENCH_shard.json` so future PRs can track the
 //! perf trajectory of the reduce/step/gather pipeline without parsing

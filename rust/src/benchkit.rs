@@ -7,15 +7,17 @@
 //! PRs. Both benches emit machine-readable JSON (BENCH_optim.json /
 //! BENCH_shard.json) through one `write_bench_json` helper so the perf
 //! trajectory is comparable across PRs without parsing console output:
-//! per-optimizer median/p95/steps-per-sec, and per-(ranks, pipeline)
-//! engine rows including the partition imbalance ratio
+//! per-optimizer median/p95/steps-per-sec, and per-(ranks, pipeline,
+//! transport) engine rows including the partition imbalance ratio
 //! (`max_rank_elems / mean_rank_elems`) the row-split planner drives
-//! to ~1.0.
+//! to ~1.0. The `transport` field A/Bs the in-process channel mesh
+//! against real TCP loopback sockets (the tcp/inproc step-time delta is
+//! the transport tax a multi-process launch pays).
 
 use std::collections::BTreeMap;
 
 use crate::optim::{by_name, Schedule, ALL};
-use crate::shard::{self, MlpTask, Partition, Pipeline, ShardConfig};
+use crate::shard::{self, Comm, MlpTask, Partition, Pipeline, ShardConfig, Tcp};
 use crate::tensor::Tensor;
 use crate::util::timing::bench;
 use crate::util::{Json, Rng};
@@ -109,10 +111,13 @@ pub fn optim_bench(
     rows
 }
 
-/// One (rank count, pipeline) shard-engine measurement.
+/// One (rank count, pipeline, transport) shard-engine measurement.
 pub struct ShardBenchRow {
     pub ranks: usize,
     pub pipeline: Pipeline,
+    /// Which collective backend carried the run ("inproc", "tcp" —
+    /// loopback sockets for the tcp rows).
+    pub transport: &'static str,
     pub steps_per_sec: f64,
     pub median_step_ns: f64,
     pub p95_step_ns: f64,
@@ -128,10 +133,65 @@ pub struct ShardBenchRow {
     pub final_loss: f64,
 }
 
-/// Benchmark the shard engine across rank counts and all three exchange
-/// pipelines; reports per-step communicated bytes, the partition
-/// imbalance ratio, and prints the reduce-scatter/all-reduce traffic
-/// ratio (the ≈(N+1)/(2N) halving) per rank count.
+/// One measured engine run folded into a `ShardBenchRow`.
+#[allow(clippy::too_many_arguments)]
+fn shard_bench_row(
+    task: &MlpTask,
+    schedule: &Schedule,
+    cfg: &ShardConfig,
+    transport: &'static str,
+    warmup: usize,
+    samples: usize,
+) -> ShardBenchRow {
+    let (ranks, steps, pipeline) = (cfg.ranks, cfg.steps, cfg.pipeline);
+    let label = format!("shard/train/{ranks}-ranks/{}/{transport}", pipeline.name());
+    let mut last = None;
+    let stats = bench(&label, warmup, samples, || {
+        // The tcp rows rebuild a loopback socket mesh per run (the
+        // handshake is part of a process launch, so it is part of the
+        // cost); inproc meshes are built inside train() the same way.
+        last = Some(match transport {
+            "tcp" => {
+                let mesh = Tcp::loopback_mesh(ranks).expect("tcp loopback mesh");
+                let comms = mesh.into_iter().map(Comm::new).collect();
+                shard::train_with_comms(task, "alada", schedule, cfg, comms).expect("train")
+            }
+            _ => shard::train(task, "alada", schedule, cfg).expect("train"),
+        });
+    });
+    let out = last.expect("at least one sample ran");
+    debug_assert_eq!(out.transport, transport);
+    let steps_per_sec = steps as f64 / stats.median_secs().max(1e-12);
+    let per_step = out.bytes_per_step();
+    println!(
+        "{}  {steps_per_sec:>8.1} steps/s  {per_step:>10} B/step  imbal {:.3}",
+        stats.report(),
+        out.imbalance
+    );
+    ShardBenchRow {
+        ranks,
+        pipeline,
+        transport,
+        steps_per_sec,
+        median_step_ns: stats.median_ns / steps.max(1) as f64,
+        p95_step_ns: stats.p95_ns / steps.max(1) as f64,
+        bytes_per_step: per_step,
+        reduce_bytes_per_step: out.reduce_bytes / steps.max(1) as u64,
+        gather_bytes_per_step: out.gather_bytes / steps.max(1) as u64,
+        opt_reduce_bytes_per_step: out.opt_reduce_bytes / steps.max(1) as u64,
+        max_rank_state_bytes: out.max_rank_state_bytes(),
+        sum_state_bytes: out.per_rank_state_bytes.iter().sum(),
+        max_rank_elems: out.max_rank_elems,
+        imbalance: out.imbalance,
+        final_loss: *out.losses.last().unwrap_or(&f64::NAN),
+    }
+}
+
+/// Benchmark the shard engine across rank counts, all three exchange
+/// pipelines, and both transports; reports per-step communicated bytes,
+/// the partition imbalance ratio, the reduce-scatter/all-reduce traffic
+/// ratio (the ≈(N+1)/(2N) halving) per rank count, and the tcp/inproc
+/// step-time delta (the transport tax) on the default pipeline.
 pub fn shard_bench(
     task: &MlpTask,
     ranks_list: &[usize],
@@ -148,36 +208,9 @@ pub fn shard_bench(
         let first_of_rank = rows.len();
         for pipeline in [Pipeline::AllReduce, Pipeline::ReduceScatter, Pipeline::Overlap] {
             let cfg = ShardConfig { ranks, bucket_kb: 64, steps, pipeline };
-            let mut last = None;
-            let label = format!("shard/train/{ranks}-ranks/{}", pipeline.name());
-            let stats = bench(&label, warmup, samples, || {
-                last = Some(shard::train(task, "alada", &schedule, &cfg).expect("train"));
-            });
-            let out = last.expect("at least one sample ran");
-            let steps_per_sec = steps as f64 / stats.median_secs().max(1e-12);
-            let per_step = out.bytes_per_step();
-            println!(
-                "{}  {steps_per_sec:>8.1} steps/s  {per_step:>10} B/step  imbal {:.3}",
-                stats.report(),
-                out.imbalance
-            );
-            rows.push(ShardBenchRow {
-                ranks,
-                pipeline,
-                steps_per_sec,
-                median_step_ns: stats.median_ns / steps.max(1) as f64,
-                p95_step_ns: stats.p95_ns / steps.max(1) as f64,
-                bytes_per_step: per_step,
-                reduce_bytes_per_step: out.reduce_bytes / steps.max(1) as u64,
-                gather_bytes_per_step: out.gather_bytes / steps.max(1) as u64,
-                opt_reduce_bytes_per_step: out.opt_reduce_bytes / steps.max(1) as u64,
-                max_rank_state_bytes: out.max_rank_state_bytes(),
-                sum_state_bytes: out.per_rank_state_bytes.iter().sum(),
-                max_rank_elems: out.max_rank_elems,
-                imbalance: out.imbalance,
-                final_loss: *out.losses.last().unwrap_or(&f64::NAN),
-            });
-            debug_assert_eq!(out.max_rank_elems, part.max_rank_elems());
+            let row = shard_bench_row(task, &schedule, &cfg, "inproc", warmup, samples);
+            debug_assert_eq!(row.max_rank_elems, part.max_rank_elems());
+            rows.push(row);
         }
         // Traffic ratio at this rank count: RS gradient exchange vs the
         // all-reduce baseline (expected ≈(N+1)/(2N)).
@@ -195,6 +228,28 @@ pub fn shard_bench(
         }
     }
 
+    // TCP A/B: the same engine over real loopback sockets, default
+    // pipeline only (the transport tax is pipeline-independent; one row
+    // per rank count keeps the matrix small). Single-rank meshes have no
+    // traffic, so start at 2.
+    for &ranks in ranks_list {
+        if ranks < 2 {
+            continue;
+        }
+        let cfg = ShardConfig { ranks, bucket_kb: 64, steps, pipeline: Pipeline::ReduceScatter };
+        let row = shard_bench_row(task, &schedule, &cfg, "tcp", warmup, samples);
+        if let Some(ip) = rows
+            .iter()
+            .find(|r| r.transport == "inproc" && r.ranks == ranks && r.pipeline == cfg.pipeline)
+        {
+            println!(
+                "  {ranks}-ranks tcp/inproc step time: {:.2}x (incl. per-run mesh handshake)",
+                row.median_step_ns / ip.median_step_ns.max(1e-9)
+            );
+        }
+        rows.push(row);
+    }
+
     if let Some(path) = json_path {
         let entries: Vec<Json> = rows
             .iter()
@@ -202,6 +257,7 @@ pub fn shard_bench(
                 obj(vec![
                     ("ranks", Json::Num(r.ranks as f64)),
                     ("pipeline", Json::Str(r.pipeline.name().to_string())),
+                    ("transport", Json::Str(r.transport.to_string())),
                     ("steps_per_sec", Json::Num(r.steps_per_sec)),
                     ("median_step_ns", Json::Num(r.median_step_ns)),
                     ("p95_step_ns", Json::Num(r.p95_step_ns)),

@@ -9,11 +9,13 @@
 //! Common flags: --artifacts DIR --out DIR --workers N --scale F
 //! (scale < 1 shrinks step counts for smoke runs).
 
+use anyhow::Context as _;
+
 use alada::cli::Args;
 use alada::exp::{self, ExpOpts};
 use alada::optim::Schedule;
 use alada::runtime::{Manifest, Runtime, TrainSession};
-use alada::shard::{MlpTask, Pipeline, ShardConfig};
+use alada::shard::{Comm, MlpTask, Pipeline, ShardConfig, Tcp};
 use alada::train::memory;
 use alada::train::{TaskData, Trainer};
 use alada::util::log;
@@ -54,11 +56,22 @@ USAGE:
   alada shard-train [--ranks N|N,N,..] [--bucket-kb K] [--opt NAME] [--steps N]
               [--lr F] [--seed N] [--batch B] [--dim D] [--hidden H] [--depth L]
               [--pipeline allreduce|reduce-scatter|overlap] [--overlap] [--parity]
+              [--transport inproc|tcp] [--dump-params FILE]
               data-parallel engine with partitioned optimizer state (pure Rust,
               no artifacts needed; a rank list sweeps and compares). Default
               pipeline is reduce-scatter; --overlap adds a comm thread per rank
               that reduces gradient segments underneath the backward pass.
-              Pipeline/overlap never change results, only wall-clock and bytes.
+              Pipeline/overlap/transport never change results, only wall-clock
+              and bytes. --dump-params writes the final parameters as raw f32
+              LE bytes (the transport-parity artifact).
+              tcp launches (one OS process per rank):
+                --transport tcp --spawn N        single-machine: this process
+                                                 becomes rank 0 on a loopback
+                                                 port and spawns N-1 workers
+                --transport tcp --rank R --ranks N --peers HOST:PORT[,..]
+                                [--bind ADDR]    manual launch; --peers is rank
+                                                 0's rendezvous address (or the
+                                                 full per-rank address table)
   alada memory [--model gpt2-small|gpt2-xl|t5-small] [--batch N] [--ranks N]
   alada report [--out DIR]        render results/*.csv into results/REPORT.md
   alada info [--artifacts DIR]
@@ -176,7 +189,75 @@ fn cmd_train(args: &Args) -> i32 {
     }
 }
 
+/// One `shard-train` job description — everything a TCP worker process
+/// must replicate bit-exactly for the collectives to line up across
+/// processes (the task and schedule are pure functions of these).
+struct ShardJob {
+    opt: String,
+    lr: f32,
+    seed: u64,
+    batch: usize,
+    dim: usize,
+    hidden: usize,
+    depth: usize,
+    bucket_kb: usize,
+    steps: usize,
+    pipeline: Pipeline,
+}
+
+impl ShardJob {
+    fn task(&self) -> MlpTask {
+        MlpTask::new(
+            self.dim,
+            self.hidden,
+            self.depth,
+            self.hidden.min(8),
+            4096,
+            self.batch,
+            self.seed,
+        )
+    }
+
+    fn schedule(&self) -> Schedule {
+        Schedule::Diminishing { eta0: self.lr, total: self.steps }
+    }
+
+    fn cfg(&self, ranks: usize) -> ShardConfig {
+        ShardConfig { ranks, bucket_kb: self.bucket_kb, steps: self.steps, pipeline: self.pipeline }
+    }
+
+    /// CLI args recreating this job in a spawned worker process
+    /// (f32 `Display` is round-trip exact, so the worker parses back the
+    /// identical learning rate).
+    fn worker_args(&self, rank: usize, ranks: usize, rendezvous: &str) -> Vec<String> {
+        ["shard-train", "--transport", "tcp"]
+            .iter()
+            .map(|s| s.to_string())
+            .chain(
+                [
+                    ("--rank", rank.to_string()),
+                    ("--ranks", ranks.to_string()),
+                    ("--peers", rendezvous.to_string()),
+                    ("--opt", self.opt.clone()),
+                    ("--lr", self.lr.to_string()),
+                    ("--seed", self.seed.to_string()),
+                    ("--batch", self.batch.to_string()),
+                    ("--dim", self.dim.to_string()),
+                    ("--hidden", self.hidden.to_string()),
+                    ("--depth", self.depth.to_string()),
+                    ("--bucket-kb", self.bucket_kb.to_string()),
+                    ("--steps", self.steps.to_string()),
+                    ("--pipeline", self.pipeline.name().to_string()),
+                ]
+                .into_iter()
+                .flat_map(|(k, v)| [k.to_string(), v]),
+            )
+            .collect()
+    }
+}
+
 fn cmd_shard_train(args: &Args) -> i32 {
+    let ranks_given = args.flag("ranks").is_some();
     let ranks_list = args.usize_list_or("ranks", &[2]);
     let bucket_kb = args.usize_or("bucket-kb", 64);
     let steps = args.usize_or("steps", 200);
@@ -190,6 +271,17 @@ fn cmd_shard_train(args: &Args) -> i32 {
     let parity = args.bool("parity");
     let pipeline_flag = args.str_or("pipeline", Pipeline::default().name());
     let overlap = args.bool("overlap");
+    let transport = args.str_or("transport", "inproc");
+    let rank_flag = args.flag("rank").map(String::from);
+    let peers: Vec<String> = args
+        .str_or("peers", "")
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    let bind = args.flag("bind").map(String::from);
+    let spawn = args.usize_or("spawn", 0);
+    let dump = args.flag("dump-params").map(String::from);
     warn_unknown(args);
 
     let run = || -> anyhow::Result<()> {
@@ -205,56 +297,224 @@ fn cmd_shard_train(args: &Args) -> i32 {
             ),
             (true, _) => Pipeline::Overlap,
         };
-        let task = MlpTask::new(dim, hidden, depth, hidden.min(8), 4096, batch, seed);
-        let schedule = Schedule::Diminishing { eta0: lr, total: steps };
-        println!(
-            "shard-train: {opt} on a depth-{depth} MLP ({dim}→{hidden}→…→{}), \
-             batch {batch}, {steps} steps, bucket {bucket_kb} KiB, pipeline {}",
-            hidden.min(8),
-            pipeline.name()
-        );
-        println!(
-            "{:<6}{:>12}{:>12}{:>13}{:>16}{:>16}{:>10}{:>14}",
-            "ranks",
-            "final loss",
-            "steps/s",
-            "comm B/step",
-            "max rank state",
-            "sum state",
-            "imbal",
-            "max |Δ| vs 1"
-        );
-        let cfg = |ranks| ShardConfig { ranks, bucket_kb, steps, pipeline };
-        let baseline = if parity || ranks_list.contains(&1) {
-            Some(alada::train::run_sharded(&task, &opt, &schedule, &cfg(1))?)
-        } else {
-            None
-        };
-        for &ranks in &ranks_list {
-            let res = if ranks == 1 {
-                baseline.clone().expect("baseline computed when 1 is listed")
-            } else {
-                alada::train::run_sharded(&task, &opt, &schedule, &cfg(ranks))?
-            };
-            let drift = baseline.as_ref().map(|b| res.max_abs_drift_from(b));
-            println!(
-                "{:<6}{:>12.5}{:>12.1}{:>13}{:>14} B{:>14} B{:>10.3}{:>14}",
-                ranks,
-                res.outcome.final_cum_loss,
-                1.0 / res.outcome.secs_per_step.max(1e-9),
-                res.bytes_per_step,
-                res.per_rank_state_bytes.iter().max().unwrap_or(&0),
-                res.per_rank_state_bytes.iter().sum::<usize>(),
-                res.imbalance,
-                drift.map(|d| format!("{d:.2e}")).unwrap_or_else(|| "-".into()),
-            );
+        let job =
+            ShardJob { opt, lr, seed, batch, dim, hidden, depth, bucket_kb, steps, pipeline };
+        match transport.as_str() {
+            "inproc" => shard_train_inproc(&job, &ranks_list, parity, dump.as_deref()),
+            "tcp" => {
+                if spawn > 0 {
+                    shard_train_tcp_parent(spawn, &job, dump.as_deref())
+                } else if let Some(r) = rank_flag {
+                    let rank: usize = r.parse().context("--rank must be a number")?;
+                    let ranks = if peers.len() > 1 {
+                        anyhow::ensure!(
+                            !ranks_given
+                                || (ranks_list.len() == 1 && ranks_list[0] == peers.len()),
+                            "--ranks {ranks_list:?} conflicts with the {}-entry --peers table",
+                            peers.len()
+                        );
+                        peers.len()
+                    } else {
+                        anyhow::ensure!(
+                            ranks_list.len() == 1,
+                            "a tcp worker takes a single --ranks value (got {ranks_list:?})"
+                        );
+                        ranks_list[0]
+                    };
+                    let bind = bind.as_deref();
+                    shard_train_tcp_worker(rank, ranks, &peers, bind, &job, dump.as_deref())
+                } else {
+                    anyhow::bail!(
+                        "--transport tcp needs either --spawn N (single-machine launcher) \
+                         or --rank R --ranks N --peers HOST:PORT (one process per rank)"
+                    )
+                }
+            }
+            other => anyhow::bail!("unknown transport {other:?} (known: inproc, tcp)"),
         }
-        Ok(())
     };
     match run() {
         Ok(()) => 0,
         Err(e) => fail(e),
     }
+}
+
+/// The in-process sweep: every rank count on its own thread mesh, with
+/// the 1-rank baseline drift column.
+fn shard_train_inproc(
+    job: &ShardJob,
+    ranks_list: &[usize],
+    parity: bool,
+    dump: Option<&str>,
+) -> anyhow::Result<()> {
+    if dump.is_some() {
+        anyhow::ensure!(
+            ranks_list.len() == 1,
+            "--dump-params needs a single --ranks value (got {ranks_list:?})"
+        );
+    }
+    let task = job.task();
+    let schedule = job.schedule();
+    println!(
+        "shard-train: {} on a depth-{} MLP ({}→{}→…→{}), batch {}, {} steps, \
+         bucket {} KiB, pipeline {}, transport inproc",
+        job.opt,
+        job.depth,
+        job.dim,
+        job.hidden,
+        job.hidden.min(8),
+        job.batch,
+        job.steps,
+        job.bucket_kb,
+        job.pipeline.name()
+    );
+    println!(
+        "{:<6}{:>12}{:>12}{:>13}{:>16}{:>16}{:>10}{:>14}",
+        "ranks",
+        "final loss",
+        "steps/s",
+        "comm B/step",
+        "max rank state",
+        "sum state",
+        "imbal",
+        "max |Δ| vs 1"
+    );
+    let baseline = if parity || ranks_list.contains(&1) {
+        Some(alada::train::run_sharded(&task, &job.opt, &schedule, &job.cfg(1))?)
+    } else {
+        None
+    };
+    let mut last = None;
+    for &ranks in ranks_list {
+        let res = if ranks == 1 {
+            baseline.clone().expect("baseline computed when 1 is listed")
+        } else {
+            alada::train::run_sharded(&task, &job.opt, &schedule, &job.cfg(ranks))?
+        };
+        let drift = baseline.as_ref().map(|b| res.max_abs_drift_from(b));
+        println!(
+            "{:<6}{:>12.5}{:>12.1}{:>13}{:>14} B{:>14} B{:>10.3}{:>14}",
+            ranks,
+            res.outcome.final_cum_loss,
+            1.0 / res.outcome.secs_per_step.max(1e-9),
+            res.bytes_per_step,
+            res.per_rank_state_bytes.iter().max().unwrap_or(&0),
+            res.per_rank_state_bytes.iter().sum::<usize>(),
+            res.imbalance,
+            drift.map(|d| format!("{d:.2e}")).unwrap_or_else(|| "-".into()),
+        );
+        last = Some(res);
+    }
+    if let Some(path) = dump {
+        dump_params(path, &last.expect("ranks list is non-empty").params)?;
+    }
+    Ok(())
+}
+
+/// Single-machine multi-process launcher: this process becomes rank 0 on
+/// an OS-assigned loopback port (no rebind race) and spawns `n - 1`
+/// worker copies of itself that rendezvous with it.
+fn shard_train_tcp_parent(n: usize, job: &ShardJob, dump: Option<&str>) -> anyhow::Result<()> {
+    anyhow::ensure!(n >= 1, "--spawn needs at least one process");
+    let listener = std::net::TcpListener::bind("127.0.0.1:0")
+        .context("binding the rank-0 rendezvous listener")?;
+    let rdv = listener.local_addr().context("rendezvous address")?.to_string();
+    let exe = std::env::current_exe().context("locating the alada binary")?;
+    let mut children: Vec<(usize, std::process::Child)> = Vec::new();
+    for r in 1..n {
+        match std::process::Command::new(&exe).args(job.worker_args(r, n, &rdv)).spawn() {
+            Ok(child) => children.push((r, child)),
+            Err(e) => {
+                for (_, child) in &mut children {
+                    let _ = child.kill();
+                    let _ = child.wait();
+                }
+                return Err(e).with_context(|| format!("spawning worker rank {r}"));
+            }
+        }
+    }
+    println!("shard-train[tcp]: rank 0 of {n} at {rdv}, {} worker process(es) spawned", n - 1);
+    let result = (|| -> anyhow::Result<()> {
+        let comm = Comm::new(Tcp::from_listener(0, n, &rdv, listener)?);
+        let out =
+            alada::shard::train_rank(&job.task(), &job.opt, &job.schedule(), &job.cfg(n), comm)?;
+        print_rank_outcome(&out);
+        if let Some(path) = dump {
+            dump_params(path, &out.params)?;
+        }
+        Ok(())
+    })();
+    match result {
+        Ok(()) => {
+            for (r, mut child) in children {
+                let status = child.wait().with_context(|| format!("waiting for rank {r}"))?;
+                anyhow::ensure!(status.success(), "worker rank {r} exited with {status}");
+            }
+            Ok(())
+        }
+        Err(e) => {
+            for (_, mut child) in children {
+                let _ = child.kill();
+                let _ = child.wait();
+            }
+            Err(e)
+        }
+    }
+}
+
+/// One rank of a multi-process tcp launch (spawned by `--spawn` or run
+/// by hand / scripts/shard_tcp.sh).
+fn shard_train_tcp_worker(
+    rank: usize,
+    ranks: usize,
+    peers: &[String],
+    bind: Option<&str>,
+    job: &ShardJob,
+    dump: Option<&str>,
+) -> anyhow::Result<()> {
+    let comm = Comm::new(Tcp::connect(rank, ranks, peers, bind)?);
+    let out =
+        alada::shard::train_rank(&job.task(), &job.opt, &job.schedule(), &job.cfg(ranks), comm)?;
+    print_rank_outcome(&out);
+    if let Some(path) = dump {
+        dump_params(path, &out.params)?;
+    }
+    Ok(())
+}
+
+/// Per-rank result line with the per-phase byte attribution (this
+/// rank's outbound traffic — in a multi-process run no process can see
+/// the whole mesh's counters).
+fn print_rank_outcome(out: &alada::shard::RankOutcome) {
+    println!(
+        "rank {}/{} [{}]: final loss {:.5}, {:.1} steps/s, sent {} B \
+         (reduce {} + gather {} + opt {}), state {} B, imbal {:.3}",
+        out.rank,
+        out.ranks,
+        out.transport,
+        out.losses.last().copied().unwrap_or(f64::NAN),
+        out.steps_per_sec(),
+        out.comm_bytes(),
+        out.reduce_bytes,
+        out.gather_bytes,
+        out.opt_reduce_bytes,
+        out.state_bytes,
+        out.imbalance,
+    );
+}
+
+/// Write final parameters as raw little-endian f32 bytes, in task
+/// tensor order — the artifact the tcp-vs-inproc parity gate `cmp`s.
+fn dump_params(path: &str, params: &[alada::tensor::Tensor]) -> anyhow::Result<()> {
+    let mut bytes = Vec::new();
+    for t in params {
+        for x in t.data() {
+            bytes.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+    std::fs::write(path, &bytes).with_context(|| format!("writing {path}"))?;
+    println!("wrote {path} ({} bytes)", bytes.len());
+    Ok(())
 }
 
 fn cmd_memory(args: &Args) -> i32 {

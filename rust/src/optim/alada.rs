@@ -579,6 +579,7 @@ mod tests {
             };
             let outs: Vec<Vec<Tensor>> = std::thread::scope(|s| {
                 let handles: Vec<_> = mesh(ranks)
+                    .expect("mesh")
                     .into_iter()
                     .enumerate()
                     .map(|(r, comm)| {

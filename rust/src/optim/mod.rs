@@ -45,8 +45,10 @@ use crate::tensor::Tensor;
 /// elementwise sum over all ranks. Every rank must call with an
 /// identically laid-out buffer, the same number of times per step, and
 /// every rank receives the identical sum — the shard engine backs this
-/// with its fixed binomial tree, so the result is deterministic and the
-/// non-contributing ranks' zeros are exact (x + 0.0 == x).
+/// with its fixed binomial tree over whichever transport carries the
+/// run (in-process channels or TCP; the tree lives above the transport,
+/// so the backend cannot change the result), making it deterministic;
+/// the non-contributing ranks' zeros are exact (x + 0.0 == x).
 pub trait Collective {
     fn all_reduce_sum(&mut self, buf: &mut [f32]);
 }
@@ -133,12 +135,14 @@ pub(crate) mod testutil {
     use super::*;
     use crate::util::Rng;
 
-    /// `Collective` backed by one rank's mesh endpoint — the unit-test
-    /// adapter for the row-split optimizer paths (the engine's
-    /// production adapters live in shard/engine.rs).
-    pub struct MeshColl(pub crate::shard::Comm);
+    /// `Collective` backed by one rank's mesh endpoint (any transport) —
+    /// the unit-test adapter for the row-split optimizer paths (the
+    /// engine's production adapters live in shard/engine.rs).
+    pub struct MeshColl<T: crate::shard::Transport = crate::shard::InProc>(
+        pub crate::shard::Comm<T>,
+    );
 
-    impl Collective for MeshColl {
+    impl<T: crate::shard::Transport> Collective for MeshColl<T> {
         fn all_reduce_sum(&mut self, buf: &mut [f32]) {
             self.0.all_reduce_sum(buf, 256);
         }

@@ -277,6 +277,7 @@ mod tests {
             let part = Partition::plan_for("alada", &shapes, ranks);
             let outs: Vec<(Vec<Piece>, Vec<Tensor>)> = std::thread::scope(|s| {
                 let handles: Vec<_> = mesh(ranks)
+                    .expect("mesh")
                     .into_iter()
                     .enumerate()
                     .map(|(r, comm)| {

@@ -1,39 +1,44 @@
-//! Bucketed binomial-tree collectives over in-process channels.
+//! Bucketed binomial-tree collectives over any [`Transport`].
 //!
-//! Every pair of ranks gets a dedicated mpsc channel, so a receive names
-//! its peer and messages between two ranks arrive in send order — the two
-//! properties that make the collectives deterministic without tags or
-//! sequence numbers. Reduction follows a fixed binomial tree (rank 0 as
-//! the root after re-indexing), so floating-point sums associate the same
-//! way on every run of a given rank count: `((r0+r1)+(r2+r3))+…` — the
-//! bit-for-bit determinism contract of the shard engine.
+//! `Comm` is a thin collective *algebra* over a point-to-point
+//! transport: reduction follows a fixed binomial tree (rank 0 as the
+//! root after re-indexing), so floating-point sums associate the same
+//! way on every run of a given rank count — `((r0+r1)+(r2+r3))+…` — the
+//! bit-for-bit determinism contract of the shard engine. Because the
+//! tree, the segment ownership, and the bucketing all live HERE, above
+//! the transport trait, every backend (in-process channels, TCP,
+//! whatever comes next) inherits identical association order: switching
+//! transports can never change a single bit of a result.
 //!
-//! Buffers are cut into fixed-size buckets and streamed through the tree:
-//! a leaf pushes bucket k+1 while bucket k is still climbing (channel
-//! sends don't block), so the reduce is pipelined without any barrier —
+//! Buffers are cut into fixed-size buckets and streamed through the
+//! tree: a leaf pushes bucket k+1 while bucket k is still climbing
+//! (sends don't block), so the reduce is pipelined without any barrier —
 //! inter-rank synchronisation is only ever a point-to-point `recv`.
 //!
-//! Besides all-reduce and broadcast, the mesh speaks *reduce-scatter* and
-//! *all-gather* over an explicit segment list: `reduce_scatter_mean`
+//! Besides all-reduce and broadcast, the algebra speaks *reduce-scatter*
+//! and *all-gather* over an explicit segment list: `reduce_scatter_mean`
 //! climbs every segment up the SAME tree as `all_reduce_sum` and then
 //! forwards the finished sum from the tree root to the segment's owner
 //! only — bit-for-bit the all-reduce result on the owner, at
-//! (N+1)/(2N) of the all-reduce bytes (the broadcast fan-out is gone;
-//! only the root→owner hop remains). `all_gather` is the inverse: each
+//! (N+1)/(2N) of the all-reduce bytes. `all_gather` is the inverse: each
 //! owner broadcasts its refreshed segment. The shard engine composes the
 //! two around its owned-slice optimizer update.
 //!
-//! Message buffers are pooled per `Comm` (a send takes a recycled `Vec`,
-//! a finished receive is `recycle`d back), so steady-state sends reuse
-//! buffers instead of allocating. The pool is capped: reduce-scatter +
-//! all-gather is send/recv-asymmetric per rank (the tree root receives
-//! more than it sends), so an unbounded pool would grow forever on
-//! receive-heavy ranks. `bytes_sent` counts outbound traffic for the
-//! bench harnesses, and `BytesMeter` attributes it to phases.
+//! Message buffers are pooled per `Comm` (sends draw recycled `Vec`s,
+//! finished receives go back), with the transport participating through
+//! the `send`/`recv` return channels — see [`Transport`]. The pool is
+//! capped: reduce-scatter + all-gather is send/recv-asymmetric per rank
+//! (the tree root receives more than it sends), so an unbounded pool
+//! would grow forever on receive-heavy ranks. Outbound payload bytes are
+//! counted per [`Phase`] (gradient reduce vs parameter gather vs
+//! optimizer collectives) so the engine reports attribution per backend;
+//! `BytesMeter` offers the same numbers as deltas for ad-hoc probes.
 
-use std::cell::{Cell, RefCell};
 use std::ops::Range;
-use std::sync::mpsc::{channel, Receiver, Sender};
+
+use anyhow::Result;
+
+use super::transport::{InProc, Transport};
 
 /// One contiguous slice of a flat buffer and the rank that owns it
 /// (reduce-scatter delivers the reduced segment there; all-gather
@@ -50,8 +55,25 @@ pub struct Seg {
 /// reduce-scatter + all-gather).
 const POOL_CAP: usize = 32;
 
+/// What a collective's traffic is *for* — the attribution key for
+/// per-phase byte accounting, identical across backends.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Phase {
+    /// Gradient exchange (all-reduce or reduce-scatter). The default.
+    #[default]
+    Reduce = 0,
+    /// Parameter all-gather / slice broadcast.
+    Gather = 1,
+    /// Optimizer-requested collectives (row-split Alada's q/v₀ chunk
+    /// reductions).
+    Opt = 2,
+}
+
+const PHASES: usize = 3;
+
 /// Delta meter over `Comm::bytes_sent` — attributes outbound traffic to
-/// phases (gradient reduce vs parameter gather) without double counting.
+/// ad-hoc windows without double counting (the engine's per-phase
+/// attribution uses `Comm::phase_bytes` directly).
 #[derive(Default)]
 pub struct BytesMeter(u64);
 
@@ -61,7 +83,7 @@ impl BytesMeter {
     }
 
     /// Bytes `comm` has sent since the previous `take`.
-    pub fn take(&mut self, comm: &Comm) -> u64 {
+    pub fn take<T: Transport>(&mut self, comm: &Comm<T>) -> u64 {
         let b = comm.bytes_sent();
         let d = b - self.0;
         self.0 = b;
@@ -69,77 +91,95 @@ impl BytesMeter {
     }
 }
 
-/// One rank's endpoint of the fully-connected channel mesh.
-pub struct Comm {
-    pub rank: usize,
-    pub ranks: usize,
-    /// `tx[d]` sends to rank d (the self entry exists but is never used).
-    tx: Vec<Sender<Vec<f32>>>,
-    /// `rx[s]` receives from rank s.
-    rx: Vec<Receiver<Vec<f32>>>,
+/// One rank's collective endpoint: the tree/bucket/segment algebra over
+/// a point-to-point transport.
+pub struct Comm<T: Transport = InProc> {
+    transport: T,
     /// Recycled message buffers (allocation-free steady state).
-    pool: RefCell<Vec<Vec<f32>>>,
-    /// Outbound payload bytes (f32 elements × 4), for the bench harness.
-    bytes: Cell<u64>,
+    pool: Vec<Vec<f32>>,
+    /// Outbound payload bytes (f32 elements × 4), all phases.
+    bytes: u64,
+    /// Outbound payload bytes keyed by `Phase`.
+    phase_bytes: [u64; PHASES],
+    phase: Phase,
 }
 
-/// Build the mesh: one `Comm` per rank, to be moved into its thread.
-pub fn mesh(ranks: usize) -> Vec<Comm> {
-    assert!(ranks >= 1);
-    let mut txs: Vec<Vec<Sender<Vec<f32>>>> = (0..ranks).map(|_| Vec::with_capacity(ranks)).collect();
-    let mut rxs: Vec<Vec<Receiver<Vec<f32>>>> = (0..ranks).map(|_| Vec::with_capacity(ranks)).collect();
-    for src in 0..ranks {
-        for dst in 0..ranks {
-            let (t, r) = channel();
-            txs[src].push(t); // txs[src][dst]
-            rxs[dst].push(r); // rxs[dst][src] (src ascends in the outer loop)
-        }
-    }
-    txs.into_iter()
-        .zip(rxs)
-        .enumerate()
-        .map(|(rank, (tx, rx))| Comm {
-            rank,
-            ranks,
-            tx,
-            rx,
-            pool: RefCell::new(Vec::new()),
-            bytes: Cell::new(0),
-        })
-        .collect()
+/// Build the in-process mesh: one `Comm` per rank, to be moved into its
+/// thread. Errors on a zero-rank request (CLI surfaces it as usage).
+pub fn mesh(ranks: usize) -> Result<Vec<Comm<InProc>>> {
+    Ok(InProc::mesh(ranks)?.into_iter().map(Comm::new).collect())
 }
 
-impl Comm {
-    fn send(&self, to: usize, data: &[f32]) {
-        self.bytes.set(self.bytes.get() + 4 * data.len() as u64);
-        let mut msg = self.pool.borrow_mut().pop().unwrap_or_default();
-        msg.clear();
-        msg.extend_from_slice(data);
-        self.tx[to].send(msg).expect("collective peer hung up");
-    }
-
-    fn recv(&self, from: usize) -> Vec<f32> {
-        self.rx[from].recv().expect("collective peer hung up")
-    }
-
-    /// Return a finished receive buffer to the message pool (dropped
-    /// once the pool is full — see POOL_CAP).
-    fn recycle(&self, msg: Vec<f32>) {
-        let mut pool = self.pool.borrow_mut();
-        if pool.len() < POOL_CAP {
-            pool.push(msg);
+impl<T: Transport> Comm<T> {
+    pub fn new(transport: T) -> Comm<T> {
+        Comm {
+            transport,
+            pool: Vec::new(),
+            bytes: 0,
+            phase_bytes: [0; PHASES],
+            phase: Phase::default(),
         }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.transport.rank()
+    }
+
+    pub fn ranks(&self) -> usize {
+        self.transport.ranks()
+    }
+
+    /// The backend's name ("inproc", "tcp") for reports and bench JSON.
+    pub fn transport_name(&self) -> &'static str {
+        self.transport.name()
+    }
+
+    /// Attribute subsequent outbound traffic to `phase`.
+    pub fn set_phase(&mut self, phase: Phase) {
+        self.phase = phase;
+    }
+
+    /// Total payload bytes this rank has sent in `phase`.
+    pub fn phase_bytes(&self, phase: Phase) -> u64 {
+        self.phase_bytes[phase as usize]
     }
 
     /// Total payload bytes this rank has sent (all collectives).
     pub fn bytes_sent(&self) -> u64 {
-        self.bytes.get()
+        self.bytes
+    }
+
+    fn send(&mut self, to: usize, data: &[f32]) {
+        self.bytes += 4 * data.len() as u64;
+        self.phase_bytes[self.phase as usize] += 4 * data.len() as u64;
+        let mut msg = self.pool.pop().unwrap_or_default();
+        msg.clear();
+        msg.extend_from_slice(data);
+        if let Some(spent) = self.transport.send(to, msg) {
+            self.recycle(spent);
+        }
+    }
+
+    fn recv(&mut self, from: usize) -> Vec<f32> {
+        let mut buf = self.pool.pop().unwrap_or_default();
+        if let Some(spare) = self.transport.recv(from, &mut buf) {
+            self.recycle(spare);
+        }
+        buf
+    }
+
+    /// Return a finished receive buffer to the message pool (dropped
+    /// once the pool is full — see POOL_CAP).
+    fn recycle(&mut self, msg: Vec<f32>) {
+        if self.pool.len() < POOL_CAP {
+            self.pool.push(msg);
+        }
     }
 
     /// Elementwise sum of `buf` across all ranks, in buckets of
     /// `bucket_elems`; on return every rank holds the identical sum.
-    pub fn all_reduce_sum(&self, buf: &mut [f32], bucket_elems: usize) {
-        if self.ranks == 1 || buf.is_empty() {
+    pub fn all_reduce_sum(&mut self, buf: &mut [f32], bucket_elems: usize) {
+        if self.ranks() == 1 || buf.is_empty() {
             return;
         }
         let be = bucket_elems.max(1);
@@ -163,10 +203,10 @@ impl Comm {
     /// All-reduce followed by a 1/ranks scale — the gradient-averaging
     /// collective. Every rank applies the identical scale to the identical
     /// sum, so replicas stay bit-equal.
-    pub fn all_reduce_mean(&self, buf: &mut [f32], bucket_elems: usize) {
+    pub fn all_reduce_mean(&mut self, buf: &mut [f32], bucket_elems: usize) {
         self.all_reduce_sum(buf, bucket_elems);
-        if self.ranks > 1 {
-            let inv = 1.0 / self.ranks as f32;
+        if self.ranks() > 1 {
+            let inv = 1.0 / self.ranks() as f32;
             crate::tensor::kernels::scale(buf, inv);
         }
     }
@@ -177,27 +217,27 @@ impl Comm {
     /// owner scales by 1/ranks — the identical f32 value `all_reduce_mean`
     /// would leave everywhere, at a fraction of the traffic. Non-owner
     /// ranks are left with undefined partial sums in `buf`.
-    pub fn reduce_mean_to(&self, owner: usize, buf: &mut [f32], bucket_elems: usize) {
-        if self.ranks == 1 || buf.is_empty() {
+    pub fn reduce_mean_to(&mut self, owner: usize, buf: &mut [f32], bucket_elems: usize) {
+        if self.ranks() == 1 || buf.is_empty() {
             return;
         }
         let be = bucket_elems.max(1);
-        let inv = 1.0 / self.ranks as f32;
+        let inv = 1.0 / self.ranks() as f32;
         let mut start = 0;
         while start < buf.len() {
             let end = (start + be).min(buf.len());
             let bucket = &mut buf[start..end];
             self.reduce_bucket(bucket);
             if owner != 0 {
-                if self.rank == 0 {
+                if self.rank() == 0 {
                     self.send(owner, bucket);
-                } else if self.rank == owner {
+                } else if self.rank() == owner {
                     let got = self.recv(0);
                     bucket.copy_from_slice(&got);
                     self.recycle(got);
                 }
             }
-            if self.rank == owner {
+            if self.rank() == owner {
                 crate::tensor::kernels::scale(bucket, inv);
             }
             start = end;
@@ -209,7 +249,7 @@ impl Comm {
     /// and every rank must pass the identical list — the segment order is
     /// part of the message-matching contract. Composed with `all_gather`
     /// over the same segments this is bit-for-bit `all_reduce_mean`.
-    pub fn reduce_scatter_mean(&self, buf: &mut [f32], segs: &[Seg], bucket_elems: usize) {
+    pub fn reduce_scatter_mean(&mut self, buf: &mut [f32], segs: &[Seg], bucket_elems: usize) {
         for sg in segs {
             self.reduce_mean_to(sg.owner, &mut buf[sg.range.clone()], bucket_elems);
         }
@@ -217,7 +257,7 @@ impl Comm {
 
     /// All-gather: every segment is broadcast from its owner, filling the
     /// non-owned parts of `buf` on every rank.
-    pub fn all_gather(&self, buf: &mut [f32], segs: &[Seg], bucket_elems: usize) {
+    pub fn all_gather(&mut self, buf: &mut [f32], segs: &[Seg], bucket_elems: usize) {
         for sg in segs {
             self.broadcast(sg.owner, &mut buf[sg.range.clone()], bucket_elems);
         }
@@ -226,8 +266,8 @@ impl Comm {
     /// Binomial-tree broadcast of `buf` from `root` to every rank, in
     /// buckets (the all-gather building block: each rank broadcasts its
     /// owned parameter slice after stepping).
-    pub fn broadcast(&self, root: usize, buf: &mut [f32], bucket_elems: usize) {
-        if self.ranks == 1 || buf.is_empty() {
+    pub fn broadcast(&mut self, root: usize, buf: &mut [f32], bucket_elems: usize) {
+        if self.ranks() == 1 || buf.is_empty() {
             return;
         }
         let be = bucket_elems.max(1);
@@ -242,12 +282,13 @@ impl Comm {
     /// Climb one bucket to rank 0: at stride s, ranks ≡ s (mod 2s) hand
     /// their partial sum to rank − s and drop out; survivors accumulate.
     /// The addition order is a fixed function of rank count alone.
-    fn reduce_bucket(&self, bucket: &mut [f32]) {
+    fn reduce_bucket(&mut self, bucket: &mut [f32]) {
+        let (rank, ranks) = (self.rank(), self.ranks());
         let mut stride = 1;
-        while stride < self.ranks {
-            if self.rank % (2 * stride) == 0 {
-                let partner = self.rank + stride;
-                if partner < self.ranks {
+        while stride < ranks {
+            if rank % (2 * stride) == 0 {
+                let partner = rank + stride;
+                if partner < ranks {
                     let got = self.recv(partner);
                     debug_assert_eq!(got.len(), bucket.len());
                     for (x, y) in bucket.iter_mut().zip(&got) {
@@ -256,7 +297,7 @@ impl Comm {
                     self.recycle(got);
                 }
             } else {
-                self.send(self.rank - stride, bucket);
+                self.send(rank - stride, bucket);
                 return;
             }
             stride *= 2;
@@ -265,11 +306,12 @@ impl Comm {
 
     /// Binomial broadcast from `root`, descending strides; each non-root
     /// rank receives exactly once, then forwards to lower levels.
-    fn bcast_bucket(&self, root: usize, bucket: &mut [f32]) {
-        let vr = (self.rank + self.ranks - root) % self.ranks;
-        let unmap = |v: usize| (v + root) % self.ranks;
+    fn bcast_bucket(&mut self, root: usize, bucket: &mut [f32]) {
+        let (rank, ranks) = (self.rank(), self.ranks());
+        let vr = (rank + ranks - root) % ranks;
+        let unmap = |v: usize| (v + root) % ranks;
         let mut top = 1usize;
-        while top < self.ranks {
+        while top < ranks {
             top <<= 1;
         }
         let mut stride = top >> 1;
@@ -277,7 +319,7 @@ impl Comm {
             let pos = vr % (2 * stride);
             if pos == 0 {
                 let partner = vr + stride;
-                if partner < self.ranks {
+                if partner < ranks {
                     self.send(unmap(partner), bucket);
                 }
             } else if pos == stride {
@@ -295,9 +337,10 @@ impl Comm {
 mod tests {
     use super::*;
 
-    /// Run `f` on every rank of a fresh mesh; returns per-rank results.
-    fn on_mesh<T: Send>(ranks: usize, f: impl Fn(Comm) -> T + Sync) -> Vec<T> {
-        let comms = mesh(ranks);
+    /// Run `f` on every rank of a fresh in-process mesh; returns per-rank
+    /// results.
+    fn on_mesh<R: Send>(ranks: usize, f: impl Fn(Comm<InProc>) -> R + Sync) -> Vec<R> {
+        let comms = mesh(ranks).expect("mesh");
         std::thread::scope(|s| {
             let handles: Vec<_> = comms.into_iter().map(|c| s.spawn(|| f(c))).collect();
             handles.into_iter().map(|h| h.join().expect("rank thread")).collect()
@@ -322,9 +365,9 @@ mod tests {
     #[test]
     fn sum_is_exact_on_integers() {
         for ranks in [1usize, 2, 3, 4, 5, 8] {
-            let out = on_mesh(ranks, |c| {
+            let out = on_mesh(ranks, |mut c| {
                 // rank r contributes r+1 at every element → sum = ranks(ranks+1)/2
-                let mut buf = vec![(c.rank + 1) as f32; 10];
+                let mut buf = vec![(c.rank() + 1) as f32; 10];
                 c.all_reduce_sum(&mut buf, 3); // ragged buckets on purpose
                 buf
             });
@@ -337,8 +380,8 @@ mod tests {
 
     #[test]
     fn mean_divides_by_ranks() {
-        let out = on_mesh(4, |c| {
-            let mut buf = vec![(c.rank * 2) as f32; 5]; // 0,2,4,6 → mean 3
+        let out = on_mesh(4, |mut c| {
+            let mut buf = vec![(c.rank() * 2) as f32; 5]; // 0,2,4,6 → mean 3
             c.all_reduce_mean(&mut buf, 2);
             buf
         });
@@ -351,8 +394,8 @@ mod tests {
     fn broadcast_from_every_root() {
         for ranks in [2usize, 3, 6] {
             for root in 0..ranks {
-                let out = on_mesh(ranks, |c| {
-                    let mut buf = if c.rank == root {
+                let out = on_mesh(ranks, |mut c| {
+                    let mut buf = if c.rank() == root {
                         vec![root as f32 + 0.5; 7]
                     } else {
                         vec![0.0; 7]
@@ -375,9 +418,9 @@ mod tests {
         // Two runs must agree bit-for-bit even with values whose sum
         // depends on association order in f32.
         let run = || {
-            on_mesh(4, |c| {
+            on_mesh(4, |mut c| {
                 let mut buf: Vec<f32> = (0..6)
-                    .map(|i| 1.0e-7 + (c.rank as f32 + 1.0) * 1.0e7 * (i as f32 + 1.0))
+                    .map(|i| 1.0e-7 + (c.rank() as f32 + 1.0) * 1.0e7 * (i as f32 + 1.0))
                     .collect();
                 c.all_reduce_sum(&mut buf, 4);
                 buf
@@ -393,10 +436,10 @@ mod tests {
         }
     }
 
-    /// The tentpole contract: reduce-scatter + all-gather composed over a
-    /// partition is bit-for-bit `all_reduce_mean`, across rank counts
-    /// (incl. non-powers-of-2) and bucket sizes smaller than, equal to,
-    /// and larger than the buffer.
+    /// The composition contract: reduce-scatter + all-gather composed
+    /// over a partition is bit-for-bit `all_reduce_mean`, across rank
+    /// counts (incl. non-powers-of-2) and bucket sizes smaller than,
+    /// equal to, and larger than the buffer.
     #[test]
     fn reduce_scatter_plus_all_gather_matches_all_reduce_bit_for_bit() {
         const LEN: usize = 13;
@@ -409,14 +452,14 @@ mod tests {
                         .map(|i| 1.0e-7 + (rank as f32 + 1.0) * 1.0e7 * (i as f32 + 1.0))
                         .collect()
                 };
-                let reference = on_mesh(ranks, |c| {
-                    let mut buf = fill(c.rank);
+                let reference = on_mesh(ranks, |mut c| {
+                    let mut buf = fill(c.rank());
                     c.all_reduce_mean(&mut buf, bucket);
                     buf
                 });
                 let segs_ref = &segs;
-                let composed = on_mesh(ranks, |c| {
-                    let mut buf = fill(c.rank);
+                let composed = on_mesh(ranks, |mut c| {
+                    let mut buf = fill(c.rank());
                     c.reduce_scatter_mean(&mut buf, segs_ref, bucket);
                     c.all_gather(&mut buf, segs_ref, bucket);
                     buf
@@ -444,8 +487,8 @@ mod tests {
             Seg { owner: 2, range: 4..6 },
         ];
         let segs_ref = &segs;
-        let out = on_mesh(3, |c| {
-            let mut buf = vec![(c.rank + 1) as f32; 6];
+        let out = on_mesh(3, |mut c| {
+            let mut buf = vec![(c.rank() + 1) as f32; 6];
             c.reduce_scatter_mean(&mut buf, segs_ref, 2);
             c.all_gather(&mut buf, segs_ref, 2);
             buf
@@ -465,7 +508,7 @@ mod tests {
         const LEN: usize = 24;
         for ranks in [2usize, 3, 4, 8] {
             let segs = balanced_segs(LEN, ranks);
-            let ar_bytes: u64 = on_mesh(ranks, |c| {
+            let ar_bytes: u64 = on_mesh(ranks, |mut c| {
                 let mut buf = vec![1.0f32; LEN];
                 c.all_reduce_mean(&mut buf, 5);
                 c.bytes_sent()
@@ -475,7 +518,7 @@ mod tests {
             assert_eq!(ar_bytes, 2 * (ranks as u64 - 1) * 4 * LEN as u64);
 
             let segs_ref = &segs;
-            let rs_bytes: u64 = on_mesh(ranks, |c| {
+            let rs_bytes: u64 = on_mesh(ranks, |mut c| {
                 let mut buf = vec![1.0f32; LEN];
                 c.reduce_scatter_mean(&mut buf, segs_ref, 5);
                 c.bytes_sent()
@@ -493,10 +536,10 @@ mod tests {
     /// working (and stay correct) when every message buffer is recycled.
     #[test]
     fn pooled_messages_survive_many_rounds() {
-        let out = on_mesh(4, |c| {
+        let out = on_mesh(4, |mut c| {
             let mut last = 0.0f32;
             for round in 0..50 {
-                let mut buf = vec![(c.rank + round) as f32; 9];
+                let mut buf = vec![(c.rank() + round) as f32; 9];
                 c.all_reduce_mean(&mut buf, 2);
                 last = buf[0];
             }
@@ -505,6 +548,38 @@ mod tests {
         // round 49: values 49,50,51,52 → mean 50.5
         for v in &out {
             assert_eq!(*v, 50.5);
+        }
+    }
+
+    /// Per-phase attribution: the phase counters partition `bytes_sent`
+    /// exactly, and a `BytesMeter` window sees the same deltas.
+    #[test]
+    fn phase_counters_partition_total_traffic() {
+        let out = on_mesh(4, |mut c| {
+            let mut meter = BytesMeter::new();
+            let mut buf = vec![1.0f32; 8];
+            c.set_phase(Phase::Reduce);
+            c.all_reduce_sum(&mut buf, 4);
+            let reduce_delta = meter.take(&c);
+            c.set_phase(Phase::Gather);
+            c.broadcast(0, &mut buf, 4);
+            let gather_delta = meter.take(&c);
+            c.set_phase(Phase::Opt);
+            c.all_reduce_sum(&mut buf, 4);
+            let opt_delta = meter.take(&c);
+            (
+                [reduce_delta, gather_delta, opt_delta],
+                [
+                    c.phase_bytes(Phase::Reduce),
+                    c.phase_bytes(Phase::Gather),
+                    c.phase_bytes(Phase::Opt),
+                ],
+                c.bytes_sent(),
+            )
+        });
+        for (deltas, phases, total) in &out {
+            assert_eq!(deltas, phases, "meter windows and phase counters must agree");
+            assert_eq!(phases.iter().sum::<u64>(), *total, "phases must partition the total");
         }
     }
 }

@@ -1,4 +1,4 @@
-//! The data-parallel training engine: N replica threads, one partition.
+//! The data-parallel training engine: N replicas, one partition.
 //!
 //! Each rank owns (a) a full replica of the parameters, (b) a disjoint
 //! micro-batch of every global batch, and (c) — the ZeRO-style part — the
@@ -7,9 +7,26 @@
 //! (each rank receives only its owned slice's mean, ≈(N+1)/(2N) of the
 //! all-reduce bytes) → partitioned optimizer update on the owned slice →
 //! **all-gather** of the updated slices. All inter-rank synchronisation
-//! is point-to-point channel traffic (no barrier), and the reduce/
+//! is point-to-point message traffic (no barrier), and the reduce/
 //! broadcast trees use a fixed association order, so a run is bit-for-bit
 //! deterministic for a given rank count.
+//!
+//! The engine is generic over the [`Transport`] behind its collectives:
+//!
+//! * [`train`] — the one-process path: builds the `InProc` channel mesh
+//!   and runs every rank on its own thread;
+//! * [`train_with_comms`] — the same multi-threaded driver over any
+//!   pre-built mesh (the benches and parity tests drive real TCP
+//!   loopback meshes through it);
+//! * [`train_rank`] — ONE rank in the calling process against its own
+//!   endpoint: the multi-process mode (`shard-train --transport tcp`),
+//!   where each OS process owns exactly one rank and the peers are
+//!   other processes. Byte accounting is per *this* rank.
+//!
+//! Because the tree association, segment ownership, and bucketing all
+//! live in `collective::Comm` above the transport trait, the transport
+//! choice can never change a result — pinned by the tcp-vs-inproc cases
+//! in rust/tests/shard_parity.rs.
 //!
 //! The partition is **row-split** where the optimizer allows it
 //! (`Partition::plan_for`): a dominant tensor's balanced-split rows
@@ -62,8 +79,9 @@ use anyhow::{ensure, Result};
 use crate::optim::{Collective, Optimizer, Schedule, ShardedOptimizer};
 use crate::tensor::Tensor;
 
-use super::allreduce::{mesh, BytesMeter, Comm, Seg};
+use super::collective::{mesh, Comm, Phase, Seg};
 use super::partition::{Partition, Piece};
+use super::transport::Transport;
 
 /// A task the shard engine can train: deterministic initial parameters
 /// plus per-rank gradient replicas that partition each step's global
@@ -145,7 +163,7 @@ impl Pipeline {
 /// Engine knobs (`shard-train` CLI flags map 1:1 onto these).
 #[derive(Clone, Debug)]
 pub struct ShardConfig {
-    /// Number of replica threads / optimizer-state partitions.
+    /// Number of replicas / optimizer-state partitions.
     pub ranks: usize,
     /// All-reduce bucket size in KiB of f32s.
     pub bucket_kb: usize,
@@ -187,6 +205,8 @@ pub struct ShardOutcome {
     pub max_rank_elems: usize,
     /// Partition balance: max_rank_elems over the ideal total/ranks mean.
     pub imbalance: f64,
+    /// Which collective backend carried the run ("inproc", "tcp").
+    pub transport: &'static str,
 }
 
 impl ShardOutcome {
@@ -206,6 +226,45 @@ impl ShardOutcome {
     /// Mean payload bytes per optimizer step (all ranks combined).
     pub fn bytes_per_step(&self) -> u64 {
         self.comm_bytes() / self.losses.len().max(1) as u64
+    }
+}
+
+/// What ONE rank of a multi-process run produces (`train_rank`). Byte
+/// counts cover this rank's outbound traffic only — in a multi-process
+/// launch no process can see the whole mesh's counters.
+#[derive(Clone, Debug)]
+pub struct RankOutcome {
+    pub rank: usize,
+    pub ranks: usize,
+    /// Which collective backend carried the run ("inproc", "tcp").
+    pub transport: &'static str,
+    /// Global mean loss per step (identical on every rank).
+    pub losses: Vec<f64>,
+    /// Final parameters (identical on every rank).
+    pub params: Vec<Tensor>,
+    /// This rank's partitioned optimizer state bytes.
+    pub state_bytes: usize,
+    pub wall_secs: f64,
+    /// Outbound gradient-exchange payload bytes, THIS rank only.
+    pub reduce_bytes: u64,
+    /// Outbound all-gather/broadcast payload bytes, THIS rank only.
+    pub gather_bytes: u64,
+    /// Outbound optimizer-collective payload bytes, THIS rank only.
+    pub opt_reduce_bytes: u64,
+    /// Largest per-rank owned element count under the partition.
+    pub max_rank_elems: usize,
+    /// Partition balance: max_rank_elems over the ideal total/ranks mean.
+    pub imbalance: f64,
+}
+
+impl RankOutcome {
+    pub fn steps_per_sec(&self) -> f64 {
+        self.losses.len() as f64 / self.wall_secs.max(1e-9)
+    }
+
+    /// This rank's total outbound collective traffic.
+    pub fn comm_bytes(&self) -> u64 {
+        self.reduce_bytes + self.gather_bytes + self.opt_reduce_bytes
     }
 }
 
@@ -291,26 +350,67 @@ fn pack_owned(pieces: &[Piece], params: &[Tensor], flat: &mut [f32]) {
 
 /// The optimizer-facing collective of the synchronous pipelines: the
 /// mesh's fixed-tree all-reduce at the engine's bucket size.
-struct CommCollective<'a> {
-    comm: &'a Comm,
+struct CommCollective<'a, T: Transport> {
+    comm: &'a mut Comm<T>,
     bucket: usize,
 }
 
-impl Collective for CommCollective<'_> {
+impl<T: Transport> Collective for CommCollective<'_, T> {
     fn all_reduce_sum(&mut self, buf: &mut [f32]) {
         self.comm.all_reduce_sum(buf, self.bucket);
     }
 }
 
 /// Train `task` with `opt` under `schedule` for `cfg.steps` updates on
-/// `cfg.ranks` data-parallel replicas.
+/// `cfg.ranks` data-parallel replica threads over the in-process
+/// channel transport.
 pub fn train(
     task: &dyn ShardTask,
     opt: &str,
     schedule: &Schedule,
     cfg: &ShardConfig,
 ) -> Result<ShardOutcome> {
-    ensure!(cfg.ranks >= 1, "shard engine needs at least one rank");
+    ensure!(cfg.ranks >= 1, "shard engine needs at least one rank (got 0)");
+    train_with_comms(task, opt, schedule, cfg, mesh(cfg.ranks)?)
+}
+
+/// `train` over a pre-built mesh of collective endpoints — any
+/// transport. Every rank still runs on its own thread of THIS process;
+/// for one-rank-per-process launches use `train_rank`.
+pub fn train_with_comms<T: Transport>(
+    task: &dyn ShardTask,
+    opt: &str,
+    schedule: &Schedule,
+    cfg: &ShardConfig,
+    mut comms: Vec<Comm<T>>,
+) -> Result<ShardOutcome> {
+    ensure!(cfg.ranks >= 1, "shard engine needs at least one rank (got 0)");
+    ensure!(
+        comms.len() == cfg.ranks,
+        "transport mesh has {} endpoints but the config asks for {} ranks",
+        comms.len(),
+        cfg.ranks
+    );
+    let mut seen = vec![false; cfg.ranks];
+    for c in &comms {
+        ensure!(
+            c.ranks() == cfg.ranks,
+            "transport endpoint spans {} ranks but the config asks for {}",
+            c.ranks(),
+            cfg.ranks
+        );
+        ensure!(
+            c.rank() < cfg.ranks && !seen[c.rank()],
+            "transport mesh has a bad or duplicate endpoint for rank {}",
+            c.rank()
+        );
+        seen[c.rank()] = true;
+    }
+    // The per-rank outputs below (state bytes, "rank 0's copy") index by
+    // rank, so accept endpoints in any order but process them in rank
+    // order.
+    comms.sort_by_key(|c| c.rank());
+    let transport = comms[0].transport_name();
     let shapes = task.shapes();
     ensure!(!shapes.is_empty(), "shard engine needs at least one parameter");
     let part = Partition::plan_for(opt, &shapes, cfg.ranks);
@@ -318,7 +418,8 @@ pub fn train(
     // Build everything fallible in the parent thread so errors (unknown
     // optimizer, bad batch split) surface as Results, not thread panics.
     let mut lanes = Vec::with_capacity(cfg.ranks);
-    for (rank, comm) in mesh(cfg.ranks).into_iter().enumerate() {
+    for comm in comms {
+        let rank = comm.rank();
         let sopt = ShardedOptimizer::new(opt, &part, rank)?;
         let replica = task.replica(rank, cfg.ranks)?;
         lanes.push((rank, comm, sopt, replica, task.init_params()));
@@ -362,14 +463,71 @@ pub fn train(
         opt_reduce_bytes,
         max_rank_elems: part.max_rank_elems(),
         imbalance: part.imbalance(),
+        transport,
+    })
+}
+
+/// Run ONE rank of a sharded job in the calling process/thread, against
+/// a collective endpoint whose peers live wherever the transport says
+/// (other processes for `Tcp`). Blocks until the rank's `cfg.steps` are
+/// done; every peer must run the identical task/config or the
+/// collectives will mismatch.
+pub fn train_rank<T: Transport>(
+    task: &dyn ShardTask,
+    opt: &str,
+    schedule: &Schedule,
+    cfg: &ShardConfig,
+    comm: Comm<T>,
+) -> Result<RankOutcome> {
+    ensure!(cfg.ranks >= 1, "shard engine needs at least one rank (got 0)");
+    ensure!(
+        comm.ranks() == cfg.ranks,
+        "transport endpoint spans {} ranks but the config asks for {}",
+        comm.ranks(),
+        cfg.ranks
+    );
+    let rank = comm.rank();
+    ensure!(rank < cfg.ranks, "endpoint rank {rank} out of range for {} ranks", cfg.ranks);
+    let transport = comm.transport_name();
+    let shapes = task.shapes();
+    ensure!(!shapes.is_empty(), "shard engine needs at least one parameter");
+    let part = Partition::plan_for(opt, &shapes, cfg.ranks);
+    let sopt = ShardedOptimizer::new(opt, &part, rank)?;
+    let replica = task.replica(rank, cfg.ranks)?;
+    let t0 = std::time::Instant::now();
+    let out = run_rank(
+        rank,
+        &part,
+        comm,
+        sopt,
+        replica,
+        task.init_params(),
+        schedule,
+        cfg.steps,
+        cfg.bucket_elems(),
+        cfg.pipeline,
+    );
+    Ok(RankOutcome {
+        rank,
+        ranks: cfg.ranks,
+        transport,
+        losses: out.losses,
+        params: out.params,
+        state_bytes: out.state_bytes,
+        wall_secs: t0.elapsed().as_secs_f64(),
+        reduce_bytes: out.reduce_bytes,
+        gather_bytes: out.gather_bytes,
+        opt_reduce_bytes: out.opt_bytes,
+        max_rank_elems: part.max_rank_elems(),
+        imbalance: part.imbalance(),
     })
 }
 
 #[allow(clippy::too_many_arguments)]
-fn run_rank(
+fn run_rank<T: Transport>(
     rank: usize,
     part: &Partition,
-    comm: Comm,
+    comm: Comm<T>,
     opt: ShardedOptimizer,
     replica: Box<dyn Replica>,
     params: Vec<Tensor>,
@@ -394,10 +552,10 @@ fn run_rank(
 /// The PR-1 pipeline: all-reduce the full gradient, update the owned
 /// slice, broadcast every refreshed slice. Kept for the traffic A/B.
 #[allow(clippy::too_many_arguments)]
-fn run_rank_allreduce(
+fn run_rank_allreduce<T: Transport>(
     rank: usize,
     part: &Partition,
-    comm: Comm,
+    mut comm: Comm<T>,
     mut opt: ShardedOptimizer,
     mut replica: Box<dyn Replica>,
     mut params: Vec<Tensor>,
@@ -405,6 +563,8 @@ fn run_rank_allreduce(
     steps: usize,
     bucket: usize,
 ) -> RankOut {
+    debug_assert_eq!(rank, comm.rank());
+    let ranks = comm.ranks();
     let slots = part.slots();
     let total = part.total_elems();
     let my_pieces = part.pieces(rank);
@@ -413,8 +573,6 @@ fn run_rank_allreduce(
     // rides the same reduce, so every rank sees the global mean for free).
     let mut flat = vec![0.0f32; total + 1];
     let mut losses = Vec::with_capacity(steps);
-    let (mut reduce_bytes, mut gather_bytes, mut opt_bytes) = (0u64, 0u64, 0u64);
-    let mut meter = BytesMeter::new();
 
     for step in 0..steps {
         let loss = replica.grad(&params, step, &mut grads);
@@ -422,23 +580,23 @@ fn run_rank_allreduce(
             flat[slot.offset..slot.offset + slot.elems].copy_from_slice(g.data());
         }
         flat[total] = loss;
+        comm.set_phase(Phase::Reduce);
         comm.all_reduce_mean(&mut flat, bucket);
-        reduce_bytes += meter.take(&comm);
         losses.push(flat[total] as f64);
 
         // Partitioned update: unpack + step the owned pieces only.
         unpack_owned(&my_pieces, &flat, &mut grads);
-        let mut coll = CommCollective { comm: &comm, bucket };
+        comm.set_phase(Phase::Opt);
+        let mut coll = CommCollective { comm: &mut comm, bucket };
         opt.step_collective(&mut params, &grads, schedule.at(step), &mut coll);
-        opt_bytes += meter.take(&comm);
 
         // All-gather: every rank broadcasts its updated slice.
+        comm.set_phase(Phase::Gather);
         pack_owned(&my_pieces, &params, &mut flat);
-        for root in 0..comm.ranks {
+        for root in 0..ranks {
             let r = part.elem_range(root);
             comm.broadcast(root, &mut flat[r], bucket);
         }
-        gather_bytes += meter.take(&comm);
         for (slot, p) in slots.iter().zip(params.iter_mut()) {
             p.data_mut().copy_from_slice(&flat[slot.offset..slot.offset + slot.elems]);
         }
@@ -448,9 +606,9 @@ fn run_rank_allreduce(
         losses,
         params,
         state_bytes: opt.state_overhead_bytes(),
-        reduce_bytes,
-        gather_bytes,
-        opt_bytes,
+        reduce_bytes: comm.phase_bytes(Phase::Reduce),
+        gather_bytes: comm.phase_bytes(Phase::Gather),
+        opt_bytes: comm.phase_bytes(Phase::Opt),
     }
 }
 
@@ -459,10 +617,10 @@ fn run_rank_allreduce(
 /// + the loss. Bit-identical to the all-reduce pipeline at ≈(N+1)/(2N)
 /// of its gradient-exchange bytes.
 #[allow(clippy::too_many_arguments)]
-fn run_rank_reduce_scatter(
+fn run_rank_reduce_scatter<T: Transport>(
     rank: usize,
     part: &Partition,
-    comm: Comm,
+    mut comm: Comm<T>,
     mut opt: ShardedOptimizer,
     mut replica: Box<dyn Replica>,
     mut params: Vec<Tensor>,
@@ -470,6 +628,7 @@ fn run_rank_reduce_scatter(
     steps: usize,
     bucket: usize,
 ) -> RankOut {
+    debug_assert_eq!(rank, comm.rank());
     let slots = part.slots();
     let total = part.total_elems();
     let lay = Layout::plan(part);
@@ -477,8 +636,6 @@ fn run_rank_reduce_scatter(
     let mut grads: Vec<Tensor> = slots.iter().map(|s| Tensor::zeros(&s.shape)).collect();
     let mut flat = vec![0.0f32; total + 1];
     let mut losses = Vec::with_capacity(steps);
-    let (mut reduce_bytes, mut gather_bytes, mut opt_bytes) = (0u64, 0u64, 0u64);
-    let mut meter = BytesMeter::new();
 
     for step in 0..steps {
         let loss = replica.grad(&params, step, &mut grads);
@@ -486,20 +643,20 @@ fn run_rank_reduce_scatter(
             flat[slot.offset..slot.offset + slot.elems].copy_from_slice(g.data());
         }
         flat[total] = loss;
+        comm.set_phase(Phase::Reduce);
         comm.reduce_scatter_mean(&mut flat, &lay.segs, bucket);
-        reduce_bytes += meter.take(&comm);
 
         // Only the owned slice of `flat` holds the reduced mean now.
         unpack_owned(&my_pieces, &flat, &mut grads);
-        let mut coll = CommCollective { comm: &comm, bucket };
+        comm.set_phase(Phase::Opt);
+        let mut coll = CommCollective { comm: &mut comm, bucket };
         opt.step_collective(&mut params, &grads, schedule.at(step), &mut coll);
-        opt_bytes += meter.take(&comm);
 
+        comm.set_phase(Phase::Gather);
         pack_owned(&my_pieces, &params, &mut flat);
         // One gather refreshes every slice AND broadcasts the loss
         // (rank 0 kept it from the scatter).
         comm.all_gather(&mut flat, &lay.segs, bucket);
-        gather_bytes += meter.take(&comm);
         for (slot, p) in slots.iter().zip(params.iter_mut()) {
             p.data_mut().copy_from_slice(&flat[slot.offset..slot.offset + slot.elems]);
         }
@@ -510,9 +667,9 @@ fn run_rank_reduce_scatter(
         losses,
         params,
         state_bytes: opt.state_overhead_bytes(),
-        reduce_bytes,
-        gather_bytes,
-        opt_bytes,
+        reduce_bytes: comm.phase_bytes(Phase::Reduce),
+        gather_bytes: comm.phase_bytes(Phase::Gather),
+        opt_bytes: comm.phase_bytes(Phase::Opt),
     }
 }
 
@@ -577,18 +734,18 @@ impl Collective for ChannelCollective<'_> {
     }
 }
 
-/// Overlap pipeline: a comm thread owns the `Comm` endpoint and executes
-/// collectives in command order while the replica thread computes. The
-/// backward pass hands over each gradient segment as soon as its last
-/// piece is final, so late segments reduce underneath the still-running
-/// backward — the ROADMAP "async gradient prefetch" item, without any
-/// change to the arithmetic (segment *timing* moves, association never
-/// does).
+/// Overlap pipeline: a comm thread owns the collective endpoint and
+/// executes collectives in command order while the replica thread
+/// computes. The backward pass hands over each gradient segment as soon
+/// as its last piece is final, so late segments reduce underneath the
+/// still-running backward — the ROADMAP "async gradient prefetch" item,
+/// without any change to the arithmetic (segment *timing* moves,
+/// association never does).
 #[allow(clippy::too_many_arguments)]
-fn run_rank_overlap(
+fn run_rank_overlap<T: Transport>(
     rank: usize,
     part: &Partition,
-    comm: Comm,
+    comm: Comm<T>,
     mut opt: ShardedOptimizer,
     mut replica: Box<dyn Replica>,
     mut params: Vec<Tensor>,
@@ -751,10 +908,11 @@ fn run_rank_overlap(
 /// The comm thread: executes collectives in command order. Every rank
 /// enqueues segments (and optimizer collectives) in the same
 /// (task-determined) order, so the point-to-point messages match up
-/// without tags.
+/// without tags. Outbound bytes are attributed per phase on the comm's
+/// own counters, so the accounting is identical across backends.
 #[allow(clippy::too_many_arguments)]
-fn comm_worker(
-    comm: Comm,
+fn comm_worker<T: Transport>(
+    mut comm: Comm<T>,
     cmd_rx: Receiver<Cmd>,
     resp_tx: Sender<Resp>,
     segs: Vec<Seg>,
@@ -765,14 +923,12 @@ fn comm_worker(
 ) -> (u64, u64, u64) {
     let loss_seg = segs.len() - 1;
     let mut flat = vec![0.0f32; total + 1];
-    let (mut reduce_bytes, mut gather_bytes, mut opt_bytes) = (0u64, 0u64, 0u64);
-    let mut meter = BytesMeter::new();
     while let Ok(cmd) = cmd_rx.recv() {
         match cmd {
             Cmd::Reduce { seg, mut data } => {
                 let sg = &segs[seg];
+                comm.set_phase(Phase::Reduce);
                 comm.reduce_mean_to(sg.owner, &mut data, bucket);
-                reduce_bytes += meter.take(&comm);
                 if sg.owner == rank && seg == loss_seg {
                     // keep the loss for the gather broadcast
                     flat[total] = data[0];
@@ -784,21 +940,25 @@ fn comm_worker(
                 }
             }
             Cmd::AllReduce { mut data } => {
+                comm.set_phase(Phase::Opt);
                 comm.all_reduce_sum(&mut data, bucket);
-                opt_bytes += meter.take(&comm);
                 let _ = resp_tx.send(Resp::AllReduced(data));
             }
             Cmd::Gather { owned, spare } => {
                 flat[my_range.clone()].copy_from_slice(&owned);
+                comm.set_phase(Phase::Gather);
                 comm.all_gather(&mut flat, &segs, bucket);
-                gather_bytes += meter.take(&comm);
                 let _ = resp_tx.send(Resp::Recycle(owned));
                 let full = std::mem::replace(&mut flat, spare);
                 let _ = resp_tx.send(Resp::Gathered(full));
             }
         }
     }
-    (reduce_bytes, gather_bytes, opt_bytes)
+    (
+        comm.phase_bytes(Phase::Reduce),
+        comm.phase_bytes(Phase::Gather),
+        comm.phase_bytes(Phase::Opt),
+    )
 }
 
 #[cfg(test)]
@@ -821,6 +981,7 @@ mod tests {
         assert_eq!(out.per_rank_state_bytes.len(), 3);
         assert!(out.reduce_bytes > 0 && out.gather_bytes > 0);
         assert!(out.imbalance >= 1.0 && out.max_rank_elems > 0);
+        assert_eq!(out.transport, "inproc");
     }
 
     #[test]
@@ -906,6 +1067,41 @@ mod tests {
         let err = train(&task, "nope", &Schedule::Constant { eta0: 1e-2 }, &cfg);
         assert!(err.is_err());
         assert!(format!("{:#}", err.unwrap_err()).contains("unknown optimizer"));
+    }
+
+    #[test]
+    fn zero_ranks_is_an_error_not_a_panic() {
+        let task = MlpTask::new(4, 6, 1, 2, 32, 8, 1);
+        let cfg = ShardConfig { ranks: 0, bucket_kb: 1, steps: 1, ..ShardConfig::default() };
+        let err = train(&task, "sgd", &Schedule::Constant { eta0: 1e-2 }, &cfg);
+        assert!(err.is_err());
+        assert!(format!("{:#}", err.unwrap_err()).contains("at least one rank"));
+    }
+
+    #[test]
+    fn mismatched_mesh_size_is_an_error_not_a_panic() {
+        let task = MlpTask::new(4, 6, 1, 2, 32, 8, 1);
+        let cfg = ShardConfig { ranks: 3, bucket_kb: 1, steps: 1, ..ShardConfig::default() };
+        let comms = crate::shard::mesh(2).unwrap();
+        let err = train_with_comms(&task, "sgd", &Schedule::Constant { eta0: 1e-2 }, &cfg, comms);
+        assert!(err.is_err());
+        assert!(format!("{:#}", err.unwrap_err()).contains("endpoints"));
+    }
+
+    #[test]
+    fn train_rank_solo_matches_the_threaded_engine_bit_for_bit() {
+        let task = MlpTask::new(4, 6, 1, 2, 24, 8, 5);
+        let sched = Schedule::Constant { eta0: 1e-2 };
+        let cfg = ShardConfig { ranks: 1, bucket_kb: 1, steps: 4, ..ShardConfig::default() };
+        let full = train(&task, "alada", &sched, &cfg).unwrap();
+        let comm = crate::shard::mesh(1).unwrap().pop().unwrap();
+        let solo = train_rank(&task, "alada", &sched, &cfg, comm).unwrap();
+        assert_eq!(solo.transport, "inproc");
+        assert_eq!((solo.rank, solo.ranks), (0, 1));
+        assert_eq!(full.params, solo.params);
+        for (a, b) in full.losses.iter().zip(&solo.losses) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
     }
 
     #[test]

@@ -2,25 +2,36 @@
 //!
 //! The paper's selling point is O(m + n) optimizer state; this subsystem
 //! is where the repo *spends* that saving instead of only measuring it.
-//! N replica threads train the same model on disjoint micro-batches;
-//! gradients meet in a bucketed, fixed-order tree **reduce-scatter**
-//! (`allreduce` also speaks all-reduce and all-gather over the same
-//! tree); and the optimizer state — Alada's rank-one factors included —
-//! is partitioned across ranks at **row granularity** where the
-//! optimizer allows it (`partition`): a dominant tensor's balanced-split
-//! rows spread over several ranks, so per-rank Alada overhead and update
-//! compute track ~total/N instead of flooring at the largest tensor.
-//! The update itself is applied through `optim::ShardedOptimizer`
-//! (partial-view Alada with a cross-rank q/v₀ chunk reduction, scratch
-//! pieces for elementwise optimizers, whole tensors for the factored
-//! rest), and the refreshed parameter slices fan back out through an
-//! all-gather (`engine`). A per-rank comm thread can overlap the reduce
-//! with the backward pass (`Pipeline::Overlap`).
+//! N replicas train the same model on disjoint micro-batches; gradients
+//! meet in a bucketed, fixed-order tree **reduce-scatter**; and the
+//! optimizer state — Alada's rank-one factors included — is partitioned
+//! across ranks at **row granularity** where the optimizer allows it
+//! (`partition`): a dominant tensor's balanced-split rows spread over
+//! several ranks, so per-rank Alada overhead and update compute track
+//! ~total/N instead of flooring at the largest tensor. The update itself
+//! is applied through `optim::ShardedOptimizer` (partial-view Alada with
+//! a cross-rank q/v₀ chunk reduction, scratch pieces for elementwise
+//! optimizers, whole tensors for the factored rest), and the refreshed
+//! parameter slices fan back out through an all-gather (`engine`). A
+//! per-rank comm thread can overlap the reduce with the backward pass
+//! (`Pipeline::Overlap`).
+//!
+//! The communication layer is split along an explicit API boundary:
+//!
+//! * `transport` — point-to-point fabric (`Transport`: addressed
+//!   send/recv with per-ordered-pair FIFO and buffer recycling). Two
+//!   backends ship: `InProc` (channel mesh inside one process) and `Tcp`
+//!   (length-prefixed frames over sockets, rank-0 rendezvous — the
+//!   multi-process / multi-host backend).
+//! * `collective` — `Comm<T: Transport>`, the collective algebra: the
+//!   fixed binomial tree, segment ownership, bucketing, buffer pooling,
+//!   and per-phase byte accounting all live ABOVE the trait, so every
+//!   backend inherits bit-identical, fixed-order semantics.
 //!
 //! Guarantees:
 //! * bit-for-bit deterministic for a fixed rank count (fixed reduction
-//!   order, point-to-point channels only); bucket size, pipeline choice,
-//!   and overlap never change results;
+//!   order, point-to-point messages only); bucket size, pipeline choice,
+//!   overlap, and TRANSPORT CHOICE never change results;
 //! * the partitioned update is bit-identical to the unsharded optimizer
 //!   at EVERY rank count — chunk-aligned row cuts plus the canonical
 //!   chunked accumulation (optim/alada.rs) make the result
@@ -31,12 +42,17 @@
 //!   64-byte alignment padding, plus one replicated (q, v₀) per extra
 //!   owner of a row-split tensor.
 
-pub mod allreduce;
+pub mod collective;
 pub mod engine;
 pub mod mlp;
 pub mod partition;
+pub mod transport;
 
-pub use allreduce::{mesh, Comm, Seg};
-pub use engine::{train, Pipeline, Replica, ShardConfig, ShardOutcome, ShardTask};
+pub use collective::{mesh, BytesMeter, Comm, Phase, Seg};
+pub use engine::{
+    train, train_rank, train_with_comms, Pipeline, RankOutcome, Replica, ShardConfig,
+    ShardOutcome, ShardTask,
+};
 pub use mlp::MlpTask;
 pub use partition::{Partition, Piece};
+pub use transport::{InProc, Tcp, Transport};

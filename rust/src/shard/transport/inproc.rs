@@ -1,0 +1,76 @@
+//! In-process transport: one mpsc channel per ordered rank pair.
+//!
+//! Every pair of ranks gets a dedicated channel, so a receive names its
+//! peer and messages between two ranks arrive in send order — the two
+//! transport properties the collective algebra builds on — with zero
+//! serialization: the message `Vec` itself moves to the peer, and the
+//! peer's pool recycles it. This is the fastest backend and the
+//! reference semantics for every other one.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+
+use anyhow::{ensure, Result};
+
+use super::Transport;
+
+/// One rank's endpoint of the fully-connected channel mesh.
+pub struct InProc {
+    rank: usize,
+    ranks: usize,
+    /// `tx[d]` sends to rank d (the self entry exists but is never used).
+    tx: Vec<Sender<Vec<f32>>>,
+    /// `rx[s]` receives from rank s.
+    rx: Vec<Receiver<Vec<f32>>>,
+}
+
+impl InProc {
+    /// Build the mesh: one endpoint per rank, to be moved into its
+    /// thread. Errors (instead of panicking) on a zero-rank request so
+    /// bad CLI input surfaces as a usage error.
+    pub fn mesh(ranks: usize) -> Result<Vec<InProc>> {
+        ensure!(ranks >= 1, "transport mesh needs at least one rank (got 0)");
+        let mut txs: Vec<Vec<Sender<Vec<f32>>>> =
+            (0..ranks).map(|_| Vec::with_capacity(ranks)).collect();
+        let mut rxs: Vec<Vec<Receiver<Vec<f32>>>> =
+            (0..ranks).map(|_| Vec::with_capacity(ranks)).collect();
+        for src in 0..ranks {
+            for dst in 0..ranks {
+                let (t, r) = channel();
+                txs[src].push(t); // txs[src][dst]
+                rxs[dst].push(r); // rxs[dst][src] (src ascends in the outer loop)
+            }
+        }
+        Ok(txs
+            .into_iter()
+            .zip(rxs)
+            .enumerate()
+            .map(|(rank, (tx, rx))| InProc { rank, ranks, tx, rx })
+            .collect())
+    }
+}
+
+impl Transport for InProc {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn ranks(&self) -> usize {
+        self.ranks
+    }
+
+    fn name(&self) -> &'static str {
+        "inproc"
+    }
+
+    fn send(&mut self, to: usize, msg: Vec<f32>) -> Option<Vec<f32>> {
+        self.tx[to].send(msg).expect("collective peer hung up");
+        None
+    }
+
+    fn recv(&mut self, from: usize, buf: &mut Vec<f32>) -> Option<Vec<f32>> {
+        let got = self.rx[from].recv().expect("collective peer hung up");
+        // The incoming allocation replaces `buf`; the displaced one goes
+        // back to the caller's pool, keeping the mesh allocation-neutral.
+        Some(std::mem::replace(buf, got))
+    }
+}

@@ -1,0 +1,69 @@
+//! Point-to-point transports under the collective algebra.
+//!
+//! The shard engine's collectives need exactly three properties from the
+//! wire, and nothing else:
+//!
+//! 1. **Addressed endpoints** — a send names its destination rank, a
+//!    receive names its source rank;
+//! 2. **Per-ordered-pair FIFO** — messages from rank s to rank d arrive
+//!    in send order (streams between *different* pairs may interleave
+//!    arbitrarily);
+//! 3. **Payload fidelity** — every `f32` arrives bit-exact, including
+//!    non-finite values.
+//!
+//! Those three are this trait. Everything that makes the collectives
+//! *collectives* — the fixed binomial tree, segment ownership,
+//! bucketing, buffer pooling, and byte accounting — lives above the
+//! trait in [`super::collective::Comm`], so every backend inherits
+//! bit-identical, fixed-order semantics for free: a backend cannot
+//! change the association order of a reduction even if it wanted to.
+//!
+//! Backends:
+//! * [`InProc`] — the original crossbeam-style channel mesh (one mpsc
+//!   channel per ordered rank pair) for N ranks inside one process;
+//! * [`Tcp`] — length-prefixed frames over `std::net::TcpStream`, one
+//!   stream per ordered pair with `TCP_NODELAY`, rank-0 rendezvous that
+//!   exchanges the peer address table; scales the engine past one
+//!   process (and one machine).
+//!
+//! Future backends (UDS, shared-memory rings, PJRT replica groups) plug
+//! in by implementing the same three-property contract; the
+//! transport-conformance suite (rust/tests/transport_conformance.rs)
+//! is the checklist.
+
+pub mod inproc;
+pub mod tcp;
+
+pub use inproc::InProc;
+pub use tcp::Tcp;
+
+/// A point-to-point message fabric connecting `ranks()` peers.
+///
+/// Buffer recycling rides the two calls: both may hand back a spent
+/// `Vec` so the caller's pool keeps the steady state allocation-free.
+/// Implementations must deliver per-ordered-pair FIFO and preserve f32
+/// bit patterns; runtime I/O failures panic (a dead peer is fatal to a
+/// collective mid-flight — setup-time errors belong to the constructor,
+/// which returns `Result`).
+pub trait Transport: Send {
+    /// This endpoint's rank, in `0..ranks()`.
+    fn rank(&self) -> usize;
+
+    /// Number of peers in the mesh (including this one).
+    fn ranks(&self) -> usize;
+
+    /// Backend name for reports and bench JSON ("inproc", "tcp").
+    fn name(&self) -> &'static str;
+
+    /// Ship `msg` to rank `to`. Returns the buffer for the caller's pool
+    /// when the transport copied the payload out (wire backends); `None`
+    /// when the allocation itself travelled to the peer (in-process
+    /// move). Sending to self is a contract violation and may panic.
+    fn send(&mut self, to: usize, msg: Vec<f32>) -> Option<Vec<f32>>;
+
+    /// Receive the next message from rank `from` into `buf` (cleared and
+    /// overwritten; its capacity is the transport's to reuse). Returns a
+    /// leftover buffer for the caller's pool when the incoming message
+    /// displaced `buf`'s old allocation (in-process move), else `None`.
+    fn recv(&mut self, from: usize, buf: &mut Vec<f32>) -> Option<Vec<f32>>;
+}

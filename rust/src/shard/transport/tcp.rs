@@ -1,0 +1,434 @@
+//! TCP transport: length-prefixed frames, one stream per ordered pair.
+//!
+//! This is the backend that takes the shard engine past one OS process
+//! (and, with routable addresses, past one machine). The wire format is
+//! deliberately tiny: every message is `[u32 LE element count][elements
+//! as f32 LE]` on a dedicated stream for its ordered (src → dst) rank
+//! pair, so TCP's byte-stream ordering IS the per-pair FIFO the
+//! collective algebra requires — no tags, no sequence numbers. f32 bit
+//! patterns round-trip exactly through `to_le_bytes`/`from_le_bytes`
+//! (non-finite values included), which is what keeps a TCP run
+//! byte-identical to an in-process run.
+//!
+//! Setup is a rank-0 rendezvous: every rank binds a listener, ranks
+//! 1..N dial rank 0 and register their listen address, and rank 0
+//! replies with the assembled peer address table (after rejecting
+//! duplicate addresses and duplicate ranks). Each rank then dials one
+//! outbound stream to every peer and accepts one inbound stream from
+//! every peer, identifying inbound streams by a magic + rank hello.
+//! `TCP_NODELAY` is set on every mesh stream — collective messages are
+//! latency-bound bucket-sized writes, the exact anti-pattern for Nagle.
+//!
+//! Liveness: all setup accepts/dials run against a 30 s deadline so a
+//! missing peer fails the launch instead of hanging CI; a fast peer
+//! whose mesh dial arrives at rank 0 while slower ranks are still
+//! registering is stashed, not dropped.
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use super::Transport;
+
+/// Hello magic ("ALAD") — guards the mesh against stray connections.
+const MAGIC: u32 = 0x414c_4144;
+/// Hello purpose: a rendezvous registration (rank + listen address).
+const PURPOSE_RENDEZVOUS: u8 = 0;
+/// Hello purpose: the inbound half of an ordered-pair mesh stream.
+const PURPOSE_MESH: u8 = 1;
+/// How long setup waits for peers before failing the launch.
+const SETUP_TIMEOUT: Duration = Duration::from_secs(30);
+/// Poll interval for the nonblocking accept / dial-retry loops.
+const RETRY_SLEEP: Duration = Duration::from_millis(5);
+
+/// One rank's endpoint of the socket mesh.
+pub struct Tcp {
+    rank: usize,
+    ranks: usize,
+    /// `out[d]`: the self → d stream (`None` for d == rank).
+    out: Vec<Option<TcpStream>>,
+    /// `inc[s]`: the s → self stream (`None` for s == rank).
+    inc: Vec<Option<TcpStream>>,
+    /// Frame staging (encode on send, landing zone on receive) — reused
+    /// across messages so the steady state is allocation-free.
+    wire: Vec<u8>,
+}
+
+impl Tcp {
+    /// Establish the full mesh for `rank` of `ranks`.
+    ///
+    /// `peers` is either the full address table (`peers[r]` = rank r's
+    /// listen address, length == `ranks`) or just rank 0's rendezvous
+    /// address (length 1). With the short form, non-zero ranks listen on
+    /// `bind` (default `127.0.0.1:0`, an ephemeral loopback port — pass
+    /// a routable `host:0` for multi-host runs) and learn everyone's
+    /// address from the table rank 0 assembles at rendezvous.
+    pub fn connect(rank: usize, ranks: usize, peers: &[String], bind: Option<&str>) -> Result<Tcp> {
+        ensure!(ranks >= 1, "tcp transport needs at least one rank (got 0)");
+        ensure!(rank < ranks, "tcp rank {rank} out of range (mesh has {ranks} ranks)");
+        ensure!(!peers.is_empty(), "tcp transport needs at least the rank-0 rendezvous address");
+        ensure!(
+            peers.len() == 1 || peers.len() == ranks,
+            "--peers must list one rendezvous address or all {ranks} ranks (got {})",
+            peers.len()
+        );
+        check_duplicates(peers)?;
+        let listen = if peers.len() == ranks || rank == 0 {
+            peers[rank.min(peers.len() - 1)].as_str()
+        } else {
+            bind.unwrap_or("127.0.0.1:0")
+        };
+        let listener = TcpListener::bind(listen)
+            .with_context(|| format!("rank {rank}: binding listener on {listen}"))?;
+        Tcp::from_listener(rank, ranks, &peers[0], listener)
+    }
+
+    /// `connect` with a pre-bound listener — the `--spawn` parent uses
+    /// this to become rank 0 on an OS-assigned port with no rebind race.
+    pub fn from_listener(
+        rank: usize,
+        ranks: usize,
+        rendezvous: &str,
+        listener: TcpListener,
+    ) -> Result<Tcp> {
+        ensure!(ranks >= 1, "tcp transport needs at least one rank (got 0)");
+        ensure!(rank < ranks, "tcp rank {rank} out of range (mesh has {ranks} ranks)");
+        let my_addr = listener.local_addr().context("reading listener address")?.to_string();
+        if ranks == 1 {
+            return Ok(Tcp { rank, ranks, out: vec![None], inc: vec![None], wire: Vec::new() });
+        }
+        listener.set_nonblocking(true).context("listener set_nonblocking")?;
+
+        // ---- Rendezvous: rank 0 collects every rank's listen address
+        // and answers with the authoritative table; everyone else
+        // registers and reads it back.
+        let (table, mut stashed) = if rank == 0 {
+            rendezvous_serve(&listener, ranks, &my_addr)?
+        } else {
+            (rendezvous_register(rendezvous, rank, ranks, &my_addr)?, Vec::new())
+        };
+
+        // ---- Dial the outbound half of every ordered pair.
+        let mut out: Vec<Option<TcpStream>> = (0..ranks).map(|_| None).collect();
+        for (d, addr) in table.iter().enumerate() {
+            if d == rank {
+                continue;
+            }
+            let mut s = connect_retry(addr)
+                .with_context(|| format!("rank {rank}: dialing rank {d} at {addr}"))?;
+            s.set_nodelay(true).context("set TCP_NODELAY")?;
+            write_u32(&mut s, MAGIC)?;
+            s.write_all(&[PURPOSE_MESH])?;
+            write_u32(&mut s, rank as u32)?;
+            out[d] = Some(s);
+        }
+
+        // ---- Accept the inbound half (mesh dials stashed during a
+        // rank-0 rendezvous count too).
+        let mut inc: Vec<Option<TcpStream>> = (0..ranks).map(|_| None).collect();
+        let mut pending = ranks - 1;
+        for (peer, s) in stashed.drain(..) {
+            ensure!(peer != rank && inc[peer].is_none(), "duplicate mesh stream from rank {peer}");
+            s.set_nodelay(true).context("set TCP_NODELAY")?;
+            // Mesh recvs must block for as long as a peer computes —
+            // drop the setup-phase read timeout.
+            s.set_read_timeout(None).context("clearing setup read timeout")?;
+            inc[peer] = Some(s);
+            pending -= 1;
+        }
+        while pending > 0 {
+            let mut s = accept_deadline(&listener, "mesh streams")?;
+            let (purpose, peer) = read_hello(&mut s)?;
+            ensure!(
+                purpose == PURPOSE_MESH,
+                "unexpected rendezvous registration after the table was distributed"
+            );
+            ensure!(
+                peer < ranks && peer != rank && inc[peer].is_none(),
+                "bad or duplicate mesh stream from rank {peer}"
+            );
+            s.set_nodelay(true).context("set TCP_NODELAY")?;
+            s.set_read_timeout(None).context("clearing setup read timeout")?;
+            inc[peer] = Some(s);
+            pending -= 1;
+        }
+        Ok(Tcp { rank, ranks, out, inc, wire: Vec::new() })
+    }
+
+    /// Build a full N-rank TCP mesh over loopback sockets inside one
+    /// process (tests and benches): every rank gets an OS-assigned port
+    /// and runs the handshake on its own thread, exercising the exact
+    /// rendezvous + dial/accept path a multi-process launch uses.
+    pub fn loopback_mesh(ranks: usize) -> Result<Vec<Tcp>> {
+        ensure!(ranks >= 1, "tcp transport needs at least one rank (got 0)");
+        let listeners: Vec<TcpListener> = (0..ranks)
+            .map(|_| TcpListener::bind("127.0.0.1:0").context("binding loopback listener"))
+            .collect::<Result<_>>()?;
+        let rendezvous = listeners[0].local_addr().context("listener address")?.to_string();
+        let results: Vec<Result<Tcp>> = std::thread::scope(|s| {
+            let rendezvous = &rendezvous;
+            let handles: Vec<_> = listeners
+                .into_iter()
+                .enumerate()
+                .map(|(rank, l)| s.spawn(move || Tcp::from_listener(rank, ranks, rendezvous, l)))
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("handshake thread panicked")).collect()
+        });
+        let mut mesh = Vec::with_capacity(ranks);
+        for t in results {
+            mesh.push(t?);
+        }
+        Ok(mesh)
+    }
+}
+
+impl Transport for Tcp {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn ranks(&self) -> usize {
+        self.ranks
+    }
+
+    fn name(&self) -> &'static str {
+        "tcp"
+    }
+
+    fn send(&mut self, to: usize, msg: Vec<f32>) -> Option<Vec<f32>> {
+        self.wire.clear();
+        self.wire.extend_from_slice(&(msg.len() as u32).to_le_bytes());
+        for x in &msg {
+            self.wire.extend_from_slice(&x.to_le_bytes());
+        }
+        let s = self.out[to].as_mut().expect("no outbound stream (send to self?)");
+        // One write_all per frame: the header travels with the payload,
+        // and NODELAY flushes the segment immediately.
+        s.write_all(&self.wire).expect("tcp send: collective peer hung up");
+        Some(msg)
+    }
+
+    fn recv(&mut self, from: usize, buf: &mut Vec<f32>) -> Option<Vec<f32>> {
+        let s = self.inc[from].as_mut().expect("no inbound stream (recv from self?)");
+        let mut hdr = [0u8; 4];
+        s.read_exact(&mut hdr).expect("tcp recv: collective peer hung up");
+        let n = u32::from_le_bytes(hdr) as usize;
+        self.wire.resize(4 * n, 0);
+        s.read_exact(&mut self.wire).expect("tcp recv: collective peer hung up");
+        buf.clear();
+        buf.reserve(n);
+        for c in self.wire.chunks_exact(4) {
+            buf.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+        }
+        None
+    }
+}
+
+/// Rank 0's side of the rendezvous: collect `ranks - 1` registrations,
+/// validate the assembled table, send it back on every registration
+/// stream. Mesh dials from fast peers that raced the rendezvous are
+/// returned for the accept phase.
+fn rendezvous_serve(
+    listener: &TcpListener,
+    ranks: usize,
+    my_addr: &str,
+) -> Result<(Vec<String>, Vec<(usize, TcpStream)>)> {
+    let mut table: Vec<Option<String>> = vec![None; ranks];
+    table[0] = Some(my_addr.to_string());
+    let mut registrations: Vec<(usize, TcpStream)> = Vec::new();
+    let mut stashed: Vec<(usize, TcpStream)> = Vec::new();
+    while registrations.len() < ranks - 1 {
+        let mut s = accept_deadline(listener, "rendezvous registrations")?;
+        let (purpose, peer) = read_hello(&mut s)?;
+        ensure!(peer < ranks, "hello from rank {peer}, but the mesh has {ranks} ranks");
+        match purpose {
+            PURPOSE_RENDEZVOUS => {
+                let addr = read_str(&mut s)?;
+                ensure!(peer != 0 && table[peer].is_none(), "rank {peer} registered twice");
+                table[peer] = Some(addr);
+                registrations.push((peer, s));
+            }
+            PURPOSE_MESH => stashed.push((peer, s)),
+            p => bail!("unknown hello purpose {p}"),
+        }
+    }
+    let table: Vec<String> = table.into_iter().map(|a| a.expect("every slot filled")).collect();
+    check_duplicates(&table).context("rendezvous address table")?;
+    for (_, mut s) in registrations {
+        write_u32(&mut s, ranks as u32)?;
+        for a in &table {
+            write_str(&mut s, a)?;
+        }
+    }
+    Ok((table, stashed))
+}
+
+/// A non-zero rank's side of the rendezvous: register (rank, listen
+/// address) with rank 0 and read back the full table.
+fn rendezvous_register(
+    rendezvous: &str,
+    rank: usize,
+    ranks: usize,
+    my_addr: &str,
+) -> Result<Vec<String>> {
+    let mut s = connect_retry(rendezvous)
+        .with_context(|| format!("rank {rank}: reaching rank 0 at {rendezvous}"))?;
+    // Bounded wait for the table: a rank 0 that accepts but never
+    // answers (e.g. rejected the launch) fails us within the deadline.
+    s.set_read_timeout(Some(SETUP_TIMEOUT)).context("setup read timeout")?;
+    write_u32(&mut s, MAGIC)?;
+    s.write_all(&[PURPOSE_RENDEZVOUS])?;
+    write_u32(&mut s, rank as u32)?;
+    write_str(&mut s, my_addr)?;
+    let n = read_u32(&mut s)
+        .context("rendezvous reply (rank 0 may have rejected the launch)")? as usize;
+    ensure!(n == ranks, "rank 0 reports a {n}-rank mesh, we were launched for {ranks}");
+    let mut table = Vec::with_capacity(n);
+    for _ in 0..n {
+        table.push(read_str(&mut s)?);
+    }
+    ensure!(
+        table[rank] == my_addr,
+        "rendezvous table lists {} for rank {rank}, but this process listens on {my_addr}",
+        table[rank]
+    );
+    Ok(table)
+}
+
+fn check_duplicates(addrs: &[String]) -> Result<()> {
+    for (i, a) in addrs.iter().enumerate() {
+        for (j, b) in addrs.iter().enumerate().skip(i + 1) {
+            ensure!(a != b, "duplicate peer address {a:?} (ranks {i} and {j})");
+        }
+    }
+    Ok(())
+}
+
+/// Dial with retries until `SETUP_TIMEOUT` (peers bind asynchronously).
+fn connect_retry(addr: &str) -> Result<TcpStream> {
+    let deadline = Instant::now() + SETUP_TIMEOUT;
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => return Ok(s),
+            Err(e) => {
+                if Instant::now() >= deadline {
+                    bail!("connecting to {addr}: {e} (gave up after {SETUP_TIMEOUT:?})");
+                }
+                std::thread::sleep(RETRY_SLEEP);
+            }
+        }
+    }
+}
+
+/// Accept on a nonblocking listener with a deadline, returning the
+/// stream switched back to blocking mode — with a setup-phase read
+/// timeout, so a connected-but-silent peer (stray probe, stalled
+/// launch) fails the handshake within the deadline instead of hanging
+/// it on `read_exact`. Mesh streams clear the timeout once identified.
+fn accept_deadline(listener: &TcpListener, what: &str) -> Result<TcpStream> {
+    let deadline = Instant::now() + SETUP_TIMEOUT;
+    loop {
+        match listener.accept() {
+            Ok((s, _)) => {
+                s.set_nonblocking(false).context("accepted stream set_blocking")?;
+                s.set_read_timeout(Some(SETUP_TIMEOUT)).context("setup read timeout")?;
+                return Ok(s);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                if Instant::now() >= deadline {
+                    bail!("timed out after {SETUP_TIMEOUT:?} waiting for {what}");
+                }
+                std::thread::sleep(RETRY_SLEEP);
+            }
+            Err(e) => return Err(e).with_context(|| format!("accepting {what}")),
+        }
+    }
+}
+
+/// Read and validate a hello: magic, purpose byte, sender rank.
+fn read_hello(s: &mut TcpStream) -> Result<(u8, usize)> {
+    let magic = read_u32(s)?;
+    ensure!(magic == MAGIC, "hello with bad magic {magic:#010x} (stray connection?)");
+    let mut purpose = [0u8; 1];
+    s.read_exact(&mut purpose).context("reading hello purpose")?;
+    let peer = read_u32(s)? as usize;
+    Ok((purpose[0], peer))
+}
+
+fn write_u32(s: &mut TcpStream, v: u32) -> Result<()> {
+    s.write_all(&v.to_le_bytes()).context("handshake write")
+}
+
+fn read_u32(s: &mut TcpStream) -> Result<u32> {
+    let mut b = [0u8; 4];
+    s.read_exact(&mut b).context("handshake read")?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn write_str(s: &mut TcpStream, t: &str) -> Result<()> {
+    write_u32(s, t.len() as u32)?;
+    s.write_all(t.as_bytes()).context("handshake write")
+}
+
+fn read_str(s: &mut TcpStream) -> Result<String> {
+    let n = read_u32(s)? as usize;
+    ensure!(n <= 4096, "oversized handshake string ({n} bytes)");
+    let mut b = vec![0u8; n];
+    s.read_exact(&mut b).context("handshake read")?;
+    String::from_utf8(b).context("handshake string is not utf-8")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn setup_validation_rejects_bad_launches() {
+        // ranks = 0
+        assert!(Tcp::connect(0, 0, &["127.0.0.1:1".into()], None).is_err());
+        // rank out of range
+        assert!(Tcp::connect(5, 2, &["127.0.0.1:1".into()], None).is_err());
+        // empty peer list
+        assert!(Tcp::connect(0, 2, &[], None).is_err());
+        // wrong table length (neither 1 nor ranks)
+        let two = vec!["127.0.0.1:1".to_string(), "127.0.0.1:2".to_string()];
+        assert!(Tcp::connect(0, 3, &two, None).is_err());
+        // duplicate peer addresses (checked before any socket work)
+        let dup = vec!["127.0.0.1:7001".to_string(), "127.0.0.1:7001".to_string()];
+        let err = Tcp::connect(0, 2, &dup, None).unwrap_err();
+        assert!(format!("{err:#}").contains("duplicate peer address"), "{err:#}");
+    }
+
+    #[test]
+    fn single_rank_mesh_needs_no_peers() {
+        let mut mesh = Tcp::loopback_mesh(1).expect("1-rank mesh");
+        let t = mesh.pop().unwrap();
+        assert_eq!((t.rank(), t.ranks()), (0, 1));
+    }
+
+    #[test]
+    fn frames_round_trip_bit_exact_including_non_finite() {
+        let mesh = Tcp::loopback_mesh(2).expect("2-rank mesh");
+        let mut it = mesh.into_iter();
+        let (a, b) = (it.next().unwrap(), it.next().unwrap());
+        let payload =
+            vec![0.0f32, -0.0, 1.5e-39, f32::NAN, f32::INFINITY, f32::NEG_INFINITY, 1.0e7 + 0.25];
+        let want: Vec<u32> = payload.iter().map(|x| x.to_bits()).collect();
+        std::thread::scope(|s| {
+            let payload = payload.clone();
+            s.spawn(move || {
+                let mut a = a;
+                a.send(1, payload);
+            });
+            let h = s.spawn(move || {
+                let mut b = b;
+                let mut buf = Vec::new();
+                b.recv(0, &mut buf);
+                buf.iter().map(|x| x.to_bits()).collect::<Vec<u32>>()
+            });
+            assert_eq!(h.join().expect("recv thread"), want);
+        });
+    }
+}

@@ -121,6 +121,11 @@ pub struct ShardedRun {
     pub reduce_bytes: u64,
     /// Parameter all-gather payload bytes, whole run, all ranks.
     pub gather_bytes: u64,
+    /// Optimizer-collective payload bytes (row-split Alada's q/v₀ chunk
+    /// reductions), whole run, all ranks.
+    pub opt_reduce_bytes: u64,
+    /// Which collective backend carried the run ("inproc", "tcp").
+    pub transport: &'static str,
     /// Mean collective payload bytes per engine step, all ranks combined
     /// (precomputed by `ShardOutcome::bytes_per_step`, the single source
     /// of truth — it divides by every step the engine executed, not the
@@ -167,6 +172,8 @@ pub fn run_sharded(
         per_rank_state_bytes: sharded.per_rank_state_bytes,
         reduce_bytes: sharded.reduce_bytes,
         gather_bytes: sharded.gather_bytes,
+        opt_reduce_bytes: sharded.opt_reduce_bytes,
+        transport: sharded.transport,
     })
 }
 

@@ -29,7 +29,7 @@ fn bench_smoke_shard() {
     let task = MlpTask::new(8, 12, 2, 4, 32, 8, 7);
     let path = std::env::temp_dir().join("BENCH_shard_smoke.json");
     let rows = shard_bench(&task, &[1, 2], 2, 1, 1, Some(path.to_str().unwrap()));
-    assert_eq!(rows.len(), 2 * 3, "2 rank counts x 3 pipelines");
+    assert_eq!(rows.len(), 2 * 3 + 1, "2 rank counts x 3 pipelines (inproc) + 1 tcp A/B row");
     // at 2 ranks the reduce-scatter pipeline must move fewer bytes than
     // the all-reduce pipeline
     let ar = rows
@@ -38,9 +38,19 @@ fn bench_smoke_shard() {
         .unwrap();
     let rs = rows
         .iter()
-        .find(|r| r.ranks == 2 && r.pipeline == alada::shard::Pipeline::ReduceScatter)
+        .find(|r| {
+            r.ranks == 2
+                && r.pipeline == alada::shard::Pipeline::ReduceScatter
+                && r.transport == "inproc"
+        })
         .unwrap();
     assert!(rs.bytes_per_step < ar.bytes_per_step);
+    // the tcp loopback row mirrors the inproc byte counts exactly — the
+    // transport changes wall-clock, never traffic or results
+    let tcp = rows.iter().find(|r| r.transport == "tcp").unwrap();
+    assert_eq!(tcp.ranks, 2);
+    assert_eq!(tcp.bytes_per_step, rs.bytes_per_step);
+    assert_eq!(tcp.final_loss.to_bits(), rs.final_loss.to_bits());
     // the row-split planner's balance is part of the perf record
     assert!(rows.iter().all(|r| r.imbalance >= 1.0));
     let one_rank = rows.iter().find(|r| r.ranks == 1).unwrap();
@@ -48,4 +58,6 @@ fn bench_smoke_shard() {
     let txt = std::fs::read_to_string(&path).expect("BENCH_shard json written");
     assert!(txt.contains("reduce_bytes_per_step") && txt.contains("pipeline"), "{txt}");
     assert!(txt.contains("imbalance") && txt.contains("max_rank_elems"), "{txt}");
+    assert!(txt.contains("\"transport\":\"inproc\""), "{txt}");
+    assert!(txt.contains("\"transport\":\"tcp\""), "{txt}");
 }

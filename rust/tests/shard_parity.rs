@@ -17,13 +17,16 @@
 //!
 //! Bit-for-bit determinism for a FIXED rank count is exact, and asserted
 //! exactly. The exchange pipeline (all-reduce vs reduce-scatter vs
-//! reduce-scatter + overlap) and the bucket size are pure transport
-//! choices — they must never change a single bit.
+//! reduce-scatter + overlap), the bucket size, AND the transport backend
+//! (in-process channels vs TCP sockets vs separate OS processes over
+//! TCP) are pure plumbing choices — they must never change a single bit.
 
 use anyhow::Result;
 
 use alada::optim::{by_name, Optimizer, Schedule};
-use alada::shard::{self, mesh, MlpTask, Pipeline, Replica, ShardConfig, ShardOutcome, ShardTask};
+use alada::shard::{
+    self, mesh, Comm, MlpTask, Pipeline, Replica, ShardConfig, ShardOutcome, ShardTask, Tcp,
+};
 use alada::tensor::Tensor;
 
 const STEPS: usize = 30;
@@ -89,8 +92,9 @@ fn tree_mean_of_copies(grads: &[Tensor], ranks: usize, bucket: usize) -> Vec<Ten
     let flat: Vec<f32> = grads.iter().flat_map(|g| g.data().iter().copied()).collect();
     let outs: Vec<Vec<f32>> = std::thread::scope(|s| {
         let handles: Vec<_> = mesh(ranks)
+            .expect("mesh")
             .into_iter()
-            .map(|c| {
+            .map(|mut c| {
                 let mut buf = flat.clone();
                 s.spawn(move || {
                     c.all_reduce_mean(&mut buf, bucket);
@@ -244,6 +248,95 @@ fn bucket_size_does_not_change_the_result() {
         for (x, y) in ta.data().iter().zip(tb.data()) {
             assert_eq!(x.to_bits(), y.to_bits());
         }
+    }
+}
+
+/// The transport-parity gate, in-process half: the engine over real TCP
+/// loopback sockets (full rendezvous + dial/accept handshake) must be
+/// bit-identical to the in-process channel mesh at 2 and 4 ranks, on
+/// both reduce-scatter pipelines. The tree lives above the transport, so
+/// any divergence here means the transport corrupted or reordered
+/// payloads.
+#[test]
+fn tcp_loopback_backend_matches_inproc_bit_for_bit() {
+    // batch 24 divides by both rank counts; alada exercises the
+    // optimizer collective over the wire too
+    let task = MlpTask::new(8, 12, 2, 4, 64, 24, 23);
+    let schedule = Schedule::Diminishing { eta0: 5e-3, total: 10 };
+    for ranks in [2usize, 4] {
+        for pipeline in [Pipeline::ReduceScatter, Pipeline::Overlap] {
+            let cfg = ShardConfig { ranks, bucket_kb: 2, steps: 10, pipeline };
+            let inproc = shard::train(&task, "alada", &schedule, &cfg).expect("inproc train");
+            assert_eq!(inproc.transport, "inproc");
+            let comms = Tcp::loopback_mesh(ranks)
+                .expect("tcp loopback mesh")
+                .into_iter()
+                .map(Comm::new)
+                .collect();
+            let tcp = shard::train_with_comms(&task, "alada", &schedule, &cfg, comms)
+                .expect("tcp train");
+            assert_eq!(tcp.transport, "tcp");
+            assert_bit_identical(
+                &inproc,
+                &tcp,
+                &format!("tcp vs inproc, {} at {ranks} ranks", pipeline.name()),
+            );
+            // identical traffic too: the transport changes wall-clock,
+            // never bytes
+            assert_eq!(tcp.reduce_bytes, inproc.reduce_bytes);
+            assert_eq!(tcp.gather_bytes, inproc.gather_bytes);
+            assert_eq!(tcp.opt_reduce_bytes, inproc.opt_reduce_bytes);
+        }
+    }
+}
+
+/// The transport-parity gate, multi-process half: launch the real CLI
+/// with `--transport tcp --spawn N` (N separate OS processes meeting
+/// over loopback) and `cmp` its dumped final parameters against an
+/// in-process run's — byte-identical, at 2 and 4 processes. Skips
+/// gracefully if the harness doesn't expose the binary path.
+#[test]
+fn tcp_two_and_four_process_runs_match_inproc_byte_for_byte() {
+    let Some(bin) = option_env!("CARGO_BIN_EXE_alada") else {
+        eprintln!("skipping: CARGO_BIN_EXE_alada not set (no alada bin target)");
+        return;
+    };
+    let dir = std::env::temp_dir();
+    for procs in [2usize, 4] {
+        let inproc = dir.join(format!("shard_parity_inproc_{procs}.bin"));
+        let tcp = dir.join(format!("shard_parity_tcp_{procs}.bin"));
+        let common = [
+            "--opt", "alada", "--steps", "5", "--batch", "8", "--dim", "6", "--hidden", "10",
+            "--depth", "1", "--bucket-kb", "1", "--seed", "9", "--lr", "0.005",
+        ];
+        let out = std::process::Command::new(bin)
+            .arg("shard-train")
+            .args(["--ranks", &procs.to_string()])
+            .args(common)
+            .args(["--dump-params", inproc.to_str().unwrap()])
+            .output()
+            .expect("run inproc shard-train");
+        assert!(
+            out.status.success(),
+            "inproc run failed: {}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+        let out = std::process::Command::new(bin)
+            .arg("shard-train")
+            .args(["--transport", "tcp", "--spawn", &procs.to_string()])
+            .args(common)
+            .args(["--dump-params", tcp.to_str().unwrap()])
+            .output()
+            .expect("run tcp shard-train");
+        assert!(
+            out.status.success(),
+            "{procs}-process tcp run failed: {}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+        let a = std::fs::read(&inproc).expect("inproc dump written");
+        let b = std::fs::read(&tcp).expect("tcp dump written");
+        assert!(!a.is_empty(), "empty parameter dump");
+        assert!(a == b, "{procs}-process tcp params diverged from inproc");
     }
 }
 

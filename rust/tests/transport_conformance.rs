@@ -1,0 +1,227 @@
+//! Transport-conformance suite: every `shard::Transport` backend must
+//! provide the exact contract the collective algebra builds on, and the
+//! same checklist runs against BOTH shipped backends (and any future
+//! one — add two wrapper tests per backend):
+//!
+//! 1. **per-ordered-pair FIFO** — messages from s to d arrive in send
+//!    order, never mixed with other pairs' traffic, bit-exact;
+//! 2. **interleaved segment traffic** — `Comm` collectives composed over
+//!    an interleaved multi-owner segment list produce bit-identical
+//!    results on every backend (the all-reduce composition identity);
+//! 3. **buffer recycling never aliases** — a buffer handed back by
+//!    `send`/`recv` is truly spent: scribbling over it must not corrupt
+//!    any message still in flight.
+
+use alada::shard::{Comm, InProc, Seg, Tcp, Transport};
+
+fn inproc_mesh(ranks: usize) -> Vec<InProc> {
+    InProc::mesh(ranks).expect("inproc mesh")
+}
+
+fn tcp_mesh(ranks: usize) -> Vec<Tcp> {
+    Tcp::loopback_mesh(ranks).expect("tcp loopback mesh")
+}
+
+/// Contract 1: every ordered pair (s, d) carries K numbered messages of
+/// varying sizes; each receiver must see exactly K messages from each
+/// peer, in send order, bit-exact. The value encodes (src, dst, seq,
+/// elem), so any reorder or cross-pair mixup changes some element.
+fn ordered_delivery<T: Transport>(mesh: Vec<T>) {
+    const K: usize = 17;
+    let ranks = mesh.len();
+    let val = |src: usize, dst: usize, k: usize, e: usize| {
+        (src * 10_000 + dst * 1_000 + k * 10 + e) as f32
+    };
+    let msg_len = |k: usize| 3 + k % 4;
+    std::thread::scope(|s| {
+        for t in mesh {
+            s.spawn(move || {
+                let mut t = t;
+                let me = t.rank();
+                // Send everything first (payloads are tiny, so they fit
+                // channel/socket buffers), then drain: exposes reorders
+                // that lockstep ping-pong would mask.
+                for k in 0..K {
+                    for d in 0..ranks {
+                        if d == me {
+                            continue;
+                        }
+                        let msg: Vec<f32> = (0..msg_len(k)).map(|e| val(me, d, k, e)).collect();
+                        let _ = t.send(d, msg);
+                    }
+                }
+                let mut buf = Vec::new();
+                for src in 0..ranks {
+                    if src == me {
+                        continue;
+                    }
+                    for k in 0..K {
+                        let _ = t.recv(src, &mut buf);
+                        let want: Vec<f32> =
+                            (0..msg_len(k)).map(|e| val(src, me, k, e)).collect();
+                        assert_eq!(buf, want, "src {src} → {me}, message {k}");
+                    }
+                }
+            });
+        }
+    });
+}
+
+#[test]
+fn inproc_delivers_each_pair_in_order() {
+    ordered_delivery(inproc_mesh(4));
+}
+
+#[test]
+fn tcp_delivers_each_pair_in_order() {
+    ordered_delivery(tcp_mesh(4));
+}
+
+/// Association-sensitive per-rank fill: huge/tiny mix whose sum depends
+/// on association order in f32.
+fn sensitive_fill(rank: usize, len: usize) -> Vec<f32> {
+    (0..len).map(|i| 1.0e-7 + (rank as f32 + 1.0) * 1.0e7 * (i as f32 + 1.0)).collect()
+}
+
+/// All-reduce-mean on every rank of `mesh`; returns per-rank buffers.
+fn run_all_reduce<T: Transport>(mesh: Vec<T>, len: usize, bucket: usize) -> Vec<Vec<f32>> {
+    std::thread::scope(|s| {
+        let handles: Vec<_> = mesh
+            .into_iter()
+            .map(|t| {
+                s.spawn(move || {
+                    let mut c = Comm::new(t);
+                    let mut buf = sensitive_fill(c.rank(), len);
+                    c.all_reduce_mean(&mut buf, bucket);
+                    buf
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("rank thread")).collect()
+    })
+}
+
+/// Reduce-scatter + all-gather over `segs` on every rank of `mesh`.
+fn run_scatter_gather<T: Transport>(
+    mesh: Vec<T>,
+    segs: &[Seg],
+    len: usize,
+    bucket: usize,
+) -> Vec<Vec<f32>> {
+    std::thread::scope(|s| {
+        let handles: Vec<_> = mesh
+            .into_iter()
+            .map(|t| {
+                s.spawn(move || {
+                    let mut c = Comm::new(t);
+                    let mut buf = sensitive_fill(c.rank(), len);
+                    c.reduce_scatter_mean(&mut buf, segs, bucket);
+                    c.all_gather(&mut buf, segs, bucket);
+                    buf
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("rank thread")).collect()
+    })
+}
+
+/// Contract 2: reduce-scatter + all-gather over an INTERLEAVED segment
+/// list (rank 0 owns two non-adjacent segments, one segment is empty)
+/// equals all-reduce-mean bit-for-bit — on this backend.
+fn interleaved_segments_compose<T: Transport>(make: impl Fn() -> Vec<T>) {
+    const LEN: usize = 13;
+    let segs = vec![
+        Seg { owner: 0, range: 0..4 },
+        Seg { owner: 2, range: 4..7 },
+        Seg { owner: 1, range: 7..7 }, // empty on purpose
+        Seg { owner: 1, range: 7..11 },
+        Seg { owner: 0, range: 11..LEN }, // rank 0 again: interleaved ownership
+    ];
+    for bucket in [3usize, LEN] {
+        let reference = run_all_reduce(make(), LEN, bucket);
+        let composed = run_scatter_gather(make(), &segs, LEN, bucket);
+        for (r, (a, b)) in composed.iter().zip(&reference).enumerate() {
+            for (x, y) in a.iter().zip(b) {
+                assert_eq!(x.to_bits(), y.to_bits(), "bucket={bucket} rank={r}: {x} vs {y}");
+            }
+        }
+    }
+}
+
+#[test]
+fn inproc_interleaved_segments_compose_to_all_reduce() {
+    interleaved_segments_compose(|| inproc_mesh(3));
+}
+
+#[test]
+fn tcp_interleaved_segments_compose_to_all_reduce() {
+    interleaved_segments_compose(|| tcp_mesh(3));
+}
+
+/// Contract 3: pool reuse must not alias in-flight messages. Rank 0
+/// streams stamped messages to rank 1 and poisons every buffer the
+/// transport hands back; rank 1 echoes each payload (+0.5) reusing its
+/// receive buffer as the send body, also poisoning returns. Any aliasing
+/// between a recycled buffer and a queued/in-flight message shows up as
+/// NaN or a wrong stamp.
+fn recycling_does_not_alias<T: Transport>(mesh: Vec<T>) {
+    const ROUNDS: usize = 40;
+    let mut it = mesh.into_iter();
+    let (a, b) = (it.next().unwrap(), it.next().unwrap());
+    std::thread::scope(|s| {
+        s.spawn(move || {
+            let mut t = a;
+            let mut buf = Vec::new();
+            for round in 0..ROUNDS {
+                let msg: Vec<f32> = (0..8).map(|e| (round * 8 + e) as f32).collect();
+                if let Some(mut spent) = t.send(1, msg) {
+                    // the payload must already be out of this buffer
+                    spent.iter_mut().for_each(|x| *x = f32::NAN);
+                }
+                if let Some(mut spare) = t.recv(1, &mut buf) {
+                    spare.iter_mut().for_each(|x| *x = f32::NAN);
+                }
+                let want: Vec<f32> = (0..8).map(|e| (round * 8 + e) as f32 + 0.5).collect();
+                assert_eq!(buf, want, "round {round}");
+            }
+        });
+        s.spawn(move || {
+            let mut t = b;
+            let mut buf = Vec::new();
+            for _ in 0..ROUNDS {
+                if let Some(mut spare) = t.recv(0, &mut buf) {
+                    spare.iter_mut().for_each(|x| *x = f32::NAN);
+                }
+                // reuse the received payload as the reply body — the
+                // transport must be done with it the moment recv returns
+                let reply: Vec<f32> = buf.iter().map(|x| x + 0.5).collect();
+                if let Some(mut spent) = t.send(0, reply) {
+                    spent.iter_mut().for_each(|x| *x = f32::NAN);
+                }
+            }
+        });
+    });
+}
+
+#[test]
+fn inproc_recycled_buffers_do_not_alias() {
+    recycling_does_not_alias(inproc_mesh(2));
+}
+
+#[test]
+fn tcp_recycled_buffers_do_not_alias() {
+    recycling_does_not_alias(tcp_mesh(2));
+}
+
+/// Setup validation is part of the conformance story: bad launches are
+/// `Err`s with actionable messages, never panics.
+#[test]
+fn bad_mesh_setups_are_errors_not_panics() {
+    assert!(InProc::mesh(0).is_err());
+    assert!(Tcp::loopback_mesh(0).is_err());
+    assert!(Tcp::connect(0, 0, &["127.0.0.1:1".into()], None).is_err());
+    assert!(Tcp::connect(3, 2, &["127.0.0.1:1".into()], None).is_err());
+    let dup = vec!["127.0.0.1:7001".to_string(), "127.0.0.1:7001".to_string()];
+    let err = Tcp::connect(0, 2, &dup, None).unwrap_err();
+    assert!(format!("{err:#}").contains("duplicate peer address"), "{err:#}");
+}

@@ -12,3 +12,12 @@ cargo clippy --all-targets -- -D warnings
 
 echo "== cargo test =="
 cargo test -q
+
+echo "== tcp smoke: 2-process loopback parity vs inproc =="
+tmp="$(mktemp -d)"
+trap 'rm -rf "$tmp"' EXIT
+common=(--opt alada --steps 6 --batch 8 --dim 8 --hidden 12 --depth 2 --bucket-kb 1 --seed 3)
+cargo run -q -- shard-train --ranks 2 "${common[@]}" --dump-params "$tmp/inproc.bin"
+cargo run -q -- shard-train --transport tcp --spawn 2 "${common[@]}" --dump-params "$tmp/tcp.bin"
+cmp "$tmp/inproc.bin" "$tmp/tcp.bin"
+echo "   tcp final params byte-identical to inproc"

@@ -1,0 +1,12 @@
+#!/usr/bin/env bash
+# Single-machine TCP launcher for the shard engine: runs `alada
+# shard-train` as N cooperating OS processes on loopback (this process
+# becomes rank 0 and spawns the other N-1; they rendezvous on an
+# OS-assigned port). Extra flags pass through to shard-train.
+#
+#   scripts/shard_tcp.sh 4 --opt alada --steps 200 --batch 32
+set -euo pipefail
+cd "$(dirname "$0")/.."
+n="${1:?usage: shard_tcp.sh <nprocs> [shard-train flags...]}"
+shift
+exec cargo run --release -q -- shard-train --transport tcp --spawn "$n" "$@"
