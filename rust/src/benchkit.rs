@@ -17,7 +17,7 @@
 use std::collections::BTreeMap;
 
 use crate::optim::{by_name, Schedule, ALL};
-use crate::shard::{self, Comm, MlpTask, Partition, Pipeline, ShardConfig, Tcp};
+use crate::shard::{self, CkptConfig, Comm, MlpTask, Partition, Pipeline, ShardConfig, Tcp};
 use crate::tensor::Tensor;
 use crate::util::timing::bench;
 use crate::util::{Json, Rng};
@@ -131,6 +131,11 @@ pub struct ShardBenchRow {
     /// max_rank_elems / (total/ranks) — ~1.0 under the row-split plan.
     pub imbalance: f64,
     pub final_loss: f64,
+    /// Checkpoint wall time at this rank count (slowest rank; per-rank
+    /// slices written concurrently, no gather — expected O(state/N)).
+    pub save_ms: f64,
+    /// Resume (read + reshard + import) wall time at this rank count.
+    pub load_ms: f64,
 }
 
 /// One measured engine run folded into a `ShardBenchRow`.
@@ -184,7 +189,50 @@ fn shard_bench_row(
         max_rank_elems: out.max_rank_elems,
         imbalance: out.imbalance,
         final_loss: *out.losses.last().unwrap_or(&f64::NAN),
+        save_ms: 0.0,
+        load_ms: 0.0,
     }
+}
+
+/// Measure the elastic checkpoint path at one rank count: a short run
+/// that saves at its final step, then a resume run that loads it back.
+/// Returns (save_ms, load_ms) — slowest rank each. Per-rank slices are
+/// written concurrently with no gather, so save_ms should shrink as
+/// ranks grow, not stay O(state).
+fn ckpt_ms(task: &MlpTask, schedule: &Schedule, ranks: usize, steps: usize) -> (f64, f64) {
+    // pid-suffixed so concurrent bench/test invocations never share a dir
+    let dir = std::env::temp_dir()
+        .join(format!("alada_bench_ckpt_{}_{ranks}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    let save_steps = steps.clamp(1, 2);
+    let saved = shard::train(
+        task,
+        "alada",
+        schedule,
+        &ShardConfig {
+            ranks,
+            bucket_kb: 64,
+            steps: save_steps,
+            ckpt: CkptConfig::new(dir.to_str(), 0, None),
+            ..ShardConfig::default()
+        },
+    )
+    .expect("checkpoint save run");
+    let resumed = shard::train(
+        task,
+        "alada",
+        schedule,
+        &ShardConfig {
+            ranks,
+            bucket_kb: 64,
+            steps: save_steps + 1,
+            ckpt: CkptConfig::new(None, 0, dir.to_str()),
+            ..ShardConfig::default()
+        },
+    )
+    .expect("checkpoint resume run");
+    std::fs::remove_dir_all(&dir).ok();
+    (saved.save_secs * 1e3, resumed.load_secs * 1e3)
 }
 
 /// Benchmark the shard engine across rank counts, all three exchange
@@ -207,10 +255,23 @@ pub fn shard_bench(
         let part = Partition::plan_for("alada", &shapes, ranks);
         let first_of_rank = rows.len();
         for pipeline in [Pipeline::AllReduce, Pipeline::ReduceScatter, Pipeline::Overlap] {
-            let cfg = ShardConfig { ranks, bucket_kb: 64, steps, pipeline };
+            let cfg =
+                ShardConfig { ranks, bucket_kb: 64, steps, pipeline, ..ShardConfig::default() };
             let row = shard_bench_row(task, &schedule, &cfg, "inproc", warmup, samples);
             debug_assert_eq!(row.max_rank_elems, part.max_rank_elems());
             rows.push(row);
+        }
+        // Checkpoint wall time at this rank count — stamped onto every
+        // row of the rank count so the save_ms column is visibly
+        // O(state/N) across the sweep.
+        let (save_ms, load_ms) = ckpt_ms(task, &schedule, ranks, steps);
+        println!(
+            "  {ranks}-ranks checkpoint: save {save_ms:.2} ms, load {load_ms:.2} ms \
+             (per-rank slices, no gather)"
+        );
+        for row in rows[first_of_rank..].iter_mut() {
+            row.save_ms = save_ms;
+            row.load_ms = load_ms;
         }
         // Traffic ratio at this rank count: RS gradient exchange vs the
         // all-reduce baseline (expected ≈(N+1)/(2N)).
@@ -236,8 +297,14 @@ pub fn shard_bench(
         if ranks < 2 {
             continue;
         }
-        let cfg = ShardConfig { ranks, bucket_kb: 64, steps, pipeline: Pipeline::ReduceScatter };
-        let row = shard_bench_row(task, &schedule, &cfg, "tcp", warmup, samples);
+        let cfg = ShardConfig {
+            ranks,
+            bucket_kb: 64,
+            steps,
+            pipeline: Pipeline::ReduceScatter,
+            ..ShardConfig::default()
+        };
+        let mut row = shard_bench_row(task, &schedule, &cfg, "tcp", warmup, samples);
         if let Some(ip) = rows
             .iter()
             .find(|r| r.transport == "inproc" && r.ranks == ranks && r.pipeline == cfg.pipeline)
@@ -246,6 +313,10 @@ pub fn shard_bench(
                 "  {ranks}-ranks tcp/inproc step time: {:.2}x (incl. per-run mesh handshake)",
                 row.median_step_ns / ip.median_step_ns.max(1e-9)
             );
+            // the checkpoint path is transport-independent (local file
+            // IO); carry the rank count's measurement onto the tcp row
+            row.save_ms = ip.save_ms;
+            row.load_ms = ip.load_ms;
         }
         rows.push(row);
     }
@@ -273,6 +344,8 @@ pub fn shard_bench(
                     ("max_rank_elems", Json::Num(r.max_rank_elems as f64)),
                     ("imbalance", Json::Num(r.imbalance)),
                     ("final_loss", Json::Num(r.final_loss)),
+                    ("save_ms", Json::Num(r.save_ms)),
+                    ("load_ms", Json::Num(r.load_ms)),
                 ])
             })
             .collect();

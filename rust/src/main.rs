@@ -15,7 +15,7 @@ use alada::cli::Args;
 use alada::exp::{self, ExpOpts};
 use alada::optim::Schedule;
 use alada::runtime::{Manifest, Runtime, TrainSession};
-use alada::shard::{Comm, MlpTask, Pipeline, ShardConfig, Tcp};
+use alada::shard::{CkptConfig, Comm, MlpTask, Pipeline, ShardConfig, Tcp};
 use alada::train::memory;
 use alada::train::{TaskData, Trainer};
 use alada::util::log;
@@ -52,11 +52,15 @@ USAGE:
       ids: prop1 theory decay-map shard table4 fig2 table1 fig3 table2 fig4 table3 fig5
   alada train [--config run.toml] [--task lm|cls|mt] [--size tiny|small|base]
               [--opt adam|adafactor|alada] [--steps N] [--lr F] [--seed N]
-              [--dataset I] [--artifacts DIR]   (flags override the config file)
+              [--dataset I] [--artifacts DIR] [--save DIR] [--resume PATH]
+              (flags override the config file; --resume accepts sharded
+              checkpoint dirs and legacy single-blob files)
   alada shard-train [--ranks N|N,N,..] [--bucket-kb K] [--opt NAME] [--steps N]
               [--lr F] [--seed N] [--batch B] [--dim D] [--hidden H] [--depth L]
               [--pipeline allreduce|reduce-scatter|overlap] [--overlap] [--parity]
               [--transport inproc|tcp] [--dump-params FILE]
+              [--schedule const:η|dim:η:T|thm1:η:β1|cos:η:W:T]
+              [--save DIR] [--save-every K] [--resume DIR] [--same-batch]
               data-parallel engine with partitioned optimizer state (pure Rust,
               no artifacts needed; a rank list sweeps and compares). Default
               pipeline is reduce-scatter; --overlap adds a comm thread per rank
@@ -64,6 +68,18 @@ USAGE:
               Pipeline/overlap/transport never change results, only wall-clock
               and bytes. --dump-params writes the final parameters as raw f32
               LE bytes (the transport-parity artifact).
+              elastic checkpointing: --save DIR writes per-rank state slices +
+              a manifest (each rank writes its own slice, no gather; atomic,
+              manifest commits last); --save-every K adds mid-run saves;
+              --resume DIR restores from a checkpoint saved at ANY rank count
+              (state is resharded by chunk-aligned range intersection).
+              --same-batch gives every rank the full global batch, making the
+              trajectory rank-count-invariant — save at 2 procs, resume at 4,
+              and the params match an uninterrupted 4-proc run byte-for-byte.
+              The default schedule is dim:LR:STEPS, whose horizon is THIS
+              run's --steps: when a save run is shorter than the resume run,
+              pass an explicit --schedule (e.g. const:0.005) so both see the
+              same learning rates.
               tcp launches (one OS process per rank):
                 --transport tcp --spawn N        single-machine: this process
                                                  becomes rank 0 on a loopback
@@ -122,6 +138,8 @@ fn cmd_train(args: &Args) -> i32 {
     let seed = args.u64_or("seed", base.seed);
     let dataset = args.usize_or("dataset", base.dataset);
     let dir = args.str_or("artifacts", &base.artifact_dir);
+    let save = args.flag("save").map(String::from);
+    let resume = args.flag("resume").map(String::from);
     warn_unknown(args);
 
     let vocab = match size.as_str() {
@@ -171,7 +189,20 @@ fn cmd_train(args: &Args) -> i32 {
         let mut trainer =
             Trainer::new(sess, data, Schedule::Diminishing { eta0: lr, total: steps });
         trainer.record_every = (steps / 20).max(1);
-        let out = trainer.run(steps)?;
+        let start = match &resume {
+            Some(p) => {
+                let start = trainer.resume_checkpoint(p)?;
+                anyhow::ensure!(
+                    start <= steps,
+                    "checkpoint {p} is at step {start} but the run stops at {steps} \
+                     (raise --steps to continue training)"
+                );
+                println!("resumed {p} at step {start}");
+                start
+            }
+            None => 0,
+        };
+        let out = trainer.run_from(start, steps)?;
         for (step, loss, avg) in &out.curve {
             println!("step {step:>5}  loss {loss:.4}  cum-avg {avg:.4}");
         }
@@ -181,6 +212,10 @@ fn cmd_train(args: &Args) -> i32 {
             out.wall_secs,
             out.secs_per_step * 1e3
         );
+        if let Some(p) = &save {
+            trainer.save_checkpoint(p)?;
+            println!("checkpoint saved to {p}");
+        }
         Ok(())
     };
     match run() {
@@ -203,11 +238,31 @@ struct ShardJob {
     bucket_kb: usize,
     steps: usize,
     pipeline: Pipeline,
+    /// Parsed step-size schedule (defaults to the paper's diminishing
+    /// scheme over `steps`).
+    schedule: Schedule,
+    /// The raw `--schedule` spec, forwarded verbatim to tcp workers.
+    /// NOTE for elastic checkpointing: the default diminishing schedule
+    /// bakes `--steps` in as its horizon, so a save run with a SHORTER
+    /// `--steps` than the resume run sees different learning rates —
+    /// pass an explicit spec (e.g. `const:0.005`, or `dim:η:T` with the
+    /// full T) when runs of different lengths must share a trajectory.
+    schedule_spec: Option<String>,
+    /// Replicated-batch mode: every rank computes the full global batch,
+    /// making the trajectory rank-count-invariant (the elastic-resume
+    /// `cmp` gates save at M ranks and resume at N — power-of-two rank
+    /// counts then match bit-for-bit).
+    same_batch: bool,
+    /// Elastic checkpointing (worker processes inherit the same paths —
+    /// single-machine launches share the directory).
+    save: Option<String>,
+    save_every: usize,
+    resume: Option<String>,
 }
 
 impl ShardJob {
     fn task(&self) -> MlpTask {
-        MlpTask::new(
+        let task = MlpTask::new(
             self.dim,
             self.hidden,
             self.depth,
@@ -215,22 +270,33 @@ impl ShardJob {
             4096,
             self.batch,
             self.seed,
-        )
+        );
+        if self.same_batch {
+            task.with_replicated_batch()
+        } else {
+            task
+        }
     }
 
     fn schedule(&self) -> Schedule {
-        Schedule::Diminishing { eta0: self.lr, total: self.steps }
+        self.schedule.clone()
     }
 
     fn cfg(&self, ranks: usize) -> ShardConfig {
-        ShardConfig { ranks, bucket_kb: self.bucket_kb, steps: self.steps, pipeline: self.pipeline }
+        ShardConfig {
+            ranks,
+            bucket_kb: self.bucket_kb,
+            steps: self.steps,
+            pipeline: self.pipeline,
+            ckpt: CkptConfig::new(self.save.as_deref(), self.save_every, self.resume.as_deref()),
+        }
     }
 
     /// CLI args recreating this job in a spawned worker process
     /// (f32 `Display` is round-trip exact, so the worker parses back the
     /// identical learning rate).
     fn worker_args(&self, rank: usize, ranks: usize, rendezvous: &str) -> Vec<String> {
-        ["shard-train", "--transport", "tcp"]
+        let mut args: Vec<String> = ["shard-train", "--transport", "tcp"]
             .iter()
             .map(|s| s.to_string())
             .chain(
@@ -248,11 +314,27 @@ impl ShardJob {
                     ("--bucket-kb", self.bucket_kb.to_string()),
                     ("--steps", self.steps.to_string()),
                     ("--pipeline", self.pipeline.name().to_string()),
+                    ("--save-every", self.save_every.to_string()),
                 ]
                 .into_iter()
                 .flat_map(|(k, v)| [k.to_string(), v]),
             )
-            .collect()
+            .collect();
+        if self.same_batch {
+            args.push("--same-batch".to_string());
+        }
+        let optional = [
+            ("--schedule", &self.schedule_spec),
+            ("--save", &self.save),
+            ("--resume", &self.resume),
+        ];
+        for (flag, value) in optional {
+            if let Some(v) = value {
+                args.push(flag.to_string());
+                args.push(v.clone());
+            }
+        }
+        args
     }
 }
 
@@ -272,6 +354,11 @@ fn cmd_shard_train(args: &Args) -> i32 {
     let pipeline_flag = args.str_or("pipeline", Pipeline::default().name());
     let overlap = args.bool("overlap");
     let transport = args.str_or("transport", "inproc");
+    let same_batch = args.bool("same-batch");
+    let schedule_spec = args.flag("schedule").map(String::from);
+    let save = args.flag("save").map(String::from);
+    let save_every = args.usize_or("save-every", 0);
+    let resume = args.flag("resume").map(String::from);
     let rank_flag = args.flag("rank").map(String::from);
     let peers: Vec<String> = args
         .str_or("peers", "")
@@ -297,8 +384,35 @@ fn cmd_shard_train(args: &Args) -> i32 {
             ),
             (true, _) => Pipeline::Overlap,
         };
-        let job =
-            ShardJob { opt, lr, seed, batch, dim, hidden, depth, bucket_kb, steps, pipeline };
+        let schedule = match &schedule_spec {
+            Some(s) => Schedule::parse(s).map_err(|e| anyhow::anyhow!(e))?,
+            None => Schedule::Diminishing { eta0: lr, total: steps },
+        };
+        let job = ShardJob {
+            opt,
+            lr,
+            seed,
+            batch,
+            dim,
+            hidden,
+            depth,
+            bucket_kb,
+            steps,
+            pipeline,
+            schedule,
+            schedule_spec,
+            same_batch,
+            save,
+            save_every,
+            resume,
+        };
+        if job.save.is_some() || job.resume.is_some() {
+            anyhow::ensure!(
+                ranks_list.len() == 1 && !parity,
+                "--save/--resume need a single --ranks value and no --parity sweep \
+                 (a sweep would make every rank count write/read the same checkpoint)"
+            );
+        }
         match transport.as_str() {
             "inproc" => shard_train_inproc(&job, &ranks_list, parity, dump.as_deref()),
             "tcp" => {
@@ -501,6 +615,15 @@ fn print_rank_outcome(out: &alada::shard::RankOutcome) {
         out.state_bytes,
         out.imbalance,
     );
+    if out.save_secs > 0.0 || out.load_secs > 0.0 {
+        println!(
+            "rank {}/{}: checkpoint save {:.1} ms, load {:.1} ms (this rank's slice only)",
+            out.rank,
+            out.ranks,
+            out.save_secs * 1e3,
+            out.load_secs * 1e3,
+        );
+    }
 }
 
 /// Write final parameters as raw little-endian f32 bytes, in task

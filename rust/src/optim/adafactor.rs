@@ -6,6 +6,8 @@
 //! vectors and scalars fall back to a full accumulator — exactly the
 //! published recipe.
 
+use anyhow::{ensure, Result};
+
 use super::reshape::balanced_split;
 use super::Optimizer;
 use crate::tensor::{kernels, Tensor};
@@ -89,6 +91,53 @@ impl Optimizer for Adafactor {
                 Slot::Full(t) => t.len() * 4,
             })
             .sum()
+    }
+
+    fn export_state(&self, out: &mut Vec<f32>) {
+        for s in &self.slots {
+            match s {
+                Slot::Factored { r, c, .. } => {
+                    out.extend_from_slice(r);
+                    out.extend_from_slice(c);
+                }
+                Slot::Full(t) => out.extend_from_slice(t.data()),
+            }
+        }
+    }
+
+    fn import_state(&mut self, _shapes: &[Vec<usize>], data: &[f32], step: usize) -> Result<()> {
+        let total: usize = self
+            .slots
+            .iter()
+            .map(|s| match s {
+                Slot::Factored { r, c, .. } => r.len() + c.len(),
+                Slot::Full(t) => t.len(),
+            })
+            .sum();
+        ensure!(
+            data.len() == total,
+            "adafactor state has {} elements, optimizer holds {total}",
+            data.len()
+        );
+        ensure!(step <= u32::MAX as usize, "step counter {step} out of range");
+        let mut off = 0;
+        for s in &mut self.slots {
+            match s {
+                Slot::Factored { r, c, .. } => {
+                    r.copy_from_slice(&data[off..off + r.len()]);
+                    off += r.len();
+                    c.copy_from_slice(&data[off..off + c.len()]);
+                    off += c.len();
+                }
+                Slot::Full(t) => {
+                    let n = t.len();
+                    t.data_mut().copy_from_slice(&data[off..off + n]);
+                    off += n;
+                }
+            }
+        }
+        self.t = step as u32;
+        Ok(())
     }
 
     fn name(&self) -> &'static str {

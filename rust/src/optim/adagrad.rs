@@ -1,5 +1,7 @@
 //! AdaGrad (Duchi et al. 2011): accumulated squared gradients, mn state.
 
+use anyhow::{ensure, Result};
+
 use super::Optimizer;
 use crate::tensor::Tensor;
 
@@ -28,6 +30,28 @@ impl Optimizer for AdaGrad {
 
     fn state_overhead_bytes(&self) -> usize {
         self.accum.iter().map(|t| t.len() * 4).sum()
+    }
+
+    fn export_state(&self, out: &mut Vec<f32>) {
+        for t in &self.accum {
+            out.extend_from_slice(t.data());
+        }
+    }
+
+    fn import_state(&mut self, _shapes: &[Vec<usize>], data: &[f32], _step: usize) -> Result<()> {
+        let total: usize = self.accum.iter().map(|t| t.len()).sum();
+        ensure!(
+            data.len() == total,
+            "adagrad state has {} elements, optimizer holds {total}",
+            data.len()
+        );
+        let mut off = 0;
+        for t in &mut self.accum {
+            let n = t.len();
+            t.data_mut().copy_from_slice(&data[off..off + n]);
+            off += n;
+        }
+        Ok(())
     }
 
     fn name(&self) -> &'static str {

@@ -4,6 +4,8 @@
 //! `tensor::kernels::adam_update` (one sweep of memory traffic instead
 //! of three).
 
+use anyhow::{ensure, Result};
+
 use super::Optimizer;
 use crate::tensor::{kernels, Tensor};
 
@@ -54,6 +56,33 @@ impl Optimizer for Adam {
 
     fn state_overhead_bytes(&self) -> usize {
         self.m.iter().chain(&self.u).map(|t| t.len() * 4).sum()
+    }
+
+    fn export_state(&self, out: &mut Vec<f32>) {
+        // canonical field order: per tensor, [m_t, u_t] interleaved
+        for (m, u) in self.m.iter().zip(&self.u) {
+            out.extend_from_slice(m.data());
+            out.extend_from_slice(u.data());
+        }
+    }
+
+    fn import_state(&mut self, _shapes: &[Vec<usize>], data: &[f32], step: usize) -> Result<()> {
+        let total: usize = self.m.iter().chain(&self.u).map(|t| t.len()).sum();
+        ensure!(
+            data.len() == total,
+            "adam state has {} elements, optimizer holds {total}",
+            data.len()
+        );
+        ensure!(step <= u32::MAX as usize, "step counter {step} out of range");
+        let mut off = 0;
+        for (m, u) in self.m.iter_mut().zip(&mut self.u) {
+            let n = m.len();
+            m.data_mut().copy_from_slice(&data[off..off + n]);
+            u.data_mut().copy_from_slice(&data[off + n..off + 2 * n]);
+            off += 2 * n;
+        }
+        self.t = step as u32;
+        Ok(())
     }
 
     fn name(&self) -> &'static str {

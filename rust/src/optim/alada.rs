@@ -33,6 +33,8 @@
 
 use std::ops::Range;
 
+use anyhow::{ensure, Result};
+
 use super::reshape::balanced_split;
 use super::{Collective, LocalCollective, Optimizer};
 use crate::tensor::{kernels, Tensor};
@@ -403,6 +405,56 @@ impl Optimizer for Alada {
             "row-split Alada with cross-rank tensors must step via step_with"
         );
         self.step_with(params, grads, lr, &mut LocalCollective);
+    }
+
+    fn export_state(&self, out: &mut Vec<f32>) {
+        // Canonical per-view order (optim::state_fields): the owned M
+        // window (Elem), the owned p slice (Row), then the replicated q
+        // and v₀ (Shared — bit-identical across owners, stored by every
+        // owner, restorable from any one). Pure-participation views
+        // (rows == 0) keep no state.
+        for s in &self.slots {
+            if s.rows == 0 {
+                continue;
+            }
+            out.extend_from_slice(&s.m);
+            out.extend_from_slice(&s.p);
+            out.extend_from_slice(&s.q);
+            out.push(s.v0);
+        }
+    }
+
+    fn import_state(&mut self, _shapes: &[Vec<usize>], data: &[f32], step: usize) -> Result<()> {
+        let total: usize = self
+            .slots
+            .iter()
+            .filter(|s| s.rows > 0)
+            .map(|s| s.m.len() + s.p.len() + s.q.len() + 1)
+            .sum();
+        ensure!(
+            data.len() == total,
+            "alada state has {} elements, optimizer holds {total}",
+            data.len()
+        );
+        ensure!(step <= u32::MAX as usize, "step counter {step} out of range");
+        let mut off = 0;
+        for s in &mut self.slots {
+            if s.rows == 0 {
+                continue;
+            }
+            s.m.copy_from_slice(&data[off..off + s.m.len()]);
+            off += s.m.len();
+            s.p.copy_from_slice(&data[off..off + s.p.len()]);
+            off += s.p.len();
+            s.q.copy_from_slice(&data[off..off + s.q.len()]);
+            off += s.q.len();
+            s.v0 = data[off];
+            off += 1;
+        }
+        // t > 0 also skips the t = 0 ‖G₀‖² init, whose products (p, q,
+        // v₀) the imported state already carries.
+        self.t = step as u32;
+        Ok(())
     }
 
     fn state_overhead_bytes(&self) -> usize {

@@ -4,6 +4,8 @@
 //! update confidence. Keeps a full first moment (mn), so its overhead
 //! sits between Adam and Alada — exactly the gap Alada closes.
 
+use anyhow::{ensure, Result};
+
 use super::reshape::balanced_split;
 use super::Optimizer;
 use crate::tensor::{kernels, Tensor};
@@ -104,6 +106,42 @@ impl Optimizer for Came {
             .iter()
             .map(|s| (s.m.len() + s.r.len() + s.c.len() + s.ur.len() + s.uc.len()) * 4)
             .sum()
+    }
+
+    fn export_state(&self, out: &mut Vec<f32>) {
+        for s in &self.slots {
+            out.extend_from_slice(s.m.data());
+            out.extend_from_slice(&s.r);
+            out.extend_from_slice(&s.c);
+            out.extend_from_slice(&s.ur);
+            out.extend_from_slice(&s.uc);
+        }
+    }
+
+    fn import_state(&mut self, _shapes: &[Vec<usize>], data: &[f32], step: usize) -> Result<()> {
+        let total: usize = self
+            .slots
+            .iter()
+            .map(|s| s.m.len() + s.r.len() + s.c.len() + s.ur.len() + s.uc.len())
+            .sum();
+        ensure!(
+            data.len() == total,
+            "came state has {} elements, optimizer holds {total}",
+            data.len()
+        );
+        ensure!(step <= u32::MAX as usize, "step counter {step} out of range");
+        let mut off = 0;
+        for s in &mut self.slots {
+            let n = s.m.len();
+            s.m.data_mut().copy_from_slice(&data[off..off + n]);
+            off += n;
+            for part in [&mut s.r, &mut s.c, &mut s.ur, &mut s.uc] {
+                part.copy_from_slice(&data[off..off + part.len()]);
+                off += part.len();
+            }
+        }
+        self.t = step as u32;
+        Ok(())
     }
 
     fn name(&self) -> &'static str {

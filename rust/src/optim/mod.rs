@@ -82,6 +82,74 @@ pub fn partition_granularity(name: &str) -> PartitionGranularity {
     }
 }
 
+/// Domain of one per-tensor state field of a row-split optimizer — the
+/// unit the elastic checkpoint reshard planner cuts state at. A rank
+/// owning balanced-split rows `[r0, r1)` of a tensor holds, per field:
+/// `Elem` → the `(r1−r0)·cols` covered elements, `Row` → the `r1−r0`
+/// covered rows, `SharedCols`/`SharedScalar` → a full replicated copy
+/// (bit-identical across owners, so a restore may take any one).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StateField {
+    /// One f32 per parameter element (row-major over the split matrix).
+    Elem,
+    /// One f32 per balanced-split row.
+    Row,
+    /// `cols` f32s replicated across every owner of the tensor.
+    SharedCols,
+    /// One f32 replicated across every owner of the tensor.
+    SharedScalar,
+}
+
+/// Per-tensor persistent-state fields of row-split optimizer `name`, in
+/// the canonical `export_state` order. Tensor-aligned optimizers report
+/// an empty schema — their per-tensor state is an opaque chunk of
+/// [`tensor_state_elems`] that only ever moves whole.
+pub fn state_fields(name: &str) -> &'static [StateField] {
+    match name {
+        "sgd" => &[],
+        // one momentum / accumulator value per element
+        "sgdm" | "adagrad" => &[StateField::Elem],
+        // first and second moment, interleaved per tensor: [m_t, u_t]
+        "adam" => &[StateField::Elem, StateField::Elem],
+        // M window, p slice, replicated q, replicated v₀ (alada.rs)
+        "alada" => &[
+            StateField::Elem,
+            StateField::Row,
+            StateField::SharedCols,
+            StateField::SharedScalar,
+        ],
+        _ => &[],
+    }
+}
+
+/// Persistent-state elements optimizer `name` keeps for one FULL tensor
+/// of `shape` — the per-tensor section length of the canonical state
+/// layout (and the whole-tensor chunk the reshard planner moves for
+/// tensor-aligned optimizers). Mirrors each optimizer's allocation
+/// exactly; pinned against `export_state` lengths in the tests below.
+pub fn tensor_state_elems(name: &str, shape: &[usize]) -> usize {
+    let elems = shape.iter().product::<usize>().max(1);
+    let (rows, cols) = reshape::balanced_split(shape);
+    match name {
+        "sgd" => 0,
+        "sgdm" | "adagrad" => elems,
+        "adam" => 2 * elems,
+        "alada" => elems + rows + cols + 1,
+        // factored only when both dims are ≥ 2 (adafactor.rs)
+        "adafactor" => {
+            if rows >= 2 && cols >= 2 {
+                rows + cols
+            } else {
+                elems
+            }
+        }
+        // full first moment + factored second moment + instability
+        "came" => elems + 2 * (rows + cols),
+        "sm3" => rows + cols,
+        _ => 0,
+    }
+}
+
 /// The paper's Alada defaults (§VI-A) — single source for `by_name` and
 /// the row-split shard constructor.
 pub(crate) const ALADA_DEFAULTS: (f32, f32, f32) = (0.9, 0.9, 1e-16);
@@ -103,6 +171,23 @@ pub trait Optimizer {
     fn aliases_grad_slot(&self) -> bool {
         false
     }
+
+    /// Append the persistent state to `out` as flat f32s in the
+    /// canonical layout: per tensor (in construction order), each field
+    /// in [`state_fields`] order — [`tensor_state_elems`] elements per
+    /// tensor. Lazily-allocated state that does not exist yet (SGD-m
+    /// before its first step) may be omitted; callers that need the
+    /// canonical length pad with zeros, the semantic initial value
+    /// (`ShardedOptimizer::export_state` does). The step counter is NOT
+    /// part of the blob — `import_state` restores it from `step`.
+    fn export_state(&self, out: &mut Vec<f32>);
+
+    /// Restore state produced by `export_state` on an identically
+    /// configured optimizer; `step` restores the internal step counter
+    /// (the number of completed updates). `shapes` re-supplies the
+    /// parameter shapes for state that is built lazily. Errors on a
+    /// length mismatch — never panics on untrusted input.
+    fn import_state(&mut self, shapes: &[Vec<usize>], data: &[f32], step: usize) -> Result<()>;
 
     fn name(&self) -> &'static str;
 }
@@ -200,6 +285,36 @@ mod tests {
         let err = by_name("adamw", &[vec![4, 4]]).unwrap_err().to_string();
         assert!(err.contains("unknown optimizer"), "{err}");
         assert!(err.contains("alada"), "should list known names: {err}");
+    }
+
+    /// The canonical state layout contract behind elastic checkpointing:
+    /// every optimizer's `export_state` is exactly `tensor_state_elems`
+    /// per tensor, and importing the blob into a fresh instance resumes
+    /// the trajectory bit-for-bit.
+    #[test]
+    fn state_export_import_round_trips_every_optimizer() {
+        let shapes = vec![vec![9, 4], vec![6], vec![3, 2, 5], vec![]];
+        for name in ALL {
+            let mut opt = by_name(name, &shapes).unwrap();
+            let (mut params, grads) = testutil::fixture(&shapes, 7);
+            for _ in 0..3 {
+                opt.step(&mut params, &grads, 1e-2);
+            }
+            let want: usize = shapes.iter().map(|s| tensor_state_elems(name, s)).sum();
+            let mut blob = Vec::new();
+            opt.export_state(&mut blob);
+            assert_eq!(blob.len(), want, "{name}: canonical layout length");
+            let mut fresh = by_name(name, &shapes).unwrap();
+            fresh.import_state(&shapes, &blob, 3).unwrap();
+            let (mut pa, mut pb) = (params.clone(), params.clone());
+            for _ in 0..2 {
+                opt.step(&mut pa, &grads, 1e-2);
+                fresh.step(&mut pb, &grads, 1e-2);
+            }
+            assert_eq!(pa, pb, "{name}: resumed trajectory diverged");
+            // wrong-length blobs are a clean error, never a panic
+            assert!(fresh.import_state(&shapes, &blob[..blob.len() / 2], 3).is_err() || want == 0);
+        }
     }
 
     #[test]

@@ -4,6 +4,8 @@
 //! against (footnote 1): plain SGD keeps no optimizer state at all;
 //! SGD-momentum keeps one mn buffer.
 
+use anyhow::{ensure, Result};
+
 use super::Optimizer;
 use crate::tensor::Tensor;
 
@@ -41,6 +43,39 @@ impl Optimizer for Sgd {
             .as_ref()
             .map(|v| v.iter().map(|t| t.len() * 4).sum())
             .unwrap_or(0)
+    }
+
+    fn export_state(&self, out: &mut Vec<f32>) {
+        // velocity still unallocated (no step yet) exports as nothing;
+        // callers pad to the canonical length with zeros — the value a
+        // first step would start from anyway.
+        if let Some(v) = &self.velocity {
+            for t in v {
+                out.extend_from_slice(t.data());
+            }
+        }
+    }
+
+    fn import_state(&mut self, shapes: &[Vec<usize>], data: &[f32], _step: usize) -> Result<()> {
+        if self.momentum == 0.0 {
+            ensure!(data.is_empty(), "sgd keeps no state, got {} elements", data.len());
+            return Ok(());
+        }
+        let total: usize = shapes.iter().map(|s| s.iter().product::<usize>().max(1)).sum();
+        ensure!(
+            data.len() == total,
+            "sgdm state has {} elements, shapes imply {total}",
+            data.len()
+        );
+        let mut velocity = Vec::with_capacity(shapes.len());
+        let mut off = 0;
+        for s in shapes {
+            let n = s.iter().product::<usize>().max(1);
+            velocity.push(Tensor::new(data[off..off + n].to_vec(), s));
+            off += n;
+        }
+        self.velocity = Some(velocity);
+        Ok(())
     }
 
     fn name(&self) -> &'static str {

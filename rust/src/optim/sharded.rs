@@ -26,8 +26,8 @@ use std::ops::Range;
 
 use super::alada::{Alada, AladaView};
 use super::{
-    by_name, partition_granularity, Collective, LocalCollective, Optimizer,
-    PartitionGranularity, ALADA_DEFAULTS,
+    by_name, partition_granularity, state_fields, tensor_state_elems, Collective,
+    LocalCollective, Optimizer, PartitionGranularity, ALADA_DEFAULTS,
 };
 use crate::shard::partition::{Partition, Piece};
 use crate::tensor::Tensor;
@@ -50,6 +50,10 @@ pub struct ShardedOptimizer {
     inner: Inner,
     /// Owned sub-tensors, ascending (at most one per tensor).
     pieces: Vec<Piece>,
+    /// Shapes the wrapped optimizer was built over (whole tensors for
+    /// `Tensors`, flat piece lengths for `Elems`) — re-supplied to
+    /// `import_state` for lazily-built state.
+    piece_shapes: Vec<Vec<usize>>,
     /// Flat element offsets this rank owns — the slice of the engine's
     /// exchange buffer a reduce-scatter delivers here.
     owned_elems: Range<usize>,
@@ -66,6 +70,7 @@ impl ShardedOptimizer {
         let pieces = part.pieces(rank);
         let owned_elems = part.elem_range(rank);
         let mut needs_collective = false;
+        let mut piece_shapes: Vec<Vec<usize>> = Vec::new();
         let inner = match partition_granularity(name) {
             PartitionGranularity::Row if name == "alada" => {
                 let owners = part.owner_counts();
@@ -102,6 +107,7 @@ impl ShardedOptimizer {
             PartitionGranularity::Row => {
                 let shapes: Vec<Vec<usize>> = pieces.iter().map(|p| vec![p.elems()]).collect();
                 let opt = by_name(name, &shapes)?;
+                piece_shapes = shapes;
                 // scratch buffers are built lazily at the first step, so
                 // accounting-only construction stays cheap
                 Inner::Elems { opt, scratch_p: Vec::new(), scratch_g: Vec::new() }
@@ -109,6 +115,7 @@ impl ShardedOptimizer {
             PartitionGranularity::Tensor => {
                 let shapes: Vec<Vec<usize>> =
                     pieces.iter().map(|p| part.slots()[p.tensor].shape.clone()).collect();
+                piece_shapes = shapes.clone();
                 // validate the name first so unknown optimizers error as
                 // such, not as a granularity mismatch
                 let opt = by_name(name, &shapes)?;
@@ -128,11 +135,36 @@ impl ShardedOptimizer {
         Ok(ShardedOptimizer {
             inner,
             pieces,
+            piece_shapes,
             owned_elems,
             rank,
             ranks: part.ranks(),
             needs_collective,
         })
+    }
+
+    /// Canonical length (f32 elements) of this shard's exported state —
+    /// a pure function of (optimizer, partition, rank), so both sides of
+    /// a checkpoint agree on slice sizes without reading payloads
+    /// (`Partition::state_slice_elems` computes the same number from the
+    /// partition alone; pinned equal in the tests below).
+    pub fn state_elems(&self) -> usize {
+        match &self.inner {
+            Inner::AladaRows(_) => self
+                .pieces
+                .iter()
+                .map(|p| p.elems() + p.rows.len() + p.cols + 1)
+                .sum(),
+            Inner::Elems { .. } => {
+                let per_elem = state_fields(self.name()).len();
+                per_elem * self.pieces.iter().map(|p| p.elems()).sum::<usize>()
+            }
+            Inner::Tensors { .. } => self
+                .piece_shapes
+                .iter()
+                .map(|s| tensor_state_elems(self.name(), s))
+                .sum(),
+        }
     }
 
     pub fn rank(&self) -> usize {
@@ -227,6 +259,45 @@ impl Optimizer for ShardedOptimizer {
     fn state_overhead_bytes(&self) -> usize {
         let b = self.unpadded_state_bytes();
         (b + STATE_ALIGN - 1) / STATE_ALIGN * STATE_ALIGN
+    }
+
+    /// This shard's state in the canonical per-piece layout: for each
+    /// owned piece (ascending), the optimizer's fields in
+    /// `optim::state_fields` order (whole-tensor chunks for the
+    /// tensor-aligned family). Always exactly `state_elems()` long —
+    /// lazily-unallocated inner state (SGD-m before its first step) is
+    /// padded with zeros, its semantic initial value.
+    fn export_state(&self, out: &mut Vec<f32>) {
+        let base = out.len();
+        self.inner_opt().export_state(out);
+        let want = base + self.state_elems();
+        assert!(
+            out.len() == want || out.len() == base,
+            "inner {} exported {} state elements, canonical layout holds {}",
+            self.name(),
+            out.len() - base,
+            want - base
+        );
+        out.resize(want, 0.0);
+    }
+
+    /// Restore a blob produced by `export_state` on a shard of the SAME
+    /// partition and rank (cross-partition restores go through the
+    /// reshard planner first — `shard::partition::plan_reshard`).
+    fn import_state(&mut self, _shapes: &[Vec<usize>], data: &[f32], step: usize) -> Result<()> {
+        ensure!(
+            data.len() == self.state_elems(),
+            "state slice has {} elements, rank {}/{} of this partition holds {}",
+            data.len(),
+            self.rank,
+            self.ranks,
+            self.state_elems()
+        );
+        match &mut self.inner {
+            Inner::AladaRows(alada) => alada.import_state(&[], data, step),
+            Inner::Tensors { opt, .. } => opt.import_state(&self.piece_shapes, data, step),
+            Inner::Elems { opt, .. } => opt.import_state(&self.piece_shapes, data, step),
+        }
     }
 
     fn aliases_grad_slot(&self) -> bool {
@@ -380,6 +451,94 @@ mod tests {
             }
             assert_eq!(sum_exact, total + repl, "ranks={ranks}");
             assert!(sum_padded >= sum_exact && sum_padded - sum_exact < ranks * STATE_ALIGN);
+        }
+    }
+
+    /// Both sides of the checkpoint contract compute slice sizes
+    /// independently — the optimizer from its pieces, the planner from
+    /// the partition — and they must agree for every optimizer and cut.
+    #[test]
+    fn state_elems_agree_with_partition_layout() {
+        let shapes = vec![vec![40, 6], vec![12], vec![6, 4], vec![10]];
+        for name in ["alada", "adam", "sgdm", "sgd", "adagrad", "adafactor", "came", "sm3"] {
+            for ranks in [1usize, 2, 3, 5, 9] {
+                let part = Partition::plan_for(name, &shapes, ranks);
+                for r in 0..ranks {
+                    let s = ShardedOptimizer::new(name, &part, r).unwrap();
+                    assert_eq!(
+                        s.state_elems(),
+                        part.state_slice_elems(name, r),
+                        "{name} at {ranks} ranks, rank {r}"
+                    );
+                }
+            }
+        }
+    }
+
+    /// Lazily-built state that never stepped exports as its semantic
+    /// initial value (zeros), at the canonical length.
+    #[test]
+    fn sgdm_pre_step_export_pads_to_canonical_zeros() {
+        let shapes = vec![vec![6, 4], vec![5]];
+        let part = Partition::plan_for("sgdm", &shapes, 2);
+        let s = ShardedOptimizer::new("sgdm", &part, 0).unwrap();
+        let mut v = Vec::new();
+        s.export_state(&mut v);
+        assert_eq!(v.len(), s.state_elems());
+        assert!(v.iter().all(|&x| x == 0.0));
+        assert!(s.state_elems() > 0);
+    }
+
+    /// Optimizer-level elastic round trip: step 2-way shards, export,
+    /// reshard the slices to 3 ranks, import, and the 3-way shards
+    /// continue the unsharded trajectory bit-for-bit. (The engine-level
+    /// end-to-end version lives in rust/tests/elastic_resume.rs.)
+    #[test]
+    fn exported_state_reshards_across_rank_counts() {
+        use crate::shard::partition::plan_reshard;
+        let shapes = vec![vec![30, 4], vec![8], vec![5, 5]];
+        for name in ["adam", "sgdm", "adagrad", "adafactor", "sm3"] {
+            let (mut pa, grads) = fixture(&shapes, 33);
+            let mut pb = pa.clone();
+            let mut plain = by_name(name, &shapes).unwrap();
+            let old_part = Partition::plan_for(name, &shapes, 2);
+            let mut old: Vec<ShardedOptimizer> =
+                (0..2).map(|r| ShardedOptimizer::new(name, &old_part, r).unwrap()).collect();
+            for _ in 0..4 {
+                plain.step(&mut pa, &grads, 1e-2);
+                for s in old.iter_mut() {
+                    s.step(&mut pb, &grads, 1e-2);
+                }
+            }
+            assert_eq!(pa, pb, "{name}: pre-checkpoint shards diverged");
+            let slices: Vec<Vec<f32>> = old
+                .iter()
+                .map(|s| {
+                    let mut v = Vec::new();
+                    s.export_state(&mut v);
+                    v
+                })
+                .collect();
+            let new_part = Partition::plan_for(name, &shapes, 3);
+            let mut new: Vec<ShardedOptimizer> = (0..3)
+                .map(|r| {
+                    let mut s = ShardedOptimizer::new(name, &new_part, r).unwrap();
+                    let plan = plan_reshard(name, &old_part, &new_part, r).unwrap();
+                    let mut blob = vec![0.0f32; new_part.state_slice_elems(name, r)];
+                    for c in &plan {
+                        blob[c.dst.clone()].copy_from_slice(&slices[c.src_rank][c.src.clone()]);
+                    }
+                    s.import_state(&[], &blob, 4).unwrap();
+                    s
+                })
+                .collect();
+            for _ in 0..3 {
+                plain.step(&mut pa, &grads, 1e-2);
+                for s in new.iter_mut() {
+                    s.step(&mut pb, &grads, 1e-2);
+                }
+            }
+            assert_eq!(pa, pb, "{name}: resumed 3-way shards diverged");
         }
     }
 

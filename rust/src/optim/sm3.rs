@@ -2,6 +2,8 @@
 //! paper's related work. Keeps per-row and per-column *max* accumulators;
 //! the per-entry second-moment estimate is min(r_i, c_j).
 
+use anyhow::{ensure, Result};
+
 use super::reshape::balanced_split;
 use super::Optimizer;
 use crate::tensor::Tensor;
@@ -60,6 +62,30 @@ impl Optimizer for Sm3 {
 
     fn state_overhead_bytes(&self) -> usize {
         self.slots.iter().map(|s| (s.r.len() + s.c.len()) * 4).sum()
+    }
+
+    fn export_state(&self, out: &mut Vec<f32>) {
+        for s in &self.slots {
+            out.extend_from_slice(&s.r);
+            out.extend_from_slice(&s.c);
+        }
+    }
+
+    fn import_state(&mut self, _shapes: &[Vec<usize>], data: &[f32], _step: usize) -> Result<()> {
+        let total: usize = self.slots.iter().map(|s| s.r.len() + s.c.len()).sum();
+        ensure!(
+            data.len() == total,
+            "sm3 state has {} elements, optimizer holds {total}",
+            data.len()
+        );
+        let mut off = 0;
+        for s in &mut self.slots {
+            s.r.copy_from_slice(&data[off..off + s.r.len()]);
+            off += s.r.len();
+            s.c.copy_from_slice(&data[off..off + s.c.len()]);
+            off += s.c.len();
+        }
+        Ok(())
     }
 
     fn name(&self) -> &'static str {

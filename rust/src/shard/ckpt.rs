@@ -1,0 +1,260 @@
+//! Engine-side elastic checkpointing: per-rank state slices saved
+//! **locally and concurrently** (no gather), restored across ANY rank
+//! count via the partition planner's reshard algebra.
+//!
+//! Save protocol (every pipeline, every transport, incl. one rank per
+//! OS process):
+//!
+//! 1. every rank writes `slice-<step>-<r>.bin` atomically (temp +
+//!    `rename`; the step in the name means a new generation NEVER
+//!    touches the previous checkpoint's files) — its owned parameter
+//!    slice plus its canonical optimizer-state slice, O(state/N) work
+//!    per rank, fully parallel;
+//! 2. one tree all-reduce doubles as a barrier AND the checksum
+//!    exchange: each rank contributes its payload checksum as three
+//!    exact 22-bit f32 limbs (zeros elsewhere), so rank 0 ends the
+//!    barrier holding every slice's checksum without any extra message
+//!    machinery;
+//! 3. rank 0 writes `manifest.json` (temp + `rename`) — the COMMIT: a
+//!    crash before this point leaves the PREVIOUS checkpoint fully
+//!    valid (its manifest still references its own generation's
+//!    slices), a crash after it leaves the new one complete;
+//! 4. a second 1-element all-reduce keeps any rank from racing past an
+//!    uncommitted manifest; only then does each rank prune its own
+//!    superseded slices.
+//!
+//! Restore reads the manifest, REPLANS the saved partition (the planner
+//! is a pure function of optimizer, shapes, and rank count — the
+//! manifest's recorded geometry is cross-checked against it),
+//! reassembles the full parameter replica from the slice tiling, and
+//! maps the saved state slices onto this rank's pieces with
+//! [`plan_reshard`] — chunk-aligned range intersection, so save-at-M /
+//! resume-at-N restores the exact optimizer state bits the N-rank
+//! partition would have held (the elastic parity suite in
+//! rust/tests/elastic_resume.rs pins end-to-end byte identity).
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::optim::{Collective, Optimizer, ShardedOptimizer};
+use crate::tensor::Tensor;
+use crate::train::checkpoint::{self, slice_file, Manifest, SliceInfo, LAYOUT_CANONICAL};
+
+use super::partition::{plan_reshard, Partition};
+
+/// Artifact tag engine checkpoints carry; resume validates it so a
+/// session checkpoint (or anything else) is rejected by name.
+pub const SHARD_ARTIFACT: &str = "shard-train";
+
+/// Checkpoint knobs of a sharded run (`shard-train --save / --save-every
+/// / --resume` map 1:1 onto these).
+#[derive(Clone, Debug, Default)]
+pub struct CkptConfig {
+    /// Directory to save into. When set, a save always happens after the
+    /// final step; `save_every` adds periodic mid-run saves.
+    pub save_dir: Option<PathBuf>,
+    /// Also save after every K completed steps (0 = final save only).
+    pub save_every: usize,
+    /// Checkpoint directory to resume from — saved at ANY rank count.
+    pub resume_from: Option<PathBuf>,
+}
+
+impl CkptConfig {
+    /// Shorthand used by the CLI layer.
+    pub fn new(save: Option<&str>, save_every: usize, resume: Option<&str>) -> CkptConfig {
+        CkptConfig {
+            save_dir: save.map(PathBuf::from),
+            save_every,
+            resume_from: resume.map(PathBuf::from),
+        }
+    }
+}
+
+/// One rank's checkpoint driver inside an engine run — shared by all
+/// three pipelines (the overlap pipeline passes its channel-backed
+/// collective; the barriers ride the comm thread in command order).
+pub(crate) struct RankCkpt<'a> {
+    cfg: &'a CkptConfig,
+    opt_name: &'a str,
+    part: &'a Partition,
+    rank: usize,
+    /// Wall time this rank spent saving / loading (BENCH_shard.json's
+    /// save_ms / load_ms columns — the O(state/N) visibility hook).
+    pub save_secs: f64,
+    pub load_secs: f64,
+}
+
+impl<'a> RankCkpt<'a> {
+    pub fn new(
+        cfg: &'a CkptConfig,
+        opt_name: &'a str,
+        part: &'a Partition,
+        rank: usize,
+    ) -> RankCkpt<'a> {
+        RankCkpt { cfg, opt_name, part, rank, save_secs: 0.0, load_secs: 0.0 }
+    }
+
+    /// True when a save is due after completing 0-based `step` of
+    /// `steps`: every `save_every` steps, and always at the end.
+    pub fn save_due(&self, step: usize, steps: usize) -> bool {
+        self.cfg.save_dir.is_some()
+            && (step + 1 == steps
+                || (self.cfg.save_every > 0 && (step + 1) % self.cfg.save_every == 0))
+    }
+
+    /// Restore params + this rank's optimizer state from
+    /// `cfg.resume_from`; returns the step to resume at (0 when no
+    /// resume is configured). Pure local file reads — every rank resumes
+    /// independently, no collective involved.
+    pub fn resume(
+        &mut self,
+        params: &mut [Tensor],
+        opt: &mut ShardedOptimizer,
+        total_steps: usize,
+    ) -> Result<usize> {
+        let Some(dir) = self.cfg.resume_from.clone() else {
+            return Ok(0);
+        };
+        let t0 = Instant::now();
+        let man = Manifest::load(&dir)?;
+        ensure!(
+            man.artifact == SHARD_ARTIFACT,
+            "checkpoint {dir:?} is a {:?} checkpoint, not a shard-train one",
+            man.artifact
+        );
+        ensure!(
+            man.state_layout == LAYOUT_CANONICAL,
+            "checkpoint {dir:?} has an opaque state layout; it cannot be resharded"
+        );
+        ensure!(
+            man.optimizer == self.opt_name,
+            "checkpoint {dir:?} was saved with optimizer {:?}, this run uses {:?}",
+            man.optimizer,
+            self.opt_name
+        );
+        let shapes: Vec<Vec<usize>> =
+            self.part.slots().iter().map(|s| s.shape.clone()).collect();
+        ensure!(
+            man.shapes == shapes && man.param_elems == self.part.total_elems(),
+            "checkpoint {dir:?} covers different tensors than this task"
+        );
+        ensure!(
+            man.step <= total_steps,
+            "checkpoint {dir:?} is at step {} but the run stops at {total_steps}",
+            man.step
+        );
+        // Replan the saved partition (pure function of optimizer, shapes
+        // and rank count) and cross-check the manifest's self-described
+        // geometry against it before trusting any slice.
+        let old = Partition::plan_for(self.opt_name, &man.shapes, man.ranks);
+        for r in 0..man.ranks {
+            let info = man.slice(r)?;
+            ensure!(
+                info.flat == old.elem_range(r)
+                    && info.state_elems == old.state_slice_elems(self.opt_name, r),
+                "checkpoint {dir:?}: slice {r} geometry disagrees with the partition planner \
+                 (saved by an incompatible build?)"
+            );
+        }
+
+        // Parameters: the slices tile the flat space; reassemble the
+        // full replica every rank holds.
+        let mut flat = vec![0.0f32; self.part.total_elems()];
+        let mut states: Vec<Vec<f32>> = Vec::with_capacity(man.ranks);
+        for r in 0..man.ranks {
+            let (pslice, state) = checkpoint::read_slice(&dir, &man, r)
+                .with_context(|| format!("reading checkpoint {dir:?}"))?;
+            flat[old.elem_range(r)].copy_from_slice(&pslice);
+            states.push(state);
+        }
+        for (slot, t) in self.part.slots().iter().zip(params.iter_mut()) {
+            t.data_mut().copy_from_slice(&flat[slot.offset..slot.offset + slot.elems]);
+        }
+
+        // Optimizer state: intersect the saved slices with this rank's
+        // pieces and import the reassembled canonical blob.
+        let plan = plan_reshard(self.opt_name, &old, self.part, self.rank)?;
+        let mut blob = vec![0.0f32; self.part.state_slice_elems(self.opt_name, self.rank)];
+        for c in &plan {
+            blob[c.dst.clone()].copy_from_slice(&states[c.src_rank][c.src.clone()]);
+        }
+        opt.import_state(&[], &blob, man.step)
+            .with_context(|| format!("importing state from checkpoint {dir:?}"))?;
+        self.load_secs = t0.elapsed().as_secs_f64();
+        Ok(man.step)
+    }
+
+    /// Save a checkpoint recording `step_done` completed steps. Every
+    /// rank must call this at the same step with its refreshed full
+    /// params; the embedded collectives are the only synchronisation.
+    pub fn save(
+        &mut self,
+        step_done: usize,
+        params: &[Tensor],
+        opt: &ShardedOptimizer,
+        coll: &mut dyn Collective,
+    ) -> Result<()> {
+        let dir = self.cfg.save_dir.clone().expect("save called without save_dir");
+        let t0 = Instant::now();
+        // This rank's parameter slice: owned pieces ascending are
+        // contiguous in the flat space by construction.
+        let mut pslice = Vec::with_capacity(self.part.rank_elems(self.rank));
+        for p in self.part.pieces(self.rank) {
+            pslice.extend_from_slice(&params[p.tensor].data()[p.local.clone()]);
+        }
+        let mut state = Vec::new();
+        opt.export_state(&mut state);
+        let ck = checkpoint::write_slice(&dir, self.rank, step_done, &pslice, &state)
+            .with_context(|| format!("writing checkpoint slice {} in {dir:?}", self.rank))?;
+
+        // Barrier 1 + checksum exchange: three exact 22-bit limbs per
+        // rank (f32 holds integers < 2^24 exactly; summing with zeros is
+        // exact), so the same collective that proves "every slice is on
+        // disk" hands rank 0 every checksum.
+        let ranks = self.part.ranks();
+        let mut buf = vec![0.0f32; 3 * ranks];
+        buf[3 * self.rank] = (ck & 0x3f_ffff) as f32;
+        buf[3 * self.rank + 1] = ((ck >> 22) & 0x3f_ffff) as f32;
+        buf[3 * self.rank + 2] = (ck >> 44) as f32;
+        coll.all_reduce_sum(&mut buf);
+
+        if self.rank == 0 {
+            let slices: Vec<SliceInfo> = (0..ranks)
+                .map(|r| SliceInfo {
+                    rank: r,
+                    file: slice_file(step_done, r),
+                    flat: self.part.elem_range(r),
+                    state_elems: self.part.state_slice_elems(self.opt_name, r),
+                    checksum: (buf[3 * r] as u64)
+                        | ((buf[3 * r + 1] as u64) << 22)
+                        | ((buf[3 * r + 2] as u64) << 44),
+                })
+                .collect();
+            Manifest {
+                artifact: SHARD_ARTIFACT.to_string(),
+                optimizer: self.opt_name.to_string(),
+                step: step_done,
+                ranks,
+                shapes: self.part.slots().iter().map(|s| s.shape.clone()).collect(),
+                param_elems: self.part.total_elems(),
+                state_layout: LAYOUT_CANONICAL.to_string(),
+                slices,
+            }
+            .save(&dir)
+            .with_context(|| format!("committing checkpoint manifest in {dir:?}"))?;
+        }
+        // Barrier 2: nobody races past an uncommitted manifest (rank 0
+        // contributes only after the rename above).
+        coll.all_reduce_sum(&mut [0.0f32]);
+        // Only now is it safe to drop the previous generation: the new
+        // manifest is committed, and each rank touches its own files
+        // only. (A crash before this point leaves harmless orphans the
+        // next successful save cleans up.)
+        let keep = checkpoint::slice_file(step_done, self.rank);
+        checkpoint::prune_old_slices(&dir, self.rank, &keep);
+        self.save_secs += t0.elapsed().as_secs_f64();
+        Ok(())
+    }
+}

@@ -110,6 +110,23 @@ pub fn mesh(ranks: usize) -> Result<Vec<Comm<InProc>>> {
     Ok(InProc::mesh(ranks)?.into_iter().map(Comm::new).collect())
 }
 
+/// The 1/ranks mean scale every averaging collective applies. Power-of-
+/// two rank counts multiply by the (exact) reciprocal; everything else
+/// takes a correctly-rounded DIVIDE — for a power of two the two are
+/// bit-identical, and the divide recovers exact multiples exactly
+/// (`(k·g)/k == g` when `k·g` is exact), which makes the mean of
+/// identical per-rank contributions rank-count-invariant. Elastic
+/// checkpointing's save-at-M/resume-at-N parity rests on this: a
+/// rank-replicated gradient source yields bit-identical trajectories at
+/// every rank count whose tree sums stay exact.
+fn mean_scale(bucket: &mut [f32], ranks: usize) {
+    if ranks.is_power_of_two() {
+        crate::tensor::kernels::scale(bucket, 1.0 / ranks as f32);
+    } else {
+        crate::tensor::kernels::divide(bucket, ranks as f32);
+    }
+}
+
 impl<T: Transport> Comm<T> {
     pub fn new(transport: T) -> Comm<T> {
         Comm {
@@ -200,14 +217,13 @@ impl<T: Transport> Comm<T> {
         }
     }
 
-    /// All-reduce followed by a 1/ranks scale — the gradient-averaging
-    /// collective. Every rank applies the identical scale to the identical
-    /// sum, so replicas stay bit-equal.
+    /// All-reduce followed by the 1/ranks mean scale — the
+    /// gradient-averaging collective. Every rank applies the identical
+    /// scale to the identical sum, so replicas stay bit-equal.
     pub fn all_reduce_mean(&mut self, buf: &mut [f32], bucket_elems: usize) {
         self.all_reduce_sum(buf, bucket_elems);
         if self.ranks() > 1 {
-            let inv = 1.0 / self.ranks() as f32;
-            crate::tensor::kernels::scale(buf, inv);
+            mean_scale(buf, self.ranks());
         }
     }
 
@@ -222,7 +238,7 @@ impl<T: Transport> Comm<T> {
             return;
         }
         let be = bucket_elems.max(1);
-        let inv = 1.0 / self.ranks() as f32;
+        let ranks = self.ranks();
         let mut start = 0;
         while start < buf.len() {
             let end = (start + be).min(buf.len());
@@ -238,7 +254,7 @@ impl<T: Transport> Comm<T> {
                 }
             }
             if self.rank() == owner {
-                crate::tensor::kernels::scale(bucket, inv);
+                mean_scale(bucket, ranks);
             }
             start = end;
         }
@@ -374,6 +390,30 @@ mod tests {
             let want = (ranks * (ranks + 1) / 2) as f32;
             for (r, buf) in out.iter().enumerate() {
                 assert!(buf.iter().all(|&x| x == want), "ranks={ranks} rank={r}: {buf:?}");
+            }
+        }
+    }
+
+    /// The elastic-resume foundation: when every rank contributes the
+    /// SAME buffer (low two mantissa bits clear, so k·g is exact for
+    /// k ≤ 4), the mean IS the contribution bit-for-bit at every rank
+    /// count ≤ 4 — power-of-two or not. The non-power-of-two path
+    /// divides; multiplying by fl(1/3) would be off by an ulp.
+    #[test]
+    fn mean_of_identical_contributions_is_exact() {
+        let proto: Vec<f32> = (0..17)
+            .map(|i| f32::from_bits((i as f32 * 0.37 - 2.1).to_bits() & !0b11))
+            .collect();
+        for ranks in [1usize, 2, 3, 4] {
+            let out = on_mesh(ranks, |mut c| {
+                let mut buf = proto.clone();
+                c.all_reduce_mean(&mut buf, 4);
+                buf
+            });
+            for buf in &out {
+                for (x, w) in buf.iter().zip(&proto) {
+                    assert_eq!(x.to_bits(), w.to_bits(), "ranks={ranks}");
+                }
             }
         }
     }

@@ -79,6 +79,7 @@ use anyhow::{ensure, Result};
 use crate::optim::{Collective, Optimizer, Schedule, ShardedOptimizer};
 use crate::tensor::Tensor;
 
+use super::ckpt::{CkptConfig, RankCkpt};
 use super::collective::{mesh, Comm, Phase, Seg};
 use super::partition::{Partition, Piece};
 use super::transport::Transport;
@@ -170,6 +171,11 @@ pub struct ShardConfig {
     pub steps: usize,
     /// Gradient/parameter exchange strategy (never changes results).
     pub pipeline: Pipeline,
+    /// Elastic checkpointing: save per-rank slices mid-run / at the end,
+    /// resume from a checkpoint saved at any rank count. Never changes
+    /// results — saving is read-only, and a resumed run is byte-identical
+    /// to the uninterrupted one (rust/tests/elastic_resume.rs).
+    pub ckpt: CkptConfig,
 }
 
 impl ShardConfig {
@@ -180,7 +186,13 @@ impl ShardConfig {
 
 impl Default for ShardConfig {
     fn default() -> Self {
-        ShardConfig { ranks: 2, bucket_kb: 64, steps: 100, pipeline: Pipeline::default() }
+        ShardConfig {
+            ranks: 2,
+            bucket_kb: 64,
+            steps: 100,
+            pipeline: Pipeline::default(),
+            ckpt: CkptConfig::default(),
+        }
     }
 }
 
@@ -207,6 +219,11 @@ pub struct ShardOutcome {
     pub imbalance: f64,
     /// Which collective backend carried the run ("inproc", "tcp").
     pub transport: &'static str,
+    /// Slowest rank's total checkpoint-save wall time (0 when the run
+    /// saved nothing) — the no-gather save path's O(state/N) witness.
+    pub save_secs: f64,
+    /// Slowest rank's resume (load + reshard) wall time.
+    pub load_secs: f64,
 }
 
 impl ShardOutcome {
@@ -255,6 +272,10 @@ pub struct RankOutcome {
     pub max_rank_elems: usize,
     /// Partition balance: max_rank_elems over the ideal total/ranks mean.
     pub imbalance: f64,
+    /// THIS rank's total checkpoint-save wall time (0 = no saves).
+    pub save_secs: f64,
+    /// THIS rank's resume (load + reshard) wall time.
+    pub load_secs: f64,
 }
 
 impl RankOutcome {
@@ -275,6 +296,8 @@ struct RankOut {
     reduce_bytes: u64,
     gather_bytes: u64,
     opt_bytes: u64,
+    save_secs: f64,
+    load_secs: f64,
 }
 
 /// Where tensor data lands in the reduce/gather segments. Under row-split
@@ -425,23 +448,24 @@ pub fn train_with_comms<T: Transport>(
         lanes.push((rank, comm, sopt, replica, task.init_params()));
     }
 
-    let bucket = cfg.bucket_elems();
-    let steps = cfg.steps;
-    let pipeline = cfg.pipeline;
     let t0 = std::time::Instant::now();
     let mut outs: Vec<RankOut> = std::thread::scope(|s| {
         let part = &part;
+        let cfg = &*cfg;
         let handles: Vec<_> = lanes
             .into_iter()
             .map(|(rank, comm, sopt, replica, init)| {
                 let schedule = schedule.clone();
                 s.spawn(move || {
-                    run_rank(rank, part, comm, sopt, replica, init, &schedule, steps, bucket, pipeline)
+                    run_rank(rank, part, comm, sopt, replica, init, &schedule, cfg, opt)
                 })
             })
             .collect();
-        handles.into_iter().map(|h| h.join().expect("replica thread panicked")).collect()
-    });
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("replica thread panicked"))
+            .collect::<Result<Vec<RankOut>>>()
+    })?;
     let wall_secs = t0.elapsed().as_secs_f64();
 
     debug_assert!(
@@ -452,6 +476,8 @@ pub fn train_with_comms<T: Transport>(
     let reduce_bytes = outs.iter().map(|o| o.reduce_bytes).sum();
     let gather_bytes = outs.iter().map(|o| o.gather_bytes).sum();
     let opt_reduce_bytes = outs.iter().map(|o| o.opt_bytes).sum();
+    let save_secs = outs.iter().map(|o| o.save_secs).fold(0.0, f64::max);
+    let load_secs = outs.iter().map(|o| o.load_secs).fold(0.0, f64::max);
     let first = outs.swap_remove(0);
     Ok(ShardOutcome {
         losses: first.losses,
@@ -464,6 +490,8 @@ pub fn train_with_comms<T: Transport>(
         max_rank_elems: part.max_rank_elems(),
         imbalance: part.imbalance(),
         transport,
+        save_secs,
+        load_secs,
     })
 }
 
@@ -495,18 +523,7 @@ pub fn train_rank<T: Transport>(
     let sopt = ShardedOptimizer::new(opt, &part, rank)?;
     let replica = task.replica(rank, cfg.ranks)?;
     let t0 = std::time::Instant::now();
-    let out = run_rank(
-        rank,
-        &part,
-        comm,
-        sopt,
-        replica,
-        task.init_params(),
-        schedule,
-        cfg.steps,
-        cfg.bucket_elems(),
-        cfg.pipeline,
-    );
+    let out = run_rank(rank, &part, comm, sopt, replica, task.init_params(), schedule, cfg, opt)?;
     Ok(RankOutcome {
         rank,
         ranks: cfg.ranks,
@@ -520,6 +537,8 @@ pub fn train_rank<T: Transport>(
         opt_reduce_bytes: out.opt_bytes,
         max_rank_elems: part.max_rank_elems(),
         imbalance: part.imbalance(),
+        save_secs: out.save_secs,
+        load_secs: out.load_secs,
     })
 }
 
@@ -532,19 +551,18 @@ fn run_rank<T: Transport>(
     replica: Box<dyn Replica>,
     params: Vec<Tensor>,
     schedule: &Schedule,
-    steps: usize,
-    bucket: usize,
-    pipeline: Pipeline,
-) -> RankOut {
-    match pipeline {
+    cfg: &ShardConfig,
+    opt_name: &str,
+) -> Result<RankOut> {
+    match cfg.pipeline {
         Pipeline::AllReduce => {
-            run_rank_allreduce(rank, part, comm, opt, replica, params, schedule, steps, bucket)
+            run_rank_allreduce(rank, part, comm, opt, replica, params, schedule, cfg, opt_name)
         }
         Pipeline::ReduceScatter => {
-            run_rank_reduce_scatter(rank, part, comm, opt, replica, params, schedule, steps, bucket)
+            run_rank_reduce_scatter(rank, part, comm, opt, replica, params, schedule, cfg, opt_name)
         }
         Pipeline::Overlap => {
-            run_rank_overlap(rank, part, comm, opt, replica, params, schedule, steps, bucket)
+            run_rank_overlap(rank, part, comm, opt, replica, params, schedule, cfg, opt_name)
         }
     }
 }
@@ -560,21 +578,24 @@ fn run_rank_allreduce<T: Transport>(
     mut replica: Box<dyn Replica>,
     mut params: Vec<Tensor>,
     schedule: &Schedule,
-    steps: usize,
-    bucket: usize,
-) -> RankOut {
+    cfg: &ShardConfig,
+    opt_name: &str,
+) -> Result<RankOut> {
     debug_assert_eq!(rank, comm.rank());
+    let (steps, bucket) = (cfg.steps, cfg.bucket_elems());
     let ranks = comm.ranks();
     let slots = part.slots();
     let total = part.total_elems();
     let my_pieces = part.pieces(rank);
+    let mut ck = RankCkpt::new(&cfg.ckpt, opt_name, part, rank);
+    let start = ck.resume(&mut params, &mut opt, steps)?;
     let mut grads: Vec<Tensor> = slots.iter().map(|s| Tensor::zeros(&s.shape)).collect();
     // Flat exchange buffer: gradients + one trailing loss slot (the loss
     // rides the same reduce, so every rank sees the global mean for free).
     let mut flat = vec![0.0f32; total + 1];
-    let mut losses = Vec::with_capacity(steps);
+    let mut losses = Vec::with_capacity(steps - start);
 
-    for step in 0..steps {
+    for step in start..steps {
         let loss = replica.grad(&params, step, &mut grads);
         for (slot, g) in slots.iter().zip(&grads) {
             flat[slot.offset..slot.offset + slot.elems].copy_from_slice(g.data());
@@ -600,16 +621,24 @@ fn run_rank_allreduce<T: Transport>(
         for (slot, p) in slots.iter().zip(params.iter_mut()) {
             p.data_mut().copy_from_slice(&flat[slot.offset..slot.offset + slot.elems]);
         }
+
+        if ck.save_due(step, steps) {
+            comm.set_phase(Phase::Opt);
+            let mut coll = CommCollective { comm: &mut comm, bucket };
+            ck.save(step + 1, &params, &opt, &mut coll)?;
+        }
     }
 
-    RankOut {
+    Ok(RankOut {
         losses,
         params,
         state_bytes: opt.state_overhead_bytes(),
         reduce_bytes: comm.phase_bytes(Phase::Reduce),
         gather_bytes: comm.phase_bytes(Phase::Gather),
         opt_bytes: comm.phase_bytes(Phase::Opt),
-    }
+        save_secs: ck.save_secs,
+        load_secs: ck.load_secs,
+    })
 }
 
 /// The default pipeline: reduce-scatter the gradient (each rank receives
@@ -625,19 +654,22 @@ fn run_rank_reduce_scatter<T: Transport>(
     mut replica: Box<dyn Replica>,
     mut params: Vec<Tensor>,
     schedule: &Schedule,
-    steps: usize,
-    bucket: usize,
-) -> RankOut {
+    cfg: &ShardConfig,
+    opt_name: &str,
+) -> Result<RankOut> {
     debug_assert_eq!(rank, comm.rank());
+    let (steps, bucket) = (cfg.steps, cfg.bucket_elems());
     let slots = part.slots();
     let total = part.total_elems();
     let lay = Layout::plan(part);
     let my_pieces = part.pieces(rank);
+    let mut ck = RankCkpt::new(&cfg.ckpt, opt_name, part, rank);
+    let start = ck.resume(&mut params, &mut opt, steps)?;
     let mut grads: Vec<Tensor> = slots.iter().map(|s| Tensor::zeros(&s.shape)).collect();
     let mut flat = vec![0.0f32; total + 1];
-    let mut losses = Vec::with_capacity(steps);
+    let mut losses = Vec::with_capacity(steps - start);
 
-    for step in 0..steps {
+    for step in start..steps {
         let loss = replica.grad(&params, step, &mut grads);
         for (slot, g) in slots.iter().zip(&grads) {
             flat[slot.offset..slot.offset + slot.elems].copy_from_slice(g.data());
@@ -661,16 +693,24 @@ fn run_rank_reduce_scatter<T: Transport>(
             p.data_mut().copy_from_slice(&flat[slot.offset..slot.offset + slot.elems]);
         }
         losses.push(flat[total] as f64);
+
+        if ck.save_due(step, steps) {
+            comm.set_phase(Phase::Opt);
+            let mut coll = CommCollective { comm: &mut comm, bucket };
+            ck.save(step + 1, &params, &opt, &mut coll)?;
+        }
     }
 
-    RankOut {
+    Ok(RankOut {
         losses,
         params,
         state_bytes: opt.state_overhead_bytes(),
         reduce_bytes: comm.phase_bytes(Phase::Reduce),
         gather_bytes: comm.phase_bytes(Phase::Gather),
         opt_bytes: comm.phase_bytes(Phase::Opt),
-    }
+        save_secs: ck.save_secs,
+        load_secs: ck.load_secs,
+    })
 }
 
 /// Comm-thread protocol for the overlap pipeline. Buffers travel by move
@@ -750,9 +790,10 @@ fn run_rank_overlap<T: Transport>(
     mut replica: Box<dyn Replica>,
     mut params: Vec<Tensor>,
     schedule: &Schedule,
-    steps: usize,
-    bucket: usize,
-) -> RankOut {
+    cfg: &ShardConfig,
+    opt_name: &str,
+) -> Result<RankOut> {
+    let (steps, bucket) = (cfg.steps, cfg.bucket_elems());
     let slots = part.slots();
     let total = part.total_elems();
     let lay = Layout::plan(part);
@@ -762,8 +803,12 @@ fn run_rank_overlap<T: Transport>(
     // exchange share one source of truth.
     let my_range = opt.owned_elem_range();
     debug_assert_eq!(my_range, part.elem_range(rank));
+    // Resume before the comm thread exists: pure local file reads, no
+    // collective involved.
+    let mut ck = RankCkpt::new(&cfg.ckpt, opt_name, part, rank);
+    let start = ck.resume(&mut params, &mut opt, steps)?;
     let mut grads: Vec<Tensor> = slots.iter().map(|s| Tensor::zeros(&s.shape)).collect();
-    let mut losses = Vec::with_capacity(steps);
+    let mut losses = Vec::with_capacity(steps - start);
 
     std::thread::scope(|s| {
         let (cmd_tx, cmd_rx) = channel::<Cmd>();
@@ -792,7 +837,7 @@ fn run_rank_overlap<T: Transport>(
         let mut remaining = vec![0usize; lay.segs.len()];
         let mut staging: Vec<Vec<f32>> = vec![Vec::new(); lay.segs.len()];
 
-        for step in 0..steps {
+        for step in start..steps {
             remaining.copy_from_slice(&lay.pieces_in_seg);
             for (si, seg) in lay.segs.iter().enumerate() {
                 staging[si] = if lay.pieces_in_seg[si] > 0 {
@@ -889,19 +934,27 @@ fn run_rank_overlap<T: Transport>(
             }
             losses.push(gathered[total] as f64);
             spare_flat = gathered;
+
+            if ck.save_due(step, steps) {
+                // the barriers ride the comm thread in command order, so
+                // the commit protocol is identical to the sync pipelines
+                ck.save(step + 1, &params, &opt, &mut coll)?;
+            }
         }
 
         drop(coll);
         drop(cmd_tx);
         let (reduce_bytes, gather_bytes, opt_bytes) = worker.join().expect("comm thread panicked");
-        RankOut {
+        Ok(RankOut {
             losses,
             params,
             state_bytes: opt.state_overhead_bytes(),
             reduce_bytes,
             gather_bytes,
             opt_bytes,
-        }
+            save_secs: ck.save_secs,
+            load_secs: ck.load_secs,
+        })
     })
 }
 
@@ -988,7 +1041,13 @@ mod tests {
     fn engine_runs_every_optimizer_on_every_pipeline() {
         let task = MlpTask::new(6, 8, 2, 3, 32, 8, 5);
         for pipeline in [Pipeline::AllReduce, Pipeline::ReduceScatter, Pipeline::Overlap] {
-            let cfg = ShardConfig { ranks: 2, bucket_kb: 1, steps: 4, pipeline };
+            let cfg = ShardConfig {
+                ranks: 2,
+                bucket_kb: 1,
+                steps: 4,
+                pipeline,
+                ..ShardConfig::default()
+            };
             for name in crate::optim::ALL {
                 let out = train(&task, name, &Schedule::Constant { eta0: 1e-3 }, &cfg)
                     .unwrap_or_else(|e| panic!("{name}/{}: {e:#}", pipeline.name()));
@@ -1008,7 +1067,13 @@ mod tests {
         let task = MlpTask::new(8, 12, 2, 4, 64, 24, 41);
         let sched = Schedule::Constant { eta0: 5e-3 };
         let run = |pipeline| {
-            let cfg = ShardConfig { ranks: 3, bucket_kb: 1, steps: 10, pipeline };
+            let cfg = ShardConfig {
+                ranks: 3,
+                bucket_kb: 1,
+                steps: 10,
+                pipeline,
+                ..ShardConfig::default()
+            };
             train(&task, "alada", &sched, &cfg).expect("train")
         };
         let base = run(Pipeline::AllReduce);
@@ -1031,7 +1096,8 @@ mod tests {
         let sched = Schedule::Constant { eta0: 5e-3 };
         let ranks = 4;
         let run = |pipeline| {
-            let cfg = ShardConfig { ranks, bucket_kb: 1, steps: 6, pipeline };
+            let cfg =
+                ShardConfig { ranks, bucket_kb: 1, steps: 6, pipeline, ..ShardConfig::default() };
             train(&task, "sgd", &sched, &cfg).expect("train")
         };
         let ar = run(Pipeline::AllReduce);
@@ -1146,7 +1212,13 @@ mod tests {
         let task = MlpTask::new(4, 6, 1, 2, 24, 12, 13);
         let sched = Schedule::Constant { eta0: 1e-2 };
         let run = |pipeline| {
-            let cfg = ShardConfig { ranks: 12, bucket_kb: 1, steps: 5, pipeline };
+            let cfg = ShardConfig {
+                ranks: 12,
+                bucket_kb: 1,
+                steps: 5,
+                pipeline,
+                ..ShardConfig::default()
+            };
             train(&task, "alada", &sched, &cfg).expect("train")
         };
         let a = run(Pipeline::ReduceScatter);

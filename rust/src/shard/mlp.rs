@@ -33,6 +33,15 @@ pub struct MlpTask {
     n_samples: usize,
     batch: usize,
     seed: u64,
+    /// Replicated-batch mode: EVERY rank computes the full global batch
+    /// instead of a disjoint micro-slice. The per-rank contributions are
+    /// then bit-identical, and the engine's mean of k identical values
+    /// is exact for power-of-two rank counts (and for any k whose sum
+    /// k·g stays exact — see shard/collective.rs `mean_scale`), so the
+    /// trajectory becomes rank-count-invariant: the foundation of the
+    /// elastic-resume `cmp` gates (save@M == resume@N cross-checks need
+    /// runs at M and N to agree bit-for-bit in the first place).
+    replicate_batch: bool,
     features: Tensor,
     targets: Tensor,
 }
@@ -53,7 +62,26 @@ impl MlpTask {
         let features = Tensor::from_fn(&[n_samples, dim], |_| rng.normal());
         let teacher = init_net(dim, hidden, depth, out, &mut rng);
         let targets = forward(&teacher, &features, depth).1;
-        MlpTask { dim, hidden, depth, out, n_samples, batch, seed, features, targets }
+        MlpTask {
+            dim,
+            hidden,
+            depth,
+            out,
+            n_samples,
+            batch,
+            seed,
+            replicate_batch: false,
+            features,
+            targets,
+        }
+    }
+
+    /// Switch to replicated-batch mode (`shard-train --same-batch`):
+    /// every rank computes the whole global batch, making the trajectory
+    /// independent of the rank count — see the field docs above.
+    pub fn with_replicated_batch(mut self) -> MlpTask {
+        self.replicate_batch = true;
+        self
     }
 
     pub fn global_batch(&self) -> usize {
@@ -99,12 +127,18 @@ impl ShardTask for MlpTask {
 
     fn replica(&self, rank: usize, ranks: usize) -> Result<Box<dyn Replica>> {
         ensure!(ranks >= 1 && rank < ranks, "bad rank {rank} of {ranks}");
-        ensure!(
-            self.batch % ranks == 0,
-            "global batch {} must divide evenly across {ranks} ranks",
-            self.batch
-        );
-        let micro = self.batch / ranks;
+        // Replicated-batch mode: every rank is "rank 0 of 1" over the
+        // full batch (no divisibility constraint — nothing is split).
+        let (rank, micro) = if self.replicate_batch {
+            (0, self.batch)
+        } else {
+            ensure!(
+                self.batch % ranks == 0,
+                "global batch {} must divide evenly across {ranks} ranks",
+                self.batch
+            );
+            (rank, self.batch / ranks)
+        };
         // Every step's index list is recomputed from (seed, step), so the
         // replica only needs its own copy of the dataset.
         Ok(Box::new(MlpReplica {
@@ -116,6 +150,7 @@ impl ShardTask for MlpTask {
                 n_samples: self.n_samples,
                 batch: self.batch,
                 seed: self.seed,
+                replicate_batch: self.replicate_batch,
                 features: self.features.clone(),
                 targets: self.targets.clone(),
             },
@@ -367,5 +402,27 @@ mod tests {
     fn uneven_split_is_rejected() {
         let task = MlpTask::new(4, 5, 1, 2, 32, 9, 2);
         assert!(task.replica(0, 2).is_err());
+    }
+
+    /// Replicated-batch mode: every rank computes the identical full
+    /// global batch (the elastic-resume rank-invariance foundation), and
+    /// the batch no longer needs to divide by the rank count.
+    #[test]
+    fn replicated_batch_gives_every_rank_the_full_batch() {
+        let task = MlpTask::new(4, 5, 1, 2, 32, 8, 2).with_replicated_batch();
+        let params = task.init_params();
+        let mut g0: Vec<Tensor> = task.shapes().iter().map(|s| Tensor::zeros(s)).collect();
+        let mut g2: Vec<Tensor> = g0.clone();
+        // 3 ranks does not divide batch 8 — allowed in this mode
+        let l0 = task.replica(0, 3).unwrap().grad(&params, 1, &mut g0);
+        let l2 = task.replica(2, 3).unwrap().grad(&params, 1, &mut g2);
+        assert_eq!(l0.to_bits(), l2.to_bits());
+        assert_eq!(g0, g2);
+        // and the full-batch gradient equals rank 0 of 1 on the plain task
+        let plain = MlpTask::new(4, 5, 1, 2, 32, 8, 2);
+        let mut gf: Vec<Tensor> = task.shapes().iter().map(|s| Tensor::zeros(s)).collect();
+        let lf = plain.replica(0, 1).unwrap().grad(&params, 1, &mut gf);
+        assert_eq!(lf.to_bits(), l0.to_bits());
+        assert_eq!(gf, g0);
     }
 }

@@ -40,19 +40,26 @@
 //!   (rust/tests/shard_parity.rs);
 //! * per-rank `state_overhead_bytes` sums to the unsharded total plus
 //!   64-byte alignment padding, plus one replicated (q, v₀) per extra
-//!   owner of a row-split tensor.
+//!   owner of a row-split tensor;
+//! * checkpoints are elastic (`ckpt`): every rank writes its own slice
+//!   concurrently (no gather, atomic commit, manifest last), and a
+//!   checkpoint saved at M ranks restores at any N — `partition`'s
+//!   `plan_reshard` maps the canonical per-piece state layout across
+//!   chunk-aligned cuts, byte-exactly (rust/tests/elastic_resume.rs).
 
+pub mod ckpt;
 pub mod collective;
 pub mod engine;
 pub mod mlp;
 pub mod partition;
 pub mod transport;
 
+pub use ckpt::{CkptConfig, SHARD_ARTIFACT};
 pub use collective::{mesh, BytesMeter, Comm, Phase, Seg};
 pub use engine::{
     train, train_rank, train_with_comms, Pipeline, RankOutcome, Replica, ShardConfig,
     ShardOutcome, ShardTask,
 };
 pub use mlp::MlpTask;
-pub use partition::{Partition, Piece};
+pub use partition::{plan_reshard, Partition, Piece, StateCopy};
 pub use transport::{InProc, Tcp, Transport};

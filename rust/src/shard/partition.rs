@@ -28,9 +28,13 @@
 
 use std::ops::Range;
 
+use anyhow::{ensure, Result};
+
 use crate::optim::alada::{n_row_chunks, row_chunk};
 use crate::optim::reshape::balanced_split;
-use crate::optim::{partition_granularity, PartitionGranularity};
+use crate::optim::{
+    partition_granularity, state_fields, tensor_state_elems, PartitionGranularity, StateField,
+};
 
 /// One tensor's place in the flat parameter space.
 #[derive(Clone, Debug)]
@@ -261,6 +265,181 @@ impl Partition {
         }
         counts
     }
+
+    /// Persistent-state elements optimizer `opt` keeps for `piece` under
+    /// this partition — the piece's section length in the canonical
+    /// per-rank state slice (row-granular fields for the row-split
+    /// family, the whole-tensor chunk for the tensor-aligned one).
+    pub fn piece_state_elems(&self, opt: &str, piece: &Piece) -> usize {
+        match partition_granularity(opt) {
+            PartitionGranularity::Row => state_fields(opt)
+                .iter()
+                .map(|&f| field_elems(f, piece.rows.len(), piece.cols))
+                .sum(),
+            PartitionGranularity::Tensor => {
+                tensor_state_elems(opt, &self.slots[piece.tensor].shape)
+            }
+        }
+    }
+
+    /// Canonical length (f32 elements) of `rank`'s checkpoint state
+    /// slice: per owned piece (ascending), each of the optimizer's
+    /// fields in `optim::state_fields` order. Agrees bit-for-bit with
+    /// what `ShardedOptimizer::export_state` emits for the same rank
+    /// (pinned in optim/sharded.rs tests).
+    pub fn state_slice_elems(&self, opt: &str, rank: usize) -> usize {
+        self.pieces(rank).iter().map(|p| self.piece_state_elems(opt, p)).sum()
+    }
+}
+
+/// Elements of one state field over a `rows × cols` piece window.
+fn field_elems(field: StateField, rows: usize, cols: usize) -> usize {
+    match field {
+        StateField::Elem => rows * cols,
+        StateField::Row => rows,
+        StateField::SharedCols => cols,
+        StateField::SharedScalar => 1,
+    }
+}
+
+/// One contiguous move of a state reshard: `src` is an element range in
+/// saved rank `src_rank`'s canonical state slice, `dst` the target range
+/// in the restoring rank's slice.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct StateCopy {
+    pub src_rank: usize,
+    pub src: Range<usize>,
+    pub dst: Range<usize>,
+}
+
+/// Plan the optimizer-state reshard for `rank` of partition `new` from
+/// slices saved under partition `old` (any rank counts M → N over the
+/// same tensors and optimizer).
+///
+/// Both partitions cut at the same fixed chunk boundaries
+/// (`optim::alada::row_chunk` is a pure function of each tensor's full
+/// row count), so every per-row and per-element field of the new rank's
+/// pieces is recovered by intersecting balanced-split row ranges with
+/// the saved pieces — each element of the target slice is sourced from
+/// EXACTLY one saved slice (the tiling proptest in rust/tests pins
+/// this). Replicated fields (row-split Alada's q and v₀) are
+/// bit-identical on every saved owner, so the plan takes the lowest
+/// owning rank's copy; tensor-aligned optimizers move whole per-tensor
+/// chunks from their unique saved owner.
+pub fn plan_reshard(
+    opt: &str,
+    old: &Partition,
+    new: &Partition,
+    rank: usize,
+) -> Result<Vec<StateCopy>> {
+    ensure!(rank < new.ranks, "reshard target rank {rank} out of range for {}", new.ranks);
+    ensure!(
+        old.slots.len() == new.slots.len()
+            && old.slots.iter().zip(&new.slots).all(|(a, b)| a.shape == b.shape),
+        "reshard: saved partition covers different tensors than the restoring one"
+    );
+    let gran = partition_granularity(opt);
+    ensure!(
+        old.granularity == gran && new.granularity == gran,
+        "reshard: partitions were not planned for optimizer {opt:?} (plan with Partition::plan_for)"
+    );
+
+    // Index the saved slices: per tensor, every saved (rank, rows) piece
+    // with its per-field offsets inside that rank's state slice
+    // (ascending rank, so `first()` below is the lowest owner).
+    struct SavedPiece {
+        rank: usize,
+        rows: Range<usize>,
+        field_offs: Vec<usize>,
+    }
+    let mut saved: Vec<Vec<SavedPiece>> = vec![Vec::new(); old.slots.len()];
+    for r in 0..old.ranks {
+        let mut off = 0usize;
+        for p in old.pieces(r) {
+            let mut field_offs = Vec::new();
+            match gran {
+                PartitionGranularity::Row => {
+                    for &f in state_fields(opt) {
+                        field_offs.push(off);
+                        off += field_elems(f, p.rows.len(), p.cols);
+                    }
+                }
+                PartitionGranularity::Tensor => {
+                    field_offs.push(off);
+                    off += tensor_state_elems(opt, &old.slots[p.tensor].shape);
+                }
+            }
+            saved[p.tensor].push(SavedPiece { rank: r, rows: p.rows.clone(), field_offs });
+        }
+    }
+
+    let mut copies = Vec::new();
+    let mut dst = 0usize;
+    for piece in new.pieces(rank) {
+        let sp_list = &saved[piece.tensor];
+        ensure!(
+            !sp_list.is_empty(),
+            "reshard: saved partition owns nothing of tensor {}",
+            piece.tensor
+        );
+        match gran {
+            PartitionGranularity::Tensor => {
+                // whole-tensor chunks: exactly one saved owner
+                let sp = &sp_list[0];
+                ensure!(
+                    sp_list.len() == 1 && sp.rows == piece.rows,
+                    "reshard: tensor-aligned state of tensor {} is split",
+                    piece.tensor
+                );
+                let len = tensor_state_elems(opt, &new.slots[piece.tensor].shape);
+                if len > 0 {
+                    copies.push(StateCopy {
+                        src_rank: sp.rank,
+                        src: sp.field_offs[0]..sp.field_offs[0] + len,
+                        dst: dst..dst + len,
+                    });
+                }
+                dst += len;
+            }
+            PartitionGranularity::Row => {
+                for (fi, &f) in state_fields(opt).iter().enumerate() {
+                    match f {
+                        StateField::Elem | StateField::Row => {
+                            let unit = if f == StateField::Elem { piece.cols } else { 1 };
+                            for sp in sp_list {
+                                let lo = piece.rows.start.max(sp.rows.start);
+                                let hi = piece.rows.end.min(sp.rows.end);
+                                if lo < hi {
+                                    let s0 = sp.field_offs[fi] + (lo - sp.rows.start) * unit;
+                                    let d0 = dst + (lo - piece.rows.start) * unit;
+                                    let n = (hi - lo) * unit;
+                                    copies.push(StateCopy {
+                                        src_rank: sp.rank,
+                                        src: s0..s0 + n,
+                                        dst: d0..d0 + n,
+                                    });
+                                }
+                            }
+                            dst += field_elems(f, piece.rows.len(), piece.cols);
+                        }
+                        StateField::SharedCols | StateField::SharedScalar => {
+                            // replicated across owners; any copy is the copy
+                            let sp = &sp_list[0];
+                            let n = field_elems(f, piece.rows.len(), piece.cols);
+                            copies.push(StateCopy {
+                                src_rank: sp.rank,
+                                src: sp.field_offs[fi]..sp.field_offs[fi] + n,
+                                dst: dst..dst + n,
+                            });
+                            dst += n;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    debug_assert_eq!(dst, new.state_slice_elems(opt, rank));
+    Ok(copies)
 }
 
 /// Optimal contiguous min-max cuts: `sizes` split into `ranks` contiguous
@@ -512,6 +691,49 @@ mod tests {
         let got =
             (0..3).map(|r| sizes[cuts[r]..cuts[r + 1]].iter().sum::<usize>()).max().unwrap();
         assert_eq!(got, 100);
+    }
+
+    /// Reshard contract: for any M→N, every element of each restoring
+    /// rank's canonical state slice is sourced exactly once (the random
+    /// version over random tensor sets lives in rust/tests/proptests.rs).
+    #[test]
+    fn reshard_plan_tiles_the_target_slice() {
+        let shapes = vec![vec![40, 6], vec![12], vec![6, 4], vec![10]];
+        for opt in ["alada", "adam", "sgdm", "sgd", "adafactor", "sm3"] {
+            for (m, n) in [(1usize, 4usize), (4, 1), (2, 3), (3, 2), (4, 4), (2, 7)] {
+                let old = Partition::plan_for(opt, &shapes, m);
+                let new = Partition::plan_for(opt, &shapes, n);
+                for rank in 0..n {
+                    let plan = plan_reshard(opt, &old, &new, rank).unwrap();
+                    let mut covered = vec![0u8; new.state_slice_elems(opt, rank)];
+                    for c in &plan {
+                        assert_eq!(c.src.len(), c.dst.len(), "{opt} {m}->{n}");
+                        assert!(c.src_rank < m);
+                        assert!(c.src.end <= old.state_slice_elems(opt, c.src_rank));
+                        for i in c.dst.clone() {
+                            covered[i] += 1;
+                        }
+                    }
+                    assert!(
+                        covered.iter().all(|&x| x == 1),
+                        "{opt} {m}->{n} rank {rank}: target not tiled exactly once"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn reshard_rejects_mismatched_partitions() {
+        let a = Partition::plan_for("alada", &[vec![10, 4]], 2);
+        let b = Partition::plan_for("alada", &[vec![12, 4]], 2);
+        let err = plan_reshard("alada", &a, &b, 0).unwrap_err().to_string();
+        assert!(err.contains("different tensors"), "{err}");
+        // granularity mismatch: adafactor state needs tensor-aligned cuts
+        let rowp = Partition::plan(&[vec![10, 4]], 2);
+        assert!(plan_reshard("adafactor", &rowp, &rowp, 0).is_err());
+        // rank out of range
+        assert!(plan_reshard("alada", &a, &a, 2).is_err());
     }
 
     #[test]

@@ -115,6 +115,19 @@ pub fn scale(x: &mut [f32], s: f32) {
     }
 }
 
+/// Elementwise correctly-rounded divide (NOT multiply-by-reciprocal):
+/// `x[i] /= d`. Division by a small integer recovers an exact multiple
+/// exactly — `(k·g)/k == g` whenever `k·g` was computed exactly — which
+/// is what makes the gradient mean of identical per-rank contributions
+/// rank-count-invariant (the elastic-checkpoint parity contract; see
+/// shard/collective.rs). `x * (1/d)` does NOT have this property for
+/// non-power-of-two `d`.
+pub fn divide(x: &mut [f32], d: f32) {
+    for v in x.iter_mut() {
+        *v /= d;
+    }
+}
+
 /// Alada descent over one row (both phases): with û_j = max(p_i·q_j −
 /// sub, 0)·bc2_inv and m̂_j = m_j·bc1, x_j −= lr·m̂_j/√(û_j + ε).
 /// Branch-free (max compiles to a select), single fused pass.

@@ -1,22 +1,61 @@
-//! Checkpointing: packed params + optimizer state + step counter.
+//! Checkpointing: the sharded manifest + per-rank slice format, and the
+//! legacy single-blob format it replaced.
 //!
-//! Format: a one-line JSON header (artifact name, element counts, step)
-//! followed by the raw little-endian f32 params and opt-state vectors.
-//! The flat-packed artifact signature makes this trivially portable —
-//! a checkpoint written by any run restores into any session compiled
-//! from the same artifact.
+//! # Sharded format (v2) — a directory
 //!
-//! The header is untrusted input: element counts are validated against
-//! the session's expected sizes — and the payload length against the
-//! file size — *before* any payload allocation, so a corrupt or
-//! adversarial header fails with a clear error instead of a bogus
+//! ```text
+//! ckpt/
+//!   manifest.json              one-line JSON, written LAST (the commit)
+//!   slice-00000200-00000.bin   rank 0 at save step 200:
+//!                              header line + params + state f32s
+//!   slice-00000200-00001.bin   rank 1's slice …
+//! ```
+//!
+//! The manifest is self-describing: format version, artifact, optimizer,
+//! completed step count, rank count, full tensor shapes, and — per slice
+//! — the flat element range of the rank's parameter slice, its state
+//! length, and an FNV-1a checksum of the payload. Each rank writes its
+//! own slice **locally and concurrently** (no gather — the whole point:
+//! saving is O(state/N) wall time per rank, and works when ranks are
+//! separate OS processes); rank 0 alone writes the manifest, after every
+//! slice is on disk. Every file is written to a temp name and
+//! `rename`d, and slice names carry their save generation (step), so a
+//! crash mid-save can never leave a checkpoint that parses — AND never
+//! destroys the previously committed one: until the new manifest
+//! renames into place, the old manifest still references the old
+//! generation's intact slices. Superseded slices are pruned only after
+//! the commit. Any residual inconsistency (manual tampering, torn
+//! copies) fails the per-slice generation and checksum checks.
+//!
+//! Restoring may use a DIFFERENT rank count than saving: params are
+//! reassembled from all slices (they tile the flat space), and optimizer
+//! state is remapped by `shard::partition::plan_reshard` — the manifest's
+//! `state_layout: "canonical"` promises the per-piece field layout that
+//! planner cuts at. Session checkpoints (`save`/`load` below) write the
+//! same format as the N = 1 degenerate case with `state_layout:
+//! "opaque"` (the PJRT session's packed state blob, restorable only
+//! as-is).
+//!
+//! # Legacy format (v1) — a single file
+//!
+//! One JSON header line (now carrying `format_version: 1`; version-less
+//! headers from older saves are still accepted) followed by raw
+//! little-endian f32 params and opt-state vectors. `load` sniffs the
+//! path: directories restore through the manifest, files through
+//! `load_raw`.
+//!
+//! All headers and manifests are untrusted input: element counts are
+//! validated against the caller's expected sizes — and payload lengths
+//! against file sizes — *before* any payload allocation, so a corrupt or
+//! adversarial file fails with a clear error instead of a bogus
 //! multi-gigabyte allocation.
 
 use std::collections::BTreeMap;
 use std::io::{Read, Write};
+use std::ops::Range;
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 use crate::runtime::TrainSession;
 use crate::util::Json;
@@ -25,12 +64,398 @@ use crate::util::Json;
 /// must not turn into an unbounded read.
 const MAX_HEADER_BYTES: usize = 4096;
 
-/// Save a session's full training state.
-pub fn save<P: AsRef<Path>>(path: P, sess: &TrainSession) -> Result<()> {
-    save_raw(path, sess.name(), sess.t, &sess.params, &sess.opt_state)
+/// Largest manifest we accept — manifests grow with ranks × tensors
+/// (tens of bytes each), so even extreme runs stay far below this; a
+/// multi-gigabyte "manifest.json" is corruption, not a checkpoint, and
+/// must not turn into a matching allocation.
+const MAX_MANIFEST_BYTES: u64 = 16 << 20;
+
+/// Version of the legacy single-blob format (absent = pre-versioning,
+/// accepted; anything other than 1 is rejected with a clear error).
+pub const BLOB_VERSION: usize = 1;
+
+/// Version of the sharded manifest format.
+pub const MANIFEST_VERSION: usize = 2;
+
+/// Manifest file name inside a checkpoint directory — its presence (and
+/// parsability) IS the checkpoint's validity, which is why it commits
+/// last.
+pub const MANIFEST_FILE: &str = "manifest.json";
+
+/// `state_layout` of engine checkpoints: the canonical per-piece field
+/// layout `shard::partition::plan_reshard` can remap across rank counts.
+pub const LAYOUT_CANONICAL: &str = "canonical";
+
+/// `state_layout` of session checkpoints: one packed blob, restorable
+/// only at the same artifact and sizes (the N = 1 degenerate case).
+pub const LAYOUT_OPAQUE: &str = "opaque";
+
+/// Slice file name for `rank` at save generation `step`. The step is
+/// part of the name so a NEW save never overwrites the previous
+/// generation's slices in place: a crash anywhere before the manifest
+/// rename leaves the last committed checkpoint fully intact (its
+/// manifest still references the old file names). Superseded slices are
+/// pruned only AFTER the new manifest commits ([`prune_old_slices`]).
+pub fn slice_file(step: usize, rank: usize) -> String {
+    format!("slice-{step:08}-{rank:05}.bin")
 }
 
-/// Session-independent writer (also the test seam).
+/// Best-effort removal of `rank`'s slice files from superseded save
+/// generations — everything matching this rank's slice-name pattern
+/// except `keep`. Call only after the manifest referencing `keep` has
+/// committed; each rank prunes its own files only, so concurrent ranks
+/// never race. Orphans left by a crash between commit and prune are
+/// harmless (unreferenced) and get cleaned by the next successful save.
+pub fn prune_old_slices(dir: &Path, rank: usize, keep: &str) {
+    let suffix = format!("-{rank:05}.bin");
+    let Ok(entries) = std::fs::read_dir(dir) else {
+        return;
+    };
+    for e in entries.flatten() {
+        let name = e.file_name();
+        let Some(name) = name.to_str() else {
+            continue;
+        };
+        if name.starts_with("slice-") && name.ends_with(&suffix) && name != keep {
+            let _ = std::fs::remove_file(e.path());
+        }
+    }
+}
+
+/// One rank's slice as the manifest records it.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SliceInfo {
+    pub rank: usize,
+    pub file: String,
+    /// Flat element offsets of the rank's parameter slice (chunk-aligned
+    /// under the engine's partitions; slices tile `0..param_elems`).
+    pub flat: Range<usize>,
+    /// f32 elements of optimizer state in the slice.
+    pub state_elems: usize,
+    /// FNV-1a 64 over the payload bytes (params + state, LE order).
+    pub checksum: u64,
+}
+
+impl SliceInfo {
+    fn payload_bytes(&self) -> u64 {
+        4 * (self.flat.len() + self.state_elems) as u64
+    }
+}
+
+/// The self-describing checkpoint manifest.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Manifest {
+    pub artifact: String,
+    pub optimizer: String,
+    /// Completed optimizer steps at save time; a resume starts here.
+    pub step: usize,
+    /// Rank count the checkpoint was saved at.
+    pub ranks: usize,
+    /// Full parameter shapes, in flat packing order.
+    pub shapes: Vec<Vec<usize>>,
+    pub param_elems: usize,
+    /// [`LAYOUT_CANONICAL`] or [`LAYOUT_OPAQUE`].
+    pub state_layout: String,
+    /// One entry per rank, ascending.
+    pub slices: Vec<SliceInfo>,
+}
+
+impl Manifest {
+    /// The manifest entry for `rank`.
+    pub fn slice(&self, rank: usize) -> Result<&SliceInfo> {
+        self.slices
+            .get(rank)
+            .ok_or_else(|| anyhow::anyhow!("manifest has no slice for rank {rank}"))
+    }
+
+    /// Write the manifest atomically — the COMMIT of a save. Callers
+    /// must have renamed every slice into place first.
+    pub fn save(&self, dir: &Path) -> Result<()> {
+        std::fs::create_dir_all(dir)?;
+        let tmp = dir.join(format!("{MANIFEST_FILE}.tmp"));
+        std::fs::write(&tmp, self.to_json().to_string_compact())
+            .with_context(|| format!("writing {tmp:?}"))?;
+        std::fs::rename(&tmp, dir.join(MANIFEST_FILE))
+            .with_context(|| format!("committing {MANIFEST_FILE} in {dir:?}"))?;
+        Ok(())
+    }
+
+    /// Parse + validate the manifest of checkpoint directory `dir`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join(MANIFEST_FILE);
+        let len = std::fs::metadata(&path)
+            .with_context(|| format!("checkpoint manifest {path:?}"))?
+            .len();
+        ensure!(
+            len <= MAX_MANIFEST_BYTES,
+            "checkpoint manifest {path:?} is {len} bytes (limit {MAX_MANIFEST_BYTES}; corrupt?)"
+        );
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("checkpoint manifest {path:?}"))?;
+        let json = Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("checkpoint manifest {path:?}: {e}"))?;
+        Self::from_json(&json).with_context(|| format!("checkpoint manifest {path:?}"))
+    }
+
+    fn to_json(&self) -> Json {
+        let slices: Vec<Json> = self
+            .slices
+            .iter()
+            .map(|s| {
+                let mut o = BTreeMap::new();
+                o.insert("rank".to_string(), Json::Num(s.rank as f64));
+                o.insert("file".to_string(), Json::Str(s.file.clone()));
+                o.insert("flat_start".to_string(), Json::Num(s.flat.start as f64));
+                o.insert("flat_end".to_string(), Json::Num(s.flat.end as f64));
+                o.insert("state_elems".to_string(), Json::Num(s.state_elems as f64));
+                o.insert("checksum".to_string(), Json::Str(format!("{:016x}", s.checksum)));
+                Json::Obj(o)
+            })
+            .collect();
+        let shapes: Vec<Json> = self
+            .shapes
+            .iter()
+            .map(|s| Json::Arr(s.iter().map(|&d| Json::Num(d as f64)).collect()))
+            .collect();
+        let mut o = BTreeMap::new();
+        o.insert("format_version".to_string(), Json::Num(MANIFEST_VERSION as f64));
+        o.insert("artifact".to_string(), Json::Str(self.artifact.clone()));
+        o.insert("optimizer".to_string(), Json::Str(self.optimizer.clone()));
+        o.insert("step".to_string(), Json::Num(self.step as f64));
+        o.insert("ranks".to_string(), Json::Num(self.ranks as f64));
+        o.insert("param_elems".to_string(), Json::Num(self.param_elems as f64));
+        o.insert("state_layout".to_string(), Json::Str(self.state_layout.clone()));
+        o.insert("shapes".to_string(), Json::Arr(shapes));
+        o.insert("slices".to_string(), Json::Arr(slices));
+        Json::Obj(o)
+    }
+
+    fn from_json(j: &Json) -> Result<Manifest> {
+        // version gate FIRST: refuse formats from the future loudly
+        let v = header_count(j, "format_version")?;
+        ensure!(
+            v == MANIFEST_VERSION,
+            "unsupported checkpoint format_version {v} (this build reads sharded v{MANIFEST_VERSION} \
+             manifests and v{BLOB_VERSION} single-file blobs)"
+        );
+        let artifact = req_str(j, "artifact")?;
+        let optimizer = req_str(j, "optimizer")?;
+        let step = header_count(j, "step")?;
+        let ranks = header_count(j, "ranks")?;
+        ensure!(ranks >= 1, "manifest declares {ranks} ranks");
+        let param_elems = header_count(j, "param_elems")?;
+        let state_layout = req_str(j, "state_layout")?;
+        ensure!(
+            state_layout == LAYOUT_CANONICAL || state_layout == LAYOUT_OPAQUE,
+            "unknown state_layout {state_layout:?}"
+        );
+        let mut shapes = Vec::new();
+        for s in j.req("shapes")?.as_arr().context("shapes must be an array")? {
+            let dims = s.as_arr().context("each shape must be an array")?;
+            let mut shape = Vec::with_capacity(dims.len());
+            for d in dims {
+                shape.push(d.as_usize().context("shape dims must be counts")?);
+            }
+            shapes.push(shape);
+        }
+        let raw = j.req("slices")?.as_arr().context("slices must be an array")?;
+        ensure!(
+            raw.len() == ranks,
+            "manifest declares {ranks} ranks but {} slices",
+            raw.len()
+        );
+        let mut slices = Vec::with_capacity(raw.len());
+        for (i, s) in raw.iter().enumerate() {
+            let rank = header_count(s, "rank")?;
+            ensure!(rank == i, "slice {i} declares rank {rank}");
+            let start = header_count(s, "flat_start")?;
+            let end = header_count(s, "flat_end")?;
+            ensure!(start <= end && end <= param_elems, "slice {i} range {start}..{end}");
+            let checksum = u64::from_str_radix(req_str(s, "checksum")?.trim(), 16)
+                .context("slice checksum must be hex")?;
+            slices.push(SliceInfo {
+                rank,
+                file: req_str(s, "file")?,
+                flat: start..end,
+                state_elems: header_count(s, "state_elems")?,
+                checksum,
+            });
+        }
+        // the non-empty slices must tile [0, param_elems) in rank order —
+        // the partition invariant a restore's reassembly relies on
+        let mut next = 0usize;
+        for s in &slices {
+            if s.flat.is_empty() {
+                continue;
+            }
+            ensure!(
+                s.flat.start == next,
+                "slice ranges do not tile the parameter space (gap or overlap at {next})"
+            );
+            next = s.flat.end;
+        }
+        ensure!(next == param_elems, "slice ranges cover {next} of {param_elems} elements");
+        Ok(Manifest { artifact, optimizer, step, ranks, shapes, param_elems, state_layout, slices })
+    }
+}
+
+/// Write rank `rank`'s slice into `dir` atomically (temp name, then
+/// `rename`); returns the payload checksum for the manifest. Safe to
+/// call concurrently from every rank — file names are per-rank.
+pub fn write_slice(
+    dir: &Path,
+    rank: usize,
+    step: usize,
+    params: &[f32],
+    state: &[f32],
+) -> Result<u64> {
+    std::fs::create_dir_all(dir)?;
+    let name = slice_file(step, rank);
+    let tmp = dir.join(format!("{name}.tmp"));
+    let mut header = BTreeMap::new();
+    header.insert("format_version".to_string(), Json::Num(MANIFEST_VERSION as f64));
+    header.insert("rank".to_string(), Json::Num(rank as f64));
+    header.insert("step".to_string(), Json::Num(step as f64));
+    header.insert("param_elems".to_string(), Json::Num(params.len() as f64));
+    header.insert("state_elems".to_string(), Json::Num(state.len() as f64));
+    let mut ck = Fnv::new();
+    {
+        let mut f = std::io::BufWriter::new(
+            std::fs::File::create(&tmp).with_context(|| format!("creating {tmp:?}"))?,
+        );
+        writeln!(f, "{}", Json::Obj(header).to_string_compact())?;
+        write_f32s(&mut f, params, Some(&mut ck))?;
+        write_f32s(&mut f, state, Some(&mut ck))?;
+        f.flush()?;
+    }
+    std::fs::rename(&tmp, dir.join(&name)).with_context(|| format!("renaming {tmp:?}"))?;
+    Ok(ck.finish())
+}
+
+/// Read + validate rank `rank`'s slice against the manifest: file
+/// length, header (version, rank, save generation via `step`, sizes),
+/// and payload checksum all have to agree before the data is trusted.
+pub fn read_slice(dir: &Path, man: &Manifest, rank: usize) -> Result<(Vec<f32>, Vec<f32>)> {
+    let info = man.slice(rank)?;
+    let path = dir.join(&info.file);
+    let file_len =
+        std::fs::metadata(&path).with_context(|| format!("checkpoint slice {path:?}"))?.len();
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(&path).with_context(|| format!("checkpoint slice {path:?}"))?,
+    );
+    let header_line = read_header_line(&mut f)
+        .with_context(|| format!("checkpoint slice {path:?}"))?;
+    let header = Json::parse(std::str::from_utf8(&header_line)?)
+        .map_err(|e| anyhow::anyhow!("checkpoint slice {path:?} header: {e}"))?;
+    let v = header_count(&header, "format_version")?;
+    ensure!(v == MANIFEST_VERSION, "slice {path:?} has format_version {v}");
+    ensure!(header_count(&header, "rank")? == rank, "slice {path:?} belongs to another rank");
+    let step = header_count(&header, "step")?;
+    ensure!(
+        step == man.step,
+        "slice {path:?} is from step {step} but the manifest committed step {} \
+         (torn save: slices and manifest are from different generations)",
+        man.step
+    );
+    ensure!(
+        header_count(&header, "param_elems")? == info.flat.len()
+            && header_count(&header, "state_elems")? == info.state_elems,
+        "slice {path:?} sizes disagree with the manifest"
+    );
+    let expected = header_line.len() as u64 + 1 + info.payload_bytes();
+    ensure!(
+        file_len == expected,
+        "slice {path:?} is {file_len} bytes, manifest implies {expected} (truncated or corrupt)"
+    );
+    let mut ck = Fnv::new();
+    let params = read_f32s(&mut f, info.flat.len(), Some(&mut ck))?;
+    let state = read_f32s(&mut f, info.state_elems, Some(&mut ck))?;
+    ensure!(
+        ck.finish() == info.checksum,
+        "slice {path:?} payload checksum mismatch (corrupt or torn save)"
+    );
+    Ok((params, state))
+}
+
+/// True when `path` looks like a sharded checkpoint directory.
+pub fn is_sharded<P: AsRef<Path>>(path: P) -> bool {
+    path.as_ref().join(MANIFEST_FILE).is_file()
+}
+
+/// Save a session's full training state — the sharded format's N = 1
+/// degenerate case: one slice holding all params plus the session's
+/// opaque opt-state blob, then the manifest as the commit.
+pub fn save<P: AsRef<Path>>(path: P, sess: &TrainSession) -> Result<()> {
+    let dir = path.as_ref();
+    let step = usize::try_from(sess.t).context("negative session step counter")?;
+    let checksum = write_slice(dir, 0, step, &sess.params, &sess.opt_state)?;
+    let file = slice_file(step, 0);
+    Manifest {
+        artifact: sess.name().to_string(),
+        optimizer: "session".to_string(),
+        step,
+        ranks: 1,
+        shapes: vec![vec![sess.params.len()]],
+        param_elems: sess.params.len(),
+        state_layout: LAYOUT_OPAQUE.to_string(),
+        slices: vec![SliceInfo {
+            rank: 0,
+            file: file.clone(),
+            flat: 0..sess.params.len(),
+            state_elems: sess.opt_state.len(),
+            checksum,
+        }],
+    }
+    .save(dir)?;
+    // superseded generations go only after the commit above
+    prune_old_slices(dir, 0, &file);
+    Ok(())
+}
+
+/// Restore into an existing session. Directories restore through the
+/// manifest; plain files through the legacy single-blob loader.
+pub fn load<P: AsRef<Path>>(path: P, sess: &mut TrainSession) -> Result<()> {
+    let path = path.as_ref();
+    if path.is_dir() || is_sharded(path) {
+        let man = Manifest::load(path)?;
+        ensure!(
+            man.artifact == sess.name(),
+            "checkpoint is for {:?}, session runs {:?}",
+            man.artifact,
+            sess.name()
+        );
+        ensure!(
+            man.state_layout == LAYOUT_OPAQUE && man.ranks == 1,
+            "checkpoint holds a {}-rank {:?} state layout; sessions restore only \
+             single-slice opaque checkpoints (engine checkpoints resume via shard-train)",
+            man.ranks,
+            man.state_layout
+        );
+        let info = man.slice(0)?;
+        ensure!(
+            man.param_elems == sess.params.len() && info.state_elems == sess.opt_state.len(),
+            "checkpoint sizes ({}, {}) mismatch session ({}, {})",
+            man.param_elems,
+            info.state_elems,
+            sess.params.len(),
+            sess.opt_state.len()
+        );
+        let (params, opt_state) = read_slice(path, &man, 0)?;
+        sess.params = params;
+        sess.opt_state = opt_state;
+        sess.t = i32::try_from(man.step).context("checkpoint step out of range")?;
+        return Ok(());
+    }
+    let (params, opt_state, t) =
+        load_raw(path, sess.name(), sess.params.len(), sess.opt_state.len())?;
+    sess.params = params;
+    sess.opt_state = opt_state;
+    sess.t = t;
+    Ok(())
+}
+
+/// Legacy single-blob writer (also the test seam). Headers now carry
+/// `format_version: 1`; `load_raw` accepts version-less blobs too.
 pub fn save_raw<P: AsRef<Path>>(
     path: P,
     artifact: &str,
@@ -42,31 +467,22 @@ pub fn save_raw<P: AsRef<Path>>(
         std::fs::create_dir_all(dir)?;
     }
     let mut header = BTreeMap::new();
+    header.insert("format_version".to_string(), Json::Num(BLOB_VERSION as f64));
     header.insert("artifact".to_string(), Json::Str(artifact.to_string()));
     header.insert("t".to_string(), Json::Num(t as f64));
     header.insert("param_elems".to_string(), Json::Num(params.len() as f64));
     header.insert("state_elems".to_string(), Json::Num(opt_state.len() as f64));
     let mut f = std::io::BufWriter::new(std::fs::File::create(&path)?);
     writeln!(f, "{}", Json::Obj(header).to_string_compact())?;
-    write_f32s(&mut f, params)?;
-    write_f32s(&mut f, opt_state)?;
+    write_f32s(&mut f, params, None)?;
+    write_f32s(&mut f, opt_state, None)?;
     // Flush explicitly: an error surfaced during BufWriter drop would be
     // swallowed and a truncated save would report success.
     f.flush()?;
     Ok(())
 }
 
-/// Restore into an existing session (artifact names must match).
-pub fn load<P: AsRef<Path>>(path: P, sess: &mut TrainSession) -> Result<()> {
-    let (params, opt_state, t) =
-        load_raw(path, sess.name(), sess.params.len(), sess.opt_state.len())?;
-    sess.params = params;
-    sess.opt_state = opt_state;
-    sess.t = t;
-    Ok(())
-}
-
-/// Session-independent loader: validates the header against the expected
+/// Legacy single-blob loader: validates the header against the expected
 /// artifact/sizes and the payload against the file length, then reads.
 pub fn load_raw<P: AsRef<Path>>(
     path: P,
@@ -81,18 +497,7 @@ pub fn load_raw<P: AsRef<Path>>(
     let mut f = std::io::BufReader::new(
         std::fs::File::open(path).with_context(|| format!("checkpoint {path:?}"))?,
     );
-    let mut header_line = Vec::new();
-    loop {
-        let mut b = [0u8; 1];
-        f.read_exact(&mut b).context("checkpoint header: unexpected end of file")?;
-        if b[0] == b'\n' {
-            break;
-        }
-        header_line.push(b[0]);
-        if header_line.len() > MAX_HEADER_BYTES {
-            bail!("checkpoint header: no newline within {MAX_HEADER_BYTES} bytes (corrupt file?)");
-        }
-    }
+    let header_line = read_header_line(&mut f)?;
     let header = Json::parse(std::str::from_utf8(&header_line)?)
         .map_err(|e| anyhow::anyhow!("checkpoint header: {e}"))?;
     let t = check_header(&header, artifact, param_elems, state_elems)?;
@@ -105,15 +510,46 @@ pub fn load_raw<P: AsRef<Path>>(
             "checkpoint payload is {file_len} bytes, header implies {expected} (truncated or corrupt)"
         );
     }
-    let params = read_f32s(&mut f, param_elems)?;
-    let opt_state = read_f32s(&mut f, state_elems)?;
+    let params = read_f32s(&mut f, param_elems, None)?;
+    let opt_state = read_f32s(&mut f, state_elems, None)?;
     Ok((params, opt_state, t))
 }
 
-/// Validate an untrusted header against the expected artifact and sizes;
-/// returns the step counter. Pure function — unit-testable with crafted
-/// headers, no session or file needed.
-fn check_header(header: &Json, artifact: &str, param_elems: usize, state_elems: usize) -> Result<i32> {
+/// Read one `\n`-terminated header line, bounded by MAX_HEADER_BYTES.
+fn read_header_line<R: Read>(f: &mut R) -> Result<Vec<u8>> {
+    let mut header_line = Vec::new();
+    loop {
+        let mut b = [0u8; 1];
+        f.read_exact(&mut b).context("checkpoint header: unexpected end of file")?;
+        if b[0] == b'\n' {
+            return Ok(header_line);
+        }
+        header_line.push(b[0]);
+        if header_line.len() > MAX_HEADER_BYTES {
+            bail!("checkpoint header: no newline within {MAX_HEADER_BYTES} bytes (corrupt file?)");
+        }
+    }
+}
+
+/// Validate an untrusted legacy header against the expected artifact and
+/// sizes; returns the step counter. Pure function — unit-testable with
+/// crafted headers, no session or file needed.
+fn check_header(
+    header: &Json,
+    artifact: &str,
+    param_elems: usize,
+    state_elems: usize,
+) -> Result<i32> {
+    // version gate: absent = pre-versioning legacy blob, accepted
+    if let Some(v) = header.get("format_version") {
+        let v = v.as_usize().unwrap_or(usize::MAX);
+        if v != BLOB_VERSION {
+            bail!(
+                "unsupported checkpoint format_version {v} (this build reads version-less or \
+                 v{BLOB_VERSION} blobs, and v{MANIFEST_VERSION} sharded manifests)"
+            );
+        }
+    }
     let got_artifact = header.req("artifact")?.as_str().unwrap_or_default();
     if got_artifact != artifact {
         bail!("checkpoint is for {got_artifact:?}, session runs {artifact:?}");
@@ -139,7 +575,42 @@ fn header_count(header: &Json, key: &str) -> Result<usize> {
     Ok(n as usize)
 }
 
-fn write_f32s<W: Write>(w: &mut W, xs: &[f32]) -> Result<()> {
+fn req_str(j: &Json, key: &str) -> Result<String> {
+    Ok(j.req(key)?
+        .as_str()
+        .with_context(|| format!("{key} must be a string"))?
+        .to_string())
+}
+
+/// FNV-1a 64 — tiny, dependency-free payload checksum. Not
+/// cryptographic; it guards against truncation and torn multi-process
+/// saves, not adversaries.
+struct Fnv(u64);
+
+impl Default for Fnv {
+    fn default() -> Fnv {
+        Fnv(0xcbf2_9ce4_8422_2325)
+    }
+}
+
+impl Fnv {
+    fn new() -> Fnv {
+        Fnv::default()
+    }
+
+    fn update(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+
+    fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+fn write_f32s<W: Write>(w: &mut W, xs: &[f32], mut ck: Option<&mut Fnv>) -> Result<()> {
     // chunked to keep the writer buffered without a giant intermediate
     let mut buf = Vec::with_capacity(8192 * 4);
     for chunk in xs.chunks(8192) {
@@ -147,14 +618,20 @@ fn write_f32s<W: Write>(w: &mut W, xs: &[f32]) -> Result<()> {
         for &x in chunk {
             buf.extend_from_slice(&x.to_le_bytes());
         }
+        if let Some(ck) = ck.as_deref_mut() {
+            ck.update(&buf);
+        }
         w.write_all(&buf)?;
     }
     Ok(())
 }
 
-fn read_f32s<R: Read>(r: &mut R, n: usize) -> Result<Vec<f32>> {
+fn read_f32s<R: Read>(r: &mut R, n: usize, ck: Option<&mut Fnv>) -> Result<Vec<f32>> {
     let mut bytes = vec![0u8; n * 4];
     r.read_exact(&mut bytes)?;
+    if let Some(ck) = ck {
+        ck.update(&bytes);
+    }
     Ok(bytes.chunks_exact(4).map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]])).collect())
 }
 
@@ -168,6 +645,49 @@ mod tests {
         dir.join(name)
     }
 
+    fn tmp_dir(name: &str) -> std::path::PathBuf {
+        let dir = tmp(name);
+        std::fs::remove_dir_all(&dir).ok();
+        dir
+    }
+
+    /// A two-slice sharded checkpoint for the format tests.
+    fn sample_sharded(dir: &Path) -> Manifest {
+        let p0: Vec<f32> = (0..6).map(|i| i as f32).collect();
+        let p1: Vec<f32> = (6..10).map(|i| i as f32).collect();
+        let s0: Vec<f32> = vec![0.5; 3];
+        let s1: Vec<f32> = vec![-1.0; 2];
+        let c0 = write_slice(dir, 0, 7, &p0, &s0).unwrap();
+        let c1 = write_slice(dir, 1, 7, &p1, &s1).unwrap();
+        let man = Manifest {
+            artifact: "shard-train".to_string(),
+            optimizer: "alada".to_string(),
+            step: 7,
+            ranks: 2,
+            shapes: vec![vec![5, 2]],
+            param_elems: 10,
+            state_layout: LAYOUT_CANONICAL.to_string(),
+            slices: vec![
+                SliceInfo {
+                    rank: 0,
+                    file: slice_file(7, 0),
+                    flat: 0..6,
+                    state_elems: 3,
+                    checksum: c0,
+                },
+                SliceInfo {
+                    rank: 1,
+                    file: slice_file(7, 1),
+                    flat: 6..10,
+                    state_elems: 2,
+                    checksum: c1,
+                },
+            ],
+        };
+        man.save(dir).unwrap();
+        man
+    }
+
     #[test]
     fn raw_round_trip() {
         let path = tmp("roundtrip.ckpt");
@@ -178,6 +698,154 @@ mod tests {
         assert_eq!(p, params);
         assert_eq!(s, state);
         assert_eq!(t, 42);
+    }
+
+    /// The version satellite: v1 blobs round-trip, VERSION-LESS legacy
+    /// blobs still load, unknown versions are rejected with a clear
+    /// error — for both the blob header and the manifest.
+    #[test]
+    fn format_versions_are_enforced() {
+        // save_raw stamps v1 and load_raw accepts it (raw_round_trip) —
+        // here: a crafted version-less legacy header still loads
+        let path = tmp("legacy.ckpt");
+        let mut bytes =
+            b"{\"artifact\":\"a\",\"param_elems\":2,\"state_elems\":1,\"t\":3}\n".to_vec();
+        bytes.extend_from_slice(&1.0f32.to_le_bytes());
+        bytes.extend_from_slice(&2.0f32.to_le_bytes());
+        bytes.extend_from_slice(&3.0f32.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let (p, s, t) = load_raw(&path, "a", 2, 1).unwrap();
+        assert_eq!((p, s, t), (vec![1.0, 2.0], vec![3.0], 3));
+
+        // unknown blob version → clear rejection
+        let path = tmp("future.ckpt");
+        std::fs::write(
+            &path,
+            b"{\"artifact\":\"a\",\"format_version\":99,\"param_elems\":0,\"state_elems\":0,\"t\":0}\n",
+        )
+        .unwrap();
+        let err = load_raw(&path, "a", 0, 0).unwrap_err().to_string();
+        assert!(err.contains("unsupported checkpoint format_version 99"), "{err}");
+
+        // unknown manifest version → clear rejection
+        let dir = tmp_dir("future_manifest");
+        let man = sample_sharded(&dir);
+        let doctored = man.to_json().to_string_compact().replace(
+            "\"format_version\":2",
+            "\"format_version\":3",
+        );
+        std::fs::write(dir.join(MANIFEST_FILE), doctored).unwrap();
+        let err = Manifest::load(&dir).unwrap_err();
+        assert!(format!("{err:#}").contains("unsupported checkpoint format_version 3"), "{err:#}");
+    }
+
+    #[test]
+    fn sharded_round_trip() {
+        let dir = tmp_dir("sharded_rt");
+        let man = sample_sharded(&dir);
+        assert!(is_sharded(&dir));
+        let loaded = Manifest::load(&dir).unwrap();
+        assert_eq!(loaded, man);
+        let (p0, s0) = read_slice(&dir, &loaded, 0).unwrap();
+        let (p1, s1) = read_slice(&dir, &loaded, 1).unwrap();
+        assert_eq!(p0, (0..6).map(|i| i as f32).collect::<Vec<_>>());
+        assert_eq!(p1, (6..10).map(|i| i as f32).collect::<Vec<_>>());
+        assert_eq!(s0, vec![0.5; 3]);
+        assert_eq!(s1, vec![-1.0; 2]);
+    }
+
+    /// The kill-mid-save satellite: a checkpoint whose slice was
+    /// truncated after the manifest committed (or whose manifest never
+    /// committed) is rejected cleanly — it can never parse as valid.
+    #[test]
+    fn torn_saves_are_rejected() {
+        // no manifest → not a checkpoint at all
+        let dir = tmp_dir("torn_nomanifest");
+        write_slice(&dir, 0, 1, &[1.0], &[]).unwrap();
+        assert!(!is_sharded(&dir));
+        assert!(Manifest::load(&dir).is_err());
+
+        // truncated slice payload → length check fires
+        let dir = tmp_dir("torn_trunc");
+        let man = sample_sharded(&dir);
+        let path = dir.join(slice_file(7, 1));
+        let full = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &full[..full.len() - 4]).unwrap();
+        let err = read_slice(&dir, &man, 1).unwrap_err().to_string();
+        assert!(err.contains("truncated or corrupt"), "{err}");
+        // rank 0's slice is still individually valid
+        assert!(read_slice(&dir, &man, 0).is_ok());
+
+        // bit corruption at the right length → checksum fires
+        let dir = tmp_dir("torn_flip");
+        let man = sample_sharded(&dir);
+        let path = dir.join(slice_file(7, 0));
+        let mut bytes = std::fs::read(&path).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0x40;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = read_slice(&dir, &man, 0).unwrap_err().to_string();
+        assert!(err.contains("checksum mismatch"), "{err}");
+
+        // a slice whose embedded save generation disagrees with the
+        // manifest (simulated by planting a step-8 slice under the
+        // step-7 name) → the step cross-check fires
+        let dir = tmp_dir("torn_generation");
+        let man = sample_sharded(&dir);
+        write_slice(&dir, 0, 8, &(0..6).map(|i| i as f32).collect::<Vec<_>>(), &[0.5; 3]).unwrap();
+        std::fs::rename(dir.join(slice_file(8, 0)), dir.join(slice_file(7, 0))).unwrap();
+        let err = read_slice(&dir, &man, 0).unwrap_err().to_string();
+        assert!(err.contains("torn save"), "{err}");
+
+        // a *.tmp left behind by a crash never shadows the real slice
+        let dir = tmp_dir("torn_tmp");
+        let man = sample_sharded(&dir);
+        std::fs::write(dir.join(format!("{}.tmp", slice_file(7, 0))), b"garbage").unwrap();
+        assert!(read_slice(&dir, &man, 0).is_ok());
+    }
+
+    /// A new save generation never disturbs the last committed one, and
+    /// pruning keeps only the committed generation's slices.
+    #[test]
+    fn new_generations_keep_the_old_checkpoint_valid_until_commit() {
+        let dir = tmp_dir("generations");
+        let man7 = sample_sharded(&dir);
+        // a step-8 save crashes after writing its slices, BEFORE the
+        // manifest rename: the step-7 checkpoint is fully readable
+        write_slice(&dir, 0, 8, &(0..6).map(|i| i as f32).collect::<Vec<_>>(), &[1.5; 3]).unwrap();
+        write_slice(&dir, 1, 8, &(6..10).map(|i| i as f32).collect::<Vec<_>>(), &[2.5; 2]).unwrap();
+        let loaded = Manifest::load(&dir).unwrap();
+        assert_eq!(loaded.step, 7);
+        assert!(read_slice(&dir, &loaded, 0).is_ok() && read_slice(&dir, &loaded, 1).is_ok());
+        // after commit + prune, only the new generation's files remain
+        let mut man8 = man7.clone();
+        man8.step = 8;
+        for (r, s) in man8.slices.iter_mut().enumerate() {
+            s.file = slice_file(8, r);
+        }
+        man8.save(&dir).unwrap();
+        prune_old_slices(&dir, 0, &slice_file(8, 0));
+        prune_old_slices(&dir, 1, &slice_file(8, 1));
+        assert!(!dir.join(slice_file(7, 0)).exists());
+        assert!(!dir.join(slice_file(7, 1)).exists());
+        assert!(dir.join(slice_file(8, 0)).exists());
+        assert!(dir.join(slice_file(8, 1)).exists());
+    }
+
+    #[test]
+    fn manifest_rejects_bad_slice_geometry() {
+        let dir = tmp_dir("bad_geometry");
+        let man = sample_sharded(&dir);
+        // a gap in the tiling
+        let doctored =
+            man.to_json().to_string_compact().replace("\"flat_start\":6", "\"flat_start\":7");
+        std::fs::write(dir.join(MANIFEST_FILE), doctored).unwrap();
+        let err = format!("{:#}", Manifest::load(&dir).unwrap_err());
+        assert!(err.contains("tile"), "{err}");
+        // slice count vs ranks
+        let doctored = man.to_json().to_string_compact().replace("\"ranks\":2", "\"ranks\":3");
+        std::fs::write(dir.join(MANIFEST_FILE), doctored).unwrap();
+        assert!(Manifest::load(&dir).is_err());
     }
 
     #[test]

@@ -135,6 +135,10 @@ pub struct ShardedRun {
     pub max_rank_elems: usize,
     /// Partition balance: max_rank_elems / (total/ranks); 1.0 is perfect.
     pub imbalance: f64,
+    /// Slowest rank's checkpoint-save wall time (0 = run saved nothing).
+    pub save_secs: f64,
+    /// Slowest rank's resume (load + reshard) wall time.
+    pub load_secs: f64,
 }
 
 /// The sharded step path: N replica threads over the pure-Rust substrate
@@ -174,6 +178,8 @@ pub fn run_sharded(
         gather_bytes: sharded.gather_bytes,
         opt_reduce_bytes: sharded.opt_reduce_bytes,
         transport: sharded.transport,
+        save_secs: sharded.save_secs,
+        load_secs: sharded.load_secs,
     })
 }
 
@@ -197,15 +203,22 @@ impl Trainer {
 
     /// Run `steps` updates; returns the loss curve and timing.
     pub fn run(&mut self, steps: usize) -> Result<TrainOutcome> {
+        self.run_from(0, steps)
+    }
+
+    /// Run steps `start..total` — the resume entry point: the schedule is
+    /// indexed by the ABSOLUTE step, so a resumed run sees the same
+    /// learning rates the uninterrupted one would.
+    pub fn run_from(&mut self, start: usize, total: usize) -> Result<TrainOutcome> {
         let mut cum = CumAvg::default();
         let mut out = TrainOutcome::default();
         let t0 = std::time::Instant::now();
-        for step in 0..steps {
+        for step in start..total {
             let (tokens, extra) = self.data.next(self.sess.seq);
             let lr = self.schedule.at(step);
             let loss = self.sess.step(&tokens, &extra, lr)? as f64;
             let avg = cum.push(loss);
-            if step % self.record_every == 0 || step + 1 == steps {
+            if step % self.record_every == 0 || step + 1 == total {
                 out.curve.push((step, loss, avg));
             }
             if !loss.is_finite() {
@@ -218,5 +231,22 @@ impl Trainer {
         out.secs_per_step = out.wall_secs / out.steps.max(1) as f64;
         out.final_cum_loss = cum.value();
         Ok(out)
+    }
+
+    /// Save the session's full training state as a sharded-format
+    /// checkpoint directory — the N = 1 degenerate case (one slice, the
+    /// session's opaque state blob).
+    pub fn save_checkpoint<P: AsRef<std::path::Path>>(&self, path: P) -> Result<()> {
+        super::checkpoint::save(path, &self.sess)
+    }
+
+    /// Restore the session from `path` (sharded directory OR a legacy
+    /// single-blob file) and return the step to continue from — feed it
+    /// to `run_from` so the schedule stays aligned. The data stream is
+    /// NOT part of the checkpoint: batches replay from the seeded
+    /// batcher's start, exactly like a fresh run of the remaining steps.
+    pub fn resume_checkpoint<P: AsRef<std::path::Path>>(&mut self, path: P) -> Result<usize> {
+        super::checkpoint::load(path, &mut self.sess)?;
+        Ok(self.sess.t.max(0) as usize)
     }
 }

@@ -55,9 +55,13 @@ fn bench_smoke_shard() {
     assert!(rows.iter().all(|r| r.imbalance >= 1.0));
     let one_rank = rows.iter().find(|r| r.ranks == 1).unwrap();
     assert!((one_rank.imbalance - 1.0).abs() < 1e-9);
+    // elastic-checkpoint timing: every row carries its rank count's
+    // measured save/load wall time (the no-gather save path's witness)
+    assert!(rows.iter().all(|r| r.save_ms > 0.0 && r.load_ms > 0.0));
     let txt = std::fs::read_to_string(&path).expect("BENCH_shard json written");
     assert!(txt.contains("reduce_bytes_per_step") && txt.contains("pipeline"), "{txt}");
     assert!(txt.contains("imbalance") && txt.contains("max_rank_elems"), "{txt}");
     assert!(txt.contains("\"transport\":\"inproc\""), "{txt}");
     assert!(txt.contains("\"transport\":\"tcp\""), "{txt}");
+    assert!(txt.contains("save_ms") && txt.contains("load_ms"), "{txt}");
 }

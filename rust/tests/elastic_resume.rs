@@ -1,0 +1,317 @@
+//! Elastic shard-aware checkpointing — THE acceptance gate of the
+//! sharded checkpoint subsystem: save at M ranks, resume at N ranks,
+//! and the final parameters are BYTE-identical to the uninterrupted
+//! N-rank run (and to the unsharded optimizer), for every M, N in
+//! {1..4}, all three exchange pipelines, and both transports.
+//!
+//! Why such a strong claim is even possible: checkpoints capture
+//! (params, canonical optimizer state, step) exactly, and the reshard
+//! planner cuts the saved state at the same fixed chunk boundaries the
+//! restoring partition uses — so resuming at N restores bit-for-bit the
+//! state an N-rank run would have held at step k, PROVIDED the M-rank
+//! and N-rank trajectories agree up to k. The test task makes them
+//! agree: every rank computes the FULL batch (MlpTask's
+//! replicated-batch mode) with the low two mantissa bits of every
+//! gradient value (and the loss) cleared, so the engine's tree sum of
+//! k ≤ 4 identical contributions is exact and the correctly-rounded
+//! mean divide (shard/collective.rs `mean_scale`) hands every rank
+//! count the identical averaged gradient. From there the row-split
+//! partitioned update is bit-identical to the unsharded optimizer at
+//! any rank count — the PR-3 contract — and induction over steps does
+//! the rest.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+use alada::optim::{by_name, Schedule};
+use alada::shard::{
+    self, CkptConfig, Comm, MlpTask, Pipeline, Replica, ShardConfig, ShardOutcome, ShardTask,
+    Tcp,
+};
+use alada::tensor::Tensor;
+
+/// Save point and total steps. T is odd and > 2·K so a resume crosses
+/// both of Alada's alternation phases and the t = 0 init is strictly in
+/// the pre-checkpoint half.
+const K: usize = 3;
+const T: usize = 7;
+
+fn quant(x: f32) -> f32 {
+    f32::from_bits(x.to_bits() & !0b11)
+}
+
+/// Rank-invariant gradient source (see module docs).
+struct ElasticTask(MlpTask);
+
+impl ElasticTask {
+    fn new(seed: u64) -> ElasticTask {
+        // [20, 6] dominates (120 of 164 elems) and row-splits at every
+        // rank count tested; batch == n_samples keeps the full batch
+        // deterministic.
+        ElasticTask(MlpTask::new(6, 20, 1, 2, 12, 12, seed).with_replicated_batch())
+    }
+}
+
+struct QuantReplica(Box<dyn Replica>);
+
+impl Replica for QuantReplica {
+    fn grad(&mut self, params: &[Tensor], step: usize, out: &mut [Tensor]) -> f32 {
+        let loss = self.0.grad(params, step, out);
+        for g in out.iter_mut() {
+            for x in g.data_mut() {
+                *x = quant(*x);
+            }
+        }
+        quant(loss)
+    }
+}
+
+impl ShardTask for ElasticTask {
+    fn shapes(&self) -> Vec<Vec<usize>> {
+        self.0.shapes()
+    }
+
+    fn init_params(&self) -> Vec<Tensor> {
+        self.0.init_params()
+    }
+
+    fn replica(&self, rank: usize, ranks: usize) -> Result<Box<dyn Replica>> {
+        Ok(Box::new(QuantReplica(self.0.replica(rank, ranks)?)))
+    }
+}
+
+fn sched() -> Schedule {
+    Schedule::Diminishing { eta0: 5e-3, total: T }
+}
+
+fn cfg(ranks: usize, steps: usize, pipeline: Pipeline, ckpt: CkptConfig) -> ShardConfig {
+    ShardConfig { ranks, bucket_kb: 1, steps, pipeline, ckpt }
+}
+
+fn fresh_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("alada_elastic_{tag}"));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+fn save_cfg(dir: &Path) -> CkptConfig {
+    CkptConfig::new(dir.to_str(), 0, None)
+}
+
+fn resume_cfg(dir: &Path) -> CkptConfig {
+    CkptConfig::new(None, 0, dir.to_str())
+}
+
+fn run(task: &dyn ShardTask, opt: &str, c: &ShardConfig) -> ShardOutcome {
+    shard::train(task, opt, &sched(), c).expect("sharded run")
+}
+
+fn run_tcp(task: &dyn ShardTask, opt: &str, c: &ShardConfig) -> ShardOutcome {
+    let comms = Tcp::loopback_mesh(c.ranks)
+        .expect("tcp loopback mesh")
+        .into_iter()
+        .map(Comm::new)
+        .collect();
+    shard::train_with_comms(task, opt, &sched(), c, comms).expect("tcp sharded run")
+}
+
+fn assert_params_bit_identical(a: &[Tensor], b: &[Tensor], what: &str) {
+    for (t, (ta, tb)) in a.iter().zip(b).enumerate() {
+        for (x, y) in ta.data().iter().zip(tb.data()) {
+            assert_eq!(x.to_bits(), y.to_bits(), "{what}: tensor {t}: {x} vs {y}");
+        }
+    }
+}
+
+/// The unsharded-optimizer reference the whole grid must agree with:
+/// plain Alada fed the task's (quantized, full-batch) gradients.
+fn unsharded_reference(task: &ElasticTask, opt: &str) -> Vec<Tensor> {
+    let mut params = task.init_params();
+    let mut o = by_name(opt, &task.shapes()).unwrap();
+    let mut rep = task.replica(0, 1).unwrap();
+    let mut grads: Vec<Tensor> = task.shapes().iter().map(|s| Tensor::zeros(s)).collect();
+    let s = sched();
+    for step in 0..T {
+        rep.grad(&params, step, &mut grads);
+        o.step(&mut params, &grads, s.at(step));
+    }
+    params
+}
+
+/// The headline guarantee, in-process transport: for every M, N in
+/// {1..4} × all three pipelines, save@M at step K then resume@N to T is
+/// byte-identical to the uninterrupted N-rank run — and every run is
+/// byte-identical to the unsharded optimizer.
+#[test]
+fn save_at_m_resume_at_n_matches_uninterrupted_every_pipeline() {
+    let task = ElasticTask::new(17);
+    let reference = unsharded_reference(&task, "alada");
+    for pipeline in [Pipeline::AllReduce, Pipeline::ReduceScatter, Pipeline::Overlap] {
+        let full: Vec<ShardOutcome> = (1..=4)
+            .map(|n| run(&task, "alada", &cfg(n, T, pipeline, CkptConfig::default())))
+            .collect();
+        for (n, out) in full.iter().enumerate() {
+            assert_params_bit_identical(
+                &out.params,
+                &reference,
+                &format!("{} at {} ranks vs unsharded trainer", pipeline.name(), n + 1),
+            );
+        }
+        for m in 1..=4usize {
+            let dir = fresh_dir(&format!("grid_{}_{m}", pipeline.name()));
+            let saved = run(&task, "alada", &cfg(m, K, pipeline, save_cfg(&dir)));
+            assert!(saved.save_secs > 0.0, "save time must be recorded");
+            for n in 1..=4usize {
+                let resumed = run(&task, "alada", &cfg(n, T, pipeline, resume_cfg(&dir)));
+                let what = format!("{}: save@{m} → resume@{n}", pipeline.name());
+                assert!(resumed.load_secs > 0.0, "{what}: load time must be recorded");
+                assert_eq!(resumed.losses.len(), T - K, "{what}: resumed step count");
+                // the resumed loss trace is the uninterrupted run's suffix
+                for (a, b) in resumed.losses.iter().zip(&full[n - 1].losses[K..]) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{what}: loss trace");
+                }
+                assert_params_bit_identical(&resumed.params, &full[n - 1].params, &what);
+            }
+            std::fs::remove_dir_all(&dir).ok();
+        }
+    }
+}
+
+/// The same grid over real TCP loopback sockets (default pipeline), and
+/// transport-crossed: a checkpoint saved over TCP restores in-process
+/// and vice versa — the format is transport-agnostic.
+#[test]
+fn save_resume_grid_over_tcp_loopback() {
+    let task = ElasticTask::new(23);
+    let pipeline = Pipeline::ReduceScatter;
+    let full: Vec<ShardOutcome> = (1..=4)
+        .map(|n| run(&task, "alada", &cfg(n, T, pipeline, CkptConfig::default())))
+        .collect();
+    for m in 1..=4usize {
+        let dir = fresh_dir(&format!("tcp_{m}"));
+        run_tcp(&task, "alada", &cfg(m, K, pipeline, save_cfg(&dir)));
+        for n in 1..=4usize {
+            let resumed = run_tcp(&task, "alada", &cfg(n, T, pipeline, resume_cfg(&dir)));
+            assert_params_bit_identical(
+                &resumed.params,
+                &full[n - 1].params,
+                &format!("tcp save@{m} → tcp resume@{n}"),
+            );
+        }
+        // transport-crossed restore: tcp-written slices, inproc resume
+        let resumed = run(&task, "alada", &cfg(3, T, pipeline, resume_cfg(&dir)));
+        assert_params_bit_identical(
+            &resumed.params,
+            &full[2].params,
+            &format!("tcp save@{m} → inproc resume@3"),
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+    // inproc save, tcp resume
+    let dir = fresh_dir("inproc_to_tcp");
+    run(&task, "alada", &cfg(2, K, pipeline, save_cfg(&dir)));
+    let resumed = run_tcp(&task, "alada", &cfg(4, T, pipeline, resume_cfg(&dir)));
+    assert_params_bit_identical(&resumed.params, &full[3].params, "inproc save@2 → tcp resume@4");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The other two ShardedOptimizer inner forms ride the same machinery:
+/// row-split elementwise (adam) and tensor-aligned (adafactor) resume
+/// across rank counts byte-identically too.
+#[test]
+fn elementwise_and_tensor_aligned_optimizers_resume_elastically() {
+    let task = ElasticTask::new(29);
+    for opt in ["adam", "adafactor", "sgdm"] {
+        let reference = unsharded_reference(&task, opt);
+        for (m, n) in [(2usize, 3usize), (3, 2), (1, 4), (4, 1)] {
+            let dir = fresh_dir(&format!("opt_{opt}_{m}_{n}"));
+            run(&task, opt, &cfg(m, K, Pipeline::default(), save_cfg(&dir)));
+            let resumed = run(&task, opt, &cfg(n, T, Pipeline::default(), resume_cfg(&dir)));
+            let full = run(&task, opt, &cfg(n, T, Pipeline::default(), CkptConfig::default()));
+            let what = format!("{opt}: save@{m} → resume@{n}");
+            assert_params_bit_identical(&resumed.params, &full.params, &what);
+            assert_params_bit_identical(&full.params, &reference, &format!("{what} (reference)"));
+            std::fs::remove_dir_all(&dir).ok();
+        }
+    }
+}
+
+/// Mid-run periodic saves (`--save-every`): the run keeps training
+/// through its save points without changing a bit, and the final
+/// checkpoint resumes exactly like a save-at-end one.
+#[test]
+fn periodic_saves_do_not_perturb_training_and_resume_cleanly() {
+    let task = ElasticTask::new(31);
+    let plain = run(&task, "alada", &cfg(2, T, Pipeline::Overlap, CkptConfig::default()));
+    let dir = fresh_dir("periodic");
+    let ckpt = CkptConfig::new(dir.to_str(), 2, None); // saves at 2, 4, 6, 7
+    let saving = run(&task, "alada", &cfg(2, T, Pipeline::Overlap, ckpt));
+    assert_params_bit_identical(&saving.params, &plain.params, "saving run vs plain run");
+    // the last checkpoint is at step T — resuming it at 4 ranks runs 0
+    // further steps and lands on the identical params
+    let resumed = run(&task, "alada", &cfg(4, T, Pipeline::default(), resume_cfg(&dir)));
+    assert!(resumed.losses.is_empty());
+    assert_params_bit_identical(&resumed.params, &plain.params, "resume of a final checkpoint");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Resume failure modes are clean `Result` errors, never panics or
+/// silent corruption: wrong optimizer, truncated slice, missing
+/// manifest, and a checkpoint beyond the requested step count.
+#[test]
+fn resume_rejects_bad_checkpoints_cleanly() {
+    let task = ElasticTask::new(37);
+    let dir = fresh_dir("reject");
+    run(&task, "alada", &cfg(2, K, Pipeline::default(), save_cfg(&dir)));
+
+    // wrong optimizer
+    let rc = cfg(2, T, Pipeline::default(), resume_cfg(&dir));
+    let err = shard::train(&task, "adam", &sched(), &rc);
+    let msg = format!("{:#}", err.unwrap_err());
+    assert!(msg.contains("optimizer"), "{msg}");
+
+    // run shorter than the checkpoint
+    let rc = cfg(2, 1, Pipeline::default(), resume_cfg(&dir));
+    let err = shard::train(&task, "alada", &sched(), &rc);
+    let msg = format!("{:#}", err.unwrap_err());
+    assert!(msg.contains("step"), "{msg}");
+
+    // truncated slice (kill-mid-save aftermath)
+    let slice = dir.join(alada::train::checkpoint::slice_file(K, 1));
+    let full = std::fs::read(&slice).unwrap();
+    std::fs::write(&slice, &full[..full.len() - 4]).unwrap();
+    let rc = cfg(3, T, Pipeline::default(), resume_cfg(&dir));
+    let err = shard::train(&task, "alada", &sched(), &rc);
+    let msg = format!("{:#}", err.unwrap_err());
+    assert!(msg.contains("truncated") || msg.contains("corrupt"), "{msg}");
+
+    // no manifest at all
+    let empty = fresh_dir("reject_empty");
+    std::fs::create_dir_all(&empty).unwrap();
+    let rc = cfg(2, T, Pipeline::default(), resume_cfg(&empty));
+    let err = shard::train(&task, "alada", &sched(), &rc);
+    assert!(err.is_err());
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::remove_dir_all(&empty).ok();
+}
+
+/// A non-invariant task (real disjoint micro-batches) still resumes
+/// byte-identically at the SAME rank count — elastic rank changes need
+/// the invariant gradient source, plain resume does not.
+#[test]
+fn same_rank_resume_works_for_ordinary_tasks() {
+    let task = MlpTask::new(8, 12, 2, 4, 64, 24, 41);
+    for ranks in [2usize, 3] {
+        let full = run(&task, "alada", &cfg(ranks, T, Pipeline::default(), CkptConfig::default()));
+        let dir = fresh_dir(&format!("ordinary_{ranks}"));
+        run(&task, "alada", &cfg(ranks, K, Pipeline::default(), save_cfg(&dir)));
+        let resumed = run(&task, "alada", &cfg(ranks, T, Pipeline::default(), resume_cfg(&dir)));
+        assert_params_bit_identical(
+            &resumed.params,
+            &full.params,
+            &format!("ordinary task resume at {ranks} ranks"),
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

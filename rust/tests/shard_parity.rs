@@ -32,7 +32,7 @@ use alada::tensor::Tensor;
 const STEPS: usize = 30;
 
 fn run_with(task: &MlpTask, opt: &str, ranks: usize, pipeline: Pipeline) -> ShardOutcome {
-    let cfg = ShardConfig { ranks, bucket_kb: 2, steps: STEPS, pipeline };
+    let cfg = ShardConfig { ranks, bucket_kb: 2, steps: STEPS, pipeline, ..ShardConfig::default() };
     let schedule = Schedule::Diminishing { eta0: 5e-3, total: STEPS };
     shard::train(task, opt, &schedule, &cfg).expect("sharded training")
 }
@@ -148,7 +148,7 @@ fn row_split_engine_matches_unsharded_optimizer_byte_for_byte() {
         }
 
         for pipeline in [Pipeline::AllReduce, Pipeline::ReduceScatter, Pipeline::Overlap] {
-            let cfg = ShardConfig { ranks, bucket_kb, steps, pipeline };
+            let cfg = ShardConfig { ranks, bucket_kb, steps, pipeline, ..ShardConfig::default() };
             let out = shard::train(&task, "alada", &schedule, &cfg).expect("train");
             for (t, (ta, tb)) in out.params.iter().zip(&reference).enumerate() {
                 for (x, y) in ta.data().iter().zip(tb.data()) {
@@ -265,7 +265,8 @@ fn tcp_loopback_backend_matches_inproc_bit_for_bit() {
     let schedule = Schedule::Diminishing { eta0: 5e-3, total: 10 };
     for ranks in [2usize, 4] {
         for pipeline in [Pipeline::ReduceScatter, Pipeline::Overlap] {
-            let cfg = ShardConfig { ranks, bucket_kb: 2, steps: 10, pipeline };
+            let cfg =
+                ShardConfig { ranks, bucket_kb: 2, steps: 10, pipeline, ..ShardConfig::default() };
             let inproc = shard::train(&task, "alada", &schedule, &cfg).expect("inproc train");
             assert_eq!(inproc.transport, "inproc");
             let comms = Tcp::loopback_mesh(ranks)

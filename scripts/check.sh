@@ -21,3 +21,23 @@ cargo run -q -- shard-train --ranks 2 "${common[@]}" --dump-params "$tmp/inproc.
 cargo run -q -- shard-train --transport tcp --spawn 2 "${common[@]}" --dump-params "$tmp/tcp.bin"
 cmp "$tmp/inproc.bin" "$tmp/tcp.bin"
 echo "   tcp final params byte-identical to inproc"
+
+echo "== elastic resume smoke: save @ 2 tcp procs, resume @ 4, cmp vs uninterrupted 4-proc run =="
+# --same-batch makes the trajectory rank-count-invariant (every rank
+# computes the full global batch; the tree mean of identical copies is
+# exact at power-of-two rank counts), so a checkpoint saved at 2 ranks
+# must resume at 4 ranks onto the byte-identical uninterrupted result.
+# The explicit const schedule keeps the 4-step save run on the same
+# learning rates as the 8-step runs (the default dim:LR:STEPS horizon
+# would differ).
+elastic=(--opt alada --batch 8 --dim 6 --hidden 10 --depth 1 --bucket-kb 1 \
+         --seed 5 --schedule const:0.005 --same-batch)
+cargo run -q -- shard-train --transport tcp --spawn 4 --steps 8 "${elastic[@]}" \
+    --dump-params "$tmp/full4.bin"
+cargo run -q -- shard-train --transport tcp --spawn 2 --steps 4 "${elastic[@]}" \
+    --save "$tmp/ckpt"
+test -f "$tmp/ckpt/manifest.json"
+cargo run -q -- shard-train --transport tcp --spawn 4 --steps 8 "${elastic[@]}" \
+    --resume "$tmp/ckpt" --dump-params "$tmp/resume4.bin"
+cmp "$tmp/full4.bin" "$tmp/resume4.bin"
+echo "   save@2/resume@4 final params byte-identical to the uninterrupted 4-proc run"
