@@ -1,0 +1,27 @@
+//! Serving benchmark: closed-loop concurrent clients against an
+//! in-process `alada serve` (real loopback HTTP, real batcher, real
+//! decode workers), sweeping the client count. Reports p50/p95
+//! end-to-end latency, req/s, and the mean coalesced batch size per
+//! level — the batcher's throughput-vs-latency trade made measurable.
+//!
+//! Emits machine-readable `BENCH_serve.json` so future PRs can track
+//! the serving trajectory without parsing console output. The body
+//! lives in `alada::benchkit` and is smoke-run under tier-1 by
+//! rust/tests/bench_smoke.rs.
+//!
+//! harness = false (criterion unavailable offline).
+
+use alada::benchkit::serve_bench;
+
+/// Client counts straddling the batcher's max_batch of 8: below it
+/// (coalescing partial), at it, and past it (queue pressure).
+const LEVELS: &[usize] = &[1, 4, 8, 16];
+const REQS_PER_CLIENT: usize = 50;
+
+fn main() {
+    println!(
+        "== serve: closed-loop clients x {REQS_PER_CLIENT} reqs, \
+         max_batch 8, max_wait 2 ms, 2 workers =="
+    );
+    serve_bench(LEVELS, REQS_PER_CLIENT, Some("BENCH_serve.json"));
+}

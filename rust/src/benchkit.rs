@@ -1,11 +1,12 @@
 //! Shared bodies of the `cargo bench` targets.
 //!
-//! The bench binaries (rust/benches/bench_optim.rs, bench_shard.rs) are
-//! thin mains over these functions, and `rust/tests/bench_smoke.rs`
-//! drives the same code with 1 warmup + 1 sample — so the perf harness
-//! compiles and runs under the tier-1 gate and can't bit-rot between
-//! PRs. Both benches emit machine-readable JSON (BENCH_optim.json /
-//! BENCH_shard.json) through one `write_bench_json` helper so the perf
+//! The bench binaries (rust/benches/bench_optim.rs, bench_shard.rs,
+//! bench_serve.rs) are thin mains over these functions, and
+//! `rust/tests/bench_smoke.rs` drives the same code with tiny shapes —
+//! so the perf harness compiles and runs under the tier-1 gate and
+//! can't bit-rot between PRs. Every bench emits machine-readable JSON
+//! (BENCH_optim.json / BENCH_shard.json / BENCH_serve.json) through one
+//! `write_bench_json` helper so the perf
 //! trajectory is comparable across PRs without parsing console output:
 //! per-optimizer median/p95/steps-per-sec, and per-(ranks, pipeline,
 //! transport) engine rows including the partition imbalance ratio
@@ -15,9 +16,14 @@
 //! the transport tax a multi-process launch pays).
 
 use std::collections::BTreeMap;
+use std::sync::atomic::Ordering;
+use std::time::{Duration, Instant};
 
 use crate::optim::{by_name, Schedule, ALL};
-use crate::shard::{self, CkptConfig, Comm, MlpTask, Partition, Pipeline, ShardConfig, Tcp};
+use crate::serve::{http, MlpLm, ServeConfig, Server};
+use crate::shard::{
+    self, CkptConfig, Comm, MlpTask, Partition, Pipeline, ShardConfig, ShardTask, Tcp,
+};
 use crate::tensor::Tensor;
 use crate::util::timing::bench;
 use crate::util::{Json, Rng};
@@ -355,6 +361,142 @@ pub fn shard_bench(
             &[
                 ("optimizer", Json::Str("alada".to_string())),
                 ("steps", Json::Num(steps as f64)),
+            ],
+            entries,
+        );
+    }
+    rows
+}
+
+/// One concurrency level of the closed-loop serving benchmark.
+pub struct ServeBenchRow {
+    pub concurrency: usize,
+    /// Requests issued at this level (`concurrency * reqs_per_client`).
+    pub requests: usize,
+    /// Requests answered 200 (closed-loop clients with a roomy queue:
+    /// expected == requests).
+    pub ok: usize,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub req_per_sec: f64,
+    /// Mean rows per cut batch at this level — the coalescing witness:
+    /// it should grow with concurrency while per-row results stay
+    /// bit-identical to solo decodes.
+    pub mean_batch: f64,
+}
+
+fn percentile(sorted_ms: &[f64], q: f64) -> f64 {
+    if sorted_ms.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted_ms.len() as f64 - 1.0) * q).round() as usize;
+    sorted_ms[idx.min(sorted_ms.len() - 1)]
+}
+
+/// Drive an in-process `alada serve` with closed-loop concurrent
+/// clients at each level in `levels`, measuring end-to-end request
+/// latency (connect + queue + batched decode) and throughput. Every
+/// client issues `reqs_per_client` sequential `POST /v1/generate`
+/// requests over fresh connections — the serving pattern the coalescing
+/// batcher exists for.
+pub fn serve_bench(
+    levels: &[usize],
+    reqs_per_client: usize,
+    json_path: Option<&str>,
+) -> Vec<ServeBenchRow> {
+    let params = MlpTask::new(8, 16, 2, 8, 64, 8, 7).init_params();
+    let model = MlpLm::from_params(&params, 32, 24, 16).expect("bench model");
+    let cfg = ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        max_batch: 8,
+        max_wait: Duration::from_millis(2),
+        // closed-loop: at most `concurrency` requests are ever in
+        // flight, so a roomy queue means no 503s taint the latencies
+        queue_cap: 1024,
+        workers: 2,
+    };
+    let server = Server::start(&cfg, model, None).expect("bench server");
+    let addr = server.addr();
+
+    let mut rows = Vec::new();
+    for &concurrency in levels {
+        let stats = server.stats();
+        let batches0 = stats.batches.load(Ordering::Relaxed);
+        let riders0 = stats.batched_requests.load(Ordering::Relaxed);
+        let t0 = Instant::now();
+        let handles: Vec<_> = (0..concurrency)
+            .map(|client| {
+                std::thread::spawn(move || {
+                    let mut lat_ms = Vec::with_capacity(reqs_per_client);
+                    let mut ok = 0usize;
+                    for r in 0..reqs_per_client {
+                        // vary prompts so batches mix distinct rows
+                        let tok = 2 + ((client * 7 + r) % 30);
+                        let body = format!("{{\"tokens\":[{tok}],\"max_new\":8}}");
+                        let t = Instant::now();
+                        if let Ok((200, _)) =
+                            http::request(addr, "POST", "/v1/generate", Some(&body))
+                        {
+                            ok += 1;
+                            lat_ms.push(t.elapsed().as_secs_f64() * 1e3);
+                        }
+                    }
+                    (lat_ms, ok)
+                })
+            })
+            .collect();
+        let mut lat_ms: Vec<f64> = Vec::with_capacity(concurrency * reqs_per_client);
+        let mut ok = 0usize;
+        for h in handles {
+            let (l, o) = h.join().expect("bench client");
+            lat_ms.extend(l);
+            ok += o;
+        }
+        let wall = t0.elapsed().as_secs_f64().max(1e-9);
+        lat_ms.sort_by(|a, b| a.total_cmp(b));
+        let batches = stats.batches.load(Ordering::Relaxed) - batches0;
+        let riders = stats.batched_requests.load(Ordering::Relaxed) - riders0;
+        let row = ServeBenchRow {
+            concurrency,
+            requests: concurrency * reqs_per_client,
+            ok,
+            p50_ms: percentile(&lat_ms, 0.50),
+            p95_ms: percentile(&lat_ms, 0.95),
+            req_per_sec: ok as f64 / wall,
+            mean_batch: if batches == 0 { 0.0 } else { riders as f64 / batches as f64 },
+        };
+        println!(
+            "serve/{concurrency}-clients: {} ok/{} req  p50 {:.2} ms  p95 {:.2} ms  \
+             {:.1} req/s  mean batch {:.2}",
+            row.ok, row.requests, row.p50_ms, row.p95_ms, row.req_per_sec, row.mean_batch
+        );
+        rows.push(row);
+    }
+    server.shutdown();
+
+    if let Some(path) = json_path {
+        let entries: Vec<Json> = rows
+            .iter()
+            .map(|r| {
+                obj(vec![
+                    ("concurrency", Json::Num(r.concurrency as f64)),
+                    ("requests", Json::Num(r.requests as f64)),
+                    ("ok", Json::Num(r.ok as f64)),
+                    ("p50_ms", Json::Num(r.p50_ms)),
+                    ("p95_ms", Json::Num(r.p95_ms)),
+                    ("req_per_sec", Json::Num(r.req_per_sec)),
+                    ("mean_batch", Json::Num(r.mean_batch)),
+                ])
+            })
+            .collect();
+        write_bench_json(
+            path,
+            "serve",
+            &[
+                ("reqs_per_client", Json::Num(reqs_per_client as f64)),
+                ("max_batch", Json::Num(8.0)),
+                ("max_wait_ms", Json::Num(2.0)),
+                ("workers", Json::Num(2.0)),
             ],
             entries,
         );

@@ -16,6 +16,17 @@ pub enum Granularity {
     Word,
 }
 
+impl Granularity {
+    /// Parse a CLI flag value (`--granularity char|word`).
+    pub fn parse(s: &str) -> Option<Granularity> {
+        match s {
+            "char" => Some(Granularity::Char),
+            "word" => Some(Granularity::Word),
+            _ => None,
+        }
+    }
+}
+
 /// A frequency-built vocabulary with encode/decode.
 pub struct Tokenizer {
     granularity: Granularity,
@@ -109,6 +120,13 @@ mod tests {
         let text: String = (0..1000).map(|i| format!("w{i} ")).collect();
         let tok = Tokenizer::fit(&text, Granularity::Word, 128);
         assert!(tok.vocab_size() <= 128);
+    }
+
+    #[test]
+    fn granularity_parses_cli_values() {
+        assert_eq!(Granularity::parse("char"), Some(Granularity::Char));
+        assert_eq!(Granularity::parse("word"), Some(Granularity::Word));
+        assert_eq!(Granularity::parse("subword"), None);
     }
 
     #[test]

@@ -15,6 +15,7 @@ pub mod exp;
 pub mod data;
 pub mod optim;
 pub mod runtime;
+pub mod serve;
 pub mod shard;
 pub mod tensor;
 pub mod train;

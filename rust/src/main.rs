@@ -3,20 +3,29 @@
 //! Subcommands:
 //!   exp <id>        regenerate a paper table/figure (or `all`)
 //!   train           run a single training job
+//!   serve           batched HTTP inference over a checkpoint
+//!   export          write a weights-only artifact from a checkpoint
+//!   generate        one-shot greedy decode (the serve-parity oracle)
 //!   memory          print the memory-model breakdown for a paper model
 //!   info            list artifacts + experiment ids
 //!
 //! Common flags: --artifacts DIR --out DIR --workers N --scale F
 //! (scale < 1 shrinks step counts for smoke runs).
 
+use std::time::Duration;
+
 use anyhow::Context as _;
 
 use alada::cli::Args;
+use alada::data::tokenizer::Granularity;
+use alada::data::Tokenizer;
 use alada::exp::{self, ExpOpts};
 use alada::optim::Schedule;
 use alada::runtime::{Manifest, Runtime, TrainSession};
+use alada::serve::{MlpLm, ServeConfig, Server};
 use alada::shard::{CkptConfig, Comm, MlpTask, Pipeline, ShardConfig, Tcp};
-use alada::train::memory;
+use alada::train::decode::{greedy_decode, TokenLogits};
+use alada::train::{checkpoint, memory};
 use alada::train::{TaskData, Trainer};
 use alada::util::log;
 
@@ -27,6 +36,9 @@ fn main() {
         Some("exp") => cmd_exp(&args),
         Some("train") => cmd_train(&args),
         Some("shard-train") => cmd_shard_train(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("export") => cmd_export(&args),
+        Some("generate") => cmd_generate(&args),
         Some("memory") => cmd_memory(&args),
         Some("report") => {
             let out = args.str_or("out", "results");
@@ -88,6 +100,28 @@ USAGE:
                                 [--bind ADDR]    manual launch; --peers is rank
                                                  0's rendezvous address (or the
                                                  full per-rank address table)
+  alada serve --ckpt DIR|FILE [--addr HOST:PORT] [--vocab N] [--seq N]
+              [--max-batch B] [--max-wait-ms MS] [--queue-cap N] [--workers N]
+              [--corpus FILE] [--granularity char|word]
+              batched HTTP inference over a shard-train checkpoint (saved at
+              ANY rank count) or an exported weights artifact. Endpoints:
+                POST /v1/generate   {\"tokens\":[..]} or {\"text\":\"..\"} (+ optional
+                                    \"max_new\"); text needs --corpus to fit a
+                                    tokenizer at startup
+                GET  /healthz       liveness
+                GET  /stats         request/batch/latency counters
+              requests coalesce into batches (cut at --max-batch rows or after
+              --max-wait-ms, whichever first); a full queue answers 503. Port 0
+              picks an ephemeral port; the bound address is printed as
+              `serving on http://...`. Batching never changes tokens: each row
+              is bit-identical to decoding its prompt alone.
+  alada export --ckpt DIR --out FILE [--vocab N] ...
+              reassemble weights from a sharded checkpoint (optimizer state
+              dropped) into one checksummed weights-only artifact that
+              `serve`/`generate` load directly
+  alada generate --ckpt DIR|FILE --tokens 3,4,5 [--max-new N] [--vocab N]
+              [--seq N]    one-shot greedy decode, printing {\"tokens\":[..]} —
+              the deterministic oracle the serve smoke gate compares against
   alada memory [--model gpt2-small|gpt2-xl|t5-small] [--batch N] [--ranks N]
   alada report [--out DIR]        render results/*.csv into results/REPORT.md
   alada info [--artifacts DIR]
@@ -638,6 +672,132 @@ fn dump_params(path: &str, params: &[alada::tensor::Tensor]) -> anyhow::Result<(
     std::fs::write(path, &bytes).with_context(|| format!("writing {path}"))?;
     println!("wrote {path} ({} bytes)", bytes.len());
     Ok(())
+}
+
+/// Shared `serve`/`generate` model construction: the checkpoint fixes
+/// the trunk; `--vocab`/`--seq` shape the deterministic serving head
+/// and must match between a server and its `generate` oracle.
+fn serve_model(args: &Args, max_batch: usize) -> anyhow::Result<MlpLm> {
+    let ckpt = args.str_or("ckpt", "");
+    anyhow::ensure!(!ckpt.is_empty(), "--ckpt DIR|FILE is required");
+    let vocab = args.usize_or("vocab", 32);
+    let seq = args.usize_or("seq", 32);
+    MlpLm::load(&ckpt, vocab, seq, max_batch)
+}
+
+/// Fit the optional serving tokenizer from `--corpus` (text requests
+/// need one; token-id requests don't).
+fn serve_tokenizer(args: &Args) -> anyhow::Result<Option<Tokenizer>> {
+    let Some(corpus) = args.flag("corpus").map(String::from) else {
+        return Ok(None);
+    };
+    let gran_flag = args.str_or("granularity", "char");
+    let gran = Granularity::parse(&gran_flag).ok_or_else(|| {
+        anyhow::anyhow!("unknown --granularity {gran_flag:?} (known: char, word)")
+    })?;
+    let vocab = args.usize_or("vocab", 32);
+    anyhow::ensure!(vocab > 4, "--corpus needs --vocab > 4 (PAD, SEP, UNK + content)");
+    let text = std::fs::read_to_string(&corpus)
+        .with_context(|| format!("reading tokenizer corpus {corpus}"))?;
+    let tok = Tokenizer::fit(&text, gran, vocab);
+    println!("tokenizer: {} pieces ({gran_flag}) from {corpus}", tok.vocab_size());
+    Ok(Some(tok))
+}
+
+fn cmd_serve(args: &Args) -> i32 {
+    let run = || -> anyhow::Result<()> {
+        let addr = args.str_or("addr", "127.0.0.1:8080");
+        let max_batch = args.usize_or("max-batch", 8);
+        let max_wait_ms = args.u64_or("max-wait-ms", 5);
+        let queue_cap = args.usize_or("queue-cap", 64);
+        let workers = args.usize_or("workers", 2);
+        let tokenizer = serve_tokenizer(args)?;
+        let model = serve_model(args, max_batch)?;
+        warn_unknown(args);
+        println!(
+            "model: {} (step {}, {} param elems, vocab {}, seq {})",
+            model.meta.artifact,
+            model.meta.step,
+            model.param_elems(),
+            model.vocab(),
+            model.seq()
+        );
+        let cfg = ServeConfig {
+            addr,
+            max_batch,
+            max_wait: Duration::from_millis(max_wait_ms),
+            queue_cap,
+            workers,
+        };
+        let server = Server::start(&cfg, model, tokenizer)?;
+        // scripts parse this exact line to find the ephemeral port
+        println!("serving on http://{}", server.addr());
+        server.join();
+        Ok(())
+    };
+    match run() {
+        Ok(()) => 0,
+        Err(e) => fail(e),
+    }
+}
+
+fn cmd_export(args: &Args) -> i32 {
+    let run = || -> anyhow::Result<()> {
+        let ckpt = args.str_or("ckpt", "");
+        let out = args.str_or("out", "");
+        warn_unknown(args);
+        anyhow::ensure!(
+            !ckpt.is_empty() && !out.is_empty(),
+            "export needs --ckpt DIR|FILE and --out FILE"
+        );
+        let (meta, params) = checkpoint::load_weights(&ckpt)?;
+        checkpoint::export_weights(&out, &meta, &params)?;
+        println!(
+            "exported {ckpt} -> {out}: {} param elems ({} tensors), step {}, optimizer {}",
+            meta.param_elems,
+            meta.shapes.len(),
+            meta.step,
+            meta.optimizer
+        );
+        Ok(())
+    };
+    match run() {
+        Ok(()) => 0,
+        Err(e) => fail(e),
+    }
+}
+
+/// One-shot decode printing exactly `{"tokens":[..]}` on stdout — the
+/// deterministic oracle `scripts/check.sh` compares served output to.
+fn cmd_generate(args: &Args) -> i32 {
+    let run = || -> anyhow::Result<()> {
+        let tokens_flag = args.str_or("tokens", "");
+        let max_new = args.usize_or("max-new", 16);
+        let model = serve_model(args, 1)?;
+        warn_unknown(args);
+        anyhow::ensure!(!tokens_flag.is_empty(), "generate needs --tokens N,N,..");
+        let prompt_ids: Vec<i32> = tokens_flag
+            .split(',')
+            .map(|t| {
+                t.trim().parse::<i32>().map_err(|_| anyhow::anyhow!("bad token {t:?} in --tokens"))
+            })
+            .collect::<anyhow::Result<_>>()?;
+        let seq = model.seq();
+        anyhow::ensure!(
+            !prompt_ids.is_empty() && prompt_ids.len() <= seq,
+            "--tokens must hold 1..={seq} ids"
+        );
+        let mut prompt = vec![0i32; seq];
+        prompt[..prompt_ids.len()].copy_from_slice(&prompt_ids);
+        let out = greedy_decode(&model, &[prompt], &[prompt_ids.len()], max_new.min(seq))?;
+        let list: Vec<String> = out[0].iter().map(|t| t.to_string()).collect();
+        println!("{{\"tokens\":[{}]}}", list.join(","));
+        Ok(())
+    };
+    match run() {
+        Ok(()) => 0,
+        Err(e) => fail(e),
+    }
 }
 
 fn cmd_memory(args: &Args) -> i32 {

@@ -1,0 +1,374 @@
+//! Request coalescing: the core of the serve subsystem.
+//!
+//! Connection threads `submit` validated generation requests into a
+//! bounded FIFO. A cutter thread slices batches on size-or-deadline —
+//! as soon as `max_batch` rows are waiting, or `max_wait` after the
+//! OLDEST waiting request arrived, whichever comes first — and hands
+//! each batch to a worker pool that runs one batched `greedy_decode`
+//! per batch. Backpressure is end-to-end: the batch hand-off channel
+//! holds at most one batch per worker, so when every worker is busy the
+//! cutter blocks, the queue fills, and `submit` answers `Full` (HTTP
+//! 503) instead of growing without bound.
+//!
+//! Rows are causal and independent in the model (see `serve::model`),
+//! so coalescing changes latency, never tokens: each row of a batched
+//! decode is bit-identical to decoding that prompt alone. Per-request
+//! `max_new` is honoured by decoding the batch to the largest request's
+//! budget and truncating each row to its own.
+
+use std::collections::VecDeque;
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::serve::stats::ServeStats;
+use crate::train::decode::{greedy_decode, TokenLogits};
+use crate::util::log;
+
+/// One validated generation request (prompt already padded to `seq`).
+pub struct GenRequest {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    pub start: usize,
+    pub max_new: usize,
+}
+
+/// What a worker sends back for one request.
+pub struct GenResult {
+    /// Generated tokens, truncated to the request's own `max_new`.
+    pub tokens: Vec<i32>,
+    /// Time spent queued before its batch was cut, microseconds.
+    pub queue_us: u64,
+    /// Wall time of the batched decode this row rode in, microseconds.
+    pub decode_us: u64,
+    /// Rows in that batch.
+    pub batch: usize,
+}
+
+/// `submit` outcome: a reply channel, or backpressure.
+pub enum Submit {
+    Queued(mpsc::Receiver<Result<GenResult>>),
+    /// Queue at capacity (or shutting down) — the caller answers 503.
+    Full,
+}
+
+struct Pending {
+    req: GenRequest,
+    enqueued: Instant,
+    resp: mpsc::Sender<Result<GenResult>>,
+}
+
+#[derive(Default)]
+struct Queue {
+    items: VecDeque<Pending>,
+    closed: bool,
+}
+
+/// The coalescer: shared queue + cutter + workers.
+pub struct Batcher {
+    queue: Mutex<Queue>,
+    cond: Condvar,
+    cap: usize,
+    threads: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl Batcher {
+    /// Spawn the cutter and `workers` decode workers over `model`.
+    /// `max_batch` is clamped to the model's own limit; every cut batch
+    /// is recorded into `stats`.
+    pub fn start<M: TokenLogits + Send + Sync + 'static>(
+        model: Arc<M>,
+        max_batch: usize,
+        max_wait: Duration,
+        queue_cap: usize,
+        workers: usize,
+        stats: Arc<ServeStats>,
+    ) -> Arc<Batcher> {
+        let max_batch = max_batch.clamp(1, model.max_batch());
+        let workers = workers.max(1);
+        let queue_cap = queue_cap.max(1);
+        let batcher = Arc::new(Batcher {
+            queue: Mutex::new(Queue::default()),
+            cond: Condvar::new(),
+            cap: queue_cap,
+            threads: Mutex::new(Vec::new()),
+        });
+
+        // one batch in flight per worker: full workers stall the cutter,
+        // which backs the queue up into 503s
+        let (batch_tx, batch_rx) = mpsc::sync_channel::<Vec<Pending>>(workers);
+        let batch_rx = Arc::new(Mutex::new(batch_rx));
+
+        let mut threads = Vec::with_capacity(workers + 1);
+        {
+            let b = Arc::clone(&batcher);
+            threads.push(
+                std::thread::Builder::new()
+                    .name("serve-cutter".into())
+                    .spawn(move || b.run_cutter(max_batch, max_wait, batch_tx, &stats))
+                    .expect("spawn cutter"),
+            );
+        }
+        for w in 0..workers {
+            let rx = Arc::clone(&batch_rx);
+            let m = Arc::clone(&model);
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("serve-worker-{w}"))
+                    .spawn(move || run_worker(&*m, &rx))
+                    .expect("spawn worker"),
+            );
+        }
+        *batcher.threads.lock().unwrap() = threads;
+        batcher
+    }
+
+    /// Enqueue one request; `Full` once `queue_cap` rows are waiting.
+    pub fn submit(&self, req: GenRequest) -> Submit {
+        let (tx, rx) = mpsc::channel();
+        {
+            let mut q = self.queue.lock().unwrap();
+            if q.closed || q.items.len() >= self.cap {
+                return Submit::Full;
+            }
+            q.items.push_back(Pending { req, enqueued: Instant::now(), resp: tx });
+        }
+        self.cond.notify_all();
+        Submit::Queued(rx)
+    }
+
+    /// Rows currently waiting (tests and `/stats` introspection).
+    pub fn queued(&self) -> usize {
+        self.queue.lock().unwrap().items.len()
+    }
+
+    /// Stop accepting work, drain what's queued, join every thread.
+    pub fn shutdown(&self) {
+        self.queue.lock().unwrap().closed = true;
+        self.cond.notify_all();
+        let threads = std::mem::take(&mut *self.threads.lock().unwrap());
+        for t in threads {
+            let _ = t.join();
+        }
+    }
+
+    fn run_cutter(
+        &self,
+        max_batch: usize,
+        max_wait: Duration,
+        tx: mpsc::SyncSender<Vec<Pending>>,
+        stats: &ServeStats,
+    ) {
+        loop {
+            let batch = {
+                let mut q = self.queue.lock().unwrap();
+                // sleep until there's something to time against
+                while q.items.is_empty() && !q.closed {
+                    q = self.cond.wait(q).unwrap();
+                }
+                if q.items.is_empty() && q.closed {
+                    return; // drained and closed: workers end when tx drops
+                }
+                // cut on size, or max_wait after the oldest arrival
+                let deadline = q.items[0].enqueued + max_wait;
+                loop {
+                    if q.items.len() >= max_batch || q.closed {
+                        break;
+                    }
+                    let now = Instant::now();
+                    if now >= deadline {
+                        break;
+                    }
+                    let (guard, _) = self.cond.wait_timeout(q, deadline - now).unwrap();
+                    q = guard;
+                    if q.items.is_empty() {
+                        break; // closed-and-drained race; outer loop re-checks
+                    }
+                }
+                let n = q.items.len().min(max_batch);
+                q.items.drain(..n).collect::<Vec<Pending>>()
+            };
+            if batch.is_empty() {
+                continue;
+            }
+            stats.note_batch(batch.len());
+            // blocks while every worker is busy — intended backpressure
+            if tx.send(batch).is_err() {
+                return;
+            }
+        }
+    }
+}
+
+fn run_worker<M: TokenLogits + ?Sized>(model: &M, rx: &Mutex<mpsc::Receiver<Vec<Pending>>>) {
+    loop {
+        let batch = match rx.lock().unwrap().recv() {
+            Ok(b) => b,
+            Err(_) => return, // cutter gone: shutdown
+        };
+        decode_batch(model, batch);
+    }
+}
+
+/// Run one batched decode and fan results back out per-request.
+fn decode_batch<M: TokenLogits + ?Sized>(model: &M, batch: Vec<Pending>) {
+    let rows = batch.len();
+    let prompts: Vec<Vec<i32>> = batch.iter().map(|p| p.req.prompt.clone()).collect();
+    let starts: Vec<usize> = batch.iter().map(|p| p.req.start).collect();
+    let budget = batch.iter().map(|p| p.req.max_new).max().unwrap_or(0);
+    let t0 = Instant::now();
+    let decoded = greedy_decode(model, &prompts, &starts, budget);
+    let decode_us = t0.elapsed().as_micros() as u64;
+    match decoded {
+        Ok(outs) => {
+            for (pending, mut tokens) in batch.into_iter().zip(outs) {
+                // a row decoded past its own budget (another row's) is
+                // truncated — identical to decoding it alone, because
+                // rows are causal and independent
+                tokens.truncate(pending.req.max_new);
+                let queue_us = t0.duration_since(pending.enqueued).as_micros() as u64;
+                let _ = pending
+                    .resp
+                    .send(Ok(GenResult { tokens, queue_us, decode_us, batch: rows }));
+            }
+        }
+        Err(e) => {
+            // submit-side validation should make this unreachable; if a
+            // batch still fails, every rider gets the error (HTTP 500)
+            log::error(&format!("batched decode of {rows} rows failed: {e:#}"));
+            for pending in batch {
+                let _ = pending.resp.send(Err(anyhow!("batched decode failed: {e:#}")));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use anyhow::ensure;
+
+    /// Toy model: next token is `(last + 1) % vocab` (see decode tests).
+    struct Succ {
+        seq: usize,
+        vocab: usize,
+        max_batch: usize,
+        delay: Duration,
+    }
+
+    impl TokenLogits for Succ {
+        fn seq(&self) -> usize {
+            self.seq
+        }
+
+        fn vocab(&self) -> usize {
+            self.vocab
+        }
+
+        fn max_batch(&self) -> usize {
+            self.max_batch
+        }
+
+        fn logits(&self, tokens: &[i32], rows: usize) -> Result<Vec<f32>> {
+            ensure!(tokens.len() == rows * self.seq, "bad token buffer");
+            std::thread::sleep(self.delay);
+            let (l, v) = (self.seq, self.vocab);
+            let mut out = vec![0.0f32; rows * l * v];
+            for r in 0..rows {
+                for p in 0..l {
+                    let next = (tokens[r * l + p] as usize + 1) % v;
+                    out[(r * l + p) * v + next] = 1.0;
+                }
+            }
+            Ok(out)
+        }
+    }
+
+    fn model(delay_ms: u64) -> Arc<Succ> {
+        Arc::new(Succ { seq: 8, vocab: 16, max_batch: 8, delay: Duration::from_millis(delay_ms) })
+    }
+
+    fn stats() -> Arc<ServeStats> {
+        Arc::new(ServeStats::new())
+    }
+
+    fn req(id: u64, first: i32, max_new: usize) -> GenRequest {
+        let mut prompt = vec![0i32; 8];
+        prompt[0] = first;
+        GenRequest { id, prompt, start: 1, max_new }
+    }
+
+    #[test]
+    fn single_request_round_trips() {
+        let b = Batcher::start(model(0), 4, Duration::from_millis(1), 8, 1, stats());
+        let rx = match b.submit(req(1, 3, 3)) {
+            Submit::Queued(rx) => rx,
+            Submit::Full => panic!("queue unexpectedly full"),
+        };
+        let out = rx.recv().unwrap().unwrap();
+        assert_eq!(out.tokens, vec![4, 5, 6]);
+        assert_eq!(out.batch, 1);
+        b.shutdown();
+    }
+
+    #[test]
+    fn requests_coalesce_into_one_batch() {
+        // deadline far out: the cut must come from reaching max_batch
+        let st = stats();
+        let b = Batcher::start(model(0), 2, Duration::from_secs(5), 8, 1, Arc::clone(&st));
+        let rx1 = match b.submit(req(1, 2, 2)) {
+            Submit::Queued(rx) => rx,
+            Submit::Full => panic!("full"),
+        };
+        let rx2 = match b.submit(req(2, 9, 4)) {
+            Submit::Queued(rx) => rx,
+            Submit::Full => panic!("full"),
+        };
+        let (a, c) = (rx1.recv().unwrap().unwrap(), rx2.recv().unwrap().unwrap());
+        assert_eq!(a.batch, 2);
+        assert_eq!(c.batch, 2);
+        // per-request max_new survives riding in a shared batch
+        assert_eq!(a.tokens, vec![3, 4]);
+        assert_eq!(c.tokens, vec![10, 11, 12, 13]);
+        b.shutdown();
+        let j = st.to_json();
+        assert_eq!(j.get("batches").unwrap().as_usize(), Some(1));
+        assert_eq!(j.get("batched_requests").unwrap().as_usize(), Some(2));
+    }
+
+    #[test]
+    fn full_queue_bounces_instead_of_growing() {
+        // cap 1 and a long deadline: the first request parks in the
+        // queue, so the second must bounce deterministically
+        let b = Batcher::start(model(0), 8, Duration::from_secs(2), 1, 1, stats());
+        let rx = match b.submit(req(1, 3, 1)) {
+            Submit::Queued(rx) => rx,
+            Submit::Full => panic!("first submit bounced"),
+        };
+        assert!(matches!(b.submit(req(2, 4, 1)), Submit::Full));
+        b.shutdown(); // drains: the parked request still completes
+        assert_eq!(rx.recv().unwrap().unwrap().tokens, vec![4]);
+    }
+
+    #[test]
+    fn shutdown_drains_queued_work() {
+        let b = Batcher::start(model(5), 4, Duration::from_secs(2), 16, 2, stats());
+        let rxs: Vec<_> = (0..6)
+            .map(|i| match b.submit(req(i, (i % 10) as i32 + 2, 2)) {
+                Submit::Queued(rx) => rx,
+                Submit::Full => panic!("full"),
+            })
+            .collect();
+        b.shutdown();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let out = rx.recv().unwrap().unwrap();
+            let first = (i % 10) as i32 + 3;
+            assert_eq!(out.tokens, vec![first, first + 1]);
+        }
+        // and new work is refused after shutdown
+        assert!(matches!(b.submit(req(99, 2, 1)), Submit::Full));
+    }
+}

@@ -1,0 +1,220 @@
+//! Dependency-free HTTP/1.1, exactly as much as the serve front-end
+//! needs: parse one request per connection, write one response, close.
+//!
+//! Scope is deliberate — no keep-alive, no chunked encoding, no TLS. A
+//! closed-loop loopback client opens a fresh connection per request, so
+//! `Connection: close` keeps the state machine trivial while the
+//! batcher, not the socket layer, provides the throughput. Both sides
+//! are capped (8 KiB headers, 1 MiB body) so a garbage peer can't make
+//! a connection thread allocate unboundedly.
+
+use std::io::{Read, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::Duration;
+
+use anyhow::{bail, ensure, Context, Result};
+
+/// Header-section cap: request line + headers must fit here.
+const MAX_HEAD: usize = 8 * 1024;
+/// Body cap, far above any sane `/v1/generate` payload.
+pub const MAX_BODY: usize = 1024 * 1024;
+
+/// One parsed request: the serve routes need nothing beyond this.
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub body: String,
+}
+
+/// Read one HTTP/1.1 request off a stream. `Ok(None)` means the peer
+/// closed before sending anything (a health-probe connect-and-drop);
+/// anything malformed or over the caps is an error the caller answers
+/// with 400.
+pub fn read_request(stream: &mut TcpStream) -> Result<Option<Request>> {
+    let mut buf: Vec<u8> = Vec::with_capacity(1024);
+    let mut chunk = [0u8; 1024];
+    let head_end = loop {
+        if let Some(i) = find_head_end(&buf) {
+            break i;
+        }
+        ensure!(buf.len() <= MAX_HEAD, "request head exceeds {MAX_HEAD} bytes");
+        let n = stream.read(&mut chunk).context("reading request")?;
+        if n == 0 {
+            if buf.is_empty() {
+                return Ok(None);
+            }
+            bail!("connection closed mid-request");
+        }
+        buf.extend_from_slice(&chunk[..n]);
+    };
+
+    let head = std::str::from_utf8(&buf[..head_end]).context("request head is not utf-8")?;
+    let mut lines = head.split("\r\n");
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split(' ');
+    let method = parts.next().unwrap_or("").to_string();
+    let path = parts.next().unwrap_or("").to_string();
+    let version = parts.next().unwrap_or("");
+    ensure!(
+        !method.is_empty() && !path.is_empty() && version.starts_with("HTTP/1."),
+        "malformed request line {request_line:?}"
+    );
+
+    let mut content_length = 0usize;
+    for line in lines {
+        if let Some((k, v)) = line.split_once(':') {
+            if k.trim().eq_ignore_ascii_case("content-length") {
+                content_length =
+                    v.trim().parse().with_context(|| format!("bad content-length {v:?}"))?;
+            }
+        }
+    }
+    ensure!(content_length <= MAX_BODY, "request body exceeds {MAX_BODY} bytes");
+
+    let mut body = buf[head_end + 4..].to_vec();
+    while body.len() < content_length {
+        let n = stream.read(&mut chunk).context("reading request body")?;
+        ensure!(n > 0, "connection closed mid-body");
+        body.extend_from_slice(&chunk[..n]);
+    }
+    body.truncate(content_length);
+    let body = String::from_utf8(body).context("request body is not utf-8")?;
+    Ok(Some(Request { method, path, body }))
+}
+
+fn find_head_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "",
+    }
+}
+
+/// Write one response and flush. The connection is close-delimited, so
+/// Content-Length plus `Connection: close` is the whole contract.
+pub fn respond(stream: &mut TcpStream, status: u16, content_type: &str, body: &str) -> Result<()> {
+    let head = format!(
+        "HTTP/1.1 {status} {}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        reason(status),
+        body.len()
+    );
+    stream.write_all(head.as_bytes()).context("writing response head")?;
+    stream.write_all(body.as_bytes()).context("writing response body")?;
+    stream.flush().context("flushing response")?;
+    Ok(())
+}
+
+/// Minimal blocking client: one request, one response, used by the
+/// serve tests, `bench_serve`, and ad-hoc tooling. Returns
+/// `(status, body)`.
+pub fn request<A: ToSocketAddrs>(
+    addr: A,
+    method: &str,
+    path: &str,
+    body: Option<&str>,
+) -> Result<(u16, String)> {
+    let mut stream = TcpStream::connect(addr).context("connecting to server")?;
+    stream
+        .set_read_timeout(Some(Duration::from_secs(30)))
+        .context("setting client read timeout")?;
+    let body = body.unwrap_or("");
+    let req = format!(
+        "{method} {path} HTTP/1.1\r\nHost: alada\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(req.as_bytes()).context("writing request")?;
+    let mut raw = Vec::new();
+    stream.read_to_end(&mut raw).context("reading response")?;
+    parse_response(&raw)
+}
+
+fn parse_response(raw: &[u8]) -> Result<(u16, String)> {
+    let text = std::str::from_utf8(raw).context("response is not utf-8")?;
+    let (head, body) =
+        text.split_once("\r\n\r\n").context("response has no header/body separator")?;
+    let status_line = head.lines().next().unwrap_or("");
+    let status: u16 = status_line
+        .split(' ')
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .with_context(|| format!("malformed status line {status_line:?}"))?;
+    Ok((status, body.to_string()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+
+    /// One loopback exchange through both halves of this module.
+    #[test]
+    fn client_and_server_halves_round_trip() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            let req = read_request(&mut s).unwrap().unwrap();
+            assert_eq!(req.method, "POST");
+            assert_eq!(req.path, "/v1/generate");
+            assert_eq!(req.body, r#"{"x":1}"#);
+            respond(&mut s, 200, "application/json", r#"{"ok":true}"#).unwrap();
+        });
+        let (status, body) = request(addr, "POST", "/v1/generate", Some(r#"{"x":1}"#)).unwrap();
+        server.join().unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(body, r#"{"ok":true}"#);
+    }
+
+    #[test]
+    fn empty_connection_reads_as_none() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = std::thread::spawn(move || {
+            drop(TcpStream::connect(addr).unwrap());
+        });
+        let (mut s, _) = listener.accept().unwrap();
+        assert!(read_request(&mut s).unwrap().is_none());
+        client.join().unwrap();
+    }
+
+    #[test]
+    fn malformed_request_lines_are_errors() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.write_all(b"NOT-HTTP\r\n\r\n").unwrap();
+        });
+        let (mut s, _) = listener.accept().unwrap();
+        assert!(read_request(&mut s).is_err());
+        client.join().unwrap();
+    }
+
+    #[test]
+    fn oversized_content_length_is_rejected_up_front() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let too_big = MAX_BODY + 1;
+        let client = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            let req = format!("POST /x HTTP/1.1\r\nContent-Length: {too_big}\r\n\r\n");
+            s.write_all(req.as_bytes()).unwrap();
+            // hold the socket open so the server fails on the cap, not EOF
+            let mut buf = [0u8; 16];
+            let _ = s.read(&mut buf);
+        });
+        let (mut s, _) = listener.accept().unwrap();
+        let err = read_request(&mut s).unwrap_err();
+        assert!(err.to_string().contains("exceeds"), "{err}");
+        drop(s);
+        client.join().unwrap();
+    }
+}

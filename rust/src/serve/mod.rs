@@ -1,0 +1,69 @@
+//! `alada serve` — batched HTTP inference over sharded checkpoints.
+//!
+//! The serving half of the memory-efficiency story: training with the
+//! rank-one factored second moment makes big matrices affordable, and
+//! this subsystem makes the resulting checkpoints *usable* without any
+//! training machinery — `alada serve --ckpt DIR --addr HOST:PORT` loads
+//! a v2 sharded checkpoint (weights only, reassembled from any saved
+//! rank count) or an `alada export`ed weights artifact, and answers:
+//!
+//! * `POST /v1/generate` — `{"tokens": [..]}` or `{"text": ".."}` plus
+//!   optional `"max_new"`; responds with generated token ids (and text
+//!   when a tokenizer is loaded) plus per-request latency accounting,
+//! * `GET /healthz` — liveness,
+//! * `GET /stats` — the [`stats::ServeStats`] counter block.
+//!
+//! Layout mirrors the request path:
+//!
+//! * [`model`] — `MlpLm`, the pure-Rust causal LM over checkpoint
+//!   weights (implements `train::decode::TokenLogits`),
+//! * [`http`] — dependency-free HTTP/1.1 parse/respond + a blocking
+//!   client for tests and benches,
+//! * [`batcher`] — the request coalescer: bounded queue, size-or-
+//!   deadline cutter, decode worker pool, 503 backpressure,
+//! * [`stats`] — lock-free serving counters,
+//! * [`server`] — routing, validation, lifecycle.
+//!
+//! The load-bearing invariant, pinned by `rust/tests/serve_http.rs`:
+//! the model is causal and rows are independent, so a batched decode is
+//! bit-identical per row to decoding each prompt alone — coalescing is
+//! purely a latency/throughput trade, never a correctness one.
+
+pub mod batcher;
+pub mod http;
+pub mod model;
+pub mod server;
+pub mod stats;
+
+use std::time::Duration;
+
+pub use batcher::{Batcher, GenRequest, GenResult, Submit};
+pub use model::MlpLm;
+pub use server::Server;
+pub use stats::ServeStats;
+
+/// Front-end knobs (`alada serve` flags map 1:1 onto these).
+pub struct ServeConfig {
+    /// Bind address; port 0 picks an ephemeral port.
+    pub addr: String,
+    /// Largest coalesced batch (clamped to the model's max batch).
+    pub max_batch: usize,
+    /// Longest a request may wait for co-riders before its batch cuts.
+    pub max_wait: Duration,
+    /// Waiting-request bound: submissions past this bounce with 503.
+    pub queue_cap: usize,
+    /// Decode worker threads.
+    pub workers: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            max_batch: 8,
+            max_wait: Duration::from_millis(5),
+            queue_cap: 64,
+            workers: 2,
+        }
+    }
+}

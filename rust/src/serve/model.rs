@@ -1,0 +1,390 @@
+//! The served model: a pure-Rust causal LM head over checkpoint weights.
+//!
+//! `alada serve` must answer requests from a `shard-train` checkpoint
+//! with no PJRT artifacts and no Python — the same "no runtime
+//! dependencies" constraint the shard engine lives under. The engine's
+//! training task is the teacher-student MLP (`shard::MlpTask`:
+//! `[h,d], [h], ([h,h],[h])…, [o,h], [o]`), so the serving model wraps
+//! exactly those tensors in a deterministic language-model head:
+//!
+//! * a FIXED token embedding table (seeded, a pure function of
+//!   (vocab, dim) — identical across processes and machines),
+//! * causal mean-pooling: the context vector at position p is the mean
+//!   of the embeddings of tokens 0..=p — position p's logits depend on
+//!   nothing to its right and on no other row, which is what makes
+//!   batched decoding bit-identical to single-row decoding,
+//! * the checkpoint MLP as the trunk (the trained weights ARE the
+//!   model), and
+//! * a FIXED readout projecting the o-dim trunk output to vocab logits.
+//!
+//! Every float op is a per-row `ops::matvec`/scalar chain in a fixed
+//! order, so outputs are bit-stable under any batch composition — the
+//! determinism contract rust/tests/serve_http.rs pins.
+
+use std::path::Path;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::tensor::{ops, Tensor};
+use crate::train::checkpoint::{self, WeightsMeta};
+use crate::train::decode::TokenLogits;
+use crate::util::Rng;
+
+/// Seed of the fixed embedding/readout streams. A constant: the head
+/// must be a pure function of (vocab, dim, out) so every server and
+/// every `alada generate` oracle agrees bit-for-bit.
+const HEAD_SEED: u64 = 0xa1ad_a5e7;
+
+/// The MLP-trunk causal LM the serve subsystem decodes with.
+pub struct MlpLm {
+    /// Trunk tensors in checkpoint order: `2 * depth + 2` of them.
+    layers: Vec<Tensor>,
+    depth: usize,
+    dim: usize,
+    out: usize,
+    vocab: usize,
+    seq: usize,
+    max_batch: usize,
+    /// `vocab x dim`, row-major, fixed.
+    embed: Vec<f32>,
+    /// `vocab x out`, row-major, fixed.
+    readout: Vec<f32>,
+    /// Where the weights came from (surfaced by `/stats` and logs).
+    pub meta: WeightsMeta,
+}
+
+impl MlpLm {
+    /// Build from checkpoint weights. `shapes`/`flat` come from
+    /// `checkpoint::load_weights`; `vocab`, `seq` and `max_batch` are
+    /// serving knobs (the checkpoint fixes only the trunk).
+    pub fn from_flat(
+        meta: WeightsMeta,
+        flat: &[f32],
+        vocab: usize,
+        seq: usize,
+        max_batch: usize,
+    ) -> Result<MlpLm> {
+        ensure!(vocab >= 4, "serving vocab {vocab} too small (PAD, SEP + 2 content ids minimum)");
+        ensure!(seq >= 2, "serving seq {seq} too short to hold a prompt and a generation");
+        ensure!(max_batch >= 1, "max_batch must be at least 1");
+        ensure!(
+            flat.len() == meta.param_elems,
+            "weights vector has {} elems, meta declares {}",
+            flat.len(),
+            meta.param_elems
+        );
+        let declared: usize =
+            meta.shapes.iter().map(|s| s.iter().product::<usize>().max(1)).sum();
+        ensure!(
+            declared == flat.len(),
+            "weights shapes cover {declared} elems but the vector holds {}",
+            flat.len()
+        );
+        let (dim, _hidden, depth, out) = infer_mlp_shape(&meta.shapes)?;
+        let mut layers = Vec::with_capacity(meta.shapes.len());
+        let mut off = 0usize;
+        for shape in &meta.shapes {
+            let n: usize = shape.iter().product::<usize>().max(1);
+            layers.push(Tensor::new(flat[off..off + n].to_vec(), shape));
+            off += n;
+        }
+        // Fixed head: two disjoint deterministic streams, scaled like the
+        // trunk init so logits stay O(1).
+        let mut erng = Rng::with_stream(HEAD_SEED, 1);
+        let escale = 1.0 / (dim as f32).sqrt();
+        let embed: Vec<f32> = (0..vocab * dim).map(|_| erng.normal() * escale).collect();
+        let mut rrng = Rng::with_stream(HEAD_SEED, 2);
+        let rscale = 1.0 / (out as f32).sqrt();
+        let readout: Vec<f32> = (0..vocab * out).map(|_| rrng.normal() * rscale).collect();
+        Ok(MlpLm { layers, depth, dim, out, vocab, seq, max_batch, embed, readout, meta })
+    }
+
+    /// Build straight from engine-shaped tensors (benches and tests).
+    pub fn from_params(
+        params: &[Tensor],
+        vocab: usize,
+        seq: usize,
+        max_batch: usize,
+    ) -> Result<MlpLm> {
+        let shapes: Vec<Vec<usize>> = params.iter().map(|t| t.shape().to_vec()).collect();
+        let mut flat = Vec::with_capacity(params.iter().map(Tensor::len).sum());
+        for t in params {
+            flat.extend_from_slice(t.data());
+        }
+        let meta = WeightsMeta {
+            artifact: "in-process".to_string(),
+            optimizer: "none".to_string(),
+            step: 0,
+            shapes,
+            param_elems: flat.len(),
+        };
+        Self::from_flat(meta, &flat, vocab, seq, max_batch)
+    }
+
+    /// Load from a checkpoint directory (any saved rank count) or an
+    /// exported weights artifact — the `--ckpt` entry point.
+    pub fn load<P: AsRef<Path>>(
+        path: P,
+        vocab: usize,
+        seq: usize,
+        max_batch: usize,
+    ) -> Result<MlpLm> {
+        let path = path.as_ref();
+        let (meta, flat) = checkpoint::load_weights(path)
+            .with_context(|| format!("loading model weights from {path:?}"))?;
+        Self::from_flat(meta, &flat, vocab, seq, max_batch)
+            .with_context(|| format!("building serving model from {path:?}"))
+    }
+
+    /// Trunk forward for one context vector: tanh MLP then the linear
+    /// output layer — the same math as the training task's forward.
+    fn trunk(&self, ctx: &[f32]) -> Vec<f32> {
+        let mut h = ctx.to_vec();
+        for l in 0..self.depth {
+            let (w, b) = (&self.layers[2 * l], &self.layers[2 * l + 1]);
+            let mut z = ops::matvec(w, &h);
+            for (zi, &bi) in z.iter_mut().zip(b.data()) {
+                *zi = (*zi + bi).tanh();
+            }
+            h = z;
+        }
+        let (w, b) = (&self.layers[2 * self.depth], &self.layers[2 * self.depth + 1]);
+        let mut z = ops::matvec(w, &h);
+        for (zi, &bi) in z.iter_mut().zip(b.data()) {
+            *zi += bi;
+        }
+        z
+    }
+
+    /// Logits for ONE position of one row given the running embedding
+    /// sum over tokens 0..=p.
+    fn position_logits(&self, sum: &[f32], p: usize, out: &mut [f32]) {
+        let inv = 1.0 / (p + 1) as f32;
+        let ctx: Vec<f32> = sum.iter().map(|s| s * inv).collect();
+        let h = self.trunk(&ctx);
+        for (t, o) in out.iter_mut().enumerate() {
+            *o = ops::dot(&self.readout[t * self.out..(t + 1) * self.out], &h);
+        }
+    }
+
+    /// Validate one row's tokens and return its running embedding sums
+    /// up to `upto` (inclusive): `sums[p] = Σ embed[token_q], q ≤ p`.
+    fn embed_sums(&self, row: &[i32], upto: usize) -> Result<Vec<Vec<f32>>> {
+        let d = self.dim;
+        let mut sums = Vec::with_capacity(upto + 1);
+        let mut sum = vec![0.0f32; d];
+        for (p, &tok) in row.iter().take(upto + 1).enumerate() {
+            ensure!(
+                tok >= 0 && (tok as usize) < self.vocab,
+                "token {tok} at position {p} outside vocab 0..{}",
+                self.vocab
+            );
+            let e = &self.embed[tok as usize * d..(tok as usize + 1) * d];
+            for (s, &x) in sum.iter_mut().zip(e) {
+                *s += x;
+            }
+            sums.push(sum.clone());
+        }
+        Ok(sums)
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    pub fn param_elems(&self) -> usize {
+        self.meta.param_elems
+    }
+}
+
+impl TokenLogits for MlpLm {
+    fn seq(&self) -> usize {
+        self.seq
+    }
+
+    fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    fn logits(&self, tokens: &[i32], rows: usize) -> Result<Vec<f32>> {
+        ensure!(rows >= 1 && rows <= self.max_batch, "bad row count {rows}");
+        let (l, v) = (self.seq, self.vocab);
+        ensure!(
+            tokens.len() == rows * l,
+            "token buffer has {} ids, {rows} rows x {l} positions need {}",
+            tokens.len(),
+            rows * l
+        );
+        let mut out = vec![0.0f32; rows * l * v];
+        for r in 0..rows {
+            let row = &tokens[r * l..(r + 1) * l];
+            let sums = self.embed_sums(row, l - 1)?;
+            for (p, sum) in sums.iter().enumerate() {
+                self.position_logits(sum, p, &mut out[(r * l + p) * v..(r * l + p + 1) * v]);
+            }
+        }
+        Ok(out)
+    }
+
+    /// The serving hot path: evaluate ONLY each row's frontier position
+    /// — one trunk pass per row per decode step instead of `seq`.
+    fn logits_at(&self, tokens: &[i32], rows: usize, pos: &[usize]) -> Result<Vec<f32>> {
+        ensure!(rows >= 1 && rows <= self.max_batch, "bad row count {rows}");
+        ensure!(pos.len() == rows, "got {} positions for {rows} rows", pos.len());
+        let (l, v) = (self.seq, self.vocab);
+        ensure!(
+            tokens.len() == rows * l,
+            "token buffer has {} ids, {rows} rows x {l} positions need {}",
+            tokens.len(),
+            rows * l
+        );
+        let mut out = vec![0.0f32; rows * v];
+        for r in 0..rows {
+            let p = pos[r];
+            ensure!(p < l, "row {r}: position {p} outside sequence length {l}");
+            let row = &tokens[r * l..(r + 1) * l];
+            let sums = self.embed_sums(row, p)?;
+            self.position_logits(&sums[p], p, &mut out[r * v..(r + 1) * v]);
+        }
+        Ok(out)
+    }
+}
+
+/// Recognise the engine's MLP shape pattern
+/// `[h,d], [h], ([h,h],[h])*(depth-1), [o,h], [o]` and return
+/// `(dim, hidden, depth, out)`. Anything else (opaque session blobs,
+/// foreign checkpoints) is a clear usage error.
+fn infer_mlp_shape(shapes: &[Vec<usize>]) -> Result<(usize, usize, usize, usize)> {
+    if shapes.len() < 4 || shapes.len() % 2 != 0 {
+        bail!(
+            "checkpoint has {} tensors; a servable MLP checkpoint alternates {} \
+             weight/bias pairs (shapes {shapes:?})",
+            shapes.len(),
+            "[rows,cols]/[rows]"
+        );
+    }
+    let depth = shapes.len() / 2 - 1;
+    for l in 0..=depth {
+        let (w, b) = (&shapes[2 * l], &shapes[2 * l + 1]);
+        ensure!(
+            w.len() == 2 && b.len() == 1 && w[0] == b[0],
+            "tensor pair {l} has shapes {w:?}/{b:?}, expected [rows,cols]/[rows]"
+        );
+        if l > 0 {
+            ensure!(
+                w[1] == shapes[2 * (l - 1)][0],
+                "layer {l} consumes {} features but the previous layer produces {}",
+                w[1],
+                shapes[2 * (l - 1)][0]
+            );
+        }
+    }
+    let dim = shapes[0][1];
+    let hidden = shapes[0][0];
+    let out = shapes[2 * depth][0];
+    Ok((dim, hidden, depth, out))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::shard::{MlpTask, ShardTask};
+    use crate::train::decode::greedy_decode;
+
+    fn model() -> MlpLm {
+        let params = MlpTask::new(6, 10, 2, 4, 16, 8, 42).init_params();
+        MlpLm::from_params(&params, 16, 12, 4).expect("model")
+    }
+
+    #[test]
+    fn shape_inference_accepts_engine_checkpoints() {
+        let shapes = vec![vec![10, 6], vec![10], vec![10, 10], vec![10], vec![4, 10], vec![4]];
+        assert_eq!(infer_mlp_shape(&shapes).unwrap(), (6, 10, 2, 4));
+        // depth-1 net
+        let shapes = vec![vec![8, 3], vec![8], vec![2, 8], vec![2]];
+        assert_eq!(infer_mlp_shape(&shapes).unwrap(), (3, 8, 1, 2));
+    }
+
+    #[test]
+    fn shape_inference_rejects_foreign_checkpoints() {
+        // opaque session blob: one flat vector
+        assert!(infer_mlp_shape(&[vec![100]]).is_err());
+        // odd tensor count
+        assert!(infer_mlp_shape(&[vec![4, 2], vec![4], vec![2, 4]]).is_err());
+        // bias/weight row mismatch
+        assert!(infer_mlp_shape(&[vec![4, 2], vec![3], vec![2, 4], vec![2]]).is_err());
+        // layer width mismatch
+        assert!(infer_mlp_shape(&[vec![4, 2], vec![4], vec![2, 5], vec![2]]).is_err());
+    }
+
+    #[test]
+    fn full_and_positional_logits_agree_bitwise() {
+        let m = model();
+        let l = m.seq();
+        let mut tokens = vec![0i32; 2 * l];
+        for (i, t) in [3, 5, 2, 7].iter().enumerate() {
+            tokens[i] = *t;
+        }
+        for (i, t) in [9, 4].iter().enumerate() {
+            tokens[l + i] = *t;
+        }
+        let full = m.logits(&tokens, 2).unwrap();
+        let at = m.logits_at(&tokens, 2, &[3, 1]).unwrap();
+        let v = m.vocab();
+        assert_eq!(&at[..v], &full[(3) * v..(3 + 1) * v]);
+        assert_eq!(&at[v..], &full[(l + 1) * v..(l + 2) * v]);
+    }
+
+    #[test]
+    fn rows_decode_independently_of_batch_composition() {
+        let m = model();
+        let l = m.seq();
+        let pad = |toks: &[i32]| {
+            let mut row = vec![0i32; l];
+            row[..toks.len()].copy_from_slice(toks);
+            row
+        };
+        let a = pad(&[3, 5, 2]);
+        let alone = greedy_decode(&m, &[a.clone()], &[3], 6).unwrap();
+        let mixed = greedy_decode(
+            &m,
+            &[pad(&[9]), a.clone(), pad(&[7, 7, 7, 7, 7])],
+            &[1, 3, 5],
+            6,
+        )
+        .unwrap();
+        assert_eq!(alone[0], mixed[1], "batch composition leaked into a row");
+        // and the same call twice is bit-identical
+        let again = greedy_decode(&m, &[a], &[3], 6).unwrap();
+        assert_eq!(alone, again);
+    }
+
+    #[test]
+    fn out_of_vocab_tokens_are_usage_errors() {
+        let m = model();
+        let mut row = vec![0i32; m.seq()];
+        row[0] = 99;
+        assert!(m.logits(&row, 1).is_err());
+        row[0] = -1;
+        assert!(m.logits_at(&row, 1, &[0]).is_err());
+    }
+
+    #[test]
+    fn head_is_deterministic_across_instances() {
+        let params = MlpTask::new(6, 10, 2, 4, 16, 8, 42).init_params();
+        let a = MlpLm::from_params(&params, 16, 12, 4).unwrap();
+        let b = MlpLm::from_params(&params, 16, 12, 4).unwrap();
+        let tokens: Vec<i32> = (0..12).map(|i| (i % 16) as i32).collect();
+        let la = a.logits(&tokens, 1).unwrap();
+        let lb = b.logits(&tokens, 1).unwrap();
+        assert!(la.iter().zip(&lb).all(|(x, y)| x.to_bits() == y.to_bits()));
+    }
+}

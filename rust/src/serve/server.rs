@@ -1,0 +1,310 @@
+//! The HTTP front-end: routing, validation, backpressure, lifecycle.
+//!
+//! `Server::start` binds the address (port 0 picks an ephemeral port —
+//! `addr()` reports the real one), spawns an accept loop, and handles
+//! each connection on its own thread: parse one request, route it,
+//! answer, close. All generation flows through the shared [`Batcher`];
+//! the connection thread blocks on its reply channel, so slow decodes
+//! cost threads, not correctness, and the bounded queue turns overload
+//! into `503` at submit time.
+//!
+//! Validation happens HERE, before anything enqueues: malformed JSON,
+//! bad token ids, oversized prompts and absent-tokenizer text requests
+//! are all `400` with a JSON error body. A request that reaches the
+//! batcher can only fail decode through a server bug, which maps to
+//! `500` and is counted in `ServeStats::errors`.
+
+use std::collections::BTreeMap;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::data::Tokenizer;
+use crate::serve::batcher::{Batcher, GenRequest, Submit};
+use crate::serve::http::{self, Request};
+use crate::serve::model::MlpLm;
+use crate::serve::stats::ServeStats;
+use crate::serve::ServeConfig;
+use crate::train::decode::TokenLogits;
+use crate::util::{log, Json};
+
+/// `max_new` when a request doesn't set one.
+const DEFAULT_MAX_NEW: usize = 16;
+
+struct Inner {
+    model: Arc<MlpLm>,
+    tokenizer: Option<Tokenizer>,
+    batcher: Arc<Batcher>,
+    stats: Arc<ServeStats>,
+    next_id: AtomicU64,
+    stop: AtomicBool,
+}
+
+/// A running inference server.
+pub struct Server {
+    inner: Arc<Inner>,
+    addr: SocketAddr,
+    accept: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl Server {
+    /// Bind `cfg.addr`, start the batcher and the accept loop.
+    pub fn start(cfg: &ServeConfig, model: MlpLm, tokenizer: Option<Tokenizer>) -> Result<Server> {
+        let listener = TcpListener::bind(&cfg.addr)
+            .with_context(|| format!("binding serve address {}", cfg.addr))?;
+        let addr = listener.local_addr().context("resolving bound address")?;
+        let model = Arc::new(model);
+        let stats = Arc::new(ServeStats::new());
+        let batcher = Batcher::start(
+            Arc::clone(&model),
+            cfg.max_batch,
+            cfg.max_wait,
+            cfg.queue_cap,
+            cfg.workers,
+            Arc::clone(&stats),
+        );
+        let inner = Arc::new(Inner {
+            model,
+            tokenizer,
+            batcher,
+            stats,
+            next_id: AtomicU64::new(1),
+            stop: AtomicBool::new(false),
+        });
+        let accept = {
+            let inner = Arc::clone(&inner);
+            std::thread::Builder::new()
+                .name("serve-accept".into())
+                .spawn(move || accept_loop(&listener, &inner))
+                .context("spawning accept loop")?
+        };
+        log::info(&format!(
+            "serve: listening on {addr} (max_batch {}, max_wait {:?}, queue {}, workers {})",
+            cfg.max_batch, cfg.max_wait, cfg.queue_cap, cfg.workers
+        ));
+        Ok(Server { inner, addr, accept: Mutex::new(Some(accept)) })
+    }
+
+    /// The bound address (resolves `:0` to the real ephemeral port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn stats(&self) -> &ServeStats {
+        &self.inner.stats
+    }
+
+    /// Block on the accept loop — the `alada serve` foreground mode
+    /// (returns only after `shutdown`, or never).
+    pub fn join(&self) {
+        if let Some(t) = self.accept.lock().unwrap().take() {
+            let _ = t.join();
+        }
+    }
+
+    /// Stop accepting, drain the queue, join the accept loop.
+    pub fn shutdown(&self) {
+        self.inner.stop.store(true, Ordering::SeqCst);
+        // unblock accept() with a throwaway connection
+        let _ = TcpStream::connect(self.addr);
+        if let Some(t) = self.accept.lock().unwrap().take() {
+            let _ = t.join();
+        }
+        self.inner.batcher.shutdown();
+    }
+}
+
+fn accept_loop(listener: &TcpListener, inner: &Arc<Inner>) {
+    for stream in listener.incoming() {
+        if inner.stop.load(Ordering::SeqCst) {
+            return;
+        }
+        match stream {
+            Ok(stream) => {
+                let inner = Arc::clone(inner);
+                let spawned = std::thread::Builder::new()
+                    .name("serve-conn".into())
+                    .spawn(move || handle_conn(&inner, stream));
+                if let Err(e) = spawned {
+                    log::error(&format!("serve: spawning connection thread failed: {e}"));
+                }
+            }
+            Err(e) => log::warn(&format!("serve: accept failed: {e}")),
+        }
+    }
+}
+
+fn handle_conn(inner: &Inner, mut stream: TcpStream) {
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(10)));
+    let req = match http::read_request(&mut stream) {
+        Ok(Some(req)) => req,
+        Ok(None) => return, // connect-and-drop probe
+        Err(e) => {
+            let body = err_body(&format!("bad request: {e:#}"));
+            let _ = http::respond(&mut stream, 400, "application/json", &body);
+            return;
+        }
+    };
+    let (status, body) = route(inner, &req);
+    let _ = http::respond(&mut stream, status, "application/json", &body);
+}
+
+fn route(inner: &Inner, req: &Request) -> (u16, String) {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => (200, r#"{"status":"ok"}"#.to_string()),
+        ("GET", "/stats") => (200, stats_body(inner)),
+        ("POST", "/v1/generate") => generate(inner, &req.body),
+        ("GET" | "HEAD", "/v1/generate") => (405, err_body("use POST /v1/generate")),
+        _ => (404, err_body(&format!("no route for {} {}", req.method, req.path))),
+    }
+}
+
+fn stats_body(inner: &Inner) -> String {
+    let mut m = match inner.stats.to_json() {
+        Json::Obj(m) => m,
+        _ => BTreeMap::new(),
+    };
+    m.insert("queued".to_string(), Json::Num(inner.batcher.queued() as f64));
+    let meta = &inner.model.meta;
+    let mut model = BTreeMap::new();
+    model.insert("artifact".to_string(), Json::Str(meta.artifact.clone()));
+    model.insert("optimizer".to_string(), Json::Str(meta.optimizer.clone()));
+    model.insert("step".to_string(), Json::Num(meta.step as f64));
+    model.insert("param_elems".to_string(), Json::Num(meta.param_elems as f64));
+    model.insert("vocab".to_string(), Json::Num(inner.model.vocab() as f64));
+    model.insert("seq".to_string(), Json::Num(inner.model.seq() as f64));
+    model.insert("tokenizer".to_string(), Json::Bool(inner.tokenizer.is_some()));
+    m.insert("model".to_string(), Json::Obj(model));
+    Json::Obj(m).to_string_compact()
+}
+
+/// `POST /v1/generate`: validate fully, enqueue, wait, answer.
+fn generate(inner: &Inner, body: &str) -> (u16, String) {
+    inner.stats.requests.fetch_add(1, Ordering::Relaxed);
+    let id = inner.next_id.fetch_add(1, Ordering::Relaxed);
+    match parse_generate(inner, body) {
+        Err(msg) => {
+            inner.stats.bad_400.fetch_add(1, Ordering::Relaxed);
+            log::info(&format!("req {id}: rejected 400: {msg}"));
+            (400, err_body(&msg))
+        }
+        Ok((tokens, max_new)) => run_generate(inner, id, tokens, max_new),
+    }
+}
+
+/// Extract `(prompt_tokens, max_new)` or a 400 message. The prompt is
+/// NOT yet padded; token ids and lengths are fully validated here so
+/// nothing malformed ever reaches a decode worker.
+fn parse_generate(inner: &Inner, body: &str) -> std::result::Result<(Vec<i32>, usize), String> {
+    let json = Json::parse(body).map_err(|e| format!("body is not valid JSON: {e}"))?;
+    let (seq, vocab) = (inner.model.seq(), inner.model.vocab());
+
+    let max_new = match json.get("max_new") {
+        None => DEFAULT_MAX_NEW.min(seq),
+        Some(v) => {
+            let n = v.as_f64().ok_or("max_new must be a number")?;
+            if n < 0.0 || n.fract() != 0.0 {
+                return Err(format!("max_new must be a non-negative integer, got {n}"));
+            }
+            (n as usize).min(seq)
+        }
+    };
+
+    let tokens: Vec<i32> = match (json.get("tokens"), json.get("text")) {
+        (Some(_), Some(_)) => return Err("give tokens OR text, not both".to_string()),
+        (None, None) => return Err("request needs a tokens array or a text string".to_string()),
+        (Some(t), None) => {
+            let arr = t.as_arr().ok_or("tokens must be an array of integers")?;
+            let mut out = Vec::with_capacity(arr.len());
+            for (i, v) in arr.iter().enumerate() {
+                let n = v.as_f64().ok_or_else(|| format!("tokens[{i}] is not a number"))?;
+                if n.fract() != 0.0 || n < 0.0 || n >= vocab as f64 {
+                    return Err(format!(
+                        "tokens[{i}] = {n} outside this model's vocab 0..{vocab}"
+                    ));
+                }
+                out.push(n as i32);
+            }
+            out
+        }
+        (None, Some(t)) => {
+            let text = t.as_str().ok_or("text must be a string")?;
+            let tok = inner.tokenizer.as_ref().ok_or(
+                "this server has no tokenizer (started without --corpus); send token ids",
+            )?;
+            let ids = tok.encode(text);
+            if ids.iter().any(|&i| i < 0 || i as usize >= vocab) {
+                return Err(format!("text encodes outside this model's vocab 0..{vocab}"));
+            }
+            ids
+        }
+    };
+
+    if tokens.is_empty() {
+        return Err("prompt is empty".to_string());
+    }
+    if tokens.len() > seq {
+        return Err(format!("prompt has {} tokens, the model's window is {seq}", tokens.len()));
+    }
+    Ok((tokens, max_new))
+}
+
+fn run_generate(inner: &Inner, id: u64, tokens: Vec<i32>, max_new: usize) -> (u16, String) {
+    let seq = inner.model.seq();
+    let prompt_len = tokens.len();
+    let mut prompt = vec![0i32; seq]; // PAD-filled
+    prompt[..prompt_len].copy_from_slice(&tokens);
+    let rx = match inner.batcher.submit(GenRequest { id, prompt, start: prompt_len, max_new }) {
+        Submit::Queued(rx) => rx,
+        Submit::Full => {
+            inner.stats.rejected_503.fetch_add(1, Ordering::Relaxed);
+            log::info(&format!("req {id}: rejected 503 (queue full)"));
+            return (503, err_body("queue full, retry later"));
+        }
+    };
+    let result = match rx.recv() {
+        Ok(Ok(r)) => r,
+        Ok(Err(e)) => {
+            inner.stats.errors.fetch_add(1, Ordering::Relaxed);
+            log::error(&format!("req {id}: decode failed: {e:#}"));
+            return (500, err_body("decode failed"));
+        }
+        Err(_) => {
+            inner.stats.errors.fetch_add(1, Ordering::Relaxed);
+            log::error(&format!("req {id}: reply channel dropped"));
+            return (500, err_body("server shutting down"));
+        }
+    };
+    inner.stats.note_ok(result.tokens.len(), result.queue_us, result.decode_us);
+    let queue_ms = result.queue_us as f64 / 1000.0;
+    let decode_ms = result.decode_us as f64 / 1000.0;
+    log::info(&format!(
+        "req {id}: prompt {prompt_len} -> {} tokens; queue {queue_ms:.2}ms batch {} decode {decode_ms:.2}ms",
+        result.tokens.len(),
+        result.batch
+    ));
+    let mut m = BTreeMap::new();
+    m.insert("id".to_string(), Json::Num(id as f64));
+    m.insert(
+        "tokens".to_string(),
+        Json::Arr(result.tokens.iter().map(|&t| Json::Num(t as f64)).collect()),
+    );
+    if let Some(tok) = &inner.tokenizer {
+        m.insert("text".to_string(), Json::Str(tok.decode(&result.tokens)));
+    }
+    m.insert("prompt_len".to_string(), Json::Num(prompt_len as f64));
+    m.insert("queue_ms".to_string(), Json::Num(queue_ms));
+    m.insert("decode_ms".to_string(), Json::Num(decode_ms));
+    m.insert("batch".to_string(), Json::Num(result.batch as f64));
+    (200, Json::Obj(m).to_string_compact())
+}
+
+fn err_body(msg: &str) -> String {
+    let mut m = BTreeMap::new();
+    m.insert("error".to_string(), Json::Str(msg.to_string()));
+    Json::Obj(m).to_string_compact()
+}

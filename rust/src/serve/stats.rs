@@ -1,0 +1,120 @@
+//! Serving counters behind `GET /stats`.
+//!
+//! One shared atomic block, lock-free on the request path (workers and
+//! connection threads bump relaxed counters; `/stats` snapshots them).
+//! Latency totals are kept in microseconds so the JSON can report mean
+//! queue wait and decode time without a histogram dependency.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::util::Json;
+
+/// Monotonic counters for one server's lifetime.
+#[derive(Default)]
+pub struct ServeStats {
+    /// Requests that reached `/v1/generate` (any outcome).
+    pub requests: AtomicU64,
+    /// Requests answered 200 with generated tokens.
+    pub ok: AtomicU64,
+    /// Requests bounced 503 by the bounded queue.
+    pub rejected_503: AtomicU64,
+    /// Requests bounced 400 (malformed JSON / bad shapes / bad tokens).
+    pub bad_400: AtomicU64,
+    /// Requests failed 500 (decode errors, dropped replies).
+    pub errors: AtomicU64,
+    /// Batches the cutter handed to workers.
+    pub batches: AtomicU64,
+    /// Requests summed over those batches (mean batch = this / batches).
+    pub batched_requests: AtomicU64,
+    /// Largest batch decoded so far.
+    pub max_batch_seen: AtomicU64,
+    /// Tokens generated across all 200s.
+    pub tokens_generated: AtomicU64,
+    /// Total queue wait across 200s, microseconds.
+    pub queue_wait_us: AtomicU64,
+    /// Total batched-decode time across 200s, microseconds.
+    pub decode_us: AtomicU64,
+}
+
+impl ServeStats {
+    pub fn new() -> ServeStats {
+        ServeStats::default()
+    }
+
+    /// Record one batch cut (size in rows).
+    pub fn note_batch(&self, size: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batched_requests.fetch_add(size as u64, Ordering::Relaxed);
+        self.max_batch_seen.fetch_max(size as u64, Ordering::Relaxed);
+    }
+
+    /// Record one successful generation.
+    pub fn note_ok(&self, tokens: usize, queue_us: u64, decode_us: u64) {
+        self.ok.fetch_add(1, Ordering::Relaxed);
+        self.tokens_generated.fetch_add(tokens as u64, Ordering::Relaxed);
+        self.queue_wait_us.fetch_add(queue_us, Ordering::Relaxed);
+        self.decode_us.fetch_add(decode_us, Ordering::Relaxed);
+    }
+
+    /// Snapshot every counter into the `/stats` JSON body. Derived means
+    /// are included so a curl of `/stats` is readable without math.
+    pub fn to_json(&self) -> Json {
+        let g = |a: &AtomicU64| a.load(Ordering::Relaxed);
+        let (ok, batches) = (g(&self.ok), g(&self.batches));
+        let mut m = BTreeMap::new();
+        let mut put = |k: &str, v: f64| {
+            m.insert(k.to_string(), Json::Num(v));
+        };
+        put("requests", g(&self.requests) as f64);
+        put("ok", ok as f64);
+        put("rejected_503", g(&self.rejected_503) as f64);
+        put("bad_400", g(&self.bad_400) as f64);
+        put("errors", g(&self.errors) as f64);
+        put("batches", batches as f64);
+        put("batched_requests", g(&self.batched_requests) as f64);
+        put("max_batch_seen", g(&self.max_batch_seen) as f64);
+        put("tokens_generated", g(&self.tokens_generated) as f64);
+        let mean = |total_us: u64, n: u64| {
+            if n == 0 {
+                0.0
+            } else {
+                total_us as f64 / n as f64 / 1000.0
+            }
+        };
+        let mean_batch =
+            if batches == 0 { 0.0 } else { g(&self.batched_requests) as f64 / batches as f64 };
+        put("mean_batch", mean_batch);
+        put("mean_queue_ms", mean(g(&self.queue_wait_us), ok));
+        put("mean_decode_ms", mean(g(&self.decode_us), ok));
+        Json::Obj(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_roll_up_into_the_stats_json() {
+        let s = ServeStats::new();
+        s.requests.fetch_add(3, Ordering::Relaxed);
+        s.note_batch(2);
+        s.note_batch(1);
+        s.note_ok(5, 2_000, 4_000);
+        s.note_ok(1, 0, 2_000);
+        s.rejected_503.fetch_add(1, Ordering::Relaxed);
+        let j = s.to_json();
+        assert_eq!(j.get("requests").unwrap().as_usize(), Some(3));
+        assert_eq!(j.get("ok").unwrap().as_usize(), Some(2));
+        assert_eq!(j.get("rejected_503").unwrap().as_usize(), Some(1));
+        assert_eq!(j.get("batches").unwrap().as_usize(), Some(2));
+        assert_eq!(j.get("max_batch_seen").unwrap().as_usize(), Some(2));
+        assert_eq!(j.get("tokens_generated").unwrap().as_usize(), Some(6));
+        assert_eq!(j.get("mean_batch").unwrap().as_f64(), Some(1.5));
+        assert_eq!(j.get("mean_queue_ms").unwrap().as_f64(), Some(1.0));
+        assert_eq!(j.get("mean_decode_ms").unwrap().as_f64(), Some(3.0));
+        // round-trips through the writer
+        assert!(Json::parse(&j.to_string_compact()).is_ok());
+    }
+}

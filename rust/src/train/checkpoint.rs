@@ -36,6 +36,18 @@
 //! "opaque"` (the PJRT session's packed state blob, restorable only
 //! as-is).
 //!
+//! # Weights-only artifact (`alada export`) — a single file
+//!
+//! The deployable model boundary: one JSON header line (`kind:
+//! "weights"`, source artifact/optimizer/step, full shapes, element
+//! count, payload checksum) followed by the raw little-endian f32
+//! parameter vector — optimizer state deliberately absent. Written by
+//! [`export_weights`], read by [`load_weights_file`]; [`load_weights`]
+//! sniffs its argument and accepts either a sharded checkpoint
+//! directory (slices from ANY rank count are reassembled, state bytes
+//! validated but dropped) or an exported file, so serving and eval
+//! paths take one call regardless of which artifact they were handed.
+//!
 //! # Legacy format (v1) — a single file
 //!
 //! One JSON header line (now carrying `format_version: 1`; version-less
@@ -347,10 +359,14 @@ pub fn read_slice(dir: &Path, man: &Manifest, rank: usize) -> Result<(Vec<f32>, 
         .with_context(|| format!("checkpoint slice {path:?}"))?;
     let header = Json::parse(std::str::from_utf8(&header_line)?)
         .map_err(|e| anyhow::anyhow!("checkpoint slice {path:?} header: {e}"))?;
-    let v = header_count(&header, "format_version")?;
+    let v = header_count(&header, "format_version")
+        .with_context(|| format!("checkpoint slice {path:?}"))?;
     ensure!(v == MANIFEST_VERSION, "slice {path:?} has format_version {v}");
-    ensure!(header_count(&header, "rank")? == rank, "slice {path:?} belongs to another rank");
-    let step = header_count(&header, "step")?;
+    let got_rank =
+        header_count(&header, "rank").with_context(|| format!("checkpoint slice {path:?}"))?;
+    ensure!(got_rank == rank, "slice {path:?} belongs to another rank");
+    let step =
+        header_count(&header, "step").with_context(|| format!("checkpoint slice {path:?}"))?;
     ensure!(
         step == man.step,
         "slice {path:?} is from step {step} but the manifest committed step {} \
@@ -368,13 +384,196 @@ pub fn read_slice(dir: &Path, man: &Manifest, rank: usize) -> Result<(Vec<f32>, 
         "slice {path:?} is {file_len} bytes, manifest implies {expected} (truncated or corrupt)"
     );
     let mut ck = Fnv::new();
-    let params = read_f32s(&mut f, info.flat.len(), Some(&mut ck))?;
-    let state = read_f32s(&mut f, info.state_elems, Some(&mut ck))?;
+    let params = read_f32s(&mut f, info.flat.len(), Some(&mut ck))
+        .with_context(|| format!("reading params of checkpoint slice {path:?}"))?;
+    let state = read_f32s(&mut f, info.state_elems, Some(&mut ck))
+        .with_context(|| format!("reading state of checkpoint slice {path:?}"))?;
     ensure!(
         ck.finish() == info.checksum,
         "slice {path:?} payload checksum mismatch (corrupt or torn save)"
     );
     Ok((params, state))
+}
+
+/// What a weights-only load reports about its source — everything a
+/// serving or eval path needs to build the model, nothing the optimizer
+/// needs to keep training.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct WeightsMeta {
+    /// Artifact tag of the producing run (e.g. `shard-train`).
+    pub artifact: String,
+    /// Optimizer that trained the weights (provenance only).
+    pub optimizer: String,
+    /// Completed training steps at save time.
+    pub step: usize,
+    /// Full parameter shapes, in flat packing order.
+    pub shapes: Vec<Vec<usize>>,
+    pub param_elems: usize,
+}
+
+/// `kind` field stamped into exported weights-only artifacts.
+pub const WEIGHTS_KIND: &str = "weights";
+
+/// Version of the weights-only artifact format.
+pub const WEIGHTS_VERSION: usize = 1;
+
+/// Weights-only read of a sharded checkpoint directory: load + validate
+/// the manifest, read every slice (full length/generation/checksum
+/// checks — state bytes are validated too, then dropped), and reassemble
+/// the flat parameter vector from the slice tiling. Works for a
+/// checkpoint saved at ANY rank count; never touches optimizer state
+/// beyond integrity checks.
+pub fn read_weights(dir: &Path) -> Result<(WeightsMeta, Vec<f32>)> {
+    let man = Manifest::load(dir)?;
+    let mut flat = vec![0.0f32; man.param_elems];
+    for r in 0..man.ranks {
+        let (pslice, _state) = read_slice(dir, &man, r)
+            .with_context(|| format!("reading weights from checkpoint {dir:?}"))?;
+        let info = man.slice(r)?;
+        flat[info.flat.clone()].copy_from_slice(&pslice);
+    }
+    let meta = WeightsMeta {
+        artifact: man.artifact,
+        optimizer: man.optimizer,
+        step: man.step,
+        shapes: man.shapes,
+        param_elems: man.param_elems,
+    };
+    Ok((meta, flat))
+}
+
+/// Write a weights-only artifact atomically (temp + `rename`): one JSON
+/// header line carrying the [`WeightsMeta`] plus a payload checksum,
+/// then the raw f32 parameter vector. The deployable `alada export`
+/// output — no optimizer state, loadable by [`load_weights_file`].
+pub fn export_weights<P: AsRef<Path>>(path: P, meta: &WeightsMeta, params: &[f32]) -> Result<()> {
+    let path = path.as_ref();
+    ensure!(
+        params.len() == meta.param_elems,
+        "export has {} param elems, meta declares {}",
+        params.len(),
+        meta.param_elems
+    );
+    let declared: usize = meta.shapes.iter().map(|s| s.iter().product::<usize>().max(1)).sum();
+    ensure!(
+        declared == meta.param_elems,
+        "export shapes cover {declared} elems, meta declares {}",
+        meta.param_elems
+    );
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    let mut ck = Fnv::new();
+    for x in params {
+        ck.update(&x.to_le_bytes());
+    }
+    let shapes: Vec<Json> = meta
+        .shapes
+        .iter()
+        .map(|s| Json::Arr(s.iter().map(|&d| Json::Num(d as f64)).collect()))
+        .collect();
+    let mut header = BTreeMap::new();
+    header.insert("format_version".to_string(), Json::Num(WEIGHTS_VERSION as f64));
+    header.insert("kind".to_string(), Json::Str(WEIGHTS_KIND.to_string()));
+    header.insert("artifact".to_string(), Json::Str(meta.artifact.clone()));
+    header.insert("optimizer".to_string(), Json::Str(meta.optimizer.clone()));
+    header.insert("step".to_string(), Json::Num(meta.step as f64));
+    header.insert("shapes".to_string(), Json::Arr(shapes));
+    header.insert("param_elems".to_string(), Json::Num(params.len() as f64));
+    header.insert("checksum".to_string(), Json::Str(format!("{:016x}", ck.finish())));
+    let tmp = path.with_extension("tmp");
+    {
+        let mut f = std::io::BufWriter::new(
+            std::fs::File::create(&tmp).with_context(|| format!("creating {tmp:?}"))?,
+        );
+        writeln!(f, "{}", Json::Obj(header).to_string_compact())?;
+        write_f32s(&mut f, params, None)?;
+        f.flush()?;
+    }
+    std::fs::rename(&tmp, path).with_context(|| format!("committing weights artifact {path:?}"))?;
+    Ok(())
+}
+
+/// Load an exported weights-only artifact: header validated (version,
+/// kind, shape/element agreement), payload length cross-checked against
+/// the file size *before* allocation, checksum verified.
+pub fn load_weights_file<P: AsRef<Path>>(path: P) -> Result<(WeightsMeta, Vec<f32>)> {
+    let path = path.as_ref();
+    let file_len = std::fs::metadata(path)
+        .with_context(|| format!("weights artifact {path:?}"))?
+        .len();
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(path).with_context(|| format!("weights artifact {path:?}"))?,
+    );
+    let header_line =
+        read_header_line(&mut f).with_context(|| format!("weights artifact {path:?}"))?;
+    let header = Json::parse(std::str::from_utf8(&header_line)?)
+        .map_err(|e| anyhow::anyhow!("weights artifact {path:?} header: {e}"))?;
+    let res = (|| -> Result<(WeightsMeta, u64)> {
+        let v = header_count(&header, "format_version")?;
+        ensure!(v == WEIGHTS_VERSION, "unsupported weights format_version {v}");
+        let kind = req_str(&header, "kind")?;
+        ensure!(
+            kind == WEIGHTS_KIND,
+            "file is a {kind:?} artifact, not a weights export \
+             (checkpoint directories load via their manifest)"
+        );
+        let param_elems = header_count(&header, "param_elems")?;
+        let mut shapes = Vec::new();
+        for s in header.req("shapes")?.as_arr().context("shapes must be an array")? {
+            let dims = s.as_arr().context("each shape must be an array")?;
+            let mut shape = Vec::with_capacity(dims.len());
+            for d in dims {
+                shape.push(d.as_usize().context("shape dims must be counts")?);
+            }
+            shapes.push(shape);
+        }
+        let declared: usize = shapes.iter().map(|s| s.iter().product::<usize>().max(1)).sum();
+        ensure!(
+            declared == param_elems,
+            "weights shapes cover {declared} of {param_elems} elements"
+        );
+        let checksum = u64::from_str_radix(req_str(&header, "checksum")?.trim(), 16)
+            .context("weights checksum must be hex")?;
+        let meta = WeightsMeta {
+            artifact: req_str(&header, "artifact")?,
+            optimizer: req_str(&header, "optimizer")?,
+            step: header_count(&header, "step")?,
+            shapes,
+            param_elems,
+        };
+        Ok((meta, checksum))
+    })()
+    .with_context(|| format!("weights artifact {path:?}"))?;
+    let (meta, checksum) = res;
+    let expected = header_line.len() as u64 + 1 + 4 * meta.param_elems as u64;
+    ensure!(
+        file_len == expected,
+        "weights artifact {path:?} is {file_len} bytes, header implies {expected} \
+         (truncated or corrupt)"
+    );
+    let mut ck = Fnv::new();
+    let params = read_f32s(&mut f, meta.param_elems, Some(&mut ck))
+        .with_context(|| format!("reading weights artifact {path:?}"))?;
+    ensure!(
+        ck.finish() == checksum,
+        "weights artifact {path:?} payload checksum mismatch (corrupt or torn copy)"
+    );
+    Ok((meta, params))
+}
+
+/// Load model weights from EITHER artifact kind: a sharded checkpoint
+/// directory (reassembled from its slices, any rank count) or an
+/// exported weights-only file. The single entry point serving and eval
+/// paths call.
+pub fn load_weights<P: AsRef<Path>>(path: P) -> Result<(WeightsMeta, Vec<f32>)> {
+    let path = path.as_ref();
+    if path.is_dir() || is_sharded(path) {
+        return read_weights(path);
+    }
+    load_weights_file(path)
 }
 
 /// True when `path` looks like a sharded checkpoint directory.
@@ -846,6 +1045,75 @@ mod tests {
         let doctored = man.to_json().to_string_compact().replace("\"ranks\":2", "\"ranks\":3");
         std::fs::write(dir.join(MANIFEST_FILE), doctored).unwrap();
         assert!(Manifest::load(&dir).is_err());
+    }
+
+    /// Weights-only loading: a sharded directory reassembles the full
+    /// parameter vector (state dropped), an exported file round-trips
+    /// bit-for-bit, and both go through the one `load_weights` entry.
+    #[test]
+    fn weights_only_paths_round_trip() {
+        let dir = tmp_dir("weights_rt");
+        sample_sharded(&dir);
+        let (meta, flat) = read_weights(&dir).unwrap();
+        assert_eq!(flat, (0..10).map(|i| i as f32).collect::<Vec<_>>());
+        assert_eq!(meta.artifact, "shard-train");
+        assert_eq!(meta.optimizer, "alada");
+        assert_eq!((meta.step, meta.param_elems), (7, 10));
+        assert_eq!(meta.shapes, vec![vec![5, 2]]);
+
+        let file = tmp("weights_rt.alw");
+        export_weights(&file, &meta, &flat).unwrap();
+        let (meta2, flat2) = load_weights_file(&file).unwrap();
+        assert_eq!(meta2, meta);
+        assert_eq!(flat2, flat);
+
+        // the sniffing entry point accepts both artifact kinds
+        let (_, via_dir) = load_weights(&dir).unwrap();
+        let (_, via_file) = load_weights(&file).unwrap();
+        assert_eq!(via_dir, via_file);
+    }
+
+    /// Corrupt weights artifacts fail closed: truncation, bit flips and
+    /// foreign kinds are all named errors carrying the file path.
+    #[test]
+    fn corrupt_weights_artifacts_rejected() {
+        let dir = tmp_dir("weights_bad");
+        sample_sharded(&dir);
+        let (meta, flat) = read_weights(&dir).unwrap();
+        let file = tmp("weights_bad.alw");
+        export_weights(&file, &meta, &flat).unwrap();
+
+        // truncated payload
+        let full = std::fs::read(&file).unwrap();
+        let trunc = tmp("weights_trunc.alw");
+        std::fs::write(&trunc, &full[..full.len() - 4]).unwrap();
+        let err = format!("{:#}", load_weights_file(&trunc).unwrap_err());
+        assert!(err.contains("truncated or corrupt"), "{err}");
+
+        // flipped payload bit at the right length
+        let mut bytes = full.clone();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0x40;
+        let flip = tmp("weights_flip.alw");
+        std::fs::write(&flip, &bytes).unwrap();
+        let err = format!("{:#}", load_weights_file(&flip).unwrap_err());
+        assert!(err.contains("checksum mismatch"), "{err}");
+
+        // a legacy blob is not a weights export — rejected by kind
+        let blob = tmp("weights_kind.ckpt");
+        save_raw(&blob, "a", 0, &[1.0], &[]).unwrap();
+        assert!(load_weights_file(&blob).is_err());
+    }
+
+    /// The path-context satellite: a missing slice file surfaces the
+    /// offending file name, not a bare io error.
+    #[test]
+    fn missing_slice_error_names_the_file() {
+        let dir = tmp_dir("weights_missing_slice");
+        sample_sharded(&dir);
+        std::fs::remove_file(dir.join(slice_file(7, 1))).unwrap();
+        let err = format!("{:#}", read_weights(&dir).unwrap_err());
+        assert!(err.contains(&slice_file(7, 1)), "{err}");
     }
 
     #[test]

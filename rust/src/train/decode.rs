@@ -1,34 +1,119 @@
-//! Greedy decoding for the translation BLEU evaluation (Table II).
+//! Greedy decoding over any next-token-logits source.
 //!
-//! The `logits_lm_*` artifact returns full-sequence logits; the decoder
-//! feeds `[src ; SEP ; generated…]`, takes the argmax at the frontier
-//! position, appends, and repeats — batched across the eval set. Slow
-//! (O(L) artifact calls per sentence batch) but faithful: generation
-//! quality is what BLEU measures.
+//! Two consumers share this path: the translation BLEU evaluation
+//! (Table II, via the PJRT `logits_lm_*` artifact) and the `serve`
+//! subsystem's batched inference workers (via the pure-Rust checkpoint
+//! model). The decoder is therefore generic over [`TokenLogits`] — a
+//! next-token-logits source with a fixed (max) batch, sequence length,
+//! and vocab — and every shape violation is a `Result` usage error, not
+//! a panic: a malformed serving request must come back as HTTP 400, it
+//! must never take a decode worker down.
+//!
+//! Decoding feeds `[prompt ; generated…]`, takes the argmax at the
+//! frontier position, appends, and repeats — batched across rows, each
+//! row fully independent (a row's tokens depend only on that row's
+//! prefix, so the same prompt decodes bit-identically alone, inside a
+//! mixed batch, or under concurrent load).
 
-use anyhow::Result;
+use anyhow::{ensure, Result};
 
 use crate::data::translation::MtDataset;
 use crate::data::PAD_ID;
 use crate::runtime::executor::LogitsSession;
 
+/// A source of next-token logits for greedy decoding.
+///
+/// Implementations: [`SessionLogits`] (the PJRT `logits_lm_*` artifact —
+/// fixed batch) and `serve::MlpLm` (pure-Rust checkpoint model — any
+/// batch up to `max_batch`).
+pub trait TokenLogits {
+    /// Sequence length every row is padded to.
+    fn seq(&self) -> usize;
+    /// Vocabulary size (logit row width).
+    fn vocab(&self) -> usize;
+    /// Largest row count one `logits` call accepts.
+    fn max_batch(&self) -> usize;
+
+    /// Full logits for `rows` rows of `seq()` tokens each:
+    /// `(rows, seq, vocab)` flattened row-major.
+    fn logits(&self, tokens: &[i32], rows: usize) -> Result<Vec<f32>>;
+
+    /// Next-token logits at position `pos[i]` of row i — `(rows, vocab)`
+    /// flattened. The default extracts from the full `logits` call;
+    /// implementations that can evaluate single positions cheaply (the
+    /// serve model) override this, turning each decode step from O(seq)
+    /// into O(1) position evaluations per row.
+    fn logits_at(&self, tokens: &[i32], rows: usize, pos: &[usize]) -> Result<Vec<f32>> {
+        ensure!(pos.len() == rows, "got {} positions for {rows} rows", pos.len());
+        let (l, v) = (self.seq(), self.vocab());
+        let all = self.logits(tokens, rows)?;
+        let mut out = Vec::with_capacity(rows * v);
+        for (i, &p) in pos.iter().enumerate() {
+            ensure!(p < l, "row {i}: position {p} outside sequence length {l}");
+            out.extend_from_slice(&all[(i * l + p) * v..(i * l + p + 1) * v]);
+        }
+        Ok(out)
+    }
+}
+
+/// [`TokenLogits`] view of a PJRT [`LogitsSession`] plus the parameter
+/// vector it runs — the artifact's batch is fixed, so `max_batch ==
+/// batch` and callers must fill every row.
+pub struct SessionLogits<'a> {
+    pub sess: &'a LogitsSession,
+    pub params: &'a [f32],
+}
+
+impl TokenLogits for SessionLogits<'_> {
+    fn seq(&self) -> usize {
+        self.sess.seq
+    }
+
+    fn vocab(&self) -> usize {
+        self.sess.vocab
+    }
+
+    fn max_batch(&self) -> usize {
+        self.sess.batch
+    }
+
+    fn logits(&self, tokens: &[i32], rows: usize) -> Result<Vec<f32>> {
+        ensure!(
+            rows == self.sess.batch,
+            "logits artifact has a fixed batch of {}, got {rows} rows",
+            self.sess.batch
+        );
+        self.sess.run(self.params, tokens)
+    }
+}
+
 /// Greedy-decode up to `max_new` tokens for a batch of prompts.
 ///
-/// `starts[i]` is the first generation position of row i (just after
-/// SEP). Generation stops per-row on PAD or when the sequence fills.
-pub fn greedy_decode(
-    logits: &LogitsSession,
-    params: &[f32],
+/// `prompts[i]` is row i padded to `lm.seq()`; `starts[i]` is its first
+/// generation position (just after the prompt, so ≥ 1 — next-token
+/// logits live at the position *before* the frontier). Generation stops
+/// per-row when PAD wins the argmax (PAD acts as EOS) or the row fills.
+/// Malformed shapes are usage errors, never panics.
+pub fn greedy_decode<L: TokenLogits + ?Sized>(
+    lm: &L,
     prompts: &[Vec<i32>],
     starts: &[usize],
     max_new: usize,
 ) -> Result<Vec<Vec<i32>>> {
-    assert_eq!(prompts.len(), logits.batch);
-    let (b, l, v) = (logits.batch, logits.seq, logits.vocab);
+    let (b, l, v) = (prompts.len(), lm.seq(), lm.vocab());
+    ensure!(b > 0, "empty prompt batch");
+    ensure!(b <= lm.max_batch(), "{b} rows exceed the decoder's max batch {}", lm.max_batch());
+    ensure!(starts.len() == b, "{} starts for {b} prompts", starts.len());
     let mut tokens: Vec<i32> = Vec::with_capacity(b * l);
-    for p in prompts {
-        assert_eq!(p.len(), l);
+    for (i, p) in prompts.iter().enumerate() {
+        ensure!(p.len() == l, "prompt row {i} has {} tokens, decoder wants {l}", p.len());
         tokens.extend_from_slice(p);
+    }
+    for (i, &s) in starts.iter().enumerate() {
+        ensure!(
+            (1..=l).contains(&s),
+            "prompt row {i}: start {s} outside 1..={l} (prompts must be non-empty)"
+        );
     }
     let mut frontier: Vec<usize> = starts.to_vec();
     let mut done = vec![false; b];
@@ -37,15 +122,23 @@ pub fn greedy_decode(
         if done.iter().all(|&d| d) {
             break;
         }
-        let all = logits.run(params, &tokens)?;
+        // next-token logits live at the position *before* the frontier;
+        // full rows are marked done and their (ignored) position clamped
         for i in 0..b {
-            if done[i] || frontier[i] >= l {
+            if frontier[i] >= l {
                 done[i] = true;
+            }
+        }
+        if done.iter().all(|&d| d) {
+            break;
+        }
+        let pos: Vec<usize> = frontier.iter().map(|&f| f.min(l) - 1).collect();
+        let next = lm.logits_at(&tokens, b, &pos)?;
+        for i in 0..b {
+            if done[i] {
                 continue;
             }
-            // next-token logits live at the position *before* the frontier
-            let pos = frontier[i] - 1;
-            let row = &all[(i * l + pos) * v..(i * l + pos + 1) * v];
+            let row = &next[i * v..(i + 1) * v];
             let mut best = 0usize;
             let mut best_v = f32::NEG_INFINITY;
             // PAD acts as EOS; SEP excluded from generation
@@ -77,6 +170,7 @@ pub fn decode_test_set(
     ds: &MtDataset,
     limit: usize,
 ) -> Result<(Vec<Vec<i32>>, Vec<Vec<i32>>)> {
+    let lm = SessionLogits { sess: logits, params };
     let b = logits.batch;
     let mut hyps = Vec::new();
     let mut refs = Vec::new();
@@ -93,10 +187,107 @@ pub fn decode_test_set(
             starts.push(s);
             max_ref = max_ref.max(ex.1.len());
         }
-        let out = greedy_decode(logits, params, &prompts, &starts, max_ref + 4)?;
+        let out = greedy_decode(&lm, &prompts, &starts, max_ref + 4)?;
         hyps.extend(out);
         refs.extend(chunk.iter().map(|ex| ex.1.clone()));
         i += b;
     }
     Ok((hyps, refs))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A deterministic toy logits source: the next token is always
+    /// `(last_token + 1) % vocab`, favoured by a one-hot logit row —
+    /// enough to pin the decode loop's shape handling and per-row
+    /// independence without any model.
+    struct Succ {
+        seq: usize,
+        vocab: usize,
+        max_batch: usize,
+    }
+
+    impl TokenLogits for Succ {
+        fn seq(&self) -> usize {
+            self.seq
+        }
+
+        fn vocab(&self) -> usize {
+            self.vocab
+        }
+
+        fn max_batch(&self) -> usize {
+            self.max_batch
+        }
+
+        fn logits(&self, tokens: &[i32], rows: usize) -> Result<Vec<f32>> {
+            ensure!(tokens.len() == rows * self.seq, "bad token buffer");
+            let (l, v) = (self.seq, self.vocab);
+            let mut out = vec![0.0f32; rows * l * v];
+            for r in 0..rows {
+                for p in 0..l {
+                    let next = (tokens[r * l + p] as usize + 1) % v;
+                    out[(r * l + p) * v + next] = 1.0;
+                }
+            }
+            Ok(out)
+        }
+    }
+
+    fn lm() -> Succ {
+        Succ { seq: 6, vocab: 8, max_batch: 4 }
+    }
+
+    #[test]
+    fn generates_successor_chain() {
+        let out = greedy_decode(&lm(), &[vec![3, 0, 0, 0, 0, 0]], &[1], 3).unwrap();
+        assert_eq!(out, vec![vec![4, 5, 6]]);
+    }
+
+    #[test]
+    fn rows_are_independent_of_batch_composition() {
+        let a = vec![2, 3, 0, 0, 0, 0];
+        let alone = greedy_decode(&lm(), &[a.clone()], &[2], 4).unwrap();
+        let mixed =
+            greedy_decode(&lm(), &[vec![5, 0, 0, 0, 0, 0], a.clone()], &[1, 2], 4).unwrap();
+        assert_eq!(alone[0], mixed[1]);
+    }
+
+    #[test]
+    fn generation_stops_at_the_sequence_end() {
+        let out = greedy_decode(&lm(), &[vec![2, 3, 4, 5, 6, 0]], &[5], 10).unwrap();
+        assert_eq!(out, vec![vec![7]]);
+    }
+
+    #[test]
+    fn shape_violations_are_usage_errors_not_panics() {
+        let lm = lm();
+        // wrong prompt length
+        assert!(greedy_decode(&lm, &[vec![1, 2]], &[1], 2).is_err());
+        // empty batch
+        assert!(greedy_decode(&lm, &[], &[], 2).is_err());
+        // over max batch
+        let rows: Vec<Vec<i32>> = (0..5).map(|_| vec![1, 0, 0, 0, 0, 0]).collect();
+        assert!(greedy_decode(&lm, &rows, &[1; 5], 2).is_err());
+        // zero start (empty prompt) and start past the end
+        assert!(greedy_decode(&lm, &[vec![1, 0, 0, 0, 0, 0]], &[0], 2).is_err());
+        assert!(greedy_decode(&lm, &[vec![1, 0, 0, 0, 0, 0]], &[7], 2).is_err());
+        // starts/prompts length mismatch
+        assert!(greedy_decode(&lm, &[vec![1, 0, 0, 0, 0, 0]], &[1, 1], 2).is_err());
+    }
+
+    #[test]
+    fn default_logits_at_extracts_the_requested_positions() {
+        let lm = lm();
+        let tokens = vec![3, 4, 0, 0, 0, 0, /* row 2 */ 6, 0, 0, 0, 0, 0];
+        let next = lm.logits_at(&tokens, 2, &[1, 0]).unwrap();
+        assert_eq!(next.len(), 2 * lm.vocab());
+        // row 0 at pos 1 (token 4) points at 5; row 1 at pos 0 (token 6) at 7
+        assert_eq!(next[5], 1.0);
+        assert_eq!(next[lm.vocab() + 7], 1.0);
+        // out-of-range position is an error
+        assert!(lm.logits_at(&tokens, 2, &[1, 6]).is_err());
+    }
 }

@@ -3,7 +3,7 @@
 //! cargo-bench targets can't bit-rot between PRs. Tiny shapes/steps keep
 //! this in the millisecond range.
 
-use alada::benchkit::{optim_bench, shard_bench};
+use alada::benchkit::{optim_bench, serve_bench, shard_bench};
 use alada::shard::MlpTask;
 
 #[test]
@@ -22,6 +22,26 @@ fn bench_smoke_optim() {
     let txt = std::fs::read_to_string(&path).expect("BENCH_optim json written");
     assert!(txt.contains("median_step_ns") && txt.contains("state_bytes"), "{txt}");
     assert!(txt.contains("p95_step_ns") && txt.contains("steps_per_sec"), "{txt}");
+}
+
+#[test]
+fn bench_smoke_serve() {
+    let path = std::env::temp_dir().join("BENCH_serve_smoke.json");
+    // two concurrency levels (the acceptance floor), few requests each
+    let rows = serve_bench(&[1, 4], 3, Some(path.to_str().unwrap()));
+    assert_eq!(rows.len(), 2);
+    // closed-loop with a roomy queue: every request must succeed, and
+    // every latency/throughput figure must be a real measurement
+    assert!(rows.iter().all(|r| r.ok == r.requests));
+    assert!(rows.iter().all(|r| r.p50_ms > 0.0 && r.p95_ms > 0.0));
+    assert!(rows.iter().all(|r| r.p95_ms >= r.p50_ms));
+    assert!(rows.iter().all(|r| r.req_per_sec > 0.0));
+    assert!(rows.iter().all(|r| r.mean_batch >= 1.0));
+    let txt = std::fs::read_to_string(&path).expect("BENCH_serve json written");
+    assert!(txt.contains("\"bench\":\"serve\""), "{txt}");
+    assert!(txt.contains("p50_ms") && txt.contains("p95_ms"), "{txt}");
+    assert!(txt.contains("req_per_sec") && txt.contains("mean_batch"), "{txt}");
+    assert!(txt.contains("concurrency"), "{txt}");
 }
 
 #[test]

@@ -15,7 +15,8 @@ cargo test -q
 
 echo "== tcp smoke: 2-process loopback parity vs inproc =="
 tmp="$(mktemp -d)"
-trap 'rm -rf "$tmp"' EXIT
+serve_pid=""
+trap 'if [ -n "$serve_pid" ]; then kill "$serve_pid" 2>/dev/null || true; fi; rm -rf "$tmp"' EXIT
 common=(--opt alada --steps 6 --batch 8 --dim 8 --hidden 12 --depth 2 --bucket-kb 1 --seed 3)
 cargo run -q -- shard-train --ranks 2 "${common[@]}" --dump-params "$tmp/inproc.bin"
 cargo run -q -- shard-train --transport tcp --spawn 2 "${common[@]}" --dump-params "$tmp/tcp.bin"
@@ -41,3 +42,38 @@ cargo run -q -- shard-train --transport tcp --spawn 4 --steps 8 "${elastic[@]}" 
     --resume "$tmp/ckpt" --dump-params "$tmp/resume4.bin"
 cmp "$tmp/full4.bin" "$tmp/resume4.bin"
 echo "   save@2/resume@4 final params byte-identical to the uninterrupted 4-proc run"
+
+echo "== serve smoke: batched HTTP inference over a sharded checkpoint =="
+# train + save a tiny 2-rank checkpoint, then serve it on an ephemeral
+# port; the served tokens must byte-match the one-shot `generate` oracle
+# (the batched path is bit-identical to solo decode, by construction).
+cargo run -q -- shard-train --ranks 2 --opt alada --steps 4 --batch 8 --dim 6 \
+    --hidden 10 --depth 1 --bucket-kb 1 --seed 7 --save "$tmp/serve_ckpt"
+test -f "$tmp/serve_ckpt/manifest.json"
+want="$(cargo run -q -- generate --ckpt "$tmp/serve_ckpt" --tokens 3,5,2 --max-new 4)"
+cargo run -q -- serve --ckpt "$tmp/serve_ckpt" --addr 127.0.0.1:0 \
+    >"$tmp/serve.log" 2>&1 &
+serve_pid=$!
+for _ in $(seq 1 100); do
+    grep -q "serving on http://" "$tmp/serve.log" && break
+    sleep 0.1
+done
+base="$(grep -m1 -o 'http://[0-9.]*:[0-9]*' "$tmp/serve.log")"
+test -n "$base"
+curl -fsS "$base/healthz" | grep -q '"status":"ok"'
+resp="$(curl -fsS -X POST "$base/v1/generate" -d '{"tokens":[3,5,2],"max_new":4}')"
+# the oracle prints exactly {"tokens":[..]}; the served body must carry
+# the same "tokens":[..] member bit-for-bit
+want_tokens="${want#\{}"; want_tokens="${want_tokens%\}}"
+grep -qF "$want_tokens" <<<"$resp"
+code="$(curl -s -o /dev/null -w '%{http_code}' -X POST "$base/v1/generate" -d '{oops')"
+test "$code" = "400"
+kill "$serve_pid" 2>/dev/null || true
+serve_pid=""
+echo "   served tokens byte-identical to the one-shot generate oracle"
+
+echo "== export smoke: weights-only artifact decodes identically =="
+cargo run -q -- export --ckpt "$tmp/serve_ckpt" --out "$tmp/weights.alw"
+got="$(cargo run -q -- generate --ckpt "$tmp/weights.alw" --tokens 3,5,2 --max-new 4)"
+test "$got" = "$want"
+echo "   exported artifact generate == checkpoint generate"
