@@ -23,7 +23,7 @@ use alada::exp::{self, ExpOpts};
 use alada::optim::Schedule;
 use alada::runtime::{Manifest, Runtime, TrainSession};
 use alada::serve::{MlpLm, ServeConfig, Server};
-use alada::shard::{CkptConfig, Comm, MlpTask, Pipeline, ShardConfig, Tcp};
+use alada::shard::{CkptConfig, Comm, MlpTask, Pipeline, ShardConfig, Tcp, TcpOpts, Transport};
 use alada::train::decode::{greedy_decode, TokenLogits};
 use alada::train::{checkpoint, memory};
 use alada::train::{TaskData, Trainer};
@@ -73,6 +73,8 @@ USAGE:
               [--transport inproc|tcp] [--dump-params FILE]
               [--schedule const:η|dim:η:T|thm1:η:β1|cos:η:W:T]
               [--save DIR] [--save-every K] [--resume DIR] [--same-batch]
+              [--quant-grads] [--step-sleep-ms MS] [--setup-timeout-s S]
+              [--progress-timeout-s S] [--supervise] [--max-restarts K]
               data-parallel engine with partitioned optimizer state (pure Rust,
               no artifacts needed; a rank list sweeps and compares). Default
               pipeline is reduce-scatter; --overlap adds a comm thread per rank
@@ -100,6 +102,20 @@ USAGE:
                                 [--bind ADDR]    manual launch; --peers is rank
                                                  0's rendezvous address (or the
                                                  full per-rank address table)
+              fault tolerance: a dead or wedged peer surfaces on every
+              surviving rank as a typed peer-loss error within the transport
+              deadlines (--setup-timeout-s for rendezvous, default 30;
+              --progress-timeout-s per in-flight collective, default 30,
+              0 = wait forever) — never a hang. With --supervise (tcp +
+              --save), a peer loss triggers re-rendezvous: survivors re-join
+              rank 0, the partition is replanned at the new world size, and
+              training auto-resumes from the last committed checkpoint, up
+              to --max-restarts times (default 1). The result matches an
+              uninterrupted run at the surviving rank count (pair with
+              --same-batch --quant-grads for byte parity). --quant-grads
+              zeroes 2 low mantissa bits of every gradient so sums of up to
+              4 ranks are exact; --step-sleep-ms slows steps for chaos
+              testing.
   alada serve --ckpt DIR|FILE [--addr HOST:PORT] [--vocab N] [--seq N]
               [--max-batch B] [--max-wait-ms MS] [--queue-cap N] [--workers N]
               [--corpus FILE] [--granularity char|word]
@@ -114,7 +130,9 @@ USAGE:
               --max-wait-ms, whichever first); a full queue answers 503. Port 0
               picks an ephemeral port; the bound address is printed as
               `serving on http://...`. Batching never changes tokens: each row
-              is bit-identical to decoding its prompt alone.
+              is bit-identical to decoding its prompt alone. SIGINT/SIGTERM
+              shut down gracefully: stop accepting, drain queued requests,
+              print a final `serve: final stats {...}` line, exit 0.
   alada export --ckpt DIR --out FILE [--vocab N] ...
               reassemble weights from a sharded checkpoint (optimizer state
               dropped) into one checksummed weights-only artifact that
@@ -292,11 +310,26 @@ struct ShardJob {
     save: Option<String>,
     save_every: usize,
     resume: Option<String>,
+    /// Quantize gradients + loss to 2 spare mantissa bits, extending
+    /// `--same-batch` rank-count-invariance to 3 ranks (the chaos gate's
+    /// 4→3 restart parity).
+    quant_grads: bool,
+    /// Artificial per-step delay so fault injection can hit a live run.
+    step_sleep_ms: u64,
+    /// Transport setup deadline (rendezvous, dials, re-join rounds), in
+    /// seconds — `--setup-timeout-s`, threaded to spawned workers.
+    setup_timeout_s: u64,
+    /// Steady-state per-collective progress deadline in seconds (0 =
+    /// none): a peer that moves no bytes for this long counts as lost.
+    progress_timeout_s: u64,
+    /// Self-healing mode: on peer loss the parent re-rendezvouses the
+    /// survivors and resumes; workers re-join instead of dying.
+    supervise: bool,
 }
 
 impl ShardJob {
     fn task(&self) -> MlpTask {
-        let task = MlpTask::new(
+        let mut task = MlpTask::new(
             self.dim,
             self.hidden,
             self.depth,
@@ -306,24 +339,58 @@ impl ShardJob {
             self.seed,
         );
         if self.same_batch {
-            task.with_replicated_batch()
-        } else {
-            task
+            task = task.with_replicated_batch();
         }
+        if self.quant_grads {
+            task = task.with_quantized_grads();
+        }
+        if self.step_sleep_ms > 0 {
+            task = task.with_step_sleep_ms(self.step_sleep_ms);
+        }
+        task
     }
 
     fn schedule(&self) -> Schedule {
         self.schedule.clone()
     }
 
+    fn tcp_opts(&self) -> TcpOpts {
+        TcpOpts {
+            setup_timeout: Duration::from_secs(self.setup_timeout_s),
+            progress_timeout: match self.progress_timeout_s {
+                0 => None,
+                s => Some(Duration::from_secs(s)),
+            },
+            ..TcpOpts::default()
+        }
+    }
+
     fn cfg(&self, ranks: usize) -> ShardConfig {
+        self.cfg_resuming(ranks, self.resume.as_deref())
+    }
+
+    /// `cfg` with the resume source overridden — a supervised restart
+    /// resumes from its own `--save` directory, not the original
+    /// `--resume` (if any).
+    fn cfg_resuming(&self, ranks: usize, resume: Option<&str>) -> ShardConfig {
         ShardConfig {
             ranks,
             bucket_kb: self.bucket_kb,
             steps: self.steps,
             pipeline: self.pipeline,
-            ckpt: CkptConfig::new(self.save.as_deref(), self.save_every, self.resume.as_deref()),
+            ckpt: CkptConfig::new(self.save.as_deref(), self.save_every, resume),
         }
+    }
+
+    /// The save directory, iff it holds a COMMITTED checkpoint (manifest
+    /// present). A supervised restart resumes from here; before the
+    /// first mid-run save commits, there is nothing to resume and the
+    /// restarted run legitimately begins at step 0.
+    fn committed_save(&self) -> Option<&str> {
+        let dir = self.save.as_deref()?;
+        let committed =
+            std::path::Path::new(dir).join(checkpoint::MANIFEST_FILE).exists();
+        committed.then_some(dir)
     }
 
     /// CLI args recreating this job in a spawned worker process
@@ -349,6 +416,9 @@ impl ShardJob {
                     ("--steps", self.steps.to_string()),
                     ("--pipeline", self.pipeline.name().to_string()),
                     ("--save-every", self.save_every.to_string()),
+                    ("--step-sleep-ms", self.step_sleep_ms.to_string()),
+                    ("--setup-timeout-s", self.setup_timeout_s.to_string()),
+                    ("--progress-timeout-s", self.progress_timeout_s.to_string()),
                 ]
                 .into_iter()
                 .flat_map(|(k, v)| [k.to_string(), v]),
@@ -356,6 +426,12 @@ impl ShardJob {
             .collect();
         if self.same_batch {
             args.push("--same-batch".to_string());
+        }
+        if self.quant_grads {
+            args.push("--quant-grads".to_string());
+        }
+        if self.supervise {
+            args.push("--supervise".to_string());
         }
         let optional = [
             ("--schedule", &self.schedule_spec),
@@ -389,6 +465,12 @@ fn cmd_shard_train(args: &Args) -> i32 {
     let overlap = args.bool("overlap");
     let transport = args.str_or("transport", "inproc");
     let same_batch = args.bool("same-batch");
+    let quant_grads = args.bool("quant-grads");
+    let step_sleep_ms = args.u64_or("step-sleep-ms", 0);
+    let setup_timeout_s = args.u64_or("setup-timeout-s", 30);
+    let progress_timeout_s = args.u64_or("progress-timeout-s", 30);
+    let supervise = args.bool("supervise");
+    let max_restarts = args.usize_or("max-restarts", 1);
     let schedule_spec = args.flag("schedule").map(String::from);
     let save = args.flag("save").map(String::from);
     let save_every = args.usize_or("save-every", 0);
@@ -439,6 +521,11 @@ fn cmd_shard_train(args: &Args) -> i32 {
             save,
             save_every,
             resume,
+            quant_grads,
+            step_sleep_ms,
+            setup_timeout_s,
+            progress_timeout_s,
+            supervise,
         };
         if job.save.is_some() || job.resume.is_some() {
             anyhow::ensure!(
@@ -447,11 +534,28 @@ fn cmd_shard_train(args: &Args) -> i32 {
                  (a sweep would make every rank count write/read the same checkpoint)"
             );
         }
+        if supervise {
+            anyhow::ensure!(
+                transport == "tcp",
+                "--supervise needs --transport tcp (in-process runs have no processes to lose)"
+            );
+            anyhow::ensure!(
+                job.setup_timeout_s > 0,
+                "--supervise needs a non-zero --setup-timeout-s (the re-join deadline)"
+            );
+            if spawn > 0 {
+                anyhow::ensure!(
+                    job.save.is_some(),
+                    "--supervise needs --save DIR: a restarted generation resumes from \
+                     the last committed checkpoint"
+                );
+            }
+        }
         match transport.as_str() {
             "inproc" => shard_train_inproc(&job, &ranks_list, parity, dump.as_deref()),
             "tcp" => {
                 if spawn > 0 {
-                    shard_train_tcp_parent(spawn, &job, dump.as_deref())
+                    shard_train_tcp_parent(spawn, &job, dump.as_deref(), max_restarts)
                 } else if let Some(r) = rank_flag {
                     let rank: usize = r.parse().context("--rank must be a number")?;
                     let ranks = if peers.len() > 1 {
@@ -559,59 +663,158 @@ fn shard_train_inproc(
     Ok(())
 }
 
+/// True when `e` is a mid-run peer loss — the failure class a supervised
+/// job recovers from (setup mistakes, I/O errors, and panics stay
+/// fatal). The engine keeps the typed [`alada::shard::TransportError`]
+/// as the root cause exactly so this test is structural, not textual.
+fn peer_loss(e: &anyhow::Error) -> bool {
+    e.root_cause().downcast_ref::<alada::shard::TransportError>().is_some()
+}
+
+/// Drop children that have already exited (casualties of this round —
+/// their exit status is irrelevant, dying is what they did).
+fn reap_exited(children: &mut Vec<(u32, std::process::Child)>) {
+    children.retain_mut(|(_, child)| matches!(child.try_wait(), Ok(None)));
+}
+
+fn kill_all(children: &mut Vec<(u32, std::process::Child)>) {
+    for (_, child) in children.iter_mut() {
+        let _ = child.kill();
+        let _ = child.wait();
+    }
+    children.clear();
+}
+
 /// Single-machine multi-process launcher: this process becomes rank 0 on
 /// an OS-assigned loopback port (no rebind race) and spawns `n - 1`
 /// worker copies of itself that rendezvous with it.
-fn shard_train_tcp_parent(n: usize, job: &ShardJob, dump: Option<&str>) -> anyhow::Result<()> {
+///
+/// With `--supervise` this doubles as the self-healing supervisor: the
+/// rendezvous listener outlives the first mesh, and when a generation
+/// aborts on peer loss, the parent reaps the casualties, re-rendezvouses
+/// the surviving worker pids (`Tcp::supervise_join`), replans the
+/// partition at the new world size, and resumes from the last committed
+/// checkpoint — up to `--max-restarts` times.
+fn shard_train_tcp_parent(
+    n: usize,
+    job: &ShardJob,
+    dump: Option<&str>,
+    max_restarts: usize,
+) -> anyhow::Result<()> {
     anyhow::ensure!(n >= 1, "--spawn needs at least one process");
+    let opts = job.tcp_opts();
     let listener = std::net::TcpListener::bind("127.0.0.1:0")
         .context("binding the rank-0 rendezvous listener")?;
     let rdv = listener.local_addr().context("rendezvous address")?.to_string();
     let exe = std::env::current_exe().context("locating the alada binary")?;
-    let mut children: Vec<(usize, std::process::Child)> = Vec::new();
+    let mut children: Vec<(u32, std::process::Child)> = Vec::new();
     for r in 1..n {
         match std::process::Command::new(&exe).args(job.worker_args(r, n, &rdv)).spawn() {
-            Ok(child) => children.push((r, child)),
+            Ok(child) => {
+                // chaos harnesses parse these lines to pick a victim
+                println!("shard-train[tcp]: worker rank={r} pid={}", child.id());
+                children.push((child.id(), child));
+            }
             Err(e) => {
-                for (_, child) in &mut children {
-                    let _ = child.kill();
-                    let _ = child.wait();
-                }
+                kill_all(&mut children);
                 return Err(e).with_context(|| format!("spawning worker rank {r}"));
             }
         }
     }
     println!("shard-train[tcp]: rank 0 of {n} at {rdv}, {} worker process(es) spawned", n - 1);
-    let result = (|| -> anyhow::Result<()> {
-        let comm = Comm::new(Tcp::from_listener(0, n, &rdv, listener)?);
-        let out =
-            alada::shard::train_rank(&job.task(), &job.opt, &job.schedule(), &job.cfg(n), comm)?;
-        print_rank_outcome(&out);
-        if let Some(path) = dump {
-            dump_params(path, &out.params)?;
-        }
-        Ok(())
-    })();
-    match result {
-        Ok(()) => {
-            for (r, mut child) in children {
-                let status = child.wait().with_context(|| format!("waiting for rank {r}"))?;
-                anyhow::ensure!(status.success(), "worker rank {r} exited with {status}");
+
+    let mut gen: u32 = 0;
+    let mut restarts_left = max_restarts;
+    let mut resume = job.resume.clone();
+    let outcome = loop {
+        // Build this generation's mesh. Generation 0 is the ordinary
+        // launch rendezvous (on a CLONE of the listener, so the original
+        // survives for later generations); generation g > 0 collects
+        // re-join handshakes from the surviving worker pids.
+        let mesh = if gen == 0 {
+            listener
+                .try_clone()
+                .context("cloning the rendezvous listener")
+                .and_then(|l| Tcp::from_listener_opts(0, n, &rdv, l, &opts))
+        } else {
+            reap_exited(&mut children);
+            let pids: Vec<u32> = children.iter().map(|(pid, _)| *pid).collect();
+            println!(
+                "shard-train[tcp]: re-rendezvous (generation {gen}): rank 0 + {} survivor(s) {pids:?}",
+                pids.len()
+            );
+            let mut joined = Vec::new();
+            let got = Tcp::supervise_join(&listener, gen, &pids, &opts, &mut joined);
+            if got.is_err() {
+                // A pid we counted on never joined — it died after the
+                // reap, or wedged. Kill the no-shows; the joiners' half-
+                // built streams die with this round and they re-join the
+                // next generation.
+                children.retain_mut(|(pid, child)| {
+                    if joined.contains(pid) {
+                        true
+                    } else {
+                        let _ = child.kill();
+                        let _ = child.wait();
+                        false
+                    }
+                });
             }
-            Ok(())
-        }
-        Err(e) => {
-            for (_, mut child) in children {
-                let _ = child.kill();
-                let _ = child.wait();
+            got
+        };
+        let round = mesh.and_then(|tcp| {
+            let world = tcp.ranks();
+            println!(
+                "shard-train[tcp]: generation {gen}: world size {world}{}",
+                match resume.as_deref() {
+                    Some(d) => format!(", resuming from {d}"),
+                    None => String::new(),
+                }
+            );
+            let cfg = job.cfg_resuming(world, resume.as_deref());
+            alada::shard::train_rank(&job.task(), &job.opt, &job.schedule(), &cfg, Comm::new(tcp))
+        });
+        match round {
+            Ok(out) => break Ok(out),
+            // Recoverable: a typed peer loss, or any failed re-join
+            // round (gen > 0). Setup errors on the FIRST launch stay
+            // fatal — nothing was lost, the launch was just wrong.
+            Err(e) if job.supervise && restarts_left > 0 && (peer_loss(&e) || gen > 0) => {
+                restarts_left -= 1;
+                gen += 1;
+                resume = job.committed_save().map(String::from).or_else(|| job.resume.clone());
+                log::warn(&format!(
+                    "shard-train[tcp]: generation {} failed: {e:#}; restarting \
+                     ({restarts_left} restart(s) left)",
+                    gen - 1
+                ));
             }
-            Err(e)
+            Err(e) => {
+                kill_all(&mut children);
+                break Err(e);
+            }
         }
+    };
+    let out = outcome?;
+    print_rank_outcome(&out);
+    if let Some(path) = dump {
+        dump_params(path, &out.params)?;
     }
+    // Every worker still standing ran the successful final generation
+    // and must agree by exiting cleanly.
+    for (pid, mut child) in children {
+        let status = child.wait().with_context(|| format!("waiting for worker pid {pid}"))?;
+        anyhow::ensure!(status.success(), "worker pid {pid} exited with {status}");
+    }
+    Ok(())
 }
 
 /// One rank of a multi-process tcp launch (spawned by `--spawn` or run
-/// by hand / scripts/shard_tcp.sh).
+/// by hand / scripts/shard_tcp.sh). Under `--supervise`, a mid-run peer
+/// loss sends the worker back to the supervisor (`Tcp::join`, keyed by
+/// its own pid) for the next generation's mesh instead of dying; it then
+/// resumes from the shared save directory at whatever rank and world
+/// size the supervisor assigned.
 fn shard_train_tcp_worker(
     rank: usize,
     ranks: usize,
@@ -620,14 +823,37 @@ fn shard_train_tcp_worker(
     job: &ShardJob,
     dump: Option<&str>,
 ) -> anyhow::Result<()> {
-    let comm = Comm::new(Tcp::connect(rank, ranks, peers, bind)?);
-    let out =
-        alada::shard::train_rank(&job.task(), &job.opt, &job.schedule(), &job.cfg(ranks), comm)?;
-    print_rank_outcome(&out);
-    if let Some(path) = dump {
-        dump_params(path, &out.params)?;
+    let opts = job.tcp_opts();
+    let rendezvous = peers.first().cloned().unwrap_or_default();
+    let mut tcp = Tcp::connect_opts(rank, ranks, peers, bind, &opts)?;
+    let mut resume = job.resume.clone();
+    loop {
+        let world = tcp.ranks();
+        let cfg = job.cfg_resuming(world, resume.as_deref());
+        match alada::shard::train_rank(&job.task(), &job.opt, &job.schedule(), &cfg, Comm::new(tcp))
+        {
+            Ok(out) => {
+                print_rank_outcome(&out);
+                if let Some(path) = dump {
+                    dump_params(path, &out.params)?;
+                }
+                return Ok(());
+            }
+            Err(e) if job.supervise && peer_loss(&e) => {
+                log::warn(&format!("shard-train[tcp]: {e:#}; re-joining the supervisor"));
+                let (gen, joined) = Tcp::join(&rendezvous, bind, std::process::id(), &opts)
+                    .context("re-joining the supervisor after a peer loss")?;
+                println!(
+                    "shard-train[tcp]: re-joined generation {gen} as rank {}/{}",
+                    joined.rank(),
+                    joined.ranks()
+                );
+                resume = job.committed_save().map(String::from).or_else(|| job.resume.clone());
+                tcp = joined;
+            }
+            Err(e) => return Err(e),
+        }
     }
-    Ok(())
 }
 
 /// Per-rank result line with the per-phase byte attribution (this
@@ -732,7 +958,17 @@ fn cmd_serve(args: &Args) -> i32 {
         let server = Server::start(&cfg, model, tokenizer)?;
         // scripts parse this exact line to find the ephemeral port
         println!("serving on http://{}", server.addr());
-        server.join();
+        install_stop_signals();
+        // Foreground loop: poll the signal flag instead of parking in
+        // `join()`, so SIGINT/SIGTERM turn into an orderly drain rather
+        // than the process vanishing mid-decode.
+        while !stop_requested() {
+            std::thread::sleep(Duration::from_millis(100));
+        }
+        println!("serve: signal received, draining in-flight requests");
+        server.shutdown();
+        // scripts parse this exact line to assert a clean drain
+        println!("serve: final stats {}", server.stats().to_json().to_string_compact());
         Ok(())
     };
     match run() {
@@ -740,6 +976,35 @@ fn cmd_serve(args: &Args) -> i32 {
         Err(e) => fail(e),
     }
 }
+
+static SERVE_STOP: std::sync::atomic::AtomicBool = std::sync::atomic::AtomicBool::new(false);
+
+fn stop_requested() -> bool {
+    SERVE_STOP.load(std::sync::atomic::Ordering::SeqCst)
+}
+
+/// Route SIGINT/SIGTERM into [`SERVE_STOP`] via raw `signal(2)` FFI (no
+/// new dependencies). The handler only stores an atomic — async-signal
+/// safe — and the foreground loop does the actual shutdown work.
+#[cfg(unix)]
+fn install_stop_signals() {
+    extern "C" fn on_signal(_sig: i32) {
+        SERVE_STOP.store(true, std::sync::atomic::Ordering::SeqCst);
+    }
+    extern "C" {
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+    }
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+    unsafe {
+        signal(SIGINT, on_signal);
+        signal(SIGTERM, on_signal);
+    }
+}
+
+/// Non-unix builds keep the old park-forever foreground behaviour.
+#[cfg(not(unix))]
+fn install_stop_signals() {}
 
 fn cmd_export(args: &Args) -> i32 {
     let run = || -> anyhow::Result<()> {

@@ -51,6 +51,16 @@ use crate::tensor::Tensor;
 /// the non-contributing ranks' zeros are exact (x + 0.0 == x).
 pub trait Collective {
     fn all_reduce_sum(&mut self, buf: &mut [f32]);
+
+    /// True once a reduction has failed (a peer died mid-collective).
+    /// The optimizer math stays infallible: a failing adapter latches
+    /// the error, turns later reductions into no-ops, and the engine
+    /// checks this probe after the step to abort with the real,
+    /// phase-stamped transport error. The step's output is garbage once
+    /// this is set — callers must not commit it anywhere.
+    fn failed(&self) -> bool {
+        false
+    }
 }
 
 /// Single-process collective: the sum over one rank is the identity.
@@ -229,7 +239,7 @@ pub(crate) mod testutil {
 
     impl<T: crate::shard::Transport> Collective for MeshColl<T> {
         fn all_reduce_sum(&mut self, buf: &mut [f32]) {
-            self.0.all_reduce_sum(buf, 256);
+            self.0.all_reduce_sum(buf, 256).expect("test mesh peer lost");
         }
     }
 

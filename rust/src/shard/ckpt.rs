@@ -84,6 +84,11 @@ pub(crate) struct RankCkpt<'a> {
     /// save_ms / load_ms columns — the O(state/N) visibility hook).
     pub save_secs: f64,
     pub load_secs: f64,
+    /// Step of the last checkpoint this rank KNOWS is committed (its
+    /// barrier-2 collective completed, or it was resumed from). On a
+    /// coordinated abort this is what the engine reports as the safe
+    /// restart point.
+    last_committed: Option<usize>,
 }
 
 impl<'a> RankCkpt<'a> {
@@ -93,7 +98,13 @@ impl<'a> RankCkpt<'a> {
         part: &'a Partition,
         rank: usize,
     ) -> RankCkpt<'a> {
-        RankCkpt { cfg, opt_name, part, rank, save_secs: 0.0, load_secs: 0.0 }
+        RankCkpt { cfg, opt_name, part, rank, save_secs: 0.0, load_secs: 0.0, last_committed: None }
+    }
+
+    /// Step of the last checkpoint known committed from this rank's view
+    /// (`None`: no save finished and no resume happened yet).
+    pub fn last_committed(&self) -> Option<usize> {
+        self.last_committed
     }
 
     /// True when a save is due after completing 0-based `step` of
@@ -183,6 +194,7 @@ impl<'a> RankCkpt<'a> {
         opt.import_state(&[], &blob, man.step)
             .with_context(|| format!("importing state from checkpoint {dir:?}"))?;
         self.load_secs = t0.elapsed().as_secs_f64();
+        self.last_committed = Some(man.step);
         Ok(man.step)
     }
 
@@ -219,6 +231,16 @@ impl<'a> RankCkpt<'a> {
         buf[3 * self.rank + 1] = ((ck >> 22) & 0x3f_ffff) as f32;
         buf[3 * self.rank + 2] = (ck >> 44) as f32;
         coll.all_reduce_sum(&mut buf);
+        // A peer died during the exchange: the summed checksums are
+        // unreliable and some slice may never hit disk. Abandon the save
+        // BEFORE the manifest commit — the previous checkpoint (if any)
+        // stays the valid one, which is exactly what auto-resume needs.
+        ensure!(
+            !coll.failed(),
+            "checkpoint at step {step_done} abandoned: a peer was lost during the \
+             checksum barrier (last committed: {:?})",
+            self.last_committed
+        );
 
         if self.rank == 0 {
             let slices: Vec<SliceInfo> = (0..ranks)
@@ -244,10 +266,24 @@ impl<'a> RankCkpt<'a> {
             }
             .save(&dir)
             .with_context(|| format!("committing checkpoint manifest in {dir:?}"))?;
+            // Rank 0 performed the commit itself — it knows this step is
+            // safe even if the confirmation barrier below breaks.
+            self.last_committed = Some(step_done);
         }
         // Barrier 2: nobody races past an uncommitted manifest (rank 0
         // contributes only after the rename above).
         coll.all_reduce_sum(&mut [0.0f32]);
+        // If barrier 2 broke, a non-zero rank cannot know whether the
+        // manifest committed — keep the previous generation's slices so
+        // WHICHEVER manifest is on disk stays restorable, and report the
+        // conservative last-committed step.
+        ensure!(
+            !coll.failed(),
+            "checkpoint at step {step_done} not confirmed: a peer was lost at the \
+             commit barrier (last known committed: {:?})",
+            self.last_committed
+        );
+        self.last_committed = Some(step_done);
         // Only now is it safe to drop the previous generation: the new
         // manifest is committed, and each rank touches its own files
         // only. (A crash before this point leaves harmless orphans the

@@ -33,12 +33,21 @@
 //! counted per [`Phase`] (gradient reduce vs parameter gather vs
 //! optimizer collectives) so the engine reports attribution per backend;
 //! `BytesMeter` offers the same numbers as deltas for ad-hoc probes.
+//!
+//! Failure: every collective returns `Result<(), TransportError>`. When
+//! a peer dies or wedges, the transport reports [`TransportError::
+//! PeerLost`]; the algebra stamps it with the [`Phase`] in flight and
+//! unwinds immediately. Because the binomial tree routes every rank's
+//! traffic toward every other rank within one collective, a single
+//! casualty cascades: each survivor observes a loss (of the casualty or
+//! of an already-unwound intermediate) within one transport deadline —
+//! no hang, no barrier needed to agree on aborting.
 
 use std::ops::Range;
 
 use anyhow::Result;
 
-use super::transport::{InProc, Transport};
+use super::transport::{InProc, Transport, TransportError};
 
 /// One contiguous slice of a flat buffer and the rank that owns it
 /// (reduce-scatter delivers the reduced segment there; all-gather
@@ -70,6 +79,17 @@ pub enum Phase {
 }
 
 const PHASES: usize = 3;
+
+impl Phase {
+    /// Human tag for error attribution ("lost rank 2 during reduce").
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Reduce => "reduce",
+            Phase::Gather => "gather",
+            Phase::Opt => "opt",
+        }
+    }
+}
 
 /// Delta meter over `Comm::bytes_sent` — attributes outbound traffic to
 /// ad-hoc windows without double counting (the engine's per-phase
@@ -166,23 +186,28 @@ impl<T: Transport> Comm<T> {
         self.bytes
     }
 
-    fn send(&mut self, to: usize, data: &[f32]) {
+    fn send(&mut self, to: usize, data: &[f32]) -> Result<(), TransportError> {
         self.bytes += 4 * data.len() as u64;
         self.phase_bytes[self.phase as usize] += 4 * data.len() as u64;
         let mut msg = self.pool.pop().unwrap_or_default();
         msg.clear();
         msg.extend_from_slice(data);
-        if let Some(spent) = self.transport.send(to, msg) {
-            self.recycle(spent);
+        match self.transport.send(to, msg) {
+            Ok(Some(spent)) => self.recycle(spent),
+            Ok(None) => {}
+            Err(e) => return Err(e.in_phase(self.phase.name())),
         }
+        Ok(())
     }
 
-    fn recv(&mut self, from: usize) -> Vec<f32> {
+    fn recv(&mut self, from: usize) -> Result<Vec<f32>, TransportError> {
         let mut buf = self.pool.pop().unwrap_or_default();
-        if let Some(spare) = self.transport.recv(from, &mut buf) {
-            self.recycle(spare);
+        match self.transport.recv(from, &mut buf) {
+            Ok(Some(spare)) => self.recycle(spare),
+            Ok(None) => {}
+            Err(e) => return Err(e.in_phase(self.phase.name())),
         }
-        buf
+        Ok(buf)
     }
 
     /// Return a finished receive buffer to the message pool (dropped
@@ -195,9 +220,9 @@ impl<T: Transport> Comm<T> {
 
     /// Elementwise sum of `buf` across all ranks, in buckets of
     /// `bucket_elems`; on return every rank holds the identical sum.
-    pub fn all_reduce_sum(&mut self, buf: &mut [f32], bucket_elems: usize) {
+    pub fn all_reduce_sum(&mut self, buf: &mut [f32], bucket_elems: usize) -> Result<(), TransportError> {
         if self.ranks() == 1 || buf.is_empty() {
-            return;
+            return Ok(());
         }
         let be = bucket_elems.max(1);
         // Reduce phase: every bucket climbs to rank 0. Leaves stream all
@@ -205,26 +230,28 @@ impl<T: Transport> Comm<T> {
         let mut start = 0;
         while start < buf.len() {
             let end = (start + be).min(buf.len());
-            self.reduce_bucket(&mut buf[start..end]);
+            self.reduce_bucket(&mut buf[start..end])?;
             start = end;
         }
         // Broadcast phase: the finished sums fan back out.
         let mut start = 0;
         while start < buf.len() {
             let end = (start + be).min(buf.len());
-            self.bcast_bucket(0, &mut buf[start..end]);
+            self.bcast_bucket(0, &mut buf[start..end])?;
             start = end;
         }
+        Ok(())
     }
 
     /// All-reduce followed by the 1/ranks mean scale — the
     /// gradient-averaging collective. Every rank applies the identical
     /// scale to the identical sum, so replicas stay bit-equal.
-    pub fn all_reduce_mean(&mut self, buf: &mut [f32], bucket_elems: usize) {
-        self.all_reduce_sum(buf, bucket_elems);
+    pub fn all_reduce_mean(&mut self, buf: &mut [f32], bucket_elems: usize) -> Result<(), TransportError> {
+        self.all_reduce_sum(buf, bucket_elems)?;
         if self.ranks() > 1 {
             mean_scale(buf, self.ranks());
         }
+        Ok(())
     }
 
     /// Reduce `buf` to its mean on `owner` only: the bucket climbs the
@@ -233,9 +260,9 @@ impl<T: Transport> Comm<T> {
     /// owner scales by 1/ranks — the identical f32 value `all_reduce_mean`
     /// would leave everywhere, at a fraction of the traffic. Non-owner
     /// ranks are left with undefined partial sums in `buf`.
-    pub fn reduce_mean_to(&mut self, owner: usize, buf: &mut [f32], bucket_elems: usize) {
+    pub fn reduce_mean_to(&mut self, owner: usize, buf: &mut [f32], bucket_elems: usize) -> Result<(), TransportError> {
         if self.ranks() == 1 || buf.is_empty() {
-            return;
+            return Ok(());
         }
         let be = bucket_elems.max(1);
         let ranks = self.ranks();
@@ -243,12 +270,12 @@ impl<T: Transport> Comm<T> {
         while start < buf.len() {
             let end = (start + be).min(buf.len());
             let bucket = &mut buf[start..end];
-            self.reduce_bucket(bucket);
+            self.reduce_bucket(bucket)?;
             if owner != 0 {
                 if self.rank() == 0 {
-                    self.send(owner, bucket);
+                    self.send(owner, bucket)?;
                 } else if self.rank() == owner {
-                    let got = self.recv(0);
+                    let got = self.recv(0)?;
                     bucket.copy_from_slice(&got);
                     self.recycle(got);
                 }
@@ -258,6 +285,7 @@ impl<T: Transport> Comm<T> {
             }
             start = end;
         }
+        Ok(())
     }
 
     /// Reduce-scatter with mean: each segment of `buf` ends up reduced
@@ -265,47 +293,50 @@ impl<T: Transport> Comm<T> {
     /// and every rank must pass the identical list — the segment order is
     /// part of the message-matching contract. Composed with `all_gather`
     /// over the same segments this is bit-for-bit `all_reduce_mean`.
-    pub fn reduce_scatter_mean(&mut self, buf: &mut [f32], segs: &[Seg], bucket_elems: usize) {
+    pub fn reduce_scatter_mean(&mut self, buf: &mut [f32], segs: &[Seg], bucket_elems: usize) -> Result<(), TransportError> {
         for sg in segs {
-            self.reduce_mean_to(sg.owner, &mut buf[sg.range.clone()], bucket_elems);
+            self.reduce_mean_to(sg.owner, &mut buf[sg.range.clone()], bucket_elems)?;
         }
+        Ok(())
     }
 
     /// All-gather: every segment is broadcast from its owner, filling the
     /// non-owned parts of `buf` on every rank.
-    pub fn all_gather(&mut self, buf: &mut [f32], segs: &[Seg], bucket_elems: usize) {
+    pub fn all_gather(&mut self, buf: &mut [f32], segs: &[Seg], bucket_elems: usize) -> Result<(), TransportError> {
         for sg in segs {
-            self.broadcast(sg.owner, &mut buf[sg.range.clone()], bucket_elems);
+            self.broadcast(sg.owner, &mut buf[sg.range.clone()], bucket_elems)?;
         }
+        Ok(())
     }
 
     /// Binomial-tree broadcast of `buf` from `root` to every rank, in
     /// buckets (the all-gather building block: each rank broadcasts its
     /// owned parameter slice after stepping).
-    pub fn broadcast(&mut self, root: usize, buf: &mut [f32], bucket_elems: usize) {
+    pub fn broadcast(&mut self, root: usize, buf: &mut [f32], bucket_elems: usize) -> Result<(), TransportError> {
         if self.ranks() == 1 || buf.is_empty() {
-            return;
+            return Ok(());
         }
         let be = bucket_elems.max(1);
         let mut start = 0;
         while start < buf.len() {
             let end = (start + be).min(buf.len());
-            self.bcast_bucket(root, &mut buf[start..end]);
+            self.bcast_bucket(root, &mut buf[start..end])?;
             start = end;
         }
+        Ok(())
     }
 
     /// Climb one bucket to rank 0: at stride s, ranks ≡ s (mod 2s) hand
     /// their partial sum to rank − s and drop out; survivors accumulate.
     /// The addition order is a fixed function of rank count alone.
-    fn reduce_bucket(&mut self, bucket: &mut [f32]) {
+    fn reduce_bucket(&mut self, bucket: &mut [f32]) -> Result<(), TransportError> {
         let (rank, ranks) = (self.rank(), self.ranks());
         let mut stride = 1;
         while stride < ranks {
             if rank % (2 * stride) == 0 {
                 let partner = rank + stride;
                 if partner < ranks {
-                    let got = self.recv(partner);
+                    let got = self.recv(partner)?;
                     debug_assert_eq!(got.len(), bucket.len());
                     for (x, y) in bucket.iter_mut().zip(&got) {
                         *x += y;
@@ -313,16 +344,17 @@ impl<T: Transport> Comm<T> {
                     self.recycle(got);
                 }
             } else {
-                self.send(rank - stride, bucket);
-                return;
+                self.send(rank - stride, bucket)?;
+                return Ok(());
             }
             stride *= 2;
         }
+        Ok(())
     }
 
     /// Binomial broadcast from `root`, descending strides; each non-root
     /// rank receives exactly once, then forwards to lower levels.
-    fn bcast_bucket(&mut self, root: usize, bucket: &mut [f32]) {
+    fn bcast_bucket(&mut self, root: usize, bucket: &mut [f32]) -> Result<(), TransportError> {
         let (rank, ranks) = (self.rank(), self.ranks());
         let vr = (rank + ranks - root) % ranks;
         let unmap = |v: usize| (v + root) % ranks;
@@ -336,16 +368,17 @@ impl<T: Transport> Comm<T> {
             if pos == 0 {
                 let partner = vr + stride;
                 if partner < ranks {
-                    self.send(unmap(partner), bucket);
+                    self.send(unmap(partner), bucket)?;
                 }
             } else if pos == stride {
-                let got = self.recv(unmap(vr - stride));
+                let got = self.recv(unmap(vr - stride))?;
                 debug_assert_eq!(got.len(), bucket.len());
                 bucket.copy_from_slice(&got);
                 self.recycle(got);
             }
             stride >>= 1;
         }
+        Ok(())
     }
 }
 
@@ -384,7 +417,7 @@ mod tests {
             let out = on_mesh(ranks, |mut c| {
                 // rank r contributes r+1 at every element → sum = ranks(ranks+1)/2
                 let mut buf = vec![(c.rank() + 1) as f32; 10];
-                c.all_reduce_sum(&mut buf, 3); // ragged buckets on purpose
+                c.all_reduce_sum(&mut buf, 3).expect("sum"); // ragged buckets on purpose
                 buf
             });
             let want = (ranks * (ranks + 1) / 2) as f32;
@@ -407,7 +440,7 @@ mod tests {
         for ranks in [1usize, 2, 3, 4] {
             let out = on_mesh(ranks, |mut c| {
                 let mut buf = proto.clone();
-                c.all_reduce_mean(&mut buf, 4);
+                c.all_reduce_mean(&mut buf, 4).expect("mean");
                 buf
             });
             for buf in &out {
@@ -422,7 +455,7 @@ mod tests {
     fn mean_divides_by_ranks() {
         let out = on_mesh(4, |mut c| {
             let mut buf = vec![(c.rank() * 2) as f32; 5]; // 0,2,4,6 → mean 3
-            c.all_reduce_mean(&mut buf, 2);
+            c.all_reduce_mean(&mut buf, 2).expect("mean");
             buf
         });
         for buf in &out {
@@ -440,7 +473,7 @@ mod tests {
                     } else {
                         vec![0.0; 7]
                     };
-                    c.broadcast(root, &mut buf, 2);
+                    c.broadcast(root, &mut buf, 2).expect("broadcast");
                     buf
                 });
                 for (r, buf) in out.iter().enumerate() {
@@ -462,7 +495,7 @@ mod tests {
                 let mut buf: Vec<f32> = (0..6)
                     .map(|i| 1.0e-7 + (c.rank() as f32 + 1.0) * 1.0e7 * (i as f32 + 1.0))
                     .collect();
-                c.all_reduce_sum(&mut buf, 4);
+                c.all_reduce_sum(&mut buf, 4).expect("sum");
                 buf
             })
         };
@@ -494,14 +527,14 @@ mod tests {
                 };
                 let reference = on_mesh(ranks, |mut c| {
                     let mut buf = fill(c.rank());
-                    c.all_reduce_mean(&mut buf, bucket);
+                    c.all_reduce_mean(&mut buf, bucket).expect("mean");
                     buf
                 });
                 let segs_ref = &segs;
                 let composed = on_mesh(ranks, |mut c| {
                     let mut buf = fill(c.rank());
-                    c.reduce_scatter_mean(&mut buf, segs_ref, bucket);
-                    c.all_gather(&mut buf, segs_ref, bucket);
+                    c.reduce_scatter_mean(&mut buf, segs_ref, bucket).expect("scatter");
+                    c.all_gather(&mut buf, segs_ref, bucket).expect("gather");
                     buf
                 });
                 for (r, (a, b)) in composed.iter().zip(&reference).enumerate() {
@@ -529,8 +562,8 @@ mod tests {
         let segs_ref = &segs;
         let out = on_mesh(3, |mut c| {
             let mut buf = vec![(c.rank() + 1) as f32; 6];
-            c.reduce_scatter_mean(&mut buf, segs_ref, 2);
-            c.all_gather(&mut buf, segs_ref, 2);
+            c.reduce_scatter_mean(&mut buf, segs_ref, 2).expect("scatter");
+            c.all_gather(&mut buf, segs_ref, 2).expect("gather");
             buf
         });
         for buf in &out {
@@ -550,7 +583,7 @@ mod tests {
             let segs = balanced_segs(LEN, ranks);
             let ar_bytes: u64 = on_mesh(ranks, |mut c| {
                 let mut buf = vec![1.0f32; LEN];
-                c.all_reduce_mean(&mut buf, 5);
+                c.all_reduce_mean(&mut buf, 5).expect("mean");
                 c.bytes_sent()
             })
             .iter()
@@ -560,7 +593,7 @@ mod tests {
             let segs_ref = &segs;
             let rs_bytes: u64 = on_mesh(ranks, |mut c| {
                 let mut buf = vec![1.0f32; LEN];
-                c.reduce_scatter_mean(&mut buf, segs_ref, 5);
+                c.reduce_scatter_mean(&mut buf, segs_ref, 5).expect("scatter");
                 c.bytes_sent()
             })
             .iter()
@@ -580,7 +613,7 @@ mod tests {
             let mut last = 0.0f32;
             for round in 0..50 {
                 let mut buf = vec![(c.rank() + round) as f32; 9];
-                c.all_reduce_mean(&mut buf, 2);
+                c.all_reduce_mean(&mut buf, 2).expect("mean");
                 last = buf[0];
             }
             last
@@ -589,6 +622,28 @@ mod tests {
         for v in &out {
             assert_eq!(*v, 50.5);
         }
+    }
+
+    /// A rank that vanishes mid-collective must surface as a typed
+    /// `PeerLost` (phase-stamped) on every survivor — not a hang, not a
+    /// panic. The survivor adjacent to the casualty names it; others may
+    /// name an intermediate rank that unwound first (cascading abort).
+    #[test]
+    fn peer_death_mid_collective_is_a_typed_error_on_every_survivor() {
+        let out = on_mesh(3, |mut c| {
+            if c.rank() == 2 {
+                return None; // dies before the collective: endpoint drops
+            }
+            let mut buf = vec![1.0f32; 8];
+            Some(c.all_reduce_sum(&mut buf, 4))
+        });
+        assert!(out[2].is_none());
+        let err0 = out[0].clone().expect("ran").expect_err("rank 0 must fail");
+        assert_eq!(err0, TransportError::PeerLost { rank: 2, phase: "reduce" });
+        // Rank 1 talks only to rank 0 in a 3-rank tree; it observes the
+        // cascade (rank 0 unwinding), not the original casualty.
+        let err1 = out[1].clone().expect("ran").expect_err("rank 1 must fail");
+        assert_eq!(err1, TransportError::PeerLost { rank: 0, phase: "reduce" });
     }
 
     /// Per-phase attribution: the phase counters partition `bytes_sent`
@@ -602,7 +657,7 @@ mod tests {
             c.all_reduce_sum(&mut buf, 4);
             let reduce_delta = meter.take(&c);
             c.set_phase(Phase::Gather);
-            c.broadcast(0, &mut buf, 4);
+            c.broadcast(0, &mut buf, 4).expect("broadcast");
             let gather_delta = meter.take(&c);
             c.set_phase(Phase::Opt);
             c.all_reduce_sum(&mut buf, 4);

@@ -62,6 +62,18 @@
 //! never the per-element association (pinned in
 //! rust/tests/shard_parity.rs).
 //!
+//! **Failure behaviour:** a peer death (or a wedge past the transport's
+//! progress deadline) surfaces as a typed `TransportError::PeerLost`
+//! from whichever collective touches the dead link first. Each pipeline
+//! converts that into an `Err` return whose root cause is the typed
+//! error and whose context names the rank and the last committed
+//! checkpoint step — never a hang and never a panic — and the act of
+//! returning drops the rank's endpoint, which cascades the abort to
+//! every surviving peer within one transport deadline. The overlap
+//! pipeline forwards the failure from its comm thread as `Resp::Fatal`
+//! so the replica thread unwinds through the same path (pinned in
+//! rust/tests/fault_tolerance.rs).
+//!
 //! Trajectory contract: the partitioned update is bit-identical to the
 //! unsharded optimizer given the same averaged gradient (tensor-aligned
 //! ownership, or chunk-aligned row splits with the canonical chunked
@@ -74,7 +86,7 @@
 use std::ops::Range;
 use std::sync::mpsc::{channel, Receiver, Sender};
 
-use anyhow::{ensure, Result};
+use anyhow::{anyhow, bail, ensure, Result};
 
 use crate::optim::{Collective, Optimizer, Schedule, ShardedOptimizer};
 use crate::tensor::Tensor;
@@ -82,7 +94,7 @@ use crate::tensor::Tensor;
 use super::ckpt::{CkptConfig, RankCkpt};
 use super::collective::{mesh, Comm, Phase, Seg};
 use super::partition::{Partition, Piece};
-use super::transport::Transport;
+use super::transport::{Transport, TransportError};
 
 /// A task the shard engine can train: deterministic initial parameters
 /// plus per-rank gradient replicas that partition each step's global
@@ -371,16 +383,57 @@ fn pack_owned(pieces: &[Piece], params: &[Tensor], flat: &mut [f32]) {
     }
 }
 
+/// Best-effort text of a captured thread panic payload.
+fn panic_text(p: &(dyn std::any::Any + Send)) -> &str {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        s
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s
+    } else {
+        "non-string panic payload"
+    }
+}
+
+/// Wrap a mid-run peer loss with this rank's recovery context. The typed
+/// [`TransportError`] stays the **root cause** so a supervised worker
+/// can recognise the failure class (re-rendezvous, don't crash), while
+/// the context tells a human what is safe to resume from.
+fn peer_lost_abort(rank: usize, last_committed: Option<usize>, e: TransportError) -> anyhow::Error {
+    let committed = match last_committed {
+        Some(s) => format!("step {s}"),
+        None => "none".to_string(),
+    };
+    anyhow::Error::new(e).context(format!(
+        "rank {rank}: training aborted mid-step (last committed checkpoint: {committed})"
+    ))
+}
+
 /// The optimizer-facing collective of the synchronous pipelines: the
 /// mesh's fixed-tree all-reduce at the engine's bucket size.
+///
+/// The optimizer's arithmetic stays infallible, so a transport failure
+/// is **latched** here instead of thrown: the first error disables every
+/// later reduction (they no-op, leaving garbage the caller must not
+/// commit) and the pipeline checks [`Collective::failed`] as soon as the
+/// step returns.
 struct CommCollective<'a, T: Transport> {
     comm: &'a mut Comm<T>,
     bucket: usize,
+    err: Option<TransportError>,
 }
 
 impl<T: Transport> Collective for CommCollective<'_, T> {
     fn all_reduce_sum(&mut self, buf: &mut [f32]) {
-        self.comm.all_reduce_sum(buf, self.bucket);
+        if self.err.is_some() {
+            return;
+        }
+        if let Err(e) = self.comm.all_reduce_sum(buf, self.bucket) {
+            self.err = Some(e);
+        }
+    }
+
+    fn failed(&self) -> bool {
+        self.err.is_some()
     }
 }
 
@@ -461,10 +514,24 @@ pub fn train_with_comms<T: Transport>(
                 })
             })
             .collect();
-        handles
+        // Join EVERY handle before combining results: a rank that aborts
+        // (peer loss) must not short-circuit past a peer that panicked,
+        // or the scope would re-raise the unobserved panic. `lanes` was
+        // sorted by rank, so handle order is rank order. With several
+        // failures the first (lowest-rank) error wins — which may be a
+        // survivor's cascade error rather than the original casualty.
+        let joined: Vec<Result<RankOut>> = handles
             .into_iter()
-            .map(|h| h.join().expect("replica thread panicked"))
-            .collect::<Result<Vec<RankOut>>>()
+            .enumerate()
+            .map(|(rank, h)| match h.join() {
+                Ok(r) => r,
+                Err(p) => Err(anyhow!(
+                    "replica thread for rank {rank} panicked: {}",
+                    panic_text(p.as_ref())
+                )),
+            })
+            .collect();
+        joined.into_iter().collect::<Result<Vec<RankOut>>>()
     })?;
     let wall_secs = t0.elapsed().as_secs_f64();
 
@@ -602,21 +669,26 @@ fn run_rank_allreduce<T: Transport>(
         }
         flat[total] = loss;
         comm.set_phase(Phase::Reduce);
-        comm.all_reduce_mean(&mut flat, bucket);
+        comm.all_reduce_mean(&mut flat, bucket)
+            .map_err(|e| peer_lost_abort(rank, ck.last_committed(), e))?;
         losses.push(flat[total] as f64);
 
         // Partitioned update: unpack + step the owned pieces only.
         unpack_owned(&my_pieces, &flat, &mut grads);
         comm.set_phase(Phase::Opt);
-        let mut coll = CommCollective { comm: &mut comm, bucket };
+        let mut coll = CommCollective { comm: &mut comm, bucket, err: None };
         opt.step_collective(&mut params, &grads, schedule.at(step), &mut coll);
+        if let Some(e) = coll.err {
+            return Err(peer_lost_abort(rank, ck.last_committed(), e));
+        }
 
         // All-gather: every rank broadcasts its updated slice.
         comm.set_phase(Phase::Gather);
         pack_owned(&my_pieces, &params, &mut flat);
         for root in 0..ranks {
             let r = part.elem_range(root);
-            comm.broadcast(root, &mut flat[r], bucket);
+            comm.broadcast(root, &mut flat[r], bucket)
+                .map_err(|e| peer_lost_abort(rank, ck.last_committed(), e))?;
         }
         for (slot, p) in slots.iter().zip(params.iter_mut()) {
             p.data_mut().copy_from_slice(&flat[slot.offset..slot.offset + slot.elems]);
@@ -624,8 +696,18 @@ fn run_rank_allreduce<T: Transport>(
 
         if ck.save_due(step, steps) {
             comm.set_phase(Phase::Opt);
-            let mut coll = CommCollective { comm: &mut comm, bucket };
-            ck.save(step + 1, &params, &opt, &mut coll)?;
+            let mut coll = CommCollective { comm: &mut comm, bucket, err: None };
+            let saved = ck.save(step + 1, &params, &opt, &mut coll);
+            if let Some(e) = coll.err {
+                // The save already explained what it abandoned; keep the
+                // typed peer loss as the root cause underneath it.
+                let err = peer_lost_abort(rank, ck.last_committed(), e);
+                return Err(match saved {
+                    Err(s) => err.context(format!("{s:#}")),
+                    Ok(()) => err,
+                });
+            }
+            saved?;
         }
     }
 
@@ -676,19 +758,24 @@ fn run_rank_reduce_scatter<T: Transport>(
         }
         flat[total] = loss;
         comm.set_phase(Phase::Reduce);
-        comm.reduce_scatter_mean(&mut flat, &lay.segs, bucket);
+        comm.reduce_scatter_mean(&mut flat, &lay.segs, bucket)
+            .map_err(|e| peer_lost_abort(rank, ck.last_committed(), e))?;
 
         // Only the owned slice of `flat` holds the reduced mean now.
         unpack_owned(&my_pieces, &flat, &mut grads);
         comm.set_phase(Phase::Opt);
-        let mut coll = CommCollective { comm: &mut comm, bucket };
+        let mut coll = CommCollective { comm: &mut comm, bucket, err: None };
         opt.step_collective(&mut params, &grads, schedule.at(step), &mut coll);
+        if let Some(e) = coll.err {
+            return Err(peer_lost_abort(rank, ck.last_committed(), e));
+        }
 
         comm.set_phase(Phase::Gather);
         pack_owned(&my_pieces, &params, &mut flat);
         // One gather refreshes every slice AND broadcasts the loss
         // (rank 0 kept it from the scatter).
-        comm.all_gather(&mut flat, &lay.segs, bucket);
+        comm.all_gather(&mut flat, &lay.segs, bucket)
+            .map_err(|e| peer_lost_abort(rank, ck.last_committed(), e))?;
         for (slot, p) in slots.iter().zip(params.iter_mut()) {
             p.data_mut().copy_from_slice(&flat[slot.offset..slot.offset + slot.elems]);
         }
@@ -696,8 +783,16 @@ fn run_rank_reduce_scatter<T: Transport>(
 
         if ck.save_due(step, steps) {
             comm.set_phase(Phase::Opt);
-            let mut coll = CommCollective { comm: &mut comm, bucket };
-            ck.save(step + 1, &params, &opt, &mut coll)?;
+            let mut coll = CommCollective { comm: &mut comm, bucket, err: None };
+            let saved = ck.save(step + 1, &params, &opt, &mut coll);
+            if let Some(e) = coll.err {
+                let err = peer_lost_abort(rank, ck.last_committed(), e);
+                return Err(match saved {
+                    Err(s) => err.context(format!("{s:#}")),
+                    Ok(()) => err,
+                });
+            }
+            saved?;
         }
     }
 
@@ -742,6 +837,10 @@ enum Resp {
     AllReduced(Vec<f32>),
     /// The fully gathered flat buffer (params + loss slot).
     Gathered(Vec<f32>),
+    /// The comm thread hit a transport failure (a peer died or timed
+    /// out); it sends this once, then hangs up. The phase context is
+    /// already stamped on the error.
+    Fatal(TransportError),
 }
 
 /// The optimizer-facing collective of the overlap pipeline: ships the
@@ -753,24 +852,63 @@ struct ChannelCollective<'a> {
     resp: &'a Receiver<Resp>,
     pool: Vec<Vec<f32>>,
     stray: Vec<Resp>,
+    /// First transport failure, latched: later reductions no-op (their
+    /// buffers hold garbage the caller must not commit) and the step
+    /// loop checks [`Collective::failed`] right after the optimizer
+    /// returns.
+    err: Option<TransportError>,
+    rank: usize,
+}
+
+impl ChannelCollective<'_> {
+    /// The comm thread sends `Resp::Fatal` before hanging up; fish it
+    /// out of whatever recycle traffic is still queued. No Fatal means
+    /// the comm thread panicked — `worker.join()` tells that story; the
+    /// placeholder here only marks the collective as dead meanwhile.
+    fn drain_fatal(&mut self) -> TransportError {
+        while let Ok(r) = self.resp.try_recv() {
+            if let Resp::Fatal(e) = r {
+                return e;
+            }
+        }
+        TransportError::PeerLost { rank: self.rank, phase: "opt" }
+    }
 }
 
 impl Collective for ChannelCollective<'_> {
     fn all_reduce_sum(&mut self, buf: &mut [f32]) {
+        if self.err.is_some() {
+            return;
+        }
         let mut msg = self.pool.pop().unwrap_or_default();
         msg.clear();
         msg.extend_from_slice(buf);
-        self.cmd.send(Cmd::AllReduce { data: msg }).expect("comm thread alive");
+        if self.cmd.send(Cmd::AllReduce { data: msg }).is_err() {
+            self.err = Some(self.drain_fatal());
+            return;
+        }
         loop {
-            match self.resp.recv().expect("comm thread alive") {
-                Resp::AllReduced(data) => {
+            match self.resp.recv() {
+                Ok(Resp::AllReduced(data)) => {
                     buf.copy_from_slice(&data);
                     self.pool.push(data);
                     return;
                 }
-                other => self.stray.push(other),
+                Ok(Resp::Fatal(e)) => {
+                    self.err = Some(e);
+                    return;
+                }
+                Ok(other) => self.stray.push(other),
+                Err(_) => {
+                    self.err = Some(self.drain_fatal());
+                    return;
+                }
             }
         }
+    }
+
+    fn failed(&self) -> bool {
+        self.err.is_some()
     }
 }
 
@@ -818,143 +956,192 @@ fn run_rank_overlap<T: Transport>(
             let my_range = my_range.clone();
             s.spawn(move || comm_worker(comm, cmd_rx, resp_tx, segs, my_range, bucket, total, rank))
         };
-        let mut coll =
-            ChannelCollective { cmd: &cmd_tx, resp: &resp_rx, pool: Vec::new(), stray: Vec::new() };
 
-        // Buffer recycling: staging buffers come back keyed by segment
-        // (exact length preserved, so no per-step zero-fill — the ready
-        // counter guarantees every element is overwritten before a
-        // segment is sent); the generic pool holds the owned-params
-        // buffer.
-        let mut pool: Vec<Vec<f32>> = Vec::new();
-        let mut seg_pools: Vec<Vec<Vec<f32>>> = vec![Vec::new(); lay.segs.len()];
-        // Index of this rank's own (param) gradient segment, if any.
-        let my_seg = lay.segs[..lay.loss_seg].iter().position(|s| s.owner == rank);
-        let mut spare_flat = vec![0.0f32; total + 1];
-        // Per-step working state, hoisted so the loop body allocates
-        // nothing in steady state (the inner buffers rotate through the
-        // pools; these outer containers are reset in place).
-        let mut remaining = vec![0usize; lay.segs.len()];
-        let mut staging: Vec<Vec<f32>> = vec![Vec::new(); lay.segs.len()];
+        // The step loop, factored so EVERY failure unwinds through one
+        // path: the closure returns, the command channel drops (which
+        // ends the worker's recv loop if a Fatal didn't already), the
+        // worker is joined, and only then is the error reported.
+        let run = (|| -> Result<()> {
+            let mut coll = ChannelCollective {
+                cmd: &cmd_tx,
+                resp: &resp_rx,
+                pool: Vec::new(),
+                stray: Vec::new(),
+                err: None,
+                rank,
+            };
 
-        for step in start..steps {
-            remaining.copy_from_slice(&lay.pieces_in_seg);
-            for (si, seg) in lay.segs.iter().enumerate() {
-                staging[si] = if lay.pieces_in_seg[si] > 0 {
-                    let v = seg_pools[si]
-                        .pop()
-                        .unwrap_or_else(|| vec![0.0f32; seg.range.len()]);
-                    debug_assert_eq!(v.len(), seg.range.len());
-                    v
-                } else {
-                    // loss segment: filled by push after the backward
-                    let mut v = seg_pools[si].pop().unwrap_or_default();
-                    v.clear();
-                    v
+            // Buffer recycling: staging buffers come back keyed by segment
+            // (exact length preserved, so no per-step zero-fill — the ready
+            // counter guarantees every element is overwritten before a
+            // segment is sent); the generic pool holds the owned-params
+            // buffer.
+            let mut pool: Vec<Vec<f32>> = Vec::new();
+            let mut seg_pools: Vec<Vec<Vec<f32>>> = vec![Vec::new(); lay.segs.len()];
+            // Index of this rank's own (param) gradient segment, if any.
+            let my_seg = lay.segs[..lay.loss_seg].iter().position(|s| s.owner == rank);
+            let mut spare_flat = vec![0.0f32; total + 1];
+            // Per-step working state, hoisted so the loop body allocates
+            // nothing in steady state (the inner buffers rotate through the
+            // pools; these outer containers are reset in place).
+            let mut remaining = vec![0usize; lay.segs.len()];
+            let mut staging: Vec<Vec<f32>> = vec![Vec::new(); lay.segs.len()];
+
+            for step in start..steps {
+                remaining.copy_from_slice(&lay.pieces_in_seg);
+                for (si, seg) in lay.segs.iter().enumerate() {
+                    staging[si] = if lay.pieces_in_seg[si] > 0 {
+                        let v = seg_pools[si]
+                            .pop()
+                            .unwrap_or_else(|| vec![0.0f32; seg.range.len()]);
+                        debug_assert_eq!(v.len(), seg.range.len());
+                        v
+                    } else {
+                        // loss segment: filled by push after the backward
+                        let mut v = seg_pools[si].pop().unwrap_or_default();
+                        v.clear();
+                        v
+                    };
+                }
+
+                let loss = {
+                    let staging = &mut staging;
+                    let remaining = &mut remaining;
+                    let cmd = &cmd_tx;
+                    let lay = &lay;
+                    // A send fails only when the comm thread hung up
+                    // (peer loss mid-backward). The callback can't abort
+                    // the backward, so failed sends just drop their
+                    // buffer; the recv below surfaces the typed error
+                    // once the backward returns.
+                    let mut ready = |i: usize, g: &[f32]| {
+                        for pc in &lay.tensor_pieces[i] {
+                            staging[pc.seg][pc.seg_off..pc.seg_off + pc.local.len()]
+                                .copy_from_slice(&g[pc.local.clone()]);
+                            remaining[pc.seg] -= 1;
+                            if remaining[pc.seg] == 0 {
+                                let data = std::mem::take(&mut staging[pc.seg]);
+                                let _ = cmd.send(Cmd::Reduce { seg: pc.seg, data });
+                            }
+                        }
+                    };
+                    replica.grad_streaming(&params, step, &mut grads, &mut ready)
                 };
-            }
+                debug_assert!(
+                    remaining.iter().all(|&r| r == 0),
+                    "replica did not report every tensor ready"
+                );
+                // The loss segment goes last (its value exists only now).
+                let mut lv = std::mem::take(&mut staging[lay.loss_seg]);
+                lv.push(loss);
+                let _ = cmd_tx.send(Cmd::Reduce { seg: lay.loss_seg, data: lv });
 
-            let loss = {
-                let staging = &mut staging;
-                let remaining = &mut remaining;
-                let cmd = &cmd_tx;
-                let lay = &lay;
-                let mut ready = |i: usize, g: &[f32]| {
-                    for pc in &lay.tensor_pieces[i] {
-                        staging[pc.seg][pc.seg_off..pc.seg_off + pc.local.len()]
-                            .copy_from_slice(&g[pc.local.clone()]);
-                        remaining[pc.seg] -= 1;
-                        if remaining[pc.seg] == 0 {
-                            let data = std::mem::take(&mut staging[pc.seg]);
-                            cmd.send(Cmd::Reduce { seg: pc.seg, data }).expect("comm thread alive");
+                // Wait for our own segment's reduced mean (unless we own
+                // nothing), recycling buffers as they come back.
+                if !my_range.is_empty() {
+                    loop {
+                        match resp_rx.recv() {
+                            Ok(Resp::OwnedGrad(data)) => {
+                                for p in &my_pieces {
+                                    let off = p.flat.start - my_range.start;
+                                    grads[p.tensor].data_mut()[p.local.clone()]
+                                        .copy_from_slice(&data[off..off + p.local.len()]);
+                                }
+                                seg_pools[my_seg.expect("owned grad implies a segment")].push(data);
+                                break;
+                            }
+                            Ok(Resp::Recycle(v)) => pool.push(v),
+                            Ok(Resp::RecycleSeg(si, v)) => seg_pools[si].push(v),
+                            Ok(Resp::Fatal(e)) => {
+                                return Err(peer_lost_abort(rank, ck.last_committed(), e));
+                            }
+                            Ok(Resp::AllReduced(_)) => {
+                                unreachable!("collective response before request")
+                            }
+                            Ok(Resp::Gathered(_)) => unreachable!("gather response before request"),
+                            Err(_) => bail!("rank {rank}: comm thread hung up mid-step"),
                         }
                     }
-                };
-                replica.grad_streaming(&params, step, &mut grads, &mut ready)
-            };
-            debug_assert!(
-                remaining.iter().all(|&r| r == 0),
-                "replica did not report every tensor ready"
-            );
-            // The loss segment goes last (its value exists only now).
-            let mut lv = std::mem::take(&mut staging[lay.loss_seg]);
-            lv.push(loss);
-            cmd_tx.send(Cmd::Reduce { seg: lay.loss_seg, data: lv }).expect("comm thread alive");
-
-            // Wait for our own segment's reduced mean (unless we own
-            // nothing), recycling buffers as they come back.
-            if !my_range.is_empty() {
-                loop {
-                    match resp_rx.recv().expect("comm thread alive") {
-                        Resp::OwnedGrad(data) => {
-                            for p in &my_pieces {
-                                let off = p.flat.start - my_range.start;
-                                grads[p.tensor].data_mut()[p.local.clone()]
-                                    .copy_from_slice(&data[off..off + p.local.len()]);
-                            }
-                            seg_pools[my_seg.expect("owned grad implies a segment")].push(data);
-                            break;
-                        }
+                }
+                opt.step_collective(&mut params, &grads, schedule.at(step), &mut coll);
+                if let Some(e) = coll.err.take() {
+                    return Err(peer_lost_abort(rank, ck.last_committed(), e));
+                }
+                // Recycle-class responses that raced the optimizer's
+                // collective round-trips.
+                for r in coll.stray.drain(..) {
+                    match r {
                         Resp::Recycle(v) => pool.push(v),
                         Resp::RecycleSeg(si, v) => seg_pools[si].push(v),
-                        Resp::AllReduced(_) => unreachable!("collective response before request"),
-                        Resp::Gathered(_) => unreachable!("gather response before request"),
+                        _ => unreachable!("unexpected response class during optimizer collective"),
                     }
                 }
-            }
-            opt.step_collective(&mut params, &grads, schedule.at(step), &mut coll);
-            // Recycle-class responses that raced the optimizer's
-            // collective round-trips.
-            for r in coll.stray.drain(..) {
-                match r {
-                    Resp::Recycle(v) => pool.push(v),
-                    Resp::RecycleSeg(si, v) => seg_pools[si].push(v),
-                    _ => unreachable!("unexpected response class during optimizer collective"),
+
+                let mut owned = pool.pop().unwrap_or_default();
+                owned.clear();
+                for p in &my_pieces {
+                    owned.extend_from_slice(&params[p.tensor].data()[p.local.clone()]);
+                }
+                let spare = std::mem::take(&mut spare_flat);
+                let _ = cmd_tx.send(Cmd::Gather { owned, spare });
+                let gathered = loop {
+                    match resp_rx.recv() {
+                        Ok(Resp::Gathered(f)) => break f,
+                        Ok(Resp::Recycle(v)) => pool.push(v),
+                        Ok(Resp::RecycleSeg(si, v)) => seg_pools[si].push(v),
+                        Ok(Resp::Fatal(e)) => {
+                            return Err(peer_lost_abort(rank, ck.last_committed(), e));
+                        }
+                        Ok(Resp::AllReduced(_)) => unreachable!("late collective response"),
+                        Ok(Resp::OwnedGrad(_)) => unreachable!("unexpected second owned segment"),
+                        Err(_) => bail!("rank {rank}: comm thread hung up mid-step"),
+                    }
+                };
+                for (slot, p) in slots.iter().zip(params.iter_mut()) {
+                    p.data_mut().copy_from_slice(&gathered[slot.offset..slot.offset + slot.elems]);
+                }
+                losses.push(gathered[total] as f64);
+                spare_flat = gathered;
+
+                if ck.save_due(step, steps) {
+                    // the barriers ride the comm thread in command order, so
+                    // the commit protocol is identical to the sync pipelines
+                    let saved = ck.save(step + 1, &params, &opt, &mut coll);
+                    if let Some(e) = coll.err.take() {
+                        let err = peer_lost_abort(rank, ck.last_committed(), e);
+                        return Err(match saved {
+                            Err(s) => err.context(format!("{s:#}")),
+                            Ok(()) => err,
+                        });
+                    }
+                    saved?;
                 }
             }
+            Ok(())
+        })();
 
-            let mut owned = pool.pop().unwrap_or_default();
-            owned.clear();
-            for p in &my_pieces {
-                owned.extend_from_slice(&params[p.tensor].data()[p.local.clone()]);
-            }
-            let spare = std::mem::take(&mut spare_flat);
-            cmd_tx.send(Cmd::Gather { owned, spare }).expect("comm thread alive");
-            let gathered = loop {
-                match resp_rx.recv().expect("comm thread alive") {
-                    Resp::Gathered(f) => break f,
-                    Resp::Recycle(v) => pool.push(v),
-                    Resp::RecycleSeg(si, v) => seg_pools[si].push(v),
-                    Resp::AllReduced(_) => unreachable!("late collective response"),
-                    Resp::OwnedGrad(_) => unreachable!("unexpected second owned segment"),
-                }
-            };
-            for (slot, p) in slots.iter().zip(params.iter_mut()) {
-                p.data_mut().copy_from_slice(&gathered[slot.offset..slot.offset + slot.elems]);
-            }
-            losses.push(gathered[total] as f64);
-            spare_flat = gathered;
-
-            if ck.save_due(step, steps) {
-                // the barriers ride the comm thread in command order, so
-                // the commit protocol is identical to the sync pipelines
-                ck.save(step + 1, &params, &opt, &mut coll)?;
+        drop(cmd_tx);
+        match worker.join() {
+            // A comm-thread panic outranks whatever the step loop saw —
+            // the loop's error (if any) is just the hangup it caused.
+            Err(p) => Err(anyhow!(
+                "rank {rank}: comm thread panicked: {}",
+                panic_text(p.as_ref())
+            )),
+            Ok((reduce_bytes, gather_bytes, opt_bytes)) => {
+                run?;
+                Ok(RankOut {
+                    losses,
+                    params,
+                    state_bytes: opt.state_overhead_bytes(),
+                    reduce_bytes,
+                    gather_bytes,
+                    opt_bytes,
+                    save_secs: ck.save_secs,
+                    load_secs: ck.load_secs,
+                })
             }
         }
-
-        drop(coll);
-        drop(cmd_tx);
-        let (reduce_bytes, gather_bytes, opt_bytes) = worker.join().expect("comm thread panicked");
-        Ok(RankOut {
-            losses,
-            params,
-            state_bytes: opt.state_overhead_bytes(),
-            reduce_bytes,
-            gather_bytes,
-            opt_bytes,
-            save_secs: ck.save_secs,
-            load_secs: ck.load_secs,
-        })
     })
 }
 
@@ -976,12 +1163,18 @@ fn comm_worker<T: Transport>(
 ) -> (u64, u64, u64) {
     let loss_seg = segs.len() - 1;
     let mut flat = vec![0.0f32; total + 1];
-    while let Ok(cmd) = cmd_rx.recv() {
+    // First transport failure, if any: break out, report it ONCE as
+    // `Resp::Fatal`, and hang up (dropping both channel ends), which
+    // unblocks the replica thread wherever it is waiting.
+    let fail: Option<TransportError> = loop {
+        let Ok(cmd) = cmd_rx.recv() else { break None };
         match cmd {
             Cmd::Reduce { seg, mut data } => {
                 let sg = &segs[seg];
                 comm.set_phase(Phase::Reduce);
-                comm.reduce_mean_to(sg.owner, &mut data, bucket);
+                if let Err(e) = comm.reduce_mean_to(sg.owner, &mut data, bucket) {
+                    break Some(e);
+                }
                 if sg.owner == rank && seg == loss_seg {
                     // keep the loss for the gather broadcast
                     flat[total] = data[0];
@@ -994,18 +1187,25 @@ fn comm_worker<T: Transport>(
             }
             Cmd::AllReduce { mut data } => {
                 comm.set_phase(Phase::Opt);
-                comm.all_reduce_sum(&mut data, bucket);
+                if let Err(e) = comm.all_reduce_sum(&mut data, bucket) {
+                    break Some(e);
+                }
                 let _ = resp_tx.send(Resp::AllReduced(data));
             }
             Cmd::Gather { owned, spare } => {
                 flat[my_range.clone()].copy_from_slice(&owned);
                 comm.set_phase(Phase::Gather);
-                comm.all_gather(&mut flat, &segs, bucket);
+                if let Err(e) = comm.all_gather(&mut flat, &segs, bucket) {
+                    break Some(e);
+                }
                 let _ = resp_tx.send(Resp::Recycle(owned));
                 let full = std::mem::replace(&mut flat, spare);
                 let _ = resp_tx.send(Resp::Gathered(full));
             }
         }
+    };
+    if let Some(e) = fail {
+        let _ = resp_tx.send(Resp::Fatal(e));
     }
     (
         comm.phase_bytes(Phase::Reduce),
@@ -1225,6 +1425,61 @@ mod tests {
         let b = run(Pipeline::Overlap);
         for (ta, tb) in a.params.iter().zip(&b.params) {
             assert_eq!(ta, tb);
+        }
+    }
+
+    /// Wraps a task so one rank's replica dies mid-run: the engine must
+    /// unwind EVERY rank with an error (the casualty's panic is captured
+    /// by the join, the survivors see the peer-loss cascade) — the
+    /// coordinated-abort contract, on every pipeline.
+    struct DyingTask(MlpTask);
+
+    struct DyingReplica(Box<dyn Replica>);
+
+    impl Replica for DyingReplica {
+        fn grad(&mut self, params: &[Tensor], step: usize, out: &mut [Tensor]) -> f32 {
+            if step == 2 {
+                panic!("injected replica failure");
+            }
+            self.0.grad(params, step, out)
+        }
+    }
+
+    impl ShardTask for DyingTask {
+        fn shapes(&self) -> Vec<Vec<usize>> {
+            self.0.shapes()
+        }
+        fn init_params(&self) -> Vec<Tensor> {
+            self.0.init_params()
+        }
+        fn replica(&self, rank: usize, ranks: usize) -> Result<Box<dyn Replica>> {
+            let inner = self.0.replica(rank, ranks)?;
+            Ok(if rank == 1 { Box::new(DyingReplica(inner)) } else { inner })
+        }
+    }
+
+    #[test]
+    fn replica_death_aborts_every_rank_instead_of_hanging() {
+        let task = DyingTask(MlpTask::new(6, 8, 2, 3, 24, 8, 5));
+        for pipeline in [Pipeline::AllReduce, Pipeline::ReduceScatter, Pipeline::Overlap] {
+            let cfg = ShardConfig {
+                ranks: 3,
+                bucket_kb: 1,
+                steps: 6,
+                pipeline,
+                ..ShardConfig::default()
+            };
+            let err = train(&task, "sgd", &Schedule::Constant { eta0: 1e-2 }, &cfg)
+                .expect_err(pipeline.name());
+            let text = format!("{err:#}");
+            // Rank order decides which failure wins the report: rank 0 is
+            // a survivor, so the text names the cascade (lost contact) —
+            // unless timing let the panic land first.
+            assert!(
+                text.contains("lost contact") || text.contains("panicked"),
+                "{}: {text}",
+                pipeline.name()
+            );
         }
     }
 }

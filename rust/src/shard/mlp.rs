@@ -42,6 +42,18 @@ pub struct MlpTask {
     /// elastic-resume `cmp` gates (save@M == resume@N cross-checks need
     /// runs at M and N to agree bit-for-bit in the first place).
     replicate_batch: bool,
+    /// Quantized-gradient mode (`shard-train --quant-grads`): clear the
+    /// low 2 mantissa bits of every gradient element (and the loss)
+    /// before they enter the collectives. Combined with
+    /// `replicate_batch`, the tree sum of k ≤ 4 identical contributions
+    /// is then exact — see [`quant`] — which extends the trajectory's
+    /// rank-count-invariance to NON-power-of-two counts like 3. The
+    /// chaos gate's 4-rank→3-rank restart parity rests on this.
+    quantize_grads: bool,
+    /// Artificial per-step delay in ms (`shard-train --step-sleep-ms`):
+    /// slows the run so fault-injection harnesses can kill a worker
+    /// mid-run without racing the job to completion. 0 = off.
+    step_sleep_ms: u64,
     features: Tensor,
     targets: Tensor,
 }
@@ -71,6 +83,8 @@ impl MlpTask {
             batch,
             seed,
             replicate_batch: false,
+            quantize_grads: false,
+            step_sleep_ms: 0,
             features,
             targets,
         }
@@ -81,6 +95,20 @@ impl MlpTask {
     /// independent of the rank count — see the field docs above.
     pub fn with_replicated_batch(mut self) -> MlpTask {
         self.replicate_batch = true;
+        self
+    }
+
+    /// Quantize gradients and loss to 2 spare mantissa bits — see the
+    /// field docs for why this buys rank-count-invariance up to 4 ranks.
+    pub fn with_quantized_grads(mut self) -> MlpTask {
+        self.quantize_grads = true;
+        self
+    }
+
+    /// Sleep this long after every gradient computation (chaos-test
+    /// pacing). 0 disables.
+    pub fn with_step_sleep_ms(mut self, ms: u64) -> MlpTask {
+        self.step_sleep_ms = ms;
         self
     }
 
@@ -151,6 +179,8 @@ impl ShardTask for MlpTask {
                 batch: self.batch,
                 seed: self.seed,
                 replicate_batch: self.replicate_batch,
+                quantize_grads: self.quantize_grads,
+                step_sleep_ms: self.step_sleep_ms,
                 features: self.features.clone(),
                 targets: self.targets.clone(),
             },
@@ -189,8 +219,41 @@ impl Replica for MlpReplica {
         let mine = &idx[self.rank * self.micro..(self.rank + 1) * self.micro];
         let x = gather_rows(&t.features, mine);
         let y = gather_rows(&t.targets, mine);
-        backward(params, &x, &y, t.depth, out, ready)
+        let loss = if t.quantize_grads {
+            // The streaming consumer sees quantized copies (one reused
+            // scratch buffer), and `out` is quantized in place afterward
+            // so the monolithic and streaming paths stay bit-identical.
+            let mut scratch: Vec<f32> = Vec::new();
+            let mut qready = |i: usize, g: &[f32]| {
+                scratch.clear();
+                scratch.extend(g.iter().map(|&v| quant(v)));
+                ready(i, &scratch);
+            };
+            let loss = backward(params, &x, &y, t.depth, out, &mut qready);
+            for g in out.iter_mut() {
+                for v in g.data_mut() {
+                    *v = quant(*v);
+                }
+            }
+            quant(loss)
+        } else {
+            backward(params, &x, &y, t.depth, out, ready)
+        };
+        if t.step_sleep_ms > 0 {
+            std::thread::sleep(std::time::Duration::from_millis(t.step_sleep_ms));
+        }
+        loss
     }
+}
+
+/// Clear the low 2 mantissa bits. With identical per-rank contributions
+/// (`--same-batch`), the tree sum of k ≤ 4 of these values is exact —
+/// two spare bits absorb the worst mantissa alignment shift — and the
+/// exact k·g divides back to exactly g, so the gradient MEAN (and with
+/// it the whole trajectory) becomes rank-count-invariant for 1–4 ranks,
+/// not just powers of two. Costs ~2⁻²¹ relative precision.
+fn quant(v: f32) -> f32 {
+    f32::from_bits(v.to_bits() & !0b11)
 }
 
 fn init_net(d: usize, h: usize, depth: usize, o: usize, rng: &mut Rng) -> Vec<Tensor> {
@@ -396,6 +459,22 @@ mod tests {
         let l2 = rep2.grad(&params, 0, &mut g2);
         assert_eq!(l1.to_bits(), l2.to_bits());
         assert_eq!(grads, g2);
+    }
+
+    #[test]
+    fn quantized_grads_clear_low_mantissa_bits_on_both_paths() {
+        let task = MlpTask::new(4, 5, 1, 2, 16, 8, 2).with_quantized_grads();
+        let params = task.init_params();
+        let mut g: Vec<Tensor> = task.shapes().iter().map(|s| Tensor::zeros(s)).collect();
+        let mut rep = task.replica(0, 1).unwrap();
+        let mut streamed: Vec<Vec<f32>> = vec![Vec::new(); g.len()];
+        let l = rep.grad_streaming(&params, 0, &mut g, &mut |i, d| streamed[i] = d.to_vec());
+        assert_eq!(l.to_bits() & 0b11, 0, "loss must be quantized too");
+        for (t, s) in g.iter().zip(&streamed) {
+            // streaming and in-place results agree, both quantized
+            assert_eq!(t.data(), &s[..]);
+            assert!(t.data().iter().all(|v| v.to_bits() & 0b11 == 0));
+        }
     }
 
     #[test]

@@ -45,7 +45,14 @@
 //!   concurrently (no gather, atomic commit, manifest last), and a
 //!   checkpoint saved at M ranks restores at any N — `partition`'s
 //!   `plan_reshard` maps the canonical per-piece state layout across
-//!   chunk-aligned cuts, byte-exactly (rust/tests/elastic_resume.rs).
+//!   chunk-aligned cuts, byte-exactly (rust/tests/elastic_resume.rs);
+//! * failures are survivable: a dead or wedged peer surfaces as a typed
+//!   `TransportError::PeerLost` on every surviving rank (read/write
+//!   deadlines on TCP, disconnected channels in-process) and the engine
+//!   unwinds all pipelines to a clean `Err` naming the last committed
+//!   checkpoint — never a hang — so a supervisor can re-rendezvous the
+//!   survivors (`Tcp::join`/`Tcp::supervise_join`) and auto-resume at
+//!   the new world size (rust/tests/fault_tolerance.rs).
 
 pub mod ckpt;
 pub mod collective;
@@ -62,4 +69,4 @@ pub use engine::{
 };
 pub use mlp::MlpTask;
 pub use partition::{plan_reshard, Partition, Piece, StateCopy};
-pub use transport::{InProc, Tcp, Transport};
+pub use transport::{InProc, Tcp, TcpOpts, Transport, TransportError};

@@ -6,12 +6,18 @@
 //! serialization: the message `Vec` itself moves to the peer, and the
 //! peer's pool recycles it. This is the fastest backend and the
 //! reference semantics for every other one.
+//!
+//! Peer death is a disconnected channel: when a rank's endpoint is
+//! dropped (its thread returned or panicked), every peer's next
+//! `send`/`recv` on that pair returns [`TransportError::PeerLost`]
+//! immediately — the same typed failure the TCP backend reports, which
+//! keeps the fault-injection suite two-backend.
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 
 use anyhow::{ensure, Result};
 
-use super::Transport;
+use super::{Transport, TransportError};
 
 /// One rank's endpoint of the fully-connected channel mesh.
 pub struct InProc {
@@ -62,15 +68,56 @@ impl Transport for InProc {
         "inproc"
     }
 
-    fn send(&mut self, to: usize, msg: Vec<f32>) -> Option<Vec<f32>> {
-        self.tx[to].send(msg).expect("collective peer hung up");
-        None
+    fn send(&mut self, to: usize, msg: Vec<f32>) -> Result<Option<Vec<f32>>, TransportError> {
+        match self.tx[to].send(msg) {
+            // The Vec moved to the peer; nothing to recycle.
+            Ok(()) => Ok(None),
+            // Receiver dropped: the peer's thread is gone.
+            Err(_) => Err(TransportError::PeerLost { rank: to, phase: "" }),
+        }
     }
 
-    fn recv(&mut self, from: usize, buf: &mut Vec<f32>) -> Option<Vec<f32>> {
-        let got = self.rx[from].recv().expect("collective peer hung up");
-        // The incoming allocation replaces `buf`; the displaced one goes
-        // back to the caller's pool, keeping the mesh allocation-neutral.
-        Some(std::mem::replace(buf, got))
+    fn recv(&mut self, from: usize, buf: &mut Vec<f32>) -> Result<Option<Vec<f32>>, TransportError> {
+        match self.rx[from].recv() {
+            // The incoming allocation replaces `buf`; the displaced one
+            // goes back to the caller's pool, keeping the mesh
+            // allocation-neutral.
+            Ok(got) => Ok(Some(std::mem::replace(buf, got))),
+            // Sender dropped and queue drained: the peer's thread is
+            // gone. Disconnected mpsc recv returns instantly, so the
+            // in-process backend needs no deadline to stay hang-free.
+            Err(_) => Err(TransportError::PeerLost { rank: from, phase: "" }),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dropped_peer_surfaces_as_peer_lost_on_send_and_recv() {
+        let mut mesh = InProc::mesh(2).unwrap();
+        let mut a = mesh.remove(0);
+        drop(mesh); // rank 1's endpoint dies
+
+        let err = a.recv(1, &mut Vec::new()).unwrap_err();
+        assert_eq!(err, TransportError::PeerLost { rank: 1, phase: "" });
+
+        let err = a.send(1, vec![1.0]).unwrap_err();
+        assert_eq!(err.lost_rank(), 1);
+    }
+
+    #[test]
+    fn queued_messages_drain_before_disconnect_reports() {
+        let mut mesh = InProc::mesh(2).unwrap();
+        let mut b = mesh.remove(1);
+        let mut a = mesh.remove(0);
+        a.send(1, vec![2.0, 3.0]).unwrap();
+        drop(a);
+        let mut buf = Vec::new();
+        b.recv(0, &mut buf).unwrap();
+        assert_eq!(buf, vec![2.0, 3.0]);
+        assert!(b.recv(0, &mut buf).is_err());
     }
 }

@@ -18,33 +18,92 @@
 //! bit-identical, fixed-order semantics for free: a backend cannot
 //! change the association order of a reduction even if it wanted to.
 //!
+//! Liveness is part of the contract too: a peer that dies (process
+//! killed, socket reset, channel endpoints dropped) or wedges past the
+//! backend's progress deadline surfaces as a typed
+//! [`TransportError::PeerLost`] from `send`/`recv` — never a hang and
+//! never a panic. The collective algebra propagates the error to every
+//! surviving rank (a vanished peer breaks the tree everywhere within
+//! one collective), which is what lets the engine unwind cleanly and
+//! the supervisor re-rendezvous at the surviving world size.
+//!
 //! Backends:
 //! * [`InProc`] — the original crossbeam-style channel mesh (one mpsc
 //!   channel per ordered rank pair) for N ranks inside one process;
+//!   peer death is a disconnected channel;
 //! * [`Tcp`] — length-prefixed frames over `std::net::TcpStream`, one
 //!   stream per ordered pair with `TCP_NODELAY`, rank-0 rendezvous that
 //!   exchanges the peer address table; scales the engine past one
-//!   process (and one machine).
+//!   process (and one machine). Peer death is a socket error or a
+//!   missed progress deadline ([`tcp::TcpOpts::progress_timeout`]).
 //!
 //! Future backends (UDS, shared-memory rings, PJRT replica groups) plug
-//! in by implementing the same three-property contract; the
-//! transport-conformance suite (rust/tests/transport_conformance.rs)
-//! is the checklist.
+//! in by implementing the same contract; the transport-conformance
+//! suite (rust/tests/transport_conformance.rs) and the fault-injection
+//! suite (rust/tests/fault_tolerance.rs) are the checklist.
 
 pub mod inproc;
 pub mod tcp;
 
 pub use inproc::InProc;
-pub use tcp::Tcp;
+pub use tcp::{Tcp, TcpOpts};
+
+/// A runtime transport failure. Setup-time errors stay `anyhow` on the
+/// constructors; once a mesh is live the ONLY failure mode is losing a
+/// peer, and it must resolve within the backend's deadline — never hang.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum TransportError {
+    /// The stream/channel to `rank` failed (peer died, reset the
+    /// connection, or missed the progress deadline). `phase` names the
+    /// collective phase in flight ("reduce", "gather", "opt") once the
+    /// algebra has attributed it; raw transport calls leave it empty.
+    PeerLost { rank: usize, phase: &'static str },
+}
+
+impl TransportError {
+    /// Attribute the loss to a collective phase (the algebra rewrites
+    /// the transport's empty tag with the phase it was executing).
+    pub fn in_phase(self, phase: &'static str) -> TransportError {
+        match self {
+            TransportError::PeerLost { rank, .. } => TransportError::PeerLost { rank, phase },
+        }
+    }
+
+    /// The rank whose stream failed. Under a cascading abort this is the
+    /// rank *this* endpoint lost contact with — an intermediate tree
+    /// node that itself aborted counts; it need not be the original
+    /// casualty.
+    pub fn lost_rank(&self) -> usize {
+        match self {
+            TransportError::PeerLost { rank, .. } => *rank,
+        }
+    }
+}
+
+impl std::fmt::Display for TransportError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TransportError::PeerLost { rank, phase } if phase.is_empty() => {
+                write!(f, "lost contact with rank {rank} (peer died or timed out)")
+            }
+            TransportError::PeerLost { rank, phase } => {
+                write!(f, "lost contact with rank {rank} during {phase} (peer died or timed out)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for TransportError {}
 
 /// A point-to-point message fabric connecting `ranks()` peers.
 ///
 /// Buffer recycling rides the two calls: both may hand back a spent
 /// `Vec` so the caller's pool keeps the steady state allocation-free.
 /// Implementations must deliver per-ordered-pair FIFO and preserve f32
-/// bit patterns; runtime I/O failures panic (a dead peer is fatal to a
-/// collective mid-flight — setup-time errors belong to the constructor,
-/// which returns `Result`).
+/// bit patterns; a dead or wedged peer surfaces as
+/// [`TransportError::PeerLost`] within the backend's deadline
+/// (setup-time errors belong to the constructor, which returns
+/// `anyhow::Result`).
 pub trait Transport: Send {
     /// This endpoint's rank, in `0..ranks()`.
     fn rank(&self) -> usize;
@@ -59,11 +118,11 @@ pub trait Transport: Send {
     /// when the transport copied the payload out (wire backends); `None`
     /// when the allocation itself travelled to the peer (in-process
     /// move). Sending to self is a contract violation and may panic.
-    fn send(&mut self, to: usize, msg: Vec<f32>) -> Option<Vec<f32>>;
+    fn send(&mut self, to: usize, msg: Vec<f32>) -> Result<Option<Vec<f32>>, TransportError>;
 
     /// Receive the next message from rank `from` into `buf` (cleared and
     /// overwritten; its capacity is the transport's to reuse). Returns a
     /// leftover buffer for the caller's pool when the incoming message
     /// displaced `buf`'s old allocation (in-process move), else `None`.
-    fn recv(&mut self, from: usize, buf: &mut Vec<f32>) -> Option<Vec<f32>>;
+    fn recv(&mut self, from: usize, buf: &mut Vec<f32>) -> Result<Option<Vec<f32>>, TransportError>;
 }

@@ -15,41 +15,82 @@
 //! replies with the assembled peer address table (after rejecting
 //! duplicate addresses and duplicate ranks). Each rank then dials one
 //! outbound stream to every peer and accepts one inbound stream from
-//! every peer, identifying inbound streams by a magic + rank hello.
-//! `TCP_NODELAY` is set on every mesh stream — collective messages are
-//! latency-bound bucket-sized writes, the exact anti-pattern for Nagle.
+//! every peer, identifying inbound streams by a magic + rank + round
+//! hello. `TCP_NODELAY` is set on every mesh stream — collective
+//! messages are latency-bound bucket-sized writes, the exact
+//! anti-pattern for Nagle.
 //!
-//! Liveness: all setup accepts/dials run against a 30 s deadline so a
-//! missing peer fails the launch instead of hanging CI; a fast peer
+//! Liveness ([`TcpOpts`]): setup accepts/dials run against
+//! `setup_timeout` so a missing peer fails the launch instead of
+//! hanging CI, and mesh streams keep a steady-state read/write deadline
+//! (`progress_timeout`) so a peer that dies (RST/EOF — detected
+//! immediately) or wedges (no bytes for a whole deadline) surfaces as a
+//! typed [`TransportError::PeerLost`] instead of a hang. A fast peer
 //! whose mesh dial arrives at rank 0 while slower ranks are still
 //! registering is stashed, not dropped.
+//!
+//! Re-rendezvous: the rank-0 listener outlives a crashed mesh and can
+//! host later *join rounds* ([`Tcp::supervise_join`]): surviving
+//! workers dial back with [`Tcp::join`], identified by OS pid, agree on
+//! the surviving world size and a fresh round number, and rebuild the
+//! mesh. Mesh hellos carry that round number so stragglers from a dead
+//! generation are dropped at accept instead of corrupting the new mesh.
 
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::time::{Duration, Instant};
 
-use anyhow::{bail, ensure, Context, Result};
+use anyhow::{anyhow, bail, ensure, Context, Result};
 
-use super::Transport;
+use super::{Transport, TransportError};
 
 /// Hello magic ("ALAD") — guards the mesh against stray connections.
 const MAGIC: u32 = 0x414c_4144;
 /// Hello purpose: a rendezvous registration (rank + listen address).
 const PURPOSE_RENDEZVOUS: u8 = 0;
-/// Hello purpose: the inbound half of an ordered-pair mesh stream.
+/// Hello purpose: the inbound half of an ordered-pair mesh stream
+/// (rank + generation).
 const PURPOSE_MESH: u8 = 1;
-/// How long setup waits for peers before failing the launch.
-const SETUP_TIMEOUT: Duration = Duration::from_secs(30);
-/// Poll interval for the nonblocking accept / dial-retry loops.
-const RETRY_SLEEP: Duration = Duration::from_millis(5);
+/// Hello purpose: a worker (re)joining a supervised job after a mesh
+/// death (OS pid + listen address).
+const PURPOSE_JOIN: u8 = 2;
 
-/// One rank's endpoint of the socket mesh.
+/// Timing knobs for mesh setup and steady-state liveness. CLI flags
+/// `--setup-timeout-s` / `--progress-timeout-s` land here.
+#[derive(Clone, Debug)]
+pub struct TcpOpts {
+    /// How long setup (rendezvous, dials, accepts, join rounds) waits
+    /// for peers before failing the launch.
+    pub setup_timeout: Duration,
+    /// Poll interval for the nonblocking accept / dial-retry loops.
+    pub retry_sleep: Duration,
+    /// Steady-state read/write deadline on mesh streams: a peer that
+    /// moves no bytes for this long counts as lost. Must exceed the
+    /// longest legitimate gap between collective messages (one gradient
+    /// computation + one checkpoint write). `None` = block forever (the
+    /// pre-supervision behavior).
+    pub progress_timeout: Option<Duration>,
+}
+
+impl Default for TcpOpts {
+    fn default() -> Self {
+        TcpOpts {
+            setup_timeout: Duration::from_secs(30),
+            retry_sleep: Duration::from_millis(5),
+            progress_timeout: Some(Duration::from_secs(30)),
+        }
+    }
+}
+
+/// One rank's endpoint of the socket mesh. A stream that fails is
+/// dropped and its slot poisoned, so every later call on that pair
+/// reports the same [`TransportError::PeerLost`] without blocking.
 pub struct Tcp {
     rank: usize,
     ranks: usize,
-    /// `out[d]`: the self → d stream (`None` for d == rank).
+    /// `out[d]`: the self → d stream (`None` for d == rank, or lost).
     out: Vec<Option<TcpStream>>,
-    /// `inc[s]`: the s → self stream (`None` for s == rank).
+    /// `inc[s]`: the s → self stream (`None` for s == rank, or lost).
     inc: Vec<Option<TcpStream>>,
     /// Frame staging (encode on send, landing zone on receive) — reused
     /// across messages so the steady state is allocation-free.
@@ -57,6 +98,12 @@ pub struct Tcp {
 }
 
 impl Tcp {
+    /// Establish the full mesh for `rank` of `ranks` with default
+    /// timeouts. See [`Tcp::connect_opts`].
+    pub fn connect(rank: usize, ranks: usize, peers: &[String], bind: Option<&str>) -> Result<Tcp> {
+        Tcp::connect_opts(rank, ranks, peers, bind, &TcpOpts::default())
+    }
+
     /// Establish the full mesh for `rank` of `ranks`.
     ///
     /// `peers` is either the full address table (`peers[r]` = rank r's
@@ -65,7 +112,13 @@ impl Tcp {
     /// `bind` (default `127.0.0.1:0`, an ephemeral loopback port — pass
     /// a routable `host:0` for multi-host runs) and learn everyone's
     /// address from the table rank 0 assembles at rendezvous.
-    pub fn connect(rank: usize, ranks: usize, peers: &[String], bind: Option<&str>) -> Result<Tcp> {
+    pub fn connect_opts(
+        rank: usize,
+        ranks: usize,
+        peers: &[String],
+        bind: Option<&str>,
+        opts: &TcpOpts,
+    ) -> Result<Tcp> {
         ensure!(ranks >= 1, "tcp transport needs at least one rank (got 0)");
         ensure!(rank < ranks, "tcp rank {rank} out of range (mesh has {ranks} ranks)");
         ensure!(!peers.is_empty(), "tcp transport needs at least the rank-0 rendezvous address");
@@ -82,86 +135,218 @@ impl Tcp {
         };
         let listener = TcpListener::bind(listen)
             .with_context(|| format!("rank {rank}: binding listener on {listen}"))?;
-        Tcp::from_listener(rank, ranks, &peers[0], listener)
+        Tcp::from_listener_opts(rank, ranks, &peers[0], listener, opts)
     }
 
-    /// `connect` with a pre-bound listener — the `--spawn` parent uses
-    /// this to become rank 0 on an OS-assigned port with no rebind race.
+    /// [`Tcp::from_listener_opts`] with default timeouts.
     pub fn from_listener(
         rank: usize,
         ranks: usize,
         rendezvous: &str,
         listener: TcpListener,
     ) -> Result<Tcp> {
+        Tcp::from_listener_opts(rank, ranks, rendezvous, listener, &TcpOpts::default())
+    }
+
+    /// `connect` with a pre-bound listener — the `--spawn` parent uses
+    /// this to become rank 0 on an OS-assigned port with no rebind
+    /// race, and keeps the listener afterwards to host join rounds.
+    pub fn from_listener_opts(
+        rank: usize,
+        ranks: usize,
+        rendezvous: &str,
+        listener: TcpListener,
+        opts: &TcpOpts,
+    ) -> Result<Tcp> {
         ensure!(ranks >= 1, "tcp transport needs at least one rank (got 0)");
         ensure!(rank < ranks, "tcp rank {rank} out of range (mesh has {ranks} ranks)");
         let my_addr = listener.local_addr().context("reading listener address")?.to_string();
         if ranks == 1 {
-            return Ok(Tcp { rank, ranks, out: vec![None], inc: vec![None], wire: Vec::new() });
+            return Ok(Tcp::solo(rank));
         }
         listener.set_nonblocking(true).context("listener set_nonblocking")?;
 
         // ---- Rendezvous: rank 0 collects every rank's listen address
         // and answers with the authoritative table; everyone else
         // registers and reads it back.
-        let (table, mut stashed) = if rank == 0 {
-            rendezvous_serve(&listener, ranks, &my_addr)?
+        let (table, stashed) = if rank == 0 {
+            rendezvous_serve(&listener, ranks, &my_addr, opts)?
         } else {
-            (rendezvous_register(rendezvous, rank, ranks, &my_addr)?, Vec::new())
+            (rendezvous_register(rendezvous, rank, ranks, &my_addr, opts)?, Vec::new())
         };
+        build_mesh(rank, ranks, 0, &table, &listener, stashed, opts)
+    }
 
-        // ---- Dial the outbound half of every ordered pair.
-        let mut out: Vec<Option<TcpStream>> = (0..ranks).map(|_| None).collect();
-        for (d, addr) in table.iter().enumerate() {
-            if d == rank {
-                continue;
+    /// The trivial single-rank mesh (no sockets at all).
+    fn solo(rank: usize) -> Tcp {
+        Tcp { rank, ranks: 1, out: vec![None], inc: vec![None], wire: Vec::new() }
+    }
+
+    /// Re-join a supervised job after this rank's mesh died: bind a
+    /// fresh listener, register (by OS `pid`) with the supervisor at
+    /// `rendezvous`, and rebuild the mesh at whatever rank and world
+    /// size the supervisor assigns. Retries the registration until
+    /// `setup_timeout` — the supervisor may still be unwinding its own
+    /// collective, or mid join round — and returns the join round
+    /// number alongside the new endpoint.
+    pub fn join(
+        rendezvous: &str,
+        bind: Option<&str>,
+        pid: u32,
+        opts: &TcpOpts,
+    ) -> Result<(u32, Tcp)> {
+        let listen = bind.unwrap_or("127.0.0.1:0");
+        let listener = TcpListener::bind(listen)
+            .with_context(|| format!("join: binding listener on {listen}"))?;
+        let my_addr = listener.local_addr().context("reading listener address")?.to_string();
+        listener.set_nonblocking(true).context("listener set_nonblocking")?;
+        let deadline = Instant::now() + opts.setup_timeout;
+        let (gen, rank, ranks, table) = loop {
+            match join_register(rendezvous, pid, &my_addr, opts) {
+                Ok(reply) => break reply,
+                // A dropped reply stream means the supervisor abandoned
+                // that round (another worker was missing) — dial again.
+                Err(e) => {
+                    if Instant::now() >= deadline {
+                        return Err(e).with_context(|| {
+                            format!(
+                                "joining supervisor at {rendezvous} (gave up after {:?})",
+                                opts.setup_timeout
+                            )
+                        });
+                    }
+                    std::thread::sleep(opts.retry_sleep);
+                }
             }
-            let mut s = connect_retry(addr)
-                .with_context(|| format!("rank {rank}: dialing rank {d} at {addr}"))?;
-            s.set_nodelay(true).context("set TCP_NODELAY")?;
-            write_u32(&mut s, MAGIC)?;
-            s.write_all(&[PURPOSE_MESH])?;
-            write_u32(&mut s, rank as u32)?;
-            out[d] = Some(s);
-        }
+        };
+        ensure!(
+            rank >= 1 && rank < ranks,
+            "supervisor assigned bad rank {rank} (world size {ranks})"
+        );
+        ensure!(
+            table[rank] == my_addr,
+            "join table lists {} for rank {rank}, but this process listens on {my_addr}",
+            table[rank]
+        );
+        let tcp = build_mesh(rank, ranks, gen, &table, &listener, Vec::new(), opts)?;
+        Ok((gen, tcp))
+    }
 
-        // ---- Accept the inbound half (mesh dials stashed during a
-        // rank-0 rendezvous count too).
-        let mut inc: Vec<Option<TcpStream>> = (0..ranks).map(|_| None).collect();
-        let mut pending = ranks - 1;
-        for (peer, s) in stashed.drain(..) {
-            ensure!(peer != rank && inc[peer].is_none(), "duplicate mesh stream from rank {peer}");
-            s.set_nodelay(true).context("set TCP_NODELAY")?;
-            // Mesh recvs must block for as long as a peer computes —
-            // drop the setup-phase read timeout.
-            s.set_read_timeout(None).context("clearing setup read timeout")?;
-            inc[peer] = Some(s);
-            pending -= 1;
+    /// The supervisor's side of a join round: collect a `PURPOSE_JOIN`
+    /// registration from every pid in `expect_pids` (latest dial wins —
+    /// a worker may retry), assign ranks 1..=N in `expect_pids` order,
+    /// distribute the new table tagged with round `gen`, and rebuild
+    /// this endpoint as rank 0 of the surviving world.
+    ///
+    /// `joined` is an out-param: on success it lists every pid; on a
+    /// timed-out round it lists the pids that DID register, so the
+    /// caller can kill the wedged remainder before retrying. With no
+    /// surviving workers the supervisor trains alone (world size 1).
+    pub fn supervise_join(
+        listener: &TcpListener,
+        gen: u32,
+        expect_pids: &[u32],
+        opts: &TcpOpts,
+        joined: &mut Vec<u32>,
+    ) -> Result<Tcp> {
+        joined.clear();
+        if expect_pids.is_empty() {
+            return Ok(Tcp::solo(0));
         }
-        while pending > 0 {
-            let mut s = accept_deadline(&listener, "mesh streams")?;
-            let (purpose, peer) = read_hello(&mut s)?;
+        for (i, p) in expect_pids.iter().enumerate() {
             ensure!(
-                purpose == PURPOSE_MESH,
-                "unexpected rendezvous registration after the table was distributed"
+                !expect_pids[i + 1..].contains(p),
+                "duplicate worker pid {p} in join round"
             );
-            ensure!(
-                peer < ranks && peer != rank && inc[peer].is_none(),
-                "bad or duplicate mesh stream from rank {peer}"
-            );
-            s.set_nodelay(true).context("set TCP_NODELAY")?;
-            s.set_read_timeout(None).context("clearing setup read timeout")?;
-            inc[peer] = Some(s);
-            pending -= 1;
         }
-        Ok(Tcp { rank, ranks, out, inc, wire: Vec::new() })
+        listener.set_nonblocking(true).context("listener set_nonblocking")?;
+        let my_addr = listener.local_addr().context("reading listener address")?.to_string();
+        let mut joins: Vec<Option<(String, TcpStream)>> =
+            expect_pids.iter().map(|_| None).collect();
+        let mut stashed: Vec<(usize, TcpStream)> = Vec::new();
+        let deadline = Instant::now() + opts.setup_timeout;
+        let mut have = 0usize;
+        while have < expect_pids.len() {
+            let mut s = match accept_until(listener, deadline, "worker joins", opts) {
+                Ok(s) => s,
+                Err(e) => {
+                    let missing: Vec<u32> = expect_pids
+                        .iter()
+                        .zip(&joins)
+                        .filter(|(_, j)| j.is_none())
+                        .map(|(p, _)| *p)
+                        .collect();
+                    *joined = expect_pids
+                        .iter()
+                        .zip(&joins)
+                        .filter(|(_, j)| j.is_some())
+                        .map(|(p, _)| *p)
+                        .collect();
+                    return Err(e).with_context(|| {
+                        format!("join round {gen}: workers (pids {missing:?}) never re-joined")
+                    });
+                }
+            };
+            // Backlog strays (half-written hellos from killed workers,
+            // dead-generation traffic) are dropped, never fatal: the
+            // supervisor must outlive anything a crashed mesh left behind.
+            let Ok((purpose, id)) = read_hello(&mut s) else { continue };
+            match purpose {
+                PURPOSE_JOIN => {
+                    let Ok(addr) = read_str(&mut s) else { continue };
+                    let pid = id as u32;
+                    // Latest-wins: a retried join leaves a dead stream
+                    // in the backlog; the newest dial is the live one.
+                    if let Some(i) = expect_pids.iter().position(|&p| p == pid) {
+                        if joins[i].is_none() {
+                            have += 1;
+                        }
+                        joins[i] = Some((addr, s));
+                    }
+                }
+                PURPOSE_MESH => {
+                    // A current-round mesh dial racing ahead of the
+                    // accept phase is stashed like in the rendezvous;
+                    // stale rounds are dropped.
+                    let Ok(g) = read_u32(&mut s) else { continue };
+                    if g == gen && id >= 1 && id <= expect_pids.len() {
+                        stashed.push((id, s));
+                    }
+                }
+                _ => {}
+            }
+        }
+        *joined = expect_pids.to_vec();
+        let ranks = expect_pids.len() + 1;
+        let mut table = vec![my_addr];
+        for j in &joins {
+            table.push(j.as_ref().expect("join collected").0.clone());
+        }
+        check_duplicates(&table).context("join round address table")?;
+        for (i, j) in joins.iter_mut().enumerate() {
+            let (_, s) = j.as_mut().expect("join collected");
+            write_u32(s, gen)?;
+            write_u32(s, (i + 1) as u32)?;
+            write_u32(s, ranks as u32)?;
+            for a in &table {
+                write_str(s, a)?;
+            }
+        }
+        build_mesh(0, ranks, gen, &table, listener, stashed, opts)
+    }
+
+    /// [`Tcp::loopback_mesh_opts`] with default timeouts.
+    pub fn loopback_mesh(ranks: usize) -> Result<Vec<Tcp>> {
+        Tcp::loopback_mesh_opts(ranks, &TcpOpts::default())
     }
 
     /// Build a full N-rank TCP mesh over loopback sockets inside one
     /// process (tests and benches): every rank gets an OS-assigned port
     /// and runs the handshake on its own thread, exercising the exact
-    /// rendezvous + dial/accept path a multi-process launch uses.
-    pub fn loopback_mesh(ranks: usize) -> Result<Vec<Tcp>> {
+    /// rendezvous + dial/accept path a multi-process launch uses. A
+    /// handshake thread that panics surfaces as an error naming the
+    /// rank, not a poisoned join.
+    pub fn loopback_mesh_opts(ranks: usize, opts: &TcpOpts) -> Result<Vec<Tcp>> {
         ensure!(ranks >= 1, "tcp transport needs at least one rank (got 0)");
         let listeners: Vec<TcpListener> = (0..ranks)
             .map(|_| TcpListener::bind("127.0.0.1:0").context("binding loopback listener"))
@@ -172,9 +357,21 @@ impl Tcp {
             let handles: Vec<_> = listeners
                 .into_iter()
                 .enumerate()
-                .map(|(rank, l)| s.spawn(move || Tcp::from_listener(rank, ranks, rendezvous, l)))
+                .map(|(rank, l)| {
+                    s.spawn(move || Tcp::from_listener_opts(rank, ranks, rendezvous, l, opts))
+                })
                 .collect();
-            handles.into_iter().map(|h| h.join().expect("handshake thread panicked")).collect()
+            handles
+                .into_iter()
+                .enumerate()
+                .map(|(rank, h)| match h.join() {
+                    Ok(r) => r,
+                    Err(p) => Err(anyhow!(
+                        "rank {rank}: handshake thread panicked: {}",
+                        panic_text(p.as_ref())
+                    )),
+                })
+                .collect()
         });
         let mut mesh = Vec::with_capacity(ranks);
         for t in results {
@@ -197,33 +394,129 @@ impl Transport for Tcp {
         "tcp"
     }
 
-    fn send(&mut self, to: usize, msg: Vec<f32>) -> Option<Vec<f32>> {
+    fn send(&mut self, to: usize, msg: Vec<f32>) -> Result<Option<Vec<f32>>, TransportError> {
+        assert!(to != self.rank, "tcp send to self (collective bug)");
         self.wire.clear();
         self.wire.extend_from_slice(&(msg.len() as u32).to_le_bytes());
         for x in &msg {
             self.wire.extend_from_slice(&x.to_le_bytes());
         }
-        let s = self.out[to].as_mut().expect("no outbound stream (send to self?)");
         // One write_all per frame: the header travels with the payload,
-        // and NODELAY flushes the segment immediately.
-        s.write_all(&self.wire).expect("tcp send: collective peer hung up");
-        Some(msg)
+        // and NODELAY flushes the segment immediately. Any failure —
+        // reset, EOF, or the progress write deadline (wedged receiver,
+        // full socket buffers) — poisons the slot.
+        let ok = match self.out[to].as_mut() {
+            Some(s) => s.write_all(&self.wire).is_ok(),
+            None => false,
+        };
+        if !ok {
+            self.out[to] = None;
+            return Err(TransportError::PeerLost { rank: to, phase: "" });
+        }
+        Ok(Some(msg))
     }
 
-    fn recv(&mut self, from: usize, buf: &mut Vec<f32>) -> Option<Vec<f32>> {
-        let s = self.inc[from].as_mut().expect("no inbound stream (recv from self?)");
+    fn recv(&mut self, from: usize, buf: &mut Vec<f32>) -> Result<Option<Vec<f32>>, TransportError> {
+        assert!(from != self.rank, "tcp recv from self (collective bug)");
+        let lost = TransportError::PeerLost { rank: from, phase: "" };
+        if self.inc[from].is_none() {
+            return Err(lost);
+        }
         let mut hdr = [0u8; 4];
-        s.read_exact(&mut hdr).expect("tcp recv: collective peer hung up");
+        if self.inc[from].as_mut().expect("checked").read_exact(&mut hdr).is_err() {
+            // EOF/RST (peer died) or the progress read deadline passed
+            // (peer wedged): either way the pair is unusable — a timed
+            // out read may have consumed a partial frame.
+            self.inc[from] = None;
+            return Err(lost);
+        }
         let n = u32::from_le_bytes(hdr) as usize;
         self.wire.resize(4 * n, 0);
-        s.read_exact(&mut self.wire).expect("tcp recv: collective peer hung up");
+        if self.inc[from].as_mut().expect("checked").read_exact(&mut self.wire).is_err() {
+            self.inc[from] = None;
+            return Err(lost);
+        }
         buf.clear();
         buf.reserve(n);
         for c in self.wire.chunks_exact(4) {
             buf.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
         }
-        None
+        Ok(None)
     }
+}
+
+/// Dial every peer, accept every peer, tag hellos with `gen` so
+/// stragglers from a dead generation are dropped at accept. Shared by
+/// the initial rendezvous (gen 0), worker re-joins, and supervisor
+/// join rounds.
+fn build_mesh(
+    rank: usize,
+    ranks: usize,
+    gen: u32,
+    table: &[String],
+    listener: &TcpListener,
+    mut stashed: Vec<(usize, TcpStream)>,
+    opts: &TcpOpts,
+) -> Result<Tcp> {
+    ensure!(table.len() == ranks, "address table has {} entries for {ranks} ranks", table.len());
+    // ---- Dial the outbound half of every ordered pair.
+    let mut out: Vec<Option<TcpStream>> = (0..ranks).map(|_| None).collect();
+    for (d, addr) in table.iter().enumerate() {
+        if d == rank {
+            continue;
+        }
+        let mut s = connect_retry(addr, opts)
+            .with_context(|| format!("rank {rank}: dialing rank {d} at {addr}"))?;
+        s.set_nodelay(true).context("set TCP_NODELAY")?;
+        write_u32(&mut s, MAGIC)?;
+        s.write_all(&[PURPOSE_MESH]).context("handshake write")?;
+        write_u32(&mut s, rank as u32)?;
+        write_u32(&mut s, gen)?;
+        // Steady-state liveness: a send must make progress within the
+        // deadline even when the receiver stopped draining.
+        s.set_write_timeout(opts.progress_timeout).context("progress write timeout")?;
+        out[d] = Some(s);
+    }
+
+    // ---- Accept the inbound half (mesh dials stashed during the
+    // rendezvous / join round count too).
+    let mut inc: Vec<Option<TcpStream>> = (0..ranks).map(|_| None).collect();
+    let mut pending = ranks - 1;
+    for (peer, s) in stashed.drain(..) {
+        ensure!(
+            peer < ranks && peer != rank && inc[peer].is_none(),
+            "bad or duplicate mesh stream from rank {peer}"
+        );
+        s.set_nodelay(true).context("set TCP_NODELAY")?;
+        // Mesh recvs block for as long as a peer computes, but never
+        // past the progress deadline.
+        s.set_read_timeout(opts.progress_timeout).context("progress read timeout")?;
+        inc[peer] = Some(s);
+        pending -= 1;
+    }
+    let deadline = Instant::now() + opts.setup_timeout;
+    while pending > 0 {
+        let mut s = accept_until(listener, deadline, "mesh streams", opts)?;
+        // Drop strays (half-open hellos, dead-generation dials) and
+        // keep accepting: the deadline bounds the whole phase.
+        let Ok((purpose, peer)) = read_hello(&mut s) else { continue };
+        if purpose != PURPOSE_MESH {
+            continue;
+        }
+        let Ok(peer_gen) = read_u32(&mut s) else { continue };
+        if peer_gen != gen {
+            continue;
+        }
+        ensure!(
+            peer < ranks && peer != rank && inc[peer].is_none(),
+            "bad or duplicate mesh stream from rank {peer}"
+        );
+        s.set_nodelay(true).context("set TCP_NODELAY")?;
+        s.set_read_timeout(opts.progress_timeout).context("progress read timeout")?;
+        inc[peer] = Some(s);
+        pending -= 1;
+    }
+    Ok(Tcp { rank, ranks, out, inc, wire: Vec::new() })
 }
 
 /// Rank 0's side of the rendezvous: collect `ranks - 1` registrations,
@@ -234,13 +527,14 @@ fn rendezvous_serve(
     listener: &TcpListener,
     ranks: usize,
     my_addr: &str,
+    opts: &TcpOpts,
 ) -> Result<(Vec<String>, Vec<(usize, TcpStream)>)> {
     let mut table: Vec<Option<String>> = vec![None; ranks];
     table[0] = Some(my_addr.to_string());
     let mut registrations: Vec<(usize, TcpStream)> = Vec::new();
     let mut stashed: Vec<(usize, TcpStream)> = Vec::new();
     while registrations.len() < ranks - 1 {
-        let mut s = accept_deadline(listener, "rendezvous registrations")?;
+        let mut s = accept_deadline(listener, "rendezvous registrations", opts)?;
         let (purpose, peer) = read_hello(&mut s)?;
         ensure!(peer < ranks, "hello from rank {peer}, but the mesh has {ranks} ranks");
         match purpose {
@@ -250,7 +544,13 @@ fn rendezvous_serve(
                 table[peer] = Some(addr);
                 registrations.push((peer, s));
             }
-            PURPOSE_MESH => stashed.push((peer, s)),
+            PURPOSE_MESH => {
+                // The launch rendezvous is generation 0 by definition.
+                let gen = read_u32(&mut s)?;
+                if gen == 0 {
+                    stashed.push((peer, s));
+                }
+            }
             p => bail!("unknown hello purpose {p}"),
         }
     }
@@ -272,14 +572,15 @@ fn rendezvous_register(
     rank: usize,
     ranks: usize,
     my_addr: &str,
+    opts: &TcpOpts,
 ) -> Result<Vec<String>> {
-    let mut s = connect_retry(rendezvous)
+    let mut s = connect_retry(rendezvous, opts)
         .with_context(|| format!("rank {rank}: reaching rank 0 at {rendezvous}"))?;
     // Bounded wait for the table: a rank 0 that accepts but never
     // answers (e.g. rejected the launch) fails us within the deadline.
-    s.set_read_timeout(Some(SETUP_TIMEOUT)).context("setup read timeout")?;
+    s.set_read_timeout(Some(opts.setup_timeout)).context("setup read timeout")?;
     write_u32(&mut s, MAGIC)?;
-    s.write_all(&[PURPOSE_RENDEZVOUS])?;
+    s.write_all(&[PURPOSE_RENDEZVOUS]).context("handshake write")?;
     write_u32(&mut s, rank as u32)?;
     write_str(&mut s, my_addr)?;
     let n = read_u32(&mut s)
@@ -297,6 +598,31 @@ fn rendezvous_register(
     Ok(table)
 }
 
+/// One join-registration attempt: dial, send pid + listen address,
+/// read back (round, rank, world size, table).
+fn join_register(
+    rendezvous: &str,
+    pid: u32,
+    my_addr: &str,
+    opts: &TcpOpts,
+) -> Result<(u32, usize, usize, Vec<String>)> {
+    let mut s = TcpStream::connect(rendezvous).context("dialing supervisor")?;
+    s.set_read_timeout(Some(opts.setup_timeout)).context("setup read timeout")?;
+    write_u32(&mut s, MAGIC)?;
+    s.write_all(&[PURPOSE_JOIN]).context("handshake write")?;
+    write_u32(&mut s, pid)?;
+    write_str(&mut s, my_addr)?;
+    let gen = read_u32(&mut s).context("join reply (supervisor may have abandoned the round)")?;
+    let rank = read_u32(&mut s)? as usize;
+    let ranks = read_u32(&mut s)? as usize;
+    ensure!((2..=4096).contains(&ranks), "join reply advertises absurd world size {ranks}");
+    let mut table = Vec::with_capacity(ranks);
+    for _ in 0..ranks {
+        table.push(read_str(&mut s)?);
+    }
+    Ok((gen, rank, ranks, table))
+}
+
 fn check_duplicates(addrs: &[String]) -> Result<()> {
     for (i, a) in addrs.iter().enumerate() {
         for (j, b) in addrs.iter().enumerate().skip(i + 1) {
@@ -306,48 +632,66 @@ fn check_duplicates(addrs: &[String]) -> Result<()> {
     Ok(())
 }
 
-/// Dial with retries until `SETUP_TIMEOUT` (peers bind asynchronously).
-fn connect_retry(addr: &str) -> Result<TcpStream> {
-    let deadline = Instant::now() + SETUP_TIMEOUT;
+fn panic_text(p: &(dyn std::any::Any + Send)) -> &str {
+    p.downcast_ref::<&str>()
+        .copied()
+        .or_else(|| p.downcast_ref::<String>().map(|s| s.as_str()))
+        .unwrap_or("non-string panic payload")
+}
+
+/// Dial with retries until `setup_timeout` (peers bind asynchronously).
+fn connect_retry(addr: &str, opts: &TcpOpts) -> Result<TcpStream> {
+    let deadline = Instant::now() + opts.setup_timeout;
     loop {
         match TcpStream::connect(addr) {
             Ok(s) => return Ok(s),
             Err(e) => {
                 if Instant::now() >= deadline {
-                    bail!("connecting to {addr}: {e} (gave up after {SETUP_TIMEOUT:?})");
+                    bail!("connecting to {addr}: {e} (gave up after {:?})", opts.setup_timeout);
                 }
-                std::thread::sleep(RETRY_SLEEP);
+                std::thread::sleep(opts.retry_sleep);
             }
         }
     }
 }
 
-/// Accept on a nonblocking listener with a deadline, returning the
-/// stream switched back to blocking mode — with a setup-phase read
-/// timeout, so a connected-but-silent peer (stray probe, stalled
-/// launch) fails the handshake within the deadline instead of hanging
-/// it on `read_exact`. Mesh streams clear the timeout once identified.
-fn accept_deadline(listener: &TcpListener, what: &str) -> Result<TcpStream> {
-    let deadline = Instant::now() + SETUP_TIMEOUT;
+/// Accept on a nonblocking listener until `setup_timeout`.
+fn accept_deadline(listener: &TcpListener, what: &str, opts: &TcpOpts) -> Result<TcpStream> {
+    accept_until(listener, Instant::now() + opts.setup_timeout, what, opts)
+}
+
+/// Accept on a nonblocking listener against an absolute deadline,
+/// returning the stream switched back to blocking mode — with a
+/// setup-phase read timeout, so a connected-but-silent peer (stray
+/// probe, stalled launch) fails its handshake within the deadline
+/// instead of hanging it on `read_exact`. Mesh streams switch to the
+/// progress deadline once identified.
+fn accept_until(
+    listener: &TcpListener,
+    deadline: Instant,
+    what: &str,
+    opts: &TcpOpts,
+) -> Result<TcpStream> {
     loop {
         match listener.accept() {
             Ok((s, _)) => {
                 s.set_nonblocking(false).context("accepted stream set_blocking")?;
-                s.set_read_timeout(Some(SETUP_TIMEOUT)).context("setup read timeout")?;
+                s.set_read_timeout(Some(opts.setup_timeout)).context("setup read timeout")?;
                 return Ok(s);
             }
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                 if Instant::now() >= deadline {
-                    bail!("timed out after {SETUP_TIMEOUT:?} waiting for {what}");
+                    bail!("timed out waiting for {what}");
                 }
-                std::thread::sleep(RETRY_SLEEP);
+                std::thread::sleep(opts.retry_sleep);
             }
             Err(e) => return Err(e).with_context(|| format!("accepting {what}")),
         }
     }
 }
 
-/// Read and validate a hello: magic, purpose byte, sender rank.
+/// Read and validate a hello: magic, purpose byte, sender id (rank for
+/// rendezvous/mesh hellos, OS pid for join hellos).
 fn read_hello(s: &mut TcpStream) -> Result<(u8, usize)> {
     let magic = read_u32(s)?;
     ensure!(magic == MAGIC, "hello with bad magic {magic:#010x} (stray connection?)");
@@ -420,15 +764,90 @@ mod tests {
             let payload = payload.clone();
             s.spawn(move || {
                 let mut a = a;
-                a.send(1, payload);
+                a.send(1, payload).expect("send");
             });
             let h = s.spawn(move || {
                 let mut b = b;
                 let mut buf = Vec::new();
-                b.recv(0, &mut buf);
+                b.recv(0, &mut buf).expect("recv");
                 buf.iter().map(|x| x.to_bits()).collect::<Vec<u32>>()
             });
             assert_eq!(h.join().expect("recv thread"), want);
         });
+    }
+
+    #[test]
+    fn dead_peer_surfaces_as_peer_lost_not_a_hang() {
+        let mesh = Tcp::loopback_mesh(2).expect("2-rank mesh");
+        let mut it = mesh.into_iter();
+        let (mut a, b) = (it.next().unwrap(), it.next().unwrap());
+        drop(b); // rank 1 "dies": its sockets close
+        let mut buf = Vec::new();
+        let err = a.recv(1, &mut buf).unwrap_err();
+        assert_eq!(err, TransportError::PeerLost { rank: 1, phase: "" });
+        // The slot is poisoned: later calls fail instantly, no blocking.
+        assert!(a.recv(1, &mut buf).is_err());
+    }
+
+    #[test]
+    fn wedged_peer_trips_the_progress_deadline() {
+        let opts = TcpOpts { progress_timeout: Some(Duration::from_millis(200)), ..TcpOpts::default() };
+        let mesh = Tcp::loopback_mesh_opts(2, &opts).expect("2-rank mesh");
+        let mut it = mesh.into_iter();
+        let (mut a, _b_alive_but_silent) = (it.next().unwrap(), it.next().unwrap());
+        let t0 = Instant::now();
+        let mut buf = Vec::new();
+        let err = a.recv(1, &mut buf).unwrap_err();
+        assert_eq!(err.lost_rank(), 1);
+        assert!(t0.elapsed() < Duration::from_secs(10), "deadline did not bound the recv");
+    }
+
+    #[test]
+    fn join_round_rebuilds_a_working_mesh() {
+        let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+        let rdv = listener.local_addr().expect("addr").to_string();
+        let opts = TcpOpts::default();
+        std::thread::scope(|s| {
+            let sup = s.spawn(|| {
+                let mut joined = Vec::new();
+                let t = Tcp::supervise_join(&listener, 3, &[42, 43], &opts, &mut joined)
+                    .expect("supervise");
+                assert_eq!(joined, vec![42, 43]);
+                t
+            });
+            let w1 = s.spawn(|| Tcp::join(&rdv, None, 42, &opts).expect("join 42"));
+            let w2 = s.spawn(|| Tcp::join(&rdv, None, 43, &opts).expect("join 43"));
+            let mut sup = sup.join().expect("sup thread");
+            let (g1, mut w1) = w1.join().expect("w1 thread");
+            let (g2, mut w2) = w2.join().expect("w2 thread");
+            assert_eq!((g1, g2), (3, 3));
+            assert_eq!((sup.rank(), sup.ranks()), (0, 3));
+            assert_eq!((w1.rank(), w2.rank()), (1, 2));
+            // The rebuilt mesh carries frames end to end.
+            s.spawn(move || {
+                sup.send(1, vec![7.0]).expect("send 0->1");
+                let mut buf = Vec::new();
+                sup.recv(2, &mut buf).expect("recv 2->0");
+                assert_eq!(buf, vec![9.0]);
+            });
+            s.spawn(move || {
+                let mut buf = Vec::new();
+                w1.recv(0, &mut buf).expect("recv 0->1");
+                assert_eq!(buf, vec![7.0]);
+            });
+            s.spawn(move || {
+                w2.send(0, vec![9.0]).expect("send 2->0");
+            });
+        });
+    }
+
+    #[test]
+    fn supervise_join_with_no_survivors_is_a_solo_mesh() {
+        let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+        let mut joined = vec![99];
+        let t = Tcp::supervise_join(&listener, 1, &[], &TcpOpts::default(), &mut joined)
+            .expect("solo");
+        assert!(joined.is_empty());
+        assert_eq!((t.rank(), t.ranks()), (0, 1));
     }
 }

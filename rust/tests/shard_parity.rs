@@ -97,7 +97,7 @@ fn tree_mean_of_copies(grads: &[Tensor], ranks: usize, bucket: usize) -> Vec<Ten
             .map(|mut c| {
                 let mut buf = flat.clone();
                 s.spawn(move || {
-                    c.all_reduce_mean(&mut buf, bucket);
+                    c.all_reduce_mean(&mut buf, bucket).expect("all_reduce_mean");
                     buf
                 })
             })

@@ -47,7 +47,7 @@ fn ordered_delivery<T: Transport>(mesh: Vec<T>) {
                             continue;
                         }
                         let msg: Vec<f32> = (0..msg_len(k)).map(|e| val(me, d, k, e)).collect();
-                        let _ = t.send(d, msg);
+                        t.send(d, msg).expect("send");
                     }
                 }
                 let mut buf = Vec::new();
@@ -56,7 +56,7 @@ fn ordered_delivery<T: Transport>(mesh: Vec<T>) {
                         continue;
                     }
                     for k in 0..K {
-                        let _ = t.recv(src, &mut buf);
+                        t.recv(src, &mut buf).expect("recv");
                         let want: Vec<f32> =
                             (0..msg_len(k)).map(|e| val(src, me, k, e)).collect();
                         assert_eq!(buf, want, "src {src} → {me}, message {k}");
@@ -92,7 +92,7 @@ fn run_all_reduce<T: Transport>(mesh: Vec<T>, len: usize, bucket: usize) -> Vec<
                 s.spawn(move || {
                     let mut c = Comm::new(t);
                     let mut buf = sensitive_fill(c.rank(), len);
-                    c.all_reduce_mean(&mut buf, bucket);
+                    c.all_reduce_mean(&mut buf, bucket).expect("all_reduce_mean");
                     buf
                 })
             })
@@ -115,8 +115,8 @@ fn run_scatter_gather<T: Transport>(
                 s.spawn(move || {
                     let mut c = Comm::new(t);
                     let mut buf = sensitive_fill(c.rank(), len);
-                    c.reduce_scatter_mean(&mut buf, segs, bucket);
-                    c.all_gather(&mut buf, segs, bucket);
+                    c.reduce_scatter_mean(&mut buf, segs, bucket).expect("reduce_scatter_mean");
+                    c.all_gather(&mut buf, segs, bucket).expect("all_gather");
                     buf
                 })
             })
@@ -174,11 +174,11 @@ fn recycling_does_not_alias<T: Transport>(mesh: Vec<T>) {
             let mut buf = Vec::new();
             for round in 0..ROUNDS {
                 let msg: Vec<f32> = (0..8).map(|e| (round * 8 + e) as f32).collect();
-                if let Some(mut spent) = t.send(1, msg) {
+                if let Some(mut spent) = t.send(1, msg).expect("send") {
                     // the payload must already be out of this buffer
                     spent.iter_mut().for_each(|x| *x = f32::NAN);
                 }
-                if let Some(mut spare) = t.recv(1, &mut buf) {
+                if let Some(mut spare) = t.recv(1, &mut buf).expect("recv") {
                     spare.iter_mut().for_each(|x| *x = f32::NAN);
                 }
                 let want: Vec<f32> = (0..8).map(|e| (round * 8 + e) as f32 + 0.5).collect();
@@ -189,13 +189,13 @@ fn recycling_does_not_alias<T: Transport>(mesh: Vec<T>) {
             let mut t = b;
             let mut buf = Vec::new();
             for _ in 0..ROUNDS {
-                if let Some(mut spare) = t.recv(0, &mut buf) {
+                if let Some(mut spare) = t.recv(0, &mut buf).expect("recv") {
                     spare.iter_mut().for_each(|x| *x = f32::NAN);
                 }
                 // reuse the received payload as the reply body — the
                 // transport must be done with it the moment recv returns
                 let reply: Vec<f32> = buf.iter().map(|x| x + 0.5).collect();
-                if let Some(mut spent) = t.send(0, reply) {
+                if let Some(mut spent) = t.send(0, reply).expect("send") {
                     spent.iter_mut().for_each(|x| *x = f32::NAN);
                 }
             }

@@ -15,8 +15,14 @@ cargo test -q
 
 echo "== tcp smoke: 2-process loopback parity vs inproc =="
 tmp="$(mktemp -d)"
-serve_pid=""
-trap 'if [ -n "$serve_pid" ]; then kill "$serve_pid" 2>/dev/null || true; fi; rm -rf "$tmp"' EXIT
+# every background pid lands here; the trap murders whatever is left so
+# an assertion failure never strands servers or training processes
+PIDS=()
+cleanup() {
+    for pid in ${PIDS[@]+"${PIDS[@]}"}; do kill -9 "$pid" 2>/dev/null || true; done
+    rm -rf "$tmp"
+}
+trap cleanup EXIT
 common=(--opt alada --steps 6 --batch 8 --dim 8 --hidden 12 --depth 2 --bucket-kb 1 --seed 3)
 cargo run -q -- shard-train --ranks 2 "${common[@]}" --dump-params "$tmp/inproc.bin"
 cargo run -q -- shard-train --transport tcp --spawn 2 "${common[@]}" --dump-params "$tmp/tcp.bin"
@@ -54,6 +60,7 @@ want="$(cargo run -q -- generate --ckpt "$tmp/serve_ckpt" --tokens 3,5,2 --max-n
 cargo run -q -- serve --ckpt "$tmp/serve_ckpt" --addr 127.0.0.1:0 \
     >"$tmp/serve.log" 2>&1 &
 serve_pid=$!
+PIDS+=("$serve_pid")
 for _ in $(seq 1 100); do
     grep -q "serving on http://" "$tmp/serve.log" && break
     sleep 0.1
@@ -68,12 +75,46 @@ want_tokens="${want#\{}"; want_tokens="${want_tokens%\}}"
 grep -qF "$want_tokens" <<<"$resp"
 code="$(curl -s -o /dev/null -w '%{http_code}' -X POST "$base/v1/generate" -d '{oops')"
 test "$code" = "400"
-kill "$serve_pid" 2>/dev/null || true
-serve_pid=""
-echo "   served tokens byte-identical to the one-shot generate oracle"
+# graceful shutdown: SIGTERM must drain and print the final stats line
+kill -TERM "$serve_pid"
+wait "$serve_pid"
+grep -q "serve: final stats" "$tmp/serve.log"
+echo "   served tokens byte-identical to the one-shot generate oracle; SIGTERM drained cleanly"
 
 echo "== export smoke: weights-only artifact decodes identically =="
 cargo run -q -- export --ckpt "$tmp/serve_ckpt" --out "$tmp/weights.alw"
 got="$(cargo run -q -- generate --ckpt "$tmp/weights.alw" --tokens 3,5,2 --max-new 4)"
 test "$got" = "$want"
 echo "   exported artifact generate == checkpoint generate"
+
+echo "== chaos gate: kill -9 one of 4 supervised workers mid-run; restart @ 3 matches the uninterrupted 3-proc run =="
+# --same-batch + --quant-grads makes the trajectory rank-count-invariant
+# for 1..4 ranks (quantized grads sum exactly in the tree for k <= 4), so
+# the supervised run — started at 4 procs, one murdered, re-rendezvoused
+# at 3, resumed from the last committed checkpoint — must land on the
+# byte-identical params of a 3-proc run that never saw a fault.
+chaos=(--opt alada --batch 8 --dim 6 --hidden 10 --depth 1 --bucket-kb 1 \
+       --seed 11 --schedule const:0.005 --same-batch --quant-grads --steps 10)
+cargo run -q -- shard-train --transport tcp --spawn 3 "${chaos[@]}" \
+    --dump-params "$tmp/ref3.bin"
+cargo run -q -- shard-train --transport tcp --spawn 4 --supervise --max-restarts 2 \
+    --save "$tmp/chaos_ckpt" --save-every 2 --step-sleep-ms 250 \
+    --setup-timeout-s 20 --progress-timeout-s 10 "${chaos[@]}" \
+    --dump-params "$tmp/chaos.bin" >"$tmp/chaos.log" 2>&1 &
+chaos_pid=$!
+PIDS+=("$chaos_pid")
+# wait for the first committed checkpoint so the restart exercises resume
+for _ in $(seq 1 300); do
+    test -f "$tmp/chaos_ckpt/manifest.json" && break
+    sleep 0.1
+done
+test -f "$tmp/chaos_ckpt/manifest.json"
+# the launcher prints each worker's pid; murder rank 1 mid-run
+victim="$(grep -m1 -o 'worker rank=1 pid=[0-9]*' "$tmp/chaos.log" | grep -o '[0-9]*$')"
+test -n "$victim"
+kill -9 "$victim"
+wait "$chaos_pid"
+grep -q "re-rendezvous (generation 1)" "$tmp/chaos.log"
+grep -q "generation 1: world size 3" "$tmp/chaos.log"
+cmp "$tmp/ref3.bin" "$tmp/chaos.bin"
+echo "   supervised 4→3 restart final params byte-identical to the uninterrupted 3-proc run"
