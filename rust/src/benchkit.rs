@@ -142,6 +142,10 @@ pub struct ShardBenchRow {
     pub save_ms: f64,
     /// Resume (read + reshard + import) wall time at this rank count.
     pub load_ms: f64,
+    /// Numerical-guardrail tax at this rank count: fractional step-time
+    /// increase with the sentinel scan + anomaly flag reduce on vs off
+    /// (0.01 = 1%). Expected well under 3%.
+    pub guard_overhead: f64,
 }
 
 /// One measured engine run folded into a `ShardBenchRow`.
@@ -197,7 +201,40 @@ fn shard_bench_row(
         final_loss: *out.losses.last().unwrap_or(&f64::NAN),
         save_ms: 0.0,
         load_ms: 0.0,
+        guard_overhead: 0.0,
     }
+}
+
+/// Measure the numerical-guardrail tax at one rank count: the identical
+/// run with the per-step sentinel (fused finite scan of the owned
+/// reduced gradient + loss, plus the 1-element anomaly flag reduce) on
+/// vs off. TCP frame checksums are part of the wire format and cannot
+/// be toggled, so they ride both sides of the comparison.
+///
+/// The tax is a property of the ENGINE, not of the caller's task, so it
+/// is measured on a fixed canonical workload whose per-step gradient
+/// compute (~1 ms) dwarfs mesh setup and the flag collective — at toy
+/// smoke shapes the fixed ~µs cost of one extra 1-element reduce would
+/// read as a huge, noise-dominated percentage of a ~10 µs step.
+/// Interleaved min-of-5 wall times; returns `max(0, on/off - 1)`.
+fn guard_overhead(schedule: &Schedule, ranks: usize) -> f64 {
+    let task = MlpTask::new(32, 96, 2, 8, 256, 64, 7);
+    let cfg = |sentinel: bool| ShardConfig {
+        ranks,
+        bucket_kb: 64,
+        steps: 12,
+        sentinel,
+        ..ShardConfig::default()
+    };
+    let (mut on, mut off) = (f64::INFINITY, f64::INFINITY);
+    for _ in 0..5 {
+        for (flag, best) in [(true, &mut on), (false, &mut off)] {
+            let t0 = Instant::now();
+            shard::train(&task, "alada", schedule, &cfg(flag)).expect("guard overhead run");
+            *best = best.min(t0.elapsed().as_secs_f64());
+        }
+    }
+    (on / off.max(1e-12) - 1.0).max(0.0)
 }
 
 /// Measure the elastic checkpoint path at one rank count: a short run
@@ -275,9 +312,14 @@ pub fn shard_bench(
             "  {ranks}-ranks checkpoint: save {save_ms:.2} ms, load {load_ms:.2} ms \
              (per-rank slices, no gather)"
         );
+        // Guardrail tax at this rank count — one paired measurement,
+        // stamped onto every row of the rank count like save/load.
+        let guard = guard_overhead(&schedule, ranks);
+        println!("  {ranks}-ranks guardrail overhead: {:.2}% (sentinel on vs off)", guard * 1e2);
         for row in rows[first_of_rank..].iter_mut() {
             row.save_ms = save_ms;
             row.load_ms = load_ms;
+            row.guard_overhead = guard;
         }
         // Traffic ratio at this rank count: RS gradient exchange vs the
         // all-reduce baseline (expected ≈(N+1)/(2N)).
@@ -320,9 +362,10 @@ pub fn shard_bench(
                 row.median_step_ns / ip.median_step_ns.max(1e-9)
             );
             // the checkpoint path is transport-independent (local file
-            // IO); carry the rank count's measurement onto the tcp row
+            // IO); carry the rank count's measurements onto the tcp row
             row.save_ms = ip.save_ms;
             row.load_ms = ip.load_ms;
+            row.guard_overhead = ip.guard_overhead;
         }
         rows.push(row);
     }
@@ -352,6 +395,7 @@ pub fn shard_bench(
                     ("final_loss", Json::Num(r.final_loss)),
                     ("save_ms", Json::Num(r.save_ms)),
                     ("load_ms", Json::Num(r.load_ms)),
+                    ("guard_overhead", Json::Num(r.guard_overhead)),
                 ])
             })
             .collect();

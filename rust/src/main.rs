@@ -12,6 +12,7 @@
 //! Common flags: --artifacts DIR --out DIR --workers N --scale F
 //! (scale < 1 shrinks step counts for smoke runs).
 
+use std::sync::Arc;
 use std::time::Duration;
 
 use anyhow::Context as _;
@@ -23,7 +24,10 @@ use alada::exp::{self, ExpOpts};
 use alada::optim::Schedule;
 use alada::runtime::{Manifest, Runtime, TrainSession};
 use alada::serve::{MlpLm, ServeConfig, Server};
-use alada::shard::{CkptConfig, Comm, MlpTask, Pipeline, ShardConfig, Tcp, TcpOpts, Transport};
+use alada::shard::{
+    AnomalyPolicy, CkptConfig, Comm, FaultPlan, MlpTask, Pipeline, ShardConfig, Tcp, TcpOpts,
+    Transport,
+};
 use alada::train::decode::{greedy_decode, TokenLogits};
 use alada::train::{checkpoint, memory};
 use alada::train::{TaskData, Trainer};
@@ -75,6 +79,8 @@ USAGE:
               [--save DIR] [--save-every K] [--resume DIR] [--same-batch]
               [--quant-grads] [--step-sleep-ms MS] [--setup-timeout-s S]
               [--progress-timeout-s S] [--supervise] [--max-restarts K]
+              [--on-anomaly skip|rollback|abort] [--no-sentinel]
+              [--clip-update D] [--inject SPEC]
               data-parallel engine with partitioned optimizer state (pure Rust,
               no artifacts needed; a rank list sweeps and compares). Default
               pipeline is reduce-scatter; --overlap adds a comm thread per rank
@@ -116,6 +122,23 @@ USAGE:
               zeroes 2 low mantissa bits of every gradient so sums of up to
               4 ranks are exact; --step-sleep-ms slows steps for chaos
               testing.
+              numerical guardrails: every step a fused finite-scan checks
+              the reduced gradient and loss; the verdict rides a 1-element
+              flag reduce so ALL ranks take the same action in lockstep —
+              skip the update (default), roll back to the last committed
+              checkpoint with halved LR (needs --save/--resume), or abort
+              (--on-anomaly; --no-sentinel turns the scan off).
+              --clip-update D caps each tensor's update RMS at D
+              (Adafactor rule) and scrubs non-finite update lanes. TCP
+              frames carry an FNV-1a payload checksum; a corrupt frame
+              surfaces as a typed error that --supervise treats exactly
+              like a peer loss (re-rendezvous + resume).
+              --inject SPEC schedules deterministic faults for chaos
+              gates: SPEC is KIND@STEP[:RANK],.. with KIND one of flip
+              (one bit of an outgoing TCP frame), nan|inf (local
+              gradient), spike (local loss +1e30), torn (truncate the
+              just-written checkpoint slice). Each event fires exactly
+              once, seeded by --seed.
   alada serve --ckpt DIR|FILE [--addr HOST:PORT] [--vocab N] [--seq N]
               [--max-batch B] [--max-wait-ms MS] [--queue-cap N] [--workers N]
               [--corpus FILE] [--granularity char|word]
@@ -325,6 +348,22 @@ struct ShardJob {
     /// Self-healing mode: on peer loss the parent re-rendezvouses the
     /// survivors and resumes; workers re-join instead of dying.
     supervise: bool,
+    /// Numerical sentinel (`--no-sentinel` clears it): scan the reduced
+    /// gradient + loss each step and make a mesh-wide skip/rollback/abort
+    /// decision on anomalies.
+    sentinel: bool,
+    /// What the sentinel does when it trips (`--on-anomaly`).
+    on_anomaly: AnomalyPolicy,
+    /// Adafactor-style RMS update clip threshold (`--clip-update`).
+    clip_update: Option<f32>,
+    /// Raw `--inject` spec, forwarded verbatim to tcp workers (each
+    /// event names its target rank, so every process can parse the full
+    /// schedule and only fire its own).
+    inject_spec: Option<String>,
+    /// The spec parsed ONCE per process. Events latch after firing, and
+    /// the plan is shared across supervised generations, so a restarted
+    /// run never re-fires a spent fault.
+    fault: Option<Arc<FaultPlan>>,
 }
 
 impl ShardJob {
@@ -379,6 +418,10 @@ impl ShardJob {
             steps: self.steps,
             pipeline: self.pipeline,
             ckpt: CkptConfig::new(self.save.as_deref(), self.save_every, resume),
+            sentinel: self.sentinel,
+            on_anomaly: self.on_anomaly,
+            clip_update: self.clip_update,
+            fault: self.fault.clone(),
         }
     }
 
@@ -419,6 +462,7 @@ impl ShardJob {
                     ("--step-sleep-ms", self.step_sleep_ms.to_string()),
                     ("--setup-timeout-s", self.setup_timeout_s.to_string()),
                     ("--progress-timeout-s", self.progress_timeout_s.to_string()),
+                    ("--on-anomaly", self.on_anomaly.name().to_string()),
                 ]
                 .into_iter()
                 .flat_map(|(k, v)| [k.to_string(), v]),
@@ -433,10 +477,18 @@ impl ShardJob {
         if self.supervise {
             args.push("--supervise".to_string());
         }
+        if !self.sentinel {
+            args.push("--no-sentinel".to_string());
+        }
+        if let Some(d) = self.clip_update {
+            args.push("--clip-update".to_string());
+            args.push(d.to_string());
+        }
         let optional = [
             ("--schedule", &self.schedule_spec),
             ("--save", &self.save),
             ("--resume", &self.resume),
+            ("--inject", &self.inject_spec),
         ];
         for (flag, value) in optional {
             if let Some(v) = value {
@@ -471,6 +523,10 @@ fn cmd_shard_train(args: &Args) -> i32 {
     let progress_timeout_s = args.u64_or("progress-timeout-s", 30);
     let supervise = args.bool("supervise");
     let max_restarts = args.usize_or("max-restarts", 1);
+    let sentinel = !args.bool("no-sentinel");
+    let on_anomaly_flag = args.str_or("on-anomaly", AnomalyPolicy::default().name());
+    let clip_update_flag = args.flag("clip-update").map(String::from);
+    let inject_spec = args.flag("inject").map(String::from);
     let schedule_spec = args.flag("schedule").map(String::from);
     let save = args.flag("save").map(String::from);
     let save_every = args.usize_or("save-every", 0);
@@ -504,6 +560,23 @@ fn cmd_shard_train(args: &Args) -> i32 {
             Some(s) => Schedule::parse(s).map_err(|e| anyhow::anyhow!(e))?,
             None => Schedule::Diminishing { eta0: lr, total: steps },
         };
+        let on_anomaly = AnomalyPolicy::parse(&on_anomaly_flag).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown --on-anomaly {on_anomaly_flag:?} (known: skip, rollback, abort)"
+            )
+        })?;
+        let clip_update = match &clip_update_flag {
+            Some(s) => {
+                let d: f32 = s.parse().context("--clip-update must be a number")?;
+                anyhow::ensure!(d > 0.0, "--clip-update must be positive (got {d})");
+                Some(d)
+            }
+            None => None,
+        };
+        let fault = match &inject_spec {
+            Some(spec) => Some(Arc::new(FaultPlan::parse(spec, seed)?)),
+            None => None,
+        };
         let job = ShardJob {
             opt,
             lr,
@@ -526,7 +599,27 @@ fn cmd_shard_train(args: &Args) -> i32 {
             setup_timeout_s,
             progress_timeout_s,
             supervise,
+            sentinel,
+            on_anomaly,
+            clip_update,
+            inject_spec,
+            fault,
         };
+        if job.fault.is_some() {
+            anyhow::ensure!(
+                ranks_list.len() == 1 && !parity,
+                "--inject needs a single --ranks value and no --parity sweep \
+                 (fault events fire once per process, so only the sweep's first \
+                 run would see them)"
+            );
+        }
+        if job.on_anomaly == AnomalyPolicy::Rollback {
+            anyhow::ensure!(
+                job.save.is_some() || job.resume.is_some(),
+                "--on-anomaly rollback needs --save DIR (or --resume): rolling back \
+                 restores the last committed checkpoint"
+            );
+        }
         if job.save.is_some() || job.resume.is_some() {
             anyhow::ensure!(
                 ranks_list.len() == 1 && !parity,
@@ -663,10 +756,12 @@ fn shard_train_inproc(
     Ok(())
 }
 
-/// True when `e` is a mid-run peer loss — the failure class a supervised
-/// job recovers from (setup mistakes, I/O errors, and panics stay
-/// fatal). The engine keeps the typed [`alada::shard::TransportError`]
-/// as the root cause exactly so this test is structural, not textual.
+/// True when `e` is a mid-run transport fault — the failure class a
+/// supervised job recovers from: a lost/wedged peer (`PeerLost`) or a
+/// corrupt frame (`Corrupt`, wire checksum mismatch). Setup mistakes,
+/// I/O errors, numerical-anomaly aborts, and panics stay fatal. The
+/// engine keeps the typed [`alada::shard::TransportError`] as the root
+/// cause exactly so this test is structural, not textual.
 fn peer_loss(e: &anyhow::Error) -> bool {
     e.root_cause().downcast_ref::<alada::shard::TransportError>().is_some()
 }
@@ -762,7 +857,10 @@ fn shard_train_tcp_parent(
             }
             got
         };
-        let round = mesh.and_then(|tcp| {
+        let round = mesh.and_then(|mut tcp| {
+            if let Some(p) = &job.fault {
+                tcp.set_fault_plan(p.clone());
+            }
             let world = tcp.ranks();
             println!(
                 "shard-train[tcp]: generation {gen}: world size {world}{}",
@@ -828,6 +926,9 @@ fn shard_train_tcp_worker(
     let mut tcp = Tcp::connect_opts(rank, ranks, peers, bind, &opts)?;
     let mut resume = job.resume.clone();
     loop {
+        if let Some(p) = &job.fault {
+            tcp.set_fault_plan(p.clone());
+        }
         let world = tcp.ranks();
         let cfg = job.cfg_resuming(world, resume.as_deref());
         match alada::shard::train_rank(&job.task(), &job.opt, &job.schedule(), &cfg, Comm::new(tcp))

@@ -1,0 +1,289 @@
+//! Composable update guard: RMS clipping + non-finite scrubbing.
+//!
+//! Adafactor's stability fix (Shazeer & Stern, §5.3 "update clipping")
+//! caps the root-mean-square of each tensor's *update* — not the
+//! gradient — at a threshold `d`: `update /= max(1, RMS(update)/d)`.
+//! The insight is that the update is the quantity whose scale actually
+//! moves parameters, and second-moment optimizers can emit huge updates
+//! from stale statistics right after a loss spike even when the gradient
+//! itself looks tame. [`Guard`] retrofits that rule onto every optimizer
+//! in this crate (`--clip-update d`), plus a harder backstop: any update
+//! element that comes out non-finite is scrubbed — the parameter reverts
+//! to its pre-step value — so a single poisoned lane can never propagate
+//! NaNs through a whole tensor.
+//!
+//! The wrapper is **stateless**: clipping and scrubbing are pure
+//! functions of (pre-step params, post-step params), computed from a
+//! snapshot taken around the inner step. `export_state`/`import_state`
+//! delegate to the inner optimizer unchanged, so checkpoint geometry
+//! (`Partition::state_slice_elems`) and the PR 5 elastic manifest format
+//! are untouched — a guarded run and an unguarded run produce
+//! interchangeable checkpoints. The clip/scrub counters are diagnostics,
+//! reported per run, not persisted.
+//!
+//! Sharded caveat: for the row-split forms the guard sees only this
+//! rank's owned piece of each tensor, so the clip RMS is *per piece* —
+//! enabling `--clip-update` on a sharded run is stable but not
+//! rank-count invariant (the scrub, being elementwise, is). The
+//! engine's rank-invariant anomaly policy (`--on-anomaly`) rides the
+//! collective instead; the guard is the per-rank second line.
+
+use anyhow::Result;
+
+use super::{Collective, Optimizer, ShardedOptimizer};
+use crate::tensor::{kernels, Tensor};
+
+/// Wraps any [`Optimizer`] with Adafactor-style RMS update clipping and
+/// non-finite update scrubbing. With `clip == None` and `scrub == false`
+/// the wrapper is a zero-cost pass-through (no snapshot is taken).
+pub struct Guard<O> {
+    inner: O,
+    clip: Option<f32>,
+    scrub: bool,
+    /// Pre-step parameter snapshot, one buffer per guarded region,
+    /// reused across steps so the steady state is allocation-free.
+    snap: Vec<Vec<f32>>,
+    clips: u64,
+    scrubs: u64,
+}
+
+impl<O> Guard<O> {
+    /// Guard `inner`, clipping each tensor's update RMS at `clip` (None
+    /// = no clipping) and reverting non-finite update elements when
+    /// `scrub` is set.
+    pub fn new(inner: O, clip: Option<f32>, scrub: bool) -> Guard<O> {
+        if let Some(d) = clip {
+            assert!(d > 0.0, "clip threshold must be positive (got {d})");
+        }
+        Guard { inner, clip, scrub, snap: Vec::new(), clips: 0, scrubs: 0 }
+    }
+
+    /// The wrapped optimizer.
+    pub fn inner(&self) -> &O {
+        &self.inner
+    }
+
+    /// The wrapped optimizer, mutably (checkpoint import, shard wiring).
+    pub fn inner_mut(&mut self) -> &mut O {
+        &mut self.inner
+    }
+
+    /// Tensors whose update RMS was clipped, cumulative over the run.
+    pub fn clips(&self) -> u64 {
+        self.clips
+    }
+
+    /// Non-finite update elements reverted, cumulative over the run.
+    pub fn scrubs(&self) -> u64 {
+        self.scrubs
+    }
+
+    fn active(&self) -> bool {
+        self.clip.is_some() || self.scrub
+    }
+
+    /// Snapshot region `i` (growing the scratch list on first use).
+    fn snapshot(&mut self, i: usize, data: &[f32]) {
+        if self.snap.len() <= i {
+            self.snap.resize_with(i + 1, Vec::new);
+        }
+        self.snap[i].clear();
+        self.snap[i].extend_from_slice(data);
+    }
+
+    /// Apply scrub-then-clip to one post-step region against its
+    /// snapshot. Scrub first: a single NaN lane would otherwise poison
+    /// the clip RMS and turn the whole region's update to garbage.
+    fn guard_region(&mut self, i: usize, new: &mut [f32]) {
+        let old = &self.snap[i];
+        debug_assert_eq!(old.len(), new.len());
+        if self.scrub && !kernels::all_finite(new) {
+            for (n, &o) in new.iter_mut().zip(old) {
+                if !n.is_finite() {
+                    *n = o;
+                    self.scrubs += 1;
+                }
+            }
+        }
+        let Some(d) = self.clip else { return };
+        let mut sq = 0.0f64;
+        for (&n, &o) in new.iter().zip(old) {
+            let u = (n - o) as f64;
+            sq += u * u;
+        }
+        let rms = (sq / new.len().max(1) as f64).sqrt() as f32;
+        if rms > d {
+            // Adafactor Eq. (clipped update): u / max(1, RMS(u)/d).
+            let f = d / rms;
+            for (n, &o) in new.iter_mut().zip(old) {
+                *n = o + (*n - o) * f;
+            }
+            self.clips += 1;
+        }
+    }
+}
+
+impl<O: Optimizer> Optimizer for Guard<O> {
+    fn step(&mut self, params: &mut [Tensor], grads: &[Tensor], lr: f32) {
+        if !self.active() {
+            return self.inner.step(params, grads, lr);
+        }
+        for (i, p) in params.iter().enumerate() {
+            self.snapshot(i, p.data());
+        }
+        self.inner.step(params, grads, lr);
+        for (i, p) in params.iter_mut().enumerate() {
+            self.guard_region(i, p.data_mut());
+        }
+    }
+
+    fn state_overhead_bytes(&self) -> usize {
+        self.inner.state_overhead_bytes()
+    }
+
+    fn aliases_grad_slot(&self) -> bool {
+        self.inner.aliases_grad_slot()
+    }
+
+    fn export_state(&self, out: &mut Vec<f32>) {
+        self.inner.export_state(out)
+    }
+
+    fn import_state(&mut self, shapes: &[Vec<usize>], data: &[f32], step: usize) -> Result<()> {
+        self.inner.import_state(shapes, data, step)
+    }
+
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+}
+
+impl Guard<ShardedOptimizer> {
+    /// Guarded sharded update: snapshot this rank's owned piece of each
+    /// tensor, run the inner collective step, then scrub/clip exactly
+    /// those regions. Mirrors [`ShardedOptimizer::step_collective`].
+    pub fn step_collective(
+        &mut self,
+        params: &mut [Tensor],
+        grads: &[Tensor],
+        lr: f32,
+        coll: &mut dyn Collective,
+    ) {
+        if !self.active() {
+            return self.inner.step_collective(params, grads, lr, coll);
+        }
+        let pieces = self.inner.pieces().to_vec();
+        for (i, pc) in pieces.iter().enumerate() {
+            self.snapshot(i, &params[pc.tensor].data()[pc.local.clone()]);
+        }
+        self.inner.step_collective(params, grads, lr, coll);
+        for (i, pc) in pieces.iter().enumerate() {
+            // Split the borrow: pull the owned window out of the tensor.
+            let t = params[pc.tensor].data_mut();
+            let local = pc.local.clone();
+            self.guard_region(i, &mut t[local]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::{by_name, testutil, LocalCollective};
+    use crate::shard::Partition;
+
+    /// Test double: adds a caller-chosen delta to every parameter.
+    struct FixedDelta(Vec<f32>);
+
+    impl Optimizer for FixedDelta {
+        fn step(&mut self, params: &mut [Tensor], _grads: &[Tensor], _lr: f32) {
+            let mut i = 0;
+            for p in params.iter_mut() {
+                for x in p.data_mut() {
+                    *x += self.0[i % self.0.len()];
+                    i += 1;
+                }
+            }
+        }
+        fn state_overhead_bytes(&self) -> usize {
+            0
+        }
+        fn export_state(&self, _out: &mut Vec<f32>) {}
+        fn import_state(&mut self, _s: &[Vec<usize>], _d: &[f32], _step: usize) -> Result<()> {
+            Ok(())
+        }
+        fn name(&self) -> &'static str {
+            "fixed-delta"
+        }
+    }
+
+    #[test]
+    fn clip_caps_update_rms_at_threshold() {
+        // Update (3, 4) per pair: RMS = sqrt((9+16)/2) = 3.5355…
+        let mut params = vec![Tensor::zeros(&[2])];
+        let grads = vec![Tensor::zeros(&[2])];
+        let mut g = Guard::new(FixedDelta(vec![3.0, 4.0]), Some(1.0), false);
+        g.step(&mut params, &grads, 0.0);
+        let rms = (params[0].data().iter().map(|x| (x * x) as f64).sum::<f64>() / 2.0).sqrt();
+        assert!((rms - 1.0).abs() < 1e-6, "clipped RMS {rms} != d");
+        // Direction preserved: elements stay in 3:4 ratio.
+        let d = params[0].data();
+        assert!((d[0] / d[1] - 0.75).abs() < 1e-6);
+        assert_eq!((g.clips(), g.scrubs()), (1, 0));
+
+        // Below the threshold nothing is touched.
+        let mut params = vec![Tensor::zeros(&[2])];
+        let mut g = Guard::new(FixedDelta(vec![0.3, 0.4]), Some(1.0), false);
+        g.step(&mut params, &grads, 0.0);
+        assert_eq!(params[0].data(), &[0.3, 0.4]);
+        assert_eq!(g.clips(), 0);
+    }
+
+    #[test]
+    fn scrub_reverts_only_the_non_finite_lanes() {
+        let mut params = vec![Tensor::from_fn(&[4], |i| i as f32)];
+        let grads = vec![Tensor::zeros(&[4])];
+        let mut g =
+            Guard::new(FixedDelta(vec![1.0, f32::NAN, f32::INFINITY, 1.0]), None, true);
+        g.step(&mut params, &grads, 0.0);
+        // Lanes 1, 2 got poisoned and reverted; lanes 0, 3 kept +1.0.
+        assert_eq!(params[0].data(), &[1.0, 1.0, 2.0, 4.0]);
+        assert_eq!((g.clips(), g.scrubs()), (0, 2));
+    }
+
+    #[test]
+    fn disabled_guard_is_a_transparent_pass_through() {
+        let shapes = vec![vec![6, 3], vec![4]];
+        let (params0, grads) = testutil::fixture(&shapes, 3);
+        let (mut pa, mut pb) = (params0.clone(), params0);
+        let mut bare = by_name("alada", &shapes).unwrap();
+        let mut guarded = Guard::new(by_name("alada", &shapes).unwrap(), None, false);
+        for _ in 0..4 {
+            bare.step(&mut pa, &grads, 1e-2);
+            guarded.step(&mut pb, &grads, 1e-2);
+        }
+        assert_eq!(pa, pb, "pass-through must be bit-identical");
+        assert_eq!(guarded.name(), "alada");
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        bare.export_state(&mut a);
+        guarded.export_state(&mut b);
+        assert_eq!(a, b, "state export delegates to the inner optimizer");
+    }
+
+    #[test]
+    fn sharded_guard_scrubs_owned_pieces() {
+        let shapes = vec![vec![8, 4], vec![5]];
+        let part = Partition::plan_for("alada", &shapes, 1);
+        let sharded = ShardedOptimizer::new("alada", &part, 0).unwrap();
+        let mut g = Guard::new(sharded, None, true);
+        let (mut params, mut grads) = testutil::fixture(&shapes, 11);
+        grads[0].data_mut()[5] = f32::NAN; // poisons the whole update row
+        let before = params.clone();
+        g.step_collective(&mut params, &grads, 1e-2, &mut LocalCollective);
+        for p in &params {
+            assert!(kernels::all_finite(p.data()), "scrub left a non-finite parameter");
+        }
+        assert!(g.scrubs() > 0, "the poisoned lanes were scrubbed");
+        assert_ne!(params, before, "clean lanes still stepped");
+    }
+}

@@ -17,6 +17,7 @@ pub mod adagrad;
 pub mod adam;
 pub mod alada;
 pub mod came;
+pub mod guard;
 pub mod reshape;
 pub mod schedule;
 pub mod sgd;
@@ -28,6 +29,7 @@ pub use adagrad::AdaGrad;
 pub use adam::Adam;
 pub use alada::Alada;
 pub use came::Came;
+pub use guard::Guard;
 pub use schedule::Schedule;
 pub use sgd::Sgd;
 pub use sharded::ShardedOptimizer;
@@ -225,6 +227,61 @@ pub fn by_name(name: &str, shapes: &[Vec<usize>]) -> Result<Box<dyn Optimizer + 
 /// All optimizer names known to `by_name` (ablation sweeps iterate this).
 pub const ALL: &[&str] = &["sgd", "sgdm", "adagrad", "adam", "adafactor", "alada", "sm3", "came"];
 
+/// Boxed optimizers are optimizers — lets the composable wrappers
+/// (`Guard`) sit above whatever `by_name` built without re-boxing.
+impl<O: Optimizer + ?Sized> Optimizer for Box<O> {
+    fn step(&mut self, params: &mut [Tensor], grads: &[Tensor], lr: f32) {
+        (**self).step(params, grads, lr)
+    }
+
+    fn state_overhead_bytes(&self) -> usize {
+        (**self).state_overhead_bytes()
+    }
+
+    fn aliases_grad_slot(&self) -> bool {
+        (**self).aliases_grad_slot()
+    }
+
+    fn export_state(&self, out: &mut Vec<f32>) {
+        (**self).export_state(out)
+    }
+
+    fn import_state(&mut self, shapes: &[Vec<usize>], data: &[f32], step: usize) -> Result<()> {
+        (**self).import_state(shapes, data, step)
+    }
+
+    fn name(&self) -> &'static str {
+        (**self).name()
+    }
+}
+
+/// Error unless every element of `what` is finite. The scan is the fused
+/// [`kernels::all_finite`](crate::tensor::kernels::all_finite) pass (one
+/// multiply-add per element, no branches); the diagnostic census runs
+/// only on the failure path. This is the shared sentinel behind the
+/// shard engine's per-step gradient/loss checks and the parity suites'
+/// sanity assertions.
+pub fn check_finite(what: &str, xs: &[f32]) -> Result<()> {
+    if crate::tensor::kernels::all_finite(xs) {
+        return Ok(());
+    }
+    let (mut nans, mut infs, mut first) = (0usize, 0usize, usize::MAX);
+    for (i, &x) in xs.iter().enumerate() {
+        if x.is_nan() {
+            nans += 1;
+        } else if x.is_infinite() {
+            infs += 1;
+        } else {
+            continue;
+        }
+        first = first.min(i);
+    }
+    bail!(
+        "{what}: {nans} NaN + {infs} Inf among {} elements (first at index {first})",
+        xs.len()
+    )
+}
+
 #[cfg(test)]
 pub(crate) mod testutil {
     use super::*;
@@ -268,8 +325,8 @@ pub(crate) mod testutil {
         }
         let mut moved = 0;
         for (p, b) in params.iter().zip(&before) {
+            check_finite(&format!("{name}: parameters"), p.data()).expect("finite parameters");
             for (&x, &y) in p.data().iter().zip(b.data()) {
-                assert!(x.is_finite(), "{name}: non-finite parameter");
                 if (x - y).abs() > 1e-8 {
                     moved += 1;
                 }

@@ -101,11 +101,30 @@ fn reason(status: u16) -> &'static str {
 /// Write one response and flush. The connection is close-delimited, so
 /// Content-Length plus `Connection: close` is the whole contract.
 pub fn respond(stream: &mut TcpStream, status: u16, content_type: &str, body: &str) -> Result<()> {
-    let head = format!(
-        "HTTP/1.1 {status} {}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+    respond_headers(stream, status, content_type, &[], body)
+}
+
+/// [`respond`] with extra headers (e.g. `Retry-After` on a 503). Header
+/// values must be single-line; nothing here escapes them.
+pub fn respond_headers(
+    stream: &mut TcpStream,
+    status: u16,
+    content_type: &str,
+    extra: &[(&str, &str)],
+    body: &str,
+) -> Result<()> {
+    let mut head = format!(
+        "HTTP/1.1 {status} {}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\n",
         reason(status),
         body.len()
     );
+    for (k, v) in extra {
+        head.push_str(k);
+        head.push_str(": ");
+        head.push_str(v);
+        head.push_str("\r\n");
+    }
+    head.push_str("Connection: close\r\n\r\n");
     stream.write_all(head.as_bytes()).context("writing response head")?;
     stream.write_all(body.as_bytes()).context("writing response body")?;
     stream.flush().context("flushing response")?;
@@ -121,6 +140,18 @@ pub fn request<A: ToSocketAddrs>(
     path: &str,
     body: Option<&str>,
 ) -> Result<(u16, String)> {
+    let (status, _head, body) = request_full(addr, method, path, body)?;
+    Ok((status, body))
+}
+
+/// [`request`] that also returns the raw response header section, so
+/// callers can assert on headers (`Retry-After`, content type, …).
+pub fn request_full<A: ToSocketAddrs>(
+    addr: A,
+    method: &str,
+    path: &str,
+    body: Option<&str>,
+) -> Result<(u16, String, String)> {
     let mut stream = TcpStream::connect(addr).context("connecting to server")?;
     stream
         .set_read_timeout(Some(Duration::from_secs(30)))
@@ -136,7 +167,7 @@ pub fn request<A: ToSocketAddrs>(
     parse_response(&raw)
 }
 
-fn parse_response(raw: &[u8]) -> Result<(u16, String)> {
+fn parse_response(raw: &[u8]) -> Result<(u16, String, String)> {
     let text = std::str::from_utf8(raw).context("response is not utf-8")?;
     let (head, body) =
         text.split_once("\r\n\r\n").context("response has no header/body separator")?;
@@ -146,7 +177,7 @@ fn parse_response(raw: &[u8]) -> Result<(u16, String)> {
         .nth(1)
         .and_then(|s| s.parse().ok())
         .with_context(|| format!("malformed status line {status_line:?}"))?;
-    Ok((status, body.to_string()))
+    Ok((status, head.to_string(), body.to_string()))
 }
 
 #[cfg(test)]
@@ -171,6 +202,24 @@ mod tests {
         server.join().unwrap();
         assert_eq!(status, 200);
         assert_eq!(body, r#"{"ok":true}"#);
+    }
+
+    #[test]
+    fn extra_headers_ride_the_response_head() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            read_request(&mut s).unwrap().unwrap();
+            respond_headers(&mut s, 503, "application/json", &[("Retry-After", "1")], "{}")
+                .unwrap();
+        });
+        let (status, head, body) = request_full(addr, "GET", "/x", None).unwrap();
+        server.join().unwrap();
+        assert_eq!(status, 503);
+        assert_eq!(body, "{}");
+        assert!(head.contains("Retry-After: 1"), "head: {head}");
+        assert!(head.contains("Connection: close"), "head: {head}");
     }
 
     #[test]

@@ -150,7 +150,12 @@ fn handle_conn(inner: &Inner, mut stream: TcpStream) {
         }
     };
     let (status, body) = route(inner, &req);
-    let _ = http::respond(&mut stream, status, "application/json", &body);
+    // A 503 is pure backpressure: the queue was full at submit time, so
+    // tell well-behaved clients when to come back instead of letting
+    // them hammer the accept loop.
+    let extra: &[(&str, &str)] =
+        if status == 503 { &[("Retry-After", "1")] } else { &[] };
+    let _ = http::respond_headers(&mut stream, status, "application/json", extra, &body);
 }
 
 fn route(inner: &Inner, req: &Request) -> (u16, String) {

@@ -71,6 +71,11 @@ impl ServeStats {
         put("rejected_503", g(&self.rejected_503) as f64);
         put("bad_400", g(&self.bad_400) as f64);
         put("errors", g(&self.errors) as f64);
+        // The load-shedding split, rolled up for dashboards: `served` is
+        // work the model actually did; `rejected` is backpressure only
+        // (4xx/5xx failures are neither — they're counted above).
+        put("served", ok as f64);
+        put("rejected", g(&self.rejected_503) as f64);
         put("batches", batches as f64);
         put("batched_requests", g(&self.batched_requests) as f64);
         put("max_batch_seen", g(&self.max_batch_seen) as f64);
@@ -108,6 +113,8 @@ mod tests {
         assert_eq!(j.get("requests").unwrap().as_usize(), Some(3));
         assert_eq!(j.get("ok").unwrap().as_usize(), Some(2));
         assert_eq!(j.get("rejected_503").unwrap().as_usize(), Some(1));
+        assert_eq!(j.get("served").unwrap().as_usize(), Some(2));
+        assert_eq!(j.get("rejected").unwrap().as_usize(), Some(1));
         assert_eq!(j.get("batches").unwrap().as_usize(), Some(2));
         assert_eq!(j.get("max_batch_seen").unwrap().as_usize(), Some(2));
         assert_eq!(j.get("tokens_generated").unwrap().as_usize(), Some(6));

@@ -34,14 +34,16 @@
 //! rust/tests/elastic_resume.rs pins end-to-end byte identity).
 
 use std::path::PathBuf;
+use std::sync::Arc;
 use std::time::Instant;
 
-use anyhow::{ensure, Context, Result};
+use anyhow::{anyhow, ensure, Context, Result};
 
 use crate::optim::{Collective, Optimizer, ShardedOptimizer};
 use crate::tensor::Tensor;
 use crate::train::checkpoint::{self, slice_file, Manifest, SliceInfo, LAYOUT_CANONICAL};
 
+use super::fault::{FaultKind, FaultPlan};
 use super::partition::{plan_reshard, Partition};
 
 /// Artifact tag engine checkpoints carry; resume validates it so a
@@ -89,6 +91,14 @@ pub(crate) struct RankCkpt<'a> {
     /// coordinated abort this is what the engine reports as the safe
     /// restart point.
     last_committed: Option<usize>,
+    /// Where that checkpoint lives (`resume_from` until the first save
+    /// of this run commits into `save_dir`) — the anomaly-rollback
+    /// target.
+    committed_dir: Option<PathBuf>,
+    /// Deterministic fault injection (`--inject torn@STEP[:RANK]`
+    /// truncates this rank's just-written slice file, simulating a
+    /// crash mid-write). Set by the engine from its `ShardConfig`.
+    pub fault: Option<Arc<FaultPlan>>,
 }
 
 impl<'a> RankCkpt<'a> {
@@ -98,7 +108,17 @@ impl<'a> RankCkpt<'a> {
         part: &'a Partition,
         rank: usize,
     ) -> RankCkpt<'a> {
-        RankCkpt { cfg, opt_name, part, rank, save_secs: 0.0, load_secs: 0.0, last_committed: None }
+        RankCkpt {
+            cfg,
+            opt_name,
+            part,
+            rank,
+            save_secs: 0.0,
+            load_secs: 0.0,
+            last_committed: None,
+            committed_dir: None,
+            fault: None,
+        }
     }
 
     /// Step of the last checkpoint known committed from this rank's view
@@ -129,7 +149,42 @@ impl<'a> RankCkpt<'a> {
             return Ok(0);
         };
         let t0 = Instant::now();
-        let man = Manifest::load(&dir)?;
+        let step = self.restore(&dir, params, opt, total_steps)?;
+        self.load_secs = t0.elapsed().as_secs_f64();
+        Ok(step)
+    }
+
+    /// Anomaly rollback: reload the last committed checkpoint of this
+    /// run and return the step to re-run from. Pure local file reads,
+    /// like resume — every rank calls this after the same collective
+    /// verdict, so the mesh stays in lockstep without any extra message.
+    pub fn rollback(
+        &mut self,
+        params: &mut [Tensor],
+        opt: &mut ShardedOptimizer,
+    ) -> Result<usize> {
+        let dir = self.committed_dir.clone().ok_or_else(|| {
+            anyhow!(
+                "rank {}: anomaly rollback requested but no checkpoint was ever committed \
+                 (run with --save, or use --on-anomaly skip)",
+                self.rank
+            )
+        })?;
+        self.restore(&dir, params, opt, usize::MAX)
+    }
+
+    /// Shared restore path of [`resume`](Self::resume) and
+    /// [`rollback`](Self::rollback): validate the manifest against the
+    /// partition planner, reassemble the full parameter replica from the
+    /// slice tiling, and reshard the optimizer state onto this rank.
+    fn restore(
+        &mut self,
+        dir: &PathBuf,
+        params: &mut [Tensor],
+        opt: &mut ShardedOptimizer,
+        total_steps: usize,
+    ) -> Result<usize> {
+        let man = Manifest::load(dir)?;
         ensure!(
             man.artifact == SHARD_ARTIFACT,
             "checkpoint {dir:?} is a {:?} checkpoint, not a shard-train one",
@@ -175,7 +230,7 @@ impl<'a> RankCkpt<'a> {
         let mut flat = vec![0.0f32; self.part.total_elems()];
         let mut states: Vec<Vec<f32>> = Vec::with_capacity(man.ranks);
         for r in 0..man.ranks {
-            let (pslice, state) = checkpoint::read_slice(&dir, &man, r)
+            let (pslice, state) = checkpoint::read_slice(dir, &man, r)
                 .with_context(|| format!("reading checkpoint {dir:?}"))?;
             flat[old.elem_range(r)].copy_from_slice(&pslice);
             states.push(state);
@@ -193,8 +248,8 @@ impl<'a> RankCkpt<'a> {
         }
         opt.import_state(&[], &blob, man.step)
             .with_context(|| format!("importing state from checkpoint {dir:?}"))?;
-        self.load_secs = t0.elapsed().as_secs_f64();
         self.last_committed = Some(man.step);
+        self.committed_dir = Some(dir.clone());
         Ok(man.step)
     }
 
@@ -220,6 +275,22 @@ impl<'a> RankCkpt<'a> {
         opt.export_state(&mut state);
         let ck = checkpoint::write_slice(&dir, self.rank, step_done, &pslice, &state)
             .with_context(|| format!("writing checkpoint slice {} in {dir:?}", self.rank))?;
+        // Torn-write injection: truncate the slice AFTER its checksum was
+        // computed but BEFORE the barriers, so the manifest commits
+        // referencing a short file — exactly what a crash mid-write
+        // leaves behind. Restore must reject it by name (read_slice's
+        // length/checksum validation, pinned in
+        // rust/tests/guardrails.rs).
+        if let Some(f) = &self.fault {
+            if step_done > 0 && f.fire_at(FaultKind::Torn, step_done - 1, self.rank) {
+                let path = dir.join(slice_file(step_done, self.rank));
+                let len = std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
+                let _ = std::fs::OpenOptions::new()
+                    .write(true)
+                    .open(&path)
+                    .and_then(|fh| fh.set_len(len / 2));
+            }
+        }
 
         // Barrier 1 + checksum exchange: three exact 22-bit limbs per
         // rank (f32 holds integers < 2^24 exactly; summing with zeros is
@@ -269,6 +340,7 @@ impl<'a> RankCkpt<'a> {
             // Rank 0 performed the commit itself — it knows this step is
             // safe even if the confirmation barrier below breaks.
             self.last_committed = Some(step_done);
+            self.committed_dir = Some(dir.clone());
         }
         // Barrier 2: nobody races past an uncommitted manifest (rank 0
         // contributes only after the rename above).
@@ -284,6 +356,7 @@ impl<'a> RankCkpt<'a> {
             self.last_committed
         );
         self.last_committed = Some(step_done);
+        self.committed_dir = Some(dir.clone());
         // Only now is it safe to drop the previous generation: the new
         // manifest is committed, and each rank touches its own files
         // only. (A crash before this point leaves harmless orphans the

@@ -62,6 +62,20 @@
 //! never the per-element association (pinned in
 //! rust/tests/shard_parity.rs).
 //!
+//! **Numerical guardrails:** every step, each rank runs a fused finite
+//! scan ([`kernels::all_finite`]) over its owned slice of the reduced
+//! gradient plus its micro-batch loss (capped at [`LOSS_CAP`]); the
+//! per-rank verdicts meet in a 1-element opt-phase flag reduce, so all
+//! ranks reach the SAME skip / rollback / abort decision
+//! ([`AnomalyPolicy`]) and the mesh never splits on a local judgment.
+//! A skip zeroes the update (no optimizer step; the gather still runs,
+//! so the message schedule and the recorded losses stay uniform), a
+//! rollback restores the last committed checkpoint in-process with the
+//! learning rate halved, and an abort unwinds WITHOUT a
+//! `TransportError` root cause so a supervisor will not classify it as
+//! retryable. Every guard is exercisable on demand through the seeded
+//! injection schedule in [`super::fault`] (`--inject`).
+//!
 //! **Failure behaviour:** a peer death (or a wedge past the transport's
 //! progress deadline) surfaces as a typed `TransportError::PeerLost`
 //! from whichever collective touches the dead link first. Each pipeline
@@ -85,14 +99,16 @@
 
 use std::ops::Range;
 use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
 
 use anyhow::{anyhow, bail, ensure, Result};
 
-use crate::optim::{Collective, Optimizer, Schedule, ShardedOptimizer};
-use crate::tensor::Tensor;
+use crate::optim::{Collective, Guard, Optimizer, Schedule, ShardedOptimizer};
+use crate::tensor::{kernels, Tensor};
 
 use super::ckpt::{CkptConfig, RankCkpt};
 use super::collective::{mesh, Comm, Phase, Seg};
+use super::fault::{FaultKind, FaultPlan};
 use super::partition::{Partition, Piece};
 use super::transport::{Transport, TransportError};
 
@@ -173,6 +189,62 @@ impl Pipeline {
     }
 }
 
+/// A finite loss past this magnitude still counts as an anomaly (loss
+/// spike): the trajectory is already divergent even when no float is
+/// NaN yet.
+pub const LOSS_CAP: f32 = 1e12;
+
+/// `AnomalyPolicy::Rollback` gives up (aborts) after this many
+/// rollbacks in one run: an anomaly that keeps recurring under a
+/// repeatedly halved learning rate means the task or hyper-parameters
+/// are broken, not the hardware.
+pub const MAX_ROLLBACKS: u32 = 8;
+
+/// What the engine does when the per-step numerical sentinel trips
+/// (non-finite reduced gradient, or a non-finite / capped loss). The
+/// decision is computed from a flag riding the opt-phase collective,
+/// so every rank acts identically — the mesh never splits.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum AnomalyPolicy {
+    /// Zero the update: no optimizer step runs, parameters carry over
+    /// unchanged, and the engine's step/schedule counters advance
+    /// identically on every rank. (The optimizer's own update count
+    /// does not tick on a skipped step, so a checkpoint saved *after*
+    /// a skip resumes with the optimizer one tick ahead of the updates
+    /// actually applied — a deliberate trade for keeping poisoned
+    /// floats out of the optimizer state entirely.)
+    #[default]
+    Skip,
+    /// Restore the last committed checkpoint in-process (pure local
+    /// file reads on every rank, after the same collective decision)
+    /// and re-run from there with the learning rate halved — halved
+    /// again on each further rollback, up to [`MAX_ROLLBACKS`].
+    /// Requires a run with `--save`; with nothing committed yet the
+    /// run aborts instead.
+    Rollback,
+    /// Unwind the whole mesh with an error naming the anomaly.
+    Abort,
+}
+
+impl AnomalyPolicy {
+    pub fn parse(s: &str) -> Option<AnomalyPolicy> {
+        match s {
+            "skip" => Some(AnomalyPolicy::Skip),
+            "rollback" => Some(AnomalyPolicy::Rollback),
+            "abort" => Some(AnomalyPolicy::Abort),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            AnomalyPolicy::Skip => "skip",
+            AnomalyPolicy::Rollback => "rollback",
+            AnomalyPolicy::Abort => "abort",
+        }
+    }
+}
+
 /// Engine knobs (`shard-train` CLI flags map 1:1 onto these).
 #[derive(Clone, Debug)]
 pub struct ShardConfig {
@@ -188,6 +260,18 @@ pub struct ShardConfig {
     /// results — saving is read-only, and a resumed run is byte-identical
     /// to the uninterrupted one (rust/tests/elastic_resume.rs).
     pub ckpt: CkptConfig,
+    /// Per-step numerical sentinel over the reduced gradient and the
+    /// loss (default on). Costs one fused finite scan of the owned
+    /// slice plus a 1-element opt-phase flag reduce per step; never
+    /// changes the values of a clean run.
+    pub sentinel: bool,
+    /// What to do when the sentinel trips (`--on-anomaly`).
+    pub on_anomaly: AnomalyPolicy,
+    /// Adafactor-style RMS update-clipping threshold (`--clip-update`,
+    /// see [`crate::optim::Guard`]); None = no clipping.
+    pub clip_update: Option<f32>,
+    /// Deterministic fault injection (`--inject`); None in production.
+    pub fault: Option<Arc<FaultPlan>>,
 }
 
 impl ShardConfig {
@@ -204,6 +288,10 @@ impl Default for ShardConfig {
             steps: 100,
             pipeline: Pipeline::default(),
             ckpt: CkptConfig::default(),
+            sentinel: true,
+            on_anomaly: AnomalyPolicy::default(),
+            clip_update: None,
+            fault: None,
         }
     }
 }
@@ -406,6 +494,71 @@ fn peer_lost_abort(rank: usize, last_committed: Option<usize>, e: TransportError
     anyhow::Error::new(e).context(format!(
         "rank {rank}: training aborted mid-step (last committed checkpoint: {committed})"
     ))
+}
+
+/// Terminal anomaly error (`--on-anomaly abort`, or a rollback that is
+/// impossible or exhausted). Deliberately NOT rooted in a
+/// [`TransportError`]: the mesh is healthy, so a supervisor must not
+/// classify this as retryable — restarting cannot fix broken numerics.
+fn anomaly_abort(rank: usize, step: usize) -> anyhow::Error {
+    anyhow!(
+        "rank {rank}: numerical anomaly at step {step} \
+         (non-finite reduced gradient, or loss past {LOSS_CAP:e})"
+    )
+}
+
+/// The loss half of the sentinel: NaN/Inf, or finite but spiking.
+fn loss_anomalous(loss: f32) -> bool {
+    !loss.is_finite() || loss.abs() > LOSS_CAP
+}
+
+/// The gradient half of the sentinel: fused finite scan over this
+/// rank's owned pieces of the reduced gradient. The owned slices tile
+/// the flat space across ranks, so the mesh-wide OR of these verdicts
+/// covers every reduced element exactly once at ANY rank count — which
+/// is what makes the skip decision rank-count invariant.
+fn owned_grads_finite(pieces: &[Piece], grads: &[Tensor]) -> bool {
+    pieces.iter().all(|p| kernels::all_finite(&grads[p.tensor].data()[p.local.clone()]))
+}
+
+/// Inject any gradient/loss faults scheduled for (`step`, `rank`):
+/// `spike` lands on the local micro-batch loss, `nan`/`inf` on the
+/// first element of the packed local gradient — all pre-reduce, so the
+/// poisoned mean reaches every rank's sentinel through the collective.
+fn inject_grad_faults(
+    fault: Option<&FaultPlan>,
+    step: usize,
+    rank: usize,
+    loss: &mut f32,
+    grad0: &mut f32,
+) {
+    let Some(f) = fault else { return };
+    if f.fire_at(FaultKind::Spike, step, rank) {
+        *loss += 1e30;
+    }
+    if f.fire_at(FaultKind::Nan, step, rank) {
+        *grad0 = f32::NAN;
+    }
+    if f.fire_at(FaultKind::Inf, step, rank) {
+        *grad0 = f32::INFINITY;
+    }
+}
+
+/// Per-rank anomaly bookkeeping carried across steps by every pipeline:
+/// the policy, the rollback budget, the LR backoff, and a skip counter
+/// for the log line.
+struct Sentinel {
+    policy: AnomalyPolicy,
+    rollbacks: u32,
+    /// Learning-rate multiplier, halved on every rollback.
+    lr_scale: f32,
+    skipped: u64,
+}
+
+impl Sentinel {
+    fn new(cfg: &ShardConfig) -> Sentinel {
+        Sentinel { policy: cfg.on_anomaly, rollbacks: 0, lr_scale: 1.0, skipped: 0 }
+    }
 }
 
 /// The optimizer-facing collective of the synchronous pipelines: the
@@ -655,18 +808,26 @@ fn run_rank_allreduce<T: Transport>(
     let total = part.total_elems();
     let my_pieces = part.pieces(rank);
     let mut ck = RankCkpt::new(&cfg.ckpt, opt_name, part, rank);
+    ck.fault = cfg.fault.clone();
     let start = ck.resume(&mut params, &mut opt, steps)?;
+    let mut opt = Guard::new(opt, cfg.clip_update, cfg.sentinel);
+    let mut sen = Sentinel::new(cfg);
     let mut grads: Vec<Tensor> = slots.iter().map(|s| Tensor::zeros(&s.shape)).collect();
     // Flat exchange buffer: gradients + one trailing loss slot (the loss
     // rides the same reduce, so every rank sees the global mean for free).
     let mut flat = vec![0.0f32; total + 1];
     let mut losses = Vec::with_capacity(steps - start);
 
-    for step in start..steps {
-        let loss = replica.grad(&params, step, &mut grads);
+    let mut step = start;
+    while step < steps {
+        if let Some(f) = &cfg.fault {
+            f.begin_step(step);
+        }
+        let mut loss = replica.grad(&params, step, &mut grads);
         for (slot, g) in slots.iter().zip(&grads) {
             flat[slot.offset..slot.offset + slot.elems].copy_from_slice(g.data());
         }
+        inject_grad_faults(cfg.fault.as_deref(), step, rank, &mut loss, &mut flat[0]);
         flat[total] = loss;
         comm.set_phase(Phase::Reduce);
         comm.all_reduce_mean(&mut flat, bucket)
@@ -675,11 +836,62 @@ fn run_rank_allreduce<T: Transport>(
 
         // Partitioned update: unpack + step the owned pieces only.
         unpack_owned(&my_pieces, &flat, &mut grads);
-        comm.set_phase(Phase::Opt);
-        let mut coll = CommCollective { comm: &mut comm, bucket, err: None };
-        opt.step_collective(&mut params, &grads, schedule.at(step), &mut coll);
-        if let Some(e) = coll.err {
-            return Err(peer_lost_abort(rank, ck.last_committed(), e));
+
+        // Numerical sentinel: fuse-scan the owned reduced slice and the
+        // local loss, then reduce a 1-element flag so every rank reaches
+        // the same verdict before anyone touches the optimizer.
+        let mut anomaly = false;
+        if cfg.sentinel {
+            let bad = loss_anomalous(loss) || !owned_grads_finite(&my_pieces, &grads);
+            let mut flag = [if bad { 1.0f32 } else { 0.0 }];
+            comm.set_phase(Phase::Opt);
+            comm.all_reduce_sum(&mut flag, bucket)
+                .map_err(|e| peer_lost_abort(rank, ck.last_committed(), e))?;
+            anomaly = flag[0] > 0.0;
+        }
+        if anomaly {
+            match sen.policy {
+                AnomalyPolicy::Abort => return Err(anomaly_abort(rank, step)),
+                AnomalyPolicy::Rollback => {
+                    sen.rollbacks += 1;
+                    if sen.rollbacks > MAX_ROLLBACKS {
+                        return Err(anomaly_abort(rank, step)
+                            .context(format!("{MAX_ROLLBACKS} rollbacks exhausted")));
+                    }
+                    let back = ck.rollback(&mut params, opt.inner_mut())?;
+                    losses.truncate(back.saturating_sub(start));
+                    sen.lr_scale *= 0.5;
+                    if rank == 0 {
+                        eprintln!(
+                            "shard-train: anomaly at step {step}: rolled back to step {back} \
+                             (lr scale {})",
+                            sen.lr_scale
+                        );
+                    }
+                    step = back;
+                    continue;
+                }
+                AnomalyPolicy::Skip => {
+                    sen.skipped += 1;
+                    if rank == 0 {
+                        eprintln!(
+                            "shard-train: anomaly at step {step}: update skipped ({} so far)",
+                            sen.skipped
+                        );
+                    }
+                }
+            }
+        }
+
+        // `anomaly` can only still be true under Skip: the update is
+        // zeroed by not stepping at all, identically on every rank.
+        if !anomaly {
+            comm.set_phase(Phase::Opt);
+            let mut coll = CommCollective { comm: &mut comm, bucket, err: None };
+            opt.step_collective(&mut params, &grads, schedule.at(step) * sen.lr_scale, &mut coll);
+            if let Some(e) = coll.err {
+                return Err(peer_lost_abort(rank, ck.last_committed(), e));
+            }
         }
 
         // All-gather: every rank broadcasts its updated slice.
@@ -697,7 +909,7 @@ fn run_rank_allreduce<T: Transport>(
         if ck.save_due(step, steps) {
             comm.set_phase(Phase::Opt);
             let mut coll = CommCollective { comm: &mut comm, bucket, err: None };
-            let saved = ck.save(step + 1, &params, &opt, &mut coll);
+            let saved = ck.save(step + 1, &params, opt.inner(), &mut coll);
             if let Some(e) = coll.err {
                 // The save already explained what it abandoned; keep the
                 // typed peer loss as the root cause underneath it.
@@ -709,6 +921,7 @@ fn run_rank_allreduce<T: Transport>(
             }
             saved?;
         }
+        step += 1;
     }
 
     Ok(RankOut {
@@ -746,16 +959,24 @@ fn run_rank_reduce_scatter<T: Transport>(
     let lay = Layout::plan(part);
     let my_pieces = part.pieces(rank);
     let mut ck = RankCkpt::new(&cfg.ckpt, opt_name, part, rank);
+    ck.fault = cfg.fault.clone();
     let start = ck.resume(&mut params, &mut opt, steps)?;
+    let mut opt = Guard::new(opt, cfg.clip_update, cfg.sentinel);
+    let mut sen = Sentinel::new(cfg);
     let mut grads: Vec<Tensor> = slots.iter().map(|s| Tensor::zeros(&s.shape)).collect();
     let mut flat = vec![0.0f32; total + 1];
     let mut losses = Vec::with_capacity(steps - start);
 
-    for step in start..steps {
-        let loss = replica.grad(&params, step, &mut grads);
+    let mut step = start;
+    while step < steps {
+        if let Some(f) = &cfg.fault {
+            f.begin_step(step);
+        }
+        let mut loss = replica.grad(&params, step, &mut grads);
         for (slot, g) in slots.iter().zip(&grads) {
             flat[slot.offset..slot.offset + slot.elems].copy_from_slice(g.data());
         }
+        inject_grad_faults(cfg.fault.as_deref(), step, rank, &mut loss, &mut flat[0]);
         flat[total] = loss;
         comm.set_phase(Phase::Reduce);
         comm.reduce_scatter_mean(&mut flat, &lay.segs, bucket)
@@ -763,11 +984,63 @@ fn run_rank_reduce_scatter<T: Transport>(
 
         // Only the owned slice of `flat` holds the reduced mean now.
         unpack_owned(&my_pieces, &flat, &mut grads);
-        comm.set_phase(Phase::Opt);
-        let mut coll = CommCollective { comm: &mut comm, bucket, err: None };
-        opt.step_collective(&mut params, &grads, schedule.at(step), &mut coll);
-        if let Some(e) = coll.err {
-            return Err(peer_lost_abort(rank, ck.last_committed(), e));
+
+        // Numerical sentinel: each rank can see only its owned reduced
+        // slice (plus its local loss) after the scatter, so the verdicts
+        // MUST meet in a flag reduce before anyone touches the optimizer.
+        let mut anomaly = false;
+        if cfg.sentinel {
+            let bad = loss_anomalous(loss) || !owned_grads_finite(&my_pieces, &grads);
+            let mut flag = [if bad { 1.0f32 } else { 0.0 }];
+            comm.set_phase(Phase::Opt);
+            comm.all_reduce_sum(&mut flag, bucket)
+                .map_err(|e| peer_lost_abort(rank, ck.last_committed(), e))?;
+            anomaly = flag[0] > 0.0;
+        }
+        if anomaly {
+            match sen.policy {
+                AnomalyPolicy::Abort => return Err(anomaly_abort(rank, step)),
+                AnomalyPolicy::Rollback => {
+                    sen.rollbacks += 1;
+                    if sen.rollbacks > MAX_ROLLBACKS {
+                        return Err(anomaly_abort(rank, step)
+                            .context(format!("{MAX_ROLLBACKS} rollbacks exhausted")));
+                    }
+                    let back = ck.rollback(&mut params, opt.inner_mut())?;
+                    losses.truncate(back.saturating_sub(start));
+                    sen.lr_scale *= 0.5;
+                    if rank == 0 {
+                        eprintln!(
+                            "shard-train: anomaly at step {step}: rolled back to step {back} \
+                             (lr scale {})",
+                            sen.lr_scale
+                        );
+                    }
+                    step = back;
+                    continue;
+                }
+                AnomalyPolicy::Skip => {
+                    sen.skipped += 1;
+                    if rank == 0 {
+                        eprintln!(
+                            "shard-train: anomaly at step {step}: update skipped ({} so far)",
+                            sen.skipped
+                        );
+                    }
+                }
+            }
+        }
+
+        // `anomaly` can only still be true under Skip: zero the update
+        // by not stepping; the gather below still runs, so the message
+        // schedule and the loss record stay step-for-step uniform.
+        if !anomaly {
+            comm.set_phase(Phase::Opt);
+            let mut coll = CommCollective { comm: &mut comm, bucket, err: None };
+            opt.step_collective(&mut params, &grads, schedule.at(step) * sen.lr_scale, &mut coll);
+            if let Some(e) = coll.err {
+                return Err(peer_lost_abort(rank, ck.last_committed(), e));
+            }
         }
 
         comm.set_phase(Phase::Gather);
@@ -784,7 +1057,7 @@ fn run_rank_reduce_scatter<T: Transport>(
         if ck.save_due(step, steps) {
             comm.set_phase(Phase::Opt);
             let mut coll = CommCollective { comm: &mut comm, bucket, err: None };
-            let saved = ck.save(step + 1, &params, &opt, &mut coll);
+            let saved = ck.save(step + 1, &params, opt.inner(), &mut coll);
             if let Some(e) = coll.err {
                 let err = peer_lost_abort(rank, ck.last_committed(), e);
                 return Err(match saved {
@@ -794,6 +1067,7 @@ fn run_rank_reduce_scatter<T: Transport>(
             }
             saved?;
         }
+        step += 1;
     }
 
     Ok(RankOut {
@@ -944,7 +1218,9 @@ fn run_rank_overlap<T: Transport>(
     // Resume before the comm thread exists: pure local file reads, no
     // collective involved.
     let mut ck = RankCkpt::new(&cfg.ckpt, opt_name, part, rank);
+    ck.fault = cfg.fault.clone();
     let start = ck.resume(&mut params, &mut opt, steps)?;
+    let mut opt = Guard::new(opt, cfg.clip_update, cfg.sentinel);
     let mut grads: Vec<Tensor> = slots.iter().map(|s| Tensor::zeros(&s.shape)).collect();
     let mut losses = Vec::with_capacity(steps - start);
 
@@ -986,8 +1262,25 @@ fn run_rank_overlap<T: Transport>(
             // pools; these outer containers are reset in place).
             let mut remaining = vec![0usize; lay.segs.len()];
             let mut staging: Vec<Vec<f32>> = vec![Vec::new(); lay.segs.len()];
+            let mut sen = Sentinel::new(cfg);
 
-            for step in start..steps {
+            let mut step = start;
+            while step < steps {
+                if let Some(f) = &cfg.fault {
+                    f.begin_step(step);
+                }
+                // Gradient poisoning must land in the staging copies (the
+                // segments ship mid-backward); the ready callback plants
+                // it on the first element of the first tensor.
+                let poison: Option<f32> = cfg.fault.as_deref().and_then(|f| {
+                    if f.fire_at(FaultKind::Nan, step, rank) {
+                        Some(f32::NAN)
+                    } else if f.fire_at(FaultKind::Inf, step, rank) {
+                        Some(f32::INFINITY)
+                    } else {
+                        None
+                    }
+                });
                 remaining.copy_from_slice(&lay.pieces_in_seg);
                 for (si, seg) in lay.segs.iter().enumerate() {
                     staging[si] = if lay.pieces_in_seg[si] > 0 {
@@ -1004,7 +1297,7 @@ fn run_rank_overlap<T: Transport>(
                     };
                 }
 
-                let loss = {
+                let mut loss = {
                     let staging = &mut staging;
                     let remaining = &mut remaining;
                     let cmd = &cmd_tx;
@@ -1018,6 +1311,11 @@ fn run_rank_overlap<T: Transport>(
                         for pc in &lay.tensor_pieces[i] {
                             staging[pc.seg][pc.seg_off..pc.seg_off + pc.local.len()]
                                 .copy_from_slice(&g[pc.local.clone()]);
+                            if i == 0 && pc.local.start == 0 {
+                                if let Some(v) = poison {
+                                    staging[pc.seg][pc.seg_off] = v;
+                                }
+                            }
                             remaining[pc.seg] -= 1;
                             if remaining[pc.seg] == 0 {
                                 let data = std::mem::take(&mut staging[pc.seg]);
@@ -1027,6 +1325,11 @@ fn run_rank_overlap<T: Transport>(
                     };
                     replica.grad_streaming(&params, step, &mut grads, &mut ready)
                 };
+                if let Some(f) = cfg.fault.as_deref() {
+                    if f.fire_at(FaultKind::Spike, step, rank) {
+                        loss += 1e30;
+                    }
+                }
                 debug_assert!(
                     remaining.iter().all(|&r| r == 0),
                     "replica did not report every tensor ready"
@@ -1063,9 +1366,67 @@ fn run_rank_overlap<T: Transport>(
                         }
                     }
                 }
-                opt.step_collective(&mut params, &grads, schedule.at(step), &mut coll);
-                if let Some(e) = coll.err.take() {
-                    return Err(peer_lost_abort(rank, ck.last_committed(), e));
+                // Numerical sentinel: the flag reduce rides the comm
+                // thread in command order, exactly like the optimizer's
+                // own collectives, so every rank reaches the same verdict
+                // before anyone steps.
+                let mut anomaly = false;
+                if cfg.sentinel {
+                    let bad = loss_anomalous(loss) || !owned_grads_finite(&my_pieces, &grads);
+                    let mut flag = [if bad { 1.0f32 } else { 0.0 }];
+                    coll.all_reduce_sum(&mut flag);
+                    if let Some(e) = coll.err.take() {
+                        return Err(peer_lost_abort(rank, ck.last_committed(), e));
+                    }
+                    anomaly = flag[0] > 0.0;
+                }
+                if anomaly {
+                    match sen.policy {
+                        AnomalyPolicy::Abort => return Err(anomaly_abort(rank, step)),
+                        AnomalyPolicy::Rollback => {
+                            sen.rollbacks += 1;
+                            if sen.rollbacks > MAX_ROLLBACKS {
+                                return Err(anomaly_abort(rank, step)
+                                    .context(format!("{MAX_ROLLBACKS} rollbacks exhausted")));
+                            }
+                            let back = ck.rollback(&mut params, opt.inner_mut())?;
+                            losses.truncate(back.saturating_sub(start));
+                            sen.lr_scale *= 0.5;
+                            if rank == 0 {
+                                eprintln!(
+                                    "shard-train: anomaly at step {step}: rolled back to step \
+                                     {back} (lr scale {})",
+                                    sen.lr_scale
+                                );
+                            }
+                            step = back;
+                            continue;
+                        }
+                        AnomalyPolicy::Skip => {
+                            sen.skipped += 1;
+                            if rank == 0 {
+                                eprintln!(
+                                    "shard-train: anomaly at step {step}: update skipped \
+                                     ({} so far)",
+                                    sen.skipped
+                                );
+                            }
+                        }
+                    }
+                }
+                // `anomaly` can only still be true under Skip: no step,
+                // but the gather below still runs so the message schedule
+                // and the loss record stay uniform across ranks.
+                if !anomaly {
+                    opt.step_collective(
+                        &mut params,
+                        &grads,
+                        schedule.at(step) * sen.lr_scale,
+                        &mut coll,
+                    );
+                    if let Some(e) = coll.err.take() {
+                        return Err(peer_lost_abort(rank, ck.last_committed(), e));
+                    }
                 }
                 // Recycle-class responses that raced the optimizer's
                 // collective round-trips.
@@ -1106,7 +1467,7 @@ fn run_rank_overlap<T: Transport>(
                 if ck.save_due(step, steps) {
                     // the barriers ride the comm thread in command order, so
                     // the commit protocol is identical to the sync pipelines
-                    let saved = ck.save(step + 1, &params, &opt, &mut coll);
+                    let saved = ck.save(step + 1, &params, opt.inner(), &mut coll);
                     if let Some(e) = coll.err.take() {
                         let err = peer_lost_abort(rank, ck.last_committed(), e);
                         return Err(match saved {
@@ -1116,6 +1477,7 @@ fn run_rank_overlap<T: Transport>(
                     }
                     saved?;
                 }
+                step += 1;
             }
             Ok(())
         })();
@@ -1296,8 +1658,17 @@ mod tests {
         let sched = Schedule::Constant { eta0: 5e-3 };
         let ranks = 4;
         let run = |pipeline| {
-            let cfg =
-                ShardConfig { ranks, bucket_kb: 1, steps: 6, pipeline, ..ShardConfig::default() };
+            // sentinel off: its per-step flag reduce rides the opt phase
+            // and would obscure the "sgd has no optimizer collective"
+            // accounting this test pins down.
+            let cfg = ShardConfig {
+                ranks,
+                bucket_kb: 1,
+                steps: 6,
+                pipeline,
+                sentinel: false,
+                ..ShardConfig::default()
+            };
             train(&task, "sgd", &sched, &cfg).expect("train")
         };
         let ar = run(Pipeline::AllReduce);
@@ -1481,5 +1852,122 @@ mod tests {
                 pipeline.name()
             );
         }
+    }
+
+    /// The invariance task: replicated batches + quantized gradients
+    /// make the reduced gradient bit-identical at every rank count, so
+    /// the sentinel's verdict — and a skipped step's effect — must be
+    /// too.
+    fn invariant_task(seed: u64) -> MlpTask {
+        MlpTask::new(6, 20, 1, 2, 12, 12, seed).with_replicated_batch().with_quantized_grads()
+    }
+
+    #[test]
+    fn skipped_anomaly_step_is_rank_count_and_pipeline_invariant() {
+        let task = invariant_task(17);
+        let sched = Schedule::Constant { eta0: 5e-3 };
+        let run = |ranks, pipeline| {
+            let plan = Arc::new(FaultPlan::parse("nan@2", 7).expect("spec"));
+            let cfg = ShardConfig {
+                ranks,
+                bucket_kb: 1,
+                steps: 6,
+                pipeline,
+                fault: Some(plan.clone()),
+                ..ShardConfig::default()
+            };
+            let out = train(&task, "alada", &sched, &cfg).expect("train");
+            assert!(plan.events()[0].fired(), "the NaN injection must actually land");
+            out
+        };
+        let base = run(1, Pipeline::ReduceScatter);
+        assert_eq!(base.losses.len(), 6, "a skipped step still counts and records its loss");
+        for (ranks, pipeline) in
+            [(2, Pipeline::ReduceScatter), (3, Pipeline::AllReduce), (3, Pipeline::Overlap)]
+        {
+            let out = run(ranks, pipeline);
+            for (ta, tb) in out.params.iter().zip(&base.params) {
+                for (x, y) in ta.data().iter().zip(tb.data()) {
+                    assert_eq!(
+                        x.to_bits(),
+                        y.to_bits(),
+                        "{} ranks / {}",
+                        ranks,
+                        pipeline.name()
+                    );
+                }
+            }
+        }
+        // The skip really zeroed an update: a clean run ends elsewhere.
+        let clean_cfg =
+            ShardConfig { ranks: 1, bucket_kb: 1, steps: 6, ..ShardConfig::default() };
+        let clean = train(&task, "alada", &sched, &clean_cfg).expect("train");
+        assert_ne!(clean.params, base.params);
+    }
+
+    #[test]
+    fn abort_policy_errors_without_a_transport_root_cause() {
+        let task = invariant_task(23);
+        for pipeline in [Pipeline::AllReduce, Pipeline::ReduceScatter, Pipeline::Overlap] {
+            let cfg = ShardConfig {
+                ranks: 2,
+                bucket_kb: 1,
+                steps: 5,
+                pipeline,
+                on_anomaly: AnomalyPolicy::Abort,
+                fault: Some(Arc::new(FaultPlan::parse("spike@1:1", 3).expect("spec"))),
+                ..ShardConfig::default()
+            };
+            let err = train(&task, "sgd", &Schedule::Constant { eta0: 1e-2 }, &cfg)
+                .expect_err(pipeline.name());
+            assert!(
+                format!("{err:#}").contains("numerical anomaly at step 1"),
+                "{}: {err:#}",
+                pipeline.name()
+            );
+            // A healthy mesh must not look retryable to a supervisor.
+            assert!(
+                err.root_cause().downcast_ref::<TransportError>().is_none(),
+                "{}: anomaly abort must not be classified as a peer loss",
+                pipeline.name()
+            );
+        }
+    }
+
+    #[test]
+    fn rollback_restores_the_last_commit_and_survives_the_run() {
+        let dir = std::env::temp_dir().join("alada_engine_rollback");
+        let _ = std::fs::remove_dir_all(&dir);
+        let task = invariant_task(29);
+        let cfg = ShardConfig {
+            ranks: 2,
+            bucket_kb: 1,
+            steps: 8,
+            ckpt: CkptConfig::new(dir.to_str(), 2, None),
+            on_anomaly: AnomalyPolicy::Rollback,
+            fault: Some(Arc::new(FaultPlan::parse("inf@5", 3).expect("spec"))),
+            ..ShardConfig::default()
+        };
+        let out =
+            train(&task, "alada", &Schedule::Constant { eta0: 5e-3 }, &cfg).expect("train");
+        // The poisoned step was rolled back (to the step-4 commit) and
+        // re-run clean: the record is full-length and fully finite.
+        assert_eq!(out.losses.len(), 8);
+        assert!(out.losses.iter().all(|l| l.is_finite()));
+        let _ = std::fs::remove_dir_all(&dir);
+
+        // Rollback without any committed checkpoint has nowhere to go:
+        // the run must abort with a clear error, not hang or loop.
+        let cfg = ShardConfig {
+            ranks: 2,
+            bucket_kb: 1,
+            steps: 4,
+            on_anomaly: AnomalyPolicy::Rollback,
+            fault: Some(Arc::new(FaultPlan::parse("nan@1", 3).expect("spec"))),
+            ..ShardConfig::default()
+        };
+        let err = train(&task, "alada", &Schedule::Constant { eta0: 5e-3 }, &cfg)
+            .expect_err("rollback with no commit");
+        assert!(format!("{err:#}").contains("no checkpoint"), "{err:#}");
     }
 }

@@ -1,0 +1,252 @@
+//! Deterministic fault injection for the shard engine.
+//!
+//! Every guard this crate ships — wire checksums, numerical sentinels,
+//! torn-save detection, supervised restart — is only trustworthy if it
+//! can be exercised on demand, reproducibly, in CI. A [`FaultPlan`] is a
+//! parsed `--inject SPEC` schedule of faults pinned to exact
+//! (kind, step, rank) coordinates:
+//!
+//! ```text
+//! SPEC   := EVENT ("," EVENT)*
+//! EVENT  := KIND "@" STEP [":" RANK]        (RANK defaults to 0)
+//! KIND   := "flip" | "nan" | "inf" | "spike" | "torn"
+//! ```
+//!
+//! * `flip`  — flip one seeded-random bit of an outgoing TCP frame's
+//!   payload *after* its checksum was computed, so the receiver must
+//!   detect it ([`TransportError::Corrupt`](super::TransportError));
+//! * `nan` / `inf` — overwrite the first element of the rank's packed
+//!   local gradient with NaN / +Inf before the reduce, so the reduced
+//!   buffer trips the engine's finite sentinel on every rank;
+//! * `spike` — add 1e30 to the rank's local loss, tripping the loss cap;
+//! * `torn`  — truncate the rank's checkpoint slice file right after it
+//!   was written, before the commit barrier, simulating a crash mid-write.
+//!
+//! Each event fires **exactly once** (an atomic latch) and only on an
+//! **exact** step match. Exactness is load-bearing for the supervised
+//! restart story: after a `flip` unwinds the mesh and `--supervise`
+//! resumes from the last committed checkpoint, the resumed run starts
+//! *past* the event step, so a `>=` match would re-fire forever while an
+//! exact match never re-triggers — the chaos run converges to the same
+//! bytes as a clean run. (The corrupting process itself survives a
+//! `Corrupt` unwind — nobody dies, all ranks re-join — so its in-process
+//! latch also stays spent.)
+//!
+//! The plan is shared as `Arc<FaultPlan>` across the engine, transport,
+//! and checkpoint writer. Engine/checkpoint call sites know their own
+//! (step, rank) and use [`FaultPlan::fire_at`]; the TCP transport sits
+//! below the step loop, so the engine publishes the current step via
+//! [`FaultPlan::begin_step`] and the transport calls
+//! [`FaultPlan::fire_wire`]. That published step is per-process state:
+//! under TCP one process is one rank, so it is exact; in-process meshes
+//! never consult it (InProc moves buffers by ownership and has no frames
+//! to corrupt).
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+
+use crate::util::Rng;
+
+/// What to break. See the module docs for per-kind semantics.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Flip one bit of an outgoing TCP frame payload (post-checksum).
+    Flip,
+    /// Poison the local gradient with a NaN before the reduce.
+    Nan,
+    /// Poison the local gradient with +Inf before the reduce.
+    Inf,
+    /// Add 1e30 to the local loss (finite, but past the loss cap).
+    Spike,
+    /// Truncate the just-written checkpoint slice (torn save).
+    Torn,
+}
+
+impl FaultKind {
+    fn parse(s: &str) -> Option<FaultKind> {
+        Some(match s {
+            "flip" => FaultKind::Flip,
+            "nan" => FaultKind::Nan,
+            "inf" => FaultKind::Inf,
+            "spike" => FaultKind::Spike,
+            "torn" => FaultKind::Torn,
+            _ => return None,
+        })
+    }
+
+    /// Spec-grammar name (inverse of parsing).
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultKind::Flip => "flip",
+            FaultKind::Nan => "nan",
+            FaultKind::Inf => "inf",
+            FaultKind::Spike => "spike",
+            FaultKind::Torn => "torn",
+        }
+    }
+}
+
+/// One scheduled fault: fire `kind` at exactly (`step`, `rank`), once.
+#[derive(Debug)]
+pub struct FaultEvent {
+    pub kind: FaultKind,
+    pub step: usize,
+    pub rank: usize,
+    fired: AtomicBool,
+}
+
+impl FaultEvent {
+    /// Whether this event has already fired.
+    pub fn fired(&self) -> bool {
+        self.fired.load(Ordering::Relaxed)
+    }
+}
+
+/// A parsed, seeded injection schedule. Cheap to consult (a handful of
+/// events, scanned linearly) and safe to share across rank threads.
+#[derive(Debug)]
+pub struct FaultPlan {
+    events: Vec<FaultEvent>,
+    /// Step currently executing, published by the engine for call sites
+    /// below the step loop (the TCP transport). Per-process, see module
+    /// docs.
+    step: AtomicUsize,
+    seed: u64,
+}
+
+impl FaultPlan {
+    /// Parse an `--inject` spec (see module docs for the grammar). The
+    /// seed determines which bit a `flip` event flips.
+    pub fn parse(spec: &str, seed: u64) -> anyhow::Result<FaultPlan> {
+        let mut events = Vec::new();
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (kind_s, at) = part.split_once('@').ok_or_else(|| {
+                anyhow::anyhow!("inject event {part:?}: expected KIND@STEP[:RANK]")
+            })?;
+            let kind = FaultKind::parse(kind_s).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "inject event {part:?}: unknown kind {kind_s:?} (want flip|nan|inf|spike|torn)"
+                )
+            })?;
+            let (step_s, rank_s) = match at.split_once(':') {
+                Some((s, r)) => (s, Some(r)),
+                None => (at, None),
+            };
+            let step: usize = step_s
+                .parse()
+                .map_err(|_| anyhow::anyhow!("inject event {part:?}: bad step {step_s:?}"))?;
+            let rank: usize = match rank_s {
+                Some(r) => r
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("inject event {part:?}: bad rank {r:?}"))?,
+                None => 0,
+            };
+            events.push(FaultEvent { kind, step, rank, fired: AtomicBool::new(false) });
+        }
+        if events.is_empty() {
+            anyhow::bail!("inject spec {spec:?} contains no events");
+        }
+        Ok(FaultPlan { events, step: AtomicUsize::new(usize::MAX), seed })
+    }
+
+    /// The scheduled events (fired or not), for reporting and tests.
+    pub fn events(&self) -> &[FaultEvent] {
+        &self.events
+    }
+
+    /// Publish the step about to execute. The engine calls this at the
+    /// top of every step so transports (which sit below the step loop)
+    /// can match `flip` events.
+    pub fn begin_step(&self, step: usize) {
+        self.step.store(step, Ordering::Relaxed);
+    }
+
+    /// Fire-once check for call sites that know their own coordinates
+    /// (engine gradient/loss injection, checkpoint torn writes). Returns
+    /// true exactly once per matching event.
+    pub fn fire_at(&self, kind: FaultKind, step: usize, rank: usize) -> bool {
+        self.events.iter().any(|e| {
+            e.kind == kind
+                && e.step == step
+                && e.rank == rank
+                && e
+                    .fired
+                    .compare_exchange(false, true, Ordering::Relaxed, Ordering::Relaxed)
+                    .is_ok()
+        })
+    }
+
+    /// Fire-once check for the wire layer: matches a `flip` event against
+    /// the engine-published current step and the sending rank. Returns
+    /// the seeded bit index to flip within a payload of `payload_len`
+    /// bytes, or None.
+    pub fn fire_wire(&self, rank: usize, payload_len: usize) -> Option<usize> {
+        if payload_len == 0 {
+            return None;
+        }
+        let step = self.step.load(Ordering::Relaxed);
+        if step == usize::MAX || !self.fire_at(FaultKind::Flip, step, rank) {
+            return None;
+        }
+        let mut rng = Rng::new(self.seed ^ ((step as u64) << 20) ^ rank as u64);
+        Some(rng.below_usize(payload_len * 8))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_grammar() {
+        let p = FaultPlan::parse("flip@3:1, nan@5, spike@7:2,torn@9", 42).unwrap();
+        let ev = p.events();
+        assert_eq!(ev.len(), 4);
+        assert_eq!((ev[0].kind, ev[0].step, ev[0].rank), (FaultKind::Flip, 3, 1));
+        assert_eq!((ev[1].kind, ev[1].step, ev[1].rank), (FaultKind::Nan, 5, 0));
+        assert_eq!((ev[2].kind, ev[2].step, ev[2].rank), (FaultKind::Spike, 7, 2));
+        assert_eq!((ev[3].kind, ev[3].step, ev[3].rank), (FaultKind::Torn, 9, 0));
+        for k in ["flip", "nan", "inf", "spike", "torn"] {
+            assert_eq!(FaultKind::parse(k).unwrap().name(), k);
+        }
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        for bad in ["", "nan", "nan@x", "nan@3:y", "frob@3", "@3"] {
+            assert!(FaultPlan::parse(bad, 0).is_err(), "spec {bad:?} should be rejected");
+        }
+    }
+
+    #[test]
+    fn fires_exactly_once_on_exact_match() {
+        let p = FaultPlan::parse("nan@5:1", 0).unwrap();
+        assert!(!p.fire_at(FaultKind::Nan, 4, 1), "step below: no fire");
+        assert!(!p.fire_at(FaultKind::Nan, 6, 1), "step above: exact match only");
+        assert!(!p.fire_at(FaultKind::Nan, 5, 0), "wrong rank");
+        assert!(!p.fire_at(FaultKind::Inf, 5, 1), "wrong kind");
+        assert!(p.fire_at(FaultKind::Nan, 5, 1));
+        assert!(!p.fire_at(FaultKind::Nan, 5, 1), "one-shot latch");
+        assert!(p.events()[0].fired());
+    }
+
+    #[test]
+    fn wire_flip_rides_published_step_and_is_seed_deterministic() {
+        let p = FaultPlan::parse("flip@2:1", 9).unwrap();
+        assert_eq!(p.fire_wire(1, 64), None, "no step published yet");
+        p.begin_step(1);
+        assert_eq!(p.fire_wire(1, 64), None, "wrong step");
+        p.begin_step(2);
+        assert_eq!(p.fire_wire(0, 64), None, "wrong rank");
+        let bit = p.fire_wire(1, 64).expect("fires at exact (step, rank)");
+        assert!(bit < 64 * 8);
+        assert_eq!(p.fire_wire(1, 64), None, "one-shot");
+
+        let q = FaultPlan::parse("flip@2:1", 9).unwrap();
+        q.begin_step(2);
+        assert_eq!(q.fire_wire(1, 64), Some(bit), "same seed, same bit");
+    }
+}

@@ -48,15 +48,24 @@
 //!   chunk-aligned cuts, byte-exactly (rust/tests/elastic_resume.rs);
 //! * failures are survivable: a dead or wedged peer surfaces as a typed
 //!   `TransportError::PeerLost` on every surviving rank (read/write
-//!   deadlines on TCP, disconnected channels in-process) and the engine
-//!   unwinds all pipelines to a clean `Err` naming the last committed
-//!   checkpoint — never a hang — so a supervisor can re-rendezvous the
-//!   survivors (`Tcp::join`/`Tcp::supervise_join`) and auto-resume at
-//!   the new world size (rust/tests/fault_tolerance.rs).
+//!   deadlines on TCP, disconnected channels in-process), a corrupted
+//!   TCP frame as `TransportError::Corrupt` (FNV-1a payload checksum in
+//!   every frame header), and the engine unwinds all pipelines to a
+//!   clean `Err` naming the last committed checkpoint — never a hang —
+//!   so a supervisor can re-rendezvous the survivors
+//!   (`Tcp::join`/`Tcp::supervise_join`) and auto-resume at the new
+//!   world size (rust/tests/fault_tolerance.rs);
+//! * numerics are guarded: every reduced gradient buffer and the loss
+//!   pass a fused finite sentinel each step; an anomaly reaches a
+//!   deterministic rank-invariant skip/rollback/abort decision by riding
+//!   a flag on the opt-phase collective, so the mesh never splits
+//!   (`engine::AnomalyPolicy`), and a seeded `fault::FaultPlan`
+//!   (`--inject`) makes every one of these guards reproducibly testable.
 
 pub mod ckpt;
 pub mod collective;
 pub mod engine;
+pub mod fault;
 pub mod mlp;
 pub mod partition;
 pub mod transport;
@@ -64,9 +73,10 @@ pub mod transport;
 pub use ckpt::{CkptConfig, SHARD_ARTIFACT};
 pub use collective::{mesh, BytesMeter, Comm, Phase, Seg};
 pub use engine::{
-    train, train_rank, train_with_comms, Pipeline, RankOutcome, Replica, ShardConfig,
-    ShardOutcome, ShardTask,
+    train, train_rank, train_with_comms, AnomalyPolicy, Pipeline, RankOutcome, Replica,
+    ShardConfig, ShardOutcome, ShardTask,
 };
+pub use fault::{FaultKind, FaultPlan};
 pub use mlp::MlpTask;
 pub use partition::{plan_reshard, Partition, Piece, StateCopy};
 pub use transport::{InProc, Tcp, TcpOpts, Transport, TransportError};

@@ -49,8 +49,11 @@ pub use inproc::InProc;
 pub use tcp::{Tcp, TcpOpts};
 
 /// A runtime transport failure. Setup-time errors stay `anyhow` on the
-/// constructors; once a mesh is live the ONLY failure mode is losing a
-/// peer, and it must resolve within the backend's deadline — never hang.
+/// constructors; once a mesh is live the failure modes are losing a
+/// peer or receiving provably corrupt bytes from one, and both must
+/// resolve within the backend's deadline — never hang. Every variant is
+/// retryable under `--supervise`: the engine unwinds to the last
+/// committed checkpoint and the supervisor re-rendezvouses.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum TransportError {
     /// The stream/channel to `rank` failed (peer died, reset the
@@ -58,14 +61,22 @@ pub enum TransportError {
     /// collective phase in flight ("reduce", "gather", "opt") once the
     /// algebra has attributed it; raw transport calls leave it empty.
     PeerLost { rank: usize, phase: &'static str },
+    /// A frame from `rank` arrived with a checksum mismatch: the bytes
+    /// on the wire are not the bytes the peer framed (flipped bit,
+    /// truncated write, middlebox damage). Training on them would poison
+    /// every replica silently, so the stream is poisoned and the engine
+    /// unwinds exactly like a peer loss — detection within one frame,
+    /// recovery from the last committed checkpoint.
+    Corrupt { rank: usize, phase: &'static str },
 }
 
 impl TransportError {
-    /// Attribute the loss to a collective phase (the algebra rewrites
+    /// Attribute the failure to a collective phase (the algebra rewrites
     /// the transport's empty tag with the phase it was executing).
     pub fn in_phase(self, phase: &'static str) -> TransportError {
         match self {
             TransportError::PeerLost { rank, .. } => TransportError::PeerLost { rank, phase },
+            TransportError::Corrupt { rank, .. } => TransportError::Corrupt { rank, phase },
         }
     }
 
@@ -76,6 +87,7 @@ impl TransportError {
     pub fn lost_rank(&self) -> usize {
         match self {
             TransportError::PeerLost { rank, .. } => *rank,
+            TransportError::Corrupt { rank, .. } => *rank,
         }
     }
 }
@@ -88,6 +100,12 @@ impl std::fmt::Display for TransportError {
             }
             TransportError::PeerLost { rank, phase } => {
                 write!(f, "lost contact with rank {rank} during {phase} (peer died or timed out)")
+            }
+            TransportError::Corrupt { rank, phase } if phase.is_empty() => {
+                write!(f, "corrupt frame from rank {rank} (checksum mismatch)")
+            }
+            TransportError::Corrupt { rank, phase } => {
+                write!(f, "corrupt frame from rank {rank} during {phase} (checksum mismatch)")
             }
         }
     }

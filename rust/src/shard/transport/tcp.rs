@@ -2,13 +2,23 @@
 //!
 //! This is the backend that takes the shard engine past one OS process
 //! (and, with routable addresses, past one machine). The wire format is
-//! deliberately tiny: every message is `[u32 LE element count][elements
-//! as f32 LE]` on a dedicated stream for its ordered (src → dst) rank
-//! pair, so TCP's byte-stream ordering IS the per-pair FIFO the
-//! collective algebra requires — no tags, no sequence numbers. f32 bit
-//! patterns round-trip exactly through `to_le_bytes`/`from_le_bytes`
-//! (non-finite values included), which is what keeps a TCP run
-//! byte-identical to an in-process run.
+//! deliberately tiny: every message is `[u32 LE element count][u64 LE
+//! FNV-1a of the payload bytes][elements as f32 LE]` on a dedicated
+//! stream for its ordered (src → dst) rank pair, so TCP's byte-stream
+//! ordering IS the per-pair FIFO the collective algebra requires — no
+//! tags, no sequence numbers. f32 bit patterns round-trip exactly
+//! through `to_le_bytes`/`from_le_bytes` (non-finite values included),
+//! which is what keeps a TCP run byte-identical to an in-process run.
+//!
+//! The checksum exists because TCP's own 16-bit checksum is famously
+//! porous (middleboxes, buggy offload engines) and a single flipped bit
+//! in a gradient frame would silently poison every replica: the receiver
+//! re-hashes the payload and a mismatch poisons the stream and surfaces
+//! as a typed [`TransportError::Corrupt`] — detection within one frame,
+//! the engine unwinds to its last committed checkpoint, and the
+//! supervisor treats it exactly like a peer loss (retryable). The
+//! in-process backend stays checksum-free: it moves `Vec` allocations by
+//! ownership, no bytes are ever re-encoded.
 //!
 //! Setup is a rank-0 rendezvous: every rank binds a listener, ranks
 //! 1..N dial rank 0 and register their listen address, and rank 0
@@ -38,14 +48,20 @@
 
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, ensure, Context, Result};
 
 use super::{Transport, TransportError};
+use crate::shard::fault::FaultPlan;
+use crate::train::checkpoint::Fnv;
 
 /// Hello magic ("ALAD") — guards the mesh against stray connections.
 const MAGIC: u32 = 0x414c_4144;
+/// Frame header size: `[u32 LE element count][u64 LE FNV-1a payload
+/// checksum]`, followed by the f32 LE payload.
+const HDR: usize = 12;
 /// Hello purpose: a rendezvous registration (rank + listen address).
 const PURPOSE_RENDEZVOUS: u8 = 0;
 /// Hello purpose: the inbound half of an ordered-pair mesh stream
@@ -95,6 +111,10 @@ pub struct Tcp {
     /// Frame staging (encode on send, landing zone on receive) — reused
     /// across messages so the steady state is allocation-free.
     wire: Vec<u8>,
+    /// Optional fault injection (`--inject flip@STEP:RANK`): corrupts one
+    /// bit of an outgoing payload *after* its checksum was computed, so
+    /// the receiver must catch it.
+    fault: Option<Arc<FaultPlan>>,
 }
 
 impl Tcp {
@@ -179,7 +199,13 @@ impl Tcp {
 
     /// The trivial single-rank mesh (no sockets at all).
     fn solo(rank: usize) -> Tcp {
-        Tcp { rank, ranks: 1, out: vec![None], inc: vec![None], wire: Vec::new() }
+        Tcp { rank, ranks: 1, out: vec![None], inc: vec![None], wire: Vec::new(), fault: None }
+    }
+
+    /// Arm deterministic fault injection on this endpoint (`flip` events
+    /// corrupt outgoing frames — see [`FaultPlan`]).
+    pub fn set_fault_plan(&mut self, plan: Arc<FaultPlan>) {
+        self.fault = Some(plan);
     }
 
     /// Re-join a supervised job after this rank's mesh died: bind a
@@ -398,8 +424,20 @@ impl Transport for Tcp {
         assert!(to != self.rank, "tcp send to self (collective bug)");
         self.wire.clear();
         self.wire.extend_from_slice(&(msg.len() as u32).to_le_bytes());
+        self.wire.extend_from_slice(&[0u8; 8]); // checksum slot, patched below
+        let mut ck = Fnv::new();
         for x in &msg {
-            self.wire.extend_from_slice(&x.to_le_bytes());
+            let b = x.to_le_bytes();
+            ck.update(&b);
+            self.wire.extend_from_slice(&b);
+        }
+        self.wire[4..HDR].copy_from_slice(&ck.finish().to_le_bytes());
+        // Injection point: a scheduled `flip` corrupts one payload bit
+        // AFTER the checksum was stamped, so the receiver must detect it.
+        if let Some(plan) = &self.fault {
+            if let Some(bit) = plan.fire_wire(self.rank, self.wire.len() - HDR) {
+                self.wire[HDR + bit / 8] ^= 1 << (bit % 8);
+            }
         }
         // One write_all per frame: the header travels with the payload,
         // and NODELAY flushes the segment immediately. Any failure —
@@ -422,7 +460,7 @@ impl Transport for Tcp {
         if self.inc[from].is_none() {
             return Err(lost);
         }
-        let mut hdr = [0u8; 4];
+        let mut hdr = [0u8; HDR];
         if self.inc[from].as_mut().expect("checked").read_exact(&mut hdr).is_err() {
             // EOF/RST (peer died) or the progress read deadline passed
             // (peer wedged): either way the pair is unusable — a timed
@@ -430,11 +468,23 @@ impl Transport for Tcp {
             self.inc[from] = None;
             return Err(lost);
         }
-        let n = u32::from_le_bytes(hdr) as usize;
+        let n = u32::from_le_bytes([hdr[0], hdr[1], hdr[2], hdr[3]]) as usize;
+        let want = u64::from_le_bytes(hdr[4..HDR].try_into().expect("8-byte checksum slot"));
         self.wire.resize(4 * n, 0);
         if self.inc[from].as_mut().expect("checked").read_exact(&mut self.wire).is_err() {
             self.inc[from] = None;
             return Err(lost);
+        }
+        let mut ck = Fnv::new();
+        ck.update(&self.wire);
+        if ck.finish() != want {
+            // The bytes we got are not the bytes the peer framed. The
+            // stream itself is still ordered, but this frame's contents
+            // are garbage and the collective that consumed it cannot be
+            // repaired mid-flight — poison the pair so the whole mesh
+            // unwinds and the supervisor restarts from the last commit.
+            self.inc[from] = None;
+            return Err(TransportError::Corrupt { rank: from, phase: "" });
         }
         buf.clear();
         buf.reserve(n);
@@ -516,7 +566,7 @@ fn build_mesh(
         inc[peer] = Some(s);
         pending -= 1;
     }
-    Ok(Tcp { rank, ranks, out, inc, wire: Vec::new() })
+    Ok(Tcp { rank, ranks, out, inc, wire: Vec::new(), fault: None })
 }
 
 /// Rank 0's side of the rendezvous: collect `ranks - 1` registrations,
@@ -774,6 +824,30 @@ mod tests {
             });
             assert_eq!(h.join().expect("recv thread"), want);
         });
+    }
+
+    #[test]
+    fn flipped_payload_bit_surfaces_as_corrupt_within_one_frame() {
+        let mesh = Tcp::loopback_mesh(2).expect("2-rank mesh");
+        let mut it = mesh.into_iter();
+        let (mut a, mut b) = (it.next().unwrap(), it.next().unwrap());
+        let plan = Arc::new(FaultPlan::parse("flip@0:0", 7).expect("plan"));
+        plan.begin_step(0);
+        a.set_fault_plan(plan.clone());
+        std::thread::scope(|s| {
+            s.spawn(move || {
+                a.send(1, vec![1.0, 2.0, 3.0, 4.0]).expect("the send itself succeeds");
+            });
+            let h = s.spawn(move || {
+                let mut buf = Vec::new();
+                let err = b.recv(0, &mut buf).unwrap_err();
+                assert_eq!(err, TransportError::Corrupt { rank: 0, phase: "" });
+                // The pair is poisoned: no later frame can sneak through.
+                assert!(b.recv(0, &mut buf).is_err());
+            });
+            h.join().expect("recv thread");
+        });
+        assert!(plan.events()[0].fired(), "flip event latched");
     }
 
     #[test]

@@ -22,6 +22,31 @@
 /// Accumulator lanes for reductions: 8 × f32 = one AVX2 register.
 const LANES: usize = 8;
 
+/// Fused finite scan: true iff every element is finite (no NaN/±Inf).
+/// One multiply-add pass — `x·0` is ±0 for finite x and NaN for NaN/Inf,
+/// so the lane sums stay exactly 0.0 iff nothing non-finite was seen.
+/// This is the numerical sentinel the shard engine runs over every
+/// reduced gradient buffer each step, so it must cost a fraction of the
+/// update kernels it guards (same LANES unrolling, no branches).
+#[inline]
+pub fn all_finite(x: &[f32]) -> bool {
+    let split = x.len() - x.len() % LANES;
+    let mut acc = [0.0f32; LANES];
+    for c in x[..split].chunks_exact(LANES) {
+        for l in 0..LANES {
+            acc[l] += c[l] * 0.0;
+        }
+    }
+    let mut s = 0.0f32;
+    for &l in &acc {
+        s += l;
+    }
+    for &v in &x[split..] {
+        s += v * 0.0;
+    }
+    s == 0.0
+}
+
 /// Dot product with LANES independent accumulators.
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
@@ -301,6 +326,26 @@ mod tests {
         let a: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
         let b: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
         (a, b)
+    }
+
+    #[test]
+    fn all_finite_flags_every_non_finite_class_at_any_position() {
+        for n in [0usize, 1, 7, 8, 9, 16, 31] {
+            let (clean, _) = vecs(n, 5 + n as u64);
+            assert!(all_finite(&clean), "n={n}: clean data must pass");
+            for bad in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+                for pos in [0, n / 2, n.saturating_sub(1)] {
+                    if n == 0 {
+                        continue;
+                    }
+                    let mut v = clean.clone();
+                    v[pos] = bad;
+                    assert!(!all_finite(&v), "n={n} pos={pos} bad={bad}");
+                }
+            }
+        }
+        // negative zeros and subnormals are finite
+        assert!(all_finite(&[-0.0, f32::MIN_POSITIVE / 2.0, f32::MAX, f32::MIN]));
     }
 
     #[test]

@@ -782,9 +782,11 @@ fn req_str(j: &Json, key: &str) -> Result<String> {
 }
 
 /// FNV-1a 64 — tiny, dependency-free payload checksum. Not
-/// cryptographic; it guards against truncation and torn multi-process
-/// saves, not adversaries.
-struct Fnv(u64);
+/// cryptographic; it guards against truncation, torn multi-process
+/// saves, and flipped bits (the TCP transport frames every collective
+/// payload with the same hash — shard/transport/tcp.rs), not
+/// adversaries.
+pub struct Fnv(u64);
 
 impl Default for Fnv {
     fn default() -> Fnv {
@@ -793,18 +795,18 @@ impl Default for Fnv {
 }
 
 impl Fnv {
-    fn new() -> Fnv {
+    pub fn new() -> Fnv {
         Fnv::default()
     }
 
-    fn update(&mut self, bytes: &[u8]) {
+    pub fn update(&mut self, bytes: &[u8]) {
         for &b in bytes {
             self.0 ^= b as u64;
             self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
         }
     }
 
-    fn finish(&self) -> u64 {
+    pub fn finish(&self) -> u64 {
         self.0
     }
 }

@@ -78,10 +78,18 @@ fn bench_smoke_shard() {
     // elastic-checkpoint timing: every row carries its rank count's
     // measured save/load wall time (the no-gather save path's witness)
     assert!(rows.iter().all(|r| r.save_ms > 0.0 && r.load_ms > 0.0));
+    // the numerical guardrails are cheap enough to leave on: the
+    // sentinel scan + anomaly flag reduce cost under 3% of step time
+    assert!(
+        rows.iter().all(|r| r.guard_overhead >= 0.0 && r.guard_overhead < 0.03),
+        "guardrail overhead out of range: {:?}",
+        rows.iter().map(|r| r.guard_overhead).collect::<Vec<_>>()
+    );
     let txt = std::fs::read_to_string(&path).expect("BENCH_shard json written");
     assert!(txt.contains("reduce_bytes_per_step") && txt.contains("pipeline"), "{txt}");
     assert!(txt.contains("imbalance") && txt.contains("max_rank_elems"), "{txt}");
     assert!(txt.contains("\"transport\":\"inproc\""), "{txt}");
     assert!(txt.contains("\"transport\":\"tcp\""), "{txt}");
     assert!(txt.contains("save_ms") && txt.contains("load_ms"), "{txt}");
+    assert!(txt.contains("guard_overhead"), "{txt}");
 }

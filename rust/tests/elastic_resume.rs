@@ -86,7 +86,7 @@ fn sched() -> Schedule {
 }
 
 fn cfg(ranks: usize, steps: usize, pipeline: Pipeline, ckpt: CkptConfig) -> ShardConfig {
-    ShardConfig { ranks, bucket_kb: 1, steps, pipeline, ckpt }
+    ShardConfig { ranks, bucket_kb: 1, steps, pipeline, ckpt, ..ShardConfig::default() }
 }
 
 fn fresh_dir(tag: &str) -> PathBuf {

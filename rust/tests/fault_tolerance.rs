@@ -61,9 +61,13 @@ fn dead_peer_surfaces_in_phase<T: Transport + 'static>(mesh: Vec<T>, phase: Phas
                     .all_reduce_mean(&mut buf, 16)
                     .expect_err("a dead peer must fail the collective");
                 assert!(t0.elapsed() < DETECT, "rank {me}: detection took {:?}", t0.elapsed());
-                let TransportError::PeerLost { rank, phase: got } = err;
-                assert_eq!(got, name, "rank {me}: wrong phase stamp");
-                assert_ne!(rank, me, "rank {me}: cannot lose contact with itself");
+                match err {
+                    TransportError::PeerLost { rank, phase: got } => {
+                        assert_eq!(got, name, "rank {me}: wrong phase stamp");
+                        assert_ne!(rank, me, "rank {me}: cannot lose contact with itself");
+                    }
+                    other => panic!("rank {me}: expected PeerLost, got {other}"),
+                }
             });
         }
     });
@@ -111,7 +115,10 @@ fn tcp_wedged_peer_trips_the_progress_deadline() {
                     .all_reduce_mean(&mut buf, 16)
                     .expect_err("a wedged peer must trip the deadline");
                 assert!(t0.elapsed() < DETECT, "rank {me}: detection took {:?}", t0.elapsed());
-                let TransportError::PeerLost { .. } = err;
+                assert!(
+                    matches!(err, TransportError::PeerLost { .. }),
+                    "expected PeerLost, got {err}"
+                );
                 drop(hold);
             });
         }
@@ -187,6 +194,7 @@ fn replica_death_over_tcp_aborts_every_pipeline_with_a_typed_error() {
             steps: 6,
             pipeline,
             ckpt: CkptConfig::default(),
+            ..ShardConfig::default()
         };
         let comms: Vec<Comm<Tcp>> = Tcp::loopback_mesh_opts(3, &fast_opts())
             .expect("tcp mesh")
@@ -256,6 +264,7 @@ fn crashed_run_resumes_at_survivor_count_byte_identically() {
         steps: T,
         pipeline: Pipeline::default(),
         ckpt: CkptConfig::new(dir.to_str(), EVERY, None),
+        ..ShardConfig::default()
     };
     let err = shard::train(&dying, "alada", &sched, &crash_cfg)
         .expect_err("the injected fault must abort the run");
@@ -271,6 +280,7 @@ fn crashed_run_resumes_at_survivor_count_byte_identically() {
         steps: T,
         pipeline: Pipeline::default(),
         ckpt: CkptConfig::new(None, 0, dir.to_str()),
+        ..ShardConfig::default()
     };
     let resumed = shard::train(&task, "alada", &sched, &resume_cfg).expect("resumed run");
     assert_eq!(resumed.losses.len(), T - 6, "resume must continue from step 6");
@@ -282,6 +292,7 @@ fn crashed_run_resumes_at_survivor_count_byte_identically() {
         steps: T,
         pipeline: Pipeline::default(),
         ckpt: CkptConfig::default(),
+        ..ShardConfig::default()
     };
     let full = shard::train(&task, "alada", &sched, &full_cfg).expect("uninterrupted run");
     assert_params_bit_identical(

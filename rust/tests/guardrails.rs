@@ -1,0 +1,243 @@
+//! Numerical-guardrail acceptance suite — the PR 8 contract, pinned
+//! over real TCP loopback sockets (the in-process halves live next to
+//! the engine in shard/engine.rs):
+//!
+//! 1. **Corrupt frames are typed, phase-stamped, and caught within one
+//!    frame** — a seeded `flip` fault flips one payload bit after the
+//!    sender computed the FNV-1a frame checksum; the receiver surfaces
+//!    `TransportError::Corrupt` naming the sending rank and the
+//!    collective phase in flight, for both the reduce and gather
+//!    phases.
+//! 2. **Corrupt frames unwind the engine with the retryable root
+//!    cause** — the same typed `TransportError` downcast the
+//!    `--supervise` restart loop keys off, so a wire corruption heals
+//!    exactly like a peer loss.
+//! 3. **The skip decision is rank-count- and transport-invariant** — a
+//!    NaN injected into one rank's local gradient at step k makes EVERY
+//!    rank skip that step, and the final parameters are byte-identical
+//!    across rank counts and transports (the lockstep half of the
+//!    chaos gate in scripts/check.sh).
+//! 4. **Torn checkpoint slices cannot resume** — a `torn` fault
+//!    truncates a just-written slice after its checksum was computed,
+//!    so the commit goes through but the restore path rejects the
+//!    checkpoint, naming the damaged slice file.
+
+use std::sync::Arc;
+
+use alada::shard::{
+    self, CkptConfig, Comm, FaultPlan, MlpTask, Phase, Pipeline, Seg, ShardConfig, ShardOutcome,
+    Tcp, TransportError,
+};
+use alada::optim::Schedule;
+use alada::tensor::Tensor;
+use alada::train::checkpoint::slice_file;
+
+const T: usize = 6;
+
+/// Rank-invariant gradient source: full batch on every rank + 2 low
+/// mantissa bits cleared, so tree sums of up to 4 identical
+/// contributions are exact (the same construction the elastic-resume
+/// and fault-tolerance suites build on).
+fn invariant_task(seed: u64) -> MlpTask {
+    MlpTask::new(6, 20, 1, 2, 12, 12, seed).with_replicated_batch().with_quantized_grads()
+}
+
+fn sched() -> Schedule {
+    Schedule::Diminishing { eta0: 5e-3, total: T }
+}
+
+fn assert_params_bit_identical(a: &[Tensor], b: &[Tensor], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: tensor count");
+    for (t, (ta, tb)) in a.iter().zip(b).enumerate() {
+        for (x, y) in ta.data().iter().zip(tb.data()) {
+            assert_eq!(x.to_bits(), y.to_bits(), "{what}: tensor {t}: {x} vs {y}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// 1. Corrupt frames: typed + phase-stamped, reduce AND gather
+// ---------------------------------------------------------------------
+
+/// Two-rank TCP mesh where rank 1 flips one bit of its first outgoing
+/// frame of step 0; rank 0 (the receiver in both tree shapes) must see
+/// `Corrupt { rank: 1 }` stamped with the active phase.
+fn corrupt_frame_surfaces_in_phase(phase: Phase, name: &str) {
+    let plan = Arc::new(FaultPlan::parse("flip@0:1", 11).expect("inject spec"));
+    plan.begin_step(0);
+    let mut mesh = Tcp::loopback_mesh(2).expect("tcp mesh");
+    mesh[1].set_fault_plan(plan.clone());
+    std::thread::scope(|s| {
+        for t in mesh {
+            s.spawn(move || {
+                let mut c = Comm::new(t);
+                c.set_phase(phase);
+                let me = c.rank();
+                let mut buf = vec![1.0f32; 32];
+                let segs =
+                    [Seg { owner: 0, range: 0..16 }, Seg { owner: 1, range: 16..32 }];
+                let res = match phase {
+                    Phase::Gather => c.all_gather(&mut buf, &segs, 16),
+                    _ => c.all_reduce_sum(&mut buf, 16),
+                };
+                // The corrupting sender itself may finish its sends
+                // cleanly (TCP buffers writes); only the receiver's
+                // verdict is the contract.
+                if me == 0 {
+                    let err = res.expect_err("rank 0 must reject the flipped frame");
+                    match err {
+                        TransportError::Corrupt { rank, phase: got } => {
+                            assert_eq!(rank, 1, "the corrupt frame came from rank 1");
+                            assert_eq!(got, name, "wrong phase stamp");
+                        }
+                        other => panic!("expected Corrupt, got {other}"),
+                    }
+                }
+            });
+        }
+    });
+    assert!(plan.events()[0].fired(), "the flip event must have fired");
+}
+
+#[test]
+fn flipped_frame_is_corrupt_in_reduce_and_gather_phases() {
+    corrupt_frame_surfaces_in_phase(Phase::Reduce, "reduce");
+    corrupt_frame_surfaces_in_phase(Phase::Gather, "gather");
+}
+
+// ---------------------------------------------------------------------
+// 2. Engine unwind: a flip mid-run aborts with the retryable root cause
+// ---------------------------------------------------------------------
+
+#[test]
+fn corrupt_frame_mid_run_unwinds_with_the_supervisable_root_cause() {
+    let task = invariant_task(61);
+    let plan = Arc::new(FaultPlan::parse("flip@1:1", 13).expect("inject spec"));
+    let cfg = ShardConfig {
+        ranks: 2,
+        bucket_kb: 1,
+        steps: T,
+        fault: Some(plan.clone()),
+        ..ShardConfig::default()
+    };
+    let comms: Vec<Comm<Tcp>> = Tcp::loopback_mesh(2)
+        .expect("tcp mesh")
+        .into_iter()
+        .map(|mut t| {
+            t.set_fault_plan(plan.clone());
+            Comm::new(t)
+        })
+        .collect();
+    let err = shard::train_with_comms(&task, "alada", &sched(), &cfg, comms)
+        .expect_err("a corrupt frame must abort the run");
+    // The exact structural test the --supervise restart loop performs:
+    // a typed TransportError root cause means "re-rendezvous + resume".
+    let te = err
+        .root_cause()
+        .downcast_ref::<TransportError>()
+        .unwrap_or_else(|| panic!("expected a typed root cause, got: {err:#}"));
+    assert!(matches!(te, TransportError::Corrupt { rank: 1, .. }), "{te}");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("training aborted mid-step"), "{msg}");
+    assert!(plan.events()[0].fired());
+}
+
+// ---------------------------------------------------------------------
+// 3. Skip lockstep: NaN at step k, byte parity across ranks/transports
+// ---------------------------------------------------------------------
+
+fn run_skip(task: &MlpTask, ranks: usize, tcp: bool) -> ShardOutcome {
+    // a fresh plan per run: events latch after firing
+    let plan = Arc::new(FaultPlan::parse("nan@2", 1).expect("inject spec"));
+    let cfg = ShardConfig {
+        ranks,
+        bucket_kb: 1,
+        steps: T,
+        pipeline: Pipeline::ReduceScatter,
+        fault: Some(plan.clone()),
+        ..ShardConfig::default()
+    };
+    let out = if tcp {
+        let comms = Tcp::loopback_mesh(ranks)
+            .expect("tcp mesh")
+            .into_iter()
+            .map(|mut t| {
+                t.set_fault_plan(plan.clone());
+                Comm::new(t)
+            })
+            .collect();
+        shard::train_with_comms(task, "alada", &sched(), &cfg, comms).expect("tcp run")
+    } else {
+        shard::train(task, "alada", &sched(), &cfg).expect("inproc run")
+    };
+    assert!(plan.events()[0].fired(), "the nan event must have fired at {ranks} ranks");
+    assert_eq!(out.losses.len(), T, "a skipped step still records its loss");
+    out
+}
+
+#[test]
+fn nan_skip_step_is_byte_identical_across_rank_counts_over_tcp() {
+    let task = invariant_task(43);
+    let base = run_skip(&task, 1, false);
+    for ranks in [2usize, 3] {
+        let tcp = run_skip(&task, ranks, true);
+        assert_params_bit_identical(
+            &base.params,
+            &tcp.params,
+            &format!("skip@2: 1-rank inproc vs {ranks}-rank tcp"),
+        );
+    }
+    // and the skip really changed the trajectory vs a clean run
+    let clean_cfg =
+        ShardConfig { ranks: 1, bucket_kb: 1, steps: T, ..ShardConfig::default() };
+    let clean = shard::train(&task, "alada", &sched(), &clean_cfg).expect("clean run");
+    let differs = base
+        .params
+        .iter()
+        .zip(&clean.params)
+        .any(|(a, b)| a.data().iter().zip(b.data()).any(|(x, y)| x.to_bits() != y.to_bits()));
+    assert!(differs, "the injected anomaly must have skipped a real update");
+}
+
+// ---------------------------------------------------------------------
+// 4. Torn slice: the commit goes through, the restore refuses
+// ---------------------------------------------------------------------
+
+#[test]
+fn torn_checkpoint_slice_is_rejected_at_restore_naming_the_file() {
+    let task = invariant_task(47);
+    let dir = std::env::temp_dir()
+        .join(format!("alada_guardrails_torn_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+
+    // save-at-end run; the torn fault truncates rank 1's slice right
+    // after it was written (and checksummed), before the commit barrier
+    let plan = Arc::new(
+        FaultPlan::parse(&format!("torn@{}:1", T - 1), 3).expect("inject spec"),
+    );
+    let save_cfg = ShardConfig {
+        ranks: 2,
+        bucket_kb: 1,
+        steps: T,
+        ckpt: CkptConfig::new(dir.to_str(), 0, None),
+        fault: Some(plan.clone()),
+        ..ShardConfig::default()
+    };
+    shard::train(&task, "alada", &sched(), &save_cfg).expect("the save run itself survives");
+    assert!(plan.events()[0].fired(), "the torn event must have fired");
+
+    let resume_cfg = ShardConfig {
+        ranks: 2,
+        bucket_kb: 1,
+        steps: T + 1,
+        ckpt: CkptConfig::new(None, 0, dir.to_str()),
+        ..ShardConfig::default()
+    };
+    let err = shard::train(&task, "alada", &sched(), &resume_cfg)
+        .expect_err("a torn slice must fail the restore");
+    let msg = format!("{err:#}");
+    let slice = slice_file(T, 1);
+    assert!(msg.contains(&slice), "error must name the damaged slice {slice}: {msg}");
+    assert!(msg.contains("truncated") || msg.contains("corrupt"), "{msg}");
+    std::fs::remove_dir_all(&dir).ok();
+}

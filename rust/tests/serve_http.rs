@@ -216,10 +216,14 @@ fn full_queue_answers_503_and_parked_request_still_completes() {
         std::thread::sleep(std::time::Duration::from_millis(5));
     }
     assert_eq!(queued, 1, "parked request never reached the queue");
-    // ...then the next submission must bounce
-    let (status, body) = post_generate(addr, r#"{"tokens":[2],"max_new":1}"#);
+    // ...then the next submission must bounce, telling the client when
+    // to come back
+    let (status, head, body) =
+        http::request_full(addr, "POST", "/v1/generate", Some(r#"{"tokens":[2],"max_new":1}"#))
+            .expect("http round trip");
     assert_eq!(status, 503, "{body}");
     assert!(body.contains("queue full"), "{body}");
+    assert!(head.contains("Retry-After: 1"), "503 must carry Retry-After: {head}");
     // the parked request is unharmed: its deadline cuts, it decodes
     let (status, body) = parked.join().expect("parked client");
     assert_eq!(status, 200, "{body}");
@@ -227,6 +231,9 @@ fn full_queue_answers_503_and_parked_request_still_completes() {
     let stats = server.stats().to_json();
     assert_eq!(stats.get("rejected_503").unwrap().as_usize(), Some(1));
     assert_eq!(stats.get("ok").unwrap().as_usize(), Some(1));
+    // the served-vs-rejected rollup agrees with the detailed counters
+    assert_eq!(stats.get("served").unwrap().as_usize(), Some(1));
+    assert_eq!(stats.get("rejected").unwrap().as_usize(), Some(1));
     server.shutdown();
     std::fs::remove_dir_all(&dir).ok();
 }

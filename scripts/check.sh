@@ -118,3 +118,43 @@ grep -q "re-rendezvous (generation 1)" "$tmp/chaos.log"
 grep -q "generation 1: world size 3" "$tmp/chaos.log"
 cmp "$tmp/ref3.bin" "$tmp/chaos.bin"
 echo "   supervised 4→3 restart final params byte-identical to the uninterrupted 3-proc run"
+
+echo "== guardrail gate: injected NaN @ step 2 is skipped in lockstep; 1-proc and 2-proc params identical =="
+# --same-batch + --quant-grads makes the trajectory rank-count-invariant,
+# so a NaN landing in ONE rank's gradient must produce the byte-identical
+# skip at every rank count — the sentinel's flag reduce is what keeps the
+# decision mesh-wide instead of per-rank.
+guard=(--opt alada --batch 8 --dim 6 --hidden 10 --depth 1 --bucket-kb 1 \
+       --seed 13 --schedule const:0.005 --same-batch --quant-grads --steps 8)
+cargo run -q -- shard-train --ranks 1 "${guard[@]}" --inject nan@2 --on-anomaly skip \
+    --dump-params "$tmp/skip1.bin" 2>"$tmp/skip1.log"
+grep -q "update skipped" "$tmp/skip1.log"
+cargo run -q -- shard-train --transport tcp --spawn 2 "${guard[@]}" --inject nan@2 \
+    --on-anomaly skip --dump-params "$tmp/skip2.bin"
+cmp "$tmp/skip1.bin" "$tmp/skip2.bin"
+# and the skip really zeroed an update: a clean run must end elsewhere
+cargo run -q -- shard-train --ranks 1 "${guard[@]}" --dump-params "$tmp/clean1.bin"
+if cmp -s "$tmp/skip1.bin" "$tmp/clean1.bin"; then
+    echo "skip run unexpectedly matches the clean run — the NaN never landed" >&2
+    exit 1
+fi
+echo "   NaN@2 skipped in lockstep; 1-proc inproc == 2-proc tcp, both differ from clean"
+
+echo "== chaos gate 2: corrupt TCP frame under --supervise; auto-recovery matches the clean run =="
+# flip@5:1 flips one bit of a rank-1 frame after its checksum was
+# computed; the receiver surfaces a typed Corrupt error, both workers
+# unwind, re-rendezvous (nobody died, so generation 1 keeps world size
+# 2), resume from the step-4 commit, and must land on the byte-identical
+# params of a run that never saw the fault. Injection latches per
+# process, so the replayed step 5 does not re-fire.
+flip=(--opt alada --batch 8 --dim 6 --hidden 10 --depth 1 --bucket-kb 1 \
+      --seed 17 --schedule const:0.005 --steps 8)
+cargo run -q -- shard-train --transport tcp --spawn 2 "${flip[@]}" \
+    --dump-params "$tmp/flip_ref.bin"
+cargo run -q -- shard-train --transport tcp --spawn 2 --supervise --max-restarts 2 \
+    --save "$tmp/flip_ckpt" --save-every 2 "${flip[@]}" --inject flip@5:1 \
+    --dump-params "$tmp/flip.bin" >"$tmp/flip.log" 2>&1
+grep -q "re-rendezvous (generation 1)" "$tmp/flip.log"
+grep -q "generation 1: world size 2" "$tmp/flip.log"
+cmp "$tmp/flip_ref.bin" "$tmp/flip.bin"
+echo "   corrupt frame detected, supervised restart resumed; final params byte-identical to the clean run"
