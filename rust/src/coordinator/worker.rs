@@ -6,7 +6,7 @@
 //! Failures become `JobResult { error: Some(..) }` rather than killing
 //! the sweep: a diverging η₀ is data, not a crash.
 
-use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::collections::{BTreeMap, VecDeque};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc::Sender;
 use std::sync::{Arc, Mutex};
@@ -48,7 +48,7 @@ pub(super) fn worker_loop(
             return;
         }
     };
-    let mut cache: HashMap<String, Executable> = HashMap::new();
+    let mut cache: BTreeMap<String, Executable> = BTreeMap::new();
     loop {
         let job = {
             let mut q = queue.lock().unwrap();
@@ -93,7 +93,7 @@ fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
 
 fn load_cached(
     rt: &Runtime,
-    cache: &mut HashMap<String, Executable>,
+    cache: &mut BTreeMap<String, Executable>,
     name: &str,
 ) -> Result<Executable> {
     if let Some(exe) = cache.get(name) {
@@ -104,7 +104,7 @@ fn load_cached(
     Ok(exe)
 }
 
-fn run_job(rt: &Runtime, cache: &mut HashMap<String, Executable>, job: &Job) -> Result<JobResult> {
+fn run_job(rt: &Runtime, cache: &mut BTreeMap<String, Executable>, job: &Job) -> Result<JobResult> {
     let spec = &job.spec;
     let artifact = spec
         .artifact

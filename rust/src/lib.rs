@@ -7,12 +7,17 @@
 //! * L3 — this crate: training framework, PJRT runtime, data pipeline,
 //!   experiment coordinator, pure-Rust optimizer substrate.
 
+// The library is entirely safe Rust; the binary's lone signal-FFI site
+// carries its own scoped allow (see main.rs, lint rule r8).
+#![deny(unsafe_code)]
+
 pub mod benchkit;
 pub mod cli;
 pub mod config;
 pub mod coordinator;
 pub mod exp;
 pub mod data;
+pub mod lint;
 pub mod optim;
 pub mod runtime;
 pub mod serve;

@@ -1,0 +1,203 @@
+//! `alada lint` — the project's own static-analysis pass.
+//!
+//! Every headline claim in this tree (sharded == unsharded at any rank
+//! count, save@M/resume@N parity, batched == solo decode) rests on
+//! invariants the type system cannot see: fixed-order arithmetic only
+//! through `tensor::kernels`, no unordered map iteration in hot paths,
+//! typed phase-stamped transport errors, no wall-clock in step logic,
+//! no mutex guard held across blocking channel calls. The parity
+//! suites catch violations *after* they have produced a divergent
+//! trajectory; this pass rejects them at review time, with a
+//! `file:line` diagnostic, before a test ever runs.
+//!
+//! The implementation is a hand-rolled line scanner + rule table (see
+//! [`scanner`] and [`rules`]) in the same dependency-light spirit as
+//! `util::json` — no `syn`, no proc-macro machinery, nothing the
+//! container does not already have. That buys a tool that lints the
+//! whole tree in milliseconds and that `scripts/check.sh` can gate on
+//! between clippy and the tests.
+//!
+//! Escape hatch: `// lint: allow(<rule>): <reason>` on the offending
+//! line (or on a comment line directly above it) suppresses exactly
+//! one line. Suppressions are counted and reported so they stay
+//! visible.
+
+pub mod rules;
+pub mod scanner;
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+pub use rules::{Diagnostic, RuleInfo, RULES};
+
+use crate::util::json::Json;
+
+/// Schema version of the `--json` report. Bump only with a matching
+/// update to `rust/tests/lint_gate.rs`.
+pub const REPORT_VERSION: u64 = 1;
+
+/// Outcome of a lint run over a set of paths.
+pub struct Report {
+    /// Number of `.rs` files scanned.
+    pub checked_files: usize,
+    /// Violations, sorted by (file, line, rule).
+    pub diagnostics: Vec<Diagnostic>,
+    /// Count of would-be violations suppressed by allow comments.
+    pub allowed: usize,
+}
+
+impl Report {
+    pub fn clean(&self) -> bool {
+        self.diagnostics.is_empty()
+    }
+
+    /// Machine-readable report:
+    /// `{"version":1,"checked_files":N,"allowed":N,"clean":bool,
+    ///   "diagnostics":[{"file","line","rule","message"},…]}`
+    pub fn to_json(&self) -> Json {
+        let mut top = BTreeMap::new();
+        top.insert("version".to_string(), Json::Num(REPORT_VERSION as f64));
+        top.insert("checked_files".to_string(), Json::Num(self.checked_files as f64));
+        top.insert("allowed".to_string(), Json::Num(self.allowed as f64));
+        top.insert("clean".to_string(), Json::Bool(self.clean()));
+        let diags = self
+            .diagnostics
+            .iter()
+            .map(|d| {
+                let mut m = BTreeMap::new();
+                m.insert("file".to_string(), Json::Str(d.file.clone()));
+                m.insert("line".to_string(), Json::Num(d.line as f64));
+                m.insert("rule".to_string(), Json::Str(d.rule.to_string()));
+                m.insert("message".to_string(), Json::Str(d.message.clone()));
+                Json::Obj(m)
+            })
+            .collect();
+        top.insert("diagnostics".to_string(), Json::Arr(diags));
+        Json::Obj(top)
+    }
+
+    /// Human-readable report: one `file:line: [rule] message` per
+    /// violation, then a one-line summary.
+    pub fn render_text(&self) -> String {
+        let mut out = String::new();
+        for d in &self.diagnostics {
+            out.push_str(&format!("{}:{}: [{}] {}\n", d.file, d.line, d.rule, d.message));
+        }
+        out.push_str(&format!(
+            "alada lint: {} files checked, {} violation{}, {} allowed\n",
+            self.checked_files,
+            self.diagnostics.len(),
+            if self.diagnostics.len() == 1 { "" } else { "s" },
+            self.allowed
+        ));
+        out
+    }
+}
+
+/// Lint every `.rs` file under `paths` (files or directories).
+pub fn run(paths: &[String]) -> Result<Report> {
+    let mut files = Vec::new();
+    for p in paths {
+        collect(Path::new(p), &mut files)?;
+    }
+    files.sort();
+    files.dedup();
+    let mut diagnostics = Vec::new();
+    let mut allowed = 0;
+    for f in &files {
+        let text =
+            std::fs::read_to_string(f).with_context(|| format!("lint: reading {f}"))?;
+        let sf = scanner::scan(f, &text);
+        let (d, a) = rules::check_file(&sf);
+        diagnostics.extend(d);
+        allowed += a;
+    }
+    diagnostics.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.rule).cmp(&(b.file.as_str(), b.line, b.rule))
+    });
+    Ok(Report { checked_files: files.len(), diagnostics, allowed })
+}
+
+/// Recursively gather `.rs` files in deterministic (sorted) order.
+/// `target/` and dot-directories are build products, never sources.
+fn collect(path: &Path, out: &mut Vec<String>) -> Result<()> {
+    let meta = std::fs::metadata(path)
+        .with_context(|| format!("lint: no such path {}", path.display()))?;
+    if meta.is_file() {
+        if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path.to_string_lossy().replace('\\', "/"));
+        } else if out.is_empty() {
+            // only reject non-.rs when named explicitly at the top
+            // level; directory walks just skip them
+            bail!("lint: {} is not a .rs file", path.display());
+        }
+        return Ok(());
+    }
+    let mut entries: Vec<_> = std::fs::read_dir(path)
+        .with_context(|| format!("lint: reading dir {}", path.display()))?
+        .collect::<std::io::Result<_>>()
+        .with_context(|| format!("lint: reading dir {}", path.display()))?;
+    entries.sort_by_key(|e| e.file_name());
+    for e in entries {
+        let name = e.file_name();
+        let name = name.to_string_lossy();
+        if name == "target" || name.starts_with('.') {
+            continue;
+        }
+        let child = e.path();
+        if child.is_dir() {
+            collect(&child, out)?;
+        } else if child.extension().is_some_and(|x| x == "rs") {
+            out.push(child.to_string_lossy().replace('\\', "/"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_json_schema() {
+        let report = Report {
+            checked_files: 2,
+            diagnostics: vec![Diagnostic {
+                file: "rust/src/shard/x.rs".to_string(),
+                line: 7,
+                rule: "r1",
+                message: "msg".to_string(),
+            }],
+            allowed: 1,
+        };
+        let s = report.to_json().to_string_compact();
+        let parsed = Json::parse(&s).expect("round-trips");
+        assert_eq!(parsed.get("version").and_then(Json::as_usize), Some(1));
+        assert_eq!(parsed.get("checked_files").and_then(Json::as_usize), Some(2));
+        assert_eq!(parsed.get("allowed").and_then(Json::as_usize), Some(1));
+        assert_eq!(parsed.get("clean").and_then(Json::as_bool), Some(false));
+        let diags = parsed.get("diagnostics").and_then(Json::as_arr).expect("arr");
+        assert_eq!(diags.len(), 1);
+        assert_eq!(diags[0].get("line").and_then(Json::as_usize), Some(7));
+        assert_eq!(diags[0].get("rule").and_then(Json::as_str), Some("r1"));
+    }
+
+    #[test]
+    fn text_report_has_file_line_rule() {
+        let report = Report {
+            checked_files: 1,
+            diagnostics: vec![Diagnostic {
+                file: "a.rs".to_string(),
+                line: 3,
+                rule: "r4",
+                message: "m".to_string(),
+            }],
+            allowed: 0,
+        };
+        let text = report.render_text();
+        assert!(text.contains("a.rs:3: [r4] m"));
+        assert!(text.contains("1 files checked, 1 violation, 0 allowed"));
+    }
+}

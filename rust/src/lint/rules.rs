@@ -1,0 +1,803 @@
+//! The project rule set: determinism & concurrency invariants that the
+//! parity suites otherwise only catch *after* a violation has already
+//! produced a divergent trajectory.
+//!
+//! Every rule matches on the scanner's code channel (strings blanked,
+//! comments stripped), is scoped to the module paths where the
+//! invariant actually holds, and can be suppressed one line at a time
+//! with `// lint: allow(<rule>): <reason>` — the reason is part of the
+//! convention, not enforced, but reviewers expect it.
+//!
+//! | id | invariant |
+//! |----|-----------|
+//! | r1 | no `HashMap`/`HashSet` in determinism-critical modules |
+//! | r2 | no float reductions outside `tensor::kernels` |
+//! | r3 | no wall-clock (`Instant::now`/`SystemTime`) in step/collective paths |
+//! | r4 | no `unwrap`/`expect`/`panic!` in transport / serve request paths |
+//! | r5 | every `TransportError::{PeerLost,Corrupt}` stamps a phase |
+//! | r6 | no narrowing `as` casts in `optim/` update math |
+//! | r7 | no lock guard held across a blocking `send`/`recv`/`join` |
+//! | r8 | every `unsafe` carries a `// SAFETY:` comment |
+
+use super::scanner::{Line, SourceFile};
+
+/// One violation, pointing at a file and line.
+pub struct Diagnostic {
+    pub file: String,
+    pub line: usize,
+    pub rule: &'static str,
+    pub message: String,
+}
+
+/// Static rule metadata (drives `alada lint --rules`, docs, and tests).
+pub struct RuleInfo {
+    pub id: &'static str,
+    pub title: &'static str,
+    pub summary: &'static str,
+}
+
+pub const RULES: &[RuleInfo] = &[
+    RuleInfo {
+        id: "r1",
+        title: "no-unordered-maps",
+        summary: "HashMap/HashSet in shard/optim/tensor/train/coordinator — unordered \
+                  iteration breaks byte-parity; use BTreeMap/BTreeSet or sorted keys",
+    },
+    RuleInfo {
+        id: "r2",
+        title: "no-float-reductions",
+        summary: ".sum::<f32>() / float fold/product outside tensor::kernels — fixed-order \
+                  kernels are the only sanctioned reduction surface",
+    },
+    RuleInfo {
+        id: "r3",
+        title: "no-wall-clock",
+        summary: "Instant::now/SystemTime in step/collective paths — wall-clock must never \
+                  influence the trajectory (timing/bench modules are out of scope)",
+    },
+    RuleInfo {
+        id: "r4",
+        title: "no-panic-paths",
+        summary: "unwrap/expect/panic! in shard/transport and serve — typed TransportError \
+                  and HTTP 4xx/5xx are the only failure surfaces",
+    },
+    RuleInfo {
+        id: "r5",
+        title: "phase-stamped-errors",
+        summary: "TransportError::{PeerLost,Corrupt} constructed without a phase stamp — \
+                  supervised recovery and diagnostics need the failing phase",
+    },
+    RuleInfo {
+        id: "r6",
+        title: "no-narrowing-casts",
+        summary: "narrowing `as` casts (f64→f32, usize→u32, …) in optim/ update math — \
+                  silent truncation corrupts state; use checked helpers",
+    },
+    RuleInfo {
+        id: "r7",
+        title: "no-lock-across-blocking",
+        summary: "mutex guard held across a blocking send/recv/join in serve/ or the shard \
+                  engine — the deadlock shape PR 7 unwound by hand",
+    },
+    RuleInfo {
+        id: "r8",
+        title: "safety-commented-unsafe",
+        summary: "`unsafe` without a `// SAFETY:` comment on the same or the preceding \
+                  three lines",
+    },
+];
+
+/// Collects diagnostics for one file, honoring per-line allows.
+struct Sink<'a> {
+    file: &'a str,
+    diags: Vec<Diagnostic>,
+    allowed: usize,
+}
+
+impl Sink<'_> {
+    fn emit(&mut self, line: &Line, rule: &'static str, message: String) {
+        if line.allows.iter().any(|a| a == rule || a == "all") {
+            self.allowed += 1;
+        } else {
+            self.diags.push(Diagnostic {
+                file: self.file.to_string(),
+                line: line.number,
+                rule,
+                message,
+            });
+        }
+    }
+}
+
+/// Run every rule over one scanned file. Returns (diagnostics,
+/// suppressed-by-allow count).
+pub fn check_file(sf: &SourceFile) -> (Vec<Diagnostic>, usize) {
+    let mut sink = Sink { file: &sf.path, diags: Vec::new(), allowed: 0 };
+    check_r1(sf, &mut sink);
+    check_r2(sf, &mut sink);
+    check_r3(sf, &mut sink);
+    check_r4(sf, &mut sink);
+    check_r5(sf, &mut sink);
+    check_r6(sf, &mut sink);
+    check_r7(sf, &mut sink);
+    check_r8(sf, &mut sink);
+    (sink.diags, sink.allowed)
+}
+
+/// Substring-based module scoping: the invariant applies when `path`
+/// contains any of `scope` and none of `exclude`.
+fn in_scope(path: &str, scope: &[&str], exclude: &[&str]) -> bool {
+    scope.iter().any(|s| path.contains(s)) && !exclude.iter().any(|s| path.contains(s))
+}
+
+fn is_ident_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// First occurrence of `word` with non-identifier chars on both sides.
+fn find_word(code: &str, word: &str) -> Option<usize> {
+    let bytes = code.as_bytes();
+    let mut start = 0;
+    while let Some(rel) = code[start..].find(word) {
+        let pos = start + rel;
+        let end = pos + word.len();
+        let left_ok = pos == 0 || !is_ident_byte(bytes[pos - 1]);
+        let right_ok = end >= bytes.len() || !is_ident_byte(bytes[end]);
+        if left_ok && right_ok {
+            return Some(pos);
+        }
+        start = pos + 1;
+    }
+    None
+}
+
+/// First occurrence of `tok` whose *right* edge is a word boundary
+/// (the left edge is part of the token itself, e.g. `" as u32"`).
+fn find_right_bounded(code: &str, tok: &str) -> Option<usize> {
+    let bytes = code.as_bytes();
+    let mut start = 0;
+    while let Some(rel) = code[start..].find(tok) {
+        let pos = start + rel;
+        let end = pos + tok.len();
+        if end >= bytes.len() || !is_ident_byte(bytes[end]) {
+            return Some(pos);
+        }
+        start = pos + 1;
+    }
+    None
+}
+
+/// Non-test lines of a file, for the single-line rules.
+fn live_lines(sf: &SourceFile) -> impl Iterator<Item = &Line> {
+    sf.lines.iter().filter(|l| !sf.is_test_line(l.number))
+}
+
+// ---------------------------------------------------------------- r1
+
+fn check_r1(sf: &SourceFile, sink: &mut Sink) {
+    const SCOPE: &[&str] = &["/shard/", "/optim/", "/tensor/", "/train/", "/coordinator/"];
+    if !in_scope(&sf.path, SCOPE, &[]) {
+        return;
+    }
+    for line in live_lines(sf) {
+        for tok in ["HashMap", "HashSet"] {
+            if find_word(&line.code, tok).is_some() {
+                sink.emit(
+                    line,
+                    "r1",
+                    format!(
+                        "`{tok}` in a determinism-critical module: unordered iteration \
+                         breaks byte-parity — use BTreeMap/BTreeSet or sorted keys"
+                    ),
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------- r2
+
+/// A `1.5`-shaped literal anywhere on the line (digit, dot, digit).
+fn has_float_literal(code: &str) -> bool {
+    let b = code.as_bytes();
+    (1..b.len().saturating_sub(1)).any(|i| {
+        b[i] == b'.' && b[i - 1].is_ascii_digit() && b[i + 1].is_ascii_digit()
+    })
+}
+
+fn check_r2(sf: &SourceFile, sink: &mut Sink) {
+    const SCOPE: &[&str] = &["/shard/", "/optim/", "/tensor/", "/train/checkpoint"];
+    const EXCLUDE: &[&str] = &["/tensor/kernels.rs"];
+    if !in_scope(&sf.path, SCOPE, EXCLUDE) {
+        return;
+    }
+    const REDUCERS: &[&str] =
+        &[".sum::<f32>", ".sum::<f64>", ".product::<f32>", ".product::<f64>"];
+    for line in live_lines(sf) {
+        let code = &line.code;
+        for tok in REDUCERS {
+            if code.contains(tok) {
+                sink.emit(
+                    line,
+                    "r2",
+                    format!(
+                        "float reduction `{tok}()` outside tensor::kernels: iterator sums \
+                         reassociate under refactors — route through a fixed-order kernel"
+                    ),
+                );
+            }
+        }
+        if code.contains(".fold(")
+            && (find_word(code, "f32").is_some()
+                || find_word(code, "f64").is_some()
+                || has_float_literal(code))
+        {
+            sink.emit(
+                line,
+                "r2",
+                "float `fold` outside tensor::kernels: reduction order is the determinism \
+                 contract — use a kernel, or allow with an order-independence argument"
+                    .to_string(),
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------- r3
+
+fn check_r3(sf: &SourceFile, sink: &mut Sink) {
+    const SCOPE: &[&str] = &["/shard/", "/optim/", "/tensor/"];
+    // the transports legitimately read clocks for I/O deadlines (that
+    // is control flow, but of the *liveness* contract, not the
+    // trajectory — recv results are bit-identical either way)
+    const EXCLUDE: &[&str] = &["/shard/transport/"];
+    if !in_scope(&sf.path, SCOPE, EXCLUDE) {
+        return;
+    }
+    for line in live_lines(sf) {
+        for tok in ["Instant::now", "SystemTime"] {
+            if find_right_bounded(&line.code, tok).is_some() {
+                sink.emit(
+                    line,
+                    "r3",
+                    format!(
+                        "wall-clock `{tok}` in a step/collective path: time must never \
+                         influence the trajectory (metrics-only reads take an allow)"
+                    ),
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------- r4
+
+fn check_r4(sf: &SourceFile, sink: &mut Sink) {
+    const SCOPE: &[&str] = &["/shard/transport/", "/serve/"];
+    if !in_scope(&sf.path, SCOPE, &[]) {
+        return;
+    }
+    // `.unwrap()` exactly (not `.unwrap_or*`); macros carry their `!`.
+    // `assert!`/`debug_assert!` stay legal: they document impossible
+    // states, they are not error handling.
+    const PANICS: &[&str] =
+        &[".unwrap()", ".expect(", "panic!", "unreachable!", "todo!", "unimplemented!"];
+    for line in live_lines(sf) {
+        for tok in PANICS {
+            let hit = if tok.starts_with('.') {
+                line.code.contains(tok)
+            } else {
+                find_word(&line.code, tok).is_some()
+            };
+            if hit {
+                sink.emit(
+                    line,
+                    "r4",
+                    format!(
+                        "`{tok}` in a typed-error path: transport must surface \
+                         TransportError and serve must answer 4xx/5xx — a panic here \
+                         kills the worker instead"
+                    ),
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------- r5
+
+/// Truncate `text` to its first balanced `{ … }` group, or None if no
+/// group closes within the text.
+fn take_braced(text: &str) -> Option<&str> {
+    let mut depth = 0i32;
+    for (i, c) in text.char_indices() {
+        if c == '{' {
+            depth += 1;
+        }
+        if c == '}' {
+            depth -= 1;
+            if depth == 0 {
+                return Some(&text[..=i]);
+            }
+        }
+    }
+    None
+}
+
+fn check_r5(sf: &SourceFile, sink: &mut Sink) {
+    // raw transports construct with `phase: ""` by design — the
+    // collective algebra stamps the phase at the call site
+    if !in_scope(&sf.path, &["/shard/"], &["/shard/transport/"]) {
+        return;
+    }
+    for (idx, line) in sf.lines.iter().enumerate() {
+        if sf.is_test_line(line.number) {
+            continue;
+        }
+        let code = &line.code;
+        let pos = match code
+            .find("TransportError::PeerLost")
+            .or_else(|| code.find("TransportError::Corrupt"))
+        {
+            Some(p) => p,
+            None => continue,
+        };
+        // gather the `{ … }` construction body, spanning up to 10
+        // lines of a rustfmt-wrapped struct literal
+        let mut text = code[pos..].to_string();
+        let mut body = take_braced(&text).map(str::to_string);
+        let mut extra = 0;
+        while body.is_none() && extra < 10 {
+            extra += 1;
+            match sf.lines.get(idx + extra) {
+                Some(next) => {
+                    text.push(' ');
+                    text.push_str(&next.code);
+                }
+                None => break,
+            }
+            body = take_braced(&text).map(str::to_string);
+        }
+        // no braced body → a path mention (use/type position), not a
+        // construction
+        let Some(body) = body else { continue };
+        // `{ .. }` / `{ rank, .. }` is a match pattern, not a construction
+        if body.contains("..") {
+            continue;
+        }
+        match find_word(&body, "phase") {
+            None => sink.emit(
+                line,
+                "r5",
+                "TransportError::{PeerLost,Corrupt} constructed without a phase stamp — \
+                 supervised recovery logs and retry policy key on the failing phase"
+                    .to_string(),
+            ),
+            Some(p) => {
+                let rest = body[p + "phase".len()..].trim_start();
+                let rest = rest.strip_prefix(':').unwrap_or(rest).trim_start();
+                if rest.starts_with("\"\"") {
+                    sink.emit(
+                        line,
+                        "r5",
+                        "TransportError constructed with an empty phase stamp — stamp the \
+                         collective phase (\"reduce\", \"gather\", \"opt\", …)"
+                            .to_string(),
+                    );
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------- r6
+
+fn check_r6(sf: &SourceFile, sink: &mut Sink) {
+    if !in_scope(&sf.path, &["/optim/"], &[]) {
+        return;
+    }
+    const NARROW: &[&str] = &[" as u8", " as u16", " as u32", " as i8", " as i16"];
+    for line in live_lines(sf) {
+        let code = &line.code;
+        for tok in NARROW {
+            if find_right_bounded(code, tok).is_some() {
+                sink.emit(
+                    line,
+                    "r6",
+                    format!(
+                        "narrowing cast `{}` in optimizer math: silent truncation corrupts \
+                         state — range-check first (or allow with the checked-site argument)",
+                        tok.trim_start()
+                    ),
+                );
+            }
+        }
+        // f64→f32 only narrows when an f64 is actually in play
+        if find_right_bounded(code, " as f32").is_some() && find_word(code, "f64").is_some() {
+            sink.emit(
+                line,
+                "r6",
+                "f64→f32 cast in optimizer math: precision loss changes the trajectory — \
+                 keep update math in one width (or allow with the contract argument)"
+                    .to_string(),
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------- r7
+
+const ACQUIRE: &[&str] = &[".lock()", "lock_unpoisoned("];
+const BLOCKING: &[&str] = &[".send(", ".recv(", ".join()"];
+
+/// A mutex guard believed live past its binding line.
+struct GuardLive {
+    /// Binding name; None for a scrutinee temporary (`match x.lock()…`).
+    name: Option<String>,
+    /// The guard dies once brace depth dips below this.
+    min_depth: i32,
+    line: usize,
+}
+
+fn first_acquire(code: &str) -> Option<usize> {
+    ACQUIRE.iter().filter_map(|t| code.find(t)).min()
+}
+
+fn first_blocking(code: &str) -> Option<(&'static str, usize)> {
+    BLOCKING
+        .iter()
+        .filter_map(|t| code.find(t).map(|p| (*t, p)))
+        .min_by_key(|&(_, p)| p)
+}
+
+/// Analyze a `let NAME = …lock…;` line: does the binding keep the
+/// guard alive past the statement? Returns the guard if so.
+///
+/// Two reasons it would not: the acquisition sits inside another
+/// call's parentheses (`mem::take(&mut *x.lock()…)` — consumed in the
+/// statement), or the method chain after the lock call moves *out* of
+/// the guard (`.take()`, `.len()`, `.clone()` — only
+/// `.unwrap()`/`.expect(…)`/`.unwrap_or_else(…)` preserve it).
+fn let_binding_guard(code: &str, acq_pos: usize, depth: i32, number: usize) -> Option<GuardLive> {
+    let eq = code.find('=')?;
+    if eq > acq_pos {
+        return None;
+    }
+    let mut pdepth = 0i32;
+    for c in code[eq..acq_pos].chars() {
+        match c {
+            '(' => pdepth += 1,
+            ')' => pdepth -= 1,
+            _ => {}
+        }
+    }
+    if pdepth > 0 {
+        return None;
+    }
+    let open = code[acq_pos..].find('(')? + acq_pos;
+    let close = matching_paren(code, open)?;
+    let mut rest = code[close + 1..].trim_start();
+    loop {
+        if let Some(r) = rest.strip_prefix(".unwrap()") {
+            rest = r.trim_start();
+            continue;
+        }
+        let mut advanced = false;
+        for call in [".expect(", ".unwrap_or_else("] {
+            if rest.starts_with(call) {
+                match matching_paren(rest, call.len() - 1) {
+                    Some(e) => {
+                        rest = rest[e + 1..].trim_start();
+                        advanced = true;
+                    }
+                    None => return None, // call spans lines: punt, treat as temporary
+                }
+                break;
+            }
+        }
+        if !advanced {
+            break;
+        }
+    }
+    if !rest.starts_with(';') {
+        return None;
+    }
+    let after_let = code.trim_start().strip_prefix("let ")?.trim_start();
+    let after_mut = after_let.strip_prefix("mut ").unwrap_or(after_let).trim_start();
+    let name: String = after_mut
+        .chars()
+        .take_while(|c| c.is_ascii_alphanumeric() || *c == '_')
+        .collect();
+    if name.is_empty() || name == "_" {
+        return None;
+    }
+    Some(GuardLive { name: Some(name), min_depth: depth, line: number })
+}
+
+/// Index of the `)` matching the `(` at `open`, same line only.
+fn matching_paren(code: &str, open: usize) -> Option<usize> {
+    let mut d = 0i32;
+    for (i, c) in code[open..].char_indices() {
+        match c {
+            '(' => d += 1,
+            ')' => {
+                d -= 1;
+                if d == 0 {
+                    return Some(open + i);
+                }
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
+fn check_r7(sf: &SourceFile, sink: &mut Sink) {
+    if !in_scope(&sf.path, &["/serve/", "/shard/engine.rs"], &[]) {
+        return;
+    }
+    let mut depth = 0i32;
+    let mut guards: Vec<GuardLive> = Vec::new();
+    for line in &sf.lines {
+        if sf.is_test_line(line.number) {
+            break; // tests are the tail of every module
+        }
+        let code = &line.code;
+        let acq = first_acquire(code);
+        // (1) acquisition and a blocking call in the same statement
+        if let Some(p) = acq {
+            if let Some((tok, _)) = first_blocking(&code[p..]) {
+                sink.emit(
+                    line,
+                    "r7",
+                    format!(
+                        "lock acquired and blocking `{tok}…)` in the same statement: the \
+                         guard is held across the block — the PR 7 deadlock shape"
+                    ),
+                );
+            }
+        } else if let Some(g) = guards.last() {
+            // (2) blocking while a guard from an earlier line is live
+            if let Some((tok, _)) = first_blocking(code) {
+                sink.emit(
+                    line,
+                    "r7",
+                    format!(
+                        "blocking `{tok}…)` while the lock guard from line {} is held — \
+                         drop the guard (or end its scope) before blocking",
+                        g.line
+                    ),
+                );
+            }
+        }
+        // (3) explicit drop(NAME) releases a named guard
+        guards.retain(|g| match &g.name {
+            Some(n) => !code.contains(&format!("drop({n})")),
+            None => true,
+        });
+        // (4) brace depth: guards die when the scope that owns them closes
+        let depth_before = depth;
+        let mut line_min = depth;
+        for c in code.chars() {
+            match c {
+                '{' => depth += 1,
+                '}' => {
+                    depth -= 1;
+                    line_min = line_min.min(depth);
+                }
+                _ => {}
+            }
+        }
+        guards.retain(|g| line_min >= g.min_depth);
+        // (5) new guards born on this line
+        if let Some(p) = acq {
+            let trimmed = code.trim();
+            let header = trimmed.ends_with('{')
+                && (trimmed.starts_with("if let ")
+                    || trimmed.starts_with("while let ")
+                    || trimmed.starts_with("while ")
+                    || find_word(code, "match").is_some());
+            if header {
+                // match/if-let scrutinee temporaries live to the end of
+                // the whole expression (plain `if` conditions do not)
+                guards.push(GuardLive { name: None, min_depth: depth, line: line.number });
+            } else if trimmed.starts_with("let ") && trimmed.ends_with(';') {
+                if let Some(g) = let_binding_guard(code, p, depth_before, line.number) {
+                    guards.push(g);
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------- r8
+
+fn check_r8(sf: &SourceFile, sink: &mut Sink) {
+    for (idx, line) in sf.lines.iter().enumerate() {
+        if sf.is_test_line(line.number) {
+            continue;
+        }
+        if find_word(&line.code, "unsafe").is_none() {
+            continue;
+        }
+        let from = idx.saturating_sub(3);
+        let documented = sf.lines[from..=idx].iter().any(|l| l.comment.contains("SAFETY"));
+        if !documented {
+            sink.emit(
+                line,
+                "r8",
+                "`unsafe` without a `// SAFETY:` comment (same line or the three above): \
+                 state the invariant that makes this sound"
+                    .to_string(),
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::scanner::scan;
+    use super::*;
+
+    fn lint(path: &str, src: &str) -> Vec<Diagnostic> {
+        check_file(&scan(path, src)).0
+    }
+
+    fn rules_of(diags: &[Diagnostic]) -> Vec<&'static str> {
+        diags.iter().map(|d| d.rule).collect()
+    }
+
+    #[test]
+    fn r1_fires_in_scope_only() {
+        let src = "use std::collections::HashMap;\n";
+        assert_eq!(rules_of(&lint("rust/src/shard/x.rs", src)), ["r1"]);
+        assert!(lint("rust/src/data/x.rs", src).is_empty(), "data/ is out of scope");
+    }
+
+    #[test]
+    fn r2_catches_sum_and_float_fold_but_not_usize_product() {
+        let diags = lint(
+            "rust/src/optim/x.rs",
+            "let a = v.iter().sum::<f32>();\n\
+             let b = v.iter().fold(0.0f32, |x, y| x + y);\n\
+             let n: usize = shape.iter().product();\n",
+        );
+        assert_eq!(rules_of(&diags), ["r2", "r2"]);
+        assert_eq!(diags[0].line, 1);
+        assert_eq!(diags[1].line, 2);
+    }
+
+    #[test]
+    fn r2_exempts_kernels() {
+        let src = "let a = v.iter().sum::<f32>();\n";
+        assert!(lint("rust/src/tensor/kernels.rs", src).is_empty());
+    }
+
+    #[test]
+    fn r3_flags_clock_reads() {
+        let src = "let t0 = std::time::Instant::now();\n";
+        assert_eq!(rules_of(&lint("rust/src/shard/engine.rs", src)), ["r3"]);
+        assert!(lint("rust/src/shard/transport/tcp.rs", src).is_empty(), "deadlines exempt");
+    }
+
+    #[test]
+    fn r4_unwrap_but_not_unwrap_or() {
+        let diags = lint(
+            "rust/src/serve/x.rs",
+            "let a = x.unwrap();\nlet b = y.unwrap_or(0);\nassert!(ok);\n",
+        );
+        assert_eq!(rules_of(&diags), ["r4"]);
+        assert_eq!(diags[0].line, 1);
+    }
+
+    #[test]
+    fn r5_missing_and_empty_phase_fire_patterns_do_not() {
+        let diags = lint(
+            "rust/src/shard/x.rs",
+            "let a = TransportError::PeerLost { rank: 1 };\n\
+             let b = TransportError::Corrupt { rank: 1, phase: \"\" };\n\
+             let c = TransportError::PeerLost { rank: 1, phase: \"reduce\" };\n\
+             if matches!(e, TransportError::PeerLost { .. }) {}\n",
+        );
+        assert_eq!(rules_of(&diags), ["r5", "r5"]);
+        assert_eq!(diags[0].line, 1);
+        assert_eq!(diags[1].line, 2);
+    }
+
+    #[test]
+    fn r5_multiline_construction_is_gathered() {
+        let diags = lint(
+            "rust/src/shard/x.rs",
+            "let e = TransportError::PeerLost {\n    rank: peer,\n};\n",
+        );
+        assert_eq!(rules_of(&diags), ["r5"]);
+        assert_eq!(diags[0].line, 1);
+    }
+
+    #[test]
+    fn r6_narrowing_yes_widening_no() {
+        let diags = lint(
+            "rust/src/optim/x.rs",
+            "let t = step as u32;\nlet w = x as usize;\nlet p = b.powi(t as i32);\n",
+        );
+        assert_eq!(rules_of(&diags), ["r6"]);
+        assert_eq!(diags[0].line, 1);
+    }
+
+    #[test]
+    fn r6_f32_cast_only_with_f64_in_play() {
+        let diags = lint(
+            "rust/src/optim/x.rs",
+            "let r = (acc as f64).sqrt() as f32;\nlet s = n as f32;\n",
+        );
+        assert_eq!(rules_of(&diags), ["r6"]);
+        assert_eq!(diags[0].line, 1);
+    }
+
+    #[test]
+    fn r7_same_statement() {
+        let src = "let v = lock_unpoisoned(&q).recv();\n";
+        assert_eq!(rules_of(&lint("rust/src/serve/x.rs", src)), ["r7"]);
+    }
+
+    #[test]
+    fn r7_guard_held_across_send() {
+        let src = "fn f() {\n    let g = lock_unpoisoned(&q);\n    tx.send(1);\n}\n";
+        let diags = lint("rust/src/serve/x.rs", src);
+        assert_eq!(rules_of(&diags), ["r7"]);
+        assert_eq!(diags[0].line, 3);
+    }
+
+    #[test]
+    fn r7_drop_then_send_is_clean() {
+        let src = "fn f() {\n    let g = lock_unpoisoned(&q);\n    drop(g);\n    tx.send(1);\n}\n";
+        assert!(lint("rust/src/serve/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn r7_scope_end_kills_guard() {
+        let src = "fn f() {\n    {\n        let g = lock_unpoisoned(&q);\n    }\n    tx.send(1);\n}\n";
+        assert!(lint("rust/src/serve/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn r7_consumed_in_statement_is_not_a_guard() {
+        let src = "fn f() {\n    let v = std::mem::take(&mut *lock_unpoisoned(&q));\n    tx.send(v);\n}\n";
+        assert!(lint("rust/src/serve/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn r7_moved_out_value_is_not_a_guard() {
+        let src = "fn f() {\n    let t = lock_unpoisoned(&q).take();\n    if let Some(t) = t { t.join(); }\n}\n";
+        let diags = lint("rust/src/serve/x.rs", src);
+        assert!(diags.is_empty(), "got {:?}", rules_of(&diags));
+    }
+
+    #[test]
+    fn r8_unsafe_needs_safety_comment() {
+        let bad = "unsafe { ptr::read(p) };\n";
+        assert_eq!(rules_of(&lint("rust/src/main.rs", bad)), ["r8"]);
+        let good = "// SAFETY: p is valid for reads, checked above\nunsafe { ptr::read(p) };\n";
+        assert!(lint("rust/src/main.rs", good).is_empty());
+    }
+
+    #[test]
+    fn allow_comment_suppresses_and_counts() {
+        let src = "use std::collections::HashMap; // lint: allow(r1): doc example\n";
+        let (diags, allowed) = check_file(&scan("rust/src/shard/x.rs", src));
+        assert!(diags.is_empty());
+        assert_eq!(allowed, 1);
+    }
+
+    #[test]
+    fn test_code_is_exempt() {
+        let src = "fn real() {}\n#[cfg(test)]\nmod tests {\n    use std::collections::HashMap;\n}\n";
+        assert!(lint("rust/src/shard/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn rule_table_is_complete() {
+        let ids: Vec<&str> = RULES.iter().map(|r| r.id).collect();
+        assert_eq!(ids, ["r1", "r2", "r3", "r4", "r5", "r6", "r7", "r8"]);
+    }
+}

@@ -1,0 +1,377 @@
+//! Line scanner for the project linter: splits Rust source into
+//! per-line *code* and *comment* channels so the rules in
+//! [`super::rules`] can match tokens without tripping over strings,
+//! comments, or char literals.
+//!
+//! This is deliberately **not** a Rust parser. The rules only need
+//! token-shaped evidence (`HashMap`, `.unwrap()`, `Instant::now`), so a
+//! small state machine that
+//!
+//! 1. strips `//` and nested `/* */` comments into a comment channel,
+//! 2. blanks the *contents* of string literals to spaces (keeping the
+//!    quotes and the length, so `phase: ""` stays distinguishable from
+//!    `phase: "opt"`),
+//! 3. blanks char literals (so `'"'` cannot open a string and `'{'`
+//!    cannot unbalance brace depth), while leaving lifetime ticks
+//!    alone,
+//! 4. tracks raw strings (`r"…"`, `r#"…"#`, `br"…"`) across lines,
+//!
+//! is sufficient and keeps the tool dependency-free, in the same
+//! spirit as `util::json`. The scanner also extracts the
+//! `// lint: allow(<rule>)` escape hatch and the `#[cfg(test)]`
+//! boundary (rules do not apply to test code).
+
+/// One source line after scanning.
+pub struct Line {
+    /// 1-based line number.
+    pub number: usize,
+    /// The code channel: comments removed, string/char contents
+    /// blanked to spaces (delimiters and length preserved).
+    pub code: String,
+    /// The comment channel: text of `//` and `/* */` comments on this
+    /// line (used for `lint: allow` and `SAFETY:` detection).
+    pub comment: String,
+    /// Rules suppressed on this line via `// lint: allow(<rules>)`,
+    /// either trailing on the line itself or on an immediately
+    /// preceding comment-only line. Lower-cased rule ids; `all`
+    /// suppresses everything.
+    pub allows: Vec<String>,
+}
+
+/// A scanned source file.
+pub struct SourceFile {
+    /// Path with `/` separators (rule scoping is substring-based).
+    pub path: String,
+    pub lines: Vec<Line>,
+    /// Line number of the first `#[cfg(test)]`; lines at or after it
+    /// are exempt from all rules. `usize::MAX` when the file has no
+    /// test module. (Every module in this tree keeps its test `mod` at
+    /// the tail of the file, so first-marker-to-EOF is exact.)
+    pub test_from: usize,
+}
+
+impl SourceFile {
+    /// True when `number` falls inside the trailing test region.
+    pub fn is_test_line(&self, number: usize) -> bool {
+        number >= self.test_from
+    }
+}
+
+/// Lexical state carried across lines.
+#[derive(Clone, Copy)]
+enum Carry {
+    Code,
+    /// Inside a block comment, at the given nesting depth (Rust block
+    /// comments nest).
+    Block(u32),
+    /// Inside a normal string literal (they may span lines).
+    Str,
+    /// Inside a raw string opened with this many `#`s.
+    Raw(u32),
+}
+
+/// Scan a full source text into per-line code/comment channels.
+pub fn scan(path: &str, text: &str) -> SourceFile {
+    let mut carry = Carry::Code;
+    let mut lines = Vec::new();
+    let mut pending: Vec<String> = Vec::new();
+    let mut test_from = usize::MAX;
+    for (i, raw) in text.lines().enumerate() {
+        let number = i + 1;
+        let (code, comment, next) = clean_line(raw, carry);
+        carry = next;
+        let mut allows = parse_allows(&comment);
+        if code.trim().is_empty() {
+            // comment-only (or blank) line: its allows apply to the
+            // next line that carries code
+            pending.append(&mut allows);
+        } else {
+            allows.append(&mut pending);
+        }
+        if test_from == usize::MAX && code.contains("#[cfg(test)]") {
+            test_from = number;
+        }
+        lines.push(Line { number, code, comment, allows });
+    }
+    SourceFile { path: path.replace('\\', "/"), lines, test_from }
+}
+
+/// Process one physical line under the carried lexical state.
+/// Returns (code channel, comment channel, state after the line).
+fn clean_line(raw: &str, mut state: Carry) -> (String, String, Carry) {
+    let ch: Vec<char> = raw.chars().collect();
+    let mut code = String::new();
+    let mut comment = String::new();
+    let mut i = 0;
+    while i < ch.len() {
+        match state {
+            Carry::Block(depth) => {
+                if ch[i] == '/' && i + 1 < ch.len() && ch[i + 1] == '*' {
+                    state = Carry::Block(depth + 1);
+                    comment.push_str("/*");
+                    i += 2;
+                } else if ch[i] == '*' && i + 1 < ch.len() && ch[i + 1] == '/' {
+                    state = if depth > 1 { Carry::Block(depth - 1) } else { Carry::Code };
+                    comment.push_str("*/");
+                    i += 2;
+                } else {
+                    comment.push(ch[i]);
+                    i += 1;
+                }
+            }
+            Carry::Raw(hashes) => {
+                if ch[i] == '"' && hashes_at(&ch, i + 1) >= hashes {
+                    code.push('"');
+                    for _ in 0..hashes {
+                        code.push('#');
+                    }
+                    i += 1 + hashes as usize;
+                    state = Carry::Code;
+                } else {
+                    code.push(' ');
+                    i += 1;
+                }
+            }
+            Carry::Str => {
+                if ch[i] == '\\' {
+                    // escape: blank both chars (handles \" and \\); a
+                    // trailing \ (line continuation) just runs off the
+                    // end, leaving Str carried to the next line
+                    code.push(' ');
+                    if i + 1 < ch.len() {
+                        code.push(' ');
+                    }
+                    i += 2;
+                } else if ch[i] == '"' {
+                    code.push('"');
+                    i += 1;
+                    state = Carry::Code;
+                } else {
+                    code.push(' ');
+                    i += 1;
+                }
+            }
+            Carry::Code => {
+                let c = ch[i];
+                if c == '/' && i + 1 < ch.len() && ch[i + 1] == '/' {
+                    comment.extend(&ch[i..]);
+                    i = ch.len();
+                } else if c == '/' && i + 1 < ch.len() && ch[i + 1] == '*' {
+                    state = Carry::Block(1);
+                    comment.push_str("/*");
+                    i += 2;
+                } else if c == '"' {
+                    code.push('"');
+                    i += 1;
+                    state = Carry::Str;
+                } else if (c == 'r' || c == 'b') && !ends_in_ident(&code) {
+                    if let Some((consumed, hashes)) = raw_opener(&ch, i) {
+                        for j in 0..consumed {
+                            code.push(ch[i + j]);
+                        }
+                        i += consumed;
+                        state = Carry::Raw(hashes);
+                    } else {
+                        code.push(c);
+                        i += 1;
+                    }
+                } else if c == '\'' {
+                    // char literal vs lifetime: 'x' / '\n' are
+                    // literals (blank the payload); 'a in `&'a T` is a
+                    // lifetime (no closing tick) and passes through
+                    if i + 1 < ch.len() && ch[i + 1] == '\\' {
+                        code.push('\'');
+                        i += 2;
+                        code.push(' ');
+                        code.push(' ');
+                        while i < ch.len() && ch[i] != '\'' {
+                            code.push(' ');
+                            i += 1;
+                        }
+                        if i < ch.len() {
+                            code.push('\'');
+                            i += 1;
+                        }
+                    } else if i + 2 < ch.len() && ch[i + 2] == '\'' {
+                        code.push('\'');
+                        code.push(' ');
+                        code.push('\'');
+                        i += 3;
+                    } else {
+                        code.push(c);
+                        i += 1;
+                    }
+                } else {
+                    code.push(c);
+                    i += 1;
+                }
+            }
+        }
+    }
+    // a normal string unterminated at EOL spans lines; block comments
+    // and raw strings likewise — `state` carries all three
+    (code, comment, state)
+}
+
+/// Count consecutive `#`s starting at `i`.
+fn hashes_at(ch: &[char], i: usize) -> u32 {
+    let mut n = 0;
+    while (i + n as usize) < ch.len() && ch[i + n as usize] == '#' {
+        n += 1;
+    }
+    n
+}
+
+/// True when the code built so far ends in an identifier char — the
+/// next `r`/`b` is then part of an identifier (`for`, `ptr`), not a
+/// raw-string opener.
+fn ends_in_ident(code: &str) -> bool {
+    matches!(code.chars().next_back(), Some(c) if c.is_ascii_alphanumeric() || c == '_')
+}
+
+/// Detect a raw-string opener (`r"`, `r#"`, `br##"`, …) at position
+/// `i`. Returns (chars consumed including the quote, hash count).
+fn raw_opener(ch: &[char], i: usize) -> Option<(usize, u32)> {
+    let mut j = i;
+    if ch[j] == 'b' {
+        j += 1;
+    }
+    if j >= ch.len() || ch[j] != 'r' {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0u32;
+    while j < ch.len() && ch[j] == '#' {
+        hashes += 1;
+        j += 1;
+    }
+    if j < ch.len() && ch[j] == '"' {
+        Some((j + 1 - i, hashes))
+    } else {
+        None
+    }
+}
+
+/// Extract rule ids from a `lint: allow(r1, r2)` marker in a comment.
+fn parse_allows(comment: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    if let Some(pos) = comment.find("lint:") {
+        let after = comment[pos + 5..].trim_start();
+        if let Some(body) = after.strip_prefix("allow(") {
+            if let Some(end) = body.find(')') {
+                for r in body[..end].split(',') {
+                    let r = r.trim().to_ascii_lowercase();
+                    if !r.is_empty() {
+                        out.push(r);
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn one(src: &str) -> Line {
+        let mut sf = scan("x.rs", src);
+        sf.lines.remove(0)
+    }
+
+    #[test]
+    fn strings_blank_but_keep_shape() {
+        let l = one(r#"let s = "HashMap inside"; s.len()"#);
+        assert!(!l.code.contains("HashMap"));
+        assert!(l.code.contains(".len()"));
+        // length and quotes preserved
+        assert_eq!(l.code.len(), r#"let s = "HashMap inside"; s.len()"#.len());
+        assert!(l.code.contains(r#""              ""#));
+    }
+
+    #[test]
+    fn escaped_quote_does_not_end_string() {
+        let l = one(r#"let s = "a\"b.unwrap()"; ok()"#);
+        assert!(!l.code.contains(".unwrap()"));
+        assert!(l.code.contains("ok()"));
+    }
+
+    #[test]
+    fn line_comment_moves_to_comment_channel() {
+        let l = one("foo(); // trailing .unwrap() note");
+        assert!(!l.code.contains(".unwrap()"));
+        assert!(l.comment.contains(".unwrap()"));
+    }
+
+    #[test]
+    fn nested_block_comment_spans_lines() {
+        let sf = scan("x.rs", "a(); /* one /* two */ still */ b();\nc();");
+        assert!(sf.lines[0].code.contains("a();"));
+        assert!(sf.lines[0].code.contains("b();"));
+        assert!(!sf.lines[0].code.contains("two"));
+        assert!(sf.lines[1].code.contains("c();"));
+    }
+
+    #[test]
+    fn block_comment_left_open_carries() {
+        let sf = scan("x.rs", "a(); /* open\n.unwrap() inside */ b();");
+        assert!(!sf.lines[1].code.contains(".unwrap()"));
+        assert!(sf.lines[1].code.contains("b();"));
+    }
+
+    #[test]
+    fn raw_string_with_hashes() {
+        let l = one(r##"let s = r#"quote " and .unwrap() in raw"# ; t()"##);
+        assert!(!l.code.contains(".unwrap()"));
+        assert!(l.code.contains("t()"));
+    }
+
+    #[test]
+    fn char_literal_quote_does_not_open_string() {
+        let l = one("if c == '\"' { x.unwrap() }");
+        assert!(l.code.contains(".unwrap()"), "code after the char literal survives");
+    }
+
+    #[test]
+    fn char_literal_brace_is_blanked() {
+        let l = one("if c == '{' { d += 1; }");
+        let opens = l.code.matches('{').count();
+        let closes = l.code.matches('}').count();
+        assert_eq!(opens, closes, "blanked char literal keeps braces balanced");
+    }
+
+    #[test]
+    fn lifetime_tick_passes_through() {
+        let l = one("fn f<'a>(x: &'a str) -> &'a str { x }");
+        assert!(l.code.contains("&'a str"));
+    }
+
+    #[test]
+    fn trailing_allow_lands_on_its_line() {
+        let l = one("danger(); // lint: allow(r3): metrics only");
+        assert_eq!(l.allows, vec!["r3".to_string()]);
+    }
+
+    #[test]
+    fn comment_only_allow_carries_to_next_code_line() {
+        let sf = scan("x.rs", "// lint: allow(r1, r2)\n// more prose\ndanger();");
+        assert!(sf.lines[0].allows.is_empty());
+        assert!(sf.lines[2].allows.contains(&"r1".to_string()));
+        assert!(sf.lines[2].allows.contains(&"r2".to_string()));
+    }
+
+    #[test]
+    fn cfg_test_marks_tail_exempt() {
+        let sf = scan("x.rs", "real();\n#[cfg(test)]\nmod tests {}\n");
+        assert!(!sf.is_test_line(1));
+        assert!(sf.is_test_line(2));
+        assert!(sf.is_test_line(3));
+    }
+
+    #[test]
+    fn allow_inside_string_is_not_parsed() {
+        let l = one(r#"let s = "lint: allow(r1)"; danger()"#);
+        assert!(l.allows.is_empty(), "allow must come from a comment, not a string");
+    }
+}

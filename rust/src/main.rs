@@ -7,10 +7,15 @@
 //!   export          write a weights-only artifact from a checkpoint
 //!   generate        one-shot greedy decode (the serve-parity oracle)
 //!   memory          print the memory-model breakdown for a paper model
+//!   lint            project static analysis (determinism & concurrency rules)
 //!   info            list artifacts + experiment ids
 //!
 //! Common flags: --artifacts DIR --out DIR --workers N --scale F
 //! (scale < 1 shrinks step counts for smoke runs).
+
+// The whole crate is safe Rust except the one signal(2) FFI site below,
+// which carries a scoped allow + SAFETY comment (lint rule r8).
+#![deny(unsafe_code)]
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -52,6 +57,7 @@ fn main() {
                 Err(e) => fail(e),
             }
         }
+        Some("lint") => cmd_lint(&args),
         Some("info") => cmd_info(&args),
         _ => {
             eprintln!("{USAGE}");
@@ -164,6 +170,17 @@ USAGE:
               [--seq N]    one-shot greedy decode, printing {\"tokens\":[..]} —
               the deterministic oracle the serve smoke gate compares against
   alada memory [--model gpt2-small|gpt2-xl|t5-small] [--batch N] [--ranks N]
+  alada lint [--json] [--rules] [PATH..]
+              project static analysis: the determinism & concurrency rules
+              (r1-r8: no unordered maps / float reductions / wall-clock in
+              step paths, typed-error transport/serve, phase-stamped
+              TransportError, no narrowing optimizer casts, no lock held
+              across blocking send/recv/join, SAFETY-commented unsafe).
+              Exits non-zero with file:line diagnostics on any violation;
+              `// lint: allow(<rule>): reason` suppresses one line. --json
+              prints a schema-stable machine report; --rules lists the rule
+              table. Default PATH: rust/src. check.sh runs this between
+              clippy and the tests.
   alada report [--out DIR]        render results/*.csv into results/REPORT.md
   alada info [--artifacts DIR]
 
@@ -1088,6 +1105,7 @@ fn stop_requested() -> bool {
 /// new dependencies). The handler only stores an atomic — async-signal
 /// safe — and the foreground loop does the actual shutdown work.
 #[cfg(unix)]
+#[allow(unsafe_code)] // the one FFI site the crate-root deny carves out
 fn install_stop_signals() {
     extern "C" fn on_signal(_sig: i32) {
         SERVE_STOP.store(true, std::sync::atomic::Ordering::SeqCst);
@@ -1097,6 +1115,9 @@ fn install_stop_signals() {
     }
     const SIGINT: i32 = 2;
     const SIGTERM: i32 = 15;
+    // SAFETY: signal(2) with a handler that only does an atomic store is
+    // async-signal-safe; the fn pointer has the exact C ABI the kernel
+    // expects, and this runs once from main before any server threads.
     unsafe {
         signal(SIGINT, on_signal);
         signal(SIGTERM, on_signal);
@@ -1106,6 +1127,37 @@ fn install_stop_signals() {
 /// Non-unix builds keep the old park-forever foreground behaviour.
 #[cfg(not(unix))]
 fn install_stop_signals() {}
+
+fn cmd_lint(args: &Args) -> i32 {
+    if args.bool("rules") {
+        for r in alada::lint::RULES {
+            println!("{}  {:<26} {}", r.id, r.title, r.summary);
+        }
+        return 0;
+    }
+    let json = args.bool("json");
+    warn_unknown(args);
+    let paths: Vec<String> = if args.positional.is_empty() {
+        vec!["rust/src".to_string()]
+    } else {
+        args.positional.clone()
+    };
+    match alada::lint::run(&paths) {
+        Ok(report) => {
+            if json {
+                println!("{}", report.to_json().to_string_compact());
+            } else {
+                print!("{}", report.render_text());
+            }
+            if report.clean() {
+                0
+            } else {
+                1
+            }
+        }
+        Err(e) => fail(e),
+    }
+}
 
 fn cmd_export(args: &Args) -> i32 {
     let run = || -> anyhow::Result<()> {

@@ -61,7 +61,7 @@ impl Optimizer for Adafactor {
                     kernels::factor_ema(r, &rsum, b2, cols as f32);
                     kernels::factor_ema(c, &csum, b2, rows as f32);
                     // rec(r, c) = r̂ ĉᵀ / mean(r̂); descent in a second pass
-                    let mean_r = r.iter().sum::<f32>() / rows as f32 * bc;
+                    let mean_r = kernels::sum(r) / rows as f32 * bc;
                     let inv_mean = 1.0 / mean_r;
                     let xd = x.data_mut();
                     for i in 0..rows {
@@ -136,7 +136,7 @@ impl Optimizer for Adafactor {
                 }
             }
         }
-        self.t = step as u32;
+        self.t = super::step_u32(step);
         Ok(())
     }
 

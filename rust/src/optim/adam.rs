@@ -81,7 +81,7 @@ impl Optimizer for Adam {
             u.data_mut().copy_from_slice(&data[off + n..off + 2 * n]);
             off += 2 * n;
         }
-        self.t = step as u32;
+        self.t = super::step_u32(step);
         Ok(())
     }
 

@@ -453,7 +453,7 @@ impl Optimizer for Alada {
         }
         // t > 0 also skips the t = 0 ‖G₀‖² init, whose products (p, q,
         // v₀) the imported state already carries.
-        self.t = step as u32;
+        self.t = super::step_u32(step);
         Ok(())
     }
 

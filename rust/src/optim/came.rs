@@ -68,7 +68,7 @@ impl Optimizer for Came {
             }
             kernels::factor_ema(&mut slot.r, &rsum, b2, cols as f32);
             kernels::factor_ema(&mut slot.c, &csum, b2, rows as f32);
-            let mean_r = slot.r.iter().sum::<f32>() / rows as f32 * bc2;
+            let mean_r = kernels::sum(&slot.r) / rows as f32 * bc2;
             let inv_mean = 1.0 / mean_r.max(1e-30);
 
             // first moment (full) + instability statistics of (u_hat − m)²
@@ -86,7 +86,7 @@ impl Optimizer for Came {
             }
             kernels::factor_ema(&mut slot.ur, &inst_r, b3, cols as f32);
             kernels::factor_ema(&mut slot.uc, &inst_c, b3, rows as f32);
-            let mean_ur = slot.ur.iter().sum::<f32>() / rows as f32;
+            let mean_ur = kernels::sum(&slot.ur) / rows as f32;
             let inv_mean_u = 1.0 / mean_ur.max(1e-30);
 
             // confidence-scaled descent: x -= lr * m / sqrt(rec(ur, uc))
@@ -140,7 +140,7 @@ impl Optimizer for Came {
                 off += part.len();
             }
         }
-        self.t = step as u32;
+        self.t = super::step_u32(step);
         Ok(())
     }
 

@@ -111,6 +111,7 @@ impl<O> Guard<O> {
             let u = (n - o) as f64;
             sq += u * u;
         }
+        // lint: allow(r6): f64 accumulation is deliberate; the final rms fits f32 fine
         let rms = (sq / new.len().max(1) as f64).sqrt() as f32;
         if rms > d {
             // Adafactor Eq. (clipped update): u / max(1, RMS(u)/d).

@@ -282,6 +282,17 @@ pub fn check_finite(what: &str, xs: &[f32]) -> Result<()> {
     )
 }
 
+/// The one sanctioned `usize -> u32` step-counter narrowing. Every
+/// optimizer stamps `self.t` from the engine's `usize` step; funneling
+/// the cast through here keeps lint rule r6 (no narrowing `as` in
+/// update math) meaningful — a new cast site has to either use this or
+/// argue its own allow comment.
+pub(crate) fn step_u32(step: usize) -> u32 {
+    debug_assert!(step <= u32::MAX as usize, "step counter overflowed u32: {step}");
+    // lint: allow(r6): sole audited narrowing, guarded by the debug_assert above
+    step as u32
+}
+
 #[cfg(test)]
 pub(crate) mod testutil {
     use super::*;

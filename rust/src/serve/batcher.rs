@@ -16,14 +16,20 @@
 //! `max_new` is honoured by decoding the batch to the largest request's
 //! budget and truncating each row to its own.
 
+// clippy's disallowed-methods backs up lint rule r3 (no wall-clock in
+// step paths); the batcher's clock reads are latency accounting and the
+// size-or-deadline cut — serving policy, not trajectory math.
+#![allow(clippy::disallowed_methods)]
+
 use std::collections::VecDeque;
 use std::sync::mpsc;
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, PoisonError};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, Context, Result};
 
+use crate::serve::lock_unpoisoned;
 use crate::serve::stats::ServeStats;
 use crate::train::decode::{greedy_decode, TokenLogits};
 use crate::util::log;
@@ -86,7 +92,7 @@ impl Batcher {
         queue_cap: usize,
         workers: usize,
         stats: Arc<ServeStats>,
-    ) -> Arc<Batcher> {
+    ) -> Result<Arc<Batcher>> {
         let max_batch = max_batch.clamp(1, model.max_batch());
         let workers = workers.max(1);
         let queue_cap = queue_cap.max(1);
@@ -109,7 +115,7 @@ impl Batcher {
                 std::thread::Builder::new()
                     .name("serve-cutter".into())
                     .spawn(move || b.run_cutter(max_batch, max_wait, batch_tx, &stats))
-                    .expect("spawn cutter"),
+                    .context("spawning the serve cutter thread")?,
             );
         }
         for w in 0..workers {
@@ -119,18 +125,18 @@ impl Batcher {
                 std::thread::Builder::new()
                     .name(format!("serve-worker-{w}"))
                     .spawn(move || run_worker(&*m, &rx))
-                    .expect("spawn worker"),
+                    .with_context(|| format!("spawning serve worker {w}"))?,
             );
         }
-        *batcher.threads.lock().unwrap() = threads;
-        batcher
+        *lock_unpoisoned(&batcher.threads) = threads;
+        Ok(batcher)
     }
 
     /// Enqueue one request; `Full` once `queue_cap` rows are waiting.
     pub fn submit(&self, req: GenRequest) -> Submit {
         let (tx, rx) = mpsc::channel();
         {
-            let mut q = self.queue.lock().unwrap();
+            let mut q = lock_unpoisoned(&self.queue);
             if q.closed || q.items.len() >= self.cap {
                 return Submit::Full;
             }
@@ -142,14 +148,14 @@ impl Batcher {
 
     /// Rows currently waiting (tests and `/stats` introspection).
     pub fn queued(&self) -> usize {
-        self.queue.lock().unwrap().items.len()
+        lock_unpoisoned(&self.queue).items.len()
     }
 
     /// Stop accepting work, drain what's queued, join every thread.
     pub fn shutdown(&self) {
-        self.queue.lock().unwrap().closed = true;
+        lock_unpoisoned(&self.queue).closed = true;
         self.cond.notify_all();
-        let threads = std::mem::take(&mut *self.threads.lock().unwrap());
+        let threads = std::mem::take(&mut *lock_unpoisoned(&self.threads));
         for t in threads {
             let _ = t.join();
         }
@@ -164,10 +170,10 @@ impl Batcher {
     ) {
         loop {
             let batch = {
-                let mut q = self.queue.lock().unwrap();
+                let mut q = lock_unpoisoned(&self.queue);
                 // sleep until there's something to time against
                 while q.items.is_empty() && !q.closed {
-                    q = self.cond.wait(q).unwrap();
+                    q = self.cond.wait(q).unwrap_or_else(PoisonError::into_inner);
                 }
                 if q.items.is_empty() && q.closed {
                     return; // drained and closed: workers end when tx drops
@@ -182,7 +188,10 @@ impl Batcher {
                     if now >= deadline {
                         break;
                     }
-                    let (guard, _) = self.cond.wait_timeout(q, deadline - now).unwrap();
+                    let (guard, _) = self
+                        .cond
+                        .wait_timeout(q, deadline - now)
+                        .unwrap_or_else(PoisonError::into_inner);
                     q = guard;
                     if q.items.is_empty() {
                         break; // closed-and-drained race; outer loop re-checks
@@ -205,7 +214,13 @@ impl Batcher {
 
 fn run_worker<M: TokenLogits + ?Sized>(model: &M, rx: &Mutex<mpsc::Receiver<Vec<Pending>>>) {
     loop {
-        let batch = match rx.lock().unwrap().recv() {
+        // Pickup is serialized on purpose: the shared channel Receiver
+        // lives behind this mutex and whichever worker wins the lock
+        // takes the next batch. Holding it across `recv` cannot
+        // deadlock — the cutter's `send` takes no lock, so there is no
+        // cycle; the hold IS the hand-off point.
+        // lint: allow(r7): lock-then-recv is the intended worker-pool pickup
+        let batch = match lock_unpoisoned(rx).recv() {
             Ok(b) => b,
             Err(_) => return, // cutter gone: shutdown
         };
@@ -303,7 +318,7 @@ mod tests {
 
     #[test]
     fn single_request_round_trips() {
-        let b = Batcher::start(model(0), 4, Duration::from_millis(1), 8, 1, stats());
+        let b = Batcher::start(model(0), 4, Duration::from_millis(1), 8, 1, stats()).expect("batcher");
         let rx = match b.submit(req(1, 3, 3)) {
             Submit::Queued(rx) => rx,
             Submit::Full => panic!("queue unexpectedly full"),
@@ -318,7 +333,7 @@ mod tests {
     fn requests_coalesce_into_one_batch() {
         // deadline far out: the cut must come from reaching max_batch
         let st = stats();
-        let b = Batcher::start(model(0), 2, Duration::from_secs(5), 8, 1, Arc::clone(&st));
+        let b = Batcher::start(model(0), 2, Duration::from_secs(5), 8, 1, Arc::clone(&st)).expect("batcher");
         let rx1 = match b.submit(req(1, 2, 2)) {
             Submit::Queued(rx) => rx,
             Submit::Full => panic!("full"),
@@ -343,7 +358,7 @@ mod tests {
     fn full_queue_bounces_instead_of_growing() {
         // cap 1 and a long deadline: the first request parks in the
         // queue, so the second must bounce deterministically
-        let b = Batcher::start(model(0), 8, Duration::from_secs(2), 1, 1, stats());
+        let b = Batcher::start(model(0), 8, Duration::from_secs(2), 1, 1, stats()).expect("batcher");
         let rx = match b.submit(req(1, 3, 1)) {
             Submit::Queued(rx) => rx,
             Submit::Full => panic!("first submit bounced"),
@@ -355,7 +370,7 @@ mod tests {
 
     #[test]
     fn shutdown_drains_queued_work() {
-        let b = Batcher::start(model(5), 4, Duration::from_secs(2), 16, 2, stats());
+        let b = Batcher::start(model(5), 4, Duration::from_secs(2), 16, 2, stats()).expect("batcher");
         let rxs: Vec<_> = (0..6)
             .map(|i| match b.submit(req(i, (i % 10) as i32 + 2, 2)) {
                 Submit::Queued(rx) => rx,

@@ -42,6 +42,16 @@ pub use model::MlpLm;
 pub use server::Server;
 pub use stats::ServeStats;
 
+/// Lock a mutex, recovering the guard from a poisoned lock instead of
+/// panicking. The serve path's typed-error contract (lint rule r4)
+/// forbids `unwrap` here, and recovery is sound: the protected state is
+/// a plain FIFO/handle list kept consistent by each critical section,
+/// so a worker that panicked mid-decode must not take the whole server
+/// down with it.
+pub(crate) fn lock_unpoisoned<T>(m: &std::sync::Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
 /// Front-end knobs (`alada serve` flags map 1:1 onto these).
 pub struct ServeConfig {
     /// Bind address; port 0 picks an ephemeral port.

@@ -28,7 +28,7 @@ use crate::serve::batcher::{Batcher, GenRequest, Submit};
 use crate::serve::http::{self, Request};
 use crate::serve::model::MlpLm;
 use crate::serve::stats::ServeStats;
-use crate::serve::ServeConfig;
+use crate::serve::{lock_unpoisoned, ServeConfig};
 use crate::train::decode::TokenLogits;
 use crate::util::{log, Json};
 
@@ -66,7 +66,8 @@ impl Server {
             cfg.queue_cap,
             cfg.workers,
             Arc::clone(&stats),
-        );
+        )
+        .context("starting the request batcher")?;
         let inner = Arc::new(Inner {
             model,
             tokenizer,
@@ -101,7 +102,10 @@ impl Server {
     /// Block on the accept loop — the `alada serve` foreground mode
     /// (returns only after `shutdown`, or never).
     pub fn join(&self) {
-        if let Some(t) = self.accept.lock().unwrap().take() {
+        // take() moves the handle out while the guard is live, so the
+        // join itself happens lock-free (lint rule r7)
+        let handle = lock_unpoisoned(&self.accept).take();
+        if let Some(t) = handle {
             let _ = t.join();
         }
     }
@@ -111,7 +115,8 @@ impl Server {
         self.inner.stop.store(true, Ordering::SeqCst);
         // unblock accept() with a throwaway connection
         let _ = TcpStream::connect(self.addr);
-        if let Some(t) = self.accept.lock().unwrap().take() {
+        let handle = lock_unpoisoned(&self.accept).take();
+        if let Some(t) = handle {
             let _ = t.join();
         }
         self.inner.batcher.shutdown();

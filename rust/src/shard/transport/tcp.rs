@@ -46,6 +46,10 @@
 //! mesh. Mesh hellos carry that round number so stragglers from a dead
 //! generation are dropped at accept instead of corrupting the new mesh.
 
+// clippy's disallowed-methods backs up lint rule r3 (no wall-clock in
+// step paths); I/O deadlines are the liveness contract, not trajectory math.
+#![allow(clippy::disallowed_methods)]
+
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::Arc;
@@ -346,11 +350,16 @@ impl Tcp {
         let ranks = expect_pids.len() + 1;
         let mut table = vec![my_addr];
         for j in &joins {
-            table.push(j.as_ref().expect("join collected").0.clone());
+            let Some((addr, _)) = j.as_ref() else {
+                bail!("join round ended with an uncollected worker slot");
+            };
+            table.push(addr.clone());
         }
         check_duplicates(&table).context("join round address table")?;
         for (i, j) in joins.iter_mut().enumerate() {
-            let (_, s) = j.as_mut().expect("join collected");
+            let Some((_, s)) = j.as_mut() else {
+                bail!("join round ended with an uncollected worker slot");
+            };
             write_u32(s, gen)?;
             write_u32(s, (i + 1) as u32)?;
             write_u32(s, ranks as u32)?;
@@ -457,21 +466,28 @@ impl Transport for Tcp {
     fn recv(&mut self, from: usize, buf: &mut Vec<f32>) -> Result<Option<Vec<f32>>, TransportError> {
         assert!(from != self.rank, "tcp recv from self (collective bug)");
         let lost = TransportError::PeerLost { rank: from, phase: "" };
-        if self.inc[from].is_none() {
-            return Err(lost);
-        }
         let mut hdr = [0u8; HDR];
-        if self.inc[from].as_mut().expect("checked").read_exact(&mut hdr).is_err() {
-            // EOF/RST (peer died) or the progress read deadline passed
-            // (peer wedged): either way the pair is unusable — a timed
-            // out read may have consumed a partial frame.
+        // EOF/RST (peer died), the progress read deadline (peer wedged),
+        // or an already-poisoned slot: either way the pair is unusable —
+        // a timed out read may have consumed a partial frame.
+        let head_ok = match self.inc[from].as_mut() {
+            Some(s) => s.read_exact(&mut hdr).is_ok(),
+            None => false,
+        };
+        if !head_ok {
             self.inc[from] = None;
             return Err(lost);
         }
         let n = u32::from_le_bytes([hdr[0], hdr[1], hdr[2], hdr[3]]) as usize;
-        let want = u64::from_le_bytes(hdr[4..HDR].try_into().expect("8-byte checksum slot"));
+        let mut ck_bytes = [0u8; 8];
+        ck_bytes.copy_from_slice(&hdr[4..HDR]);
+        let want = u64::from_le_bytes(ck_bytes);
         self.wire.resize(4 * n, 0);
-        if self.inc[from].as_mut().expect("checked").read_exact(&mut self.wire).is_err() {
+        let payload_ok = match self.inc[from].as_mut() {
+            Some(s) => s.read_exact(&mut self.wire).is_ok(),
+            None => false,
+        };
+        if !payload_ok {
             self.inc[from] = None;
             return Err(lost);
         }
@@ -604,7 +620,14 @@ fn rendezvous_serve(
             p => bail!("unknown hello purpose {p}"),
         }
     }
-    let table: Vec<String> = table.into_iter().map(|a| a.expect("every slot filled")).collect();
+    let mut full = Vec::with_capacity(table.len());
+    for (r, a) in table.into_iter().enumerate() {
+        match a {
+            Some(a) => full.push(a),
+            None => bail!("rendezvous ended with no address for rank {r}"),
+        }
+    }
+    let table = full;
     check_duplicates(&table).context("rendezvous address table")?;
     for (_, mut s) in registrations {
         write_u32(&mut s, ranks as u32)?;

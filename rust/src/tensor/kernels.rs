@@ -47,6 +47,29 @@ pub fn all_finite(x: &[f32]) -> bool {
     s == 0.0
 }
 
+/// Plain sum with LANES independent accumulators. This is the one
+/// blessed f32 reduction for optimizer code — lint rule r2 forbids ad
+/// hoc `.sum::<f32>()` outside this module so every mean/norm shares a
+/// single, fixed association order.
+#[inline]
+pub fn sum(x: &[f32]) -> f32 {
+    let split = x.len() - x.len() % LANES;
+    let mut acc = [0.0f32; LANES];
+    for c in x[..split].chunks_exact(LANES) {
+        for l in 0..LANES {
+            acc[l] += c[l];
+        }
+    }
+    let mut s = 0.0f32;
+    for &l in &acc {
+        s += l;
+    }
+    for &v in &x[split..] {
+        s += v;
+    }
+    s
+}
+
 /// Dot product with LANES independent accumulators.
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {

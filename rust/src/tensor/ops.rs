@@ -111,6 +111,7 @@ pub fn softmax_rows(t: &mut Tensor) {
     let data = t.data_mut();
     for i in 0..m {
         let row = &mut data[i * n..(i + 1) * n];
+        // lint: allow(r2): running max is order-independent
         let mx = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
         let mut z = 0.0f32;
         for x in row.iter_mut() {

@@ -4,7 +4,7 @@
 //! Table II: corpus BLEU (sacreBLEU-style BLEU-4 with brevity penalty).
 //! Table III: perplexity. Fig. 2-4: cumulative average of training loss.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 /// Binary/multiclass accuracy.
 pub fn accuracy(preds: &[i32], labels: &[i32]) -> f64 {
@@ -81,13 +81,13 @@ pub fn bleu(hypotheses: &[Vec<i32>], references: &[Vec<i32>]) -> f64 {
             if hyp.len() < n {
                 continue;
             }
-            let mut ref_counts: HashMap<&[i32], usize> = HashMap::new();
+            let mut ref_counts: BTreeMap<&[i32], usize> = BTreeMap::new();
             if r.len() >= n {
                 for w in r.windows(n) {
                     *ref_counts.entry(w).or_insert(0) += 1;
                 }
             }
-            let mut hyp_counts: HashMap<&[i32], usize> = HashMap::new();
+            let mut hyp_counts: BTreeMap<&[i32], usize> = BTreeMap::new();
             for w in hyp.windows(n) {
                 *hyp_counts.entry(w).or_insert(0) += 1;
             }

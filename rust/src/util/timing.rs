@@ -4,6 +4,10 @@
 //! median / MAD / mean / min so the `cargo bench` targets print stable,
 //! comparable numbers. Used by rust/benches/*.rs (harness = false).
 
+// clippy's disallowed-methods backs up lint rule r3 (no wall-clock in
+// step paths); this module IS the sanctioned timing surface.
+#![allow(clippy::disallowed_methods)]
+
 use std::time::Instant;
 
 /// Result of one benchmark case.

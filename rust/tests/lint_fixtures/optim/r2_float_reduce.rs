@@ -1,0 +1,20 @@
+//! Lint fixture for r2 (no-float-reductions): ad hoc f32 sums and
+//! float folds outside `tensor::kernels` must fire; a usize product
+//! must not; the allow comment suppresses an order-independent max.
+
+pub fn mean(xs: &[f32]) -> f32 {
+    let total = xs.iter().sum::<f32>();
+    total / xs.len() as f32
+}
+
+pub fn norm1(xs: &[f32]) -> f32 {
+    xs.iter().fold(0.0f32, |a, &x| a + x.abs())
+}
+
+pub fn elems(shape: &[usize]) -> usize {
+    shape.iter().product::<usize>()
+}
+
+pub fn max_abs(xs: &[f32]) -> f32 {
+    xs.iter().fold(0.0f32, |a, &x| a.max(x.abs())) // lint: allow(r2): max is order-independent
+}

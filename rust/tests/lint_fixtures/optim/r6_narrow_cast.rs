@@ -1,0 +1,27 @@
+//! Lint fixture for r6 (no-narrowing-casts): usize→u32 and f64→f32 in
+//! optimizer math must fire; widening and f32-only casts must not; the
+//! allow comment suppresses one audited site.
+
+pub struct State {
+    t: u32,
+}
+
+impl State {
+    pub fn stamp(&mut self, step: usize) {
+        self.t = step as u32;
+    }
+}
+
+pub fn shrink(acc: f64) -> f32 { acc as f32 }
+
+pub fn widen(x: u32) -> usize {
+    x as usize
+}
+
+pub fn ratio(n: usize, d: usize) -> f32 {
+    n as f32 / d.max(1) as f32
+}
+
+pub fn allowed(step: usize) -> u32 {
+    step as u32 // lint: allow(r6): fixture shows the escape hatch
+}

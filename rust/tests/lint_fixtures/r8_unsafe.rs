@@ -1,0 +1,16 @@
+//! Lint fixture for r8 (safety-commented-unsafe): a bare `unsafe`
+//! must fire anywhere in the tree; one with a `// SAFETY:` comment in
+//! the three lines above must not; the allow comment suppresses one.
+
+pub fn raw_read(p: *const u32) -> u32 {
+    unsafe { *p }
+}
+
+pub fn documented(p: *const u32) -> u32 {
+    // SAFETY: caller contract — p is valid for reads and aligned.
+    unsafe { *p }
+}
+
+pub fn allowed(p: *const u32) -> u32 {
+    unsafe { *p } // lint: allow(r8): fixture shows the escape hatch
+}

@@ -1,0 +1,30 @@
+//! Lint fixture for r7 (no-lock-across-blocking): a same-statement
+//! lock+recv and a let-bound guard held across a send must fire;
+//! drop-before-send must not; the allow comment suppresses one site.
+
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::{Mutex, MutexGuard, PoisonError};
+
+fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+pub fn same_statement(q: &Mutex<Receiver<u32>>) -> u32 {
+    lock_unpoisoned(q).recv().unwrap_or(0)
+}
+
+pub fn held_across(q: &Mutex<u32>, tx: &Sender<u32>) {
+    let g = lock_unpoisoned(q);
+    tx.send(*g).ok();
+}
+
+pub fn dropped_first(q: &Mutex<u32>, tx: &Sender<u32>) {
+    let g = lock_unpoisoned(q);
+    let v = *g;
+    drop(g);
+    tx.send(v).ok();
+}
+
+pub fn allowed(q: &Mutex<Receiver<u32>>) -> u32 {
+    lock_unpoisoned(q).recv().unwrap_or(0) // lint: allow(r7): fixture shows the escape hatch
+}

@@ -1,0 +1,16 @@
+//! Lint fixture for r1 (no-unordered-maps): the path contains `/shard/`
+//! so unordered maps must fire; the allow comment suppresses one line.
+
+use std::collections::HashMap;
+
+pub fn histogram(keys: &[u32]) -> Vec<(u32, usize)> {
+    let mut m = HashMap::new();
+    for &k in keys {
+        *m.entry(k).or_insert(0usize) += 1;
+    }
+    let mut out: Vec<(u32, usize)> = m.into_iter().collect();
+    out.sort_unstable();
+    out
+}
+
+use std::collections::HashSet; // lint: allow(r1): fixture shows the escape hatch

@@ -1,0 +1,21 @@
+//! Lint fixture for r3 (no-wall-clock): clock reads in a step path
+//! must fire; `Instant` in type position must not; the allow comment
+//! covers a metrics-only read.
+
+pub fn jitter_nanos() -> u128 {
+    let t0 = std::time::Instant::now();
+    t0.elapsed().as_nanos()
+}
+
+pub fn epoch_guess() -> bool {
+    let t = std::time::SystemTime::now();
+    t.elapsed().is_ok()
+}
+
+pub fn deadline_type(t: std::time::Instant) -> std::time::Instant {
+    t
+}
+
+pub fn telemetry_stamp() -> std::time::Instant {
+    std::time::Instant::now() // lint: allow(r3): metrics only, never control flow
+}

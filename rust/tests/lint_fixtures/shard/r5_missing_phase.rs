@@ -1,0 +1,32 @@
+//! Lint fixture for r5 (phase-stamped-errors): constructions without a
+//! phase (or with an empty one) must fire; a stamped construction and a
+//! `{ .. }` match pattern must not; the allow comment suppresses one.
+
+use crate::shard::transport::TransportError;
+
+pub fn lost(rank: usize) -> TransportError {
+    TransportError::PeerLost { rank }
+}
+
+pub fn corrupt(rank: usize) -> TransportError {
+    TransportError::Corrupt {
+        rank,
+        detail: String::new(),
+    }
+}
+
+pub fn empty_stamp(rank: usize) -> TransportError {
+    TransportError::PeerLost { rank, phase: "" }
+}
+
+pub fn stamped(rank: usize) -> TransportError {
+    TransportError::PeerLost { rank, phase: "reduce" }
+}
+
+pub fn is_lost(e: &TransportError) -> bool {
+    matches!(e, TransportError::PeerLost { .. })
+}
+
+pub fn allowed(rank: usize) -> TransportError {
+    TransportError::PeerLost { rank } // lint: allow(r5): fixture shows the escape hatch
+}

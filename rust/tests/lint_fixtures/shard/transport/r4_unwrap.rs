@@ -1,0 +1,23 @@
+//! Lint fixture for r4 (no-panic-paths): unwrap/panic! in the
+//! transport path must fire; `unwrap_or` and `assert!` must not; the
+//! allow comment suppresses one site.
+
+pub fn read_header(buf: &[u8]) -> u32 {
+    let head: [u8; 4] = buf[..4].try_into().unwrap();
+    u32::from_le_bytes(head)
+}
+
+pub fn reject_empty(len: usize) {
+    if len == 0 {
+        panic!("empty frame");
+    }
+}
+
+pub fn fallback(v: Option<u32>) -> u32 {
+    assert!(true);
+    v.unwrap_or(7)
+}
+
+pub fn allowed(v: Option<u32>) -> u32 {
+    v.unwrap() // lint: allow(r4): fixture shows the escape hatch
+}

@@ -1,0 +1,177 @@
+//! Integration gate for `alada lint` (rust/src/lint/).
+//!
+//! Three contracts, each pinned here so a rule or scanner change that
+//! weakens them fails loudly:
+//!
+//! 1. **Self-clean** — the pass over `rust/src` reports zero
+//!    violations (this is the invariant `scripts/check.sh` gates on).
+//! 2. **Each rule fires** — every fixture under
+//!    `tests/lint_fixtures/` produces exactly its expected
+//!    `(line, rule)` set, and the `// lint: allow(..)` escape hatch
+//!    suppresses exactly its expected count.
+//! 3. **The JSON report is schema-stable** — version, field names, and
+//!    types round-trip through `util::json`, since external tooling
+//!    keys on them.
+
+use alada::lint::{self, REPORT_VERSION, RULES};
+use alada::util::json::Json;
+
+fn fixture(rel: &str) -> String {
+    format!("{}/tests/lint_fixtures/{rel}", env!("CARGO_MANIFEST_DIR"))
+}
+
+/// Lint one fixture; returns ((line, rule) pairs, allowed count).
+fn lint_one(rel: &str) -> (Vec<(usize, &'static str)>, usize) {
+    let report = lint::run(&[fixture(rel)]).expect("fixture lints");
+    assert_eq!(report.checked_files, 1, "{rel}: one file");
+    let hits = report.diagnostics.iter().map(|d| (d.line, d.rule)).collect();
+    (hits, report.allowed)
+}
+
+#[test]
+fn src_tree_is_self_clean() {
+    let src = format!("{}/src", env!("CARGO_MANIFEST_DIR"));
+    let report = lint::run(&[src]).expect("src lints");
+    assert!(
+        report.clean(),
+        "rust/src must lint clean; got:\n{}",
+        report.render_text()
+    );
+    assert!(
+        report.checked_files > 30,
+        "walker found only {} files — did the walk break?",
+        report.checked_files
+    );
+}
+
+#[test]
+fn r1_fires_on_unordered_maps() {
+    let (hits, allowed) = lint_one("shard/r1_map_iter.rs");
+    assert_eq!(hits, [(4, "r1"), (7, "r1")]);
+    assert_eq!(allowed, 1, "the HashSet allow line");
+}
+
+#[test]
+fn r2_fires_on_float_reductions() {
+    let (hits, allowed) = lint_one("optim/r2_float_reduce.rs");
+    assert_eq!(hits, [(6, "r2"), (11, "r2")], "sum::<f32> and float fold; usize product clean");
+    assert_eq!(allowed, 1, "the order-independent max allow line");
+}
+
+#[test]
+fn r3_fires_on_wall_clock() {
+    let (hits, allowed) = lint_one("shard/r3_wall_clock.rs");
+    assert_eq!(hits, [(6, "r3"), (11, "r3")], "Instant::now and SystemTime; type position clean");
+    assert_eq!(allowed, 1, "the telemetry allow line");
+}
+
+#[test]
+fn r4_fires_on_panic_paths() {
+    let (hits, allowed) = lint_one("shard/transport/r4_unwrap.rs");
+    assert_eq!(hits, [(6, "r4"), (12, "r4")], "unwrap and panic!; unwrap_or and assert! clean");
+    assert_eq!(allowed, 1);
+}
+
+#[test]
+fn r5_fires_on_unstamped_errors() {
+    let (hits, allowed) = lint_one("shard/r5_missing_phase.rs");
+    assert_eq!(
+        hits,
+        [(8, "r5"), (12, "r5"), (19, "r5")],
+        "missing phase (single + multi-line) and empty phase; stamped and pattern clean"
+    );
+    assert_eq!(allowed, 1);
+}
+
+#[test]
+fn r6_fires_on_narrowing_casts() {
+    let (hits, allowed) = lint_one("optim/r6_narrow_cast.rs");
+    assert_eq!(hits, [(11, "r6"), (15, "r6")], "usize→u32 and f64→f32; widening clean");
+    assert_eq!(allowed, 1);
+}
+
+#[test]
+fn r7_fires_on_lock_across_blocking() {
+    let (hits, allowed) = lint_one("serve/r7_lock_across_send.rs");
+    assert_eq!(
+        hits,
+        [(13, "r7"), (18, "r7")],
+        "same-statement lock+recv and guard held across send; drop-then-send clean"
+    );
+    assert_eq!(allowed, 1);
+}
+
+#[test]
+fn r8_fires_on_bare_unsafe() {
+    let (hits, allowed) = lint_one("r8_unsafe.rs");
+    assert_eq!(hits, [(6, "r8")], "bare unsafe; SAFETY-commented clean");
+    assert_eq!(allowed, 1);
+}
+
+#[test]
+fn every_rule_has_a_firing_fixture() {
+    let report = lint::run(&[fixture("")]).expect("corpus lints");
+    assert_eq!(report.checked_files, 8, "one fixture file per rule");
+    for r in RULES {
+        assert!(
+            report.diagnostics.iter().any(|d| d.rule == r.id),
+            "rule {} never fires on the corpus",
+            r.id
+        );
+    }
+    assert_eq!(report.diagnostics.len(), 16, "total corpus violations");
+    assert_eq!(report.allowed, 8, "one allow per fixture");
+}
+
+#[test]
+fn json_report_is_schema_stable() {
+    let report = lint::run(&[fixture("r8_unsafe.rs")]).expect("fixture lints");
+    let parsed = Json::parse(&report.to_json().to_string_compact()).expect("valid JSON");
+    assert_eq!(
+        parsed.get("version").and_then(Json::as_usize),
+        Some(REPORT_VERSION as usize)
+    );
+    assert_eq!(parsed.get("checked_files").and_then(Json::as_usize), Some(1));
+    assert_eq!(parsed.get("allowed").and_then(Json::as_usize), Some(1));
+    assert_eq!(parsed.get("clean").and_then(Json::as_bool), Some(false));
+    let diags = parsed.get("diagnostics").and_then(Json::as_arr).expect("diagnostics array");
+    assert_eq!(diags.len(), 1);
+    let d = &diags[0];
+    assert!(d.get("file").and_then(Json::as_str).is_some_and(|f| f.ends_with("r8_unsafe.rs")));
+    assert_eq!(d.get("line").and_then(Json::as_usize), Some(6));
+    assert_eq!(d.get("rule").and_then(Json::as_str), Some("r8"));
+    assert!(d
+        .get("message")
+        .and_then(Json::as_str)
+        .is_some_and(|m| m.contains("SAFETY")));
+}
+
+#[test]
+fn text_report_is_file_line_rule_shaped() {
+    let report = lint::run(&[fixture("r8_unsafe.rs")]).expect("fixture lints");
+    let text = report.render_text();
+    assert!(text.contains("r8_unsafe.rs:6: [r8]"), "got:\n{text}");
+    assert!(text.contains("1 files checked, 1 violation, 1 allowed"), "got:\n{text}");
+}
+
+#[test]
+fn out_of_scope_paths_stay_silent() {
+    // The same unordered-map code that fires under /shard/ is legal in
+    // a module outside every scoped rule's path set.
+    let sf = alada::lint::scanner::scan(
+        "rust/src/data/corpus.rs",
+        "use std::collections::HashMap;\nlet t = std::time::Instant::now();\n",
+    );
+    let (diags, allowed) = alada::lint::rules::check_file(&sf);
+    assert!(diags.is_empty(), "data/ is out of scope for r1/r3");
+    assert_eq!(allowed, 0);
+}
+
+#[test]
+fn rule_table_matches_the_issue_contract() {
+    let ids: Vec<&str> = RULES.iter().map(|r| r.id).collect();
+    assert_eq!(ids, ["r1", "r2", "r3", "r4", "r5", "r6", "r7", "r8"]);
+    for r in RULES {
+        assert!(!r.title.is_empty() && !r.summary.is_empty());
+    }
+}

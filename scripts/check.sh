@@ -10,6 +10,14 @@ cargo fmt --all -- --check
 echo "== cargo clippy (all targets, -D warnings) =="
 cargo clippy --all-targets -- -D warnings
 
+echo "== alada lint (project static analysis) =="
+# The in-tree determinism/concurrency pass (rust/src/lint/): unordered
+# maps, float reductions, wall-clock reads, panics in the transport and
+# serve request paths, unstamped transport errors, narrowing casts,
+# locks held across blocking calls, SAFETY-less unsafe. Exits non-zero
+# with file:line diagnostics on any violation.
+cargo run -q -- lint rust/src
+
 echo "== cargo test =="
 cargo test -q
 

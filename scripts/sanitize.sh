@@ -1,0 +1,33 @@
+#!/usr/bin/env bash
+# ThreadSanitizer pass over the concurrency-heavy suites. TSan needs a
+# nightly toolchain with rust-src (build-std recompiles core with the
+# sanitizer runtime), so this is an opt-in deep check, not part of the
+# tier-1 gate — check.sh covers the same code with the static lint
+# (rule r7) instead. Skips cleanly, exit 0, when the toolchain pieces
+# are missing so CI images without rustup stay green.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+if ! command -v rustup >/dev/null 2>&1; then
+    echo "sanitize: rustup not installed — skipping TSan pass"
+    exit 0
+fi
+if ! rustup toolchain list | grep -q '^nightly'; then
+    echo "sanitize: no nightly toolchain — skipping TSan pass"
+    exit 0
+fi
+if ! rustup component list --toolchain nightly 2>/dev/null | grep -q 'rust-src.*(installed)'; then
+    echo "sanitize: nightly rust-src component missing — skipping TSan pass"
+    exit 0
+fi
+
+host="$(rustc -vV | sed -n 's/^host: //p')"
+echo "== TSan: transport conformance + serve HTTP (target $host) =="
+# The two suites that actually cross threads: the TCP transport's
+# join-round/rendezvous machinery and the serve batcher's cutter/worker
+# pool. One test thread at a time so TSan interleaving reports stay
+# attributable.
+RUSTFLAGS="-Zsanitizer=thread" RUSTDOCFLAGS="-Zsanitizer=thread" \
+    cargo +nightly test -Zbuild-std --target "$host" \
+    --test transport_conformance --test serve_http -- --test-threads=1
+echo "sanitize: TSan pass clean"
