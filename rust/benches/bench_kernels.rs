@@ -1,0 +1,35 @@
+//! SIMD kernel micro-benchmarks: every dispatched kernel, per backend
+//! the host CPU can install, at small/medium/large lengths.
+//!
+//! Emits machine-readable `BENCH_kernels.json` (per-(kernel, backend,
+//! len) median/p95 + speedup vs the scalar oracle) so the win of the
+//! runtime-dispatched backends is a recorded, comparable number — the
+//! acceptance bar is SIMD ≥ 1.5x scalar on the reduction rows at the
+//! larger lengths. On a host with no SIMD ISA only scalar baselines are
+//! written (the comparison is skipped, never faked). The body lives in
+//! `alada::benchkit` and is smoke-run under tier-1 by
+//! rust/tests/bench_smoke.rs.
+//!
+//! harness = false (criterion unavailable offline); timing via
+//! util::timing with warmup + median/MAD.
+
+use alada::benchkit::kernels_bench;
+
+fn main() {
+    println!("== kernel cost per backend: scalar oracle vs dispatched SIMD ==");
+    let rows = kernels_bench(&[1 << 10, 1 << 14, 1 << 18], 3, 9, Some("BENCH_kernels.json"));
+
+    // the headline: reduction speedups at the largest length
+    let top = 1usize << 18;
+    let mut any = false;
+    for r in rows.iter().filter(|r| r.backend != "scalar" && r.reduction && r.len == top) {
+        println!(
+            "{}/{} @ {}: {:.2}x scalar",
+            r.kernel, r.backend, r.len, r.speedup_vs_scalar
+        );
+        any = true;
+    }
+    if !any {
+        println!("(no SIMD backend on this host — nothing to compare)");
+    }
+}

@@ -1,11 +1,12 @@
 //! Shared bodies of the `cargo bench` targets.
 //!
 //! The bench binaries (rust/benches/bench_optim.rs, bench_shard.rs,
-//! bench_serve.rs) are thin mains over these functions, and
-//! `rust/tests/bench_smoke.rs` drives the same code with tiny shapes —
-//! so the perf harness compiles and runs under the tier-1 gate and
-//! can't bit-rot between PRs. Every bench emits machine-readable JSON
-//! (BENCH_optim.json / BENCH_shard.json / BENCH_serve.json) through one
+//! bench_serve.rs, bench_kernels.rs) are thin mains over these
+//! functions, and `rust/tests/bench_smoke.rs` drives the same code with
+//! tiny shapes — so the perf harness compiles and runs under the tier-1
+//! gate and can't bit-rot between PRs. Every bench emits
+//! machine-readable JSON (BENCH_optim.json / BENCH_shard.json /
+//! BENCH_serve.json / BENCH_kernels.json) through one
 //! `write_bench_json` helper so the perf
 //! trajectory is comparable across PRs without parsing console output:
 //! per-optimizer median/p95/steps-per-sec, and per-(ranks, pipeline,
@@ -28,8 +29,9 @@ use crate::serve::{http, MlpLm, ServeConfig, Server};
 use crate::shard::{
     self, CkptConfig, Comm, MlpTask, Partition, Pipeline, ShardConfig, ShardTask, Tcp,
 };
+use crate::tensor::kernels::{table_for, Backend, Kernels, SCALAR};
 use crate::tensor::Tensor;
-use crate::util::timing::bench;
+use crate::util::timing::{bench, BenchStats};
 use crate::util::{Json, Rng};
 
 /// Write one BENCH_*.json document: `{"bench": name, ...extra, "runs":
@@ -545,6 +547,259 @@ pub fn serve_bench(
                 ("max_batch", Json::Num(8.0)),
                 ("max_wait_ms", Json::Num(2.0)),
                 ("workers", Json::Num(2.0)),
+            ],
+            entries,
+        );
+    }
+    rows
+}
+
+/// One (kernel, backend, length) measurement from [`kernels_bench`].
+pub struct KernelBenchRow {
+    pub kernel: &'static str,
+    /// `"scalar"`, `"avx2"`, or `"neon"` — only backends the host CPU
+    /// actually installs are measured (a missing ISA is skipped, never
+    /// faked).
+    pub backend: &'static str,
+    pub len: usize,
+    pub median_ns: f64,
+    pub p95_ns: f64,
+    /// Scalar median / this median at the same (kernel, len): >1.0
+    /// means faster than the oracle. Exactly 1.0 on the scalar rows.
+    pub speedup_vs_scalar: f64,
+    /// True for the lane-accumulator reductions (the rows the SIMD win
+    /// criterion reads); false for the elementwise/fused passes.
+    pub reduction: bool,
+}
+
+/// Per-kernel baselines for every backend the host can install: each of
+/// the 17 dispatched kernels is timed through its table entry at every
+/// length in `lens`, scalar first (the denominator of
+/// `speedup_vs_scalar`). Emits BENCH_kernels.json when `json_path` is
+/// given. Inputs are PCG noise; second-moment-shaped arguments are
+/// squared into the kernels' non-negative domain.
+pub fn kernels_bench(
+    lens: &[usize],
+    warmup: usize,
+    samples: usize,
+    json_path: Option<&str>,
+) -> Vec<KernelBenchRow> {
+    use std::hint::black_box;
+
+    let mut tables: Vec<Kernels> = vec![SCALAR];
+    for b in [Backend::Avx2, Backend::Neon] {
+        if let Some(t) = table_for(b) {
+            tables.push(t);
+        }
+    }
+    if tables.len() == 1 {
+        println!("kernels: no SIMD backend on this host — scalar baselines only");
+    }
+
+    let mut rows: Vec<KernelBenchRow> = Vec::new();
+    for &len in lens {
+        let mut rng = Rng::new(len as u64 + 7);
+        let a: Vec<f32> = (0..len).map(|_| rng.normal()).collect();
+        let b: Vec<f32> = (0..len).map(|_| rng.normal()).collect();
+        let g: Vec<f32> = (0..len).map(|_| rng.normal() * 0.1).collect();
+        let c: Vec<f32> = (0..len)
+            .map(|_| {
+                let v = rng.normal();
+                v * v
+            })
+            .collect();
+
+        for t in &tables {
+            let backend = t.backend.name();
+            let mut push = |kernel: &'static str, reduction: bool, stats: &BenchStats| {
+                println!("{}", stats.report());
+                rows.push(KernelBenchRow {
+                    kernel,
+                    backend,
+                    len,
+                    median_ns: stats.median_ns,
+                    p95_ns: stats.p95_ns,
+                    speedup_vs_scalar: 1.0,
+                    reduction,
+                });
+            };
+            let label = |k: &str| format!("kernels/{k}/{backend}/{len}");
+
+            // reductions: black_box the returned value so the whole
+            // call can't be dead-code-eliminated
+            let f = t.all_finite;
+            let s = bench(&label("all_finite"), warmup, samples, || {
+                black_box(f(black_box(&a)));
+            });
+            push("all_finite", true, &s);
+            let f = t.sum;
+            let s = bench(&label("sum"), warmup, samples, || {
+                black_box(f(black_box(&a)));
+            });
+            push("sum", true, &s);
+            let f = t.dot;
+            let s = bench(&label("dot"), warmup, samples, || {
+                black_box(f(black_box(&a), black_box(&b)));
+            });
+            push("dot", true, &s);
+            let f = t.sq_dot_scaled;
+            let s = bench(&label("sq_dot_scaled"), warmup, samples, || {
+                black_box(f(black_box(&a), black_box(&b), 0.37));
+            });
+            push("sq_dot_scaled", true, &s);
+
+            // elementwise/fused passes: in-place on owned buffers (the
+            // per-call drift over warmup+samples iterations is bounded
+            // by the mild constants below)
+            let f = t.sq_axpy_scaled;
+            let mut acc = c.clone();
+            let s = bench(&label("sq_axpy_scaled"), warmup, samples, || {
+                f(black_box(&mut acc), black_box(&a), 0.37, 0.83);
+            });
+            push("sq_axpy_scaled", false, &s);
+            let f = t.ema;
+            let mut dst = a.clone();
+            let s = bench(&label("ema"), warmup, samples, || {
+                f(black_box(&mut dst), black_box(&b), 0.9, 0.1);
+            });
+            push("ema", false, &s);
+            let f = t.factor_ema;
+            let mut dst = c.clone();
+            let s = bench(&label("factor_ema"), warmup, samples, || {
+                f(black_box(&mut dst), black_box(&b), 0.99, 12.0);
+            });
+            push("factor_ema", false, &s);
+            let f = t.axpy;
+            let mut y = a.clone();
+            let s = bench(&label("axpy"), warmup, samples, || {
+                f(black_box(&mut y), black_box(&b), -0.3);
+            });
+            push("axpy", false, &s);
+            let f = t.scale;
+            let mut x = a.clone();
+            let s = bench(&label("scale"), warmup, samples, || {
+                f(black_box(&mut x), 0.999);
+            });
+            push("scale", false, &s);
+            let f = t.divide;
+            let mut x = a.clone();
+            let s = bench(&label("divide"), warmup, samples, || {
+                f(black_box(&mut x), 1.001);
+            });
+            push("divide", false, &s);
+            let f = t.add_assign;
+            let mut x = a.clone();
+            let s = bench(&label("add_assign"), warmup, samples, || {
+                f(black_box(&mut x), black_box(&b));
+            });
+            push("add_assign", false, &s);
+            let f = t.alada_descent_row;
+            let mut x = a.clone();
+            let s = bench(&label("alada_descent_row"), warmup, samples, || {
+                f(
+                    black_box(&mut x),
+                    black_box(&b),
+                    black_box(&g),
+                    0.37,
+                    1.03,
+                    0.11,
+                    0.91,
+                    1e-8,
+                    0.003,
+                );
+            });
+            push("alada_descent_row", false, &s);
+            let f = t.adam_update;
+            let (mut x, mut m, mut u) = (a.clone(), b.clone(), c.clone());
+            let s = bench(&label("adam_update"), warmup, samples, || {
+                f(
+                    black_box(&mut x),
+                    black_box(&mut m),
+                    black_box(&mut u),
+                    black_box(&g),
+                    0.9,
+                    0.999,
+                    1.03,
+                    1.3,
+                    0.003,
+                    1e-8,
+                );
+            });
+            push("adam_update", false, &s);
+            let f = t.sq_eps_rowcol;
+            let mut csum = c.clone();
+            let s = bench(&label("sq_eps_rowcol"), warmup, samples, || {
+                black_box(f(black_box(&a), black_box(&mut csum), 1e-8));
+            });
+            push("sq_eps_rowcol", true, &s);
+            let f = t.factored_descent_row;
+            let mut x = a.clone();
+            let s = bench(&label("factored_descent_row"), warmup, samples, || {
+                f(black_box(&mut x), black_box(&g), black_box(&c), 0.8, 1.2, 0.9, 0.003, 1e-8);
+            });
+            push("factored_descent_row", false, &s);
+            let f = t.came_instability_row;
+            let mut inst = c.clone();
+            let s = bench(&label("came_instability_row"), warmup, samples, || {
+                black_box(f(
+                    black_box(&a),
+                    black_box(&g),
+                    black_box(&c),
+                    0.8,
+                    1.2,
+                    0.9,
+                    1e-8,
+                    black_box(&mut inst),
+                ));
+            });
+            push("came_instability_row", true, &s);
+            let f = t.came_descent_row;
+            let mut x = a.clone();
+            let s = bench(&label("came_descent_row"), warmup, samples, || {
+                f(black_box(&mut x), black_box(&b), black_box(&c), 0.8, 0.9, 0.003, 1e-8);
+            });
+            push("came_descent_row", false, &s);
+        }
+    }
+
+    // speedups against the scalar baseline at the same (kernel, len)
+    let base: BTreeMap<(&'static str, usize), f64> = rows
+        .iter()
+        .filter(|r| r.backend == "scalar")
+        .map(|r| ((r.kernel, r.len), r.median_ns))
+        .collect();
+    for r in rows.iter_mut() {
+        if let Some(&scalar_ns) = base.get(&(r.kernel, r.len)) {
+            r.speedup_vs_scalar = scalar_ns / r.median_ns.max(1e-9);
+        }
+    }
+
+    if let Some(path) = json_path {
+        let entries: Vec<Json> = rows
+            .iter()
+            .map(|r| {
+                obj(vec![
+                    ("kernel", Json::Str(r.kernel.to_string())),
+                    ("backend", Json::Str(r.backend.to_string())),
+                    ("len", Json::Num(r.len as f64)),
+                    ("median_ns", Json::Num(r.median_ns)),
+                    ("p95_ns", Json::Num(r.p95_ns)),
+                    ("speedup_vs_scalar", Json::Num(r.speedup_vs_scalar)),
+                    ("reduction", Json::Bool(r.reduction)),
+                ])
+            })
+            .collect();
+        write_bench_json(
+            path,
+            "kernels",
+            &[
+                ("samples", Json::Num(samples as f64)),
+                (
+                    "backends",
+                    Json::Arr(
+                        tables.iter().map(|t| Json::Str(t.backend.name().to_string())).collect(),
+                    ),
+                ),
             ],
             entries,
         );

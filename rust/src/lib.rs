@@ -7,8 +7,11 @@
 //! * L3 — this crate: training framework, PJRT runtime, data pipeline,
 //!   experiment coordinator, pure-Rust optimizer substrate.
 
-// The library is entirely safe Rust; the binary's lone signal-FFI site
-// carries its own scoped allow (see main.rs, lint rule r8).
+// Safe Rust throughout, with two audited exceptions that carry their
+// own scoped allows under lint rule r8's SAFETY-comment discipline: the
+// SIMD kernel backends (`tensor/kernels/{avx2,neon}.rs`, intrinsics
+// installed only after runtime feature detection) and the binary's lone
+// signal-FFI site (main.rs).
 #![deny(unsafe_code)]
 
 pub mod benchkit;

@@ -8,6 +8,7 @@
 //!   generate        one-shot greedy decode (the serve-parity oracle)
 //!   memory          print the memory-model breakdown for a paper model
 //!   lint            project static analysis (determinism & concurrency rules)
+//!   features        detected CPU SIMD features + chosen kernel backend
 //!   info            list artifacts + experiment ids
 //!
 //! Common flags: --artifacts DIR --out DIR --workers N --scale F
@@ -58,6 +59,7 @@ fn main() {
             }
         }
         Some("lint") => cmd_lint(&args),
+        Some("features") => cmd_features(&args),
         Some("info") => cmd_info(&args),
         _ => {
             eprintln!("{USAGE}");
@@ -181,6 +183,13 @@ USAGE:
               prints a schema-stable machine report; --rules lists the rule
               table. Default PATH: rust/src. check.sh runs this between
               clippy and the tests.
+  alada features [--json]
+              print detected CPU SIMD features and the kernel backend the
+              dispatcher chose (`ALADA_SIMD={auto,scalar,avx2,neon}`
+              overrides; unavailable/unknown requests fall back to scalar
+              with a note). The `kernel backend:` line also opens every
+              shard-train/serve run so bench JSONs and bug reports are
+              attributable to a dispatch decision.
   alada report [--out DIR]        render results/*.csv into results/REPORT.md
   alada info [--artifacts DIR]
 
@@ -559,6 +568,10 @@ fn cmd_shard_train(args: &Args) -> i32 {
     let spawn = args.usize_or("spawn", 0);
     let dump = args.flag("dump-params").map(String::from);
     warn_unknown(args);
+    // every process in the mesh states its dispatch decision up front
+    // (workers too — a mixed-backend mesh is still bit-identical by the
+    // kernel contract, but the logs should make the mix visible)
+    println!("{}", kernels_banner());
 
     let run = || -> anyhow::Result<()> {
         let parsed = Pipeline::parse(&pipeline_flag).ok_or_else(|| {
@@ -1066,6 +1079,7 @@ fn cmd_serve(args: &Args) -> i32 {
             model.vocab(),
             model.seq()
         );
+        println!("{}", kernels_banner());
         let cfg = ServeConfig {
             addr,
             max_batch,
@@ -1127,6 +1141,70 @@ fn install_stop_signals() {
 /// Non-unix builds keep the old park-forever foreground behaviour.
 #[cfg(not(unix))]
 fn install_stop_signals() {}
+
+/// One-line kernel dispatch report for the shard-train/serve startup
+/// logs: backend, what was requested, and the detected SIMD features —
+/// enough to attribute any bench JSON or bug report to a dispatch
+/// decision. Scripts and tests key off the `kernel backend:` prefix.
+fn kernels_banner() -> String {
+    use alada::tensor::kernels;
+    let sel = kernels::selection();
+    let detected: Vec<&str> = kernels::cpu_features()
+        .into_iter()
+        .filter(|&(_, on)| on)
+        .map(|(name, _)| name)
+        .collect();
+    let feats = if detected.is_empty() { "none".to_string() } else { detected.join("+") };
+    let mut line = format!(
+        "kernel backend: {} (requested {}; {} simd: {})",
+        sel.kernels.backend.name(),
+        sel.requested,
+        std::env::consts::ARCH,
+        feats
+    );
+    if let Some(note) = &sel.note {
+        line.push_str(" — ");
+        line.push_str(note);
+    }
+    line
+}
+
+fn cmd_features(args: &Args) -> i32 {
+    use alada::tensor::kernels;
+    use alada::util::Json;
+    let json = args.bool("json");
+    warn_unknown(args);
+    let sel = kernels::selection();
+    let feats = kernels::cpu_features();
+    if json {
+        let mut obj = std::collections::BTreeMap::new();
+        obj.insert("arch".to_string(), Json::Str(std::env::consts::ARCH.to_string()));
+        obj.insert("backend".to_string(), Json::Str(sel.kernels.backend.name().to_string()));
+        obj.insert("requested".to_string(), Json::Str(sel.requested.clone()));
+        obj.insert(
+            "note".to_string(),
+            sel.note.clone().map_or(Json::Null, Json::Str),
+        );
+        let cpu = feats
+            .iter()
+            .map(|&(name, on)| (name.to_string(), Json::Bool(on)))
+            .collect();
+        obj.insert("cpu".to_string(), Json::Obj(cpu));
+        println!("{}", Json::Obj(obj).to_string_compact());
+        return 0;
+    }
+    println!("arch: {}", std::env::consts::ARCH);
+    for (name, on) in &feats {
+        println!("cpu {name}: {}", if *on { "yes" } else { "no" });
+    }
+    println!("simd request: {}", sel.requested);
+    if let Some(note) = &sel.note {
+        println!("note: {note}");
+    }
+    // scripts (check.sh) and tests parse this exact line
+    println!("kernel backend: {}", sel.kernels.backend.name());
+    0
+}
 
 fn cmd_lint(args: &Args) -> i32 {
     if args.bool("rules") {

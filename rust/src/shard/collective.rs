@@ -338,9 +338,11 @@ impl<T: Transport> Comm<T> {
                 if partner < ranks {
                     let got = self.recv(partner)?;
                     debug_assert_eq!(got.len(), bucket.len());
-                    for (x, y) in bucket.iter_mut().zip(&got) {
-                        *x += y;
-                    }
+                    // segment-sum through the dispatched kernel: the
+                    // per-element adds are independent, so any vector
+                    // width keeps the tree order (and thus the bits)
+                    // fixed by rank count alone
+                    crate::tensor::kernels::add_assign(bucket, &got);
                     self.recycle(got);
                 }
             } else {

@@ -516,11 +516,12 @@ fn loss_anomalous(loss: f32) -> bool {
     !loss.is_finite() || loss.abs() > LOSS_CAP
 }
 
-/// The gradient half of the sentinel: fused finite scan over this
-/// rank's owned pieces of the reduced gradient. The owned slices tile
-/// the flat space across ranks, so the mesh-wide OR of these verdicts
-/// covers every reduced element exactly once at ANY rank count — which
-/// is what makes the skip decision rank-count invariant.
+/// The gradient half of the sentinel: fused finite scan (dispatched to
+/// the active SIMD backend, verdict-identical across backends) over
+/// this rank's owned pieces of the reduced gradient. The owned slices
+/// tile the flat space across ranks, so the mesh-wide OR of these
+/// verdicts covers every reduced element exactly once at ANY rank
+/// count — which is what makes the skip decision rank-count invariant.
 fn owned_grads_finite(pieces: &[Piece], grads: &[Tensor]) -> bool {
     pieces.iter().all(|p| kernels::all_finite(&grads[p.tensor].data()[p.local.clone()]))
 }

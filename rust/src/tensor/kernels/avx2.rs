@@ -1,0 +1,762 @@
+//! The AVX2 backend (`x86_64`): one `__m256` register per 8-lane
+//! accumulator chunk.
+//!
+//! Bit-identity with [`super::scalar`] falls out of three rules, applied
+//! to every kernel here:
+//!
+//! 1. One `__m256` maps 1:1 onto the scalar `[f32; LANES]` accumulator
+//!    array; a vertical `_mm256_add_ps` per chunk is exactly the scalar
+//!    per-lane `acc[l] += …`. The horizontal combine stores the register
+//!    to an array and folds it with the same sequential loop the scalar
+//!    path runs — never a shuffle/`hadd` tree, which would reassociate.
+//! 2. No FMA, ever. `_mm256_fmadd_ps` rounds once where the scalar
+//!    `a*b + c` rounds twice; separate `_mm256_mul_ps` + `_mm256_add_ps`
+//!    match the scalar rounding exactly. (The dispatcher reports the
+//!    `fma` CPU flag but no backend uses it — by design.)
+//! 3. Tails (`len % LANES` trailing elements) are folded inline with the
+//!    *same* scalar loops as `scalar.rs` — not delegated to the scalar
+//!    kernels, whose own lane split would reassociate the tail.
+//!
+//! All remaining intrinsics (`_mm256_div_ps`, `_mm256_sqrt_ps`) are
+//! correctly rounded per IEEE 754, and `_mm256_max_ps(v, 0.0)` agrees
+//! with the scalar `f32::max(v, 0.0)` everywhere it can matter: NaN in
+//! either lane yields the second operand (0.0) in both forms, and the
+//! ±0.0 tie — where the two forms may disagree on sign — is absorbed by
+//! the `+ eps`/`* bc2_inv` that immediately follows (eps > 0).
+//!
+//! This module is one of the two audited `unsafe` surfaces in the tree
+//! (the other is the signal-FFI site in main.rs): the crate is
+//! `#![deny(unsafe_code)]` and each backend carries exactly one scoped
+//! allow, with lint rule r8 enforcing a SAFETY comment on every unsafe
+//! line. The safety argument is uniform — intrinsics here are plain
+//! arithmetic on in-bounds slice chunks, unsafe only because the ISA
+//! must exist, and [`super::table_for`] installs this table exclusively
+//! after `is_x86_feature_detected!("avx2")` returns true.
+#![allow(unsafe_code)]
+
+use std::arch::x86_64::{
+    __m256, _mm256_add_ps, _mm256_div_ps, _mm256_loadu_ps, _mm256_max_ps, _mm256_mul_ps,
+    _mm256_set1_ps, _mm256_setzero_ps, _mm256_sqrt_ps, _mm256_storeu_ps, _mm256_sub_ps,
+};
+
+use super::{check_f32_aligned, check_same_len, Backend, Kernels, LANES};
+
+/// The dispatch table [`super::table_for`] installs when AVX2 is
+/// detected at runtime.
+pub const TABLE: Kernels = Kernels {
+    backend: Backend::Avx2,
+    all_finite,
+    sum,
+    dot,
+    sq_dot_scaled,
+    sq_axpy_scaled,
+    ema,
+    factor_ema,
+    axpy,
+    scale,
+    divide,
+    add_assign,
+    alada_descent_row,
+    adam_update,
+    sq_eps_rowcol,
+    factored_descent_row,
+    came_instability_row,
+    came_descent_row,
+};
+
+// SAFETY: callers guarantee AVX2 (table install is feature-gated); the
+// store target is a local 8-float array, exactly one __m256 wide.
+#[target_feature(enable = "avx2")]
+unsafe fn lanes_of(v: __m256) -> [f32; LANES] {
+    let mut out = [0.0f32; LANES];
+    // SAFETY: `out` spans 8 f32s, the exact width of one unaligned store.
+    unsafe { _mm256_storeu_ps(out.as_mut_ptr(), v) };
+    out
+}
+
+pub fn all_finite(x: &[f32]) -> bool {
+    check_f32_aligned!(x);
+    // SAFETY: this table is only installed after is_x86_feature_detected!
+    // confirmed AVX2 (see `table_for` in mod.rs).
+    unsafe { all_finite_inner(x) }
+}
+
+// SAFETY: caller verified AVX2; every load stays inside `x`'s chunks.
+#[target_feature(enable = "avx2")]
+unsafe fn all_finite_inner(x: &[f32]) -> bool {
+    // SAFETY: `chunks_exact(LANES)` yields 8-float windows, matching the
+    // unaligned 256-bit load width.
+    unsafe {
+        let split = x.len() - x.len() % LANES;
+        let zero = _mm256_setzero_ps();
+        let mut acc = zero;
+        for c in x[..split].chunks_exact(LANES) {
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(_mm256_loadu_ps(c.as_ptr()), zero));
+        }
+        let lanes = lanes_of(acc);
+        let mut s = 0.0f32;
+        for &l in &lanes {
+            s += l;
+        }
+        for &v in &x[split..] {
+            s += v * 0.0;
+        }
+        s == 0.0
+    }
+}
+
+pub fn sum(x: &[f32]) -> f32 {
+    check_f32_aligned!(x);
+    // SAFETY: table install is gated on AVX2 detection (mod.rs).
+    unsafe { sum_inner(x) }
+}
+
+// SAFETY: caller verified AVX2; loads stay inside `x`'s chunks.
+#[target_feature(enable = "avx2")]
+unsafe fn sum_inner(x: &[f32]) -> f32 {
+    // SAFETY: 8-float chunks match the unaligned 256-bit load width.
+    unsafe {
+        let split = x.len() - x.len() % LANES;
+        let mut acc = _mm256_setzero_ps();
+        for c in x[..split].chunks_exact(LANES) {
+            acc = _mm256_add_ps(acc, _mm256_loadu_ps(c.as_ptr()));
+        }
+        let lanes = lanes_of(acc);
+        let mut s = 0.0f32;
+        for &l in &lanes {
+            s += l;
+        }
+        for &v in &x[split..] {
+            s += v;
+        }
+        s
+    }
+}
+
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    check_same_len!(a, b);
+    check_f32_aligned!(a, b);
+    // SAFETY: table install is gated on AVX2 detection (mod.rs).
+    unsafe { dot_inner(a, b) }
+}
+
+// SAFETY: caller verified AVX2; zipped chunks keep both loads in-bounds.
+#[target_feature(enable = "avx2")]
+unsafe fn dot_inner(a: &[f32], b: &[f32]) -> f32 {
+    // SAFETY: zipped 8-float chunks match the unaligned load width.
+    unsafe {
+        let split = a.len() - a.len() % LANES;
+        let mut acc = _mm256_setzero_ps();
+        for (xa, xb) in a[..split].chunks_exact(LANES).zip(b[..split].chunks_exact(LANES)) {
+            acc = _mm256_add_ps(
+                acc,
+                _mm256_mul_ps(_mm256_loadu_ps(xa.as_ptr()), _mm256_loadu_ps(xb.as_ptr())),
+            );
+        }
+        let lanes = lanes_of(acc);
+        let mut s = 0.0f32;
+        for &l in &lanes {
+            s += l;
+        }
+        for (x, y) in a[split..].iter().zip(&b[split..]) {
+            s += x * y;
+        }
+        s
+    }
+}
+
+pub fn sq_dot_scaled(m: &[f32], q: &[f32], s: f32) -> f32 {
+    check_same_len!(m, q);
+    check_f32_aligned!(m, q);
+    // SAFETY: table install is gated on AVX2 detection (mod.rs).
+    unsafe { sq_dot_scaled_inner(m, q, s) }
+}
+
+// SAFETY: caller verified AVX2; zipped chunks keep both loads in-bounds.
+#[target_feature(enable = "avx2")]
+unsafe fn sq_dot_scaled_inner(m: &[f32], q: &[f32], s: f32) -> f32 {
+    // SAFETY: zipped 8-float chunks match the unaligned load width.
+    unsafe {
+        let split = m.len() - m.len() % LANES;
+        let sv = _mm256_set1_ps(s);
+        let mut acc = _mm256_setzero_ps();
+        for (xm, xq) in m[..split].chunks_exact(LANES).zip(q[..split].chunks_exact(LANES)) {
+            // v*v*q associates as (v*v)*q, matching the scalar loop
+            let v = _mm256_mul_ps(_mm256_loadu_ps(xm.as_ptr()), sv);
+            acc = _mm256_add_ps(
+                acc,
+                _mm256_mul_ps(_mm256_mul_ps(v, v), _mm256_loadu_ps(xq.as_ptr())),
+            );
+        }
+        let lanes = lanes_of(acc);
+        let mut out = 0.0f32;
+        for &l in &lanes {
+            out += l;
+        }
+        for (x, q) in m[split..].iter().zip(&q[split..]) {
+            let v = x * s;
+            out += v * v * q;
+        }
+        out
+    }
+}
+
+pub fn sq_axpy_scaled(acc: &mut [f32], m: &[f32], s: f32, w: f32) {
+    check_same_len!(acc, m);
+    check_f32_aligned!(acc, m);
+    // SAFETY: table install is gated on AVX2 detection (mod.rs).
+    unsafe { sq_axpy_scaled_inner(acc, m, s, w) }
+}
+
+// SAFETY: caller verified AVX2; loads and stores stay inside the zipped
+// chunk windows of the two equal-length slices.
+#[target_feature(enable = "avx2")]
+unsafe fn sq_axpy_scaled_inner(acc: &mut [f32], m: &[f32], s: f32, w: f32) {
+    // SAFETY: mutable 8-float chunks match the unaligned store width.
+    unsafe {
+        let split = acc.len() - acc.len() % LANES;
+        let sv = _mm256_set1_ps(s);
+        let wv = _mm256_set1_ps(w);
+        let (ah, mh) = (&mut acc[..split], &m[..split]);
+        for (ac, mc) in ah.chunks_exact_mut(LANES).zip(mh.chunks_exact(LANES)) {
+            let v = _mm256_mul_ps(_mm256_loadu_ps(mc.as_ptr()), sv);
+            let add = _mm256_mul_ps(_mm256_mul_ps(v, v), wv);
+            _mm256_storeu_ps(ac.as_mut_ptr(), _mm256_add_ps(_mm256_loadu_ps(ac.as_ptr()), add));
+        }
+        for (a, &x) in acc[split..].iter_mut().zip(&m[split..]) {
+            let v = x * s;
+            *a += v * v * w;
+        }
+    }
+}
+
+pub fn ema(dst: &mut [f32], src: &[f32], a: f32, b: f32) {
+    check_same_len!(dst, src);
+    check_f32_aligned!(dst, src);
+    // SAFETY: table install is gated on AVX2 detection (mod.rs).
+    unsafe { ema_inner(dst, src, a, b) }
+}
+
+// SAFETY: caller verified AVX2; zipped chunk windows bound every access.
+#[target_feature(enable = "avx2")]
+unsafe fn ema_inner(dst: &mut [f32], src: &[f32], a: f32, b: f32) {
+    // SAFETY: mutable 8-float chunks match the unaligned store width.
+    unsafe {
+        let split = dst.len() - dst.len() % LANES;
+        let av = _mm256_set1_ps(a);
+        let bv = _mm256_set1_ps(b);
+        let (dh, sh) = (&mut dst[..split], &src[..split]);
+        for (dc, sc) in dh.chunks_exact_mut(LANES).zip(sh.chunks_exact(LANES)) {
+            let d = _mm256_mul_ps(av, _mm256_loadu_ps(dc.as_ptr()));
+            let s = _mm256_mul_ps(bv, _mm256_loadu_ps(sc.as_ptr()));
+            _mm256_storeu_ps(dc.as_mut_ptr(), _mm256_add_ps(d, s));
+        }
+        for (d, &s) in dst[split..].iter_mut().zip(&src[split..]) {
+            *d = a * *d + b * s;
+        }
+    }
+}
+
+pub fn factor_ema(dst: &mut [f32], src: &[f32], beta: f32, denom: f32) {
+    check_same_len!(dst, src);
+    check_f32_aligned!(dst, src);
+    // SAFETY: table install is gated on AVX2 detection (mod.rs).
+    unsafe { factor_ema_inner(dst, src, beta, denom) }
+}
+
+// SAFETY: caller verified AVX2; zipped chunk windows bound every access.
+#[target_feature(enable = "avx2")]
+unsafe fn factor_ema_inner(dst: &mut [f32], src: &[f32], beta: f32, denom: f32) {
+    // SAFETY: mutable 8-float chunks match the unaligned store width.
+    unsafe {
+        let split = dst.len() - dst.len() % LANES;
+        let bv = _mm256_set1_ps(beta);
+        // (1-β) computed once in scalar f32, like the hoisted scalar form
+        let omb = 1.0 - beta;
+        let ov = _mm256_set1_ps(omb);
+        let dv = _mm256_set1_ps(denom);
+        let (dh, sh) = (&mut dst[..split], &src[..split]);
+        for (dc, sc) in dh.chunks_exact_mut(LANES).zip(sh.chunks_exact(LANES)) {
+            // β·d + ((1−β)·s)/denom — the scalar parse order exactly
+            let keep = _mm256_mul_ps(bv, _mm256_loadu_ps(dc.as_ptr()));
+            let mix = _mm256_div_ps(_mm256_mul_ps(ov, _mm256_loadu_ps(sc.as_ptr())), dv);
+            _mm256_storeu_ps(dc.as_mut_ptr(), _mm256_add_ps(keep, mix));
+        }
+        for (d, &s) in dst[split..].iter_mut().zip(&src[split..]) {
+            *d = beta * *d + (1.0 - beta) * s / denom;
+        }
+    }
+}
+
+pub fn axpy(y: &mut [f32], x: &[f32], a: f32) {
+    check_same_len!(y, x);
+    check_f32_aligned!(y, x);
+    // SAFETY: table install is gated on AVX2 detection (mod.rs).
+    unsafe { axpy_inner(y, x, a) }
+}
+
+// SAFETY: caller verified AVX2; zipped chunk windows bound every access.
+#[target_feature(enable = "avx2")]
+unsafe fn axpy_inner(y: &mut [f32], x: &[f32], a: f32) {
+    // SAFETY: mutable 8-float chunks match the unaligned store width.
+    unsafe {
+        let split = y.len() - y.len() % LANES;
+        let av = _mm256_set1_ps(a);
+        let (yh, xh) = (&mut y[..split], &x[..split]);
+        for (yc, xc) in yh.chunks_exact_mut(LANES).zip(xh.chunks_exact(LANES)) {
+            let add = _mm256_mul_ps(av, _mm256_loadu_ps(xc.as_ptr()));
+            _mm256_storeu_ps(yc.as_mut_ptr(), _mm256_add_ps(_mm256_loadu_ps(yc.as_ptr()), add));
+        }
+        for (yi, &xi) in y[split..].iter_mut().zip(&x[split..]) {
+            *yi += a * xi;
+        }
+    }
+}
+
+pub fn scale(x: &mut [f32], s: f32) {
+    check_f32_aligned!(x);
+    // SAFETY: table install is gated on AVX2 detection (mod.rs).
+    unsafe { scale_inner(x, s) }
+}
+
+// SAFETY: caller verified AVX2; chunk windows bound every access.
+#[target_feature(enable = "avx2")]
+unsafe fn scale_inner(x: &mut [f32], s: f32) {
+    // SAFETY: mutable 8-float chunks match the unaligned store width.
+    unsafe {
+        let split = x.len() - x.len() % LANES;
+        let sv = _mm256_set1_ps(s);
+        for c in x[..split].chunks_exact_mut(LANES) {
+            _mm256_storeu_ps(c.as_mut_ptr(), _mm256_mul_ps(_mm256_loadu_ps(c.as_ptr()), sv));
+        }
+        for v in &mut x[split..] {
+            *v *= s;
+        }
+    }
+}
+
+pub fn divide(x: &mut [f32], d: f32) {
+    check_f32_aligned!(x);
+    // SAFETY: table install is gated on AVX2 detection (mod.rs).
+    unsafe { divide_inner(x, d) }
+}
+
+// `_mm256_div_ps` is a true correctly-rounded divide, preserving the
+// scalar kernel's no-reciprocal contract (see scalar::divide).
+// SAFETY: caller verified AVX2; chunk windows bound every access.
+#[target_feature(enable = "avx2")]
+unsafe fn divide_inner(x: &mut [f32], d: f32) {
+    // SAFETY: mutable 8-float chunks match the unaligned store width.
+    unsafe {
+        let split = x.len() - x.len() % LANES;
+        let dv = _mm256_set1_ps(d);
+        for c in x[..split].chunks_exact_mut(LANES) {
+            _mm256_storeu_ps(c.as_mut_ptr(), _mm256_div_ps(_mm256_loadu_ps(c.as_ptr()), dv));
+        }
+        for v in &mut x[split..] {
+            *v /= d;
+        }
+    }
+}
+
+pub fn add_assign(x: &mut [f32], y: &[f32]) {
+    check_same_len!(x, y);
+    check_f32_aligned!(x, y);
+    // SAFETY: table install is gated on AVX2 detection (mod.rs).
+    unsafe { add_assign_inner(x, y) }
+}
+
+// SAFETY: caller verified AVX2; zipped chunk windows bound every access.
+#[target_feature(enable = "avx2")]
+unsafe fn add_assign_inner(x: &mut [f32], y: &[f32]) {
+    // SAFETY: mutable 8-float chunks match the unaligned store width.
+    unsafe {
+        let split = x.len() - x.len() % LANES;
+        let (xh, yh) = (&mut x[..split], &y[..split]);
+        for (xc, yc) in xh.chunks_exact_mut(LANES).zip(yh.chunks_exact(LANES)) {
+            let sum = _mm256_add_ps(_mm256_loadu_ps(xc.as_ptr()), _mm256_loadu_ps(yc.as_ptr()));
+            _mm256_storeu_ps(xc.as_mut_ptr(), sum);
+        }
+        for (a, &b) in x[split..].iter_mut().zip(&y[split..]) {
+            *a += b;
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+pub fn alada_descent_row(
+    x: &mut [f32],
+    m: &[f32],
+    q: &[f32],
+    pi: f32,
+    bc1: f32,
+    sub: f32,
+    bc2_inv: f32,
+    eps: f32,
+    lr: f32,
+) {
+    check_same_len!(x, m, q);
+    check_f32_aligned!(x, m, q);
+    // SAFETY: table install is gated on AVX2 detection (mod.rs).
+    unsafe { alada_descent_row_inner(x, m, q, pi, bc1, sub, bc2_inv, eps, lr) }
+}
+
+// `_mm256_max_ps(u, 0)` matches the scalar `f32::max(u, 0.0)`: NaN
+// yields the 0.0 operand in both, and a ±0.0 sign difference on the tie
+// is erased by the `+ eps` (eps > 0) before the value is consumed.
+// SAFETY: caller verified AVX2; zipped chunk windows bound every access.
+#[target_feature(enable = "avx2")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn alada_descent_row_inner(
+    x: &mut [f32],
+    m: &[f32],
+    q: &[f32],
+    pi: f32,
+    bc1: f32,
+    sub: f32,
+    bc2_inv: f32,
+    eps: f32,
+    lr: f32,
+) {
+    // SAFETY: mutable 8-float chunks match the unaligned store width.
+    unsafe {
+        let split = x.len() - x.len() % LANES;
+        let piv = _mm256_set1_ps(pi);
+        let bc1v = _mm256_set1_ps(bc1);
+        let subv = _mm256_set1_ps(sub);
+        let bc2v = _mm256_set1_ps(bc2_inv);
+        let epsv = _mm256_set1_ps(eps);
+        let lrv = _mm256_set1_ps(lr);
+        let zero = _mm256_setzero_ps();
+        let (xh, mh, qh) = (&mut x[..split], &m[..split], &q[..split]);
+        for ((xc, mc), qc) in xh
+            .chunks_exact_mut(LANES)
+            .zip(mh.chunks_exact(LANES))
+            .zip(qh.chunks_exact(LANES))
+        {
+            let u_raw = _mm256_sub_ps(_mm256_mul_ps(piv, _mm256_loadu_ps(qc.as_ptr())), subv);
+            let u_hat = _mm256_mul_ps(_mm256_max_ps(u_raw, zero), bc2v);
+            let m_hat = _mm256_mul_ps(_mm256_loadu_ps(mc.as_ptr()), bc1v);
+            let denom = _mm256_sqrt_ps(_mm256_add_ps(u_hat, epsv));
+            let step = _mm256_div_ps(_mm256_mul_ps(lrv, m_hat), denom);
+            _mm256_storeu_ps(xc.as_mut_ptr(), _mm256_sub_ps(_mm256_loadu_ps(xc.as_ptr()), step));
+        }
+        for ((xj, &mj), &qj) in x[split..].iter_mut().zip(&m[split..]).zip(&q[split..]) {
+            let u_hat = (pi * qj - sub).max(0.0) * bc2_inv;
+            let m_hat = mj * bc1;
+            *xj -= lr * m_hat / (u_hat + eps).sqrt();
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+pub fn adam_update(
+    x: &mut [f32],
+    m: &mut [f32],
+    u: &mut [f32],
+    g: &[f32],
+    b1: f32,
+    b2: f32,
+    bc1: f32,
+    bc2: f32,
+    lr: f32,
+    eps: f32,
+) {
+    check_same_len!(x, m, u, g);
+    check_f32_aligned!(x, m, u, g);
+    // SAFETY: table install is gated on AVX2 detection (mod.rs).
+    unsafe { adam_update_inner(x, m, u, g, b1, b2, bc1, bc2, lr, eps) }
+}
+
+// SAFETY: caller verified AVX2; four zipped chunks bound every access.
+#[target_feature(enable = "avx2")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn adam_update_inner(
+    x: &mut [f32],
+    m: &mut [f32],
+    u: &mut [f32],
+    g: &[f32],
+    b1: f32,
+    b2: f32,
+    bc1: f32,
+    bc2: f32,
+    lr: f32,
+    eps: f32,
+) {
+    // SAFETY: mutable 8-float chunks match the unaligned store width.
+    unsafe {
+        let split = x.len() - x.len() % LANES;
+        let b1v = _mm256_set1_ps(b1);
+        let b2v = _mm256_set1_ps(b2);
+        // (1-β) in scalar f32 first, exactly like the scalar expression
+        let omb1v = _mm256_set1_ps(1.0 - b1);
+        let omb2v = _mm256_set1_ps(1.0 - b2);
+        let bc1v = _mm256_set1_ps(bc1);
+        let bc2v = _mm256_set1_ps(bc2);
+        let lrv = _mm256_set1_ps(lr);
+        let epsv = _mm256_set1_ps(eps);
+        let (xh, mh, uh, gh) = (&mut x[..split], &mut m[..split], &mut u[..split], &g[..split]);
+        for (((xc, mc), uc), gc) in xh
+            .chunks_exact_mut(LANES)
+            .zip(mh.chunks_exact_mut(LANES))
+            .zip(uh.chunks_exact_mut(LANES))
+            .zip(gh.chunks_exact(LANES))
+        {
+            let gv = _mm256_loadu_ps(gc.as_ptr());
+            // m = b1·m + (1−b1)·g ; u = b2·u + ((1−b2)·g)·g — scalar order
+            let mv = _mm256_add_ps(
+                _mm256_mul_ps(b1v, _mm256_loadu_ps(mc.as_ptr())),
+                _mm256_mul_ps(omb1v, gv),
+            );
+            let uv = _mm256_add_ps(
+                _mm256_mul_ps(b2v, _mm256_loadu_ps(uc.as_ptr())),
+                _mm256_mul_ps(_mm256_mul_ps(omb2v, gv), gv),
+            );
+            _mm256_storeu_ps(mc.as_mut_ptr(), mv);
+            _mm256_storeu_ps(uc.as_mut_ptr(), uv);
+            let m_hat = _mm256_mul_ps(mv, bc1v);
+            let u_hat = _mm256_mul_ps(uv, bc2v);
+            let denom = _mm256_add_ps(_mm256_sqrt_ps(u_hat), epsv);
+            let step = _mm256_div_ps(_mm256_mul_ps(lrv, m_hat), denom);
+            _mm256_storeu_ps(xc.as_mut_ptr(), _mm256_sub_ps(_mm256_loadu_ps(xc.as_ptr()), step));
+        }
+        for (((xj, mj), uj), &gj) in x[split..]
+            .iter_mut()
+            .zip(m[split..].iter_mut())
+            .zip(u[split..].iter_mut())
+            .zip(&g[split..])
+        {
+            *mj = b1 * *mj + (1.0 - b1) * gj;
+            *uj = b2 * *uj + (1.0 - b2) * gj * gj;
+            let m_hat = *mj * bc1;
+            let u_hat = *uj * bc2;
+            *xj -= lr * m_hat / (u_hat.sqrt() + eps);
+        }
+    }
+}
+
+pub fn sq_eps_rowcol(row: &[f32], csum: &mut [f32], eps: f32) -> f32 {
+    check_same_len!(row, csum);
+    check_f32_aligned!(row, csum);
+    // SAFETY: table install is gated on AVX2 detection (mod.rs).
+    unsafe { sq_eps_rowcol_inner(row, csum, eps) }
+}
+
+// SAFETY: caller verified AVX2; zipped chunk windows bound every access.
+#[target_feature(enable = "avx2")]
+unsafe fn sq_eps_rowcol_inner(row: &[f32], csum: &mut [f32], eps: f32) -> f32 {
+    // SAFETY: mutable 8-float chunks match the unaligned store width.
+    unsafe {
+        let split = row.len() - row.len() % LANES;
+        let epsv = _mm256_set1_ps(eps);
+        let mut acc = _mm256_setzero_ps();
+        let (rh, ch) = (&row[..split], &mut csum[..split]);
+        for (rc, cc) in rh.chunks_exact(LANES).zip(ch.chunks_exact_mut(LANES)) {
+            let r = _mm256_loadu_ps(rc.as_ptr());
+            let v = _mm256_add_ps(_mm256_mul_ps(r, r), epsv);
+            _mm256_storeu_ps(cc.as_mut_ptr(), _mm256_add_ps(_mm256_loadu_ps(cc.as_ptr()), v));
+            acc = _mm256_add_ps(acc, v);
+        }
+        let lanes = lanes_of(acc);
+        let mut s = 0.0f32;
+        for &l in &lanes {
+            s += l;
+        }
+        for (&x, c) in row[split..].iter().zip(&mut csum[split..]) {
+            let v = x * x + eps;
+            *c += v;
+            s += v;
+        }
+        s
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+pub fn factored_descent_row(
+    x: &mut [f32],
+    g: &[f32],
+    c: &[f32],
+    ri: f32,
+    bc: f32,
+    inv_mean: f32,
+    lr: f32,
+    eps: f32,
+) {
+    check_same_len!(x, g, c);
+    check_f32_aligned!(x, g, c);
+    // SAFETY: table install is gated on AVX2 detection (mod.rs).
+    unsafe { factored_descent_row_inner(x, g, c, ri, bc, inv_mean, lr, eps) }
+}
+
+// SAFETY: caller verified AVX2; zipped chunk windows bound every access.
+#[target_feature(enable = "avx2")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn factored_descent_row_inner(
+    x: &mut [f32],
+    g: &[f32],
+    c: &[f32],
+    ri: f32,
+    bc: f32,
+    inv_mean: f32,
+    lr: f32,
+    eps: f32,
+) {
+    // SAFETY: mutable 8-float chunks match the unaligned store width.
+    unsafe {
+        let split = x.len() - x.len() % LANES;
+        let riv = _mm256_set1_ps(ri);
+        let bcv = _mm256_set1_ps(bc);
+        let imv = _mm256_set1_ps(inv_mean);
+        let lrv = _mm256_set1_ps(lr);
+        let epsv = _mm256_set1_ps(eps);
+        let (xh, gh, ch) = (&mut x[..split], &g[..split], &c[..split]);
+        for ((xc, gc), cc) in xh
+            .chunks_exact_mut(LANES)
+            .zip(gh.chunks_exact(LANES))
+            .zip(ch.chunks_exact(LANES))
+        {
+            // (ri·(c·bc))·inv_mean — the scalar parse order exactly
+            let u = _mm256_mul_ps(
+                _mm256_mul_ps(riv, _mm256_mul_ps(_mm256_loadu_ps(cc.as_ptr()), bcv)),
+                imv,
+            );
+            let denom = _mm256_add_ps(_mm256_sqrt_ps(u), epsv);
+            let step = _mm256_div_ps(_mm256_mul_ps(lrv, _mm256_loadu_ps(gc.as_ptr())), denom);
+            _mm256_storeu_ps(xc.as_mut_ptr(), _mm256_sub_ps(_mm256_loadu_ps(xc.as_ptr()), step));
+        }
+        for ((xj, &gj), &cj) in x[split..].iter_mut().zip(&g[split..]).zip(&c[split..]) {
+            let u = ri * (cj * bc) * inv_mean;
+            *xj -= lr * gj / (u.sqrt() + eps);
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+pub fn came_instability_row(
+    m: &[f32],
+    g: &[f32],
+    c: &[f32],
+    ri: f32,
+    bc: f32,
+    inv_mean: f32,
+    eps: f32,
+    inst_c: &mut [f32],
+) -> f32 {
+    check_same_len!(m, g, c, inst_c);
+    check_f32_aligned!(m, g, c, inst_c);
+    // SAFETY: table install is gated on AVX2 detection (mod.rs).
+    unsafe { came_instability_row_inner(m, g, c, ri, bc, inv_mean, eps, inst_c) }
+}
+
+// SAFETY: caller verified AVX2; four zipped chunks bound every access.
+#[target_feature(enable = "avx2")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn came_instability_row_inner(
+    m: &[f32],
+    g: &[f32],
+    c: &[f32],
+    ri: f32,
+    bc: f32,
+    inv_mean: f32,
+    eps: f32,
+    inst_c: &mut [f32],
+) -> f32 {
+    // SAFETY: mutable 8-float chunks match the unaligned store width.
+    unsafe {
+        let split = m.len() - m.len() % LANES;
+        let riv = _mm256_set1_ps(ri);
+        let bcv = _mm256_set1_ps(bc);
+        let imv = _mm256_set1_ps(inv_mean);
+        let epsv = _mm256_set1_ps(eps);
+        let mut acc = _mm256_setzero_ps();
+        let (mh, gh, ch, ih) = (&m[..split], &g[..split], &c[..split], &mut inst_c[..split]);
+        for (((mc, gc), cc), ic) in mh
+            .chunks_exact(LANES)
+            .zip(gh.chunks_exact(LANES))
+            .zip(ch.chunks_exact(LANES))
+            .zip(ih.chunks_exact_mut(LANES))
+        {
+            let u = _mm256_mul_ps(
+                _mm256_mul_ps(riv, _mm256_mul_ps(_mm256_loadu_ps(cc.as_ptr()), bcv)),
+                imv,
+            );
+            let u_hat = _mm256_div_ps(
+                _mm256_loadu_ps(gc.as_ptr()),
+                _mm256_add_ps(_mm256_sqrt_ps(u), epsv),
+            );
+            let d = _mm256_sub_ps(_mm256_loadu_ps(mc.as_ptr()), u_hat);
+            let v = _mm256_add_ps(_mm256_mul_ps(d, d), epsv);
+            _mm256_storeu_ps(ic.as_mut_ptr(), _mm256_add_ps(_mm256_loadu_ps(ic.as_ptr()), v));
+            acc = _mm256_add_ps(acc, v);
+        }
+        let lanes = lanes_of(acc);
+        let mut s = 0.0f32;
+        for &l in &lanes {
+            s += l;
+        }
+        for i in split..m.len() {
+            let u = ri * (c[i] * bc) * inv_mean;
+            let u_hat = g[i] / (u.sqrt() + eps);
+            let d = m[i] - u_hat;
+            let v = d * d + eps;
+            inst_c[i] += v;
+            s += v;
+        }
+        s
+    }
+}
+
+pub fn came_descent_row(
+    x: &mut [f32],
+    m: &[f32],
+    uc: &[f32],
+    uri: f32,
+    inv: f32,
+    lr: f32,
+    eps: f32,
+) {
+    check_same_len!(x, m, uc);
+    check_f32_aligned!(x, m, uc);
+    // SAFETY: table install is gated on AVX2 detection (mod.rs).
+    unsafe { came_descent_row_inner(x, m, uc, uri, inv, lr, eps) }
+}
+
+// SAFETY: caller verified AVX2; zipped chunk windows bound every access.
+#[target_feature(enable = "avx2")]
+unsafe fn came_descent_row_inner(
+    x: &mut [f32],
+    m: &[f32],
+    uc: &[f32],
+    uri: f32,
+    inv: f32,
+    lr: f32,
+    eps: f32,
+) {
+    // SAFETY: mutable 8-float chunks match the unaligned store width.
+    unsafe {
+        let split = x.len() - x.len() % LANES;
+        let uriv = _mm256_set1_ps(uri);
+        let invv = _mm256_set1_ps(inv);
+        let lrv = _mm256_set1_ps(lr);
+        let epsv = _mm256_set1_ps(eps);
+        let (xh, mh, uh) = (&mut x[..split], &m[..split], &uc[..split]);
+        for ((xc, mc), ucc) in xh
+            .chunks_exact_mut(LANES)
+            .zip(mh.chunks_exact(LANES))
+            .zip(uh.chunks_exact(LANES))
+        {
+            // ((uri·uc)·inv) then √ then +eps — the scalar parse order
+            let prod = _mm256_mul_ps(
+                _mm256_mul_ps(uriv, _mm256_loadu_ps(ucc.as_ptr())),
+                invv,
+            );
+            let denom = _mm256_add_ps(_mm256_sqrt_ps(prod), epsv);
+            let step = _mm256_div_ps(_mm256_mul_ps(lrv, _mm256_loadu_ps(mc.as_ptr())), denom);
+            _mm256_storeu_ps(xc.as_mut_ptr(), _mm256_sub_ps(_mm256_loadu_ps(xc.as_ptr()), step));
+        }
+        for ((xj, &mj), &ucj) in x[split..].iter_mut().zip(&m[split..]).zip(&uc[split..]) {
+            let s = (uri * ucj * inv).sqrt() + eps;
+            *xj -= lr * mj / s;
+        }
+    }
+}

@@ -1,0 +1,519 @@
+//! Vectorized flat-slice kernels for the optimizer hot loops, behind a
+//! runtime-dispatched backend table.
+//!
+//! Every per-element loop that shows up in a profile of the pure-Rust
+//! substrate lives here: Alada's fused even/odd descent passes, the
+//! Adam/Adafactor/CAME element updates, the `tensor::ops` mat-vec
+//! building blocks, and the collective's segment-sum. Three backends
+//! implement the same kernel set:
+//!
+//! * [`scalar`] — the lane-unrolled safe-Rust oracle. Every other
+//!   backend is defined as "bit-identical to this".
+//! * [`avx2`] (`x86_64`) — `_mm256_*` intrinsics, one 8 × f32 register
+//!   per accumulator chunk, installed only when
+//!   `is_x86_feature_detected!("avx2")` holds at startup.
+//! * [`neon`] (`aarch64`) — `v*q_f32` intrinsics, two 4 × f32 registers
+//!   per chunk, installed only when NEON is detected.
+//!
+//! # Dispatch
+//!
+//! The backend is chosen ONCE per process: the first kernel call reads
+//! `ALADA_SIMD` (`auto` | `scalar` | `avx2` | `neon`; unset = `auto`),
+//! probes the CPU, and caches a [`Kernels`] table of plain function
+//! pointers in a `OnceLock`. Requests for an unavailable ISA (or an
+//! unknown value) fall back to `scalar` and record a note that
+//! `alada features` and the shard-train/serve startup banners surface —
+//! a dispatch decision is always attributable. The public free
+//! functions below are thin `#[inline]` shims through the cached table,
+//! so call sites are unchanged from the pre-dispatch module.
+//!
+//! # The association-order contract
+//!
+//! Determinism: every kernel is a pure function of its inputs with a
+//! fixed association order, so replacing a scalar loop with a kernel —
+//! or a scalar kernel with a SIMD twin — keeps runs bit-for-bit
+//! reproducible. The contract every backend MUST preserve:
+//!
+//! * Reductions split the input at `len - len % LANES` and keep
+//!   [`LANES`] = 8 *independent* accumulators: accumulator lane `l`
+//!   sums elements `i` with `i % LANES == l` of the head, in index
+//!   order. One AVX2 register (or two NEON registers, low half =
+//!   lanes 0–3) maps 1:1 onto the scalar `[f32; LANES]` array, and
+//!   vertical SIMD adds reproduce the per-lane sums exactly.
+//! * The horizontal combine is the same *sequential* fold the scalar
+//!   path runs: `s = ((((0 + acc[0]) + acc[1]) + …) + acc[7])` — SIMD
+//!   backends store the register(s) to an array and fold in lane
+//!   order; no tree reduction, no shuffles that reassociate.
+//! * The tail (`len % LANES` trailing elements) is folded into `s`
+//!   sequentially after the lanes, in index order.
+//! * Elementwise kernels keep the exact per-element expression order
+//!   of the scalar loop (e.g. Adam's `b2*u + ((1-b2)*g)*g`), and never
+//!   use FMA: fused multiply-adds round once where the scalar path
+//!   rounds twice, which would break bit-identity.
+//! * Only correctly-rounded IEEE 754 operations are used (`+ - * /`
+//!   and `sqrt` are correctly rounded in both `_mm256_*` and `v*q_f32`
+//!   forms), so per-lane results equal the scalar results bit-for-bit.
+//!
+//! rust/tests/simd_parity.rs pins `simd == scalar` bit-for-bit for
+//! every dispatched kernel at adversarial lengths and values; the
+//! shard-parity / elastic-resume / fault-injection suites therefore
+//! hold unchanged under every backend, with no tolerance adjustments.
+
+pub mod scalar;
+
+#[cfg(target_arch = "x86_64")]
+pub mod avx2;
+
+#[cfg(target_arch = "aarch64")]
+pub mod neon;
+
+use std::sync::OnceLock;
+
+/// Accumulator lanes for reductions: 8 × f32 = one AVX2 register (and
+/// exactly two NEON registers). Part of the public determinism
+/// contract — changing it changes every reduction's association order.
+pub const LANES: usize = 8;
+
+/// Debug-build precondition: every listed slice has the same length as
+/// the first. Shared by the scalar and SIMD backends so a miscalled
+/// kernel fails loudly in debug and stays branch-free in release.
+macro_rules! check_same_len {
+    ($a:expr $(, $b:expr)+) => {
+        $( debug_assert_eq!(
+            $a.len(),
+            $b.len(),
+            "kernel precondition: slice lengths must match",
+        ); )+
+    };
+}
+
+/// Debug-build precondition: a slice the backend will walk with
+/// word-at-a-time loads is f32-aligned (always true for a `&[f32]`,
+/// asserted anyway per the checked-ops discipline — unaligned data
+/// would mean the slice itself is forged).
+macro_rules! check_f32_aligned {
+    ($( $a:expr ),+) => {
+        $( debug_assert_eq!(
+            $a.as_ptr() as usize % std::mem::align_of::<f32>(),
+            0,
+            "kernel precondition: slice must be f32-aligned",
+        ); )+
+    };
+}
+
+pub(crate) use {check_f32_aligned, check_same_len};
+
+/// Which kernel implementation a [`Kernels`] table carries.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// The lane-unrolled safe-Rust oracle (always available).
+    Scalar,
+    /// `x86_64` AVX2 intrinsics (runtime-detected).
+    Avx2,
+    /// `aarch64` NEON intrinsics (runtime-detected).
+    Neon,
+}
+
+impl Backend {
+    /// The name the CLI/env override and the bench JSON use.
+    pub fn name(self) -> &'static str {
+        match self {
+            Backend::Scalar => "scalar",
+            Backend::Avx2 => "avx2",
+            Backend::Neon => "neon",
+        }
+    }
+}
+
+/// One backend's complete kernel set as plain function pointers — the
+/// unit of dispatch. Fields are public so the parity tests can drive
+/// each backend directly and pin that a forced-`scalar` selection
+/// routes every kernel through the oracle.
+#[derive(Clone, Copy)]
+pub struct Kernels {
+    pub backend: Backend,
+    pub all_finite: fn(&[f32]) -> bool,
+    pub sum: fn(&[f32]) -> f32,
+    pub dot: fn(&[f32], &[f32]) -> f32,
+    pub sq_dot_scaled: fn(&[f32], &[f32], f32) -> f32,
+    pub sq_axpy_scaled: fn(&mut [f32], &[f32], f32, f32),
+    pub ema: fn(&mut [f32], &[f32], f32, f32),
+    pub factor_ema: fn(&mut [f32], &[f32], f32, f32),
+    pub axpy: fn(&mut [f32], &[f32], f32),
+    pub scale: fn(&mut [f32], f32),
+    pub divide: fn(&mut [f32], f32),
+    pub add_assign: fn(&mut [f32], &[f32]),
+    pub alada_descent_row: fn(&mut [f32], &[f32], &[f32], f32, f32, f32, f32, f32, f32),
+    pub adam_update:
+        fn(&mut [f32], &mut [f32], &mut [f32], &[f32], f32, f32, f32, f32, f32, f32),
+    pub sq_eps_rowcol: fn(&[f32], &mut [f32], f32) -> f32,
+    pub factored_descent_row: fn(&mut [f32], &[f32], &[f32], f32, f32, f32, f32, f32),
+    pub came_instability_row: fn(&[f32], &[f32], &[f32], f32, f32, f32, f32, &mut [f32]) -> f32,
+    pub came_descent_row: fn(&mut [f32], &[f32], &[f32], f32, f32, f32, f32),
+}
+
+/// The oracle table: every pointer is the scalar implementation.
+pub const SCALAR: Kernels = Kernels {
+    backend: Backend::Scalar,
+    all_finite: scalar::all_finite,
+    sum: scalar::sum,
+    dot: scalar::dot,
+    sq_dot_scaled: scalar::sq_dot_scaled,
+    sq_axpy_scaled: scalar::sq_axpy_scaled,
+    ema: scalar::ema,
+    factor_ema: scalar::factor_ema,
+    axpy: scalar::axpy,
+    scale: scalar::scale,
+    divide: scalar::divide,
+    add_assign: scalar::add_assign,
+    alada_descent_row: scalar::alada_descent_row,
+    adam_update: scalar::adam_update,
+    sq_eps_rowcol: scalar::sq_eps_rowcol,
+    factored_descent_row: scalar::factored_descent_row,
+    came_instability_row: scalar::came_instability_row,
+    came_descent_row: scalar::came_descent_row,
+};
+
+/// The table for `backend`, or `None` when the host CPU (or the build
+/// target) does not support it. `Scalar` always succeeds.
+pub fn table_for(backend: Backend) -> Option<Kernels> {
+    match backend {
+        Backend::Scalar => Some(SCALAR),
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 if is_x86_feature_detected!("avx2") => Some(avx2::TABLE),
+        #[cfg(target_arch = "aarch64")]
+        Backend::Neon if std::arch::is_aarch64_feature_detected!("neon") => Some(neon::TABLE),
+        _ => None,
+    }
+}
+
+/// The best backend the host supports (what `auto` resolves to).
+fn best() -> Kernels {
+    if let Some(t) = table_for(Backend::Avx2) {
+        return t;
+    }
+    if let Some(t) = table_for(Backend::Neon) {
+        return t;
+    }
+    SCALAR
+}
+
+/// One dispatch decision: the chosen table plus the story for banners,
+/// `alada features`, and bug reports.
+pub struct Selection {
+    pub kernels: Kernels,
+    /// What was asked for (`"auto"` when `ALADA_SIMD` was unset).
+    pub requested: String,
+    /// Why the request was downgraded to scalar, when it was.
+    pub note: Option<String>,
+}
+
+/// Resolve a dispatch request (the pure, testable core of the
+/// `ALADA_SIMD` override): `auto`/`None` picks the best detected
+/// backend, `scalar` forces the oracle, an unavailable ISA or an
+/// unknown value falls back to scalar with an explanatory note —
+/// never an error, never a silently wrong table.
+pub fn select_with(request: Option<&str>) -> Selection {
+    let requested = request.unwrap_or("auto").to_string();
+    let (kernels, note) = match requested.as_str() {
+        "auto" => (best(), None),
+        "scalar" => (SCALAR, None),
+        "avx2" => match table_for(Backend::Avx2) {
+            Some(t) => (t, None),
+            None => (
+                SCALAR,
+                Some("avx2 requested but not available on this host; using scalar".to_string()),
+            ),
+        },
+        "neon" => match table_for(Backend::Neon) {
+            Some(t) => (t, None),
+            None => (
+                SCALAR,
+                Some("neon requested but not available on this host; using scalar".to_string()),
+            ),
+        },
+        other => (
+            SCALAR,
+            Some(format!(
+                "unknown ALADA_SIMD value {other:?} (known: auto, scalar, avx2, neon); \
+                 using scalar"
+            )),
+        ),
+    };
+    Selection { kernels, requested, note }
+}
+
+static ACTIVE: OnceLock<Selection> = OnceLock::new();
+
+/// The process-wide dispatch decision, made once on first use from the
+/// `ALADA_SIMD` environment variable.
+pub fn selection() -> &'static Selection {
+    ACTIVE.get_or_init(|| select_with(std::env::var("ALADA_SIMD").ok().as_deref()))
+}
+
+/// The active backend (forces the dispatch decision if still pending).
+pub fn backend() -> Backend {
+    selection().kernels.backend
+}
+
+/// Detected CPU SIMD features relevant to the dispatcher, as
+/// `(name, detected)` pairs — the `alada features` report body.
+#[cfg(target_arch = "x86_64")]
+pub fn cpu_features() -> Vec<(&'static str, bool)> {
+    vec![
+        ("sse2", true), // x86_64 baseline
+        ("sse4.2", is_x86_feature_detected!("sse4.2")),
+        ("avx", is_x86_feature_detected!("avx")),
+        ("avx2", is_x86_feature_detected!("avx2")),
+        ("fma", is_x86_feature_detected!("fma")), // detected, deliberately unused: FMA breaks bit-identity
+    ]
+}
+
+/// Detected CPU SIMD features relevant to the dispatcher.
+#[cfg(target_arch = "aarch64")]
+pub fn cpu_features() -> Vec<(&'static str, bool)> {
+    vec![("neon", std::arch::is_aarch64_feature_detected!("neon"))]
+}
+
+/// Detected CPU SIMD features relevant to the dispatcher (none on
+/// architectures without an intrinsic backend — scalar only).
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+pub fn cpu_features() -> Vec<(&'static str, bool)> {
+    Vec::new()
+}
+
+#[inline]
+fn active() -> &'static Kernels {
+    &selection().kernels
+}
+
+// ------------------------------------------------------------------
+// Public kernel API — thin shims through the dispatch table. Call
+// sites are unchanged from the pre-dispatch module; per-kernel
+// contracts (expression order, association order) are documented on
+// the scalar oracle in `scalar.rs`.
+// ------------------------------------------------------------------
+
+/// Fused finite scan: true iff every element is finite (no NaN/±Inf).
+/// The shard engine's per-step numerical sentinel.
+#[inline]
+pub fn all_finite(x: &[f32]) -> bool {
+    (active().all_finite)(x)
+}
+
+/// Plain sum with LANES independent accumulators. This is the one
+/// blessed f32 reduction for optimizer code — lint rule r2 forbids ad
+/// hoc `.sum::<f32>()` outside this module so every mean/norm shares a
+/// single, fixed association order.
+#[inline]
+pub fn sum(x: &[f32]) -> f32 {
+    (active().sum)(x)
+}
+
+/// Dot product with LANES independent accumulators.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    (active().dot)(a, b)
+}
+
+/// Σ_j (m_j·s)²·q_j — Alada's even-phase row projection.
+#[inline]
+pub fn sq_dot_scaled(m: &[f32], q: &[f32], s: f32) -> f32 {
+    (active().sq_dot_scaled)(m, q, s)
+}
+
+/// acc_j += (m_j·s)²·w — Alada's odd-phase column reduction, one row's
+/// contribution.
+#[inline]
+pub fn sq_axpy_scaled(acc: &mut [f32], m: &[f32], s: f32, w: f32) {
+    (active().sq_axpy_scaled)(acc, m, s, w)
+}
+
+/// dst = a·dst + b·src — the EMA workhorse (`Tensor::ema_inplace`).
+#[inline]
+pub fn ema(dst: &mut [f32], src: &[f32], a: f32, b: f32) {
+    (active().ema)(dst, src, a, b)
+}
+
+/// dst = β·dst + (1−β)·src/denom — the factored-moment EMA of
+/// Adafactor/CAME/Alada.
+#[inline]
+pub fn factor_ema(dst: &mut [f32], src: &[f32], beta: f32, denom: f32) {
+    (active().factor_ema)(dst, src, beta, denom)
+}
+
+/// y += a·x.
+#[inline]
+pub fn axpy(y: &mut [f32], x: &[f32], a: f32) {
+    (active().axpy)(y, x, a)
+}
+
+/// x *= s.
+#[inline]
+pub fn scale(x: &mut [f32], s: f32) {
+    (active().scale)(x, s)
+}
+
+/// Elementwise correctly-rounded divide (NOT multiply-by-reciprocal):
+/// `x[i] /= d` — see `scalar::divide` for why the elastic-checkpoint
+/// parity contract needs a true divide.
+#[inline]
+pub fn divide(x: &mut [f32], d: f32) {
+    (active().divide)(x, d)
+}
+
+/// x += y elementwise — the collective's segment-sum building block
+/// (`Comm::reduce_bucket` accumulates received partial sums with it).
+#[inline]
+pub fn add_assign(x: &mut [f32], y: &[f32]) {
+    (active().add_assign)(x, y)
+}
+
+/// Alada descent over one row (both phases) — fused û/m̂/update pass.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+pub fn alada_descent_row(
+    x: &mut [f32],
+    m: &[f32],
+    q: &[f32],
+    pi: f32,
+    bc1: f32,
+    sub: f32,
+    bc2_inv: f32,
+    eps: f32,
+    lr: f32,
+) {
+    (active().alada_descent_row)(x, m, q, pi, bc1, sub, bc2_inv, eps, lr)
+}
+
+/// Fused Adam element update: EMA both moments and descend in one pass.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+pub fn adam_update(
+    x: &mut [f32],
+    m: &mut [f32],
+    u: &mut [f32],
+    g: &[f32],
+    b1: f32,
+    b2: f32,
+    bc1: f32,
+    bc2: f32,
+    lr: f32,
+    eps: f32,
+) {
+    (active().adam_update)(x, m, u, g, b1, b2, bc1, bc2, lr, eps)
+}
+
+/// Row/column accumulation of V = g² + ε (Adafactor/CAME first pass):
+/// csum_j += v_j, returns Σ_j v_j via LANES accumulators.
+#[inline]
+pub fn sq_eps_rowcol(row: &[f32], csum: &mut [f32], eps: f32) -> f32 {
+    (active().sq_eps_rowcol)(row, csum, eps)
+}
+
+/// Adafactor descent over one row.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+pub fn factored_descent_row(
+    x: &mut [f32],
+    g: &[f32],
+    c: &[f32],
+    ri: f32,
+    bc: f32,
+    inv_mean: f32,
+    lr: f32,
+    eps: f32,
+) {
+    (active().factored_descent_row)(x, g, c, ri, bc, inv_mean, lr, eps)
+}
+
+/// CAME instability pass over one row; accumulates into `inst_c` and
+/// returns the row total.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+pub fn came_instability_row(
+    m: &[f32],
+    g: &[f32],
+    c: &[f32],
+    ri: f32,
+    bc: f32,
+    inv_mean: f32,
+    eps: f32,
+    inst_c: &mut [f32],
+) -> f32 {
+    (active().came_instability_row)(m, g, c, ri, bc, inv_mean, eps, inst_c)
+}
+
+/// CAME confidence-scaled descent over one row.
+#[inline]
+pub fn came_descent_row(
+    x: &mut [f32],
+    m: &[f32],
+    uc: &[f32],
+    uri: f32,
+    inv: f32,
+    lr: f32,
+    eps: f32,
+) {
+    (active().came_descent_row)(x, m, uc, uri, inv, lr, eps)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_table_is_always_available_and_scalar() {
+        let t = table_for(Backend::Scalar).expect("scalar table");
+        assert_eq!(t.backend, Backend::Scalar);
+        assert_eq!(Backend::Scalar.name(), "scalar");
+        assert_eq!(Backend::Avx2.name(), "avx2");
+        assert_eq!(Backend::Neon.name(), "neon");
+    }
+
+    #[test]
+    fn auto_never_downgrades_silently() {
+        let sel = select_with(None);
+        assert_eq!(sel.requested, "auto");
+        assert!(sel.note.is_none(), "auto is never a fallback");
+        // auto == the best detected backend, scalar only when nothing
+        // SIMD-capable was found
+        let has_simd =
+            table_for(Backend::Avx2).is_some() || table_for(Backend::Neon).is_some();
+        assert_eq!(sel.kernels.backend != Backend::Scalar, has_simd);
+    }
+
+    #[test]
+    fn unknown_request_falls_back_to_scalar_with_a_note() {
+        let sel = select_with(Some("avx512"));
+        assert_eq!(sel.kernels.backend, Backend::Scalar);
+        let note = sel.note.expect("downgrade must carry a note");
+        assert!(note.contains("avx512") && note.contains("scalar"), "{note}");
+    }
+
+    #[test]
+    fn dispatched_api_agrees_with_the_oracle_on_a_smoke_vector() {
+        // Whatever backend the environment picked, the public shims
+        // must return the oracle's bits (the full adversarial sweep
+        // lives in rust/tests/simd_parity.rs).
+        let x: Vec<f32> = (0..37).map(|i| (i as f32 - 11.0) * 0.37).collect();
+        assert_eq!(sum(&x).to_bits(), (SCALAR.sum)(&x).to_bits());
+        assert_eq!(dot(&x, &x).to_bits(), (SCALAR.dot)(&x, &x).to_bits());
+        assert!(all_finite(&x));
+    }
+
+    #[test]
+    fn cpu_feature_report_names_the_backend_isa() {
+        let feats = cpu_features();
+        // on x86_64/aarch64 the probed ISA list is non-empty and every
+        // backend this host can install shows up as detected
+        if let Some(t) = table_for(Backend::Avx2) {
+            assert_eq!(t.backend, Backend::Avx2);
+            assert!(feats.iter().any(|&(n, on)| n == "avx2" && on));
+        }
+        if let Some(t) = table_for(Backend::Neon) {
+            assert_eq!(t.backend, Backend::Neon);
+            assert!(feats.iter().any(|&(n, on)| n == "neon" && on));
+        }
+    }
+}

@@ -1,0 +1,766 @@
+//! The NEON backend (`aarch64`): two `float32x4_t` registers per 8-lane
+//! accumulator chunk.
+//!
+//! The bit-identity rules are the AVX2 ones (see `avx2.rs`), with the
+//! register mapping adjusted for 128-bit vectors:
+//!
+//! 1. A low register carries scalar accumulator lanes 0–3 and a high
+//!    register lanes 4–7; the pair maps 1:1 onto the scalar
+//!    `[f32; LANES]` array, and a vertical `vaddq_f32` per half is
+//!    exactly the scalar per-lane `acc[l] += …`. The horizontal combine
+//!    stores both registers to one 8-float array and folds it with the
+//!    same sequential loop as the scalar path — no pairwise `vpadd`
+//!    trees, which would reassociate.
+//! 2. No FMA (`vfmaq_f32`/`vmlaq_f32`) — separate `vmulq_f32` +
+//!    `vaddq_f32` match the scalar's two roundings.
+//! 3. Tails are folded inline with the same scalar loops as
+//!    `scalar.rs`. Pure elementwise kernels run 4-wide (per-element
+//!    results don't depend on chunk width), reductions keep the 8-lane
+//!    split exactly.
+//!
+//! `vdivq_f32`/`vsqrtq_f32` are correctly rounded (A64), and
+//! `vmaxnmq_f32` — NOT `vmaxq_f32`, whose NaN behaviour differs — is
+//! the IEEE maxNum that matches the scalar `f32::max` where it can
+//! matter (the ±0.0 tie is absorbed by the `+ eps` downstream).
+//!
+//! This module is an audited `unsafe` surface like `avx2.rs`: one scoped
+//! allow, SAFETY comments audited by lint rule r8, installed by
+//! [`super::table_for`] only after NEON detection.
+#![allow(unsafe_code)]
+
+use std::arch::aarch64::{
+    float32x4_t, vaddq_f32, vdivq_f32, vdupq_n_f32, vld1q_f32, vmaxnmq_f32, vmulq_f32,
+    vsqrtq_f32, vst1q_f32, vsubq_f32,
+};
+
+use super::{check_f32_aligned, check_same_len, Backend, Kernels, LANES};
+
+/// 128-bit vector width in f32 lanes (half an accumulator chunk).
+const Q: usize = 4;
+
+/// The dispatch table [`super::table_for`] installs when NEON is
+/// detected at runtime.
+pub const TABLE: Kernels = Kernels {
+    backend: Backend::Neon,
+    all_finite,
+    sum,
+    dot,
+    sq_dot_scaled,
+    sq_axpy_scaled,
+    ema,
+    factor_ema,
+    axpy,
+    scale,
+    divide,
+    add_assign,
+    alada_descent_row,
+    adam_update,
+    sq_eps_rowcol,
+    factored_descent_row,
+    came_instability_row,
+    came_descent_row,
+};
+
+// SAFETY: callers guarantee NEON (table install is feature-gated); the
+// two stores exactly tile the local 8-float array.
+#[target_feature(enable = "neon")]
+unsafe fn lanes_of(lo: float32x4_t, hi: float32x4_t) -> [f32; LANES] {
+    let mut out = [0.0f32; LANES];
+    // SAFETY: `out[..4]` and `out[4..]` are each one 128-bit store wide.
+    unsafe {
+        vst1q_f32(out.as_mut_ptr(), lo);
+        vst1q_f32(out[Q..].as_mut_ptr(), hi);
+    }
+    out
+}
+
+pub fn all_finite(x: &[f32]) -> bool {
+    check_f32_aligned!(x);
+    // SAFETY: this table is only installed after NEON was detected at
+    // runtime (see `table_for` in mod.rs).
+    unsafe { all_finite_inner(x) }
+}
+
+// SAFETY: caller verified NEON; every load stays inside `x`'s chunks.
+#[target_feature(enable = "neon")]
+unsafe fn all_finite_inner(x: &[f32]) -> bool {
+    // SAFETY: each 8-float chunk is tiled by two 128-bit loads.
+    unsafe {
+        let split = x.len() - x.len() % LANES;
+        let zero = vdupq_n_f32(0.0);
+        let mut lo = zero;
+        let mut hi = zero;
+        for c in x[..split].chunks_exact(LANES) {
+            lo = vaddq_f32(lo, vmulq_f32(vld1q_f32(c.as_ptr()), zero));
+            hi = vaddq_f32(hi, vmulq_f32(vld1q_f32(c[Q..].as_ptr()), zero));
+        }
+        let lanes = lanes_of(lo, hi);
+        let mut s = 0.0f32;
+        for &l in &lanes {
+            s += l;
+        }
+        for &v in &x[split..] {
+            s += v * 0.0;
+        }
+        s == 0.0
+    }
+}
+
+pub fn sum(x: &[f32]) -> f32 {
+    check_f32_aligned!(x);
+    // SAFETY: table install is gated on NEON detection (mod.rs).
+    unsafe { sum_inner(x) }
+}
+
+// SAFETY: caller verified NEON; loads stay inside `x`'s chunks.
+#[target_feature(enable = "neon")]
+unsafe fn sum_inner(x: &[f32]) -> f32 {
+    // SAFETY: each 8-float chunk is tiled by two 128-bit loads.
+    unsafe {
+        let split = x.len() - x.len() % LANES;
+        let mut lo = vdupq_n_f32(0.0);
+        let mut hi = vdupq_n_f32(0.0);
+        for c in x[..split].chunks_exact(LANES) {
+            lo = vaddq_f32(lo, vld1q_f32(c.as_ptr()));
+            hi = vaddq_f32(hi, vld1q_f32(c[Q..].as_ptr()));
+        }
+        let lanes = lanes_of(lo, hi);
+        let mut s = 0.0f32;
+        for &l in &lanes {
+            s += l;
+        }
+        for &v in &x[split..] {
+            s += v;
+        }
+        s
+    }
+}
+
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    check_same_len!(a, b);
+    check_f32_aligned!(a, b);
+    // SAFETY: table install is gated on NEON detection (mod.rs).
+    unsafe { dot_inner(a, b) }
+}
+
+// SAFETY: caller verified NEON; zipped chunks keep both loads in-bounds.
+#[target_feature(enable = "neon")]
+unsafe fn dot_inner(a: &[f32], b: &[f32]) -> f32 {
+    // SAFETY: each zipped 8-float chunk is tiled by two 128-bit loads.
+    unsafe {
+        let split = a.len() - a.len() % LANES;
+        let mut lo = vdupq_n_f32(0.0);
+        let mut hi = vdupq_n_f32(0.0);
+        for (xa, xb) in a[..split].chunks_exact(LANES).zip(b[..split].chunks_exact(LANES)) {
+            lo = vaddq_f32(lo, vmulq_f32(vld1q_f32(xa.as_ptr()), vld1q_f32(xb.as_ptr())));
+            hi = vaddq_f32(hi, vmulq_f32(vld1q_f32(xa[Q..].as_ptr()), vld1q_f32(xb[Q..].as_ptr())));
+        }
+        let lanes = lanes_of(lo, hi);
+        let mut s = 0.0f32;
+        for &l in &lanes {
+            s += l;
+        }
+        for (x, y) in a[split..].iter().zip(&b[split..]) {
+            s += x * y;
+        }
+        s
+    }
+}
+
+pub fn sq_dot_scaled(m: &[f32], q: &[f32], s: f32) -> f32 {
+    check_same_len!(m, q);
+    check_f32_aligned!(m, q);
+    // SAFETY: table install is gated on NEON detection (mod.rs).
+    unsafe { sq_dot_scaled_inner(m, q, s) }
+}
+
+// SAFETY: caller verified NEON; zipped chunks keep both loads in-bounds.
+#[target_feature(enable = "neon")]
+unsafe fn sq_dot_scaled_inner(m: &[f32], q: &[f32], s: f32) -> f32 {
+    // SAFETY: each zipped 8-float chunk is tiled by two 128-bit loads.
+    unsafe {
+        let split = m.len() - m.len() % LANES;
+        let sv = vdupq_n_f32(s);
+        let mut lo = vdupq_n_f32(0.0);
+        let mut hi = vdupq_n_f32(0.0);
+        for (xm, xq) in m[..split].chunks_exact(LANES).zip(q[..split].chunks_exact(LANES)) {
+            // v*v*q associates as (v*v)*q, matching the scalar loop
+            let vl = vmulq_f32(vld1q_f32(xm.as_ptr()), sv);
+            let vh = vmulq_f32(vld1q_f32(xm[Q..].as_ptr()), sv);
+            lo = vaddq_f32(lo, vmulq_f32(vmulq_f32(vl, vl), vld1q_f32(xq.as_ptr())));
+            hi = vaddq_f32(hi, vmulq_f32(vmulq_f32(vh, vh), vld1q_f32(xq[Q..].as_ptr())));
+        }
+        let lanes = lanes_of(lo, hi);
+        let mut out = 0.0f32;
+        for &l in &lanes {
+            out += l;
+        }
+        for (x, q) in m[split..].iter().zip(&q[split..]) {
+            let v = x * s;
+            out += v * v * q;
+        }
+        out
+    }
+}
+
+pub fn sq_axpy_scaled(acc: &mut [f32], m: &[f32], s: f32, w: f32) {
+    check_same_len!(acc, m);
+    check_f32_aligned!(acc, m);
+    // SAFETY: table install is gated on NEON detection (mod.rs).
+    unsafe { sq_axpy_scaled_inner(acc, m, s, w) }
+}
+
+// SAFETY: caller verified NEON; zipped 4-float chunk windows bound
+// every load and store.
+#[target_feature(enable = "neon")]
+unsafe fn sq_axpy_scaled_inner(acc: &mut [f32], m: &[f32], s: f32, w: f32) {
+    // SAFETY: 4-float chunks match the 128-bit load/store width.
+    unsafe {
+        let split = acc.len() - acc.len() % Q;
+        let sv = vdupq_n_f32(s);
+        let wv = vdupq_n_f32(w);
+        let (ah, mh) = (&mut acc[..split], &m[..split]);
+        for (ac, mc) in ah.chunks_exact_mut(Q).zip(mh.chunks_exact(Q)) {
+            let v = vmulq_f32(vld1q_f32(mc.as_ptr()), sv);
+            let add = vmulq_f32(vmulq_f32(v, v), wv);
+            vst1q_f32(ac.as_mut_ptr(), vaddq_f32(vld1q_f32(ac.as_ptr()), add));
+        }
+        for (a, &x) in acc[split..].iter_mut().zip(&m[split..]) {
+            let v = x * s;
+            *a += v * v * w;
+        }
+    }
+}
+
+pub fn ema(dst: &mut [f32], src: &[f32], a: f32, b: f32) {
+    check_same_len!(dst, src);
+    check_f32_aligned!(dst, src);
+    // SAFETY: table install is gated on NEON detection (mod.rs).
+    unsafe { ema_inner(dst, src, a, b) }
+}
+
+// SAFETY: caller verified NEON; zipped 4-float chunk windows bound
+// every load and store.
+#[target_feature(enable = "neon")]
+unsafe fn ema_inner(dst: &mut [f32], src: &[f32], a: f32, b: f32) {
+    // SAFETY: 4-float chunks match the 128-bit load/store width.
+    unsafe {
+        let split = dst.len() - dst.len() % Q;
+        let av = vdupq_n_f32(a);
+        let bv = vdupq_n_f32(b);
+        let (dh, sh) = (&mut dst[..split], &src[..split]);
+        for (dc, sc) in dh.chunks_exact_mut(Q).zip(sh.chunks_exact(Q)) {
+            let d = vmulq_f32(av, vld1q_f32(dc.as_ptr()));
+            let s = vmulq_f32(bv, vld1q_f32(sc.as_ptr()));
+            vst1q_f32(dc.as_mut_ptr(), vaddq_f32(d, s));
+        }
+        for (d, &s) in dst[split..].iter_mut().zip(&src[split..]) {
+            *d = a * *d + b * s;
+        }
+    }
+}
+
+pub fn factor_ema(dst: &mut [f32], src: &[f32], beta: f32, denom: f32) {
+    check_same_len!(dst, src);
+    check_f32_aligned!(dst, src);
+    // SAFETY: table install is gated on NEON detection (mod.rs).
+    unsafe { factor_ema_inner(dst, src, beta, denom) }
+}
+
+// SAFETY: caller verified NEON; zipped 4-float chunk windows bound
+// every load and store.
+#[target_feature(enable = "neon")]
+unsafe fn factor_ema_inner(dst: &mut [f32], src: &[f32], beta: f32, denom: f32) {
+    // SAFETY: 4-float chunks match the 128-bit load/store width.
+    unsafe {
+        let split = dst.len() - dst.len() % Q;
+        let bv = vdupq_n_f32(beta);
+        // (1-β) computed once in scalar f32, like the hoisted scalar form
+        let ov = vdupq_n_f32(1.0 - beta);
+        let dv = vdupq_n_f32(denom);
+        let (dh, sh) = (&mut dst[..split], &src[..split]);
+        for (dc, sc) in dh.chunks_exact_mut(Q).zip(sh.chunks_exact(Q)) {
+            // β·d + ((1−β)·s)/denom — the scalar parse order exactly
+            let keep = vmulq_f32(bv, vld1q_f32(dc.as_ptr()));
+            let mix = vdivq_f32(vmulq_f32(ov, vld1q_f32(sc.as_ptr())), dv);
+            vst1q_f32(dc.as_mut_ptr(), vaddq_f32(keep, mix));
+        }
+        for (d, &s) in dst[split..].iter_mut().zip(&src[split..]) {
+            *d = beta * *d + (1.0 - beta) * s / denom;
+        }
+    }
+}
+
+pub fn axpy(y: &mut [f32], x: &[f32], a: f32) {
+    check_same_len!(y, x);
+    check_f32_aligned!(y, x);
+    // SAFETY: table install is gated on NEON detection (mod.rs).
+    unsafe { axpy_inner(y, x, a) }
+}
+
+// SAFETY: caller verified NEON; zipped 4-float chunk windows bound
+// every load and store.
+#[target_feature(enable = "neon")]
+unsafe fn axpy_inner(y: &mut [f32], x: &[f32], a: f32) {
+    // SAFETY: 4-float chunks match the 128-bit load/store width.
+    unsafe {
+        let split = y.len() - y.len() % Q;
+        let av = vdupq_n_f32(a);
+        let (yh, xh) = (&mut y[..split], &x[..split]);
+        for (yc, xc) in yh.chunks_exact_mut(Q).zip(xh.chunks_exact(Q)) {
+            let add = vmulq_f32(av, vld1q_f32(xc.as_ptr()));
+            vst1q_f32(yc.as_mut_ptr(), vaddq_f32(vld1q_f32(yc.as_ptr()), add));
+        }
+        for (yi, &xi) in y[split..].iter_mut().zip(&x[split..]) {
+            *yi += a * xi;
+        }
+    }
+}
+
+pub fn scale(x: &mut [f32], s: f32) {
+    check_f32_aligned!(x);
+    // SAFETY: table install is gated on NEON detection (mod.rs).
+    unsafe { scale_inner(x, s) }
+}
+
+// SAFETY: caller verified NEON; 4-float chunk windows bound every access.
+#[target_feature(enable = "neon")]
+unsafe fn scale_inner(x: &mut [f32], s: f32) {
+    // SAFETY: 4-float chunks match the 128-bit load/store width.
+    unsafe {
+        let split = x.len() - x.len() % Q;
+        let sv = vdupq_n_f32(s);
+        for c in x[..split].chunks_exact_mut(Q) {
+            vst1q_f32(c.as_mut_ptr(), vmulq_f32(vld1q_f32(c.as_ptr()), sv));
+        }
+        for v in &mut x[split..] {
+            *v *= s;
+        }
+    }
+}
+
+pub fn divide(x: &mut [f32], d: f32) {
+    check_f32_aligned!(x);
+    // SAFETY: table install is gated on NEON detection (mod.rs).
+    unsafe { divide_inner(x, d) }
+}
+
+// `vdivq_f32` is a true correctly-rounded divide, preserving the
+// scalar kernel's no-reciprocal contract (see scalar::divide).
+// SAFETY: caller verified NEON; 4-float chunks bound every access.
+#[target_feature(enable = "neon")]
+unsafe fn divide_inner(x: &mut [f32], d: f32) {
+    // SAFETY: 4-float chunks match the 128-bit load/store width.
+    unsafe {
+        let split = x.len() - x.len() % Q;
+        let dv = vdupq_n_f32(d);
+        for c in x[..split].chunks_exact_mut(Q) {
+            vst1q_f32(c.as_mut_ptr(), vdivq_f32(vld1q_f32(c.as_ptr()), dv));
+        }
+        for v in &mut x[split..] {
+            *v /= d;
+        }
+    }
+}
+
+pub fn add_assign(x: &mut [f32], y: &[f32]) {
+    check_same_len!(x, y);
+    check_f32_aligned!(x, y);
+    // SAFETY: table install is gated on NEON detection (mod.rs).
+    unsafe { add_assign_inner(x, y) }
+}
+
+// SAFETY: caller verified NEON; zipped 4-float chunk windows bound
+// every load and store.
+#[target_feature(enable = "neon")]
+unsafe fn add_assign_inner(x: &mut [f32], y: &[f32]) {
+    // SAFETY: 4-float chunks match the 128-bit load/store width.
+    unsafe {
+        let split = x.len() - x.len() % Q;
+        let (xh, yh) = (&mut x[..split], &y[..split]);
+        for (xc, yc) in xh.chunks_exact_mut(Q).zip(yh.chunks_exact(Q)) {
+            vst1q_f32(
+                xc.as_mut_ptr(),
+                vaddq_f32(vld1q_f32(xc.as_ptr()), vld1q_f32(yc.as_ptr())),
+            );
+        }
+        for (a, &b) in x[split..].iter_mut().zip(&y[split..]) {
+            *a += b;
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+pub fn alada_descent_row(
+    x: &mut [f32],
+    m: &[f32],
+    q: &[f32],
+    pi: f32,
+    bc1: f32,
+    sub: f32,
+    bc2_inv: f32,
+    eps: f32,
+    lr: f32,
+) {
+    check_same_len!(x, m, q);
+    check_f32_aligned!(x, m, q);
+    // SAFETY: table install is gated on NEON detection (mod.rs).
+    unsafe { alada_descent_row_inner(x, m, q, pi, bc1, sub, bc2_inv, eps, lr) }
+}
+
+// `vmaxnmq_f32` is IEEE maxNum, matching the scalar `f32::max(u, 0.0)`
+// (±0.0 tie signs are erased by the `+ eps`, eps > 0).
+// SAFETY: caller verified NEON; zipped 4-float chunks bound every access.
+#[target_feature(enable = "neon")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn alada_descent_row_inner(
+    x: &mut [f32],
+    m: &[f32],
+    q: &[f32],
+    pi: f32,
+    bc1: f32,
+    sub: f32,
+    bc2_inv: f32,
+    eps: f32,
+    lr: f32,
+) {
+    // SAFETY: 4-float chunks match the 128-bit load/store width.
+    unsafe {
+        let split = x.len() - x.len() % Q;
+        let piv = vdupq_n_f32(pi);
+        let bc1v = vdupq_n_f32(bc1);
+        let subv = vdupq_n_f32(sub);
+        let bc2v = vdupq_n_f32(bc2_inv);
+        let epsv = vdupq_n_f32(eps);
+        let lrv = vdupq_n_f32(lr);
+        let zero = vdupq_n_f32(0.0);
+        let (xh, mh, qh) = (&mut x[..split], &m[..split], &q[..split]);
+        for ((xc, mc), qc) in xh
+            .chunks_exact_mut(Q)
+            .zip(mh.chunks_exact(Q))
+            .zip(qh.chunks_exact(Q))
+        {
+            let u_raw = vsubq_f32(vmulq_f32(piv, vld1q_f32(qc.as_ptr())), subv);
+            let u_hat = vmulq_f32(vmaxnmq_f32(u_raw, zero), bc2v);
+            let m_hat = vmulq_f32(vld1q_f32(mc.as_ptr()), bc1v);
+            let denom = vsqrtq_f32(vaddq_f32(u_hat, epsv));
+            let step = vdivq_f32(vmulq_f32(lrv, m_hat), denom);
+            vst1q_f32(xc.as_mut_ptr(), vsubq_f32(vld1q_f32(xc.as_ptr()), step));
+        }
+        for ((xj, &mj), &qj) in x[split..].iter_mut().zip(&m[split..]).zip(&q[split..]) {
+            let u_hat = (pi * qj - sub).max(0.0) * bc2_inv;
+            let m_hat = mj * bc1;
+            *xj -= lr * m_hat / (u_hat + eps).sqrt();
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+pub fn adam_update(
+    x: &mut [f32],
+    m: &mut [f32],
+    u: &mut [f32],
+    g: &[f32],
+    b1: f32,
+    b2: f32,
+    bc1: f32,
+    bc2: f32,
+    lr: f32,
+    eps: f32,
+) {
+    check_same_len!(x, m, u, g);
+    check_f32_aligned!(x, m, u, g);
+    // SAFETY: table install is gated on NEON detection (mod.rs).
+    unsafe { adam_update_inner(x, m, u, g, b1, b2, bc1, bc2, lr, eps) }
+}
+
+// SAFETY: caller verified NEON; four zipped chunks bound every access.
+#[target_feature(enable = "neon")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn adam_update_inner(
+    x: &mut [f32],
+    m: &mut [f32],
+    u: &mut [f32],
+    g: &[f32],
+    b1: f32,
+    b2: f32,
+    bc1: f32,
+    bc2: f32,
+    lr: f32,
+    eps: f32,
+) {
+    // SAFETY: 4-float chunks match the 128-bit load/store width.
+    unsafe {
+        let split = x.len() - x.len() % Q;
+        let b1v = vdupq_n_f32(b1);
+        let b2v = vdupq_n_f32(b2);
+        // (1-β) in scalar f32 first, exactly like the scalar expression
+        let omb1v = vdupq_n_f32(1.0 - b1);
+        let omb2v = vdupq_n_f32(1.0 - b2);
+        let bc1v = vdupq_n_f32(bc1);
+        let bc2v = vdupq_n_f32(bc2);
+        let lrv = vdupq_n_f32(lr);
+        let epsv = vdupq_n_f32(eps);
+        let (xh, mh, uh, gh) = (&mut x[..split], &mut m[..split], &mut u[..split], &g[..split]);
+        for (((xc, mc), uc), gc) in xh
+            .chunks_exact_mut(Q)
+            .zip(mh.chunks_exact_mut(Q))
+            .zip(uh.chunks_exact_mut(Q))
+            .zip(gh.chunks_exact(Q))
+        {
+            let gv = vld1q_f32(gc.as_ptr());
+            // m = b1·m + (1−b1)·g ; u = b2·u + ((1−b2)·g)·g — scalar order
+            let mv = vaddq_f32(vmulq_f32(b1v, vld1q_f32(mc.as_ptr())), vmulq_f32(omb1v, gv));
+            let uv = vaddq_f32(
+                vmulq_f32(b2v, vld1q_f32(uc.as_ptr())),
+                vmulq_f32(vmulq_f32(omb2v, gv), gv),
+            );
+            vst1q_f32(mc.as_mut_ptr(), mv);
+            vst1q_f32(uc.as_mut_ptr(), uv);
+            let m_hat = vmulq_f32(mv, bc1v);
+            let u_hat = vmulq_f32(uv, bc2v);
+            let denom = vaddq_f32(vsqrtq_f32(u_hat), epsv);
+            let step = vdivq_f32(vmulq_f32(lrv, m_hat), denom);
+            vst1q_f32(xc.as_mut_ptr(), vsubq_f32(vld1q_f32(xc.as_ptr()), step));
+        }
+        for (((xj, mj), uj), &gj) in x[split..]
+            .iter_mut()
+            .zip(m[split..].iter_mut())
+            .zip(u[split..].iter_mut())
+            .zip(&g[split..])
+        {
+            *mj = b1 * *mj + (1.0 - b1) * gj;
+            *uj = b2 * *uj + (1.0 - b2) * gj * gj;
+            let m_hat = *mj * bc1;
+            let u_hat = *uj * bc2;
+            *xj -= lr * m_hat / (u_hat.sqrt() + eps);
+        }
+    }
+}
+
+pub fn sq_eps_rowcol(row: &[f32], csum: &mut [f32], eps: f32) -> f32 {
+    check_same_len!(row, csum);
+    check_f32_aligned!(row, csum);
+    // SAFETY: table install is gated on NEON detection (mod.rs).
+    unsafe { sq_eps_rowcol_inner(row, csum, eps) }
+}
+
+// SAFETY: caller verified NEON; zipped chunk windows bound every access.
+#[target_feature(enable = "neon")]
+unsafe fn sq_eps_rowcol_inner(row: &[f32], csum: &mut [f32], eps: f32) -> f32 {
+    // SAFETY: each 8-float chunk is tiled by two 128-bit loads/stores.
+    unsafe {
+        let split = row.len() - row.len() % LANES;
+        let epsv = vdupq_n_f32(eps);
+        let mut lo = vdupq_n_f32(0.0);
+        let mut hi = vdupq_n_f32(0.0);
+        let (rh, ch) = (&row[..split], &mut csum[..split]);
+        for (rc, cc) in rh.chunks_exact(LANES).zip(ch.chunks_exact_mut(LANES)) {
+            let rl = vld1q_f32(rc.as_ptr());
+            let rh2 = vld1q_f32(rc[Q..].as_ptr());
+            let vl = vaddq_f32(vmulq_f32(rl, rl), epsv);
+            let vh = vaddq_f32(vmulq_f32(rh2, rh2), epsv);
+            vst1q_f32(cc.as_mut_ptr(), vaddq_f32(vld1q_f32(cc.as_ptr()), vl));
+            vst1q_f32(cc[Q..].as_mut_ptr(), vaddq_f32(vld1q_f32(cc[Q..].as_ptr()), vh));
+            lo = vaddq_f32(lo, vl);
+            hi = vaddq_f32(hi, vh);
+        }
+        let lanes = lanes_of(lo, hi);
+        let mut s = 0.0f32;
+        for &l in &lanes {
+            s += l;
+        }
+        for (&x, c) in row[split..].iter().zip(&mut csum[split..]) {
+            let v = x * x + eps;
+            *c += v;
+            s += v;
+        }
+        s
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+pub fn factored_descent_row(
+    x: &mut [f32],
+    g: &[f32],
+    c: &[f32],
+    ri: f32,
+    bc: f32,
+    inv_mean: f32,
+    lr: f32,
+    eps: f32,
+) {
+    check_same_len!(x, g, c);
+    check_f32_aligned!(x, g, c);
+    // SAFETY: table install is gated on NEON detection (mod.rs).
+    unsafe { factored_descent_row_inner(x, g, c, ri, bc, inv_mean, lr, eps) }
+}
+
+// SAFETY: caller verified NEON; zipped 4-float chunks bound every access.
+#[target_feature(enable = "neon")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn factored_descent_row_inner(
+    x: &mut [f32],
+    g: &[f32],
+    c: &[f32],
+    ri: f32,
+    bc: f32,
+    inv_mean: f32,
+    lr: f32,
+    eps: f32,
+) {
+    // SAFETY: 4-float chunks match the 128-bit load/store width.
+    unsafe {
+        let split = x.len() - x.len() % Q;
+        let riv = vdupq_n_f32(ri);
+        let bcv = vdupq_n_f32(bc);
+        let imv = vdupq_n_f32(inv_mean);
+        let lrv = vdupq_n_f32(lr);
+        let epsv = vdupq_n_f32(eps);
+        let (xh, gh, ch) = (&mut x[..split], &g[..split], &c[..split]);
+        for ((xc, gc), cc) in xh
+            .chunks_exact_mut(Q)
+            .zip(gh.chunks_exact(Q))
+            .zip(ch.chunks_exact(Q))
+        {
+            // (ri·(c·bc))·inv_mean — the scalar parse order exactly
+            let u = vmulq_f32(vmulq_f32(riv, vmulq_f32(vld1q_f32(cc.as_ptr()), bcv)), imv);
+            let denom = vaddq_f32(vsqrtq_f32(u), epsv);
+            let step = vdivq_f32(vmulq_f32(lrv, vld1q_f32(gc.as_ptr())), denom);
+            vst1q_f32(xc.as_mut_ptr(), vsubq_f32(vld1q_f32(xc.as_ptr()), step));
+        }
+        for ((xj, &gj), &cj) in x[split..].iter_mut().zip(&g[split..]).zip(&c[split..]) {
+            let u = ri * (cj * bc) * inv_mean;
+            *xj -= lr * gj / (u.sqrt() + eps);
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+pub fn came_instability_row(
+    m: &[f32],
+    g: &[f32],
+    c: &[f32],
+    ri: f32,
+    bc: f32,
+    inv_mean: f32,
+    eps: f32,
+    inst_c: &mut [f32],
+) -> f32 {
+    check_same_len!(m, g, c, inst_c);
+    check_f32_aligned!(m, g, c, inst_c);
+    // SAFETY: table install is gated on NEON detection (mod.rs).
+    unsafe { came_instability_row_inner(m, g, c, ri, bc, inv_mean, eps, inst_c) }
+}
+
+// SAFETY: caller verified NEON; four zipped chunks bound every access.
+#[target_feature(enable = "neon")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn came_instability_row_inner(
+    m: &[f32],
+    g: &[f32],
+    c: &[f32],
+    ri: f32,
+    bc: f32,
+    inv_mean: f32,
+    eps: f32,
+    inst_c: &mut [f32],
+) -> f32 {
+    // SAFETY: each 8-float chunk is tiled by two 128-bit loads/stores.
+    unsafe {
+        let split = m.len() - m.len() % LANES;
+        let riv = vdupq_n_f32(ri);
+        let bcv = vdupq_n_f32(bc);
+        let imv = vdupq_n_f32(inv_mean);
+        let epsv = vdupq_n_f32(eps);
+        let mut lo = vdupq_n_f32(0.0);
+        let mut hi = vdupq_n_f32(0.0);
+        let (mh, gh, ch, ih) = (&m[..split], &g[..split], &c[..split], &mut inst_c[..split]);
+        for (((mc, gc), cc), ic) in mh
+            .chunks_exact(LANES)
+            .zip(gh.chunks_exact(LANES))
+            .zip(ch.chunks_exact(LANES))
+            .zip(ih.chunks_exact_mut(LANES))
+        {
+            let ul = vmulq_f32(vmulq_f32(riv, vmulq_f32(vld1q_f32(cc.as_ptr()), bcv)), imv);
+            let uh = vmulq_f32(vmulq_f32(riv, vmulq_f32(vld1q_f32(cc[Q..].as_ptr()), bcv)), imv);
+            let uhl = vdivq_f32(vld1q_f32(gc.as_ptr()), vaddq_f32(vsqrtq_f32(ul), epsv));
+            let uhh = vdivq_f32(vld1q_f32(gc[Q..].as_ptr()), vaddq_f32(vsqrtq_f32(uh), epsv));
+            let dl = vsubq_f32(vld1q_f32(mc.as_ptr()), uhl);
+            let dh = vsubq_f32(vld1q_f32(mc[Q..].as_ptr()), uhh);
+            let vl = vaddq_f32(vmulq_f32(dl, dl), epsv);
+            let vh = vaddq_f32(vmulq_f32(dh, dh), epsv);
+            vst1q_f32(ic.as_mut_ptr(), vaddq_f32(vld1q_f32(ic.as_ptr()), vl));
+            vst1q_f32(ic[Q..].as_mut_ptr(), vaddq_f32(vld1q_f32(ic[Q..].as_ptr()), vh));
+            lo = vaddq_f32(lo, vl);
+            hi = vaddq_f32(hi, vh);
+        }
+        let lanes = lanes_of(lo, hi);
+        let mut s = 0.0f32;
+        for &l in &lanes {
+            s += l;
+        }
+        for i in split..m.len() {
+            let u = ri * (c[i] * bc) * inv_mean;
+            let u_hat = g[i] / (u.sqrt() + eps);
+            let d = m[i] - u_hat;
+            let v = d * d + eps;
+            inst_c[i] += v;
+            s += v;
+        }
+        s
+    }
+}
+
+pub fn came_descent_row(
+    x: &mut [f32],
+    m: &[f32],
+    uc: &[f32],
+    uri: f32,
+    inv: f32,
+    lr: f32,
+    eps: f32,
+) {
+    check_same_len!(x, m, uc);
+    check_f32_aligned!(x, m, uc);
+    // SAFETY: table install is gated on NEON detection (mod.rs).
+    unsafe { came_descent_row_inner(x, m, uc, uri, inv, lr, eps) }
+}
+
+// SAFETY: caller verified NEON; zipped 4-float chunk windows bound
+// every load and store.
+#[target_feature(enable = "neon")]
+unsafe fn came_descent_row_inner(
+    x: &mut [f32],
+    m: &[f32],
+    uc: &[f32],
+    uri: f32,
+    inv: f32,
+    lr: f32,
+    eps: f32,
+) {
+    // SAFETY: 4-float chunks match the 128-bit load/store width.
+    unsafe {
+        let split = x.len() - x.len() % Q;
+        let uriv = vdupq_n_f32(uri);
+        let invv = vdupq_n_f32(inv);
+        let lrv = vdupq_n_f32(lr);
+        let epsv = vdupq_n_f32(eps);
+        let (xh, mh, uh) = (&mut x[..split], &m[..split], &uc[..split]);
+        for ((xc, mc), ucc) in xh
+            .chunks_exact_mut(Q)
+            .zip(mh.chunks_exact(Q))
+            .zip(uh.chunks_exact(Q))
+        {
+            // ((uri·uc)·inv) then √ then +eps — the scalar parse order
+            let prod = vmulq_f32(vmulq_f32(uriv, vld1q_f32(ucc.as_ptr())), invv);
+            let denom = vaddq_f32(vsqrtq_f32(prod), epsv);
+            let step = vdivq_f32(vmulq_f32(lrv, vld1q_f32(mc.as_ptr())), denom);
+            vst1q_f32(xc.as_mut_ptr(), vsubq_f32(vld1q_f32(xc.as_ptr()), step));
+        }
+        for ((xj, &mj), &ucj) in x[split..].iter_mut().zip(&m[split..]).zip(&uc[split..]) {
+            let s = (uri * ucj * inv).sqrt() + eps;
+            *xj -= lr * mj / s;
+        }
+    }
+}

@@ -1,26 +1,22 @@
-//! Vectorized flat-slice kernels for the optimizer hot loops.
+//! The scalar lane-unrolled backend — the correctness oracle.
 //!
-//! Every per-element loop that shows up in a profile of the pure-Rust
-//! substrate lives here: Alada's fused even/odd descent passes, the
-//! Adam/Adafactor/CAME element updates, and the `tensor::ops` mat-vec
-//! building blocks. The loops are written so the autovectorizer can lift
-//! them — reductions use `chunks_exact` with a fixed array of LANES
-//! independent accumulators (the dependency chain LLVM needs broken
-//! before it will emit SIMD adds), elementwise updates are branch-free
-//! single passes over zipped slices.
+//! These are the original autovectorizer-friendly loops: reductions use
+//! `chunks_exact` with a fixed array of [`LANES`] independent
+//! accumulators (the dependency chain LLVM needs broken before it will
+//! emit SIMD adds), elementwise updates are branch-free single passes
+//! over zipped slices. Every intrinsic backend is defined as
+//! "bit-identical to this module" (see the module docs in `mod.rs` for
+//! the association-order contract, and rust/tests/simd_parity.rs for
+//! the pin).
 //!
-//! Determinism: every kernel is a pure function of its inputs with a
-//! fixed association order (the lane split is part of that order), so
-//! replacing a scalar loop with a kernel keeps runs bit-for-bit
-//! reproducible. Reduction kernels *reassociate* relative to the naive
-//! sequential sum (~1e-7 relative noise) — the trajectory-level
-//! contracts in rust/tests/ are all tolerance-based exactly so that
-//! kernel-level reshaping like this stays legal. Elementwise kernels
-//! keep the original expression order and are bit-identical to the
-//! loops they replaced.
+//! Reduction kernels *reassociate* relative to the naive sequential sum
+//! (~1e-7 relative noise) — the trajectory-level contracts in
+//! rust/tests/ are all tolerance-based exactly so that kernel-level
+//! reshaping like this stays legal. Elementwise kernels keep the
+//! original expression order and are bit-identical to the loops they
+//! replaced.
 
-/// Accumulator lanes for reductions: 8 × f32 = one AVX2 register.
-const LANES: usize = 8;
+use super::{check_f32_aligned, check_same_len, LANES};
 
 /// Fused finite scan: true iff every element is finite (no NaN/±Inf).
 /// One multiply-add pass — `x·0` is ±0 for finite x and NaN for NaN/Inf,
@@ -30,6 +26,7 @@ const LANES: usize = 8;
 /// update kernels it guards (same LANES unrolling, no branches).
 #[inline]
 pub fn all_finite(x: &[f32]) -> bool {
+    check_f32_aligned!(x);
     let split = x.len() - x.len() % LANES;
     let mut acc = [0.0f32; LANES];
     for c in x[..split].chunks_exact(LANES) {
@@ -47,12 +44,11 @@ pub fn all_finite(x: &[f32]) -> bool {
     s == 0.0
 }
 
-/// Plain sum with LANES independent accumulators. This is the one
-/// blessed f32 reduction for optimizer code — lint rule r2 forbids ad
-/// hoc `.sum::<f32>()` outside this module so every mean/norm shares a
-/// single, fixed association order.
+/// Plain sum with LANES independent accumulators — the one blessed f32
+/// reduction (see the `mod.rs` shim doc and lint rule r2).
 #[inline]
 pub fn sum(x: &[f32]) -> f32 {
+    check_f32_aligned!(x);
     let split = x.len() - x.len() % LANES;
     let mut acc = [0.0f32; LANES];
     for c in x[..split].chunks_exact(LANES) {
@@ -73,7 +69,8 @@ pub fn sum(x: &[f32]) -> f32 {
 /// Dot product with LANES independent accumulators.
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
+    check_same_len!(a, b);
+    check_f32_aligned!(a, b);
     let split = a.len() - a.len() % LANES;
     let mut acc = [0.0f32; LANES];
     for (xa, xb) in a[..split].chunks_exact(LANES).zip(b[..split].chunks_exact(LANES)) {
@@ -95,7 +92,8 @@ pub fn dot(a: &[f32], b: &[f32]) -> f32 {
 /// with V = (M·bc1)² recomputed in-register, never materialised).
 #[inline]
 pub fn sq_dot_scaled(m: &[f32], q: &[f32], s: f32) -> f32 {
-    debug_assert_eq!(m.len(), q.len());
+    check_same_len!(m, q);
+    check_f32_aligned!(m, q);
     let split = m.len() - m.len() % LANES;
     let mut acc = [0.0f32; LANES];
     for (xm, xq) in m[..split].chunks_exact(LANES).zip(q[..split].chunks_exact(LANES)) {
@@ -119,7 +117,7 @@ pub fn sq_dot_scaled(m: &[f32], q: &[f32], s: f32) -> f32 {
 /// row's contribution.
 #[inline]
 pub fn sq_axpy_scaled(acc: &mut [f32], m: &[f32], s: f32, w: f32) {
-    debug_assert_eq!(acc.len(), m.len());
+    check_same_len!(acc, m);
     for (a, &x) in acc.iter_mut().zip(m) {
         let v = x * s;
         *a += v * v * w;
@@ -129,7 +127,7 @@ pub fn sq_axpy_scaled(acc: &mut [f32], m: &[f32], s: f32, w: f32) {
 /// dst = a·dst + b·src — the EMA workhorse (`Tensor::ema_inplace`).
 #[inline]
 pub fn ema(dst: &mut [f32], src: &[f32], a: f32, b: f32) {
-    debug_assert_eq!(dst.len(), src.len());
+    check_same_len!(dst, src);
     for (d, &s) in dst.iter_mut().zip(src) {
         *d = a * *d + b * s;
     }
@@ -140,7 +138,7 @@ pub fn ema(dst: &mut [f32], src: &[f32], a: f32, b: f32) {
 /// denominator; expression order matches the scalar loops exactly).
 #[inline]
 pub fn factor_ema(dst: &mut [f32], src: &[f32], beta: f32, denom: f32) {
-    debug_assert_eq!(dst.len(), src.len());
+    check_same_len!(dst, src);
     for (d, &s) in dst.iter_mut().zip(src) {
         *d = beta * *d + (1.0 - beta) * s / denom;
     }
@@ -149,7 +147,7 @@ pub fn factor_ema(dst: &mut [f32], src: &[f32], beta: f32, denom: f32) {
 /// y += a·x.
 #[inline]
 pub fn axpy(y: &mut [f32], x: &[f32], a: f32) {
-    debug_assert_eq!(y.len(), x.len());
+    check_same_len!(y, x);
     for (yi, &xi) in y.iter_mut().zip(x) {
         *yi += a * xi;
     }
@@ -176,6 +174,19 @@ pub fn divide(x: &mut [f32], d: f32) {
     }
 }
 
+/// x += y elementwise — the collective's segment-sum building block
+/// (the bucket accumulation in `Comm::reduce_bucket`). Plain
+/// independent per-element adds, so any vector width preserves
+/// bit-identity; the fixed reduction-tree *order* lives in the
+/// collective, not here.
+#[inline]
+pub fn add_assign(x: &mut [f32], y: &[f32]) {
+    check_same_len!(x, y);
+    for (a, &b) in x.iter_mut().zip(y) {
+        *a += b;
+    }
+}
+
 /// Alada descent over one row (both phases): with û_j = max(p_i·q_j −
 /// sub, 0)·bc2_inv and m̂_j = m_j·bc1, x_j −= lr·m̂_j/√(û_j + ε).
 /// Branch-free (max compiles to a select), single fused pass.
@@ -192,7 +203,7 @@ pub fn alada_descent_row(
     eps: f32,
     lr: f32,
 ) {
-    debug_assert!(x.len() == m.len() && x.len() == q.len());
+    check_same_len!(x, m, q);
     for ((xj, &mj), &qj) in x.iter_mut().zip(m).zip(q) {
         let u_hat = (pi * qj - sub).max(0.0) * bc2_inv;
         let m_hat = mj * bc1;
@@ -217,7 +228,7 @@ pub fn adam_update(
     lr: f32,
     eps: f32,
 ) {
-    debug_assert!(x.len() == m.len() && x.len() == u.len() && x.len() == g.len());
+    check_same_len!(x, m, u, g);
     for (((xj, mj), uj), &gj) in x.iter_mut().zip(m.iter_mut()).zip(u.iter_mut()).zip(g) {
         *mj = b1 * *mj + (1.0 - b1) * gj;
         *uj = b2 * *uj + (1.0 - b2) * gj * gj;
@@ -231,7 +242,8 @@ pub fn adam_update(
 /// csum_j += v_j, returns Σ_j v_j via LANES accumulators.
 #[inline]
 pub fn sq_eps_rowcol(row: &[f32], csum: &mut [f32], eps: f32) -> f32 {
-    debug_assert_eq!(row.len(), csum.len());
+    check_same_len!(row, csum);
+    check_f32_aligned!(row, csum);
     let split = row.len() - row.len() % LANES;
     let mut acc = [0.0f32; LANES];
     {
@@ -270,7 +282,7 @@ pub fn factored_descent_row(
     lr: f32,
     eps: f32,
 ) {
-    debug_assert!(x.len() == g.len() && x.len() == c.len());
+    check_same_len!(x, g, c);
     for ((xj, &gj), &cj) in x.iter_mut().zip(g).zip(c) {
         let u = ri * (cj * bc) * inv_mean;
         *xj -= lr * gj / (u.sqrt() + eps);
@@ -291,7 +303,8 @@ pub fn came_instability_row(
     eps: f32,
     inst_c: &mut [f32],
 ) -> f32 {
-    debug_assert!(m.len() == g.len() && m.len() == c.len() && m.len() == inst_c.len());
+    check_same_len!(m, g, c, inst_c);
+    check_f32_aligned!(m, g, c, inst_c);
     let split = m.len() - m.len() % LANES;
     let mut acc = [0.0f32; LANES];
     {
@@ -331,8 +344,16 @@ pub fn came_instability_row(
 /// CAME confidence-scaled descent over one row:
 /// x_j −= lr·m_j/(√(uri·uc_j·inv) + ε).
 #[inline]
-pub fn came_descent_row(x: &mut [f32], m: &[f32], uc: &[f32], uri: f32, inv: f32, lr: f32, eps: f32) {
-    debug_assert!(x.len() == m.len() && x.len() == uc.len());
+pub fn came_descent_row(
+    x: &mut [f32],
+    m: &[f32],
+    uc: &[f32],
+    uri: f32,
+    inv: f32,
+    lr: f32,
+    eps: f32,
+) {
+    check_same_len!(x, m, uc);
     for ((xj, &mj), &ucj) in x.iter_mut().zip(m).zip(uc) {
         let s = (uri * ucj * inv).sqrt() + eps;
         *xj -= lr * mj / s;
@@ -423,6 +444,14 @@ mod tests {
         factor_ema(&mut a, &g, 0.99, 12.0);
         for (x, &gi) in b.iter_mut().zip(&g) {
             *x = 0.99 * *x + (1.0 - 0.99) * gi / 12.0;
+        }
+        assert_eq!(a, b);
+        // add_assign
+        let mut a = m.clone();
+        let mut b = m.clone();
+        add_assign(&mut a, &g);
+        for (x, &gi) in b.iter_mut().zip(&g) {
+            *x += gi;
         }
         assert_eq!(a, b);
     }

@@ -4,8 +4,9 @@
 //! against the squared momentum (`V q`, `Vᵀ p`), outer products, and a
 //! blocked matmul for the synthetic workloads (softmax regression / MLP
 //! in `workloads/`). All row-major, no BLAS (offline build). The inner
-//! loops route through `tensor::kernels` so they share the vectorized
-//! dot/axpy row primitives with the optimizer hot paths.
+//! loops route through `tensor::kernels` so they share the
+//! runtime-dispatched SIMD dot/axpy row primitives with the optimizer
+//! hot paths (scalar/AVX2/NEON, bit-identical by contract).
 
 use super::{kernels, Tensor};
 

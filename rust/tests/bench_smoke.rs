@@ -1,9 +1,9 @@
 //! Bench smoke: the shared bench bodies (`alada::benchkit`) compile and
-//! run under the tier-1 gate with 1 warmup + 1 sample, so the two
+//! run under the tier-1 gate with 1 warmup + 1 sample, so the
 //! cargo-bench targets can't bit-rot between PRs. Tiny shapes/steps keep
 //! this in the millisecond range.
 
-use alada::benchkit::{optim_bench, serve_bench, shard_bench};
+use alada::benchkit::{kernels_bench, optim_bench, serve_bench, shard_bench};
 use alada::shard::MlpTask;
 
 #[test]
@@ -22,6 +22,34 @@ fn bench_smoke_optim() {
     let txt = std::fs::read_to_string(&path).expect("BENCH_optim json written");
     assert!(txt.contains("median_step_ns") && txt.contains("state_bytes"), "{txt}");
     assert!(txt.contains("p95_step_ns") && txt.contains("steps_per_sec"), "{txt}");
+}
+
+#[test]
+fn bench_smoke_kernels() {
+    let path = std::env::temp_dir().join("BENCH_kernels_smoke.json");
+    let rows = kernels_bench(&[96], 1, 1, Some(path.to_str().unwrap()));
+    // every dispatched kernel gets a scalar baseline row per CI run —
+    // the oracle backend is always exercised, whatever the host CPU
+    let scalar: Vec<_> = rows.iter().filter(|r| r.backend == "scalar").collect();
+    assert_eq!(scalar.len(), 17, "one scalar row per dispatched kernel");
+    assert_eq!(rows.len() % 17, 0, "each backend measures the full kernel set");
+    assert!(rows.iter().all(|r| r.median_ns > 0.0));
+    assert!(rows.iter().all(|r| r.p95_ns >= r.median_ns));
+    assert!(rows.iter().all(|r| r.speedup_vs_scalar > 0.0));
+    // the scalar rows are their own baseline by construction
+    assert!(scalar.iter().all(|r| (r.speedup_vs_scalar - 1.0).abs() < 1e-12));
+    // the reduction flag marks exactly the lane-accumulator kernels
+    let reductions: Vec<&str> =
+        scalar.iter().filter(|r| r.reduction).map(|r| r.kernel).collect();
+    assert_eq!(
+        reductions,
+        ["all_finite", "sum", "dot", "sq_dot_scaled", "sq_eps_rowcol", "came_instability_row"]
+    );
+    let txt = std::fs::read_to_string(&path).expect("BENCH_kernels json written");
+    assert!(txt.contains("\"bench\":\"kernels\""), "{txt}");
+    assert!(txt.contains("\"backend\":\"scalar\""), "{txt}");
+    assert!(txt.contains("speedup_vs_scalar") && txt.contains("reduction"), "{txt}");
+    assert!(txt.contains("median_ns") && txt.contains("p95_ns"), "{txt}");
 }
 
 #[test]

@@ -14,3 +14,18 @@ pub fn documented(p: *const u32) -> u32 {
 pub fn allowed(p: *const u32) -> u32 {
     unsafe { *p } // lint: allow(r8): fixture shows the escape hatch
 }
+
+// An intrinsics-shaped backend body: a target_feature inner fn and its
+// block must each carry their own marker — these lowercase "safety"
+// words must not satisfy the rule's comment window.
+#[target_feature(enable = "sse2")]
+pub unsafe fn intrinsics_shaped(p: *const f32) -> f32 {
+    unsafe { *p }
+}
+
+// SAFETY: installed only after a runtime feature check; p valid for reads.
+#[target_feature(enable = "sse2")]
+pub unsafe fn intrinsics_documented(p: *const f32) -> f32 {
+    // SAFETY: the declaration contract above covers this dereference.
+    unsafe { *p }
+}

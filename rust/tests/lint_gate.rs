@@ -104,7 +104,12 @@ fn r7_fires_on_lock_across_blocking() {
 #[test]
 fn r8_fires_on_bare_unsafe() {
     let (hits, allowed) = lint_one("r8_unsafe.rs");
-    assert_eq!(hits, [(6, "r8")], "bare unsafe; SAFETY-commented clean");
+    assert_eq!(
+        hits,
+        [(6, "r8"), (22, "r8"), (23, "r8")],
+        "bare unsafe + undocumented intrinsics-shaped fn and block; \
+         SAFETY-commented variants clean"
+    );
     assert_eq!(allowed, 1);
 }
 
@@ -119,7 +124,7 @@ fn every_rule_has_a_firing_fixture() {
             r.id
         );
     }
-    assert_eq!(report.diagnostics.len(), 16, "total corpus violations");
+    assert_eq!(report.diagnostics.len(), 18, "total corpus violations");
     assert_eq!(report.allowed, 8, "one allow per fixture");
 }
 
@@ -135,7 +140,7 @@ fn json_report_is_schema_stable() {
     assert_eq!(parsed.get("allowed").and_then(Json::as_usize), Some(1));
     assert_eq!(parsed.get("clean").and_then(Json::as_bool), Some(false));
     let diags = parsed.get("diagnostics").and_then(Json::as_arr).expect("diagnostics array");
-    assert_eq!(diags.len(), 1);
+    assert_eq!(diags.len(), 3);
     let d = &diags[0];
     assert!(d.get("file").and_then(Json::as_str).is_some_and(|f| f.ends_with("r8_unsafe.rs")));
     assert_eq!(d.get("line").and_then(Json::as_usize), Some(6));
@@ -151,7 +156,7 @@ fn text_report_is_file_line_rule_shaped() {
     let report = lint::run(&[fixture("r8_unsafe.rs")]).expect("fixture lints");
     let text = report.render_text();
     assert!(text.contains("r8_unsafe.rs:6: [r8]"), "got:\n{text}");
-    assert!(text.contains("1 files checked, 1 violation, 1 allowed"), "got:\n{text}");
+    assert!(text.contains("1 files checked, 3 violations, 1 allowed"), "got:\n{text}");
 }
 
 #[test]

@@ -1,0 +1,306 @@
+//! Bit-for-bit parity gate for the SIMD kernel backends.
+//!
+//! The dispatch contract (rust/src/tensor/kernels/mod.rs) says every
+//! backend is *bit-identical* to the scalar oracle — that is what lets
+//! the shard-parity / elastic-resume / fault-injection suites hold
+//! unchanged under any `ALADA_SIMD` setting, with no tolerance edits.
+//! This file is the pin:
+//!
+//! * every dispatched kernel, on every backend the host can install,
+//!   against the oracle at adversarial lengths (0, 1, LANES±1, LANES,
+//!   2·LANES+3, and large) and adversarial values (negative zeros,
+//!   subnormals, and NaN/±Inf for the finite scan);
+//! * forcing `scalar` routes every table entry through the oracle
+//!   (function-pointer identity, not just value agreement);
+//! * an unavailable ISA request downgrades to scalar *with a note*;
+//! * the `alada features` subcommand honours `ALADA_SIMD=scalar` in a
+//!   real child process (the in-process `OnceLock` can't be re-armed).
+//!
+//! When the host has no SIMD backend (e.g. a non-x86/ARM builder) the
+//! sweep skips with an eprintln — it never fakes coverage.
+
+use alada::tensor::kernels::{select_with, table_for, Backend, Kernels, LANES, SCALAR};
+use alada::util::Rng;
+
+/// Adversarial lengths: empty, single, one under/at/over the lane
+/// width, a split-plus-tail case, and two larger sizes.
+const LENS: [usize; 8] = [0, 1, LANES - 1, LANES, LANES + 1, 2 * LANES + 3, 64, 1000];
+
+/// Every SIMD table the host CPU can actually install.
+fn simd_tables() -> Vec<Kernels> {
+    [Backend::Avx2, Backend::Neon].into_iter().filter_map(table_for).collect()
+}
+
+/// Normal noise with negative zeros and subnormals stitched in at
+/// fixed positions, so lane boundaries see the awkward encodings.
+fn adversarial(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|i| {
+            if i % 13 == 5 {
+                -0.0
+            } else if i % 17 == 3 {
+                let sign = if i % 2 == 0 { 1.0f32 } else { -1.0 };
+                sign * (f32::MIN_POSITIVE / 3.0) // subnormal
+            } else {
+                rng.normal()
+            }
+        })
+        .collect()
+}
+
+/// Non-negative variant for second-moment-shaped inputs (anything that
+/// feeds a sqrt): squaring keeps the subnormal/zero coverage while
+/// staying in the kernels' domain.
+fn nonneg(n: usize, seed: u64) -> Vec<f32> {
+    adversarial(n, seed).iter().map(|v| v * v).collect()
+}
+
+fn assert_bits_eq(got: &[f32], want: &[f32], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    for (i, (a, b)) in got.iter().zip(want).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "{what}[{i}]: {a:?} vs {b:?}");
+    }
+}
+
+/// The full sweep: every kernel in `t` against the oracle, all lengths.
+fn assert_table_matches_scalar(t: &Kernels) {
+    let name = t.backend.name();
+    for (k, &n) in LENS.iter().enumerate() {
+        let seed = 1000 + 17 * k as u64;
+        let a = adversarial(n, seed);
+        let b = adversarial(n, seed + 1);
+        let g = adversarial(n, seed + 2);
+        let c = nonneg(n, seed + 3);
+        let what = |kernel: &str| format!("{name}/{kernel}/len {n}");
+
+        // -- reductions: compare the returned bits ---------------------
+        assert_eq!((t.all_finite)(&a), (SCALAR.all_finite)(&a), "{}", what("all_finite"));
+        assert_eq!((t.sum)(&a).to_bits(), (SCALAR.sum)(&a).to_bits(), "{}", what("sum"));
+        assert_eq!((t.dot)(&a, &b).to_bits(), (SCALAR.dot)(&a, &b).to_bits(), "{}", what("dot"));
+        assert_eq!(
+            (t.sq_dot_scaled)(&a, &b, 0.37).to_bits(),
+            (SCALAR.sq_dot_scaled)(&a, &b, 0.37).to_bits(),
+            "{}",
+            what("sq_dot_scaled")
+        );
+
+        // all_finite must also agree (and fire) on every non-finite
+        // class at the head, middle, and tail of the vector
+        for bad in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+            for pos in [0, n / 2, n.saturating_sub(1)] {
+                if n == 0 {
+                    continue;
+                }
+                let mut v = a.clone();
+                v[pos] = bad;
+                let got = (t.all_finite)(&v);
+                let oracle = (SCALAR.all_finite)(&v);
+                assert_eq!(got, oracle, "{} bad={bad} pos={pos}", what("all_finite"));
+                assert!(!got, "{} must flag {bad} at {pos}", what("all_finite"));
+            }
+        }
+
+        // -- elementwise: compare every mutated slice ------------------
+        {
+            let (mut got, mut want) = (c.clone(), c.clone());
+            (t.sq_axpy_scaled)(&mut got, &a, 0.37, 0.83);
+            (SCALAR.sq_axpy_scaled)(&mut want, &a, 0.37, 0.83);
+            assert_bits_eq(&got, &want, &what("sq_axpy_scaled"));
+        }
+        {
+            let (mut got, mut want) = (a.clone(), a.clone());
+            (t.ema)(&mut got, &b, 0.9, 0.1);
+            (SCALAR.ema)(&mut want, &b, 0.9, 0.1);
+            assert_bits_eq(&got, &want, &what("ema"));
+        }
+        {
+            let (mut got, mut want) = (c.clone(), c.clone());
+            (t.factor_ema)(&mut got, &b, 0.99, 12.0);
+            (SCALAR.factor_ema)(&mut want, &b, 0.99, 12.0);
+            assert_bits_eq(&got, &want, &what("factor_ema"));
+        }
+        {
+            let (mut got, mut want) = (a.clone(), a.clone());
+            (t.axpy)(&mut got, &b, -0.3);
+            (SCALAR.axpy)(&mut want, &b, -0.3);
+            assert_bits_eq(&got, &want, &what("axpy"));
+        }
+        {
+            let (mut got, mut want) = (a.clone(), a.clone());
+            (t.scale)(&mut got, -1.7);
+            (SCALAR.scale)(&mut want, -1.7);
+            assert_bits_eq(&got, &want, &what("scale"));
+        }
+        {
+            // non-power-of-two divisor: exercises the true-divide
+            // (not multiply-by-reciprocal) contract
+            let (mut got, mut want) = (a.clone(), a.clone());
+            (t.divide)(&mut got, 3.0);
+            (SCALAR.divide)(&mut want, 3.0);
+            assert_bits_eq(&got, &want, &what("divide"));
+        }
+        {
+            let (mut got, mut want) = (a.clone(), a.clone());
+            (t.add_assign)(&mut got, &b);
+            (SCALAR.add_assign)(&mut want, &b);
+            assert_bits_eq(&got, &want, &what("add_assign"));
+        }
+
+        // -- fused optimizer passes ------------------------------------
+        {
+            let (mut got, mut want) = (a.clone(), a.clone());
+            (t.alada_descent_row)(&mut got, &b, &g, 0.37, 1.03, 0.11, 0.91, 1e-8, 0.003);
+            (SCALAR.alada_descent_row)(&mut want, &b, &g, 0.37, 1.03, 0.11, 0.91, 1e-8, 0.003);
+            assert_bits_eq(&got, &want, &what("alada_descent_row"));
+        }
+        {
+            let (mut xg, mut mg, mut ug) = (a.clone(), b.clone(), c.clone());
+            let (mut xw, mut mw, mut uw) = (a.clone(), b.clone(), c.clone());
+            (t.adam_update)(&mut xg, &mut mg, &mut ug, &g, 0.9, 0.999, 1.03, 1.3, 0.003, 1e-8);
+            (SCALAR.adam_update)(&mut xw, &mut mw, &mut uw, &g, 0.9, 0.999, 1.03, 1.3, 0.003, 1e-8);
+            assert_bits_eq(&xg, &xw, &what("adam_update.x"));
+            assert_bits_eq(&mg, &mw, &what("adam_update.m"));
+            assert_bits_eq(&ug, &uw, &what("adam_update.u"));
+        }
+        {
+            let (mut got, mut want) = (c.clone(), c.clone());
+            let sg = (t.sq_eps_rowcol)(&a, &mut got, 1e-8);
+            let sw = (SCALAR.sq_eps_rowcol)(&a, &mut want, 1e-8);
+            assert_eq!(sg.to_bits(), sw.to_bits(), "{}", what("sq_eps_rowcol.sum"));
+            assert_bits_eq(&got, &want, &what("sq_eps_rowcol.csum"));
+        }
+        {
+            let (mut got, mut want) = (a.clone(), a.clone());
+            (t.factored_descent_row)(&mut got, &b, &c, 0.8, 1.2, 0.9, 0.003, 1e-8);
+            (SCALAR.factored_descent_row)(&mut want, &b, &c, 0.8, 1.2, 0.9, 0.003, 1e-8);
+            assert_bits_eq(&got, &want, &what("factored_descent_row"));
+        }
+        {
+            let (mut got, mut want) = (c.clone(), c.clone());
+            let sg = (t.came_instability_row)(&a, &b, &c, 0.8, 1.2, 0.9, 1e-8, &mut got);
+            let sw = (SCALAR.came_instability_row)(&a, &b, &c, 0.8, 1.2, 0.9, 1e-8, &mut want);
+            assert_eq!(sg.to_bits(), sw.to_bits(), "{}", what("came_instability_row.sum"));
+            assert_bits_eq(&got, &want, &what("came_instability_row.inst_c"));
+        }
+        {
+            let (mut got, mut want) = (a.clone(), a.clone());
+            (t.came_descent_row)(&mut got, &b, &c, 0.8, 0.9, 0.003, 1e-8);
+            (SCALAR.came_descent_row)(&mut want, &b, &c, 0.8, 0.9, 0.003, 1e-8);
+            assert_bits_eq(&got, &want, &what("came_descent_row"));
+        }
+    }
+}
+
+#[test]
+fn every_simd_backend_is_bit_identical_to_the_scalar_oracle() {
+    let tables = simd_tables();
+    if tables.is_empty() {
+        eprintln!("skipping: no SIMD backend available on this host (scalar only)");
+        return;
+    }
+    for t in &tables {
+        assert_table_matches_scalar(t);
+    }
+}
+
+/// One pointer per table field: a forced-`scalar` selection must be the
+/// oracle itself, not a lookalike.
+macro_rules! assert_same_fn {
+    ($a:expr, $b:expr, $( $field:ident ),+ $(,)?) => {
+        $( assert_eq!(
+            $a.$field as usize,
+            $b.$field as usize,
+            concat!("field `", stringify!($field), "` must be the scalar oracle"),
+        ); )+
+    };
+}
+
+#[test]
+fn forcing_scalar_routes_every_kernel_through_the_oracle() {
+    let sel = select_with(Some("scalar"));
+    assert_eq!(sel.requested, "scalar");
+    assert_eq!(sel.kernels.backend, Backend::Scalar);
+    assert!(sel.note.is_none(), "an honoured request carries no note");
+    assert_same_fn!(
+        sel.kernels,
+        SCALAR,
+        all_finite,
+        sum,
+        dot,
+        sq_dot_scaled,
+        sq_axpy_scaled,
+        ema,
+        factor_ema,
+        axpy,
+        scale,
+        divide,
+        add_assign,
+        alada_descent_row,
+        adam_update,
+        sq_eps_rowcol,
+        factored_descent_row,
+        came_instability_row,
+        came_descent_row,
+    );
+}
+
+#[test]
+fn unavailable_isa_request_downgrades_to_scalar_with_a_note() {
+    for (req, backend) in [("avx2", Backend::Avx2), ("neon", Backend::Neon)] {
+        let sel = select_with(Some(req));
+        assert_eq!(sel.requested, req);
+        match table_for(backend) {
+            Some(_) => {
+                assert_eq!(sel.kernels.backend, backend, "{req} is available: honour it");
+                assert!(sel.note.is_none());
+            }
+            None => {
+                assert_eq!(sel.kernels.backend, Backend::Scalar, "{req} unavailable: fall back");
+                let note = sel.note.expect("a downgrade must carry a note");
+                assert!(note.contains(req) && note.contains("scalar"), "{note}");
+            }
+        }
+    }
+}
+
+#[test]
+fn auto_selects_a_simd_backend_whenever_one_exists() {
+    let sel = select_with(None);
+    assert_eq!(sel.requested, "auto");
+    assert!(sel.note.is_none());
+    assert_eq!(sel.kernels.backend != Backend::Scalar, !simd_tables().is_empty());
+}
+
+/// `ALADA_SIMD=scalar` must reach the dispatcher of a real process —
+/// the in-process `OnceLock` can't be re-armed, so this runs the CLI.
+#[test]
+fn features_subcommand_honours_the_scalar_override() {
+    let Some(bin) = option_env!("CARGO_BIN_EXE_alada") else {
+        eprintln!("skipping: CARGO_BIN_EXE_alada not set (no alada bin target)");
+        return;
+    };
+    let out = std::process::Command::new(bin)
+        .arg("features")
+        .env("ALADA_SIMD", "scalar")
+        .output()
+        .expect("run alada features");
+    assert!(out.status.success(), "features failed: {}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    // the exact line scripts/check.sh greps for
+    assert!(text.lines().any(|l| l == "kernel backend: scalar"), "got:\n{text}");
+
+    let out = std::process::Command::new(bin)
+        .args(["features", "--json"])
+        .env("ALADA_SIMD", "scalar")
+        .output()
+        .expect("run alada features --json");
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    let parsed = alada::util::json::Json::parse(text.trim()).expect("valid JSON");
+    use alada::util::json::Json;
+    assert_eq!(parsed.get("backend").and_then(Json::as_str), Some("scalar"));
+    assert_eq!(parsed.get("requested").and_then(Json::as_str), Some("scalar"));
+    assert!(parsed.get("arch").and_then(Json::as_str).is_some());
+    assert!(parsed.get("cpu").is_some(), "cpu feature map present");
+}

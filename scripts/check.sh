@@ -21,6 +21,12 @@ cargo run -q -- lint rust/src
 echo "== cargo test =="
 cargo test -q
 
+echo "== cargo test (ALADA_SIMD=scalar: every suite through the oracle backend) =="
+# the tier-1 suites must hold under both dispatch decisions — the SIMD
+# backends are bit-identical to scalar by contract, and this run is the
+# end-to-end proof (the per-kernel pin lives in rust/tests/simd_parity.rs)
+ALADA_SIMD=scalar cargo test -q
+
 echo "== tcp smoke: 2-process loopback parity vs inproc =="
 tmp="$(mktemp -d)"
 # every background pid lands here; the trap murders whatever is left so
@@ -36,6 +42,20 @@ cargo run -q -- shard-train --ranks 2 "${common[@]}" --dump-params "$tmp/inproc.
 cargo run -q -- shard-train --transport tcp --spawn 2 "${common[@]}" --dump-params "$tmp/tcp.bin"
 cmp "$tmp/inproc.bin" "$tmp/tcp.bin"
 echo "   tcp final params byte-identical to inproc"
+
+echo "== simd dispatch gate: detected backend vs forced scalar, cmp-identical params =="
+# whatever backend the host dispatches to must produce the byte-identical
+# training run as the forced scalar oracle — the kernel bit-identity
+# contract checked at the whole-binary level. `features` records which
+# backend the native side actually used.
+cargo run -q -- features
+simd_ab=(--opt alada --steps 6 --batch 8 --dim 6 --hidden 10 --depth 1 \
+         --bucket-kb 1 --seed 23 --schedule const:0.005 --same-batch)
+cargo run -q -- shard-train --ranks 2 "${simd_ab[@]}" --dump-params "$tmp/simd_native.bin"
+ALADA_SIMD=scalar cargo run -q -- shard-train --ranks 2 "${simd_ab[@]}" \
+    --dump-params "$tmp/simd_scalar.bin"
+cmp "$tmp/simd_native.bin" "$tmp/simd_scalar.bin"
+echo "   native-dispatch final params byte-identical to the forced-scalar run"
 
 echo "== elastic resume smoke: save @ 2 tcp procs, resume @ 4, cmp vs uninterrupted 4-proc run =="
 # --same-batch makes the trajectory rank-count-invariant (every rank
